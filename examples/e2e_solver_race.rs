@@ -1,0 +1,102 @@
+//! END-TO-END DRIVER: the full system on a real small workload.
+//!
+//!     cargo run --release --example e2e_solver_race [-- --n 500 --paperish]
+//!
+//! Reproduces the paper's headline experiment shape on the Yuan (2006)
+//! benchmark (§4.1 / Table 4): a 50-value λ path with 5-fold CV for
+//! every solver, total wall time + objective at the CV-selected λ. It
+//! exercises every layer of the stack:
+//!
+//!   data generator → kernel/Gram → one eigendecomposition → warm-started
+//!   spectral APGD (native AND AOT/PJRT backend) → finite smoothing →
+//!   exact KKT certificates → CV → comparison against the kernlab-class
+//!   IPM and the generic optimizers.
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use fastkqr::backend::{Backend, NativeBackend};
+use fastkqr::data::{synth, Rng};
+use fastkqr::experiments::kqr_tables;
+use fastkqr::experiments::{print_table, speedups, TableConfig};
+use fastkqr::kernel::{median_heuristic_sigma, Kernel};
+use fastkqr::kqr::KqrSolver;
+use fastkqr::runtime::XlaBackend;
+use fastkqr::util::{Args, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.get_usize("n", if args.flag("paperish") { 500 } else { 200 });
+    let nlam = args.get_usize("nlam", if args.flag("paperish") { 50 } else { 20 });
+    let folds = args.get_usize("folds", 5);
+    let reps = args.get_usize("reps", if args.flag("paperish") { 3 } else { 1 });
+
+    // ---- part 1: backend parity + path timing through the AOT artifact ----
+    println!("== part 1: three-layer composition check (native vs AOT/PJRT) ==");
+    let mut rng = Rng::new(11);
+    let data = synth::yuan(n.min(256), &mut rng);
+    let kernel = Kernel::Rbf { sigma: median_heuristic_sigma(&data.x) };
+    let solver = KqrSolver::new(&data.x, &data.y, kernel);
+    let lams = solver.lambda_grid(8, 1.0, 1e-3);
+    let mut native = NativeBackend::new();
+    let t = Timer::start("native");
+    let fits_native = solver.fit_path_with_backend(0.5, &lams, &mut native)?;
+    let native_s = t.total();
+    println!("  native backend: {:>8.3}s for {} fits", native_s, fits_native.len());
+    match XlaBackend::from_default_dir() {
+        Ok(mut xla) => {
+            let t = Timer::start("xla");
+            let fits_xla = solver.fit_path_with_backend(0.5, &lams, &mut xla)?;
+            let xla_s = t.total();
+            println!(
+                "  xla backend:    {:>8.3}s for {} fits ({} artifact executions)",
+                xla_s,
+                fits_xla.len(),
+                xla.executions
+            );
+            let max_diff = fits_native
+                .iter()
+                .zip(&fits_xla)
+                .map(|(a, b)| (a.objective - b.objective).abs())
+                .fold(0.0f64, f64::max);
+            println!("  max |objective difference| = {max_diff:.2e}");
+            assert!(max_diff < 1e-7, "backends must agree");
+            assert!(xla.name() == "xla");
+        }
+        Err(e) => println!("  (xla backend unavailable: {e}; run `make artifacts`)"),
+    }
+
+    // ---- part 2: the paper's protocol — solver race with CV ----
+    println!("\n== part 2: solver race on Yuan (2006), n={n}, {nlam}-lambda path, {folds}-fold CV ==");
+    let cfg = TableConfig {
+        ns: vec![n],
+        p: 2,
+        taus: vec![0.1, 0.5, 0.9],
+        nlam,
+        folds,
+        reps,
+        solvers: vec!["fastkqr".into(), "ipm".into(), "lbfgs".into(), "neldermead".into()],
+        seed: args.get_usize("seed", 2024) as u64,
+    };
+    let cells = kqr_tables::table4(&cfg)?;
+    print_table("E2E solver race (Yuan 2006)", &cells, &cfg.solvers);
+    println!("\nheadline speedups (fastkqr vs):");
+    let mut min_ipm_speedup = f64::INFINITY;
+    for (label, n, solver, factor) in speedups(&cells) {
+        println!("  {label} n={n}: {factor:.1}x vs {solver}");
+        if solver == "ipm" {
+            min_ipm_speedup = min_ipm_speedup.min(factor);
+        }
+    }
+    // the paper's claim: same accuracy, order(s)-of-magnitude faster
+    for tau_label in ["tau=0.1", "tau=0.5", "tau=0.9"] {
+        let fast = cells.iter().find(|c| c.solver == "fastkqr" && c.label == tau_label);
+        let ipm = cells.iter().find(|c| c.solver == "ipm" && c.label == tau_label);
+        if let (Some(f), Some(i)) = (fast, ipm) {
+            let rel = (f.obj_mean - i.obj_mean).abs() / (1.0 + i.obj_mean.abs());
+            assert!(rel < 0.05, "{tau_label}: objectives diverge ({} vs {})", f.obj_mean, i.obj_mean);
+        }
+    }
+    println!("\nminimum speedup vs IPM across taus: {min_ipm_speedup:.1}x");
+    println!("e2e_solver_race OK");
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Serving demo: run the coordinator's TCP service and drive it with
+//! batched fit + predict requests, reporting latency and throughput.
+//!
+//!     cargo run --release --example serve_demo
+
+use fastkqr::coordinator::server::Client;
+use fastkqr::coordinator::{Server, ServerConfig};
+use fastkqr::data::{synth, Rng};
+use fastkqr::util::{Json, Timer};
+
+fn matrix_json(x: &fastkqr::linalg::Matrix) -> Json {
+    Json::Arr((0..x.rows()).map(|i| Json::arr_f64(x.row(i))).collect())
+}
+
+fn main() -> anyhow::Result<()> {
+    let server = Server::spawn(ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        opts: Default::default(),
+    })?;
+    println!("server on {}", server.local_addr);
+
+    let mut rng = Rng::new(3);
+    let data = synth::sine_hetero(120, &mut rng);
+
+    let mut client = Client::connect(server.local_addr)?;
+    // 1. ping
+    let pong = client.request(&Json::obj(vec![("cmd", Json::str("ping"))]))?;
+    println!("ping -> {}", pong.to_string());
+
+    // 2. fit three quantile models over the wire
+    let mut model_ids = Vec::new();
+    for tau in [0.1, 0.5, 0.9] {
+        let t = Timer::start("fit");
+        let resp = client.request(&Json::obj(vec![
+            ("cmd", Json::str("fit")),
+            ("x", matrix_json(&data.x)),
+            ("y", Json::arr_f64(&data.y)),
+            ("tau", Json::num(tau)),
+            ("lambda", Json::num(1e-3)),
+        ]))?;
+        anyhow::ensure!(
+            resp.get("ok").and_then(Json::as_bool) == Some(true),
+            "fit failed: {}",
+            resp.to_string()
+        );
+        println!(
+            "fit tau={tau}: model={} objective={:.4} kkt={} ({:.3}s)",
+            resp.get_str("model").unwrap_or("?"),
+            resp.get_f64("objective").unwrap_or(f64::NAN),
+            resp.get("kkt_pass").and_then(Json::as_bool).unwrap_or(false),
+            t.total()
+        );
+        model_ids.push(resp.get_str("model").unwrap().to_string());
+    }
+
+    // 3. batched predictions: measure request latency / throughput
+    let grid = fastkqr::linalg::Matrix::from_fn(64, 1, |i, _| i as f64 / 63.0);
+    let gx = matrix_json(&grid);
+    let reqs = 200usize;
+    let t = Timer::start("predict");
+    let mut lat = Vec::with_capacity(reqs);
+    for r in 0..reqs {
+        let id = &model_ids[r % model_ids.len()];
+        let t1 = Timer::start("one");
+        let resp = client.request(&Json::obj(vec![
+            ("cmd", Json::str("predict")),
+            ("model", Json::str(id.clone())),
+            ("x", gx.clone()),
+        ]))?;
+        lat.push(t1.total());
+        anyhow::ensure!(resp.get("ok").and_then(Json::as_bool) == Some(true));
+    }
+    let total = t.total();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "\n{} predict requests in {:.3}s  ->  {:.0} req/s",
+        reqs,
+        total,
+        reqs as f64 / total
+    );
+    println!(
+        "latency p50={:.2}ms p95={:.2}ms max={:.2}ms",
+        lat[reqs / 2] * 1e3,
+        lat[(reqs * 95) / 100] * 1e3,
+        lat[reqs - 1] * 1e3
+    );
+
+    // 4. metrics + cleanup
+    let m = client.request(&Json::obj(vec![("cmd", Json::str("metrics"))]))?;
+    println!("\nserver metrics: {}", m.to_string());
+    for id in &model_ids {
+        client.request(&Json::obj(vec![
+            ("cmd", Json::str("drop")),
+            ("model", Json::str(id.clone())),
+        ]))?;
+    }
+    server.shutdown();
+    println!("serve_demo OK");
+    Ok(())
+}

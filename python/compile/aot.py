@@ -1,0 +1,80 @@
+"""AOT pipeline: lower the L2 chunk to HLO text artifacts for the L3 coordinator.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids, which the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+Writes  apgd_chunk_n{N}.hlo.txt  per problem size plus manifest.json.
+`make artifacts` skips the rebuild if outputs are newer than inputs.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from .model import AOT_TILE_ROWS, CHUNK, apgd_chunk, chunk_example_args
+
+# Problem sizes to pre-compile. The Rust runtime picks the smallest
+# artifact with artifact_n >= n and zero-pads (padding is exact: padded
+# eigenvalues/vectors are zero, contributing nothing to any update).
+DEFAULT_SIZES = [64, 128, 256, 512, 1024]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_chunk(n: int) -> str:
+    lowered = jax.jit(apgd_chunk, static_argnames=("n_iters", "tile_rows")).lower(
+        *chunk_example_args(n), n_iters=CHUNK, tile_rows=AOT_TILE_ROWS
+    )
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, sizes) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "chunk": CHUNK, "artifacts": []}
+    for n in sizes:
+        text = lower_chunk(n)
+        name = f"apgd_chunk_n{n}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {"kind": "apgd_chunk", "n": n, "chunk": CHUNK, "path": name}
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--sizes",
+        default=",".join(str(s) for s in DEFAULT_SIZES),
+        help="comma-separated problem sizes",
+    )
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",") if s.strip()]
+    build(args.out, sizes)
+
+
+if __name__ == "__main__":
+    main()

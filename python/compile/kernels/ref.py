@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 APGD chunk.
+
+Everything here is the *specification*: the Pallas kernels
+(`spectral_gemv.py`, `smoothed_loss.py`) and the AOT-compiled chunk
+(`model.py`) are tested against these functions by pytest/hypothesis.
+The Rust native backend implements the same recurrence; parity across all
+three is what lets the coordinator swap backends freely.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def gemv_ref(a, x):
+    """o = A @ x."""
+    return a @ x
+
+
+def gemv_t_ref(a, x):
+    """o = Aᵀ @ x."""
+    return a.T @ x
+
+
+def h_gamma_ref(t, tau, gamma):
+    """γ-smoothed check loss H_{γ,τ} (paper eq. 3)."""
+    return jnp.where(
+        t < -gamma,
+        (tau - 1.0) * t,
+        jnp.where(
+            t > gamma,
+            tau * t,
+            t * t / (4.0 * gamma) + t * (tau - 0.5) + gamma / 4.0,
+        ),
+    )
+
+
+def h_gamma_prime_ref(t, tau, gamma):
+    """H'_{γ,τ}: (τ−1) / t/(2γ)+τ−½ / τ on the three pieces."""
+    return jnp.where(
+        t < -gamma,
+        tau - 1.0,
+        jnp.where(t > gamma, tau, t / (2.0 * gamma) + tau - 0.5),
+    )
+
+
+def smooth_relu_prime_ref(t, eta):
+    """V' of the η-smoothed ReLU (paper §3.1)."""
+    return jnp.where(t < -eta, 0.0, jnp.where(t > eta, 1.0, t / (2.0 * eta) + 0.5))
+
+
+def apgd_iteration_ref(u_mat, lam_diag, pil, p, lam_p, g, y, tau, gamma, nlam, state):
+    """One accelerated APGD iteration in spectral coordinates.
+
+    Mirrors `fastkqr::kqr::apgd::run_chunk_native` exactly (same update
+    order, same Nesterov recurrence). state = (b, beta, b_prev, beta_prev,
+    ck); returns (new_state, conv).
+    """
+    b, beta, b_prev, beta_prev, ck = state
+    ck_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * ck * ck))
+    mom = (ck - 1.0) / ck_next
+    b_bar = b + mom * (b - b_prev)
+    beta_bar = beta + mom * (beta - beta_prev)
+    f = b_bar + u_mat @ (lam_diag * beta_bar)
+    z = h_gamma_prime_ref(y - f, tau, gamma)
+    t = u_mat.T @ z - nlam * beta_bar
+    sum_z = jnp.sum(z)
+    vkw = jnp.dot(lam_p, t)
+    delta = g * (sum_z - vkw)
+    two_g = 2.0 * gamma
+    db = two_g * delta
+    dbeta = two_g * (pil * t - delta * p)
+    n = y.shape[0]
+    conv = jnp.maximum(jnp.max(jnp.abs(t)), jnp.abs(sum_z) / n)
+    return (b_bar + db, beta_bar + dbeta, b, beta, ck_next), conv
+
+
+def apgd_chunk_ref(u_mat, lam_diag, pil, p, lam_p, g, y, tau, gamma, nlam,
+                   b, beta, b_prev, beta_prev, ck, n_iters):
+    """Pure-jnp reference for the whole chunk (python loop, no pallas)."""
+    state = (b, beta, b_prev, beta_prev, ck)
+    conv = jnp.asarray(jnp.inf, dtype=y.dtype)
+    for _ in range(n_iters):
+        state, conv = apgd_iteration_ref(
+            u_mat, lam_diag, pil, p, lam_p, g, y, tau, gamma, nlam, state
+        )
+    b, beta, b_prev, beta_prev, ck = state
+    return b, beta, b_prev, beta_prev, ck, conv

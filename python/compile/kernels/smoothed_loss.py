@@ -1,0 +1,73 @@
+"""L1 Pallas kernels: elementwise smoothed-loss derivatives.
+
+H'_{γ,τ} (paper eq. 3) and the smooth-ReLU derivative V' (paper §3.1) as
+tiled elementwise Pallas kernels. Scalars (τ, γ, η) are passed as (1,)
+operands so one compiled kernel serves the whole (γ, τ) ladder.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+TILE = 8
+
+
+def _h_prime_kernel(r_ref, tau_ref, gamma_ref, o_ref):
+    r = r_ref[...]
+    tau = tau_ref[0]
+    gamma = gamma_ref[0]
+    o_ref[...] = jnp.where(
+        r < -gamma,
+        tau - 1.0,
+        jnp.where(r > gamma, tau, r / (2.0 * gamma) + tau - 0.5),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def pallas_h_prime(r, tau, gamma, tile: int = TILE):
+    """z = H'_{γ,τ}(r) elementwise; r length must be a multiple of `tile`."""
+    (n,) = r.shape
+    assert n % tile == 0, f"length {n} not a multiple of tile {tile}"
+    tau = jnp.asarray(tau, dtype=r.dtype).reshape((1,))
+    gamma = jnp.asarray(gamma, dtype=r.dtype).reshape((1,))
+    return pl.pallas_call(
+        _h_prime_kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), r.dtype),
+        interpret=True,
+    )(r, tau, gamma)
+
+
+def _relu_prime_kernel(t_ref, eta_ref, o_ref):
+    t = t_ref[...]
+    eta = eta_ref[0]
+    o_ref[...] = jnp.where(t < -eta, 0.0, jnp.where(t > eta, 1.0, t / (2.0 * eta) + 0.5))
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def pallas_smooth_relu_prime(t, eta, tile: int = TILE):
+    """q = V'(t) elementwise (η-smoothed ReLU derivative)."""
+    (n,) = t.shape
+    assert n % tile == 0, f"length {n} not a multiple of tile {tile}"
+    eta = jnp.asarray(eta, dtype=t.dtype).reshape((1,))
+    return pl.pallas_call(
+        _relu_prime_kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), t.dtype),
+        interpret=True,
+    )(t, eta)

@@ -1,0 +1,98 @@
+"""L1 Pallas kernels: the O(n²) GEMV hot spot of the spectral update.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper is a CPU
+algorithm; its core insight — touch the kernel matrix only through
+matrix–vector products against a fixed eigenbasis — maps onto TPU as a
+row-tiled GEMV whose HBM↔VMEM schedule is expressed with a BlockSpec
+grid. Each grid step streams a (TILE_ROWS × n) slab of U into VMEM and
+produces TILE_ROWS outputs; the x vector stays resident. VMEM footprint
+per step is (TILE_ROWS·n + n + TILE_ROWS)·8 bytes — ≤ 2.1 MB for
+n = 4096 at TILE_ROWS = 64, comfortably inside a TensorCore's ~16 MB.
+
+The kernels MUST run with interpret=True on this image: real TPU
+lowering emits Mosaic custom-calls the CPU PJRT client cannot execute.
+Interpret mode still exercises the same BlockSpec index maps, which is
+what the tests validate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+# Row-tile height. 8 keeps the interpret-mode grid exercised even for the
+# small n used in tests; on hardware this would be 64–256.
+TILE_ROWS = 8
+
+
+def _matvec_kernel(a_ref, x_ref, o_ref):
+    """One grid step: o[tile] = A[tile, :] @ x."""
+    o_ref[...] = a_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows",))
+def pallas_gemv(a, x, tile_rows: int = TILE_ROWS):
+    """o = A @ x with a row-tiled Pallas kernel (A: (m, n), x: (n,)).
+
+    m must be divisible by `tile_rows` (the AOT path pads problem sizes
+    to multiples of 8; tests cover the exact-multiple contract).
+    """
+    m, n = a.shape
+    assert m % tile_rows == 0, f"rows {m} not a multiple of tile {tile_rows}"
+    grid = (m // tile_rows,)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=True,
+    )(a, x)
+
+
+def _matvec_t_kernel(a_ref, x_ref, acc_ref):
+    """One grid step of o = Aᵀx: accumulate x[tile] · A[tile, :].
+
+    The row tiles of A are reduced into the single output block; step 0
+    initializes the accumulator.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += x_ref[...] @ a_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows",))
+def pallas_gemv_t(a, x, tile_rows: int = TILE_ROWS):
+    """o = Aᵀ @ x streaming A once by row tiles (A: (m, n), x: (m,))."""
+    m, n = a.shape
+    assert m % tile_rows == 0, f"rows {m} not a multiple of tile {tile_rows}"
+    grid = (m // tile_rows,)
+    return pl.pallas_call(
+        _matvec_t_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, x)
+
+
+def vmem_footprint_bytes(n: int, tile_rows: int = TILE_ROWS, dtype_bytes: int = 8):
+    """Estimated VMEM bytes per grid step (slab + x + out tile).
+
+    Reported by DESIGN.md §Perf for the TPU roofline estimate.
+    """
+    return dtype_bytes * (tile_rows * n + n + max(n, tile_rows))

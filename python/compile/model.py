@@ -1,0 +1,97 @@
+"""L2: the APGD iteration chunk as a JAX program calling the L1 kernels.
+
+`apgd_chunk` runs CHUNK accelerated APGD iterations of the smoothed KQR
+problem in spectral coordinates (the exact recurrence of
+`fastkqr::kqr::apgd::run_chunk_native`; see kernels/ref.py for the
+specification). It is lowered once per problem size by `aot.py` to HLO
+text; the Rust coordinator loads the artifact through PJRT and calls it
+on the hot path — Python never runs at fit time.
+
+All tuning parameters (τ, γ, λ) are runtime scalars, so ONE artifact per
+n serves the entire (γ, λ, τ) ladder / path / CV grid.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels.smoothed_loss import pallas_h_prime
+from .kernels.spectral_gemv import pallas_gemv, pallas_gemv_t
+
+# Iterations per compiled chunk. Must match SolveOptions::chunk on the
+# Rust side; the manifest records it and XlaBackend asserts agreement.
+CHUNK = 25
+
+# Row-tile height used when lowering the AOT artifacts. Perf iteration
+# (EXPERIMENTS.md §Perf): the interpret-mode Pallas grid becomes an XLA
+# while-loop over tiles, so a taller tile (fewer grid steps) cuts the
+# loop overhead dramatically; 64 divides every artifact size.
+AOT_TILE_ROWS = 64
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "tile_rows"))
+def apgd_chunk(u_mat, lam_diag, pil, p, lam_p, g, y, mask, inv_n, tau, gamma,
+               nlam, b, beta, b_prev, beta_prev, ck, n_iters: int = CHUNK,
+               tile_rows: int = 8):
+    """Run `n_iters` accelerated APGD iterations.
+
+    Args (shapes for the *artifact* size n, which may exceed the real
+    problem size — zero-padding is exact under the mask):
+      u_mat: (n, n) eigenvectors U (columns; zero-padded rows/cols).
+      lam_diag, pil, p, lam_p: (n,) spectral plan vectors (Λ, Π⁻¹Λ, p, Λp;
+        padded entries of lam_diag/p/lam_p are zero).
+      g: () Schur scalar.
+      y: (n,) responses (padding arbitrary); mask: (n,) 1.0 real / 0.0 pad;
+      inv_n: () = 1/n_real; tau, gamma, nlam (= n_real·λ): () scalars.
+      b, beta, b_prev, beta_prev, ck: APGD state (β padding zero).
+
+    Returns (b, beta, b_prev, beta_prev, ck, conv) where conv is the
+    stationarity residual max(‖t‖∞, |Σz|/n_real) of the final iteration.
+
+    Padding exactness: padded U rows are zero so f_pad = b̄; the mask
+    zeroes z_pad so Σz and Uᵀz see only real entries; padded β stays zero
+    because t_pad = 0 (zero U column, zero initial β) and p_pad = 0.
+    """
+
+    def body(_, carry):
+        b, beta, b_prev, beta_prev, ck, _conv = carry
+        ck_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * ck * ck))
+        mom = (ck - 1.0) / ck_next
+        b_bar = b + mom * (b - b_prev)
+        beta_bar = beta + mom * (beta - beta_prev)
+        # GEMV #1 (L1 kernel): fitted values f = b̄ + U(Λβ̄)
+        f = b_bar + pallas_gemv(u_mat, lam_diag * beta_bar, tile_rows=tile_rows)
+        # L1 kernel: z = H'(y − f), masked to the real entries
+        z = pallas_h_prime(y - f, tau, gamma) * mask
+        # GEMV #2 (L1 kernel): t = Uᵀz − nλβ̄
+        t = pallas_gemv_t(u_mat, z, tile_rows=tile_rows) - nlam * beta_bar
+        sum_z = jnp.sum(z)
+        vkw = jnp.dot(lam_p, t)
+        delta = g * (sum_z - vkw)
+        two_g = 2.0 * gamma
+        conv = jnp.maximum(jnp.max(jnp.abs(t)), jnp.abs(sum_z) * inv_n)
+        return (
+            b_bar + two_g * delta,
+            beta_bar + two_g * (pil * t - delta * p),
+            b,
+            beta,
+            ck_next,
+            conv,
+        )
+
+    init = (b, beta, b_prev, beta_prev, ck, jnp.asarray(jnp.inf, dtype=y.dtype))
+    out = jax.lax.fori_loop(0, n_iters, body, init)
+    return out
+
+
+def chunk_example_args(n: int):
+    """ShapeDtypeStructs for lowering `apgd_chunk` at artifact size n."""
+    f64 = jnp.float64
+    vec = jax.ShapeDtypeStruct((n,), f64)
+    scalar = jax.ShapeDtypeStruct((), f64)
+    mat = jax.ShapeDtypeStruct((n, n), f64)
+    return (mat, vec, vec, vec, vec, scalar, vec, vec, scalar, scalar,
+            scalar, scalar, scalar, vec, scalar, vec, scalar)

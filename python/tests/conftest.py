@@ -1,0 +1,9 @@
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+# Make `compile` importable when pytest runs from python/.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

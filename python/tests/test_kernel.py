@@ -1,0 +1,122 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and dtypes; targeted cases pin the piecewise
+knots of the smoothed losses. This is the CORE correctness signal for the
+kernels that end up inside the AOT artifact.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.smoothed_loss import pallas_h_prime, pallas_smooth_relu_prime
+from compile.kernels.spectral_gemv import (
+    pallas_gemv,
+    pallas_gemv_t,
+    vmem_footprint_bytes,
+)
+
+RTOL = {np.float32: 2e-5, np.float64: 1e-12}
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows_t=st.integers(1, 6),
+    cols=st.integers(1, 48),
+    dtype=st.sampled_from([np.float64, np.float32]),
+    seed=st.integers(0, 2**31),
+)
+def test_gemv_matches_ref(rows_t, cols, dtype, seed):
+    m = 8 * rows_t  # tile contract: multiple of TILE_ROWS
+    a = _rand((m, cols), dtype, seed)
+    x = _rand((cols,), dtype, seed + 1)
+    got = pallas_gemv(jnp.asarray(a), jnp.asarray(x))
+    want = ref.gemv_ref(jnp.asarray(a), jnp.asarray(x))
+    np.testing.assert_allclose(got, want, rtol=RTOL[dtype], atol=RTOL[dtype])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows_t=st.integers(1, 6),
+    cols=st.integers(1, 48),
+    dtype=st.sampled_from([np.float64, np.float32]),
+    seed=st.integers(0, 2**31),
+)
+def test_gemv_t_matches_ref(rows_t, cols, dtype, seed):
+    m = 8 * rows_t
+    a = _rand((m, cols), dtype, seed)
+    x = _rand((m,), dtype, seed + 1)
+    got = pallas_gemv_t(jnp.asarray(a), jnp.asarray(x))
+    want = ref.gemv_t_ref(jnp.asarray(a), jnp.asarray(x))
+    np.testing.assert_allclose(got, want, rtol=10 * RTOL[dtype], atol=10 * RTOL[dtype])
+
+
+def test_gemv_identity():
+    a = jnp.eye(16, dtype=jnp.float64)
+    x = jnp.arange(16.0)
+    np.testing.assert_allclose(pallas_gemv(a, x), x)
+    np.testing.assert_allclose(pallas_gemv_t(a, x), x)
+
+
+def test_gemv_rejects_bad_tile():
+    a = jnp.zeros((10, 4))  # 10 not a multiple of 8
+    x = jnp.zeros((4,))
+    with pytest.raises(AssertionError):
+        pallas_gemv(a, x)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_t=st.integers(1, 8),
+    tau=st.floats(0.01, 0.99),
+    gamma=st.floats(1e-6, 2.0),
+    seed=st.integers(0, 2**31),
+)
+def test_h_prime_matches_ref(n_t, tau, gamma, seed):
+    n = 8 * n_t
+    r = _rand((n,), np.float64, seed) * 3.0 * gamma
+    got = pallas_h_prime(jnp.asarray(r), tau, gamma)
+    want = ref.h_gamma_prime_ref(jnp.asarray(r), tau, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-14, atol=1e-14)
+    # range check: H' ∈ [τ−1, τ]
+    assert float(jnp.min(got)) >= tau - 1.0 - 1e-12
+    assert float(jnp.max(got)) <= tau + 1e-12
+
+
+def test_h_prime_knots_exact():
+    tau, gamma = 0.3, 0.25
+    r = jnp.array([-gamma, 0.0, gamma, -2 * gamma, 2 * gamma, -gamma * (1 + 1e-12)])
+    got = np.asarray(pallas_h_prime(jnp.resize(r, (8,)), tau, gamma))[:6]
+    assert got[0] == pytest.approx(tau - 0.5 - 0.5)  # -γ: τ−1 boundary value
+    assert got[1] == pytest.approx(tau - 0.5)
+    assert got[2] == pytest.approx(tau + 0.0 + 0.5 - 0.5)  # γ: τ
+    assert got[3] == pytest.approx(tau - 1.0)
+    assert got[4] == pytest.approx(tau)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_t=st.integers(1, 6),
+    eta=st.floats(1e-6, 1.0),
+    seed=st.integers(0, 2**31),
+)
+def test_relu_prime_matches_ref(n_t, eta, seed):
+    n = 8 * n_t
+    t = _rand((n,), np.float64, seed) * 3.0 * eta
+    got = pallas_smooth_relu_prime(jnp.asarray(t), eta)
+    want = ref.smooth_relu_prime_ref(jnp.asarray(t), eta)
+    np.testing.assert_allclose(got, want, rtol=1e-14, atol=1e-14)
+    assert float(jnp.min(got)) >= 0.0
+    assert float(jnp.max(got)) <= 1.0
+
+
+def test_vmem_footprint_within_budget():
+    # DESIGN.md §Perf contract: a (64 × 4096) f64 slab fits VMEM easily.
+    assert vmem_footprint_bytes(4096, tile_rows=64) < 16 * 2**20

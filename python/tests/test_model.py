@@ -1,0 +1,159 @@
+"""L2 correctness: the AOT-able APGD chunk vs the pure-jnp reference.
+
+Builds a real spectral plan (eigendecomposition of an RBF Gram matrix —
+the same quantities the Rust side computes) and checks:
+  - chunk == reference recurrence, elementwise;
+  - zero-padding under the mask is exact;
+  - the chunk actually optimizes (stationarity residual falls, and at
+    convergence the subgradient identity nλα = z holds).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.model import CHUNK, apgd_chunk
+
+
+def make_problem(n, seed=0, sigma=0.7, gamma=0.1, lam=0.05, tau=0.3):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(size=(n, 1))
+    y = np.sin(4.0 * x[:, 0]) + 0.3 * rng.standard_normal(n)
+    d2 = (x[:, None, 0] - x[None, :, 0]) ** 2
+    k = np.exp(-d2 / (2 * sigma**2))
+    lam_diag, u = np.linalg.eigh(k)
+    lam_diag = np.clip(lam_diag, 0.0, None)
+    u1 = u.T @ np.ones(n)
+    ridge = 2.0 * n * gamma * lam
+    pil = 1.0 / (lam_diag + ridge)
+    p = pil * u1
+    lam_p = lam_diag * p
+    g = 1.0 / (n - np.sum(u1**2 * lam_diag * pil))
+    args = dict(
+        u_mat=jnp.asarray(u),
+        lam_diag=jnp.asarray(lam_diag),
+        pil=jnp.asarray(pil),
+        p=jnp.asarray(p),
+        lam_p=jnp.asarray(lam_p),
+        g=jnp.asarray(g),
+        y=jnp.asarray(y),
+        tau=jnp.asarray(tau),
+        gamma=jnp.asarray(gamma),
+        nlam=jnp.asarray(n * lam),
+    )
+    return args, k
+
+
+def zero_state(n):
+    return dict(
+        b=jnp.asarray(0.0),
+        beta=jnp.zeros(n),
+        b_prev=jnp.asarray(0.0),
+        beta_prev=jnp.zeros(n),
+        ck=jnp.asarray(1.0),
+    )
+
+
+def run_chunk(args, state, n):
+    return apgd_chunk(
+        args["u_mat"], args["lam_diag"], args["pil"], args["p"], args["lam_p"],
+        args["g"], args["y"], jnp.ones(n), jnp.asarray(1.0 / n), args["tau"],
+        args["gamma"], args["nlam"], state["b"], state["beta"],
+        state["b_prev"], state["beta_prev"], state["ck"],
+    )
+
+
+def test_chunk_matches_reference():
+    n = 32
+    args, _ = make_problem(n, seed=1)
+    state = zero_state(n)
+    got = run_chunk(args, state, n)
+    want = ref.apgd_chunk_ref(
+        args["u_mat"], args["lam_diag"], args["pil"], args["p"], args["lam_p"],
+        args["g"], args["y"], args["tau"], args["gamma"], args["nlam"],
+        state["b"], state["beta"], state["b_prev"], state["beta_prev"],
+        state["ck"], CHUNK,
+    )
+    for a, b, name in zip(got, want, ["b", "beta", "b_prev", "beta_prev", "ck", "conv"]):
+        np.testing.assert_allclose(a, b, rtol=1e-10, atol=1e-12, err_msg=name)
+
+
+def test_padding_is_exact():
+    n, n_pad = 24, 40
+    args, _ = make_problem(n, seed=2)
+    # padded operands
+    u_pad = jnp.zeros((n_pad, n_pad)).at[:n, :n].set(args["u_mat"])
+    pad_vec = lambda v, fill=0.0: jnp.full(n_pad, fill).at[:n].set(v)
+    # padded pil entries: the n_pad-size plan value at λ=0 (any finite
+    # value works since t_pad = 0; use the natural 1/ridge)
+    ridge = 2.0 * n * float(args["gamma"]) * (float(args["nlam"]) / n)
+    state = zero_state(n_pad)
+    got_pad = apgd_chunk(
+        u_pad, pad_vec(args["lam_diag"]), pad_vec(args["pil"], 1.0 / ridge),
+        pad_vec(args["p"]), pad_vec(args["lam_p"]), args["g"],
+        pad_vec(args["y"], 123.0),  # junk y in the padding
+        pad_vec(jnp.ones(n), 0.0),  # mask
+        jnp.asarray(1.0 / n), args["tau"], args["gamma"], args["nlam"],
+        state["b"], state["beta"], state["b_prev"], state["beta_prev"], state["ck"],
+    )
+    got = run_chunk(args, zero_state(n), n)
+    np.testing.assert_allclose(got_pad[0], got[0], rtol=1e-12)  # b
+    np.testing.assert_allclose(got_pad[1][:n], got[1], rtol=1e-10, atol=1e-12)  # beta
+    np.testing.assert_allclose(got_pad[1][n:], 0.0, atol=1e-14)  # padding inert
+    np.testing.assert_allclose(got_pad[5], got[5], rtol=1e-10)  # conv
+
+
+def test_chunk_converges_to_stationarity():
+    n = 40
+    args, k = make_problem(n, seed=3, gamma=0.05, lam=0.02, tau=0.5)
+    state = zero_state(n)
+    conv = np.inf
+    for _ in range(200):
+        out = run_chunk(args, state, n)
+        state = dict(b=out[0], beta=out[1], b_prev=out[2], beta_prev=out[3], ck=out[4])
+        conv = float(out[5])
+        if conv < 1e-10:
+            break
+    assert conv < 1e-8, f"conv={conv}"
+    # subgradient identity nλα = z at the smoothed optimum
+    alpha = np.asarray(args["u_mat"] @ state["beta"])
+    f = float(state["b"]) + k @ alpha
+    z = np.asarray(ref.h_gamma_prime_ref(args["y"] - f, args["tau"], args["gamma"]))
+    np.testing.assert_allclose(n * 0.02 * alpha, z, atol=1e-6)
+    # intercept optimality
+    assert abs(z.sum()) / n < 1e-8
+
+
+def test_conv_is_finite_and_positive_scale():
+    n = 16
+    args, _ = make_problem(n, seed=4)
+    out = run_chunk(args, zero_state(n), n)
+    assert np.isfinite(float(out[5]))
+    assert float(out[4]) > 1.0  # ck advanced
+
+
+@pytest.mark.parametrize("tau", [0.1, 0.9])
+def test_chunk_objective_decreases(tau):
+    n = 24
+    args, k = make_problem(n, seed=5, tau=tau)
+
+    def smoothed_obj(state):
+        alpha = np.asarray(args["u_mat"] @ state["beta"])
+        f = float(state["b"]) + k @ alpha
+        h = np.asarray(ref.h_gamma_ref(args["y"] - f, args["tau"], args["gamma"]))
+        lam = float(args["nlam"]) / n
+        return h.mean() + 0.5 * lam * float(
+            jnp.dot(state["beta"] * args["lam_diag"], state["beta"])
+        )
+
+    state = zero_state(n)
+    prev = smoothed_obj(state)
+    for _ in range(8):
+        out = run_chunk(args, state, n)
+        state = dict(b=out[0], beta=out[1], b_prev=out[2], beta_prev=out[3], ck=out[4])
+        cur = smoothed_obj(state)
+        # Nesterov is not strictly monotone; allow a tiny relative ripple
+        assert cur <= prev + 1e-7 * (1.0 + abs(prev))
+        prev = cur

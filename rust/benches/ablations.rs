@@ -1,0 +1,16 @@
+//! Ablations: spectral vs dense, warm vs cold, Nesterov/projection,
+//! NCKQR ε-ridge. See DESIGN.md §5.
+use fastkqr::experiments::ablations;
+use fastkqr::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 100);
+    let seed = args.get_usize("seed", 2024) as u64;
+    let mut rows = Vec::new();
+    rows.extend(ablations::spectral_vs_dense(n, args.get_usize("plans", 8), seed).unwrap());
+    rows.extend(ablations::warm_vs_cold(n, args.get_usize("nlam", 20), seed).unwrap());
+    rows.extend(ablations::solver_switches(n.min(80), seed).unwrap());
+    rows.extend(ablations::nckqr_ridge(n.min(60), seed).unwrap());
+    ablations::print_rows(&rows);
+}

@@ -1,0 +1,26 @@
+//! Hot-path microbenchmarks: GEMV bandwidth, APGD chunk (native vs XLA),
+//! eigendecomposition, end-to-end fit latency. Feeds EXPERIMENTS.md §Perf.
+use fastkqr::experiments::perf;
+use fastkqr::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let reps = args.get_usize("reps", 20);
+    println!("-- GEMV (the 2x-per-iteration hot spot) --");
+    for n in args.get_usize_list("ns", &[128, 256, 512, 1024]) {
+        let (stats, gbps) = perf::gemv_throughput(n, reps);
+        println!("{}  ({gbps:.2} GB/s effective)", stats.report_line());
+    }
+    println!("-- APGD chunk: native vs AOT/PJRT --");
+    for n in args.get_usize_list("chunk-ns", &[64, 256, 512]) {
+        for s in perf::chunk_cost(n, reps.min(10)).unwrap() {
+            println!("{}", s.report_line());
+        }
+    }
+    println!("-- one-time eigendecomposition --");
+    for n in args.get_usize_list("eig-ns", &[128, 256, 512]) {
+        println!("{}", perf::eigen_cost(n, 3).report_line());
+    }
+    println!("-- end-to-end fit latency --");
+    println!("{}", perf::fit_latency(args.get_usize("fit-n", 200), 3).report_line());
+}

@@ -1,0 +1,17 @@
+//! Table 1: KQR on the Friedman simulation (paper: p=5000).
+//! `cargo bench --bench table1_kqr_sim [-- --paper|--ns ...|--p ...]`
+use fastkqr::experiments::{kqr_tables, print_table, speedups, TableConfig};
+use fastkqr::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let mut cfg = TableConfig::from_args(&args);
+    if args.flag("paper") && args.get("p").is_none() {
+        cfg.p = 5000;
+    }
+    let cells = kqr_tables::table1(&cfg).expect("table1");
+    print_table(&format!("Table 1 — Friedman p={}", cfg.p), &cells, &cfg.solvers);
+    for (label, n, solver, factor) in speedups(&cells) {
+        println!("speedup {label} n={n}: {factor:.1}x vs {solver}");
+    }
+}

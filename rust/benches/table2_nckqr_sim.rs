@@ -1,0 +1,25 @@
+//! Table 2: NCKQR on the Friedman design (fastkqr vs cvxr/nlm proxies).
+use fastkqr::experiments::{nckqr_tables, print_table, speedups, TableConfig};
+use fastkqr::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let mut cfg = TableConfig::from_args(&args);
+    if args.get("solvers").is_none() {
+        cfg.solvers = vec!["fastkqr".into(), "proximal".into(), "lbfgs".into()];
+    }
+    if args.get("nlam").is_none() && !args.flag("paper") {
+        cfg.nlam = 4; // λ2 grid
+    }
+    if args.get("reps").is_none() && !args.flag("paper") {
+        cfg.reps = 2;
+    }
+    if args.get("ns").is_none() && !args.flag("paper") {
+        cfg.ns = vec![80, 160];
+    }
+    let cells = nckqr_tables::table2(&cfg, args.get_f64("lam1", 1.0)).expect("table2");
+    print_table(&format!("Table 2 — NCKQR p={}", cfg.p), &cells, &cfg.solvers);
+    for (label, n, solver, factor) in speedups(&cells) {
+        println!("speedup {label} n={n}: {factor:.1}x vs {solver}");
+    }
+}

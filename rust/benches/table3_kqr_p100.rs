@@ -1,0 +1,14 @@
+//! Table 3 (supplement): KQR on the Friedman simulation with p=100.
+use fastkqr::experiments::{kqr_tables, print_table, speedups, TableConfig};
+use fastkqr::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let mut cfg = TableConfig::from_args(&args);
+    cfg.p = args.get_usize("p", 100);
+    let cells = kqr_tables::table3(&cfg).expect("table3");
+    print_table("Table 3 — Friedman p=100", &cells, &cfg.solvers);
+    for (label, n, solver, factor) in speedups(&cells) {
+        println!("speedup {label} n={n}: {factor:.1}x vs {solver}");
+    }
+}

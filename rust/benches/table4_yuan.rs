@@ -1,0 +1,13 @@
+//! Table 4 (supplement): KQR on the Yuan (2006) 2-D model.
+use fastkqr::experiments::{kqr_tables, print_table, speedups, TableConfig};
+use fastkqr::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cfg = TableConfig::from_args(&args);
+    let cells = kqr_tables::table4(&cfg).expect("table4");
+    print_table("Table 4 — Yuan (2006)", &cells, &cfg.solvers);
+    for (label, n, solver, factor) in speedups(&cells) {
+        println!("speedup {label} n={n}: {factor:.1}x vs {solver}");
+    }
+}

@@ -1,0 +1,14 @@
+//! Table 5 (supplement): KQR on the benchmark-data lookalikes.
+use fastkqr::experiments::{kqr_tables, print_table, speedups, TableConfig};
+use fastkqr::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cfg = TableConfig::from_args(&args);
+    let cap = if args.flag("paper") { None } else { Some(args.get_usize("cap", 120)) };
+    let cells = kqr_tables::table5(&cfg, cap).expect("table5");
+    print_table("Table 5 — benchmark data (KQR)", &cells, &cfg.solvers);
+    for (label, n, solver, factor) in speedups(&cells) {
+        println!("speedup {label} n={n}: {factor:.1}x vs {solver}");
+    }
+}

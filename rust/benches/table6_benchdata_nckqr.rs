@@ -1,0 +1,23 @@
+//! Table 6 (supplement): NCKQR on the benchmark-data lookalikes (5 taus).
+use fastkqr::experiments::{nckqr_tables, print_table, speedups, TableConfig};
+use fastkqr::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let mut cfg = TableConfig::from_args(&args);
+    if args.get("solvers").is_none() {
+        cfg.solvers = vec!["fastkqr".into(), "proximal".into()];
+    }
+    if args.get("nlam").is_none() && !args.flag("paper") {
+        cfg.nlam = 3;
+    }
+    if args.get("reps").is_none() && !args.flag("paper") {
+        cfg.reps = 2;
+    }
+    let cap = if args.flag("paper") { None } else { Some(args.get_usize("cap", 100)) };
+    let cells = nckqr_tables::table6(&cfg, args.get_f64("lam1", 1.0), cap).expect("table6");
+    print_table("Table 6 — benchmark data (NCKQR)", &cells, &cfg.solvers);
+    for (label, n, solver, factor) in speedups(&cells) {
+        println!("speedup {label} n={n}: {factor:.1}x vs {solver}");
+    }
+}

@@ -1,0 +1,106 @@
+//! Compute-backend abstraction.
+//!
+//! The finite smoothing solver is backend-agnostic: between convergence
+//! checks it asks a [`Backend`] to advance the APGD recurrence by a fixed
+//! chunk of iterations. Two implementations exist:
+//!
+//! - [`NativeBackend`]: the pure-Rust hot loop (`kqr::apgd`), always
+//!   available; the perf pass tunes this path.
+//! - [`runtime::XlaBackend`](crate::runtime::XlaBackend): executes the
+//!   same recurrence compiled AOT from the L2 JAX program (which calls
+//!   the L1 Pallas kernels) through PJRT. Loaded from
+//!   `artifacts/*.hlo.txt`; Python is never on this path.
+//!
+//! Both must implement the *identical* recurrence; `rust/tests/` enforces
+//! elementwise parity.
+
+use crate::kqr::apgd::{run_chunk_native, ApgdState, ApgdWorkspace};
+use crate::spectral::{SpectralBasis, SpectralPlan};
+
+/// A provider of APGD chunk execution.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Advance `state` by `iters` accelerated APGD iterations for the
+    /// smoothed problem (basis, plan, y, τ). Returns the sup-norm of the
+    /// final update (the convergence signal).
+    fn apgd_chunk(
+        &mut self,
+        basis: &SpectralBasis,
+        plan: &SpectralPlan,
+        y: &[f64],
+        tau: f64,
+        state: &mut ApgdState,
+        iters: usize,
+    ) -> f64;
+}
+
+/// Pure-Rust backend (no artifacts needed).
+pub struct NativeBackend {
+    ws: Option<ApgdWorkspace>,
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend { ws: None }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn apgd_chunk(
+        &mut self,
+        basis: &SpectralBasis,
+        plan: &SpectralPlan,
+        y: &[f64],
+        tau: f64,
+        state: &mut ApgdState,
+        iters: usize,
+    ) -> f64 {
+        let n = basis.n;
+        if self.ws.as_ref().map(|w| w.f.len()) != Some(n) {
+            self.ws = Some(ApgdWorkspace::new(n));
+        }
+        run_chunk_native(basis, plan, y, tau, state, self.ws.as_mut().unwrap(), iters)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::kernel::Kernel;
+    use crate::linalg::Matrix;
+
+    #[test]
+    fn native_backend_matches_direct_call() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::from_fn(20, 1, |_, _| rng.uniform());
+        let k = Kernel::Rbf { sigma: 0.5 }.gram(&x);
+        let basis = SpectralBasis::new(&k);
+        let y: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        let plan = SpectralPlan::new(&basis, 0.25, 0.01);
+
+        let mut s1 = ApgdState::zeros(20);
+        let mut be = NativeBackend::new();
+        let d1 = be.apgd_chunk(&basis, &plan, &y, 0.5, &mut s1, 25);
+
+        let mut s2 = ApgdState::zeros(20);
+        let mut ws = ApgdWorkspace::new(20);
+        let d2 = run_chunk_native(&basis, &plan, &y, 0.5, &mut s2, &mut ws, 25);
+
+        assert_eq!(d1, d2);
+        assert_eq!(s1.b, s2.b);
+        assert_eq!(s1.beta, s2.beta);
+        assert_eq!(be.name(), "native");
+    }
+}

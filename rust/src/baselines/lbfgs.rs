@@ -1,0 +1,263 @@
+//! L-BFGS on the smoothed objective — the `nlm` comparator.
+//!
+//! R's `nlm` is a generic Newton-type optimizer; applied to KQR it
+//! operates on the raw (n+1)-dimensional parameter vector with no reuse
+//! of kernel structure. We reproduce the class with a standard two-loop
+//! L-BFGS (m=10) + Armijo backtracking on G^γ with a small fixed γ —
+//! accurate but slow, matching the paper's "near-par objective, ~100×
+//! slower" profile (Tables 1/3/4/5).
+
+use crate::linalg::{dot, gemv, Matrix};
+use crate::smooth::{h_gamma, h_gamma_prime};
+use anyhow::Result;
+
+/// Generic L-BFGS minimizer over x ∈ R^d.
+///
+/// `fg` evaluates the objective and writes the gradient into its second
+/// argument. Returns (x, objective, iterations).
+pub fn lbfgs_minimize(
+    mut x: Vec<f64>,
+    mut fg: impl FnMut(&[f64], &mut [f64]) -> f64,
+    max_iters: usize,
+    grad_tol: f64,
+) -> (Vec<f64>, f64, usize) {
+    let d = x.len();
+    let m = 10usize;
+    let mut g = vec![0.0; d];
+    let mut fx = fg(&x, &mut g);
+    let mut s_hist: Vec<Vec<f64>> = Vec::new();
+    let mut y_hist: Vec<Vec<f64>> = Vec::new();
+    let mut rho_hist: Vec<f64> = Vec::new();
+    let mut iters = 0usize;
+    for it in 0..max_iters {
+        iters = it + 1;
+        let gnorm = g.iter().fold(0.0f64, |a, v| a.max(v.abs()));
+        if gnorm < grad_tol {
+            break;
+        }
+        // two-loop recursion
+        let mut q = g.clone();
+        let k = s_hist.len();
+        let mut alphas = vec![0.0; k];
+        for i in (0..k).rev() {
+            alphas[i] = rho_hist[i] * dot(&s_hist[i], &q);
+            for (qj, yj) in q.iter_mut().zip(&y_hist[i]) {
+                *qj -= alphas[i] * yj;
+            }
+        }
+        // initial Hessian scaling
+        if k > 0 {
+            let ys = dot(&y_hist[k - 1], &s_hist[k - 1]);
+            let yy = dot(&y_hist[k - 1], &y_hist[k - 1]);
+            let scale = (ys / yy.max(1e-300)).max(1e-12);
+            for qj in q.iter_mut() {
+                *qj *= scale;
+            }
+        }
+        for i in 0..k {
+            let beta = rho_hist[i] * dot(&y_hist[i], &q);
+            for (qj, sj) in q.iter_mut().zip(&s_hist[i]) {
+                *qj += (alphas[i] - beta) * sj;
+            }
+        }
+        // direction = −q; Armijo backtracking
+        let dir_dot_g = -dot(&q, &g);
+        if dir_dot_g >= 0.0 {
+            // not a descent direction (numerical breakdown): reset memory
+            s_hist.clear();
+            y_hist.clear();
+            rho_hist.clear();
+            continue;
+        }
+        let mut step = 1.0f64;
+        let mut x_new = vec![0.0; d];
+        let mut g_new = vec![0.0; d];
+        let mut f_new;
+        let mut ls_ok = false;
+        for _ in 0..40 {
+            for i in 0..d {
+                x_new[i] = x[i] - step * q[i];
+            }
+            f_new = fg(&x_new, &mut g_new);
+            if f_new <= fx + 1e-4 * step * dir_dot_g {
+                // accept
+                let s: Vec<f64> = (0..d).map(|i| x_new[i] - x[i]).collect();
+                let yv: Vec<f64> = (0..d).map(|i| g_new[i] - g[i]).collect();
+                let ys = dot(&yv, &s);
+                if ys > 1e-12 {
+                    if s_hist.len() == m {
+                        s_hist.remove(0);
+                        y_hist.remove(0);
+                        rho_hist.remove(0);
+                    }
+                    rho_hist.push(1.0 / ys);
+                    s_hist.push(s);
+                    y_hist.push(yv);
+                }
+                x.copy_from_slice(&x_new);
+                g.copy_from_slice(&g_new);
+                fx = f_new;
+                ls_ok = true;
+                break;
+            }
+            step *= 0.5;
+        }
+        if !ls_ok {
+            break; // line search failed: practical convergence
+        }
+    }
+    (x, fx, iters)
+}
+
+/// Fit of the generic-optimizer baselines.
+#[derive(Clone, Debug)]
+pub struct GenericFit {
+    pub b: f64,
+    pub alpha: Vec<f64>,
+    /// Exact (check-loss) objective of problem (2).
+    pub objective: f64,
+    pub iters: usize,
+}
+
+/// Evaluate G^γ and its gradient in (b, α) coordinates (dense; O(n²) per
+/// call — deliberately structure-blind like `nlm`).
+pub(crate) fn smoothed_fg(
+    gram: &Matrix,
+    y: &[f64],
+    tau: f64,
+    lam: f64,
+    gamma: f64,
+    x: &[f64],
+    grad: &mut [f64],
+) -> f64 {
+    let n = y.len();
+    let nf = n as f64;
+    let b = x[0];
+    let alpha = &x[1..];
+    let mut ka = vec![0.0; n];
+    gemv(gram, alpha, &mut ka);
+    let mut obj = 0.0;
+    let mut z = vec![0.0; n];
+    for i in 0..n {
+        let r = y[i] - b - ka[i];
+        obj += h_gamma(r, tau, gamma) / nf;
+        z[i] = h_gamma_prime(r, tau, gamma);
+    }
+    obj += 0.5 * lam * dot(alpha, &ka);
+    // ∂/∂b = −(1/n)Σz ; ∂/∂α = K(−z/n + λα)
+    grad[0] = -z.iter().sum::<f64>() / nf;
+    let mut w = vec![0.0; n];
+    for i in 0..n {
+        w[i] = -z[i] / nf + lam * alpha[i];
+    }
+    gemv(gram, &w, &mut grad[1..]);
+    obj
+}
+
+/// `nlm` proxy: L-BFGS on G^γ with small fixed γ.
+pub fn solve_kqr_lbfgs(
+    gram: &Matrix,
+    y: &[f64],
+    tau: f64,
+    lam: f64,
+    max_iters: usize,
+) -> Result<GenericFit> {
+    let n = y.len();
+    let gamma = 1e-4;
+    let x0 = vec![0.0; n + 1];
+    let (x, _, iters) = lbfgs_minimize(
+        x0,
+        |x, g| smoothed_fg(gram, y, tau, lam, gamma, x, g),
+        max_iters,
+        1e-7,
+    );
+    let b = x[0];
+    let alpha = x[1..].to_vec();
+    let objective = exact_objective(gram, y, tau, lam, b, &alpha);
+    Ok(GenericFit { b, alpha, objective, iters })
+}
+
+/// Exact check-loss objective at (b, α) via the Gram matrix.
+pub(crate) fn exact_objective(
+    gram: &Matrix,
+    y: &[f64],
+    tau: f64,
+    lam: f64,
+    b: f64,
+    alpha: &[f64],
+) -> f64 {
+    let n = y.len();
+    let nf = n as f64;
+    let mut ka = vec![0.0; n];
+    gemv(gram, alpha, &mut ka);
+    let loss: f64 =
+        (0..n).map(|i| crate::smooth::rho_tau(y[i] - b - ka[i], tau)).sum::<f64>() / nf;
+    loss + 0.5 * lam * dot(alpha, &ka)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, Rng};
+    use crate::kernel::{median_heuristic_sigma, Kernel};
+    use crate::kqr::KqrSolver;
+
+    #[test]
+    fn lbfgs_minimizes_quadratic() {
+        // f(x) = ½‖x − c‖²
+        let c = [3.0, -1.0, 2.0];
+        let (x, f, _) = lbfgs_minimize(
+            vec![0.0; 3],
+            |x, g| {
+                let mut v = 0.0;
+                for i in 0..3 {
+                    g[i] = x[i] - c[i];
+                    v += 0.5 * (x[i] - c[i]).powi(2);
+                }
+                v
+            },
+            200,
+            1e-10,
+        );
+        assert!(f < 1e-15);
+        for i in 0..3 {
+            assert!((x[i] - c[i]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn lbfgs_rosenbrock() {
+        let (x, f, _) = lbfgs_minimize(
+            vec![-1.2, 1.0],
+            |x, g| {
+                let (a, b) = (x[0], x[1]);
+                g[0] = -400.0 * a * (b - a * a) - 2.0 * (1.0 - a);
+                g[1] = 200.0 * (b - a * a);
+                100.0 * (b - a * a).powi(2) + (1.0 - a).powi(2)
+            },
+            2000,
+            1e-9,
+        );
+        assert!(f < 1e-10, "f={f}");
+        assert!((x[0] - 1.0).abs() < 1e-4 && (x[1] - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn kqr_lbfgs_close_to_fastkqr_but_generic() {
+        let mut rng = Rng::new(5);
+        let d = synth::sine_hetero(40, &mut rng);
+        let sigma = median_heuristic_sigma(&d.x);
+        let kernel = Kernel::Rbf { sigma };
+        let solver = KqrSolver::new(&d.x, &d.y, kernel);
+        let fast = solver.fit(0.5, 0.05).unwrap();
+        let slow = solve_kqr_lbfgs(&solver.gram, &d.y, 0.5, 0.05, 3000).unwrap();
+        // nlm-class solvers land close but (slightly) above the exact optimum
+        assert!(slow.objective >= fast.objective - 1e-6);
+        assert!(
+            slow.objective - fast.objective < 0.02 * (1.0 + fast.objective),
+            "fast {} vs lbfgs {}",
+            fast.objective,
+            slow.objective
+        );
+    }
+}

@@ -1,0 +1,21 @@
+//! Comparator solvers for the paper's evaluation (DESIGN.md §3).
+//!
+//! | paper baseline | this module | algorithm class |
+//! |---|---|---|
+//! | `kernlab` (ipop) | [`ipm`] | dual interior-point QP, O(n³)/iter |
+//! | `nlm` | [`lbfgs`] | generic quasi-Newton on G^γ |
+//! | `optim` | [`neldermead`] | derivative-free simplex on G^γ |
+//! | `cvxr` | [`proximal`] | structure-blind accelerated first-order |
+//!
+//! All report the **exact** check-loss objective of the paper's problem
+//! so the tables compare like with like.
+
+pub mod ipm;
+pub mod lbfgs;
+pub mod neldermead;
+pub mod proximal;
+
+pub use ipm::{solve_kqr_ipm, IpmFit, IpmOptions};
+pub use lbfgs::{solve_kqr_lbfgs, GenericFit};
+pub use neldermead::solve_kqr_nelder_mead;
+pub use proximal::{solve_nckqr_proximal, ProximalFit};

@@ -1,0 +1,161 @@
+//! Nelder–Mead simplex — the `optim` comparator.
+//!
+//! R's `optim` defaults to Nelder–Mead; on the (n+1)-dimensional KQR
+//! parametrization it is derivative-free and hopeless at scale, which is
+//! exactly the paper's finding (worst objective, slowest runtime, ">24h"
+//! cells at n=1000). We cap function evaluations so harness runs finish.
+
+use crate::linalg::Matrix;
+use anyhow::Result;
+
+use super::lbfgs::{exact_objective, GenericFit};
+
+/// Generic Nelder–Mead minimizer (standard reflection/expansion/
+/// contraction/shrink with adaptive parameters).
+pub fn nelder_mead_minimize(
+    x0: Vec<f64>,
+    mut f: impl FnMut(&[f64]) -> f64,
+    max_evals: usize,
+    ftol: f64,
+) -> (Vec<f64>, f64, usize) {
+    let d = x0.len();
+    let (alpha, gamma_e, rho_c, sigma_s) = (1.0, 2.0, 0.5, 0.5);
+    // initial simplex: x0 plus per-coordinate perturbations
+    let mut simplex: Vec<Vec<f64>> = Vec::with_capacity(d + 1);
+    simplex.push(x0.clone());
+    for i in 0..d {
+        let mut v = x0.clone();
+        v[i] += if x0[i].abs() > 1e-8 { 0.05 * x0[i].abs() } else { 0.1 };
+        simplex.push(v);
+    }
+    let mut evals = 0usize;
+    let mut fv: Vec<f64> = simplex
+        .iter()
+        .map(|v| {
+            evals += 1;
+            f(v)
+        })
+        .collect();
+    while evals < max_evals {
+        // order simplex
+        let mut idx: Vec<usize> = (0..=d).collect();
+        idx.sort_by(|&a, &b| fv[a].partial_cmp(&fv[b]).unwrap());
+        let best = idx[0];
+        let worst = idx[d];
+        let second_worst = idx[d - 1];
+        if (fv[worst] - fv[best]).abs() <= ftol * (1.0 + fv[best].abs()) {
+            break;
+        }
+        // centroid of all but worst
+        let mut cen = vec![0.0; d];
+        for &i in idx.iter().take(d) {
+            for j in 0..d {
+                cen[j] += simplex[i][j] / d as f64;
+            }
+        }
+        let reflect: Vec<f64> =
+            (0..d).map(|j| cen[j] + alpha * (cen[j] - simplex[worst][j])).collect();
+        evals += 1;
+        let fr = f(&reflect);
+        if fr < fv[best] {
+            // try expansion
+            let expand: Vec<f64> =
+                (0..d).map(|j| cen[j] + gamma_e * (reflect[j] - cen[j])).collect();
+            evals += 1;
+            let fe = f(&expand);
+            if fe < fr {
+                simplex[worst] = expand;
+                fv[worst] = fe;
+            } else {
+                simplex[worst] = reflect;
+                fv[worst] = fr;
+            }
+        } else if fr < fv[second_worst] {
+            simplex[worst] = reflect;
+            fv[worst] = fr;
+        } else {
+            // contraction
+            let contract: Vec<f64> =
+                (0..d).map(|j| cen[j] + rho_c * (simplex[worst][j] - cen[j])).collect();
+            evals += 1;
+            let fc = f(&contract);
+            if fc < fv[worst] {
+                simplex[worst] = contract;
+                fv[worst] = fc;
+            } else {
+                // shrink toward best
+                let bestv = simplex[best].clone();
+                for &i in idx.iter().skip(1) {
+                    for j in 0..d {
+                        simplex[i][j] = bestv[j] + sigma_s * (simplex[i][j] - bestv[j]);
+                    }
+                    evals += 1;
+                    fv[i] = f(&simplex[i]);
+                }
+            }
+        }
+    }
+    let mut best_i = 0;
+    for i in 1..=d {
+        if fv[i] < fv[best_i] {
+            best_i = i;
+        }
+    }
+    (simplex[best_i].clone(), fv[best_i], evals)
+}
+
+/// `optim` proxy: Nelder–Mead on G^γ in (b, α).
+pub fn solve_kqr_nelder_mead(
+    gram: &Matrix,
+    y: &[f64],
+    tau: f64,
+    lam: f64,
+    max_evals: usize,
+) -> Result<GenericFit> {
+    let n = y.len();
+    let gamma = 1e-4;
+    let mut grad_scratch = vec![0.0; n + 1];
+    let (x, _, evals) = nelder_mead_minimize(
+        vec![0.0; n + 1],
+        |x| super::lbfgs::smoothed_fg(gram, y, tau, lam, gamma, x, &mut grad_scratch),
+        max_evals,
+        1e-10,
+    );
+    let b = x[0];
+    let alpha = x[1..].to_vec();
+    let objective = exact_objective(gram, y, tau, lam, b, &alpha);
+    Ok(GenericFit { b, alpha, objective, iters: evals })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, Rng};
+    use crate::kernel::Kernel;
+    use crate::kqr::KqrSolver;
+
+    #[test]
+    fn nm_minimizes_small_quadratic() {
+        let (x, f, _) = nelder_mead_minimize(
+            vec![5.0, -3.0],
+            |x| (x[0] - 1.0).powi(2) + 2.0 * (x[1] + 2.0).powi(2),
+            5000,
+            1e-14,
+        );
+        assert!(f < 1e-8, "f={f}");
+        assert!((x[0] - 1.0).abs() < 1e-3 && (x[1] + 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn kqr_nm_is_worst_but_finite() {
+        let mut rng = Rng::new(6);
+        let d = synth::sine_hetero(25, &mut rng);
+        let kernel = Kernel::Rbf { sigma: 0.5 };
+        let solver = KqrSolver::new(&d.x, &d.y, kernel);
+        let fast = solver.fit(0.5, 0.05).unwrap();
+        let nm = solve_kqr_nelder_mead(&solver.gram, &d.y, 0.5, 0.05, 20_000).unwrap();
+        assert!(nm.objective.is_finite());
+        // NM never beats the exact solver, and typically trails it
+        assert!(nm.objective >= fast.objective - 1e-8);
+    }
+}

@@ -1,0 +1,231 @@
+//! Structure-blind first-order NCKQR solver — the `cvxr` comparator.
+//!
+//! R's `CVXR` hands the NCKQR program to a generic conic solver: correct,
+//! but with none of fastkqr's structure reuse, and orders of magnitude
+//! slower (Tables 2 and 6). We reproduce the class with an accelerated
+//! proximal-gradient method on the smoothed objective Q^γ (γ = η = 10⁻⁵)
+//! whose step size comes from a *global* Lipschitz bound estimated by
+//! power iteration on K — i.e. everything fastkqr's majorization and
+//! spectral tricks avoid: tiny steps, a fresh O(Tn²) gradient per
+//! iteration, no warm-start intelligence.
+
+use crate::linalg::{dot, gemv, nrm2, Matrix};
+use crate::smooth::{h_gamma, h_gamma_prime, smooth_relu, smooth_relu_prime};
+use anyhow::Result;
+
+/// Solution of the generic NCKQR solver.
+#[derive(Clone, Debug)]
+pub struct ProximalFit {
+    /// per level: (b, alpha)
+    pub levels: Vec<(f64, Vec<f64>)>,
+    /// Exact objective of problem (12) (check loss + η_exact penalty).
+    pub objective: f64,
+    pub iters: usize,
+}
+
+/// Largest eigenvalue of K by power iteration (the global step-size bound
+/// a generic solver would use).
+fn power_iteration_max_eig(gram: &Matrix, iters: usize) -> f64 {
+    let n = gram.rows();
+    let mut v = vec![1.0 / (n as f64).sqrt(); n];
+    let mut kv = vec![0.0; n];
+    let mut lam = 1.0;
+    for _ in 0..iters {
+        gemv(gram, &v, &mut kv);
+        lam = nrm2(&kv).max(1e-300);
+        for i in 0..n {
+            v[i] = kv[i] / lam;
+        }
+    }
+    lam
+}
+
+/// Solve NCKQR at (λ₁, λ₂) by accelerated proximal gradient descent.
+pub fn solve_nckqr_proximal(
+    gram: &Matrix,
+    y: &[f64],
+    taus: &[f64],
+    lam1: f64,
+    lam2: f64,
+    max_iters: usize,
+    grad_tol: f64,
+) -> Result<ProximalFit> {
+    let n = y.len();
+    let nf = n as f64;
+    let t_lv = taus.len();
+    let gamma = crate::nckqr::ETA_EXACT; // smooth at the exact-problem scale
+    let eta = crate::nckqr::ETA_EXACT;
+    // Global Lipschitz bound of ∇Q^γ in (b, α):
+    //   loss: (1/(2γn))·λmax([1,K]ᵀ[1,K]) ≤ (1/(2γn))(n + λmax(K)²·n...)
+    // A generic solver just uses a crude product bound:
+    let kmax = power_iteration_max_eig(gram, 50);
+    let a_norm2 = nf + kmax * kmax; // ‖[1,K]‖² upper bound
+    let l_loss = a_norm2 / (2.0 * gamma * nf);
+    let l_pen = 2.0 * lam1 * a_norm2 / eta; // V'' ≤ 1/(2η), T−1 pairs ≤ 2 per level
+    let l_ridge = lam2 * kmax;
+    let step = 1.0 / (l_loss + l_pen + l_ridge);
+
+    // state: per level (b, alpha); FISTA extrapolation
+    let mut bs = vec![0.0f64; t_lv];
+    let mut als = vec![vec![0.0f64; n]; t_lv];
+    let mut bs_prev = bs.clone();
+    let mut als_prev = als.clone();
+    let mut ck = 1.0f64;
+    let mut fs = vec![vec![0.0; n]; t_lv];
+    let mut iters = 0usize;
+    for it in 0..max_iters {
+        iters = it + 1;
+        let ck_next = 0.5 * (1.0 + (1.0 + 4.0 * ck * ck).sqrt());
+        let mom = (ck - 1.0) / ck_next;
+        // extrapolated point
+        let bse: Vec<f64> = (0..t_lv).map(|t| bs[t] + mom * (bs[t] - bs_prev[t])).collect();
+        let alse: Vec<Vec<f64>> = (0..t_lv)
+            .map(|t| {
+                (0..n).map(|i| als[t][i] + mom * (als[t][i] - als_prev[t][i])).collect()
+            })
+            .collect();
+        for t in 0..t_lv {
+            gemv(gram, &alse[t], &mut fs[t]);
+            for i in 0..n {
+                fs[t][i] += bse[t];
+            }
+        }
+        // gradient per level
+        let mut max_g = 0.0f64;
+        let mut new_bs = vec![0.0; t_lv];
+        let mut new_als = vec![vec![0.0; n]; t_lv];
+        for t in 0..t_lv {
+            // carrier: −z/n + λ₁(q_t − q_{t−1}) in value space
+            let mut carrier = vec![0.0; n];
+            for i in 0..n {
+                let z = h_gamma_prime(y[i] - fs[t][i], taus[t], gamma);
+                let fwd = if t < t_lv - 1 {
+                    smooth_relu_prime(fs[t][i] - fs[t + 1][i], eta)
+                } else {
+                    0.0
+                };
+                let bwd = if t > 0 {
+                    smooth_relu_prime(fs[t - 1][i] - fs[t][i], eta)
+                } else {
+                    0.0
+                };
+                carrier[i] = -z / nf + lam1 * (fwd - bwd);
+            }
+            let gb: f64 = carrier.iter().sum();
+            // ∂/∂α = K(carrier + λ₂α)
+            let mut w = carrier.clone();
+            for i in 0..n {
+                w[i] += lam2 * alse[t][i];
+            }
+            let mut ga = vec![0.0; n];
+            gemv(gram, &w, &mut ga);
+            max_g = max_g.max(gb.abs());
+            for i in 0..n {
+                max_g = max_g.max(ga[i].abs());
+            }
+            new_bs[t] = bse[t] - step * gb;
+            for i in 0..n {
+                new_als[t][i] = alse[t][i] - step * ga[i];
+            }
+        }
+        bs_prev = bs;
+        als_prev = als;
+        bs = new_bs;
+        als = new_als;
+        ck = ck_next;
+        if max_g < grad_tol {
+            break;
+        }
+    }
+    // exact objective
+    let mut objective = 0.0;
+    for t in 0..t_lv {
+        gemv(gram, &als[t], &mut fs[t]);
+        let pen = 0.5 * lam2 * dot(&als[t], &fs[t]);
+        for i in 0..n {
+            fs[t][i] += bs[t];
+        }
+        let loss: f64 =
+            (0..n).map(|i| crate::smooth::rho_tau(y[i] - fs[t][i], taus[t])).sum::<f64>() / nf;
+        objective += loss + pen;
+    }
+    for t in 0..t_lv.saturating_sub(1) {
+        for i in 0..n {
+            objective += lam1 * smooth_relu(fs[t][i] - fs[t + 1][i], crate::nckqr::ETA_EXACT);
+        }
+    }
+    let levels = (0..t_lv).map(|t| (bs[t], als[t].clone())).collect();
+    Ok(ProximalFit { levels, objective, iters })
+}
+
+/// Smoothed objective (diagnostics / tests).
+#[allow(dead_code)]
+pub(crate) fn smoothed_q(
+    gram: &Matrix,
+    y: &[f64],
+    taus: &[f64],
+    lam1: f64,
+    lam2: f64,
+    gamma: f64,
+    eta: f64,
+    bs: &[f64],
+    als: &[Vec<f64>],
+) -> f64 {
+    let n = y.len();
+    let nf = n as f64;
+    let t_lv = taus.len();
+    let mut fs = vec![vec![0.0; n]; t_lv];
+    let mut q = 0.0;
+    for t in 0..t_lv {
+        gemv(gram, &als[t], &mut fs[t]);
+        q += 0.5 * lam2 * dot(&als[t], &fs[t]);
+        for i in 0..n {
+            fs[t][i] += bs[t];
+            q += h_gamma(y[i] - fs[t][i], taus[t], gamma) / nf;
+        }
+    }
+    for t in 0..t_lv.saturating_sub(1) {
+        for i in 0..n {
+            q += lam1 * smooth_relu(fs[t][i] - fs[t + 1][i], eta);
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, Rng};
+    use crate::kernel::Kernel;
+    use crate::nckqr::NckqrSolver;
+
+    #[test]
+    fn power_iteration_matches_eigensolver() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::from_fn(15, 2, |_, _| rng.normal());
+        let gram = Kernel::Rbf { sigma: 1.0 }.gram(&x);
+        let pi = power_iteration_max_eig(&gram, 200);
+        let eig = crate::linalg::SymEigen::new(&gram);
+        assert!((pi - eig.max_eigenvalue()).abs() < 1e-6 * eig.max_eigenvalue());
+    }
+
+    #[test]
+    fn proximal_approaches_fastkqr_objective_slowly() {
+        let mut rng = Rng::new(2);
+        let d = synth::sine_hetero(25, &mut rng);
+        let kernel = Kernel::Rbf { sigma: 0.5 };
+        let taus = [0.25, 0.75];
+        let nc = NckqrSolver::new(&d.x, &d.y, kernel, &taus);
+        let exact = nc.fit(1.0, 0.1).unwrap();
+        let prox =
+            solve_nckqr_proximal(&nc.gram, &d.y, &taus, 1.0, 0.1, 200_000, 1e-7).unwrap();
+        // generic solver never beats the exact objective, lands near it
+        assert!(prox.objective >= exact.objective - 1e-6);
+        assert!(
+            prox.objective - exact.objective < 0.05 * (1.0 + exact.objective),
+            "exact {} vs prox {}",
+            exact.objective,
+            prox.objective
+        );
+    }
+}

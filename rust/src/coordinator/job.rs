@@ -1,0 +1,84 @@
+//! Fit-job specifications and outcomes.
+
+use crate::cv::CvResult;
+use crate::data::Dataset;
+use crate::kernel::Kernel;
+use crate::kqr::KqrFit;
+use crate::nckqr::NckqrFit;
+
+/// What a job should compute.
+#[derive(Clone, Debug)]
+pub enum JobSpec {
+    /// Single (τ, λ) KQR fit.
+    Kqr { tau: f64, lambda: f64 },
+    /// Warm-started descending-λ path at one τ.
+    KqrPath { tau: f64, lambdas: Vec<f64> },
+    /// Simultaneous non-crossing fit.
+    Nckqr { taus: Vec<f64>, lam1: f64, lam2: f64 },
+    /// k-fold CV over a λ grid.
+    Cv { tau: f64, lambdas: Vec<f64>, folds: usize, seed: u64 },
+}
+
+impl JobSpec {
+    /// Largest λ of the job (used for warm-start-aware ordering).
+    pub fn lambda_head(&self) -> f64 {
+        match self {
+            JobSpec::Kqr { lambda, .. } => *lambda,
+            JobSpec::KqrPath { lambdas, .. } => lambdas.first().copied().unwrap_or(0.0),
+            JobSpec::Nckqr { lam2, .. } => *lam2,
+            JobSpec::Cv { lambdas, .. } => lambdas.first().copied().unwrap_or(0.0),
+        }
+    }
+
+    pub fn tau_head(&self) -> f64 {
+        match self {
+            JobSpec::Kqr { tau, .. } | JobSpec::KqrPath { tau, .. } | JobSpec::Cv { tau, .. } => {
+                *tau
+            }
+            JobSpec::Nckqr { taus, .. } => taus.first().copied().unwrap_or(0.5),
+        }
+    }
+}
+
+/// A schedulable unit of work.
+#[derive(Clone, Debug)]
+pub struct FitJob {
+    pub id: u64,
+    pub dataset: Dataset,
+    pub kernel: Kernel,
+    pub spec: JobSpec,
+}
+
+impl FitJob {
+    /// Fingerprint used to group jobs that share solver state (same data
+    /// object ⇒ same Gram matrix / eigenbasis).
+    pub fn dataset_key(&self) -> (usize, usize, String) {
+        (self.dataset.n(), self.dataset.p(), self.dataset.name.clone())
+    }
+}
+
+/// Result payload of a finished job.
+#[derive(Clone, Debug)]
+pub enum JobOutcome {
+    Kqr(Vec<KqrFit>),
+    Nckqr(NckqrFit),
+    Cv(CvResult),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lambda_head_per_spec() {
+        assert_eq!(JobSpec::Kqr { tau: 0.5, lambda: 0.3 }.lambda_head(), 0.3);
+        assert_eq!(
+            JobSpec::KqrPath { tau: 0.5, lambdas: vec![1.0, 0.1] }.lambda_head(),
+            1.0
+        );
+        assert_eq!(
+            JobSpec::Nckqr { taus: vec![0.5], lam1: 2.0, lam2: 0.7 }.lambda_head(),
+            0.7
+        );
+    }
+}

@@ -1,0 +1,67 @@
+//! Lock-free operational metrics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Atomic counters shared between workers, server threads and the CLI.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub fits_total: AtomicU64,
+    pub predict_requests: AtomicU64,
+    pub apgd_iters_total: AtomicU64,
+    /// Microseconds spent inside solvers.
+    pub solver_micros: AtomicU64,
+    pub requests_total: AtomicU64,
+    pub protocol_errors: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn incr(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(counter: &AtomicU64) -> u64 {
+        counter.load(Ordering::Relaxed)
+    }
+
+    /// Render as a JSON object (served by the `metrics` command).
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj(vec![
+            ("jobs_submitted", Json::num(Self::get(&self.jobs_submitted) as f64)),
+            ("jobs_completed", Json::num(Self::get(&self.jobs_completed) as f64)),
+            ("jobs_failed", Json::num(Self::get(&self.jobs_failed) as f64)),
+            ("fits_total", Json::num(Self::get(&self.fits_total) as f64)),
+            ("predict_requests", Json::num(Self::get(&self.predict_requests) as f64)),
+            ("apgd_iters_total", Json::num(Self::get(&self.apgd_iters_total) as f64)),
+            ("solver_micros", Json::num(Self::get(&self.solver_micros) as f64)),
+            ("requests_total", Json::num(Self::get(&self.requests_total) as f64)),
+            ("protocol_errors", Json::num(Self::get(&self.protocol_errors) as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        Metrics::incr(&m.jobs_submitted);
+        Metrics::add(&m.jobs_submitted, 2);
+        assert_eq!(Metrics::get(&m.jobs_submitted), 3);
+        let j = m.to_json();
+        assert_eq!(j.get_f64("jobs_submitted"), Some(3.0));
+    }
+}

@@ -1,0 +1,32 @@
+//! L3 coordinator: fit-job scheduling, model registry, metrics and the
+//! TCP fit/predict service.
+//!
+//! The paper ships an R package; a production deployment of the same
+//! capability needs a long-lived service that accepts fit jobs, exploits
+//! the algorithm's warm-start structure when ordering work, keeps fitted
+//! models addressable for prediction, and reports operational metrics.
+//! That is what this module provides:
+//!
+//! - [`job`]: job specs (single fit, warm-started λ path, NCKQR, CV);
+//! - [`scheduler`]: a worker pool with warm-start-aware batch ordering —
+//!   jobs on the same dataset are grouped so each worker reuses the
+//!   eigendecomposition and solver state across the λ grid;
+//! - [`registry`]: a concurrent model store for the predict path;
+//! - [`metrics`]: atomic counters surfaced by the server and CLI;
+//! - [`server`]/[`protocol`]: a threaded TCP line-JSON service
+//!   (std::net — the offline environment has no tokio; a blocking
+//!   thread-per-connection design is appropriate for a compute-bound
+//!   service anyway).
+
+pub mod job;
+pub mod metrics;
+pub mod protocol;
+pub mod registry;
+pub mod scheduler;
+pub mod server;
+
+pub use job::{FitJob, JobOutcome, JobSpec};
+pub use metrics::Metrics;
+pub use registry::ModelRegistry;
+pub use scheduler::Scheduler;
+pub use server::{Server, ServerConfig};

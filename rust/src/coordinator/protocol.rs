@@ -1,0 +1,251 @@
+//! Line-JSON protocol of the fit/predict service.
+//!
+//! One request per line, one JSON response per line. Commands:
+//!
+//! | cmd | fields | response |
+//! |---|---|---|
+//! | `ping` | — | `{"ok":true,"pong":true,"version":…}` |
+//! | `fit` | `x` (n×p), `y` (n), `tau`, `lambda`, optional `kernel` | `{"ok":true,"model":"m0","objective":…,"kkt_pass":…}` |
+//! | `fit_nc` | `x`, `y`, `taus`, `lam1`, `lam2`, optional `kernel` | idem + `crossings` on the training points |
+//! | `predict` | `model`, `x` | `{"ok":true,"taus":[…],"pred":[[…]…]}` |
+//! | `models` | — | `{"ok":true,"models":[…]}` |
+//! | `drop` | `model` | `{"ok":true}` |
+//! | `metrics` | — | counter object |
+//!
+//! Kernel spec: `{"type":"rbf","sigma":σ}` (σ omitted → median
+//! heuristic), `{"type":"linear","c":…}`, `{"type":"laplacian","sigma":…}`.
+
+use super::metrics::Metrics;
+use super::registry::{ModelRegistry, StoredModel};
+use crate::kernel::{median_heuristic_sigma, Kernel};
+use crate::kqr::{KqrSolver, SolveOptions};
+use crate::linalg::Matrix;
+use crate::nckqr::NckqrSolver;
+use crate::util::Json;
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+/// Shared state the protocol operates on.
+pub struct ProtocolState {
+    pub registry: Arc<ModelRegistry>,
+    pub metrics: Arc<Metrics>,
+    pub opts: SolveOptions,
+}
+
+/// Parse an n×p matrix from a JSON array of arrays.
+pub fn matrix_from_json(v: &Json) -> Result<Matrix> {
+    let rows = v.as_arr().ok_or_else(|| anyhow!("x must be an array of arrays"))?;
+    if rows.is_empty() {
+        bail!("x must be non-empty");
+    }
+    let p = rows[0].as_arr().ok_or_else(|| anyhow!("x rows must be arrays"))?.len();
+    if p == 0 {
+        bail!("x rows must be non-empty");
+    }
+    let mut m = Matrix::zeros(rows.len(), p);
+    for (i, r) in rows.iter().enumerate() {
+        let r = r.as_arr().ok_or_else(|| anyhow!("x rows must be arrays"))?;
+        if r.len() != p {
+            bail!("ragged x: row {i} has {} cols, expected {p}", r.len());
+        }
+        for (j, cell) in r.iter().enumerate() {
+            m[(i, j)] = cell.as_f64().ok_or_else(|| anyhow!("x[{i}][{j}] not a number"))?;
+        }
+    }
+    Ok(m)
+}
+
+fn kernel_from_json(spec: Option<&Json>, x: &Matrix) -> Result<Kernel> {
+    match spec {
+        None => Ok(Kernel::Rbf { sigma: median_heuristic_sigma(x) }),
+        Some(s) => match s.get_str("type").unwrap_or("rbf") {
+            "rbf" => Ok(Kernel::Rbf {
+                sigma: s.get_f64("sigma").unwrap_or_else(|| median_heuristic_sigma(x)),
+            }),
+            "linear" => Ok(Kernel::Linear { c: s.get_f64("c").unwrap_or(0.0) }),
+            "laplacian" => Ok(Kernel::Laplacian {
+                sigma: s.get_f64("sigma").unwrap_or_else(|| median_heuristic_sigma(x)),
+            }),
+            "polynomial" => Ok(Kernel::Polynomial {
+                gamma: s.get_f64("gamma").unwrap_or(1.0),
+                c: s.get_f64("c").unwrap_or(1.0),
+                degree: s.get_f64("degree").unwrap_or(2.0) as u32,
+            }),
+            other => bail!("unknown kernel type {other:?}"),
+        },
+    }
+}
+
+fn err_json(msg: impl std::fmt::Display) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg.to_string()))])
+}
+
+/// Handle one request line; never panics, always returns a response.
+pub fn handle_line(state: &ProtocolState, line: &str) -> Json {
+    Metrics::incr(&state.metrics.requests_total);
+    let req = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            Metrics::incr(&state.metrics.protocol_errors);
+            return err_json(format!("bad json: {e}"));
+        }
+    };
+    match dispatch(state, &req) {
+        Ok(resp) => resp,
+        Err(e) => {
+            Metrics::incr(&state.metrics.protocol_errors);
+            err_json(e)
+        }
+    }
+}
+
+fn dispatch(state: &ProtocolState, req: &Json) -> Result<Json> {
+    let cmd = req.get_str("cmd").ok_or_else(|| anyhow!("missing 'cmd'"))?;
+    match cmd {
+        "ping" => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("pong", Json::Bool(true)),
+            ("version", Json::str(crate::version())),
+        ])),
+        "metrics" => Ok(state.metrics.to_json()),
+        "models" => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            (
+                "models",
+                Json::Arr(state.registry.list().into_iter().map(Json::Str).collect()),
+            ),
+        ])),
+        "drop" => {
+            let id = req.get_str("model").ok_or_else(|| anyhow!("missing 'model'"))?;
+            if state.registry.remove(id) {
+                Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+            } else {
+                bail!("no such model {id:?}")
+            }
+        }
+        "fit" => {
+            let x = matrix_from_json(req.get("x").ok_or_else(|| anyhow!("missing 'x'"))?)?;
+            let y = req.get_f64_arr("y").ok_or_else(|| anyhow!("missing 'y'"))?;
+            if y.len() != x.rows() {
+                bail!("len(y)={} != rows(x)={}", y.len(), x.rows());
+            }
+            let tau = req.get_f64("tau").ok_or_else(|| anyhow!("missing 'tau'"))?;
+            let lambda = req.get_f64("lambda").ok_or_else(|| anyhow!("missing 'lambda'"))?;
+            let kernel = kernel_from_json(req.get("kernel"), &x)?;
+            let solver = KqrSolver::new(&x, &y, kernel).with_options(state.opts.clone());
+            let fit = solver.fit(tau, lambda)?;
+            Metrics::incr(&state.metrics.fits_total);
+            let resp = Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("objective", Json::num(fit.objective)),
+                ("kkt_pass", Json::Bool(fit.kkt.pass)),
+                ("apgd_iters", Json::num(fit.apgd_iters as f64)),
+                ("model", Json::str(state.registry.insert(StoredModel::Kqr(fit)))),
+            ]);
+            Ok(resp)
+        }
+        "fit_nc" => {
+            let x = matrix_from_json(req.get("x").ok_or_else(|| anyhow!("missing 'x'"))?)?;
+            let y = req.get_f64_arr("y").ok_or_else(|| anyhow!("missing 'y'"))?;
+            let taus = req.get_f64_arr("taus").ok_or_else(|| anyhow!("missing 'taus'"))?;
+            let lam1 = req.get_f64("lam1").ok_or_else(|| anyhow!("missing 'lam1'"))?;
+            let lam2 = req.get_f64("lam2").ok_or_else(|| anyhow!("missing 'lam2'"))?;
+            let kernel = kernel_from_json(req.get("kernel"), &x)?;
+            let solver = NckqrSolver::new(&x, &y, kernel, &taus);
+            let fit = solver.fit(lam1, lam2)?;
+            Metrics::incr(&state.metrics.fits_total);
+            let crossings = fit.count_crossings(&x, 1e-9);
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("objective", Json::num(fit.objective)),
+                ("kkt_pass", Json::Bool(fit.kkt.pass)),
+                ("crossings", Json::num(crossings as f64)),
+                ("model", Json::str(state.registry.insert(StoredModel::Nckqr(fit)))),
+            ]))
+        }
+        "predict" => {
+            Metrics::incr(&state.metrics.predict_requests);
+            let id = req.get_str("model").ok_or_else(|| anyhow!("missing 'model'"))?;
+            let model =
+                state.registry.get(id).ok_or_else(|| anyhow!("no such model {id:?}"))?;
+            let x = matrix_from_json(req.get("x").ok_or_else(|| anyhow!("missing 'x'"))?)?;
+            let preds = model.predict(&x);
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("taus", Json::arr_f64(&model.taus())),
+                ("pred", Json::Arr(preds.iter().map(|p| Json::arr_f64(p)).collect())),
+            ]))
+        }
+        other => bail!("unknown cmd {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> ProtocolState {
+        ProtocolState {
+            registry: Arc::new(ModelRegistry::new()),
+            metrics: Arc::new(Metrics::new()),
+            opts: SolveOptions::default(),
+        }
+    }
+
+    #[test]
+    fn ping_and_unknown() {
+        let st = state();
+        let r = handle_line(&st, r#"{"cmd":"ping"}"#);
+        assert_eq!(r.get("pong").and_then(Json::as_bool), Some(true));
+        let r = handle_line(&st, r#"{"cmd":"nope"}"#);
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false));
+        let r = handle_line(&st, "not json at all");
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(Metrics::get(&st.metrics.protocol_errors), 2);
+    }
+
+    #[test]
+    fn fit_predict_roundtrip() {
+        let st = state();
+        // tiny dataset inline
+        let req = r#"{"cmd":"fit","x":[[0.0],[0.2],[0.4],[0.6],[0.8],[1.0],[0.1],[0.9]],
+                      "y":[0.0,0.6,0.9,0.9,0.6,0.0,0.3,0.3],"tau":0.5,"lambda":0.01}"#
+            .replace('\n', " ");
+        let r = handle_line(&st, &req);
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{}", r.to_string());
+        let id = r.get_str("model").unwrap().to_string();
+        let pr = handle_line(&st, &format!(r#"{{"cmd":"predict","model":"{id}","x":[[0.5]]}}"#));
+        assert_eq!(pr.get("ok").and_then(Json::as_bool), Some(true));
+        let pred = pr.get("pred").unwrap().as_arr().unwrap();
+        assert_eq!(pred.len(), 1);
+        // mid-point of the tent is near the top
+        let v = pred[0].as_arr().unwrap()[0].as_f64().unwrap();
+        assert!(v > 0.4, "pred at 0.5 = {v}");
+        // drop it
+        let dr = handle_line(&st, &format!(r#"{{"cmd":"drop","model":"{id}"}}"#));
+        assert_eq!(dr.get("ok").and_then(Json::as_bool), Some(true));
+        let pr2 = handle_line(&st, &format!(r#"{{"cmd":"predict","model":"{id}","x":[[0.5]]}}"#));
+        assert_eq!(pr2.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn matrix_parsing_validates() {
+        assert!(matrix_from_json(&Json::parse("[[1,2],[3]]").unwrap()).is_err());
+        assert!(matrix_from_json(&Json::parse("[]").unwrap()).is_err());
+        assert!(matrix_from_json(&Json::parse("[[1,\"a\"]]").unwrap()).is_err());
+        let m = matrix_from_json(&Json::parse("[[1,2],[3,4]]").unwrap()).unwrap();
+        assert_eq!(m[(1, 0)], 3.0);
+    }
+
+    #[test]
+    fn fit_nc_reports_crossings() {
+        let st = state();
+        let req = r#"{"cmd":"fit_nc","x":[[0.0],[0.25],[0.5],[0.75],[1.0],[0.1],[0.6],[0.9]],
+                      "y":[0.1,0.4,0.2,0.5,0.1,0.3,0.4,0.2],
+                      "taus":[0.25,0.75],"lam1":5.0,"lam2":0.05}"#
+            .replace('\n', " ");
+        let r = handle_line(&st, &req);
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{}", r.to_string());
+        assert_eq!(r.get_f64("crossings"), Some(0.0));
+    }
+}

@@ -1,0 +1,123 @@
+//! Concurrent model registry for the predict path.
+
+use crate::kqr::KqrFit;
+use crate::linalg::Matrix;
+use crate::nckqr::NckqrFit;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// A stored, predict-ready model.
+#[derive(Clone, Debug)]
+pub enum StoredModel {
+    Kqr(KqrFit),
+    Nckqr(NckqrFit),
+}
+
+impl StoredModel {
+    /// Predict: one output row per quantile level (KQR has one level).
+    pub fn predict(&self, xt: &Matrix) -> Vec<Vec<f64>> {
+        match self {
+            StoredModel::Kqr(f) => vec![f.predict(xt)],
+            StoredModel::Nckqr(f) => f.predict(xt),
+        }
+    }
+
+    pub fn taus(&self) -> Vec<f64> {
+        match self {
+            StoredModel::Kqr(f) => vec![f.tau],
+            StoredModel::Nckqr(f) => f.taus.clone(),
+        }
+    }
+
+    pub fn objective(&self) -> f64 {
+        match self {
+            StoredModel::Kqr(f) => f.objective,
+            StoredModel::Nckqr(f) => f.objective,
+        }
+    }
+}
+
+/// Thread-safe model store with generated ids.
+#[derive(Debug, Default)]
+pub struct ModelRegistry {
+    models: RwLock<HashMap<String, StoredModel>>,
+    next_id: AtomicU64,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Insert, returning the generated id (`m<seq>`).
+    pub fn insert(&self, model: StoredModel) -> String {
+        let id = format!("m{}", self.next_id.fetch_add(1, Ordering::Relaxed));
+        self.models.write().unwrap().insert(id.clone(), model);
+        id
+    }
+
+    pub fn get(&self, id: &str) -> Option<StoredModel> {
+        self.models.read().unwrap().get(id).cloned()
+    }
+
+    pub fn remove(&self, id: &str) -> bool {
+        self.models.write().unwrap().remove(id).is_some()
+    }
+
+    pub fn list(&self) -> Vec<String> {
+        let mut ids: Vec<String> = self.models.read().unwrap().keys().cloned().collect();
+        ids.sort();
+        ids
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, Rng};
+    use crate::kernel::Kernel;
+    use crate::kqr::KqrSolver;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut rng = Rng::new(1);
+        let d = synth::sine_hetero(20, &mut rng);
+        let fit = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma: 0.5 })
+            .fit(0.5, 0.1)
+            .unwrap();
+        let reg = ModelRegistry::new();
+        let id = reg.insert(StoredModel::Kqr(fit));
+        assert_eq!(reg.len(), 1);
+        let m = reg.get(&id).unwrap();
+        assert_eq!(m.taus(), vec![0.5]);
+        let preds = m.predict(&d.x);
+        assert_eq!(preds.len(), 1);
+        assert_eq!(preds[0].len(), 20);
+        assert!(reg.remove(&id));
+        assert!(reg.is_empty());
+        assert!(reg.get(&id).is_none());
+    }
+
+    #[test]
+    fn ids_are_unique_and_listed() {
+        let mut rng = Rng::new(2);
+        let d = synth::sine_hetero(15, &mut rng);
+        let fit = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma: 0.5 })
+            .fit(0.5, 0.1)
+            .unwrap();
+        let reg = ModelRegistry::new();
+        let a = reg.insert(StoredModel::Kqr(fit.clone()));
+        let b = reg.insert(StoredModel::Kqr(fit));
+        assert_ne!(a, b);
+        assert_eq!(reg.list().len(), 2);
+    }
+}

@@ -1,0 +1,299 @@
+//! Warm-start-aware fit-job scheduler.
+//!
+//! Workers pull jobs from a shared queue. `submit_batch` orders a batch
+//! so that jobs sharing a dataset are adjacent, grouped by τ, with λ
+//! descending — the order in which `KqrSolver`'s warm starts (and the
+//! shared eigendecomposition) pay off. A worker detects consecutive jobs
+//! on the same dataset and reuses its solver instead of re-decomposing.
+
+use super::job::{FitJob, JobOutcome, JobSpec};
+use super::metrics::Metrics;
+use crate::backend::NativeBackend;
+use crate::cv::cross_validate;
+use crate::data::Rng;
+use crate::kqr::apgd::ApgdState;
+use crate::kqr::{KqrSolver, SolveOptions};
+use crate::nckqr::NckqrSolver;
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A finished job: (job id, result).
+pub type JobResult = (u64, anyhow::Result<JobOutcome>);
+
+struct Queue {
+    jobs: Mutex<VecDeque<(FitJob, Sender<JobResult>)>>,
+    ready: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+/// Thread-pool scheduler.
+pub struct Scheduler {
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    pub opts: SolveOptions,
+}
+
+impl Scheduler {
+    pub fn new(n_workers: usize) -> Scheduler {
+        Scheduler::with_options(n_workers, SolveOptions::default())
+    }
+
+    pub fn with_options(n_workers: usize, opts: SolveOptions) -> Scheduler {
+        assert!(n_workers >= 1);
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            shutdown: Mutex::new(false),
+        });
+        let metrics = Arc::new(Metrics::new());
+        let mut workers = Vec::new();
+        for wid in 0..n_workers {
+            let q = queue.clone();
+            let m = metrics.clone();
+            let o = opts.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("fastkqr-worker-{wid}"))
+                    .spawn(move || worker_loop(q, m, o))
+                    .expect("spawn worker"),
+            );
+        }
+        Scheduler { queue, workers, metrics, opts }
+    }
+
+    /// Submit one job; the receiver yields its result.
+    pub fn submit(&self, job: FitJob) -> Receiver<JobResult> {
+        Metrics::incr(&self.metrics.jobs_submitted);
+        let (tx, rx) = channel();
+        self.queue.jobs.lock().unwrap().push_back((job, tx));
+        self.queue.ready.notify_one();
+        rx
+    }
+
+    /// Submit a batch in warm-start-friendly order; one receiver yields
+    /// all results (job ids disambiguate).
+    pub fn submit_batch(&self, mut jobs: Vec<FitJob>) -> Receiver<JobResult> {
+        jobs.sort_by(|a, b| {
+            a.dataset_key()
+                .cmp(&b.dataset_key())
+                .then(
+                    a.spec
+                        .tau_head()
+                        .partial_cmp(&b.spec.tau_head())
+                        .unwrap_or(std::cmp::Ordering::Equal),
+                )
+                // λ descending: warm starts flow from heavy to light
+                .then(
+                    b.spec
+                        .lambda_head()
+                        .partial_cmp(&a.spec.lambda_head())
+                        .unwrap_or(std::cmp::Ordering::Equal),
+                )
+        });
+        let (tx, rx) = channel();
+        {
+            let mut q = self.queue.jobs.lock().unwrap();
+            for job in jobs {
+                Metrics::incr(&self.metrics.jobs_submitted);
+                q.push_back((job, tx.clone()));
+            }
+        }
+        self.queue.ready.notify_all();
+        rx
+    }
+
+    /// Stop accepting work and join the workers.
+    pub fn shutdown(self) {
+        *self.queue.shutdown.lock().unwrap() = true;
+        self.queue.ready.notify_all();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(queue: Arc<Queue>, metrics: Arc<Metrics>, opts: SolveOptions) {
+    // Per-worker solver cache: consecutive jobs on the same dataset reuse
+    // the Gram matrix + eigenbasis (and τ-grouped warm starts).
+    let mut cached: Option<((usize, usize, String), KqrSolver)> = None;
+    let mut warm: Option<(f64, ApgdState)> = None; // keyed by tau
+    loop {
+        let item = {
+            let mut jobs = queue.jobs.lock().unwrap();
+            loop {
+                if let Some(item) = jobs.pop_front() {
+                    break Some(item);
+                }
+                if *queue.shutdown.lock().unwrap() {
+                    break None;
+                }
+                jobs = queue.ready.wait(jobs).unwrap();
+            }
+        };
+        let Some((job, tx)) = item else { return };
+        let t0 = Instant::now();
+        let result = run_job(&job, &opts, &mut cached, &mut warm, &metrics);
+        Metrics::add(&metrics.solver_micros, t0.elapsed().as_micros() as u64);
+        match &result {
+            Ok(_) => Metrics::incr(&metrics.jobs_completed),
+            Err(_) => Metrics::incr(&metrics.jobs_failed),
+        }
+        // receiver may have been dropped; that's fine
+        let _ = tx.send((job.id, result));
+    }
+}
+
+fn run_job(
+    job: &FitJob,
+    opts: &SolveOptions,
+    cached: &mut Option<((usize, usize, String), KqrSolver)>,
+    warm: &mut Option<(f64, ApgdState)>,
+    metrics: &Metrics,
+) -> anyhow::Result<JobOutcome> {
+    match &job.spec {
+        JobSpec::Kqr { tau, lambda } => {
+            let solver = fetch_solver(job, opts, cached, warm);
+            let mut backend = NativeBackend::new();
+            let mut state = match warm.take() {
+                Some((wt, st)) if wt == *tau => st,
+                _ => ApgdState::zeros(solver.n()),
+            };
+            let fit = solver.fit_warm(*tau, *lambda, &mut state, &mut backend)?;
+            *warm = Some((*tau, state));
+            Metrics::incr(&metrics.fits_total);
+            Metrics::add(&metrics.apgd_iters_total, fit.apgd_iters as u64);
+            Ok(JobOutcome::Kqr(vec![fit]))
+        }
+        JobSpec::KqrPath { tau, lambdas } => {
+            let solver = fetch_solver(job, opts, cached, warm);
+            let fits = solver.fit_path(*tau, lambdas)?;
+            Metrics::add(&metrics.fits_total, fits.len() as u64);
+            Metrics::add(
+                &metrics.apgd_iters_total,
+                fits.iter().map(|f| f.apgd_iters as u64).sum(),
+            );
+            Ok(JobOutcome::Kqr(fits))
+        }
+        JobSpec::Nckqr { taus, lam1, lam2 } => {
+            let solver = NckqrSolver::new(&job.dataset.x, &job.dataset.y, job.kernel.clone(), taus);
+            let fit = solver.fit(*lam1, *lam2)?;
+            Metrics::incr(&metrics.fits_total);
+            Ok(JobOutcome::Nckqr(fit))
+        }
+        JobSpec::Cv { tau, lambdas, folds, seed } => {
+            let mut rng = Rng::new(*seed);
+            let res =
+                cross_validate(&job.dataset, &job.kernel, *tau, lambdas, *folds, opts, &mut rng)?;
+            Metrics::add(&metrics.fits_total, (lambdas.len() * folds) as u64);
+            Ok(JobOutcome::Cv(res))
+        }
+    }
+}
+
+/// Get (or build) the cached solver for this job's dataset.
+fn fetch_solver<'a>(
+    job: &FitJob,
+    opts: &SolveOptions,
+    cached: &'a mut Option<((usize, usize, String), KqrSolver)>,
+    warm: &mut Option<(f64, ApgdState)>,
+) -> &'a KqrSolver {
+    let key = job.dataset_key();
+    let hit = matches!(cached, Some((k, _)) if *k == key);
+    if !hit {
+        let solver = KqrSolver::new(&job.dataset.x, &job.dataset.y, job.kernel.clone())
+            .with_options(opts.clone());
+        *cached = Some((key, solver));
+        *warm = None;
+    }
+    &cached.as_ref().unwrap().1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kernel::Kernel;
+
+    fn make_job(id: u64, n: usize, seed: u64, spec: JobSpec) -> FitJob {
+        let mut rng = Rng::new(seed);
+        let dataset = synth::sine_hetero(n, &mut rng);
+        FitJob { id, dataset, kernel: Kernel::Rbf { sigma: 0.4 }, spec }
+    }
+
+    #[test]
+    fn single_job_roundtrip() {
+        let sched = Scheduler::new(1);
+        let rx = sched.submit(make_job(7, 25, 1, JobSpec::Kqr { tau: 0.5, lambda: 0.05 }));
+        let (id, res) = rx.recv().unwrap();
+        assert_eq!(id, 7);
+        match res.unwrap() {
+            JobOutcome::Kqr(fits) => {
+                assert_eq!(fits.len(), 1);
+                assert!(fits[0].kkt.pass);
+            }
+            _ => panic!("wrong outcome"),
+        }
+        assert_eq!(Metrics::get(&sched.metrics.jobs_completed), 1);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn batch_is_ordered_lambda_descending() {
+        let sched = Scheduler::new(1);
+        // same dataset (same seed/name/shape) → grouped; λ ascending input
+        let jobs = vec![
+            make_job(1, 20, 3, JobSpec::Kqr { tau: 0.5, lambda: 0.01 }),
+            make_job(2, 20, 3, JobSpec::Kqr { tau: 0.5, lambda: 1.0 }),
+            make_job(3, 20, 3, JobSpec::Kqr { tau: 0.5, lambda: 0.1 }),
+        ];
+        let rx = sched.submit_batch(jobs);
+        let mut order = Vec::new();
+        for _ in 0..3 {
+            let (id, res) = rx.recv().unwrap();
+            res.unwrap();
+            order.push(id);
+        }
+        // execution order follows descending λ: ids 2, 3, 1
+        assert_eq!(order, vec![2, 3, 1]);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn multi_spec_batch_completes() {
+        let sched = Scheduler::new(2);
+        let jobs = vec![
+            make_job(1, 24, 5, JobSpec::KqrPath { tau: 0.3, lambdas: vec![0.5, 0.05] }),
+            make_job(2, 24, 5, JobSpec::Nckqr { taus: vec![0.3, 0.7], lam1: 1.0, lam2: 0.05 }),
+            make_job(
+                3,
+                24,
+                5,
+                JobSpec::Cv { tau: 0.5, lambdas: vec![0.5, 0.05], folds: 3, seed: 1 },
+            ),
+        ];
+        let rx = sched.submit_batch(jobs);
+        let mut got = 0;
+        for _ in 0..3 {
+            let (_, res) = rx.recv().unwrap();
+            res.unwrap();
+            got += 1;
+        }
+        assert_eq!(got, 3);
+        assert_eq!(Metrics::get(&sched.metrics.jobs_failed), 0);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn failed_job_reports_error() {
+        let sched = Scheduler::new(1);
+        let rx = sched.submit(make_job(9, 10, 6, JobSpec::Kqr { tau: 0.5, lambda: -1.0 }));
+        let (_, res) = rx.recv().unwrap();
+        assert!(res.is_err());
+        assert_eq!(Metrics::get(&sched.metrics.jobs_failed), 1);
+        sched.shutdown();
+    }
+}

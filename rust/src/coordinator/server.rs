@@ -1,0 +1,167 @@
+//! Threaded TCP fit/predict server (line-JSON protocol; see
+//! [`protocol`](super::protocol)).
+//!
+//! std::net + thread-per-connection: the offline image has no tokio, and
+//! for a compute-bound service (fits run for seconds) blocking threads
+//! are the simpler and equally scalable design at this fan-in.
+
+use super::metrics::Metrics;
+use super::protocol::{handle_line, ProtocolState};
+use super::registry::ModelRegistry;
+use crate::kqr::SolveOptions;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub opts: SolveOptions,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:7787".to_string(), opts: SolveOptions::default() }
+    }
+}
+
+/// A running server handle.
+pub struct Server {
+    pub local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    pub registry: Arc<ModelRegistry>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Server {
+    /// Bind and start accepting connections on a background thread.
+    pub fn spawn(config: ServerConfig) -> Result<Server> {
+        let listener =
+            TcpListener::bind(&config.addr).with_context(|| format!("bind {}", config.addr))?;
+        let local_addr = listener.local_addr()?;
+        let registry = Arc::new(ModelRegistry::new());
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let state = Arc::new(ProtocolState {
+            registry: registry.clone(),
+            metrics: metrics.clone(),
+            opts: config.opts,
+        });
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("fastkqr-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let st = state.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("fastkqr-conn".into())
+                                .spawn(move || handle_connection(stream, &st));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server {
+            local_addr,
+            stop,
+            accept_thread: Some(accept_thread),
+            registry,
+            metrics,
+        })
+    }
+
+    /// Stop accepting and join the accept loop (in-flight connections
+    /// finish their current request).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the accept loop
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, state: &ProtocolState) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        if line.trim() == "quit" {
+            break;
+        }
+        let resp = handle_line(state, &line);
+        let mut out = resp.to_string();
+        out.push('\n');
+        if writer.write_all(out.as_bytes()).is_err() {
+            break;
+        }
+    }
+    crate::util::timer::vlog(&format!("connection closed: {peer:?}"));
+}
+
+/// Minimal blocking client (used by tests, examples and the CLI).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connect")?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one JSON request line, read one JSON response line.
+    pub fn request(&mut self, req: &crate::util::Json) -> Result<crate::util::Json> {
+        let mut line = req.to_string();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        crate::util::Json::parse(resp.trim())
+            .map_err(|e| anyhow::anyhow!("bad response: {e} ({resp:?})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Json;
+
+    #[test]
+    fn spawn_ping_shutdown() {
+        let server = Server::spawn(ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            opts: SolveOptions::default(),
+        })
+        .unwrap();
+        let mut client = Client::connect(server.local_addr).unwrap();
+        let resp = client.request(&Json::obj(vec![("cmd", Json::str("ping"))])).unwrap();
+        assert_eq!(resp.get("pong").and_then(Json::as_bool), Some(true));
+        let m = client.request(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
+        // the metrics request itself is counted before rendering
+        assert_eq!(m.get_f64("requests_total"), Some(2.0));
+        server.shutdown();
+    }
+}

@@ -1,0 +1,11 @@
+//! Data substrate: RNG, dataset container, the paper's simulation models
+//! and benchmark-data lookalikes (see DESIGN.md §3 for the substitution
+//! rationale).
+
+pub mod benchmarks;
+pub mod dataset;
+pub mod rng;
+pub mod synth;
+
+pub use dataset::Dataset;
+pub use rng::Rng;

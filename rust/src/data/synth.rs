@@ -1,0 +1,180 @@
+//! Simulation models from the paper's evaluation section.
+//!
+//! - [`friedman`]: the linear model of Friedman, Hastie & Tibshirani
+//!   (2010), eq. (20) of the paper — used by Tables 1 (p=5000) and 3
+//!   (p=100).
+//! - [`yuan`]: the two-dimensional nonlinear surface of Yuan (2006),
+//!   eq. (24) — used by Table 4 and the paper's headline "70s vs 700s"
+//!   anecdote.
+
+use super::dataset::Dataset;
+use super::rng::Rng;
+use crate::linalg::Matrix;
+
+/// Friedman et al. (2010) simulation, paper eq. (20):
+///
+///   Y = Σ_j X_j β_j + c·Z,   β_j = (−1)^j exp(−(j−1)/10),  Z ~ N(0,1),
+///
+/// predictors N(0,1) with pairwise correlation ρ = 0.1, and `c` chosen so
+/// the signal-to-noise ratio  Var(Xβ)/c² equals `snr` (3.0 in the paper).
+pub fn friedman(n: usize, p: usize, snr: f64, rng: &mut Rng) -> Dataset {
+    assert!(n > 0 && p > 0);
+    // Equi-correlated Gaussians: X_j = sqrt(rho)*W + sqrt(1-rho)*Z_j gives
+    // corr(X_i, X_j) = rho for i != j and Var(X_j) = 1.
+    let rho: f64 = 0.1;
+    let a = rho.sqrt();
+    let b = (1.0 - rho).sqrt();
+    let beta: Vec<f64> = (0..p)
+        .map(|j| {
+            let j1 = (j + 1) as f64; // paper indexes from 1
+            let sign = if (j + 1) % 2 == 0 { 1.0 } else { -1.0 };
+            sign * (-(j1 - 1.0) / 10.0).exp()
+        })
+        .collect();
+    // Var(Xβ) under the equi-correlated design:
+    //   Var = (1-ρ) Σ β_j² + ρ (Σ β_j)².
+    let sum_b: f64 = beta.iter().sum();
+    let sum_b2: f64 = beta.iter().map(|v| v * v).sum();
+    let signal_var = (1.0 - rho) * sum_b2 + rho * sum_b * sum_b;
+    let c = (signal_var / snr).sqrt();
+
+    let mut x = Matrix::zeros(n, p);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let w = rng.normal();
+        let mut xb = 0.0;
+        {
+            let row = x.row_mut(i);
+            for j in 0..p {
+                let v = a * w + b * rng.normal();
+                row[j] = v;
+                xb += v * beta[j];
+            }
+        }
+        y.push(xb + c * rng.normal());
+    }
+    Dataset::new(format!("friedman(n={n},p={p},snr={snr})"), x, y)
+}
+
+/// Yuan (2006) two-dimensional model, paper eq. (24):
+///
+///   Y = 40·exp{8((x1−.5)² + (x2−.5)²)} /
+///       (exp{8((x1−.2)² + (x2−.7)²)} + exp{8((x1−.7)² + (x2−.2)²)}) + ε,
+///
+/// x1, x2 ~ U(0,1), ε ~ N(0,1).
+pub fn yuan(n: usize, rng: &mut Rng) -> Dataset {
+    let mut x = Matrix::zeros(n, 2);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let x1 = rng.uniform();
+        let x2 = rng.uniform();
+        x[(i, 0)] = x1;
+        x[(i, 1)] = x2;
+        y.push(yuan_mean(x1, x2) + rng.normal());
+    }
+    Dataset::new(format!("yuan(n={n})"), x, y)
+}
+
+/// Noise-free Yuan (2006) regression surface (used to sanity-check fits).
+pub fn yuan_mean(x1: f64, x2: f64) -> f64 {
+    let num = 40.0 * (8.0 * ((x1 - 0.5).powi(2) + (x2 - 0.5).powi(2))).exp();
+    let den = (8.0 * ((x1 - 0.2).powi(2) + (x2 - 0.7).powi(2))).exp()
+        + (8.0 * ((x1 - 0.7).powi(2) + (x2 - 0.2).powi(2))).exp();
+    num / den
+}
+
+/// A 1-D heteroscedastic sine model used by unit tests and the quickstart
+/// example (quantiles have closed form: q_τ(x) = sin(2πx)·2 + σ(x)·Φ⁻¹(τ)).
+pub fn sine_hetero(n: usize, rng: &mut Rng) -> Dataset {
+    let mut x = Matrix::zeros(n, 1);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let xi = rng.uniform();
+        x[(i, 0)] = xi;
+        let sd = 0.5 + xi; // noise grows with x
+        y.push(2.0 * (2.0 * std::f64::consts::PI * xi).sin() + sd * rng.normal());
+    }
+    Dataset::new(format!("sine_hetero(n={n})"), x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn friedman_shapes_and_snr() {
+        let mut rng = Rng::new(11);
+        let d = friedman(2000, 10, 3.0, &mut rng);
+        assert_eq!(d.n(), 2000);
+        assert_eq!(d.p(), 10);
+        // empirical correlation of first two predictors ~ 0.1
+        let n = d.n() as f64;
+        let m0: f64 = (0..d.n()).map(|i| d.x[(i, 0)]).sum::<f64>() / n;
+        let m1: f64 = (0..d.n()).map(|i| d.x[(i, 1)]).sum::<f64>() / n;
+        let mut cov = 0.0;
+        let mut v0 = 0.0;
+        let mut v1 = 0.0;
+        for i in 0..d.n() {
+            let a = d.x[(i, 0)] - m0;
+            let b = d.x[(i, 1)] - m1;
+            cov += a * b;
+            v0 += a * a;
+            v1 += b * b;
+        }
+        let corr = cov / (v0.sqrt() * v1.sqrt());
+        assert!((corr - 0.1).abs() < 0.08, "corr={corr}");
+    }
+
+    #[test]
+    fn friedman_beta_signs_alternate() {
+        // The response should correlate positively with X_2 (β_2 > 0) and
+        // negatively with X_1 (β_1 < 0); check via large-sample covariances.
+        let mut rng = Rng::new(21);
+        let d = friedman(4000, 5, 3.0, &mut rng);
+        let n = d.n() as f64;
+        let my: f64 = d.y.iter().sum::<f64>() / n;
+        for (j, expect_neg) in [(0usize, true), (1usize, false)] {
+            let mx: f64 = (0..d.n()).map(|i| d.x[(i, j)]).sum::<f64>() / n;
+            let cov: f64 = (0..d.n())
+                .map(|i| (d.x[(i, j)] - mx) * (d.y[i] - my))
+                .sum::<f64>()
+                / n;
+            assert_eq!(cov < 0.0, expect_neg, "j={j} cov={cov}");
+        }
+    }
+
+    #[test]
+    fn yuan_surface_known_values() {
+        // Symmetric point: x1 = x2 = 0.5 → num = 40, den = 2·exp(8·0.13)
+        let v = yuan_mean(0.5, 0.5);
+        let expect = 40.0 / (2.0 * (8.0f64 * (0.09 + 0.04)).exp());
+        assert!((v - expect).abs() < 1e-12);
+        let mut rng = Rng::new(3);
+        let d = yuan(500, &mut rng);
+        assert_eq!(d.p(), 2);
+        assert!(d.x.as_slice().iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+
+    #[test]
+    fn sine_hetero_spread_grows() {
+        let mut rng = Rng::new(5);
+        let d = sine_hetero(4000, &mut rng);
+        // residual spread on x<0.2 should be smaller than x>0.8
+        let mut lo = vec![];
+        let mut hi = vec![];
+        for i in 0..d.n() {
+            let x = d.x[(i, 0)];
+            let r = d.y[i] - 2.0 * (2.0 * std::f64::consts::PI * x).sin();
+            if x < 0.2 {
+                lo.push(r);
+            } else if x > 0.8 {
+                hi.push(r);
+            }
+        }
+        let sd = |v: &Vec<f64>| {
+            let m = v.iter().sum::<f64>() / v.len() as f64;
+            (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+        };
+        assert!(sd(&hi) > sd(&lo) + 0.3, "hi={} lo={}", sd(&hi), sd(&lo));
+    }
+}

@@ -1,0 +1,325 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//! 1. **Spectral vs dense solves** — the paper's core O(n²) claim: per
+//!    (γ, λ) plan, the naive path factorizes P (O(n³)) where the spectral
+//!    path is O(n); both then iterate at O(n²).
+//! 2. **Warm vs cold λ path** — §2.4's warm-start strategy.
+//! 3. **Nesterov on/off** — APGD vs plain MM (Prop. 4's rate).
+//! 4. **Projection on/off** — exactness of the certificate without the
+//!    eq.-(8) projection.
+//! 5. **NCKQR ε-ridge** — the paper's ε = 10⁻³ vs our ε = 0 (see
+//!    `nckqr::plan::EPSILON_RIDGE`): iterations to reach the certificate.
+
+use crate::data::{synth, Rng};
+use crate::kernel::{median_heuristic_sigma, Kernel};
+use crate::kqr::{KqrSolver, SolveOptions};
+use crate::linalg::{gemm, Cholesky, Matrix};
+use crate::nckqr::{plan::NcPlan, NcOptions, NckqrSolver};
+use crate::util::Timer;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct AblationRow {
+    pub name: String,
+    pub variant: String,
+    pub metric: String,
+    pub value: f64,
+}
+
+fn solver_fixture(n: usize, seed: u64) -> KqrSolver {
+    let mut rng = Rng::new(seed);
+    let d = synth::sine_hetero(n, &mut rng);
+    let sigma = median_heuristic_sigma(&d.x);
+    KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma })
+}
+
+/// 1. Spectral plan setup vs dense Cholesky of P per (γ, λ).
+pub fn spectral_vs_dense(n: usize, plans: usize, seed: u64) -> Result<Vec<AblationRow>> {
+    let solver = solver_fixture(n, seed);
+    let gammas_lams: Vec<(f64, f64)> = (0..plans)
+        .map(|i| (0.25f64.powi((i % 4) as i32), 0.5 * 0.5f64.powi(i as i32 % 8)))
+        .collect();
+    // spectral: O(n) per plan after the shared eigendecomposition
+    let t = Timer::start("spectral");
+    for &(g, l) in &gammas_lams {
+        let plan = crate::spectral::SpectralPlan::new(&solver.basis, g, l);
+        std::hint::black_box(&plan);
+    }
+    let spectral_s = t.total();
+    // dense: assemble + factor P per plan (the O(n³) the paper avoids)
+    let k2 = gemm(&solver.gram, &solver.gram);
+    let t = Timer::start("dense");
+    for &(g, l) in &gammas_lams {
+        let nf = n as f64;
+        let mut p = Matrix::zeros(n + 1, n + 1);
+        p[(0, 0)] = nf;
+        for j in 0..n {
+            let cs: f64 = (0..n).map(|i| solver.gram[(i, j)]).sum();
+            p[(0, j + 1)] = cs;
+            p[(j + 1, 0)] = cs;
+        }
+        for i in 0..n {
+            for j in 0..n {
+                p[(i + 1, j + 1)] = k2[(i, j)] + 2.0 * nf * g * l * solver.gram[(i, j)];
+            }
+            p[(i + 1, i + 1)] += 1e-10;
+        }
+        let ch = Cholesky::new(&p)?;
+        std::hint::black_box(&ch);
+    }
+    let dense_s = t.total();
+    Ok(vec![
+        AblationRow {
+            name: "spectral_vs_dense".into(),
+            variant: format!("spectral(n={n},plans={plans})"),
+            metric: "seconds".into(),
+            value: spectral_s,
+        },
+        AblationRow {
+            name: "spectral_vs_dense".into(),
+            variant: format!("dense(n={n},plans={plans})"),
+            metric: "seconds".into(),
+            value: dense_s,
+        },
+    ])
+}
+
+/// 2. Warm-started path vs cold fits over the same grid.
+pub fn warm_vs_cold(n: usize, nlam: usize, seed: u64) -> Result<Vec<AblationRow>> {
+    let solver = solver_fixture(n, seed);
+    let lams = solver.lambda_grid(nlam, 0.5, 1e-4);
+    let t = Timer::start("warm");
+    let warm_fits = solver.fit_path(0.5, &lams)?;
+    let warm_s = t.total();
+    let warm_iters: usize = warm_fits.iter().map(|f| f.apgd_iters).sum();
+    let t = Timer::start("cold");
+    let mut cold_iters = 0usize;
+    for &l in &lams {
+        cold_iters += solver.fit(0.5, l)?.apgd_iters;
+    }
+    let cold_s = t.total();
+    Ok(vec![
+        AblationRow {
+            name: "warm_vs_cold".into(),
+            variant: "warm".into(),
+            metric: "seconds".into(),
+            value: warm_s,
+        },
+        AblationRow {
+            name: "warm_vs_cold".into(),
+            variant: "cold".into(),
+            metric: "seconds".into(),
+            value: cold_s,
+        },
+        AblationRow {
+            name: "warm_vs_cold".into(),
+            variant: "warm".into(),
+            metric: "apgd_iters".into(),
+            value: warm_iters as f64,
+        },
+        AblationRow {
+            name: "warm_vs_cold".into(),
+            variant: "cold".into(),
+            metric: "apgd_iters".into(),
+            value: cold_iters as f64,
+        },
+    ])
+}
+
+/// 3 + 4. Nesterov / projection switches.
+pub fn solver_switches(n: usize, seed: u64) -> Result<Vec<AblationRow>> {
+    let base = solver_fixture(n, seed);
+    let mut rows = Vec::new();
+    for (name, nesterov, projection) in [
+        ("apgd+proj", true, true),
+        ("plainmm+proj", false, true),
+        ("apgd-noproj", true, false),
+    ] {
+        let mut opts = SolveOptions::default();
+        opts.nesterov = nesterov;
+        opts.projection = projection;
+        // plain MM needs far more iterations; cap for the harness
+        if !nesterov {
+            opts.max_iters = 200_000;
+        }
+        let solver = solver_fixture(n, seed).with_options(opts);
+        let t = Timer::start(name);
+        let fit = solver.fit(0.5, 0.01)?;
+        rows.push(AblationRow {
+            name: "switches".into(),
+            variant: name.into(),
+            metric: "seconds".into(),
+            value: t.total(),
+        });
+        rows.push(AblationRow {
+            name: "switches".into(),
+            variant: name.into(),
+            metric: "apgd_iters".into(),
+            value: fit.apgd_iters as f64,
+        });
+        rows.push(AblationRow {
+            name: "switches".into(),
+            variant: name.into(),
+            metric: "kkt_stat".into(),
+            value: fit.kkt.max_stationarity,
+        });
+        rows.push(AblationRow {
+            name: "switches".into(),
+            variant: name.into(),
+            metric: "objective".into(),
+            value: fit.objective,
+        });
+    }
+    let _ = base;
+    Ok(rows)
+}
+
+/// 5. NCKQR ε-ridge: ε = 0 (ours) vs the paper's ε = 10⁻³.
+pub fn nckqr_ridge(n: usize, seed: u64) -> Result<Vec<AblationRow>> {
+    let mut rng = Rng::new(seed);
+    let d = synth::sine_hetero(n, &mut rng);
+    let sigma = median_heuristic_sigma(&d.x);
+    let kernel = Kernel::Rbf { sigma };
+    let taus = [0.25, 0.75];
+    let mut rows = Vec::new();
+    // ε = 0 (library default)
+    let nc = NckqrSolver::new(&d.x, &d.y, kernel.clone(), &taus);
+    let t = Timer::start("eps0");
+    let fit0 = nc.fit(1.0, 0.05)?;
+    rows.push(AblationRow {
+        name: "nckqr_ridge".into(),
+        variant: "eps=0".into(),
+        metric: "seconds".into(),
+        value: t.total(),
+    });
+    rows.push(AblationRow {
+        name: "nckqr_ridge".into(),
+        variant: "eps=0".into(),
+        metric: "kkt_stat".into(),
+        value: fit0.kkt.max_stationarity,
+    });
+    rows.push(AblationRow {
+        name: "nckqr_ridge".into(),
+        variant: "eps=0".into(),
+        metric: "mm_iters".into(),
+        value: fit0.mm_iters as f64,
+    });
+    // ε = 1e-3 (paper): measure the stationarity the throttled update
+    // reaches under the same iteration budget at one (γ, λ) rung
+    let plan_paper = NcPlan::with_ridge(&nc.basis, 1e-3, 1.0, 0.05, 1e-3);
+    let plan_ours = NcPlan::new(&nc.basis, 1e-3, 1.0, 0.05);
+    for (variant, plan) in [("eps=1e-3", plan_paper), ("eps=0-rung", plan_ours)] {
+        let mut opts = NcOptions::default();
+        opts.max_iters = 12_000;
+        let stat = mm_stationarity_after(&nc, &plan, opts.max_iters)?;
+        rows.push(AblationRow {
+            name: "nckqr_ridge".into(),
+            variant: variant.into(),
+            metric: "stationarity@12000it".into(),
+            value: stat,
+        });
+    }
+    Ok(rows)
+}
+
+/// Run accelerated MM iterations at one plan and report the final
+/// stationarity residual. With Nesterov, the large-eigenvalue directions
+/// converge quickly, so what remains exposes the ε-ridge throttling of
+/// the near-null directions (which no amount of momentum can fix: their
+/// update coefficient is ∝ λᵢ/ε → 0).
+fn mm_stationarity_after(nc: &NckqrSolver, plan: &NcPlan, iters: usize) -> Result<f64> {
+    use crate::smooth::{h_gamma_prime, smooth_relu_prime};
+    let n = nc.n();
+    let nf = n as f64;
+    let t_lv = nc.taus.len();
+    let gamma = plan.gamma;
+    let eta = gamma.max(crate::nckqr::ETA_EXACT);
+    let mut bs = vec![0.0f64; t_lv];
+    let mut betas = vec![vec![0.0f64; n]; t_lv];
+    let mut bs_prev = bs.clone();
+    let mut betas_prev = betas.clone();
+    let mut fs = vec![vec![0.0; n]; t_lv];
+    let mut qs = vec![vec![0.0; n]; t_lv - 1];
+    let mut w = vec![0.0; n];
+    let mut tvec = vec![0.0; n];
+    let mut dbeta = vec![0.0; n];
+    let mut scratch = vec![0.0; n];
+    let mut ck = 1.0f64;
+    let mut conv = f64::INFINITY;
+    for _ in 0..iters {
+        let ck_next = 0.5 * (1.0 + (1.0 + 4.0 * ck * ck).sqrt());
+        let mom = (ck - 1.0) / ck_next;
+        let bars_b: Vec<f64> =
+            (0..t_lv).map(|t| bs[t] + mom * (bs[t] - bs_prev[t])).collect();
+        let bars: Vec<Vec<f64>> = (0..t_lv)
+            .map(|t| {
+                (0..n).map(|i| betas[t][i] + mom * (betas[t][i] - betas_prev[t][i])).collect()
+            })
+            .collect();
+        for t in 0..t_lv {
+            nc.basis.fitted(bars_b[t], &bars[t], &mut scratch, &mut fs[t]);
+        }
+        for t in 0..t_lv - 1 {
+            for i in 0..n {
+                qs[t][i] = smooth_relu_prime(fs[t][i] - fs[t + 1][i], eta);
+            }
+        }
+        conv = 0.0;
+        for t in 0..t_lv {
+            for i in 0..n {
+                let z = h_gamma_prime(nc.y[i] - fs[t][i], nc.taus[t], gamma);
+                let fwd = if t < t_lv - 1 { qs[t][i] } else { 0.0 };
+                let bwd = if t > 0 { qs[t - 1][i] } else { 0.0 };
+                w[i] = z - nf * plan.lam1 * (fwd - bwd);
+            }
+            let db = plan.step_update(&nc.basis, &w, &bars[t], &mut tvec, &mut dbeta);
+            conv = conv.max(crate::linalg::amax(&tvec));
+            bs_prev[t] = bs[t];
+            bs[t] = bars_b[t] + db;
+            for i in 0..n {
+                betas_prev[t][i] = betas[t][i];
+                betas[t][i] = bars[t][i] + dbeta[i];
+            }
+        }
+        ck = ck_next;
+    }
+    Ok(conv)
+}
+
+pub fn print_rows(rows: &[AblationRow]) {
+    for r in rows {
+        println!("{:<20} {:<24} {:<22} {:>14.6}", r.name, r.variant, r.metric, r.value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warm_beats_cold_in_iterations() {
+        let rows = warm_vs_cold(30, 5, 3).unwrap();
+        let get = |v: &str, m: &str| {
+            rows.iter().find(|r| r.variant == v && r.metric == m).unwrap().value
+        };
+        assert!(get("warm", "apgd_iters") <= get("cold", "apgd_iters"));
+    }
+
+    #[test]
+    fn ridge_throttles_stationarity() {
+        let rows = nckqr_ridge(25, 4).unwrap();
+        let get = |v: &str| {
+            rows.iter()
+                .find(|r| r.variant == v && r.metric == "stationarity@12000it")
+                .unwrap()
+                .value
+        };
+        // the paper's ε keeps the residual orders of magnitude higher
+        assert!(
+            get("eps=1e-3") > 10.0 * get("eps=0-rung"),
+            "eps1e-3 {} vs eps0 {}",
+            get("eps=1e-3"),
+            get("eps=0-rung")
+        );
+    }
+}

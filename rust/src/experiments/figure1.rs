@@ -1,0 +1,127 @@
+//! Figure 1: quantile crossing on the GAGurine data (lookalike).
+//!
+//! Top panel: five KQR curves fitted individually at
+//! τ ∈ {0.1, 0.3, 0.5, 0.7, 0.9} — crossings highlighted. Bottom panel:
+//! the same levels fitted jointly by NCKQR — no crossings. This harness
+//! fits both models, writes the curve series as CSV (plot-ready), and
+//! returns the crossing counts the integration tests assert on.
+
+use crate::data::benchmarks;
+use crate::kernel::{median_heuristic_sigma, Kernel};
+use crate::kqr::KqrSolver;
+use crate::linalg::Matrix;
+use crate::nckqr::NckqrSolver;
+use anyhow::{Context, Result};
+
+pub const TAUS: [f64; 5] = [0.1, 0.3, 0.5, 0.7, 0.9];
+
+/// Results of the Figure-1 run.
+#[derive(Clone, Debug)]
+pub struct Figure1Result {
+    /// Crossing violations of the individually fitted curves on the grid.
+    pub crossings_individual: usize,
+    /// Crossing violations of the NCKQR curves.
+    pub crossings_joint: usize,
+    /// Grid x values.
+    pub grid: Vec<f64>,
+    /// Individually fitted curves, one per τ.
+    pub curves_individual: Vec<Vec<f64>>,
+    /// NCKQR curves, one per τ.
+    pub curves_joint: Vec<Vec<f64>>,
+}
+
+/// Run the Figure-1 experiment. `lam` is the per-level RKHS penalty
+/// (paper tunes by CV; the crossing phenomenon is robust across λ).
+///
+/// The joint fit subsamples to ≤ 160 points: at strong λ₁ the MM
+/// majorizer scale (1 + 4nλ₁) makes full-n NCKQR slow on this one-core
+/// container, and the crossing behaviour is identical (see
+/// `rust/tests/solver_parity.rs` for the exactness checks at full rigor).
+pub fn run(seed: u64, lam: f64, lam1: f64, grid_len: usize) -> Result<Figure1Result> {
+    let full = benchmarks::gagurine(seed);
+    let data = if full.n() > 160 {
+        let mut rng = crate::data::Rng::new(seed ^ 0xf16);
+        let idx = rng.permutation(full.n());
+        full.subset(&idx[..160])
+    } else {
+        full
+    };
+    let sigma = median_heuristic_sigma(&data.x);
+    let kernel = Kernel::Rbf { sigma };
+    let (xmin, xmax) = data
+        .x
+        .as_slice()
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &v| (lo.min(v), hi.max(v)));
+    let grid_m =
+        Matrix::from_fn(grid_len, 1, |i, _| xmin + (xmax - xmin) * i as f64 / (grid_len - 1) as f64);
+    let grid: Vec<f64> = grid_m.col(0);
+
+    // individually fitted levels (shared eigendecomposition across τ)
+    let solver = KqrSolver::new(&data.x, &data.y, kernel.clone());
+    let mut curves_individual = Vec::new();
+    for &tau in &TAUS {
+        let fit = solver.fit(tau, lam)?;
+        curves_individual.push(fit.predict(&grid_m));
+    }
+    let crossings_individual = count_crossings(&curves_individual, 1e-9);
+
+    // joint non-crossing fit (budgeted solver options: the certificate
+    // tolerance is relaxed — crossing removal, not exactness, is the
+    // point of this figure)
+    let mut opts = crate::nckqr::NcOptions::default();
+    opts.max_iters = 8_000;
+    opts.mm_tol = 5e-4;
+    opts.kkt_tol = 2e-2;
+    opts.max_stall_rungs = 2;
+    let nc = NckqrSolver::new(&data.x, &data.y, kernel, &TAUS).with_options(opts);
+    let fit = nc.fit(lam1, lam)?;
+    let curves_joint = fit.predict(&grid_m);
+    let crossings_joint = count_crossings(&curves_joint, 1e-6);
+
+    Ok(Figure1Result { crossings_individual, crossings_joint, grid, curves_individual, curves_joint })
+}
+
+/// Count grid points where an upper quantile curve dips below a lower one.
+pub fn count_crossings(curves: &[Vec<f64>], tol: f64) -> usize {
+    let mut c = 0;
+    for t in 0..curves.len().saturating_sub(1) {
+        for i in 0..curves[t].len() {
+            if curves[t + 1][i] < curves[t][i] - tol {
+                c += 1;
+            }
+        }
+    }
+    c
+}
+
+/// Write both panels as CSV files under `dir`.
+pub fn write_csv(res: &Figure1Result, dir: &str) -> Result<()> {
+    std::fs::create_dir_all(dir).context("mkdir figure1 out")?;
+    for (name, curves) in [
+        ("figure1_individual.csv", &res.curves_individual),
+        ("figure1_nckqr.csv", &res.curves_joint),
+    ] {
+        let mut out = String::from("x,q10,q30,q50,q70,q90\n");
+        for (i, x) in res.grid.iter().enumerate() {
+            out.push_str(&format!(
+                "{x},{},{},{},{},{}\n",
+                curves[0][i], curves[1][i], curves[2][i], curves[3][i], curves[4][i]
+            ));
+        }
+        std::fs::write(format!("{dir}/{name}"), out)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crossing_counter() {
+        let lower = vec![0.0, 0.0, 0.0];
+        let upper = vec![1.0, -0.5, 1.0];
+        assert_eq!(count_crossings(&[lower, upper], 1e-9), 1);
+    }
+}

@@ -1,0 +1,205 @@
+//! Experiment harnesses: one per table/figure of the paper (DESIGN.md §5).
+//!
+//! Each harness is callable from both the CLI (`fastkqr table1 …`) and
+//! the `cargo bench` targets, prints paper-formatted rows, and returns
+//! structured results so integration tests can assert the *shape* of the
+//! reproduction (who wins, by what factor) without parsing stdout.
+//!
+//! Default scales are sized for this single-core container; `--paper`
+//! switches to the paper's full (n, p, reps, grid) settings.
+
+pub mod ablations;
+pub mod figure1;
+pub mod kqr_tables;
+pub mod nckqr_tables;
+pub mod perf;
+
+/// One (solver, τ/dataset, n) cell of a results table.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub solver: String,
+    pub label: String,
+    pub n: usize,
+    pub obj_mean: f64,
+    pub obj_sd: f64,
+    pub time_s: f64,
+}
+
+impl CellResult {
+    pub fn paper_cell(&self) -> String {
+        format!("{:.3}({:.3})", self.obj_mean, self.obj_sd)
+    }
+}
+
+/// Scale configuration shared by the table harnesses.
+#[derive(Clone, Debug)]
+pub struct TableConfig {
+    /// Sample sizes (paper: 200/500/1000).
+    pub ns: Vec<usize>,
+    /// Dimension (Table 1: 5000, Table 3: 100, Table 4: 2).
+    pub p: usize,
+    pub taus: Vec<f64>,
+    /// λ-path length (paper: 50).
+    pub nlam: usize,
+    /// CV folds (paper: 5).
+    pub folds: usize,
+    /// Independent repetitions (paper: 20).
+    pub reps: usize,
+    /// Solvers to run (subset of fastkqr/ipm/lbfgs/neldermead — the
+    /// generic ones are orders of magnitude slower, exactly as in the
+    /// paper, so harnesses can drop them at large n like the paper's
+    /// ">24h" cells).
+    pub solvers: Vec<String>,
+    pub seed: u64,
+}
+
+impl TableConfig {
+    /// Container-scale defaults.
+    pub fn quick() -> TableConfig {
+        TableConfig {
+            ns: vec![100, 200],
+            p: 10,
+            taus: vec![0.1, 0.5, 0.9],
+            nlam: 10,
+            folds: 3,
+            reps: 3,
+            solvers: vec!["fastkqr".into(), "ipm".into(), "lbfgs".into(), "neldermead".into()],
+            seed: 2024,
+        }
+    }
+
+    /// The paper's settings (long-running).
+    pub fn paper() -> TableConfig {
+        TableConfig {
+            ns: vec![200, 500, 1000],
+            p: 5000,
+            taus: vec![0.1, 0.5, 0.9],
+            nlam: 50,
+            folds: 5,
+            reps: 20,
+            ..TableConfig::quick()
+        }
+    }
+
+    pub fn from_args(args: &crate::util::Args) -> TableConfig {
+        let mut cfg = if args.flag("paper") { TableConfig::paper() } else { TableConfig::quick() };
+        cfg.ns = args.get_usize_list("ns", &cfg.ns);
+        cfg.p = args.get_usize("p", cfg.p);
+        cfg.taus = args.get_f64_list("taus", &cfg.taus);
+        cfg.nlam = args.get_usize("nlam", cfg.nlam);
+        cfg.folds = args.get_usize("folds", cfg.folds);
+        cfg.reps = args.get_usize("reps", cfg.reps);
+        cfg.seed = args.get_usize("seed", cfg.seed as usize) as u64;
+        if let Some(s) = args.get("solvers") {
+            cfg.solvers = s.split(',').map(|v| v.trim().to_string()).collect();
+        }
+        cfg
+    }
+}
+
+/// Print a block of cells in the paper's (τ, n) × solver layout.
+pub fn print_table(title: &str, cells: &[CellResult], solvers: &[String]) {
+    println!("\n=== {title} ===");
+    let mut widths = vec![8usize, 6, 6];
+    for _ in solvers {
+        widths.push(22);
+    }
+    let mut headers = vec!["label", "n", "what"];
+    let solver_names: Vec<&str> = solvers.iter().map(String::as_str).collect();
+    headers.extend(solver_names.iter());
+    let tp = crate::util::bench::TablePrinter::new(&headers, widths);
+    // group rows by (label, n)
+    let mut keys: Vec<(String, usize)> = Vec::new();
+    for c in cells {
+        let k = (c.label.clone(), c.n);
+        if !keys.contains(&k) {
+            keys.push(k);
+        }
+    }
+    for (label, n) in keys {
+        let row_cells: Vec<&CellResult> = cells
+            .iter()
+            .filter(|c| c.label == label && c.n == n)
+            .collect();
+        let find = |s: &str| row_cells.iter().find(|c| c.solver == s);
+        let mut obj_row = vec![label.clone(), n.to_string(), "obj".to_string()];
+        let mut time_row = vec![String::new(), String::new(), "time".to_string()];
+        for s in solvers {
+            match find(s) {
+                Some(c) => {
+                    obj_row.push(c.paper_cell());
+                    time_row.push(format!("{:.2}s", c.time_s));
+                }
+                None => {
+                    obj_row.push("*".to_string());
+                    time_row.push("*".to_string());
+                }
+            }
+        }
+        tp.row(&obj_row.iter().map(String::as_str).collect::<Vec<_>>());
+        tp.row(&time_row.iter().map(String::as_str).collect::<Vec<_>>());
+    }
+}
+
+/// Speedup of fastkqr over each other solver, per (label, n) group —
+/// the headline numbers the integration tests assert on.
+pub fn speedups(cells: &[CellResult]) -> Vec<(String, usize, String, f64)> {
+    let mut out = Vec::new();
+    for c in cells {
+        if c.solver == "fastkqr" {
+            continue;
+        }
+        if let Some(fast) = cells
+            .iter()
+            .find(|f| f.solver == "fastkqr" && f.label == c.label && f.n == c.n)
+        {
+            if fast.time_s > 0.0 {
+                out.push((c.label.clone(), c.n, c.solver.clone(), c.time_s / fast.time_s));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_from_args_overrides() {
+        let args = crate::util::Args::parse(
+            ["--ns", "50", "--reps", "2", "--solvers", "fastkqr,ipm"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let cfg = TableConfig::from_args(&args);
+        assert_eq!(cfg.ns, vec![50]);
+        assert_eq!(cfg.reps, 2);
+        assert_eq!(cfg.solvers, vec!["fastkqr", "ipm"]);
+    }
+
+    #[test]
+    fn speedup_computation() {
+        let cells = vec![
+            CellResult {
+                solver: "fastkqr".into(),
+                label: "t".into(),
+                n: 10,
+                obj_mean: 1.0,
+                obj_sd: 0.0,
+                time_s: 2.0,
+            },
+            CellResult {
+                solver: "ipm".into(),
+                label: "t".into(),
+                n: 10,
+                obj_mean: 1.0,
+                obj_sd: 0.0,
+                time_s: 20.0,
+            },
+        ];
+        let s = speedups(&cells);
+        assert_eq!(s.len(), 1);
+        assert!((s[0].3 - 10.0).abs() < 1e-12);
+    }
+}

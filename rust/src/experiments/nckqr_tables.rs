@@ -1,0 +1,337 @@
+//! Tables 2 and 6: NCKQR — fastkqr vs cvxr(proximal) vs nlm(L-BFGS on the
+//! stacked smoothed objective) vs optim(Nelder–Mead, tiny cap).
+//!
+//! Protocol (paper §4.2): fit T = 3 levels (0.1, 0.5, 0.9) simultaneously
+//! across a descending λ₂ grid at fixed λ₁; report the total wall time
+//! and the objective of problem (12) at the smallest λ₂ of the grid.
+
+use super::{CellResult, TableConfig};
+use crate::baselines::proximal::solve_nckqr_proximal;
+use crate::baselines::{lbfgs::lbfgs_minimize, neldermead::nelder_mead_minimize};
+use crate::data::{benchmarks, synth, Dataset, Rng};
+use crate::kernel::{median_heuristic_sigma, Kernel};
+use crate::linalg::{dot, gemv, Matrix};
+use crate::nckqr::{NckqrSolver, ETA_EXACT};
+use crate::smooth::{h_gamma, h_gamma_prime, smooth_relu, smooth_relu_prime};
+use crate::util::bench::mean_sd;
+use crate::util::Timer;
+use anyhow::Result;
+
+/// Smoothed NCKQR objective + gradient on the stacked parameter vector
+/// [b₁, α₁, b₂, α₂, …] — the structure-blind parametrization `nlm`/`optim`
+/// would see.
+pub fn nc_stacked_fg(
+    gram: &Matrix,
+    y: &[f64],
+    taus: &[f64],
+    lam1: f64,
+    lam2: f64,
+    x: &[f64],
+    grad: &mut [f64],
+) -> f64 {
+    let n = y.len();
+    let nf = n as f64;
+    let t_lv = taus.len();
+    let stride = n + 1;
+    let gamma = ETA_EXACT;
+    let eta = ETA_EXACT;
+    // fitted values per level
+    let mut fs = vec![vec![0.0; n]; t_lv];
+    let mut kas = vec![vec![0.0; n]; t_lv];
+    for t in 0..t_lv {
+        let b = x[t * stride];
+        let alpha = &x[t * stride + 1..(t + 1) * stride];
+        gemv(gram, alpha, &mut kas[t]);
+        for i in 0..n {
+            fs[t][i] = b + kas[t][i];
+        }
+    }
+    let mut obj = 0.0;
+    grad.fill(0.0);
+    for t in 0..t_lv {
+        let alpha = &x[t * stride + 1..(t + 1) * stride];
+        // loss + ridge
+        let mut carrier = vec![0.0; n];
+        for i in 0..n {
+            let r = y[i] - fs[t][i];
+            obj += h_gamma(r, taus[t], gamma) / nf;
+            carrier[i] = -h_gamma_prime(r, taus[t], gamma) / nf;
+        }
+        obj += 0.5 * lam2 * dot(alpha, &kas[t]);
+        // crossing penalty (pair t, t+1)
+        if t + 1 < t_lv {
+            for i in 0..n {
+                let d = fs[t][i] - fs[t + 1][i];
+                obj += lam1 * smooth_relu(d, eta);
+            }
+        }
+        // gradient carrier including penalty terms
+        for i in 0..n {
+            let fwd = if t + 1 < t_lv {
+                smooth_relu_prime(fs[t][i] - fs[t + 1][i], eta)
+            } else {
+                0.0
+            };
+            let bwd = if t > 0 {
+                smooth_relu_prime(fs[t - 1][i] - fs[t][i], eta)
+            } else {
+                0.0
+            };
+            carrier[i] += lam1 * (fwd - bwd);
+        }
+        grad[t * stride] = carrier.iter().sum();
+        let mut w = carrier;
+        for i in 0..n {
+            w[i] += lam2 * alpha[i];
+        }
+        gemv(gram, &w, &mut grad[t * stride + 1..(t + 1) * stride]);
+    }
+    obj
+}
+
+/// Exact objective of problem (12) on the stacked vector.
+fn nc_exact_objective(
+    gram: &Matrix,
+    y: &[f64],
+    taus: &[f64],
+    lam1: f64,
+    lam2: f64,
+    x: &[f64],
+) -> f64 {
+    let n = y.len();
+    let nf = n as f64;
+    let t_lv = taus.len();
+    let stride = n + 1;
+    let mut fs = vec![vec![0.0; n]; t_lv];
+    let mut obj = 0.0;
+    for t in 0..t_lv {
+        let b = x[t * stride];
+        let alpha = &x[t * stride + 1..(t + 1) * stride];
+        let mut ka = vec![0.0; n];
+        gemv(gram, alpha, &mut ka);
+        obj += 0.5 * lam2 * dot(alpha, &ka);
+        for i in 0..n {
+            fs[t][i] = b + ka[i];
+            obj += crate::smooth::rho_tau(y[i] - fs[t][i], taus[t]) / nf;
+        }
+    }
+    for t in 0..t_lv.saturating_sub(1) {
+        for i in 0..n {
+            obj += lam1 * smooth_relu(fs[t][i] - fs[t + 1][i], ETA_EXACT);
+        }
+    }
+    obj
+}
+
+fn run_nc_solver(
+    solver: &str,
+    data: &Dataset,
+    kernel: &Kernel,
+    taus: &[f64],
+    lam1: f64,
+    lam2s: &[f64],
+) -> Result<f64> {
+    match solver {
+        "fastkqr" => {
+            let s = NckqrSolver::new(&data.x, &data.y, kernel.clone(), taus);
+            let fits = s.fit_path(lam1, lam2s)?;
+            Ok(fits.last().unwrap().objective)
+        }
+        "proximal" => {
+            let gram = kernel.gram(&data.x);
+            let mut last = f64::NAN;
+            for &l2 in lam2s {
+                let fit =
+                    solve_nckqr_proximal(&gram, &data.y, taus, lam1, l2, 60_000, 1e-6)?;
+                last = fit.objective;
+            }
+            Ok(last)
+        }
+        "lbfgs" => {
+            let gram = kernel.gram(&data.x);
+            let n = data.n();
+            let dim = taus.len() * (n + 1);
+            let mut last = f64::NAN;
+            for &l2 in lam2s {
+                let (x, _, _) = lbfgs_minimize(
+                    vec![0.0; dim],
+                    |x, g| nc_stacked_fg(&gram, &data.y, taus, lam1, l2, x, g),
+                    1500,
+                    1e-7,
+                );
+                last = nc_exact_objective(&gram, &data.y, taus, lam1, l2, &x);
+            }
+            Ok(last)
+        }
+        "neldermead" => {
+            let gram = kernel.gram(&data.x);
+            let n = data.n();
+            let dim = taus.len() * (n + 1);
+            let mut gscratch = vec![0.0; dim];
+            let mut last = f64::NAN;
+            for &l2 in lam2s {
+                let (x, _, _) = nelder_mead_minimize(
+                    vec![0.0; dim],
+                    |x| nc_stacked_fg(&gram, &data.y, taus, lam1, l2, x, &mut gscratch),
+                    3000,
+                    1e-10,
+                );
+                last = nc_exact_objective(&gram, &data.y, taus, lam1, l2, &x);
+            }
+            Ok(last)
+        }
+        other => anyhow::bail!("unknown NC solver {other:?}"),
+    }
+}
+
+/// Generic NCKQR table engine.
+pub fn nckqr_table(
+    cfg: &TableConfig,
+    lam1: f64,
+    mut generate: impl FnMut(usize, &mut Rng) -> Dataset,
+) -> Result<Vec<CellResult>> {
+    let taus = [0.1, 0.5, 0.9];
+    let mut cells = Vec::new();
+    let lam2s: Vec<f64> = (0..cfg.nlam)
+        .map(|i| 0.5 * (1e-3f64 / 0.5).powf(i as f64 / (cfg.nlam.max(2) - 1) as f64))
+        .collect();
+    for &n in &cfg.ns {
+        for solver in &cfg.solvers {
+            let mut objs = Vec::new();
+            let mut total_time = 0.0;
+            for rep in 0..cfg.reps {
+                let mut rng = Rng::new(cfg.seed + 31 * rep as u64 + n as u64);
+                let data = generate(n, &mut rng);
+                let sigma = median_heuristic_sigma(&data.x);
+                let kernel = Kernel::Rbf { sigma };
+                let timer = Timer::start(solver);
+                let obj = run_nc_solver(solver, &data, &kernel, &taus, lam1, &lam2s)?;
+                total_time += timer.total();
+                objs.push(obj);
+            }
+            let (m, sd) = mean_sd(&objs);
+            cells.push(CellResult {
+                solver: solver.clone(),
+                label: format!("p={}", cfg.p),
+                n,
+                obj_mean: m,
+                obj_sd: sd,
+                time_s: total_time,
+            });
+        }
+    }
+    Ok(cells)
+}
+
+/// Table 2: NCKQR on the Friedman design, p ∈ {100, 1000, 5000}.
+pub fn table2(cfg: &TableConfig, lam1: f64) -> Result<Vec<CellResult>> {
+    let p = cfg.p;
+    nckqr_table(cfg, lam1, move |n, rng| synth::friedman(n, p, 3.0, rng))
+}
+
+/// Table 6: NCKQR on the benchmark lookalikes, five τ levels.
+pub fn table6(cfg: &TableConfig, lam1: f64, subsample: Option<usize>) -> Result<Vec<CellResult>> {
+    let taus = [0.1, 0.3, 0.5, 0.7, 0.9];
+    let mut cells = Vec::new();
+    let lam2s: Vec<f64> = (0..cfg.nlam)
+        .map(|i| 0.5 * (1e-3f64 / 0.5).powf(i as f64 / (cfg.nlam.max(2) - 1) as f64))
+        .collect();
+    for ds_id in 0..4usize {
+        for solver in &cfg.solvers {
+            let mut objs = Vec::new();
+            let mut total_time = 0.0;
+            let mut used_n = 0;
+            let mut label = String::new();
+            for rep in 0..cfg.reps {
+                let seed = cfg.seed + rep as u64;
+                let mut data = match ds_id {
+                    0 => benchmarks::crabs(seed),
+                    1 => benchmarks::gagurine(seed),
+                    2 => benchmarks::mcycle(seed),
+                    _ => benchmarks::boston_housing(seed),
+                };
+                let mut rng = Rng::new(seed ^ 0xbe6f);
+                if let Some(cap) = subsample {
+                    if data.n() > cap {
+                        let idx = rng.permutation(data.n());
+                        data = data.subset(&idx[..cap]);
+                    }
+                }
+                data.standardize();
+                used_n = data.n();
+                label = data.name.split('(').next().unwrap_or("data").to_string();
+                let sigma = median_heuristic_sigma(&data.x);
+                let kernel = Kernel::Rbf { sigma };
+                let timer = Timer::start(solver);
+                let obj = run_nc_solver(solver, &data, &kernel, &taus, lam1, &lam2s)?;
+                total_time += timer.total();
+                objs.push(obj);
+            }
+            let (m, sd) = mean_sd(&objs);
+            cells.push(CellResult {
+                solver: solver.clone(),
+                label: label.clone(),
+                n: used_n,
+                obj_mean: m,
+                obj_sd: sd,
+                time_s: total_time,
+            });
+        }
+    }
+    Ok(cells)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stacked_fg_gradient_matches_finite_differences() {
+        let mut rng = Rng::new(1);
+        let d = synth::sine_hetero(10, &mut rng);
+        let gram = Kernel::Rbf { sigma: 0.5 }.gram(&d.x);
+        let taus = [0.3, 0.7];
+        let dim = 2 * 11;
+        let x: Vec<f64> = (0..dim).map(|_| 0.1 * rng.normal()).collect();
+        let mut g = vec![0.0; dim];
+        let f0 = nc_stacked_fg(&gram, &d.y, &taus, 0.5, 0.1, &x, &mut g);
+        assert!(f0.is_finite());
+        let eps = 1e-7;
+        let mut gfd = vec![0.0; dim];
+        let mut scratch = vec![0.0; dim];
+        for j in 0..dim {
+            let mut xp = x.clone();
+            xp[j] += eps;
+            let fp = nc_stacked_fg(&gram, &d.y, &taus, 0.5, 0.1, &xp, &mut scratch);
+            gfd[j] = (fp - f0) / eps;
+        }
+        for j in 0..dim {
+            assert!(
+                (g[j] - gfd[j]).abs() < 1e-4 * (1.0 + g[j].abs()),
+                "grad[{j}]: {} vs fd {}",
+                g[j],
+                gfd[j]
+            );
+        }
+    }
+
+    #[test]
+    fn tiny_table2_shape() {
+        let cfg = TableConfig {
+            ns: vec![24],
+            p: 4,
+            taus: vec![],
+            nlam: 2,
+            folds: 2,
+            reps: 1,
+            solvers: vec!["fastkqr".into(), "proximal".into()],
+            seed: 5,
+        };
+        let cells = table2(&cfg, 1.0).unwrap();
+        assert_eq!(cells.len(), 2);
+        let fast = cells.iter().find(|c| c.solver == "fastkqr").unwrap();
+        let prox = cells.iter().find(|c| c.solver == "proximal").unwrap();
+        // exact solver attains an objective <= the generic one (small slack)
+        assert!(fast.obj_mean <= prox.obj_mean + 0.02 * (1.0 + prox.obj_mean.abs()));
+    }
+}

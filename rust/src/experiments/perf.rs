@@ -1,0 +1,100 @@
+//! Perf harness: hot-path microbenchmarks feeding EXPERIMENTS.md §Perf.
+//!
+//! - GEMV throughput (the 2-GEMV/iteration inner loop) vs the streaming
+//!   bandwidth roofline;
+//! - APGD chunk cost, native vs XLA backend (artifact execution);
+//! - one-time eigendecomposition cost (the O(n³) amortized term).
+
+use crate::backend::{Backend, NativeBackend};
+use crate::data::{synth, Rng};
+use crate::kernel::{median_heuristic_sigma, Kernel};
+use crate::kqr::apgd::ApgdState;
+use crate::kqr::KqrSolver;
+use crate::linalg::{gemv, Matrix, SymEigen};
+use crate::spectral::SpectralPlan;
+use crate::util::bench::{run_bench, BenchStats};
+use anyhow::Result;
+
+/// GEMV throughput at size n: returns (stats, effective GB/s).
+pub fn gemv_throughput(n: usize, reps: usize) -> (BenchStats, f64) {
+    let mut rng = Rng::new(42);
+    let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut out = vec![0.0; n];
+    let stats = run_bench(&format!("gemv n={n}"), 3, reps, |_| {
+        gemv(&a, &x, &mut out);
+        out[0]
+    });
+    // bytes streamed per GEMV: the matrix dominates (n² f64 reads)
+    let bytes = (n * n * 8) as f64;
+    let gbps = bytes / stats.median / 1e9;
+    (stats, gbps)
+}
+
+/// APGD chunk timing: native vs XLA backend (if artifacts exist).
+pub fn chunk_cost(n: usize, reps: usize) -> Result<Vec<BenchStats>> {
+    let mut rng = Rng::new(7);
+    let d = synth::sine_hetero(n, &mut rng);
+    let sigma = median_heuristic_sigma(&d.x);
+    let solver = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma });
+    let plan = SpectralPlan::new(&solver.basis, 0.25, 0.01);
+    let chunk = solver.opts.chunk;
+    let mut out = Vec::new();
+
+    let mut native = NativeBackend::new();
+    let mut state = ApgdState::zeros(n);
+    out.push(run_bench(&format!("native chunk({chunk}) n={n}"), 2, reps, |_| {
+        native.apgd_chunk(&solver.basis, &plan, &solver.y, 0.5, &mut state, chunk)
+    }));
+
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let mut xb = crate::runtime::XlaBackend::from_default_dir()?;
+        let mut state = ApgdState::zeros(n);
+        out.push(run_bench(&format!("xla    chunk({chunk}) n={n}"), 2, reps, |_| {
+            xb.apgd_chunk(&solver.basis, &plan, &solver.y, 0.5, &mut state, chunk)
+        }));
+    }
+    Ok(out)
+}
+
+/// One-time eigendecomposition cost at size n.
+pub fn eigen_cost(n: usize, reps: usize) -> BenchStats {
+    let mut rng = Rng::new(9);
+    let x = Matrix::from_fn(n, 2, |_, _| rng.normal());
+    let k = Kernel::Rbf { sigma: 1.0 }.gram(&x);
+    run_bench(&format!("eigendecomposition n={n}"), 1, reps, |_| {
+        let e = SymEigen::new(&k);
+        e.values[0]
+    })
+}
+
+/// Full-fit latency across n (the end-to-end hot path the coordinator
+/// schedules).
+pub fn fit_latency(n: usize, reps: usize) -> BenchStats {
+    let mut rng = Rng::new(11);
+    let d = synth::sine_hetero(n, &mut rng);
+    let sigma = median_heuristic_sigma(&d.x);
+    let solver = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma });
+    run_bench(&format!("kqr fit n={n} (basis amortized)"), 1, reps, |_| {
+        solver.fit(0.5, 0.01).unwrap().objective
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemv_bandwidth_is_positive() {
+        let (stats, gbps) = gemv_throughput(64, 5);
+        assert!(stats.median > 0.0);
+        assert!(gbps > 0.01, "absurd bandwidth {gbps}");
+    }
+
+    #[test]
+    fn chunk_cost_runs_native() {
+        let stats = chunk_cost(32, 3).unwrap();
+        assert!(!stats.is_empty());
+        assert!(stats[0].median > 0.0);
+    }
+}

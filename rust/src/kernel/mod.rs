@@ -1,0 +1,171 @@
+//! Kernel functions, Gram matrix construction and bandwidth heuristics.
+//!
+//! KQR lives in the RKHS induced by a kernel K; the paper uses the radial
+//! basis kernel K(x,x') = exp(−‖x−x'‖²/(2σ²)) throughout. We also ship
+//! linear / polynomial / Laplacian kernels so the library is usable beyond
+//! the paper's experiments.
+
+use crate::linalg::Matrix;
+
+pub mod nystrom;
+
+/// Kernel function selector.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Kernel {
+    /// exp(−‖x−x'‖² / (2σ²))
+    Rbf { sigma: f64 },
+    /// x·x' + c
+    Linear { c: f64 },
+    /// (γ x·x' + c)^degree
+    Polynomial { gamma: f64, c: f64, degree: u32 },
+    /// exp(−‖x−x'‖₁ / σ)
+    Laplacian { sigma: f64 },
+}
+
+impl Kernel {
+    /// Evaluate k(a, b).
+    pub fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        match self {
+            Kernel::Rbf { sigma } => {
+                let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+                (-d2 / (2.0 * sigma * sigma)).exp()
+            }
+            Kernel::Linear { c } => a.iter().zip(b).map(|(x, y)| x * y).sum::<f64>() + c,
+            Kernel::Polynomial { gamma, c, degree } => {
+                let ip: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+                (gamma * ip + c).powi(*degree as i32)
+            }
+            Kernel::Laplacian { sigma } => {
+                let d1: f64 = a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum();
+                (-d1 / sigma).exp()
+            }
+        }
+    }
+
+    /// n×n Gram matrix of the training inputs (rows of `x`).
+    ///
+    /// Exploits symmetry: each pair is evaluated once. For the RBF/
+    /// Laplacian kernels the diagonal is exactly 1.
+    pub fn gram(&self, x: &Matrix) -> Matrix {
+        let n = x.rows();
+        let mut k = Matrix::zeros(n, n);
+        for i in 0..n {
+            k[(i, i)] = self.eval(x.row(i), x.row(i));
+            for j in (i + 1)..n {
+                let v = self.eval(x.row(i), x.row(j));
+                k[(i, j)] = v;
+                k[(j, i)] = v;
+            }
+        }
+        k
+    }
+
+    /// m×n cross-Gram matrix between test rows `xt` and training rows `x`
+    /// (for prediction: f(x*) = Σ_i α_i K(x_i, x*)).
+    pub fn cross_gram(&self, xt: &Matrix, x: &Matrix) -> Matrix {
+        assert_eq!(xt.cols(), x.cols());
+        Matrix::from_fn(xt.rows(), x.rows(), |i, j| self.eval(xt.row(i), x.row(j)))
+    }
+}
+
+/// Median heuristic for the RBF bandwidth: σ = median of pairwise
+/// Euclidean distances (on a subsample of at most `max_pairs` pairs for
+/// large n). The standard default when the paper tunes only λ.
+pub fn median_heuristic_sigma(x: &Matrix) -> f64 {
+    let n = x.rows();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut dists = Vec::new();
+    let max_pairs = 200_000usize;
+    let total_pairs = n * (n - 1) / 2;
+    let stride = (total_pairs / max_pairs).max(1);
+    let mut c = 0usize;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if c % stride == 0 {
+                let d2: f64 = x
+                    .row(i)
+                    .iter()
+                    .zip(x.row(j))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                dists.push(d2.sqrt());
+            }
+            c += 1;
+        }
+    }
+    dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = dists[dists.len() / 2];
+    if med > 0.0 {
+        med
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::linalg::SymEigen;
+
+    #[test]
+    fn rbf_identity_and_symmetry() {
+        let k = Kernel::Rbf { sigma: 1.5 };
+        let a = [1.0, 2.0];
+        let b = [0.5, -1.0];
+        assert!((k.eval(&a, &a) - 1.0).abs() < 1e-15);
+        assert!((k.eval(&a, &b) - k.eval(&b, &a)).abs() < 1e-15);
+        assert!(k.eval(&a, &b) > 0.0 && k.eval(&a, &b) < 1.0);
+    }
+
+    #[test]
+    fn rbf_matches_formula() {
+        let k = Kernel::Rbf { sigma: 2.0 };
+        let v = k.eval(&[0.0], &[2.0]);
+        assert!((v - (-4.0f64 / 8.0).exp()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::from_fn(20, 3, |_, _| rng.normal());
+        let k = Kernel::Rbf { sigma: 1.0 }.gram(&x);
+        assert!(k.is_symmetric(1e-15));
+        let eig = SymEigen::new(&k);
+        assert!(eig.values[0] > -1e-9, "min eig {}", eig.values[0]);
+    }
+
+    #[test]
+    fn linear_poly_laplacian_basics() {
+        let lin = Kernel::Linear { c: 1.0 };
+        assert!((lin.eval(&[1.0, 2.0], &[3.0, 4.0]) - 12.0).abs() < 1e-15);
+        let poly = Kernel::Polynomial { gamma: 1.0, c: 0.0, degree: 2 };
+        assert!((poly.eval(&[1.0, 1.0], &[2.0, 3.0]) - 25.0).abs() < 1e-15);
+        let lap = Kernel::Laplacian { sigma: 1.0 };
+        assert!((lap.eval(&[0.0], &[1.0]) - (-1.0f64).exp()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn cross_gram_shape_and_consistency() {
+        let mut rng = Rng::new(2);
+        let x = Matrix::from_fn(5, 2, |_, _| rng.normal());
+        let k = Kernel::Rbf { sigma: 1.0 };
+        let g = k.gram(&x);
+        let cg = k.cross_gram(&x, &x);
+        assert!(g.max_abs_diff(&cg) < 1e-15);
+    }
+
+    #[test]
+    fn median_heuristic_positive_and_scales() {
+        let mut rng = Rng::new(3);
+        let x = Matrix::from_fn(50, 2, |_, _| rng.normal());
+        let s1 = median_heuristic_sigma(&x);
+        assert!(s1 > 0.1 && s1 < 10.0);
+        let x10 = Matrix::from_fn(50, 2, |i, j| 10.0 * x[(i, j)]);
+        let s10 = median_heuristic_sigma(&x10);
+        assert!((s10 / s1 - 10.0).abs() < 1e-9);
+    }
+}

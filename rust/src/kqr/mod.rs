@@ -1,0 +1,684 @@
+//! Exact kernel quantile regression via the finite smoothing algorithm
+//! (paper §2).
+//!
+//! `KqrSolver` owns the training data, the kernel and the one-time
+//! eigendecomposition; `fit`/`fit_path` run the full pipeline:
+//!
+//! 1. γ ladder: γ = 1, γ ← γ/4 (paper's schedule);
+//! 2. per γ: set expansion — solve the smoothed problem by APGD (through
+//!    a [`Backend`]), project onto the current equality constraints
+//!    (eq. 8, applied once per round as the paper recommends), expand
+//!    Ŝ ← E(Ŝ) = {i : |rᵢ| ≤ γ} until the fixed point (Theorems 2–3);
+//! 3. terminate when the **exact KKT certificate** of problem (2) holds
+//!    (`kkt::kkt_check`), so the returned solution is a minimizer of the
+//!    original non-smooth objective, not an approximation.
+//!
+//! `fit_path` warm-starts along a decreasing λ grid (§2.4), which — with
+//! the shared eigendecomposition — is what makes the whole grid O(n²)
+//! per solve after the single O(n³) setup.
+
+pub mod apgd;
+pub mod kkt;
+
+use crate::backend::{Backend, NativeBackend};
+use crate::kernel::Kernel;
+use crate::linalg::{amax, Matrix};
+use crate::spectral::{SpectralBasis, SpectralPlan};
+use anyhow::{bail, Result};
+use apgd::{ApgdState, ApgdWorkspace};
+pub use kkt::KktReport;
+
+/// Tuning knobs for the finite smoothing solver.
+#[derive(Clone, Debug)]
+pub struct SolveOptions {
+    /// APGD iterations per backend chunk (convergence is checked between
+    /// chunks; also the unroll length of the AOT-compiled artifact).
+    pub chunk: usize,
+    /// Hard cap on APGD iterations per smoothed solve.
+    pub max_iters: usize,
+    /// APGD stationarity tolerance in subgradient units (conv =
+    /// max(‖t‖∞, |Σz|/n); should be ≲ kkt_tol/10).
+    pub apgd_tol: f64,
+    /// KKT certificate tolerance (subgradient units).
+    pub kkt_tol: f64,
+    /// Residual band for singular-set membership in the certificate,
+    /// relative to max(1, ‖y‖∞).
+    pub kkt_band: f64,
+    /// Initial smoothing parameter γ (paper: 1).
+    pub gamma_init: f64,
+    /// Multiplicative γ decrease (paper: 1/4).
+    pub gamma_shrink: f64,
+    /// Give up refining below this γ.
+    pub gamma_min: f64,
+    /// Cap on set-expansion rounds per γ.
+    pub max_expansions: usize,
+    /// Stop the γ ladder after this many consecutive rungs without an
+    /// improvement of the certificate score (best-effort return).
+    pub max_stall_rungs: usize,
+    /// Apply the eq. (8) equality-constraint projection (paper default).
+    pub projection: bool,
+    /// Nesterov acceleration (ablation switch; plain MM when false).
+    pub nesterov: bool,
+}
+
+impl SolveOptions {
+    /// Looser preset for CV *fold* fits: hold-out pinball scoring does not
+    /// need certificate-grade precision, only a stable predictor. The
+    /// final refit at the selected λ should use the (tight) default.
+    pub fn cv_preset() -> SolveOptions {
+        SolveOptions {
+            apgd_tol: 1e-3,
+            kkt_tol: 1e-2,
+            max_stall_rungs: 2,
+            max_iters: 10_000,
+            ..SolveOptions::default()
+        }
+    }
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions {
+            chunk: 25,
+            max_iters: 40_000,
+            apgd_tol: 5e-5,
+            kkt_tol: 1e-3,
+            kkt_band: 1e-5,
+            gamma_init: 1.0,
+            gamma_shrink: 0.25,
+            gamma_min: 1e-9,
+            max_expansions: 40,
+            max_stall_rungs: 4,
+            projection: true,
+            nesterov: true,
+        }
+    }
+}
+
+/// A fitted KQR model (self-contained: carries what `predict` needs).
+#[derive(Clone, Debug)]
+pub struct KqrFit {
+    pub tau: f64,
+    pub lam: f64,
+    pub b: f64,
+    pub alpha: Vec<f64>,
+    /// Exact objective value of problem (2) at the solution.
+    pub objective: f64,
+    pub kkt: KktReport,
+    pub gamma_final: f64,
+    pub apgd_iters: usize,
+    pub expansions: usize,
+    pub singular_set: Vec<usize>,
+    x_train: Matrix,
+    kernel: Kernel,
+}
+
+impl KqrFit {
+    /// Predict the τ-th conditional quantile at the rows of `xt`.
+    pub fn predict(&self, xt: &Matrix) -> Vec<f64> {
+        let cg = self.kernel.cross_gram(xt, &self.x_train);
+        let mut out = vec![0.0; xt.rows()];
+        crate::linalg::gemv(&cg, &self.alpha, &mut out);
+        for o in out.iter_mut() {
+            *o += self.b;
+        }
+        out
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.x_train.rows()
+    }
+}
+
+/// Per-fit diagnostics accumulated by the solver.
+#[derive(Clone, Debug, Default)]
+pub struct FitStats {
+    pub apgd_iters: usize,
+    pub expansions: usize,
+    pub gamma_levels: usize,
+}
+
+/// The KQR solver: data + kernel + eigenbasis + options.
+pub struct KqrSolver {
+    pub x: Matrix,
+    pub y: Vec<f64>,
+    pub kernel: Kernel,
+    /// Gram matrix (kept for the K_SS projection solves).
+    pub gram: Matrix,
+    pub basis: SpectralBasis,
+    pub opts: SolveOptions,
+}
+
+impl KqrSolver {
+    /// Build the solver: computes the Gram matrix and its
+    /// eigendecomposition (the single O(n³) step).
+    pub fn new(x: &Matrix, y: &[f64], kernel: Kernel) -> KqrSolver {
+        assert_eq!(x.rows(), y.len());
+        let gram = kernel.gram(x);
+        let basis = SpectralBasis::new(&gram);
+        KqrSolver {
+            x: x.clone(),
+            y: y.to_vec(),
+            kernel,
+            gram,
+            basis,
+            opts: SolveOptions::default(),
+        }
+    }
+
+    /// Reuse an already-computed Gram matrix and basis (e.g. shared across
+    /// solvers at different τ on the same data).
+    pub fn with_basis(
+        x: &Matrix,
+        y: &[f64],
+        kernel: Kernel,
+        gram: Matrix,
+        basis: SpectralBasis,
+    ) -> KqrSolver {
+        assert_eq!(x.rows(), y.len());
+        assert_eq!(basis.n, y.len());
+        KqrSolver {
+            x: x.clone(),
+            y: y.to_vec(),
+            kernel,
+            gram,
+            basis,
+            opts: SolveOptions::default(),
+        }
+    }
+
+    pub fn with_options(mut self, opts: SolveOptions) -> KqrSolver {
+        self.opts = opts;
+        self
+    }
+
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Log-spaced λ grid from `max` down to `max·min_ratio` (descending,
+    /// the warm-start order).
+    pub fn lambda_grid(&self, count: usize, max: f64, min_ratio: f64) -> Vec<f64> {
+        assert!(count >= 1 && max > 0.0 && min_ratio > 0.0 && min_ratio < 1.0);
+        if count == 1 {
+            return vec![max];
+        }
+        let log_max = max.ln();
+        let log_min = (max * min_ratio).ln();
+        (0..count)
+            .map(|i| (log_max + (log_min - log_max) * i as f64 / (count - 1) as f64).exp())
+            .collect()
+    }
+
+    /// Fit at a single (τ, λ) with the native backend.
+    pub fn fit(&self, tau: f64, lam: f64) -> Result<KqrFit> {
+        let mut backend = NativeBackend::new();
+        let mut state = ApgdState::zeros(self.n());
+        self.fit_warm(tau, lam, &mut state, &mut backend)
+    }
+
+    /// Fit a warm-started descending-λ path at a single τ.
+    pub fn fit_path(&self, tau: f64, lambdas: &[f64]) -> Result<Vec<KqrFit>> {
+        let mut backend = NativeBackend::new();
+        self.fit_path_with_backend(tau, lambdas, &mut backend)
+    }
+
+    /// Path fitting through an arbitrary backend.
+    ///
+    /// Implements the full warm start of Algorithm 1: both the iterate
+    /// (b, β) **and the γ ladder position** carry over between λ values —
+    /// the paper's for-l loop never resets γ to 1, which is where most of
+    /// the path-level speedup comes from (see the `ablations` bench).
+    pub fn fit_path_with_backend(
+        &self,
+        tau: f64,
+        lambdas: &[f64],
+        backend: &mut dyn Backend,
+    ) -> Result<Vec<KqrFit>> {
+        let mut state = ApgdState::zeros(self.n());
+        let mut fits = Vec::with_capacity(lambdas.len());
+        let mut gamma_start = self.opts.gamma_init;
+        for &lam in lambdas {
+            let fit = self.fit_warm_from(tau, lam, &mut state, backend, gamma_start)?;
+            // resume one rung above where the previous fit certified
+            gamma_start = (fit.gamma_final / self.opts.gamma_shrink)
+                .min(self.opts.gamma_init)
+                .max(self.opts.gamma_min);
+            fits.push(fit);
+        }
+        Ok(fits)
+    }
+
+    /// The finite smoothing algorithm (Algorithm 1) from a caller-managed
+    /// warm-start state.
+    pub fn fit_warm(
+        &self,
+        tau: f64,
+        lam: f64,
+        state: &mut ApgdState,
+        backend: &mut dyn Backend,
+    ) -> Result<KqrFit> {
+        self.fit_warm_from(tau, lam, state, backend, self.opts.gamma_init)
+    }
+
+    /// `fit_warm` with an explicit γ-ladder start (used by the path).
+    pub fn fit_warm_from(
+        &self,
+        tau: f64,
+        lam: f64,
+        state: &mut ApgdState,
+        backend: &mut dyn Backend,
+        gamma_start: f64,
+    ) -> Result<KqrFit> {
+        if !(0.0 < tau && tau < 1.0) {
+            bail!("tau must be in (0,1), got {tau}");
+        }
+        if lam <= 0.0 {
+            bail!("lambda must be positive, got {lam}");
+        }
+        let n = self.n();
+        let yscale = amax(&self.y).max(1.0);
+        let tol_abs = self.opts.apgd_tol;
+        let band = self.opts.kkt_band * yscale;
+        let mut ws = ApgdWorkspace::new(n);
+
+        let mut gamma = gamma_start.clamp(self.opts.gamma_min, self.opts.gamma_init);
+        let mut total_iters = 0usize;
+        let mut total_expansions = 0usize;
+        let mut best: Option<(f64, ApgdState, KktReport, f64, Vec<usize>)> = None;
+        let mut stall = 0usize;
+
+        loop {
+            let plan = SpectralPlan::new(&self.basis, gamma, lam);
+            // At large γ the certificate cannot pass anyway (the smoothing
+            // bias dominates); solve loosely there and tighten as γ falls.
+            let tol_gamma = tol_abs.max(0.02 * gamma.min(1.0));
+            let mut s_hat: Vec<usize> = Vec::new();
+            let (iters, expansions) =
+                self.expand_at_gamma(&plan, gamma, tau, tol_gamma, state, backend, &mut ws, &mut s_hat);
+            total_iters += iters;
+            total_expansions += expansions;
+            // --- exact KKT certificate of problem (2) ---
+            let mut rep = kkt::kkt_check(
+                &self.basis,
+                &self.y,
+                tau,
+                lam,
+                state.b,
+                &state.beta,
+                self.opts.kkt_tol,
+                band,
+            );
+            // A pass on a loosely-converged iterate is not trustworthy:
+            // re-solve tightly at the same γ and re-verify.
+            if rep.pass && tol_gamma > tol_abs {
+                let (iters2, exp2) = self.expand_at_gamma(
+                    &plan, gamma, tau, tol_abs, state, backend, &mut ws, &mut s_hat,
+                );
+                total_iters += iters2;
+                total_expansions += exp2;
+                rep = kkt::kkt_check(
+                    &self.basis,
+                    &self.y,
+                    tau,
+                    lam,
+                    state.b,
+                    &state.beta,
+                    self.opts.kkt_tol,
+                    band,
+                );
+            }
+            let score = rep.max_stationarity.max(rep.intercept);
+            let replace = match &best {
+                None => true,
+                Some((s, ..)) => score < *s,
+            };
+            if replace {
+                best = Some((score, state.clone(), rep.clone(), gamma, s_hat.clone()));
+                stall = 0;
+            } else {
+                stall += 1;
+            }
+            if rep.pass || stall >= self.opts.max_stall_rungs {
+                break;
+            }
+            gamma *= self.opts.gamma_shrink;
+            if gamma < self.opts.gamma_min {
+                break;
+            }
+            state.restart();
+        }
+
+        let (_, best_state, kkt_rep, gamma_final, singular) =
+            best.expect("at least one gamma level evaluated");
+        *state = best_state.clone();
+        let beta = best_state.beta.clone();
+        let alpha = self.basis.alpha_from_beta(&beta);
+        let objective = apgd::exact_objective(
+            &self.basis,
+            lam,
+            &self.y,
+            tau,
+            best_state.b,
+            &beta,
+            &mut ws,
+        );
+        Ok(KqrFit {
+            tau,
+            lam,
+            b: best_state.b,
+            alpha,
+            objective,
+            kkt: kkt_rep,
+            gamma_final,
+            apgd_iters: total_iters,
+            expansions: total_expansions,
+            singular_set: singular,
+            x_train: self.x.clone(),
+            kernel: self.kernel.clone(),
+        })
+    }
+
+    /// Equality-constraint projection of eq. (8).
+    ///
+    /// Derivation (DESIGN.md): in fitted-value space the projection sets
+    /// F̃ = F₀ off S and F̃ᵢ = yᵢ − b̃ on S, with
+    /// b̃ = (b + Σ_{i∈S}(yᵢ − F₀ᵢ)) / (|S|+1). The paper materializes
+    /// α̃ = K⁻¹θ, which is numerically explosive for an ill-conditioned
+    /// Gram matrix. Instead we use the structure of the constrained
+    /// optimum: the correction lies in span{eᵢ : i ∈ S}, i.e.
+    /// α̃ = α + ν with ν supported on S and K_SS ν_S = c,
+    /// cᵢ = yᵢ − b̃ − F₀ᵢ (|cᵢ| ≤ γ). The |S|×|S| system is small and
+    /// well-conditioned after a tiny ridge, and ‖ν‖ = O(γ) — exactly the
+    /// bounded Lagrange-multiplier correction that moves the singular-set
+    /// subgradients into the interior of [τ−1, τ].
+    /// One γ level of the finite smoothing algorithm: APGD solve + eq.-(8)
+    /// projection + set expansion to the E(Ŝ) fixed point. Returns
+    /// (apgd_iters, expansion_rounds); `s_hat` carries the final set.
+    #[allow(clippy::too_many_arguments)]
+    fn expand_at_gamma(
+        &self,
+        plan: &SpectralPlan,
+        gamma: f64,
+        tau: f64,
+        tol: f64,
+        state: &mut ApgdState,
+        backend: &mut dyn Backend,
+        ws: &mut ApgdWorkspace,
+        s_hat: &mut Vec<usize>,
+    ) -> (usize, usize) {
+        let n = self.n();
+        let mut total_iters = 0usize;
+        let mut rounds = 0usize;
+        for _round in 0..self.opts.max_expansions {
+            rounds += 1;
+            // Solve the smoothed problem (warm) to the requested tolerance.
+            let mut iters = 0usize;
+            loop {
+                let delta = if self.opts.nesterov {
+                    backend.apgd_chunk(&self.basis, plan, &self.y, tau, state, self.opts.chunk)
+                } else {
+                    // plain MM ablation: chunk of 1 with momentum reset
+                    let d = backend.apgd_chunk(&self.basis, plan, &self.y, tau, state, 1);
+                    state.restart();
+                    d
+                };
+                iters += if self.opts.nesterov { self.opts.chunk } else { 1 };
+                if delta < tol || iters >= self.opts.max_iters {
+                    break;
+                }
+            }
+            total_iters += iters;
+            // Project once onto the S-constraints (eq. 8). Skip when S
+            // covers most of the data (only happens at large γ, where the
+            // near-full K_SS solve is both ill-conditioned and pointless —
+            // the certificate cannot pass at that γ).
+            if !s_hat.is_empty() && s_hat.len() <= n / 2 && self.opts.projection {
+                self.project_onto(s_hat, state, ws);
+                state.restart();
+            }
+            // Expansion step E(Ŝ).
+            self.basis.fitted(state.b, &state.beta, &mut ws.scratch, &mut ws.f);
+            let mut e: Vec<usize> = Vec::new();
+            for i in 0..n {
+                if (self.y[i] - ws.f[i]).abs() <= gamma {
+                    e.push(i);
+                }
+            }
+            if e == *s_hat {
+                break;
+            }
+            *s_hat = e;
+        }
+        (total_iters, rounds)
+    }
+
+    fn project_onto(&self, s: &[usize], state: &mut ApgdState, ws: &mut ApgdWorkspace) {
+        project_equality(&self.gram, &self.basis, &self.y, s, &mut state.b, &mut state.beta, ws);
+        state.restart();
+    }
+}
+
+/// Shared equality-constraint projection (used by both KQR and NCKQR; see
+/// `KqrSolver::project_onto` for the derivation and numerics).
+pub(crate) fn project_equality(
+    gram: &Matrix,
+    basis: &SpectralBasis,
+    y: &[f64],
+    s: &[usize],
+    b: &mut f64,
+    beta: &mut [f64],
+    ws: &mut ApgdWorkspace,
+) {
+    let m = s.len();
+    if m == 0 {
+        return;
+    }
+    // F₀ = UΛβ (fitted, no intercept)
+    basis.fitted(0.0, beta, &mut ws.scratch, &mut ws.f);
+    let mut acc = *b;
+    for &i in s {
+        acc += y[i] - ws.f[i];
+    }
+    let b_new = acc / (m as f64 + 1.0);
+    // c on S
+    let c: Vec<f64> = s.iter().map(|&i| y[i] - b_new - ws.f[i]).collect();
+    // K_SS (+ escalating ridge) ν = c
+    let mut kss = Matrix::from_fn(m, m, |a, bidx| gram[(s[a], s[bidx])]);
+    let base = (0..m).map(|a| kss[(a, a)]).sum::<f64>() / m as f64;
+    let mut ridge = 1e-12 * base.max(1e-12);
+    let nu = loop {
+        for a in 0..m {
+            kss[(a, a)] += ridge;
+        }
+        match crate::linalg::Cholesky::new(&kss) {
+            Ok(ch) => break ch.solve(&c),
+            Err(_) => {
+                ridge *= 100.0;
+                assert!(ridge < 1e6 * base.max(1.0), "projection: K_SS not factorizable");
+            }
+        }
+    };
+    // β̃ = β + Uᵀν  (ν supported on S ⇒ O(n·|S|))
+    for (a, &i) in s.iter().enumerate() {
+        crate::linalg::axpy(nu[a], basis.u.row(i), beta);
+    }
+    *b = b_new;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::data::synth;
+    use crate::smooth::pinball_loss;
+
+    fn toy_solver(n: usize, seed: u64) -> KqrSolver {
+        let mut rng = Rng::new(seed);
+        let data = synth::sine_hetero(n, &mut rng);
+        let sigma = crate::kernel::median_heuristic_sigma(&data.x);
+        KqrSolver::new(&data.x, &data.y, Kernel::Rbf { sigma })
+    }
+
+    #[test]
+    fn median_fit_passes_kkt() {
+        let solver = toy_solver(60, 1);
+        let fit = solver.fit(0.5, 0.01).unwrap();
+        assert!(fit.kkt.pass, "KKT failed: {:?}", fit.kkt);
+        assert!(fit.objective.is_finite());
+    }
+
+    #[test]
+    fn extreme_taus_pass_kkt() {
+        let solver = toy_solver(50, 2);
+        for tau in [0.1, 0.9] {
+            let fit = solver.fit(tau, 0.02).unwrap();
+            assert!(fit.kkt.pass, "tau={tau}: {:?}", fit.kkt);
+        }
+    }
+
+    #[test]
+    fn quantile_property_roughly_holds() {
+        // About a τ fraction of training residuals should be negative
+        // (standard quantile regression property, up to the singular set).
+        let solver = toy_solver(150, 3);
+        for tau in [0.25, 0.5, 0.75] {
+            let fit = solver.fit(tau, 1e-3).unwrap();
+            let preds = fit.predict(&solver.x);
+            let below = preds
+                .iter()
+                .zip(&solver.y)
+                .filter(|(p, y)| **y < **p)
+                .count() as f64
+                / 150.0;
+            assert!(
+                (below - tau).abs() < 0.12,
+                "tau={tau}: fraction below pred = {below}"
+            );
+        }
+    }
+
+    #[test]
+    fn objective_not_worse_than_perturbations() {
+        // Local optimality smoke test: random feasible perturbations never
+        // beat the fitted objective.
+        let solver = toy_solver(40, 4);
+        let tau = 0.3;
+        let lam = 0.05;
+        let fit = solver.fit(tau, lam).unwrap();
+        let beta = solver.basis.beta_from_alpha(&fit.alpha);
+        let mut ws = ApgdWorkspace::new(40);
+        let base = apgd::exact_objective(&solver.basis, lam, &solver.y, tau, fit.b, &beta, &mut ws);
+        let mut rng = Rng::new(5);
+        for scale in [1e-3, 1e-2, 1e-1] {
+            for _ in 0..20 {
+                let mut beta2 = beta.clone();
+                for v in beta2.iter_mut() {
+                    *v += scale * rng.normal();
+                }
+                let b2 = fit.b + scale * rng.normal();
+                let obj2 =
+                    apgd::exact_objective(&solver.basis, lam, &solver.y, tau, b2, &beta2, &mut ws);
+                assert!(obj2 >= base - 1e-9, "perturbation beat optimum: {obj2} < {base}");
+            }
+        }
+    }
+
+    #[test]
+    fn warm_path_matches_cold_fits() {
+        let solver = toy_solver(50, 6);
+        let lams = solver.lambda_grid(6, 0.5, 1e-3);
+        let path = solver.fit_path(0.5, &lams).unwrap();
+        for (i, fit) in path.iter().enumerate() {
+            let cold = solver.fit(0.5, lams[i]).unwrap();
+            assert!(
+                (fit.objective - cold.objective).abs() < 1e-5 * (1.0 + cold.objective),
+                "lam={}: warm {} vs cold {}",
+                lams[i],
+                fit.objective,
+                cold.objective
+            );
+        }
+        // warm path should use fewer iterations in total than cold fits
+        let warm_iters: usize = path.iter().map(|f| f.apgd_iters).sum();
+        let cold_iters: usize =
+            lams.iter().map(|&l| solver.fit(0.5, l).unwrap().apgd_iters).sum();
+        assert!(
+            warm_iters <= cold_iters,
+            "warm {warm_iters} vs cold {cold_iters}"
+        );
+    }
+
+    #[test]
+    fn lambda_grid_is_descending_log_spaced() {
+        let solver = toy_solver(10, 7);
+        let g = solver.lambda_grid(5, 1.0, 1e-4);
+        assert_eq!(g.len(), 5);
+        assert!((g[0] - 1.0).abs() < 1e-12);
+        assert!((g[4] - 1e-4).abs() < 1e-10);
+        for w in g.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+        let r1 = g[1] / g[0];
+        let r2 = g[2] / g[1];
+        assert!((r1 - r2).abs() < 1e-10);
+    }
+
+    #[test]
+    fn large_lambda_shrinks_function_to_intercept() {
+        let solver = toy_solver(40, 8);
+        let fit = solver.fit(0.5, 1e4).unwrap();
+        // f ≈ const = sample median; alpha ≈ 0
+        let amax_alpha = amax(&fit.alpha);
+        assert!(amax_alpha < 1e-3, "alpha sup {amax_alpha}");
+        let mut ys = solver.y.clone();
+        ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = ys[ys.len() / 2];
+        assert!((fit.b - med).abs() < 0.2, "b={} median={med}", fit.b);
+    }
+
+    #[test]
+    fn smaller_lambda_fits_tighter() {
+        // As λ decreases the in-sample pinball loss must decrease
+        // monotonically and beat the intercept-only fit. (Full
+        // interpolation is impossible for the check loss: the dual box
+        // |nλαᵢ| ≤ max(τ, 1−τ) caps the coefficients — which the KKT
+        // certificate verifies — so we do not assert loss → 0.)
+        let solver = toy_solver(30, 9);
+        let med = {
+            let mut ys = solver.y.clone();
+            ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            ys[ys.len() / 2]
+        };
+        let base = pinball_loss(&solver.y, &vec![med; 30], 0.5);
+        let mut prev = f64::INFINITY;
+        for lam in [1e-1, 1e-2, 1e-3, 1e-4] {
+            let fit = solver.fit(0.5, lam).unwrap();
+            assert!(fit.kkt.pass, "lam={lam}");
+            let preds = fit.predict(&solver.x);
+            let loss = pinball_loss(&solver.y, &preds, 0.5);
+            assert!(loss <= prev + 1e-6, "loss rose at lam={lam}: {loss} > {prev}");
+            prev = loss;
+        }
+        assert!(prev < 0.6 * base, "final loss {prev} vs intercept-only {base}");
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let solver = toy_solver(10, 10);
+        assert!(solver.fit(0.0, 0.1).is_err());
+        assert!(solver.fit(1.0, 0.1).is_err());
+        assert!(solver.fit(0.5, 0.0).is_err());
+        assert!(solver.fit(0.5, -1.0).is_err());
+    }
+
+    #[test]
+    fn predict_on_new_points_is_smooth() {
+        let solver = toy_solver(80, 11);
+        let fit = solver.fit(0.5, 1e-2).unwrap();
+        // predictions at nearby points should be close (RBF smoothness)
+        let xt = Matrix::from_fn(2, 1, |i, _| 0.5 + 1e-4 * i as f64);
+        let p = fit.predict(&xt);
+        assert!((p[0] - p[1]).abs() < 1e-2);
+    }
+}

@@ -1,0 +1,58 @@
+//! # fastkqr
+//!
+//! A production-grade reproduction of *fastkqr: A Fast Algorithm for
+//! Kernel Quantile Regression* (Tang, Gu & Wang, 2024) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)**: the exact finite-smoothing solvers for KQR and
+//!   non-crossing KQR, the spectral O(n²) update engine, baselines, CV,
+//!   the fit-job coordinator and a TCP fit/predict server.
+//! - **L2/L1 (python/, build-time only)**: the APGD iteration chunk as a
+//!   JAX program calling Pallas kernels, AOT-lowered to HLO text and
+//!   executed from Rust through PJRT (`runtime`).
+//!
+//! Quick start (native backend):
+//!
+//! ```no_run
+//! use fastkqr::prelude::*;
+//!
+//! let mut rng = Rng::new(7);
+//! let data = fastkqr::data::synth::sine_hetero(200, &mut rng);
+//! let kernel = Kernel::Rbf { sigma: median_heuristic_sigma(&data.x) };
+//! let fit = KqrSolver::new(&data.x, &data.y, kernel)
+//!     .fit(0.5, 1e-2)
+//!     .expect("fit");
+//! let preds = fit.predict(&data.x);
+//! assert_eq!(preds.len(), 200);
+//! ```
+
+pub mod backend;
+pub mod baselines;
+pub mod coordinator;
+pub mod cv;
+pub mod data;
+pub mod experiments;
+pub mod kernel;
+pub mod kqr;
+pub mod linalg;
+pub mod nckqr;
+pub mod runtime;
+pub mod smooth;
+pub mod spectral;
+pub mod util;
+
+/// Convenience re-exports for the common fitting workflow.
+pub mod prelude {
+    pub use crate::backend::Backend;
+    pub use crate::cv::{cross_validate, CvResult};
+    pub use crate::data::{Dataset, Rng};
+    pub use crate::kernel::{median_heuristic_sigma, Kernel};
+    pub use crate::kqr::{KqrFit, KqrSolver, SolveOptions};
+    pub use crate::nckqr::{NckqrFit, NckqrSolver};
+    pub use crate::smooth::pinball_loss;
+}
+
+/// Crate version string (reported by the CLI and the server banner).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

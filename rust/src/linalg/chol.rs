@@ -1,0 +1,152 @@
+//! Cholesky factorization and triangular solves.
+//!
+//! Used by the interior-point baseline (`baselines::ipm`) for its Newton
+//! systems, and by tests as an independent linear-solve oracle.
+
+use super::matrix::Matrix;
+
+/// Lower-triangular Cholesky factor of a symmetric positive-definite
+/// matrix: `a = L Lᵀ`.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    l: Matrix,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum CholError {
+    NotSquare,
+    NotPositiveDefinite { pivot: usize, value: f64 },
+}
+
+impl std::fmt::Display for CholError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CholError::NotSquare => write!(f, "cholesky: matrix not square"),
+            CholError::NotPositiveDefinite { pivot, value } => {
+                write!(f, "cholesky: non-PD pivot {pivot} ({value:.3e})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CholError {}
+
+impl Cholesky {
+    /// Factor `a` (symmetric PD). Only the lower triangle of `a` is read.
+    pub fn new(a: &Matrix) -> Result<Cholesky, CholError> {
+        if a.rows() != a.cols() {
+            return Err(CholError::NotSquare);
+        }
+        let n = a.rows();
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return Err(CholError::NotPositiveDefinite { pivot: i, value: s });
+                    }
+                    l[(i, i)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// Solve `a x = b` using the stored factor.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        // forward: L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l[(i, k)] * y[k];
+            }
+            y[i] = s / self.l[(i, i)];
+        }
+        // backward: Lᵀ x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in (i + 1)..n {
+                s -= self.l[(k, i)] * x[k];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// log(det(a)) = 2 Σ log L_ii (useful for diagnostics).
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    pub fn factor(&self) -> &Matrix {
+        &self.l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::linalg::blas::{gemm, gemv};
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let bt = b.transpose();
+        let mut a = gemm(&b, &bt);
+        for i in 0..n {
+            a[(i, i)] += n as f64; // well-conditioned
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = random_spd(8, 42);
+        let ch = Cholesky::new(&a).unwrap();
+        let l = ch.factor();
+        let lt = l.transpose();
+        let rec = gemm(l, &lt);
+        assert!(a.max_abs_diff(&rec) < 1e-9);
+    }
+
+    #[test]
+    fn solve_matches_residual() {
+        let a = random_spd(12, 7);
+        let mut rng = Rng::new(9);
+        let b: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let ch = Cholesky::new(&a).unwrap();
+        let x = ch.solve(&b);
+        let mut ax = vec![0.0; 12];
+        gemv(&a, &x, &mut ax);
+        for (l, r) in ax.iter().zip(&b) {
+            assert!((l - r).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn non_pd_detected() {
+        let mut a = Matrix::eye(3);
+        a[(2, 2)] = -1.0;
+        match Cholesky::new(&a) {
+            Err(CholError::NotPositiveDefinite { pivot: 2, .. }) => {}
+            other => panic!("expected NotPositiveDefinite, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn log_det_identity_is_zero() {
+        let ch = Cholesky::new(&Matrix::eye(5)).unwrap();
+        assert!(ch.log_det().abs() < 1e-14);
+    }
+}

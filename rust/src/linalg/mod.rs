@@ -1,0 +1,16 @@
+//! Dense linear algebra substrate (no external BLAS/LAPACK available).
+//!
+//! - [`matrix::Matrix`]: row-major dense matrix
+//! - [`blas`]: dot/axpy/GEMV/GEMM kernels (the O(n²) hot path)
+//! - [`eigen::SymEigen`]: one-time K = UΛUᵀ decomposition
+//! - [`chol::Cholesky`]: SPD solves for the interior-point baseline
+
+pub mod blas;
+pub mod chol;
+pub mod eigen;
+pub mod matrix;
+
+pub use blas::{amax, axpy, dot, gemm, gemv, gemv_t, nrm2, quad_form, scal};
+pub use chol::{CholError, Cholesky};
+pub use eigen::SymEigen;
+pub use matrix::Matrix;

@@ -1,0 +1,308 @@
+//! fastkqr CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   fit        fit one KQR model on a named workload
+//!   path       warm-started λ path at one τ
+//!   cv         k-fold cross-validated path
+//!   nckqr      simultaneous non-crossing fit
+//!   serve      start the TCP fit/predict server
+//!   client     send one JSON request line to a running server
+//!   table1..6  regenerate the paper's tables (quick scale; --paper full)
+//!   figure1    regenerate the crossing figure (writes CSV)
+//!   ablations  design-choice ablations
+//!   perf       hot-path microbenchmarks
+//!
+//! Common options: --data yuan|friedman|sine|gagurine|mcycle|crabs|boston
+//! --n --p --tau --lambda --backend native|xla --seed; see DESIGN.md §5.
+
+use anyhow::{bail, Result};
+use fastkqr::backend::{Backend, NativeBackend};
+use fastkqr::coordinator::{Server, ServerConfig};
+use fastkqr::data::{benchmarks, synth, Dataset, Rng};
+use fastkqr::experiments::{self, print_table, speedups, TableConfig};
+use fastkqr::kernel::{median_heuristic_sigma, Kernel};
+use fastkqr::kqr::apgd::ApgdState;
+use fastkqr::kqr::KqrSolver;
+use fastkqr::nckqr::NckqrSolver;
+use fastkqr::runtime::XlaBackend;
+use fastkqr::util::{Args, Json, Timer};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "fit" => cmd_fit(args),
+        "path" => cmd_path(args),
+        "cv" => cmd_cv(args),
+        "nckqr" => cmd_nckqr(args),
+        "serve" => cmd_serve(args),
+        "client" => cmd_client(args),
+        "table1" => cmd_table(args, 1),
+        "table2" => cmd_table(args, 2),
+        "table3" => cmd_table(args, 3),
+        "table4" => cmd_table(args, 4),
+        "table5" => cmd_table(args, 5),
+        "table6" => cmd_table(args, 6),
+        "figure1" => cmd_figure1(args),
+        "ablations" => cmd_ablations(args),
+        "perf" => cmd_perf(args),
+        "help" | "--help" => {
+            println!("fastkqr {} — exact kernel quantile regression", fastkqr::version());
+            println!("subcommands: fit path cv nckqr serve client table1..6 figure1 ablations perf");
+            println!("see README.md for options");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `fastkqr help`)"),
+    }
+}
+
+/// Build the dataset selected by --data/--n/--p/--seed.
+fn dataset_from_args(args: &Args) -> Result<Dataset> {
+    let n = args.get_usize("n", 200);
+    let p = args.get_usize("p", 10);
+    let seed = args.get_usize("seed", 2024) as u64;
+    let mut rng = Rng::new(seed);
+    Ok(match args.get_str("data", "yuan") {
+        "yuan" => synth::yuan(n, &mut rng),
+        "friedman" => synth::friedman(n, p, 3.0, &mut rng),
+        "sine" => synth::sine_hetero(n, &mut rng),
+        "gagurine" => benchmarks::gagurine(seed),
+        "mcycle" => benchmarks::mcycle(seed),
+        "crabs" => benchmarks::crabs(seed),
+        "boston" => benchmarks::boston_housing(seed),
+        "geyser" => benchmarks::geyser(seed),
+        other => bail!("unknown --data {other:?}"),
+    })
+}
+
+fn kernel_from_args(args: &Args, data: &Dataset) -> Kernel {
+    match args.get("sigma") {
+        Some(s) => Kernel::Rbf { sigma: s.parse().unwrap_or(1.0) },
+        None => Kernel::Rbf { sigma: median_heuristic_sigma(&data.x) },
+    }
+}
+
+fn backend_from_args(args: &Args) -> Result<Box<dyn Backend>> {
+    match args.get_str("backend", "native") {
+        "native" => Ok(Box::new(NativeBackend::new())),
+        "xla" => Ok(Box::new(XlaBackend::from_default_dir()?)),
+        other => bail!("unknown --backend {other:?} (native|xla)"),
+    }
+}
+
+fn cmd_fit(args: &Args) -> Result<()> {
+    let data = dataset_from_args(args)?;
+    let kernel = kernel_from_args(args, &data);
+    let tau = args.get_f64("tau", 0.5);
+    let lambda = args.get_f64("lambda", 1e-2);
+    let mut backend = backend_from_args(args)?;
+    let mut timer = Timer::start("fit");
+    let solver = KqrSolver::new(&data.x, &data.y, kernel);
+    let setup = timer.lap();
+    let mut state = ApgdState::zeros(solver.n());
+    let fit = solver.fit_warm(tau, lambda, &mut state, backend.as_mut())?;
+    let solve = timer.lap();
+    println!("dataset        {}", data.name);
+    println!("backend        {}", backend.name());
+    println!("tau/lambda     {tau} / {lambda}");
+    println!("objective      {:.6}", fit.objective);
+    println!(
+        "kkt            pass={} stat={:.2e} intercept={:.2e}",
+        fit.kkt.pass, fit.kkt.max_stationarity, fit.kkt.intercept
+    );
+    println!(
+        "gamma_final    {:.2e}   |singular set| {}",
+        fit.gamma_final,
+        fit.singular_set.len()
+    );
+    println!("apgd iters     {}", fit.apgd_iters);
+    println!("setup/solve    {setup:.3}s / {solve:.3}s");
+    Ok(())
+}
+
+fn cmd_path(args: &Args) -> Result<()> {
+    let data = dataset_from_args(args)?;
+    let kernel = kernel_from_args(args, &data);
+    let tau = args.get_f64("tau", 0.5);
+    let nlam = args.get_usize("nlam", 50);
+    let mut backend = backend_from_args(args)?;
+    let solver = KqrSolver::new(&data.x, &data.y, kernel);
+    let lams = solver.lambda_grid(nlam, args.get_f64("lambda-max", 1.0), 1e-4);
+    let timer = Timer::start("path");
+    let fits = solver.fit_path_with_backend(tau, &lams, backend.as_mut())?;
+    let total = timer.total();
+    println!("{:<12} {:<14} {:<10} {:<8} {:<6}", "lambda", "objective", "iters", "|S|", "kkt");
+    for f in &fits {
+        println!(
+            "{:<12.4e} {:<14.6} {:<10} {:<8} {:<6}",
+            f.lam,
+            f.objective,
+            f.apgd_iters,
+            f.singular_set.len(),
+            f.kkt.pass
+        );
+    }
+    println!("total {total:.3}s for {} fits ({} backend)", fits.len(), backend.name());
+    Ok(())
+}
+
+fn cmd_cv(args: &Args) -> Result<()> {
+    let data = dataset_from_args(args)?;
+    let kernel = kernel_from_args(args, &data);
+    let tau = args.get_f64("tau", 0.5);
+    let nlam = args.get_usize("nlam", 20);
+    let folds = args.get_usize("folds", 5);
+    let mut rng = Rng::new(args.get_usize("seed", 2024) as u64 ^ 0xc5);
+    let solver = KqrSolver::new(&data.x, &data.y, kernel.clone());
+    let lams = solver.lambda_grid(nlam, 1.0, 1e-4);
+    let timer = Timer::start("cv");
+    let res =
+        fastkqr::cv::cross_validate(&data, &kernel, tau, &lams, folds, &solver.opts, &mut rng)?;
+    println!("{:<12} {}", "lambda", "cv pinball");
+    for (l, v) in res.lambdas.iter().zip(&res.cv_loss) {
+        let mark = if *l == res.best_lambda { "  <- best" } else { "" };
+        println!("{l:<12.4e} {v:.6}{mark}");
+    }
+    println!("best lambda {:.4e} in {:.3}s", res.best_lambda, timer.total());
+    Ok(())
+}
+
+fn cmd_nckqr(args: &Args) -> Result<()> {
+    let data = dataset_from_args(args)?;
+    let kernel = kernel_from_args(args, &data);
+    let taus = args.get_f64_list("taus", &[0.1, 0.3, 0.5, 0.7, 0.9]);
+    let lam1 = args.get_f64("lam1", 10.0);
+    let lam2 = args.get_f64("lam2", 1e-2);
+    let solver = NckqrSolver::new(&data.x, &data.y, kernel, &taus);
+    let timer = Timer::start("nckqr");
+    let fit = solver.fit(lam1, lam2)?;
+    let crossings = fit.count_crossings(&data.x, 1e-9);
+    println!("dataset     {}", data.name);
+    println!("taus        {taus:?}  lam1={lam1}  lam2={lam2}");
+    println!("objective   {:.6}", fit.objective);
+    println!("kkt         pass={} stat={:.2e}", fit.kkt.pass, fit.kkt.max_stationarity);
+    println!("crossings   {crossings} (training points)");
+    println!("mm iters    {}   time {:.3}s", fit.mm_iters, timer.total());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get_str("addr", "127.0.0.1:7787").to_string();
+    let server = Server::spawn(ServerConfig { addr: addr.clone(), opts: Default::default() })?;
+    println!("fastkqr {} serving on {}", fastkqr::version(), server.local_addr);
+    println!("protocol: one JSON request per line; try: {{\"cmd\":\"ping\"}}");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get_str("addr", "127.0.0.1:7787");
+    let req = args
+        .get("json")
+        .map(String::from)
+        .unwrap_or_else(|| r#"{"cmd":"ping"}"#.to_string());
+    let mut client = fastkqr::coordinator::server::Client::connect(addr)?;
+    let resp = client.request(&Json::parse(&req).map_err(|e| anyhow::anyhow!("{e}"))?)?;
+    println!("{}", resp.to_string());
+    Ok(())
+}
+
+fn cmd_table(args: &Args, which: usize) -> Result<()> {
+    let mut cfg = TableConfig::from_args(args);
+    let cells = match which {
+        1 => {
+            if args.flag("paper") && args.get("p").is_none() {
+                cfg.p = 5000;
+            }
+            experiments::kqr_tables::table1(&cfg)?
+        }
+        2 => {
+            if args.get("solvers").is_none() {
+                cfg.solvers = vec!["fastkqr".into(), "proximal".into(), "lbfgs".into()];
+            }
+            experiments::nckqr_tables::table2(&cfg, args.get_f64("lam1", 1.0))?
+        }
+        3 => {
+            cfg.p = args.get_usize("p", 100);
+            experiments::kqr_tables::table3(&cfg)?
+        }
+        4 => experiments::kqr_tables::table4(&cfg)?,
+        5 => {
+            let cap = if args.flag("paper") { None } else { Some(args.get_usize("cap", 120)) };
+            experiments::kqr_tables::table5(&cfg, cap)?
+        }
+        6 => {
+            if args.get("solvers").is_none() {
+                cfg.solvers = vec!["fastkqr".into(), "proximal".into()];
+            }
+            let cap = if args.flag("paper") { None } else { Some(args.get_usize("cap", 100)) };
+            experiments::nckqr_tables::table6(&cfg, args.get_f64("lam1", 1.0), cap)?
+        }
+        _ => unreachable!(),
+    };
+    print_table(&format!("Table {which}"), &cells, &cfg.solvers);
+    println!("\nspeedups of fastkqr:");
+    for (label, n, solver, factor) in speedups(&cells) {
+        println!("  {label} n={n}: {factor:.1}x vs {solver}");
+    }
+    Ok(())
+}
+
+fn cmd_figure1(args: &Args) -> Result<()> {
+    let seed = args.get_usize("seed", 2025) as u64;
+    let lam = args.get_f64("lambda", 2e-5);
+    let lam1 = args.get_f64("lam1", 5.0);
+    let out = args.get_str("out", "out/figure1");
+    let res = experiments::figure1::run(seed, lam, lam1, args.get_usize("grid", 200))?;
+    experiments::figure1::write_csv(&res, out)?;
+    println!("Figure 1 (GAGurine lookalike, 5 quantile levels)");
+    println!("  individual fits: {} crossing violations on the grid", res.crossings_individual);
+    println!("  NCKQR joint fit: {} crossing violations", res.crossings_joint);
+    println!("  curves written to {out}/figure1_*.csv");
+    Ok(())
+}
+
+fn cmd_ablations(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 100);
+    let seed = args.get_usize("seed", 2024) as u64;
+    let mut rows = Vec::new();
+    rows.extend(experiments::ablations::spectral_vs_dense(n, args.get_usize("plans", 8), seed)?);
+    rows.extend(experiments::ablations::warm_vs_cold(n, args.get_usize("nlam", 20), seed)?);
+    rows.extend(experiments::ablations::solver_switches(n.min(80), seed)?);
+    rows.extend(experiments::ablations::nckqr_ridge(n.min(60), seed)?);
+    experiments::ablations::print_rows(&rows);
+    Ok(())
+}
+
+fn cmd_perf(args: &Args) -> Result<()> {
+    let reps = args.get_usize("reps", 20);
+    for n in args.get_usize_list("ns", &[128, 256, 512, 1024]) {
+        let (stats, gbps) = experiments::perf::gemv_throughput(n, reps);
+        println!("{}  ({gbps:.2} GB/s effective)", stats.report_line());
+    }
+    for n in args.get_usize_list("chunk-ns", &[64, 256]) {
+        for s in experiments::perf::chunk_cost(n, reps.min(10))? {
+            println!("{}", s.report_line());
+        }
+    }
+    for n in args.get_usize_list("eig-ns", &[128, 512]) {
+        println!("{}", experiments::perf::eigen_cost(n, 3).report_line());
+    }
+    println!(
+        "{}",
+        experiments::perf::fit_latency(args.get_usize("fit-n", 200), 3).report_line()
+    );
+    Ok(())
+}

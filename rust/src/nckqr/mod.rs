@@ -1,0 +1,640 @@
+//! Non-crossing kernel quantile regression (paper §3).
+//!
+//! Fits T quantile levels τ₁ < … < τ_T **simultaneously** with the soft
+//! non-crossing penalty λ₁ Σ_t Σᵢ V(f_t(xᵢ) − f_{t+1}(xᵢ)), V the
+//! η-smoothed ReLU. The exact solution of problem (12) is recovered by
+//! the same finite-smoothing machinery as single-level KQR:
+//!
+//! - the smoothed surrogate Q^γ is minimized by the specialized MM
+//!   algorithm with **two majorization steps** (§3.3): Lipschitz
+//!   calibration (γ ≤ η) and the block-diagonal bound Ψ ⪰ Φ, which makes
+//!   every level share one spectral system Σ_{γ,λ₁,λ₂} (see
+//!   [`plan::NcPlan`]) — 2 GEMVs per level per iteration;
+//! - multi-level set expansion Ŝ_t ← E_t (Theorems 6–7) with the K_SS
+//!   equality projection per level (eq. 19);
+//! - the γ/η ladder: γ = η = 1, both ÷4 per round; once η reaches 10⁻⁵
+//!   it is pinned there (η_exact defines problem (12)) while γ continues;
+//! - termination on the exact KKT certificate of problem (12):
+//!   g_{t,i} = nλ₂α_{t,i} + nλ₁(q_{t,i} − q_{t−1,i}) ∈ ∂ρ_{τ_t}(r_{t,i})
+//!   and Σᵢ nλ₂α_{t,i} = 0 per level.
+
+pub mod plan;
+
+use crate::kernel::Kernel;
+use crate::kqr::apgd::ApgdWorkspace;
+use crate::kqr::kkt::KktReport;
+use crate::linalg::{amax, gemv, Matrix};
+use crate::smooth::{h_gamma_prime, rho_subgradient, rho_tau, smooth_relu, smooth_relu_prime};
+use crate::spectral::SpectralBasis;
+use anyhow::{bail, Result};
+use plan::NcPlan;
+
+/// The η at which the exact problem (12) is defined (paper: 10⁻⁵).
+pub const ETA_EXACT: f64 = 1e-5;
+
+/// Solver options for NCKQR.
+#[derive(Clone, Debug)]
+pub struct NcOptions {
+    /// MM iteration cap per smoothed solve.
+    pub max_iters: usize,
+    /// Stationarity tolerance (subgradient units, like `kqr`).
+    pub mm_tol: f64,
+    pub kkt_tol: f64,
+    /// Residual band, relative to max(1, ‖y‖∞).
+    pub kkt_band: f64,
+    pub gamma_init: f64,
+    pub gamma_shrink: f64,
+    pub gamma_min: f64,
+    pub max_expansions: usize,
+    pub projection: bool,
+    /// Stop the γ ladder after this many consecutive rungs without an
+    /// improvement of the certificate score (the solution is returned as
+    /// best-effort with `kkt.pass = false`).
+    pub max_stall_rungs: usize,
+}
+
+impl Default for NcOptions {
+    fn default() -> Self {
+        NcOptions {
+            max_iters: 60_000,
+            mm_tol: 5e-5,
+            kkt_tol: 2e-3,
+            kkt_band: 1e-5,
+            gamma_init: 1.0,
+            gamma_shrink: 0.25,
+            gamma_min: 1e-9,
+            max_expansions: 30,
+            projection: true,
+            max_stall_rungs: 3,
+        }
+    }
+}
+
+/// Coefficients of one fitted quantile level.
+#[derive(Clone, Debug)]
+pub struct LevelCoef {
+    pub tau: f64,
+    pub b: f64,
+    pub alpha: Vec<f64>,
+}
+
+/// A fitted NCKQR model.
+#[derive(Clone, Debug)]
+pub struct NckqrFit {
+    pub taus: Vec<f64>,
+    pub lam1: f64,
+    pub lam2: f64,
+    pub levels: Vec<LevelCoef>,
+    /// Exact objective Q (check loss + RKHS + η_exact crossing penalty).
+    pub objective: f64,
+    pub kkt: KktReport,
+    pub mm_iters: usize,
+    pub gamma_final: f64,
+    x_train: Matrix,
+    kernel: Kernel,
+}
+
+impl NckqrFit {
+    /// Predict all T quantile curves at the rows of `xt`; returns one
+    /// vector per level (same order as `taus`).
+    pub fn predict(&self, xt: &Matrix) -> Vec<Vec<f64>> {
+        let cg = self.kernel.cross_gram(xt, &self.x_train);
+        self.levels
+            .iter()
+            .map(|lv| {
+                let mut out = vec![0.0; xt.rows()];
+                gemv(&cg, &lv.alpha, &mut out);
+                for o in out.iter_mut() {
+                    *o += lv.b;
+                }
+                out
+            })
+            .collect()
+    }
+
+    /// Count crossing violations on a set of evaluation points: pairs
+    /// (point, adjacent level) where the higher quantile dips more than
+    /// `tol` below the lower one.
+    pub fn count_crossings(&self, xt: &Matrix, tol: f64) -> usize {
+        let preds = self.predict(xt);
+        let mut c = 0usize;
+        for t in 0..preds.len().saturating_sub(1) {
+            for i in 0..xt.rows() {
+                if preds[t + 1][i] < preds[t][i] - tol {
+                    c += 1;
+                }
+            }
+        }
+        c
+    }
+}
+
+/// Per-level mutable MM state (current + previous iterate for the
+/// Nesterov extrapolation).
+#[derive(Clone, Debug)]
+struct LevelState {
+    b: f64,
+    beta: Vec<f64>,
+    b_prev: f64,
+    beta_prev: Vec<f64>,
+}
+
+impl LevelState {
+    fn restart(&mut self) {
+        self.b_prev = self.b;
+        self.beta_prev.copy_from_slice(&self.beta);
+    }
+}
+
+/// NCKQR solver: data + kernel + eigenbasis + quantile levels.
+pub struct NckqrSolver {
+    pub x: Matrix,
+    pub y: Vec<f64>,
+    pub kernel: Kernel,
+    pub gram: Matrix,
+    pub basis: SpectralBasis,
+    pub taus: Vec<f64>,
+    pub opts: NcOptions,
+}
+
+impl NckqrSolver {
+    pub fn new(x: &Matrix, y: &[f64], kernel: Kernel, taus: &[f64]) -> NckqrSolver {
+        assert_eq!(x.rows(), y.len());
+        assert!(!taus.is_empty());
+        let mut ts = taus.to_vec();
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(ts.iter().all(|t| 0.0 < *t && *t < 1.0), "taus must be in (0,1)");
+        assert!(ts.windows(2).all(|w| w[0] < w[1]), "taus must be distinct");
+        let gram = kernel.gram(x);
+        let basis = SpectralBasis::new(&gram);
+        NckqrSolver {
+            x: x.clone(),
+            y: y.to_vec(),
+            kernel,
+            gram,
+            basis,
+            taus: ts,
+            opts: NcOptions::default(),
+        }
+    }
+
+    pub fn with_options(mut self, opts: NcOptions) -> NckqrSolver {
+        self.opts = opts;
+        self
+    }
+
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn t_levels(&self) -> usize {
+        self.taus.len()
+    }
+
+    /// Fit at a single (λ₁, λ₂).
+    pub fn fit(&self, lam1: f64, lam2: f64) -> Result<NckqrFit> {
+        let mut state = self.init_state();
+        self.fit_warm(lam1, lam2, &mut state)
+    }
+
+    /// Warm-started descending-λ₂ path at fixed λ₁ (the Table-2 workload).
+    /// Like Algorithm 2, both the iterate and the γ-ladder position carry
+    /// over between λ₂ values.
+    pub fn fit_path(&self, lam1: f64, lam2s: &[f64]) -> Result<Vec<NckqrFit>> {
+        let mut state = self.init_state();
+        let mut gamma_start = self.opts.gamma_init;
+        let mut fits = Vec::with_capacity(lam2s.len());
+        for &l2 in lam2s {
+            let fit = self.fit_warm_from(lam1, l2, &mut state, gamma_start)?;
+            gamma_start = (fit.gamma_final / self.opts.gamma_shrink)
+                .min(self.opts.gamma_init)
+                .max(self.opts.gamma_min);
+            fits.push(fit);
+        }
+        Ok(fits)
+    }
+
+    fn init_state(&self) -> Vec<LevelState> {
+        (0..self.t_levels())
+            .map(|_| LevelState {
+                b: 0.0,
+                beta: vec![0.0; self.n()],
+                b_prev: 0.0,
+                beta_prev: vec![0.0; self.n()],
+            })
+            .collect()
+    }
+
+    /// Algorithm 2: the finite smoothing algorithm for NCKQR.
+    fn fit_warm(&self, lam1: f64, lam2: f64, state: &mut Vec<LevelState>) -> Result<NckqrFit> {
+        self.fit_warm_from(lam1, lam2, state, self.opts.gamma_init)
+    }
+
+    fn fit_warm_from(
+        &self,
+        lam1: f64,
+        lam2: f64,
+        state: &mut Vec<LevelState>,
+        gamma_start: f64,
+    ) -> Result<NckqrFit> {
+        if lam1 < 0.0 {
+            bail!("lambda1 must be >= 0, got {lam1}");
+        }
+        if lam2 <= 0.0 {
+            bail!("lambda2 must be positive, got {lam2}");
+        }
+        let n = self.n();
+        let t_lv = self.t_levels();
+        let yscale = amax(&self.y).max(1.0);
+        let band = self.opts.kkt_band * yscale;
+        let mut ws = ApgdWorkspace::new(n);
+
+        let mut gamma = gamma_start.clamp(self.opts.gamma_min, self.opts.gamma_init);
+        let mut total_iters = 0usize;
+        let mut best: Option<(f64, Vec<LevelState>, KktReport, f64)> = None;
+        let mut stall = 0usize;
+
+        loop {
+            // η is pinned at η_exact once the ladder reaches it (γ ≤ η is
+            // the first-majorization requirement).
+            let eta = gamma.max(ETA_EXACT);
+            let plan = NcPlan::new(&self.basis, gamma, lam1, lam2);
+            // loose tolerance at large γ (certificate cannot pass there)
+            let tol_gamma = self.opts.mm_tol.max(0.02 * gamma.min(1.0));
+            let mut s_hat: Vec<Vec<usize>> = vec![Vec::new(); t_lv];
+            total_iters += self.expand_at_gamma(&plan, eta, gamma, tol_gamma, state, &mut ws, &mut s_hat)?;
+            // --- KKT certificate of problem (12) ---
+            let mut rep = self.kkt_check(lam1, lam2, state, band);
+            // re-verify loose passes on a tightly converged iterate
+            if rep.pass && tol_gamma > self.opts.mm_tol {
+                total_iters += self.expand_at_gamma(
+                    &plan,
+                    eta,
+                    gamma,
+                    self.opts.mm_tol,
+                    state,
+                    &mut ws,
+                    &mut s_hat,
+                )?;
+                rep = self.kkt_check(lam1, lam2, state, band);
+            }
+            let score = rep.max_stationarity.max(rep.intercept);
+            let replace = best.as_ref().map(|(s, ..)| score < *s).unwrap_or(true);
+            if replace {
+                best = Some((score, state.clone(), rep.clone(), gamma));
+                stall = 0;
+            } else {
+                stall += 1;
+            }
+            if rep.pass || stall >= self.opts.max_stall_rungs {
+                break;
+            }
+            gamma *= self.opts.gamma_shrink;
+            if gamma < self.opts.gamma_min {
+                break;
+            }
+        }
+
+        let (_, best_state, kkt, gamma_final) = best.expect("at least one gamma level");
+        *state = best_state.clone();
+        let levels: Vec<LevelCoef> = (0..t_lv)
+            .map(|t| LevelCoef {
+                tau: self.taus[t],
+                b: best_state[t].b,
+                alpha: self.basis.alpha_from_beta(&best_state[t].beta),
+            })
+            .collect();
+        let objective = self.exact_objective(lam1, lam2, &best_state, &mut ws);
+        Ok(NckqrFit {
+            taus: self.taus.clone(),
+            lam1,
+            lam2,
+            levels,
+            objective,
+            kkt,
+            mm_iters: total_iters,
+            gamma_final,
+            x_train: self.x.clone(),
+            kernel: self.kernel.clone(),
+        })
+    }
+
+    /// One γ level: MM solve + per-level eq.-(19) projection + multi-level
+    /// set expansion to the fixed point (Theorems 6–7). Returns MM iters.
+    fn expand_at_gamma(
+        &self,
+        plan: &NcPlan,
+        eta: f64,
+        gamma: f64,
+        tol: f64,
+        state: &mut Vec<LevelState>,
+        ws: &mut ApgdWorkspace,
+        s_hat: &mut [Vec<usize>],
+    ) -> Result<usize> {
+        let n = self.n();
+        let t_lv = self.t_levels();
+        let mut total_iters = 0usize;
+        for _round in 0..self.opts.max_expansions {
+            // --- MM iterations to stationarity ---
+            total_iters += self.mm_solve(plan, eta, tol, state, ws)?;
+            // --- per-level projection (eq. 19); skip near-full S ---
+            if self.opts.projection {
+                for t in 0..t_lv {
+                    if !s_hat[t].is_empty() && s_hat[t].len() <= n / 2 {
+                        let lv = &mut state[t];
+                        let LevelState { b, beta, .. } = lv;
+                        crate::kqr::project_equality(
+                            &self.gram,
+                            &self.basis,
+                            &self.y,
+                            &s_hat[t],
+                            b,
+                            beta,
+                            ws,
+                        );
+                        lv.restart();
+                    }
+                }
+            }
+            // --- multi-level set expansion ---
+            let mut expanded = false;
+            for t in 0..t_lv {
+                self.basis.fitted(state[t].b, &state[t].beta, &mut ws.scratch, &mut ws.f);
+                let e: Vec<usize> =
+                    (0..n).filter(|&i| (self.y[i] - ws.f[i]).abs() <= gamma).collect();
+                if e != s_hat[t] {
+                    expanded = true;
+                    s_hat[t] = e;
+                }
+            }
+            if !expanded {
+                break;
+            }
+        }
+        Ok(total_iters)
+    }
+
+    /// MM iterations (Jacobi across levels) with Nesterov acceleration
+    /// until the stationarity residual max_t max(‖t_t‖∞, |Σw_t|/n) falls
+    /// below `tol`.
+    ///
+    /// Implementation note: the paper's Algorithm 2 runs plain MM; because
+    /// the two-majorization surrogate is a fixed quadratic upper bound,
+    /// FISTA-style extrapolation applies verbatim and converges in far
+    /// fewer O(T·n²) sweeps — a strict improvement we document in
+    /// DESIGN.md (the `ablations` bench compares both).
+    fn mm_solve(
+        &self,
+        plan: &NcPlan,
+        eta: f64,
+        tol: f64,
+        state: &mut [LevelState],
+        ws: &mut ApgdWorkspace,
+    ) -> Result<usize> {
+        let n = self.n();
+        let nf = n as f64;
+        let t_lv = self.t_levels();
+        let gamma = plan.gamma;
+        let lam1 = plan.lam1;
+        let mut fs = vec![vec![0.0; n]; t_lv];
+        let mut qs = vec![vec![0.0; n]; t_lv.saturating_sub(1)];
+        let mut w = vec![0.0; n];
+        let mut bars: Vec<(f64, Vec<f64>)> =
+            (0..t_lv).map(|_| (0.0, vec![0.0; n])).collect();
+        let mut ck = 1.0f64;
+        let mut iters = 0usize;
+        loop {
+            let ck_next = 0.5 * (1.0 + (1.0 + 4.0 * ck * ck).sqrt());
+            let mom = (ck - 1.0) / ck_next;
+            // extrapolation point per level + fitted values there
+            for t in 0..t_lv {
+                let lv = &state[t];
+                bars[t].0 = lv.b + mom * (lv.b - lv.b_prev);
+                for i in 0..n {
+                    bars[t].1[i] = lv.beta[i] + mom * (lv.beta[i] - lv.beta_prev[i]);
+                }
+                self.basis.fitted(bars[t].0, &bars[t].1, &mut ws.scratch, &mut fs[t]);
+            }
+            // crossing-penalty derivatives q_t = V'(f_t − f_{t+1})
+            for t in 0..t_lv.saturating_sub(1) {
+                for i in 0..n {
+                    qs[t][i] = smooth_relu_prime(fs[t][i] - fs[t + 1][i], eta);
+                }
+            }
+            // per-level Σ⁻¹ϱ updates (Jacobi at the extrapolation point)
+            let mut conv = 0.0f64;
+            for t in 0..t_lv {
+                for i in 0..n {
+                    let z = h_gamma_prime(self.y[i] - fs[t][i], self.taus[t], gamma);
+                    let fwd = if t < t_lv - 1 { qs[t][i] } else { 0.0 };
+                    let bwd = if t > 0 { qs[t - 1][i] } else { 0.0 };
+                    w[i] = z - nf * lam1 * (fwd - bwd);
+                }
+                let db = plan.step_update(&self.basis, &w, &bars[t].1, &mut ws.t, &mut ws.dbeta);
+                let t_sup = amax(&ws.t);
+                let sum_w: f64 = w.iter().sum();
+                conv = conv.max(t_sup).max(sum_w.abs() / nf);
+                let lv = &mut state[t];
+                lv.b_prev = lv.b;
+                lv.b = bars[t].0 + db;
+                for i in 0..n {
+                    lv.beta_prev[i] = lv.beta[i];
+                    lv.beta[i] = bars[t].1[i] + ws.dbeta[i];
+                }
+            }
+            ck = ck_next;
+            iters += 1;
+            if conv < tol || iters >= self.opts.max_iters {
+                return Ok(iters);
+            }
+        }
+    }
+
+    /// Exact KKT certificate of problem (12) (η = η_exact in V′).
+    fn kkt_check(&self, lam1: f64, lam2: f64, state: &[LevelState], band: f64) -> KktReport {
+        let n = self.n();
+        let nf = n as f64;
+        let t_lv = self.t_levels();
+        let mut scratch = vec![0.0; n];
+        let mut fs = vec![vec![0.0; n]; t_lv];
+        for t in 0..t_lv {
+            self.basis.fitted(state[t].b, &state[t].beta, &mut scratch, &mut fs[t]);
+        }
+        let mut max_stat = 0.0f64;
+        let mut max_intercept = 0.0f64;
+        for t in 0..t_lv {
+            let alpha = self.basis.alpha_from_beta(&state[t].beta);
+            let mut sum_g = 0.0;
+            for i in 0..n {
+                let r = self.y[i] - fs[t][i];
+                let fwd = if t < t_lv - 1 {
+                    smooth_relu_prime(fs[t][i] - fs[t + 1][i], ETA_EXACT)
+                } else {
+                    0.0
+                };
+                let bwd = if t > 0 {
+                    smooth_relu_prime(fs[t - 1][i] - fs[t][i], ETA_EXACT)
+                } else {
+                    0.0
+                };
+                let g = nf * lam2 * alpha[i] + nf * lam1 * (fwd - bwd);
+                sum_g += nf * lam2 * alpha[i];
+                let (lo, hi) = rho_subgradient(r, self.taus[t], band);
+                let viol = (lo - g).max(g - hi).max(0.0);
+                max_stat = max_stat.max(viol);
+            }
+            max_intercept = max_intercept.max((sum_g / nf).abs());
+        }
+        KktReport {
+            max_stationarity: max_stat,
+            intercept: max_intercept,
+            band,
+            pass: max_stat <= self.opts.kkt_tol && max_intercept <= self.opts.kkt_tol,
+        }
+    }
+
+    /// Exact objective Q of problem (12).
+    fn exact_objective(
+        &self,
+        lam1: f64,
+        lam2: f64,
+        state: &[LevelState],
+        ws: &mut ApgdWorkspace,
+    ) -> f64 {
+        let n = self.n();
+        let nf = n as f64;
+        let t_lv = self.t_levels();
+        let mut fs = vec![vec![0.0; n]; t_lv];
+        for t in 0..t_lv {
+            self.basis.fitted(state[t].b, &state[t].beta, &mut ws.scratch, &mut fs[t]);
+        }
+        let mut q = 0.0;
+        for t in 0..t_lv {
+            let loss: f64 =
+                (0..n).map(|i| rho_tau(self.y[i] - fs[t][i], self.taus[t])).sum::<f64>() / nf;
+            q += loss + 0.5 * lam2 * self.basis.penalty(&state[t].beta);
+        }
+        for t in 0..t_lv.saturating_sub(1) {
+            for i in 0..n {
+                q += lam1 * smooth_relu(fs[t][i] - fs[t + 1][i], ETA_EXACT);
+            }
+        }
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::data::Rng;
+    use crate::kqr::KqrSolver;
+
+    fn fixture(n: usize, seed: u64) -> (Matrix, Vec<f64>, Kernel) {
+        let mut rng = Rng::new(seed);
+        let d = synth::sine_hetero(n, &mut rng);
+        let sigma = crate::kernel::median_heuristic_sigma(&d.x);
+        (d.x, d.y, Kernel::Rbf { sigma })
+    }
+
+    #[test]
+    fn single_level_matches_kqr() {
+        let (x, y, kernel) = fixture(40, 1);
+        let nc = NckqrSolver::new(&x, &y, kernel.clone(), &[0.5]);
+        let fit_nc = nc.fit(0.3, 0.02).unwrap();
+        let kqr = KqrSolver::new(&x, &y, kernel);
+        let fit_k = kqr.fit(0.5, 0.02).unwrap();
+        // with one level the crossing penalty vanishes; objectives agree
+        assert!(
+            (fit_nc.objective - fit_k.objective).abs() < 1e-4 * (1.0 + fit_k.objective),
+            "nc={} kqr={}",
+            fit_nc.objective,
+            fit_k.objective
+        );
+    }
+
+    #[test]
+    fn lam1_zero_matches_independent_fits() {
+        let (x, y, kernel) = fixture(40, 2);
+        let taus = [0.25, 0.75];
+        let nc = NckqrSolver::new(&x, &y, kernel.clone(), &taus);
+        let fit_nc = nc.fit(0.0, 0.05).unwrap();
+        let kqr = KqrSolver::new(&x, &y, kernel);
+        let sum_obj: f64 = taus.iter().map(|&t| kqr.fit(t, 0.05).unwrap().objective).sum();
+        assert!(
+            (fit_nc.objective - sum_obj).abs() < 1e-3 * (1.0 + sum_obj),
+            "nc={} sum_kqr={sum_obj}",
+            fit_nc.objective
+        );
+    }
+
+    #[test]
+    fn kkt_certificate_passes() {
+        let (x, y, kernel) = fixture(50, 3);
+        let nc = NckqrSolver::new(&x, &y, kernel, &[0.1, 0.5, 0.9]);
+        let fit = nc.fit(1.0, 0.02).unwrap();
+        assert!(fit.kkt.pass, "{:?}", fit.kkt);
+    }
+
+    #[test]
+    fn large_lam1_removes_crossings() {
+        // Heteroscedastic data with small n is the canonical crossing
+        // scenario; with strong λ₁ the curves must be ordered.
+        let (x, y, kernel) = fixture(60, 4);
+        let taus = [0.1, 0.3, 0.5, 0.7, 0.9];
+        let nc = NckqrSolver::new(&x, &y, kernel.clone(), &taus);
+        // independent fits (λ₁ = 0): typically cross somewhere
+        let free = nc.fit(0.0, 1e-3).unwrap();
+        let tight = nc.fit(50.0, 1e-3).unwrap();
+        let grid = Matrix::from_fn(120, 1, |i, _| i as f64 / 119.0);
+        let cross_free = free.count_crossings(&grid, 1e-9);
+        let cross_tight = tight.count_crossings(&grid, 1e-6);
+        assert_eq!(cross_tight, 0, "crossings remain under strong penalty");
+        assert!(cross_free >= cross_tight, "free={cross_free} tight={cross_tight}");
+    }
+
+    #[test]
+    fn levels_are_ordered_in_probability() {
+        let (x, y, kernel) = fixture(60, 5);
+        let nc = NckqrSolver::new(&x, &y, kernel, &[0.2, 0.8]);
+        let fit = nc.fit(10.0, 0.01).unwrap();
+        let preds = fit.predict(&x);
+        // the 0.8-quantile curve should lie above the 0.2 curve on average
+        let mean_gap: f64 =
+            preds[1].iter().zip(&preds[0]).map(|(h, l)| h - l).sum::<f64>() / x.rows() as f64;
+        assert!(mean_gap > 0.3, "gap={mean_gap}");
+    }
+
+    #[test]
+    fn warm_lam2_path_consistent_with_cold() {
+        let (x, y, kernel) = fixture(35, 6);
+        let nc = NckqrSolver::new(&x, &y, kernel, &[0.3, 0.7]);
+        let lam2s = [0.2, 0.05, 0.01];
+        let path = nc.fit_path(1.0, &lam2s).unwrap();
+        for (i, f) in path.iter().enumerate() {
+            let cold = nc.fit(1.0, lam2s[i]).unwrap();
+            assert!(
+                (f.objective - cold.objective).abs() < 1e-3 * (1.0 + cold.objective),
+                "lam2={}: warm {} vs cold {}",
+                lam2s[i],
+                f.objective,
+                cold.objective
+            );
+        }
+    }
+
+    #[test]
+    fn input_validation() {
+        let (x, y, kernel) = fixture(10, 7);
+        let nc = NckqrSolver::new(&x, &y, kernel, &[0.5]);
+        assert!(nc.fit(-1.0, 0.1).is_err());
+        assert!(nc.fit(1.0, 0.0).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_taus_rejected() {
+        let (x, y, kernel) = fixture(10, 8);
+        let _ = NckqrSolver::new(&x, &y, kernel, &[0.5, 0.5]);
+    }
+}

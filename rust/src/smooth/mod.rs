@@ -1,0 +1,191 @@
+//! Loss functions of the paper.
+//!
+//! - `rho_tau`: the quantile check loss ρ_τ(t) = t(τ − 1{t<0}).
+//! - `h_gamma`: the γ-smoothed check loss H_{γ,τ} (paper eq. 3); the key
+//!   identities 0 ≤ H − ρ ≤ γ/4 (Lemma 8) and H' Lipschitz with constant
+//!   1/(2γ) power the finite smoothing algorithm.
+//! - `smooth_relu`: the η-smoothed ReLU V used as the soft non-crossing
+//!   penalty (§3.1), with V(0)=η/4 absorbed as in the paper's definition.
+
+/// Quantile check loss ρ_τ(t) = t(τ − I(t < 0)).
+#[inline]
+pub fn rho_tau(t: f64, tau: f64) -> f64 {
+    if t < 0.0 {
+        (tau - 1.0) * t
+    } else {
+        tau * t
+    }
+}
+
+/// γ-smoothed check loss H_{γ,τ}(t), paper eq. (3).
+#[inline]
+pub fn h_gamma(t: f64, tau: f64, gamma: f64) -> f64 {
+    debug_assert!(gamma > 0.0);
+    if t < -gamma {
+        (tau - 1.0) * t
+    } else if t > gamma {
+        tau * t
+    } else {
+        t * t / (4.0 * gamma) + t * (tau - 0.5) + gamma / 4.0
+    }
+}
+
+/// Derivative H'_{γ,τ}(t): (τ−1) / (t/(2γ)+τ−1/2) / τ on the three pieces.
+#[inline]
+pub fn h_gamma_prime(t: f64, tau: f64, gamma: f64) -> f64 {
+    if t < -gamma {
+        tau - 1.0
+    } else if t > gamma {
+        tau
+    } else {
+        t / (2.0 * gamma) + tau - 0.5
+    }
+}
+
+/// Subgradient interval of ρ_τ at t: [lo, hi] (singleton off zero).
+#[inline]
+pub fn rho_subgradient(t: f64, tau: f64, tol: f64) -> (f64, f64) {
+    if t > tol {
+        (tau, tau)
+    } else if t < -tol {
+        (tau - 1.0, tau - 1.0)
+    } else {
+        (tau - 1.0, tau)
+    }
+}
+
+/// η-smoothed ReLU V(t) (§3.1): 0 / quadratic blend / t.
+#[inline]
+pub fn smooth_relu(t: f64, eta: f64) -> f64 {
+    debug_assert!(eta > 0.0);
+    if t < -eta {
+        0.0
+    } else if t > eta {
+        t
+    } else {
+        t * t / (4.0 * eta) + t / 2.0 + eta / 4.0
+    }
+}
+
+/// V'(t): 0 / t/(2η)+1/2 / 1.
+#[inline]
+pub fn smooth_relu_prime(t: f64, eta: f64) -> f64 {
+    if t < -eta {
+        0.0
+    } else if t > eta {
+        1.0
+    } else {
+        t / (2.0 * eta) + 0.5
+    }
+}
+
+/// Mean pinball (check) loss — the CV scoring metric for quantile models.
+pub fn pinball_loss(y: &[f64], pred: &[f64], tau: f64) -> f64 {
+    assert_eq!(y.len(), pred.len());
+    let s: f64 = y.iter().zip(pred).map(|(yi, pi)| rho_tau(yi - pi, tau)).sum();
+    s / y.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TAUS: [f64; 5] = [0.1, 0.3, 0.5, 0.7, 0.9];
+    const GAMMAS: [f64; 4] = [1.0, 0.25, 1e-2, 1e-5];
+
+    #[test]
+    fn check_loss_basics() {
+        assert_eq!(rho_tau(2.0, 0.3), 0.6);
+        assert_eq!(rho_tau(-2.0, 0.3), 1.4);
+        assert_eq!(rho_tau(0.0, 0.3), 0.0);
+    }
+
+    #[test]
+    fn h_is_continuous_and_c1_at_knots() {
+        for &tau in &TAUS {
+            for &g in &GAMMAS {
+                for &knot in &[-g, g] {
+                    let eps = g * 1e-9;
+                    let left = h_gamma(knot - eps, tau, g);
+                    let right = h_gamma(knot + eps, tau, g);
+                    assert!((left - right).abs() < 1e-7 * (1.0 + left.abs()));
+                    let dl = h_gamma_prime(knot - eps, tau, g);
+                    let dr = h_gamma_prime(knot + eps, tau, g);
+                    assert!((dl - dr).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lemma8_sandwich_0_le_h_minus_rho_le_quarter_gamma() {
+        for &tau in &TAUS {
+            for &g in &GAMMAS {
+                for i in -400..=400 {
+                    let t = i as f64 * (3.0 * g / 400.0);
+                    let diff = h_gamma(t, tau, g) - rho_tau(t, tau);
+                    assert!(
+                        diff >= -1e-15 && diff <= g / 4.0 + 1e-15,
+                        "tau={tau} g={g} t={t} diff={diff}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn h_prime_lipschitz_half_inv_gamma() {
+        for &tau in &TAUS {
+            let g = 0.3;
+            let pts: Vec<f64> = (-60..=60).map(|i| i as f64 * 0.02).collect();
+            for w in pts.windows(2) {
+                let d = (h_gamma_prime(w[1], tau, g) - h_gamma_prime(w[0], tau, g)).abs();
+                assert!(d <= (w[1] - w[0]).abs() / (2.0 * g) + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn h_prime_matches_subgradient_outside_band() {
+        for &tau in &TAUS {
+            let g = 0.1;
+            assert_eq!(h_gamma_prime(-0.2, tau, g), tau - 1.0);
+            assert_eq!(h_gamma_prime(0.2, tau, g), tau);
+            // midpoint value lies inside the subgradient interval at 0
+            let mid = h_gamma_prime(0.0, tau, g);
+            assert!((mid - (tau - 0.5)).abs() < 1e-15);
+            let (lo, hi) = rho_subgradient(0.0, tau, 1e-12);
+            assert!(mid >= lo && mid <= hi);
+        }
+    }
+
+    #[test]
+    fn smooth_relu_properties() {
+        let eta = 1e-3;
+        assert_eq!(smooth_relu(-1.0, eta), 0.0);
+        assert!((smooth_relu(1.0, eta) - 1.0).abs() < 1e-15);
+        // value at 0 is eta/4 (the paper's blend), nonneg, nondecreasing
+        assert!((smooth_relu(0.0, eta) - eta / 4.0).abs() < 1e-18);
+        let mut prev = 0.0;
+        for i in -20..=20 {
+            let t = i as f64 * eta / 5.0;
+            let v = smooth_relu(t, eta);
+            assert!(v >= prev - 1e-18);
+            prev = v;
+        }
+        // derivative in [0,1], continuous at knots
+        for i in -20..=20 {
+            let t = i as f64 * eta / 5.0;
+            let d = smooth_relu_prime(t, eta);
+            assert!((0.0..=1.0).contains(&d));
+        }
+    }
+
+    #[test]
+    fn pinball_matches_hand_value() {
+        let y = [1.0, 2.0];
+        let p = [0.0, 3.0];
+        // rho_{0.5}: 0.5*1 + 0.5*1 = 1.0 => mean 0.5
+        assert!((pinball_loss(&y, &p, 0.5) - 0.5).abs() < 1e-15);
+    }
+}

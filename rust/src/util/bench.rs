@@ -1,0 +1,143 @@
+//! Micro/macro benchmark harness (criterion substitute, substrate).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module. It
+//! provides warmup, repeated timed runs, robust summary statistics and
+//! the table-formatted reporting the experiment harnesses share.
+
+use std::time::Instant;
+
+/// Summary statistics over repeated timed runs (seconds).
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub reps: usize,
+    pub mean: f64,
+    pub sd: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+}
+
+impl BenchStats {
+    pub fn from_samples(name: impl Into<String>, mut samples: Vec<f64>) -> BenchStats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        BenchStats {
+            name: name.into(),
+            reps: samples.len(),
+            mean,
+            sd: var.sqrt(),
+            min: samples[0],
+            max: *samples.last().unwrap(),
+            median: samples[samples.len() / 2],
+        }
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} reps={:<3} mean={:>10.4}s sd={:>8.4}s min={:>10.4}s median={:>10.4}s",
+            self.name, self.reps, self.mean, self.sd, self.min, self.median
+        )
+    }
+}
+
+/// Time `f` once, returning (seconds, result).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let t0 = Instant::now();
+    let out = f();
+    (t0.elapsed().as_secs_f64(), out)
+}
+
+/// Benchmark runner: `warmup` throwaway calls then `reps` timed calls.
+/// The closure receives the rep index (harnesses use it to reseed).
+pub fn run_bench<T>(
+    name: &str,
+    warmup: usize,
+    reps: usize,
+    mut f: impl FnMut(usize) -> T,
+) -> BenchStats {
+    for w in 0..warmup {
+        let out = f(w);
+        std::hint::black_box(&out);
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for r in 0..reps {
+        let t0 = Instant::now();
+        let out = f(warmup + r);
+        std::hint::black_box(&out);
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchStats::from_samples(name, samples)
+}
+
+/// Mean and standard error of a sample of metric values (used to report
+/// the paper's "obj (sd)" cells).
+pub fn mean_sd(values: &[f64]) -> (f64, f64) {
+    let n = values.len() as f64;
+    if values.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let mean = values.iter().sum::<f64>() / n;
+    let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n.max(1.0);
+    (mean, var.sqrt())
+}
+
+/// Paper-style table printer: fixed-width columns, one header row.
+pub struct TablePrinter {
+    pub widths: Vec<usize>,
+}
+
+impl TablePrinter {
+    pub fn new(headers: &[&str], widths: Vec<usize>) -> TablePrinter {
+        assert_eq!(headers.len(), widths.len());
+        let tp = TablePrinter { widths };
+        tp.row(headers);
+        let total: usize = tp.widths.iter().sum::<usize>() + tp.widths.len() * 2;
+        println!("{}", "-".repeat(total));
+        tp
+    }
+
+    pub fn row(&self, cells: &[&str]) {
+        let mut line = String::new();
+        for (c, w) in cells.iter().zip(&self.widths) {
+            line.push_str(&format!("{:<width$}  ", c, width = w));
+        }
+        println!("{}", line.trim_end());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_samples() {
+        let s = BenchStats::from_samples("t", vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.median, 2.0);
+        assert!((s.mean - 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn run_bench_counts_reps() {
+        let mut calls = 0usize;
+        let s = run_bench("x", 2, 5, |_| {
+            calls += 1;
+            calls
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(s.reps, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn mean_sd_hand_checked() {
+        let (m, sd) = mean_sd(&[2.0, 4.0]);
+        assert_eq!(m, 3.0);
+        assert!((sd - 1.0).abs() < 1e-15);
+    }
+}

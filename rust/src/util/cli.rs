@@ -1,0 +1,130 @@
+//! Tiny CLI argument parser (clap substitute, substrate).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Unknown flags are collected so subcommands can validate their own set.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Comma-separated f64 list option.
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            Some(s) => s.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    /// Comma-separated usize list option.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            Some(s) => s.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // Convention: a bare `--name` consumes the following token as its
+        // value unless that token starts with `--`; boolean flags therefore
+        // go last or use `--flag=`-style. Harnesses follow this rule.
+        let a = parse(&["fit", "data.csv", "--n", "100", "--tau=0.5", "--verbose"]);
+        assert_eq!(a.positional, vec!["fit", "data.csv"]);
+        assert_eq!(a.get("n"), Some("100"));
+        assert_eq!(a.get_f64("tau", 0.0), 0.5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_str("mode", "native"), "native");
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // "--shift -3" : -3 does not start with --, so it's the value
+        let a = parse(&["--shift", "-3"]);
+        assert_eq!(a.get_f64("shift", 0.0), -3.0);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--taus", "0.1,0.5,0.9", "--sizes", "64, 128"]);
+        assert_eq!(a.get_f64_list("taus", &[]), vec![0.1, 0.5, 0.9]);
+        assert_eq!(a.get_usize_list("sizes", &[]), vec![64, 128]);
+        assert_eq!(a.get_f64_list("missing", &[1.0]), vec![1.0]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--paper"]);
+        assert!(a.flag("paper"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Zero-dependency utility substrates: mini-JSON, CLI parsing, the bench
+//! harness and a scoped timer/logging helper.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod timer;
+
+pub use cli::Args;
+pub use json::Json;
+pub use timer::Timer;

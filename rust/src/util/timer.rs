@@ -1,0 +1,57 @@
+//! Scoped timing + lightweight stderr logging.
+
+use std::time::Instant;
+
+/// Wall-clock timer with named checkpoints.
+pub struct Timer {
+    start: Instant,
+    last: Instant,
+    pub label: String,
+}
+
+impl Timer {
+    pub fn start(label: impl Into<String>) -> Timer {
+        let now = Instant::now();
+        Timer { start: now, last: now, label: label.into() }
+    }
+
+    /// Seconds since construction.
+    pub fn total(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Seconds since the previous lap (or construction).
+    pub fn lap(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        dt
+    }
+
+    /// Log a lap to stderr when FASTKQR_VERBOSE is set.
+    pub fn lap_log(&mut self, what: &str) {
+        let dt = self.lap();
+        vlog(&format!("[{}] {what}: {dt:.4}s", self.label));
+    }
+}
+
+/// stderr log gated on the FASTKQR_VERBOSE environment variable.
+pub fn vlog(msg: &str) {
+    if std::env::var_os("FASTKQR_VERBOSE").is_some() {
+        eprintln!("{msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let mut t = Timer::start("test");
+        let a = t.lap();
+        let b = t.lap();
+        assert!(a >= 0.0 && b >= 0.0);
+        assert!(t.total() >= a + b - 1e-9);
+    }
+}

@@ -1,0 +1,138 @@
+//! Server integration: fit/predict over TCP, concurrent clients, error
+//! handling, metrics accounting.
+
+use fastkqr::coordinator::server::Client;
+use fastkqr::coordinator::{Server, ServerConfig};
+use fastkqr::data::{synth, Rng};
+use fastkqr::util::Json;
+
+fn spawn() -> Server {
+    Server::spawn(ServerConfig { addr: "127.0.0.1:0".into(), opts: Default::default() })
+        .expect("server")
+}
+
+fn matrix_json(x: &fastkqr::linalg::Matrix) -> Json {
+    Json::Arr((0..x.rows()).map(|i| Json::arr_f64(x.row(i))).collect())
+}
+
+#[test]
+fn fit_predict_drop_over_tcp() {
+    let server = spawn();
+    let mut rng = Rng::new(1);
+    let data = synth::sine_hetero(60, &mut rng);
+    let mut client = Client::connect(server.local_addr).unwrap();
+
+    let fit = client
+        .request(&Json::obj(vec![
+            ("cmd", Json::str("fit")),
+            ("x", matrix_json(&data.x)),
+            ("y", Json::arr_f64(&data.y)),
+            ("tau", Json::num(0.5)),
+            ("lambda", Json::num(1e-2)),
+        ]))
+        .unwrap();
+    assert_eq!(fit.get("ok").and_then(Json::as_bool), Some(true), "{}", fit.to_string());
+    assert_eq!(fit.get("kkt_pass").and_then(Json::as_bool), Some(true));
+    let id = fit.get_str("model").unwrap().to_string();
+
+    // predictions at training points roughly track the median
+    let pred = client
+        .request(&Json::obj(vec![
+            ("cmd", Json::str("predict")),
+            ("model", Json::str(id.clone())),
+            ("x", matrix_json(&data.x)),
+        ]))
+        .unwrap();
+    assert_eq!(pred.get("ok").and_then(Json::as_bool), Some(true));
+    let rows = pred.get("pred").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].as_arr().unwrap().len(), 60);
+
+    // model listed, then dropped
+    let models = client.request(&Json::obj(vec![("cmd", Json::str("models"))])).unwrap();
+    assert!(models.to_string().contains(&id));
+    let drop = client
+        .request(&Json::obj(vec![("cmd", Json::str("drop")), ("model", Json::str(id))]))
+        .unwrap();
+    assert_eq!(drop.get("ok").and_then(Json::as_bool), Some(true));
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_share_registry() {
+    let server = spawn();
+    let addr = server.local_addr;
+    let mut rng = Rng::new(2);
+    let data = synth::sine_hetero(40, &mut rng);
+
+    // client A fits; client B predicts with A's model id
+    let mut a = Client::connect(addr).unwrap();
+    let fit = a
+        .request(&Json::obj(vec![
+            ("cmd", Json::str("fit")),
+            ("x", matrix_json(&data.x)),
+            ("y", Json::arr_f64(&data.y)),
+            ("tau", Json::num(0.3)),
+            ("lambda", Json::num(1e-2)),
+        ]))
+        .unwrap();
+    let id = fit.get_str("model").unwrap().to_string();
+
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let id = id.clone();
+            let x = matrix_json(&data.x);
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for _ in 0..5 {
+                    let p = c
+                        .request(&Json::obj(vec![
+                            ("cmd", Json::str("predict")),
+                            ("model", Json::str(id.clone())),
+                            ("x", x.clone()),
+                        ]))
+                        .unwrap();
+                    assert_eq!(p.get("ok").and_then(Json::as_bool), Some(true));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = a.request(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
+    assert_eq!(m.get_f64("predict_requests"), Some(20.0));
+    server.shutdown();
+}
+
+#[test]
+fn malformed_requests_get_errors_not_disconnects() {
+    let server = spawn();
+    let mut client = Client::connect(server.local_addr).unwrap();
+    for bad in [
+        "garbage",
+        r#"{"cmd":"fit"}"#,
+        r#"{"cmd":"fit","x":[[1],[2]],"y":[1],"tau":0.5,"lambda":0.1}"#, // length mismatch
+        r#"{"cmd":"predict","model":"nope","x":[[1]]}"#,
+        r#"{"cmd":"fit","x":[[1],[2]],"y":[1,2],"tau":2.0,"lambda":0.1}"#, // bad tau
+    ] {
+        let r = client.request(&Json::parse(r#"{"cmd":"ping"}"#).unwrap()).unwrap();
+        assert_eq!(r.get("pong").and_then(Json::as_bool), Some(true));
+        // send raw bad line through a fresh request
+        let resp = {
+            use std::io::{BufRead, Write};
+            let mut line = bad.to_string();
+            line.push('\n');
+            // poke at the client internals via a new connection
+            let stream = std::net::TcpStream::connect(server.local_addr).unwrap();
+            let mut w = stream.try_clone().unwrap();
+            w.write_all(line.as_bytes()).unwrap();
+            let mut r = std::io::BufReader::new(stream);
+            let mut out = String::new();
+            r.read_line(&mut out).unwrap();
+            Json::parse(out.trim()).unwrap()
+        };
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "{bad}");
+    }
+    server.shutdown();
+}

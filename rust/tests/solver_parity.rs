@@ -1,0 +1,114 @@
+//! Cross-solver exactness: fastkqr must match the independent IPM solver
+//! (the kernlab-class comparator) on the exact objective across a grid of
+//! (τ, λ, dataset) combinations, and NCKQR must never lose to the generic
+//! solvers — the paper's accuracy claim (Tables 1–6, "obj" columns).
+
+use fastkqr::baselines::{solve_kqr_ipm, solve_kqr_lbfgs, IpmOptions};
+use fastkqr::data::{benchmarks, synth, Rng};
+use fastkqr::kernel::{median_heuristic_sigma, Kernel};
+use fastkqr::kqr::KqrSolver;
+use fastkqr::nckqr::NckqrSolver;
+
+#[test]
+fn fastkqr_matches_ipm_across_grid() {
+    // 3 datasets × 3 τ × 3 λ
+    for (seed, n) in [(1u64, 45usize), (2, 60), (3, 35)] {
+        let mut rng = Rng::new(seed);
+        let d = synth::sine_hetero(n, &mut rng);
+        let sigma = median_heuristic_sigma(&d.x);
+        let solver = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma });
+        for tau in [0.1, 0.5, 0.9] {
+            for lam in [0.2, 0.02, 0.002] {
+                let fast = solver.fit(tau, lam).expect("fastkqr");
+                let ipm = solve_kqr_ipm(&solver.gram, &d.y, tau, lam, &IpmOptions::default())
+                    .expect("ipm");
+                let rel = (fast.objective - ipm.objective).abs() / (1.0 + ipm.objective);
+                assert!(
+                    rel < 1e-3,
+                    "seed={seed} tau={tau} lam={lam}: fast {} vs ipm {} (rel {rel:.2e})",
+                    fast.objective,
+                    ipm.objective
+                );
+                assert!(fast.kkt.pass, "certificate failed at tau={tau} lam={lam}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fastkqr_matches_ipm_on_benchmark_lookalikes() {
+    for (mut data, lam) in [(benchmarks::mcycle(5), 1e-2), (benchmarks::geyser(5), 1e-2)] {
+        data.standardize();
+        // subsample for test speed (y keeps its physical scale, which
+        // stresses the scale-aware tolerances)
+        let mut rng = Rng::new(9);
+        let idx = rng.permutation(data.n());
+        let data = data.subset(&idx[..80]);
+        let sigma = median_heuristic_sigma(&data.x);
+        let solver = KqrSolver::new(&data.x, &data.y, Kernel::Rbf { sigma });
+        let fast = solver.fit(0.5, lam).expect("fastkqr");
+        let ipm =
+            solve_kqr_ipm(&solver.gram, &data.y, 0.5, lam, &IpmOptions::default()).expect("ipm");
+        let rel = (fast.objective - ipm.objective).abs() / (1.0 + ipm.objective.abs());
+        assert!(
+            rel < 2e-3,
+            "{}: fast {} vs ipm {}",
+            data.name,
+            fast.objective,
+            ipm.objective
+        );
+    }
+}
+
+#[test]
+fn generic_solvers_never_beat_fastkqr() {
+    let mut rng = Rng::new(4);
+    let d = synth::yuan(60, &mut rng);
+    let sigma = median_heuristic_sigma(&d.x);
+    let solver = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma });
+    for tau in [0.25, 0.75] {
+        let fast = solver.fit(tau, 0.05).unwrap();
+        let lb = solve_kqr_lbfgs(&solver.gram, &d.y, tau, 0.05, 2000).unwrap();
+        assert!(
+            lb.objective >= fast.objective - 1e-7,
+            "tau={tau}: lbfgs {} beat exact {}",
+            lb.objective,
+            fast.objective
+        );
+    }
+}
+
+#[test]
+fn nckqr_exactness_and_monotone_crossing_penalty() {
+    let mut rng = Rng::new(6);
+    let d = synth::sine_hetero(50, &mut rng);
+    let sigma = median_heuristic_sigma(&d.x);
+    let kernel = Kernel::Rbf { sigma };
+    let taus = [0.1, 0.5, 0.9];
+    let nc = NckqrSolver::new(&d.x, &d.y, kernel, &taus);
+    // crossing count decreases with λ₁
+    let grid = fastkqr::linalg::Matrix::from_fn(100, 1, |i, _| i as f64 / 99.0);
+    let mut last_cross = usize::MAX;
+    for lam1 in [0.0, 1.0, 50.0] {
+        let fit = nc.fit(lam1, 1e-3).unwrap();
+        let c = fit.count_crossings(&grid, 1e-7);
+        assert!(c <= last_cross, "crossings increased with lam1={lam1}: {c} > {last_cross}");
+        last_cross = c;
+    }
+    assert_eq!(last_cross, 0, "strong penalty must remove crossings");
+}
+
+#[test]
+fn cv_pipeline_end_to_end_small() {
+    let mut rng = Rng::new(8);
+    let data = synth::yuan(60, &mut rng);
+    let kernel = Kernel::Rbf { sigma: median_heuristic_sigma(&data.x) };
+    let solver = KqrSolver::new(&data.x, &data.y, kernel.clone());
+    let lams = solver.lambda_grid(6, 1.0, 1e-4);
+    let res =
+        fastkqr::cv::cross_validate(&data, &kernel, 0.5, &lams, 3, &solver.opts, &mut rng)
+            .unwrap();
+    assert!(res.cv_loss.iter().all(|v| v.is_finite()));
+    let fit = solver.fit(0.5, res.best_lambda).unwrap();
+    assert!(fit.kkt.pass);
+}

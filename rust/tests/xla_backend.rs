@@ -1,0 +1,125 @@
+//! Integration tests for the PJRT runtime: the AOT artifact must
+//! reproduce the native APGD recurrence and plug into the full solver.
+//!
+//! Requires `make artifacts` (skipped gracefully otherwise so plain
+//! `cargo test` works before the first artifact build).
+
+use fastkqr::backend::{Backend, NativeBackend};
+use fastkqr::data::{synth, Rng};
+use fastkqr::kernel::{median_heuristic_sigma, Kernel};
+use fastkqr::kqr::apgd::ApgdState;
+use fastkqr::kqr::KqrSolver;
+use fastkqr::runtime::XlaBackend;
+use fastkqr::spectral::SpectralPlan;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn make_solver(n: usize, seed: u64) -> KqrSolver {
+    let mut rng = Rng::new(seed);
+    let d = synth::sine_hetero(n, &mut rng);
+    let sigma = median_heuristic_sigma(&d.x);
+    KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma })
+}
+
+#[test]
+fn xla_chunk_matches_native_elementwise() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let solver = make_solver(50, 1); // padded to the n=64 artifact
+    let plan = SpectralPlan::new(&solver.basis, 0.25, 0.02);
+    let tau = 0.3;
+    let chunk = 25;
+
+    let mut native = NativeBackend::new();
+    let mut s_native = ApgdState::zeros(50);
+    let mut xb = XlaBackend::from_default_dir().expect("artifacts");
+    let mut s_xla = ApgdState::zeros(50);
+
+    for round in 0..8 {
+        let c_native =
+            native.apgd_chunk(&solver.basis, &plan, &solver.y, tau, &mut s_native, chunk);
+        let c_xla = xb.apgd_chunk(&solver.basis, &plan, &solver.y, tau, &mut s_xla, chunk);
+        assert!(
+            (c_native - c_xla).abs() <= 1e-9 * (1.0 + c_native.abs()),
+            "round {round}: conv native {c_native} vs xla {c_xla}"
+        );
+        assert!(
+            (s_native.b - s_xla.b).abs() < 1e-9,
+            "round {round}: b {} vs {}",
+            s_native.b,
+            s_xla.b
+        );
+        for i in 0..50 {
+            assert!(
+                (s_native.beta[i] - s_xla.beta[i]).abs() < 1e-9,
+                "round {round} beta[{i}]: {} vs {}",
+                s_native.beta[i],
+                s_xla.beta[i]
+            );
+        }
+        assert!((s_native.ck - s_xla.ck).abs() < 1e-9);
+    }
+    assert_eq!(xb.executions, 8);
+}
+
+#[test]
+fn full_fit_through_xla_backend_matches_native() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let solver = make_solver(40, 2);
+    let tau = 0.5;
+    let lam = 0.02;
+    let fit_native = solver.fit(tau, lam).expect("native fit");
+    let mut xb = XlaBackend::from_default_dir().expect("artifacts");
+    let mut state = ApgdState::zeros(40);
+    let fit_xla = solver.fit_warm(tau, lam, &mut state, &mut xb).expect("xla fit");
+    assert!(fit_xla.kkt.pass, "{:?}", fit_xla.kkt);
+    assert!(
+        (fit_native.objective - fit_xla.objective).abs() < 1e-8 * (1.0 + fit_native.objective),
+        "native {} vs xla {}",
+        fit_native.objective,
+        fit_xla.objective
+    );
+    for i in 0..40 {
+        assert!((fit_native.alpha[i] - fit_xla.alpha[i]).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn xla_path_fit_warm_started() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let solver = make_solver(30, 3);
+    let lams = solver.lambda_grid(4, 0.5, 1e-2);
+    let mut xb = XlaBackend::from_default_dir().expect("artifacts");
+    let fits = solver.fit_path_with_backend(0.5, &lams, &mut xb).expect("path");
+    assert_eq!(fits.len(), 4);
+    for f in &fits {
+        assert!(f.kkt.pass, "lam={}: {:?}", f.lam, f.kkt);
+    }
+    // compile once, execute many
+    assert!(xb.executions >= 4);
+}
+
+#[test]
+fn chunk_mismatch_is_rejected() {
+    if !artifacts_available() {
+        return;
+    }
+    let solver = make_solver(20, 4);
+    let plan = SpectralPlan::new(&solver.basis, 0.25, 0.02);
+    let mut xb = XlaBackend::from_default_dir().expect("artifacts");
+    let mut s = ApgdState::zeros(20);
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        xb.apgd_chunk(&solver.basis, &plan, &solver.y, 0.5, &mut s, 7)
+    }));
+    assert!(res.is_err(), "wrong chunk size must be rejected");
+}
