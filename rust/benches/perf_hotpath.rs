@@ -1,6 +1,10 @@
-//! Hot-path microbenchmarks: GEMV bandwidth, APGD chunk (native vs XLA),
-//! eigendecomposition, end-to-end fit latency. Feeds EXPERIMENTS.md §Perf.
+//! Hot-path microbenchmarks: GEMV bandwidth, the parallel substrate
+//! (serial vs row-blocked multi-thread GEMV and Gram construction — the
+//! engine-layer lever; target ≥ 2x at n = 2000 on ≥ 4 cores), APGD chunk
+//! (native vs XLA), eigendecomposition, end-to-end fit latency. Feeds
+//! EXPERIMENTS.md §Perf.
 use fastkqr::experiments::perf;
+use fastkqr::linalg::par;
 use fastkqr::util::Args;
 
 fn main() {
@@ -10,6 +14,22 @@ fn main() {
     for n in args.get_usize_list("ns", &[128, 256, 512, 1024]) {
         let (stats, gbps) = perf::gemv_throughput(n, reps);
         println!("{}  ({gbps:.2} GB/s effective)", stats.report_line());
+    }
+    println!(
+        "-- parallel substrate: serial vs {} threads (FASTKQR_THREADS to override) --",
+        par::global().threads
+    );
+    for n in args.get_usize_list("par-ns", &[512, 1024, 2000]) {
+        let (serial, parallel, speedup, workers) = perf::gemv_parallel_speedup(n, reps.min(10));
+        println!("{}", serial.report_line());
+        println!("{}", parallel.report_line());
+        println!("   gemv n={n}: {speedup:.2}x speedup on {workers} threads");
+    }
+    for n in args.get_usize_list("gram-ns", &[1000, 2000]) {
+        let (serial, parallel, speedup, workers) = perf::gram_parallel_speedup(n, reps.min(5));
+        println!("{}", serial.report_line());
+        println!("{}", parallel.report_line());
+        println!("   gram n={n}: {speedup:.2}x speedup on {workers} threads");
     }
     println!("-- APGD chunk: native vs AOT/PJRT --");
     for n in args.get_usize_list("chunk-ns", &[64, 256, 512]) {

@@ -8,9 +8,11 @@
 //! That is what this module provides:
 //!
 //! - [`job`]: job specs (single fit, warm-started λ path, NCKQR, CV);
-//! - [`scheduler`]: a worker pool with warm-start-aware batch ordering —
-//!   jobs on the same dataset are grouped so each worker reuses the
-//!   eigendecomposition and solver state across the λ grid;
+//! - [`scheduler`]: a worker pool with warm-start-aware batch ordering;
+//!   solver setup goes through the shared [`crate::engine::FitEngine`],
+//!   so jobs on the same dataset — adjacent *or concurrent* — reuse one
+//!   cached eigendecomposition, and per-worker APGD state warm-starts
+//!   the λ grid;
 //! - [`registry`]: a concurrent model store for the predict path;
 //! - [`metrics`]: atomic counters surfaced by the server and CLI;
 //! - [`server`]/[`protocol`]: a threaded TCP line-JSON service

@@ -17,8 +17,9 @@
 
 use super::metrics::Metrics;
 use super::registry::{ModelRegistry, StoredModel};
+use crate::engine::{CacheMetrics, FitEngine};
 use crate::kernel::{median_heuristic_sigma, Kernel};
-use crate::kqr::{KqrSolver, SolveOptions};
+use crate::kqr::SolveOptions;
 use crate::linalg::Matrix;
 use crate::nckqr::NckqrSolver;
 use crate::util::Json;
@@ -30,6 +31,9 @@ pub struct ProtocolState {
     pub registry: Arc<ModelRegistry>,
     pub metrics: Arc<Metrics>,
     pub opts: SolveOptions,
+    /// All fit requests go through the engine: concurrent connections
+    /// fitting the same payload share one cached Gram/eigenbasis.
+    pub engine: Arc<FitEngine>,
 }
 
 /// Parse an n×p matrix from a JSON array of arrays.
@@ -107,7 +111,25 @@ fn dispatch(state: &ProtocolState, req: &Json) -> Result<Json> {
             ("pong", Json::Bool(true)),
             ("version", Json::str(crate::version())),
         ])),
-        "metrics" => Ok(state.metrics.to_json()),
+        "metrics" => {
+            let mut m = state.metrics.to_json();
+            if let Json::Obj(map) = &mut m {
+                let c = &state.engine.cache.metrics;
+                map.insert(
+                    "gram_cache_requests".into(),
+                    Json::num(CacheMetrics::get(&c.requests) as f64),
+                );
+                map.insert(
+                    "gram_cache_hits".into(),
+                    Json::num(CacheMetrics::get(&c.hits) as f64),
+                );
+                map.insert(
+                    "gram_cache_decompositions".into(),
+                    Json::num(CacheMetrics::get(&c.decompositions) as f64),
+                );
+            }
+            Ok(m)
+        }
         "models" => Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
             (
@@ -132,7 +154,7 @@ fn dispatch(state: &ProtocolState, req: &Json) -> Result<Json> {
             let tau = req.get_f64("tau").ok_or_else(|| anyhow!("missing 'tau'"))?;
             let lambda = req.get_f64("lambda").ok_or_else(|| anyhow!("missing 'lambda'"))?;
             let kernel = kernel_from_json(req.get("kernel"), &x)?;
-            let solver = KqrSolver::new(&x, &y, kernel).with_options(state.opts.clone());
+            let solver = state.engine.solver_with_options(&x, &y, &kernel, state.opts.clone());
             let fit = solver.fit(tau, lambda)?;
             Metrics::incr(&state.metrics.fits_total);
             let resp = Json::obj(vec![
@@ -189,7 +211,24 @@ mod tests {
             registry: Arc::new(ModelRegistry::new()),
             metrics: Arc::new(Metrics::new()),
             opts: SolveOptions::default(),
+            engine: Arc::new(FitEngine::new()),
         }
+    }
+
+    #[test]
+    fn repeated_fit_payloads_share_one_decomposition() {
+        let st = state();
+        let req = r#"{"cmd":"fit","x":[[0.0],[0.2],[0.4],[0.6],[0.8],[1.0],[0.1],[0.9]],
+                      "y":[0.0,0.6,0.9,0.9,0.6,0.0,0.3,0.3],"tau":0.5,"lambda":0.01}"#
+            .replace('\n', " ");
+        for _ in 0..3 {
+            let r = handle_line(&st, &req);
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{}", r.to_string());
+        }
+        assert_eq!(CacheMetrics::get(&st.engine.cache.metrics.decompositions), 1);
+        let m = handle_line(&st, r#"{"cmd":"metrics"}"#);
+        assert_eq!(m.get_f64("gram_cache_decompositions"), Some(1.0));
+        assert_eq!(m.get_f64("gram_cache_hits"), Some(2.0));
     }
 
     #[test]

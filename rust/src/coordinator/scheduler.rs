@@ -1,18 +1,25 @@
-//! Warm-start-aware fit-job scheduler.
+//! Warm-start-aware fit-job scheduler on the shared fit engine.
 //!
 //! Workers pull jobs from a shared queue. `submit_batch` orders a batch
 //! so that jobs sharing a dataset are adjacent, grouped by τ, with λ
-//! descending — the order in which `KqrSolver`'s warm starts (and the
-//! shared eigendecomposition) pay off. A worker detects consecutive jobs
-//! on the same dataset and reuses its solver instead of re-decomposing.
+//! descending — the order in which warm starts pay off. Solver setup
+//! (Gram matrix + eigenbasis) goes through the scheduler's
+//! [`FitEngine`]: **concurrent** jobs on the same dataset share one
+//! cached basis (the cache coalesces in-flight computations, so two
+//! workers decomposing the same dataset at the same time still cost one
+//! eigendecomposition), replacing the old per-worker "consecutive jobs
+//! on one worker" heuristic. Warm APGD state stays per-worker, keyed by
+//! (dataset fingerprint, τ).
 
 use super::job::{FitJob, JobOutcome, JobSpec};
 use super::metrics::Metrics;
 use crate::backend::NativeBackend;
-use crate::cv::cross_validate;
+use crate::cv::cross_validate_on;
 use crate::data::Rng;
+use crate::engine::{fingerprint, Fingerprint, FitEngine};
 use crate::kqr::apgd::ApgdState;
-use crate::kqr::{KqrSolver, SolveOptions};
+use crate::kqr::SolveOptions;
+use crate::linalg::par;
 use crate::nckqr::NckqrSolver;
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -35,6 +42,9 @@ pub struct Scheduler {
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
     pub opts: SolveOptions,
+    /// The engine all workers share: one (Gram, basis) per dataset
+    /// fingerprint across the whole pool.
+    pub engine: Arc<FitEngine>,
 }
 
 impl Scheduler {
@@ -43,6 +53,16 @@ impl Scheduler {
     }
 
     pub fn with_options(n_workers: usize, opts: SolveOptions) -> Scheduler {
+        Scheduler::with_engine(n_workers, opts, FitEngine::global().clone())
+    }
+
+    /// Run on an explicit engine (tests use a fresh one to assert cache
+    /// accounting; embedders can share an engine with a server).
+    pub fn with_engine(
+        n_workers: usize,
+        opts: SolveOptions,
+        engine: Arc<FitEngine>,
+    ) -> Scheduler {
         assert!(n_workers >= 1);
         let queue = Arc::new(Queue {
             jobs: Mutex::new(VecDeque::new()),
@@ -51,18 +71,23 @@ impl Scheduler {
         });
         let metrics = Arc::new(Metrics::new());
         let mut workers = Vec::new();
+        // With several workers the pool itself is the parallel dimension:
+        // each worker runs its solves with intra-op (GEMV) parallelism
+        // disabled so W workers never fan out into W × threads.
+        let multi_worker = n_workers > 1;
         for wid in 0..n_workers {
             let q = queue.clone();
             let m = metrics.clone();
             let o = opts.clone();
+            let e = engine.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("fastkqr-worker-{wid}"))
-                    .spawn(move || worker_loop(q, m, o))
+                    .spawn(move || worker_loop(q, m, o, e, multi_worker))
                     .expect("spawn worker"),
             );
         }
-        Scheduler { queue, workers, metrics, opts }
+        Scheduler { queue, workers, metrics, opts, engine }
     }
 
     /// Submit one job; the receiver yields its result.
@@ -116,11 +141,22 @@ impl Scheduler {
     }
 }
 
-fn worker_loop(queue: Arc<Queue>, metrics: Arc<Metrics>, opts: SolveOptions) {
-    // Per-worker solver cache: consecutive jobs on the same dataset reuse
-    // the Gram matrix + eigenbasis (and τ-grouped warm starts).
-    let mut cached: Option<((usize, usize, String), KqrSolver)> = None;
-    let mut warm: Option<(f64, ApgdState)> = None; // keyed by tau
+/// Per-worker warm-start state: APGD iterate keyed by (dataset
+/// fingerprint, τ).
+struct WarmState {
+    key: Fingerprint,
+    tau: f64,
+    state: ApgdState,
+}
+
+fn worker_loop(
+    queue: Arc<Queue>,
+    metrics: Arc<Metrics>,
+    opts: SolveOptions,
+    engine: Arc<FitEngine>,
+    multi_worker: bool,
+) {
+    let mut warm: Option<WarmState> = None;
     loop {
         let item = {
             let mut jobs = queue.jobs.lock().unwrap();
@@ -136,7 +172,11 @@ fn worker_loop(queue: Arc<Queue>, metrics: Arc<Metrics>, opts: SolveOptions) {
         };
         let Some((job, tx)) = item else { return };
         let t0 = Instant::now();
-        let result = run_job(&job, &opts, &mut cached, &mut warm, &metrics);
+        let result = if multi_worker {
+            par::serial_scope(|| run_job(&job, &opts, &engine, &mut warm, &metrics))
+        } else {
+            run_job(&job, &opts, &engine, &mut warm, &metrics)
+        };
         Metrics::add(&metrics.solver_micros, t0.elapsed().as_micros() as u64);
         match &result {
             Ok(_) => Metrics::incr(&metrics.jobs_completed),
@@ -150,26 +190,37 @@ fn worker_loop(queue: Arc<Queue>, metrics: Arc<Metrics>, opts: SolveOptions) {
 fn run_job(
     job: &FitJob,
     opts: &SolveOptions,
-    cached: &mut Option<((usize, usize, String), KqrSolver)>,
-    warm: &mut Option<(f64, ApgdState)>,
+    engine: &FitEngine,
+    warm: &mut Option<WarmState>,
     metrics: &Metrics,
 ) -> anyhow::Result<JobOutcome> {
     match &job.spec {
         JobSpec::Kqr { tau, lambda } => {
-            let solver = fetch_solver(job, opts, cached, warm);
+            let key = fingerprint(&job.dataset.x, &job.dataset.y, &job.kernel);
+            let solver = engine.solver_with_options(
+                &job.dataset.x,
+                &job.dataset.y,
+                &job.kernel,
+                opts.clone(),
+            );
             let mut backend = NativeBackend::new();
             let mut state = match warm.take() {
-                Some((wt, st)) if wt == *tau => st,
+                Some(w) if w.key == key && w.tau == *tau => w.state,
                 _ => ApgdState::zeros(solver.n()),
             };
             let fit = solver.fit_warm(*tau, *lambda, &mut state, &mut backend)?;
-            *warm = Some((*tau, state));
+            *warm = Some(WarmState { key, tau: *tau, state });
             Metrics::incr(&metrics.fits_total);
             Metrics::add(&metrics.apgd_iters_total, fit.apgd_iters as u64);
             Ok(JobOutcome::Kqr(vec![fit]))
         }
         JobSpec::KqrPath { tau, lambdas } => {
-            let solver = fetch_solver(job, opts, cached, warm);
+            let solver = engine.solver_with_options(
+                &job.dataset.x,
+                &job.dataset.y,
+                &job.kernel,
+                opts.clone(),
+            );
             let fits = solver.fit_path(*tau, lambdas)?;
             Metrics::add(&metrics.fits_total, fits.len() as u64);
             Metrics::add(
@@ -186,30 +237,25 @@ fn run_job(
         }
         JobSpec::Cv { tau, lambdas, folds, seed } => {
             let mut rng = Rng::new(*seed);
-            let res =
-                cross_validate(&job.dataset, &job.kernel, *tau, lambdas, *folds, opts, &mut rng)?;
-            Metrics::add(&metrics.fits_total, (lambdas.len() * folds) as u64);
+            let res = cross_validate_on(
+                engine,
+                &job.dataset,
+                &job.kernel,
+                *tau,
+                lambdas,
+                *folds,
+                opts,
+                &mut rng,
+            )?;
+            // fold path fits + the final full-data refit path (λ_max..λ*)
+            let refit_fits = res.best_index + 1;
+            Metrics::add(
+                &metrics.fits_total,
+                (lambdas.len() * folds + refit_fits) as u64,
+            );
             Ok(JobOutcome::Cv(res))
         }
     }
-}
-
-/// Get (or build) the cached solver for this job's dataset.
-fn fetch_solver<'a>(
-    job: &FitJob,
-    opts: &SolveOptions,
-    cached: &'a mut Option<((usize, usize, String), KqrSolver)>,
-    warm: &mut Option<(f64, ApgdState)>,
-) -> &'a KqrSolver {
-    let key = job.dataset_key();
-    let hit = matches!(cached, Some((k, _)) if *k == key);
-    if !hit {
-        let solver = KqrSolver::new(&job.dataset.x, &job.dataset.y, job.kernel.clone())
-            .with_options(opts.clone());
-        *cached = Some((key, solver));
-        *warm = None;
-    }
-    &cached.as_ref().unwrap().1
 }
 
 #[cfg(test)]
@@ -294,6 +340,26 @@ mod tests {
         let (_, res) = rx.recv().unwrap();
         assert!(res.is_err());
         assert_eq!(Metrics::get(&sched.metrics.jobs_failed), 1);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn bad_cv_fold_count_errors_instead_of_panicking() {
+        // `folds: 1` is reachable from server-supplied job specs; it must
+        // surface as a job error, not kill the worker thread.
+        let sched = Scheduler::new(1);
+        let rx = sched.submit(make_job(
+            4,
+            15,
+            8,
+            JobSpec::Cv { tau: 0.5, lambdas: vec![0.1], folds: 1, seed: 1 },
+        ));
+        let (_, res) = rx.recv().unwrap();
+        assert!(res.is_err());
+        assert_eq!(Metrics::get(&sched.metrics.jobs_failed), 1);
+        // the worker is still alive and serves the next job
+        let rx = sched.submit(make_job(5, 15, 8, JobSpec::Kqr { tau: 0.5, lambda: 0.1 }));
+        assert!(rx.recv().unwrap().1.is_ok());
         sched.shutdown();
     }
 }

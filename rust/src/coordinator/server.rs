@@ -50,6 +50,9 @@ impl Server {
             registry: registry.clone(),
             metrics: metrics.clone(),
             opts: config.opts,
+            // the process-global engine: concurrent connections (and any
+            // co-located scheduler) share one Gram/basis per dataset
+            engine: crate::engine::FitEngine::global().clone(),
         });
         let stop2 = stop.clone();
         let accept_thread = std::thread::Builder::new()
@@ -151,6 +154,10 @@ mod tests {
 
     #[test]
     fn spawn_ping_shutdown() {
+        if std::net::TcpListener::bind("127.0.0.1:0").is_err() {
+            eprintln!("skipping: no loopback TCP available in this environment");
+            return;
+        }
         let server = Server::spawn(ServerConfig {
             addr: "127.0.0.1:0".to_string(),
             opts: SolveOptions::default(),

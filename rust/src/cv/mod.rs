@@ -1,17 +1,23 @@
-//! k-fold cross validation and λ-grid search, warm-started per fold.
+//! k-fold cross validation and λ-grid search on the fit engine.
 //!
 //! The paper's timing protocol (Tables 1–6) fits a 50-value λ path with
 //! 5-fold CV and reports the whole wall time plus the objective at the
-//! CV-selected λ. This module implements exactly that loop on top of
-//! `KqrSolver::fit_path` — each fold builds its own Gram matrix and
-//! eigenbasis, fits the full warm-started path, and scores held-out
-//! pinball loss.
+//! CV-selected λ. This module implements that loop on top of
+//! [`FitEngine`]: each fold's (Gram, eigenbasis) comes from the engine's
+//! content-addressed cache (so re-running CV on the same data and fold
+//! assignment is free of eigendecompositions), folds run in parallel on
+//! scoped threads bounded by the engine's concurrency budget (with
+//! intra-op GEMV parallelism disabled inside each fold to avoid
+//! oversubscription), and the winning λ gets a final warm-started refit
+//! on the full data.
 
 use crate::data::{Dataset, Rng};
+use crate::engine::FitEngine;
 use crate::kernel::Kernel;
-use crate::kqr::{KqrSolver, SolveOptions};
+use crate::kqr::{KqrFit, SolveOptions};
+use crate::linalg::par;
 use crate::smooth::pinball_loss;
-use anyhow::Result;
+use anyhow::{bail, ensure, Result};
 
 /// Outcome of a cross-validated path fit.
 #[derive(Clone, Debug)]
@@ -23,20 +29,30 @@ pub struct CvResult {
     /// Index of the winning λ.
     pub best_index: usize,
     pub best_lambda: f64,
+    /// Final fit at the selected λ on the **full** data, warm-started
+    /// down the path (and sharing the engine-cached full-data basis).
+    pub refit: Option<KqrFit>,
 }
 
 /// Assign each of `n` indices to one of `k` folds (balanced, shuffled).
-pub fn fold_assignment(n: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
-    assert!(k >= 2 && k <= n);
+///
+/// Errors (rather than panicking) on `k < 2` or `k > n`: fold counts
+/// arrive from coordinator job specs and server payloads, so bad input is
+/// an expected runtime condition, not a programmer bug.
+pub fn fold_assignment(n: usize, k: usize, rng: &mut Rng) -> Result<Vec<usize>> {
+    if k < 2 || k > n {
+        bail!("fold_assignment: need 2 <= k <= n, got k={k}, n={n}");
+    }
     let perm = rng.permutation(n);
     let mut folds = vec![0usize; n];
     for (pos, &idx) in perm.iter().enumerate() {
         folds[idx] = pos % k;
     }
-    folds
+    Ok(folds)
 }
 
-/// k-fold CV over a descending λ grid at quantile level τ.
+/// k-fold CV over a descending λ grid at quantile level τ, on the
+/// process-global [`FitEngine`].
 pub fn cross_validate(
     data: &Dataset,
     kernel: &Kernel,
@@ -46,20 +62,88 @@ pub fn cross_validate(
     opts: &SolveOptions,
     rng: &mut Rng,
 ) -> Result<CvResult> {
+    cross_validate_on(FitEngine::global(), data, kernel, tau, lambdas, k, opts, rng)
+}
+
+/// k-fold CV on an explicit engine (fold bases and the full-data refit
+/// basis are served from — and deposited into — its cache; folds run on
+/// its thread budget).
+#[allow(clippy::too_many_arguments)]
+pub fn cross_validate_on(
+    engine: &FitEngine,
+    data: &Dataset,
+    kernel: &Kernel,
+    tau: f64,
+    lambdas: &[f64],
+    k: usize,
+    opts: &SolveOptions,
+    rng: &mut Rng,
+) -> Result<CvResult> {
+    ensure!(!lambdas.is_empty(), "cross_validate: empty lambda grid");
     let n = data.n();
-    let folds = fold_assignment(n, k, rng);
+    let assignment = fold_assignment(n, k, rng)?;
+    let splits: Vec<(Dataset, Dataset)> = (0..k)
+        .map(|fold| {
+            let train_idx: Vec<usize> =
+                (0..n).filter(|i| assignment[*i] != fold).collect();
+            let test_idx: Vec<usize> = (0..n).filter(|i| assignment[*i] == fold).collect();
+            (data.subset(&train_idx), data.subset(&test_idx))
+        })
+        .collect();
+
+    // When already inside a serial scope (e.g. a multi-worker scheduler
+    // job), don't fan out further — the outer level owns the parallelism.
+    let workers = if par::in_serial_scope() {
+        1
+    } else {
+        engine.config.par.threads.min(k).max(1)
+    };
+    // Fold solves ALWAYS run with intra-op parallelism disabled — in the
+    // parallel branch to avoid oversubscription, and in the serial branch
+    // so fold numerics are identical whatever the engine's thread budget
+    // (gemv_t re-associates its reduction when parallel, so letting it
+    // dispatch would break serial-vs-parallel CV parity at large n).
+    let fold_results: Vec<Result<Vec<f64>>> = if workers > 1 {
+        // Chunk the folds onto scoped threads: at most `workers` run at a
+        // time.
+        let chunk = (k + workers - 1) / workers;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = splits
+                .chunks(chunk)
+                .map(|split_chunk| {
+                    s.spawn(move || {
+                        split_chunk
+                            .iter()
+                            .map(|(tr, te)| {
+                                par::serial_scope(|| {
+                                    fold_losses(engine, tr, te, kernel, tau, lambdas, opts)
+                                })
+                            })
+                            .collect::<Vec<Result<Vec<f64>>>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("cv fold worker panicked"))
+                .collect()
+        })
+    } else {
+        splits
+            .iter()
+            .map(|(tr, te)| {
+                par::serial_scope(|| fold_losses(engine, tr, te, kernel, tau, lambdas, opts))
+            })
+            .collect()
+    };
+
+    // Deterministic reduction: folds are summed in fold order regardless
+    // of completion order, so parallel CV reproduces serial CV exactly.
     let mut loss_sum = vec![0.0f64; lambdas.len()];
-    for fold in 0..k {
-        let train_idx: Vec<usize> = (0..n).filter(|i| folds[*i] != fold).collect();
-        let test_idx: Vec<usize> = (0..n).filter(|i| folds[*i] == fold).collect();
-        let train = data.subset(&train_idx);
-        let test = data.subset(&test_idx);
-        let solver = KqrSolver::new(&train.x, &train.y, kernel.clone())
-            .with_options(opts.clone());
-        let path = solver.fit_path(tau, lambdas)?;
-        for (li, fit) in path.iter().enumerate() {
-            let preds = fit.predict(&test.x);
-            loss_sum[li] += pinball_loss(&test.y, &preds, tau);
+    for r in fold_results {
+        let losses = r?;
+        for (li, v) in losses.iter().enumerate() {
+            loss_sum[li] += v;
         }
     }
     let cv_loss: Vec<f64> = loss_sum.iter().map(|s| s / k as f64).collect();
@@ -69,23 +153,54 @@ pub fn cross_validate(
         .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
         .map(|(i, _)| i)
         .unwrap();
+
+    // Final refit at the selected λ on the full data, warm-started down
+    // the (truncated) path; the full-data basis lands in the cache so a
+    // follow-up predict/fit job on the same dataset is free of setup.
+    let refit = {
+        let solver = engine.solver_with_options(&data.x, &data.y, kernel, opts.clone());
+        let path: Vec<f64> = lambdas[..=best_index].to_vec();
+        let mut fits = solver.fit_path(tau, &path)?;
+        fits.pop()
+    };
+
     Ok(CvResult {
         lambdas: lambdas.to_vec(),
         cv_loss,
         best_index,
         best_lambda: lambdas[best_index],
+        refit,
     })
+}
+
+/// Held-out pinball losses of one fold's warm-started λ path.
+fn fold_losses(
+    engine: &FitEngine,
+    train: &Dataset,
+    test: &Dataset,
+    kernel: &Kernel,
+    tau: f64,
+    lambdas: &[f64],
+    opts: &SolveOptions,
+) -> Result<Vec<f64>> {
+    let solver = engine.solver_with_options(&train.x, &train.y, kernel, opts.clone());
+    let path = solver.fit_path(tau, lambdas)?;
+    Ok(path
+        .iter()
+        .map(|fit| pinball_loss(&test.y, &fit.predict(&test.x), tau))
+        .collect())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synth;
+    use crate::kqr::KqrSolver;
 
     #[test]
     fn folds_are_balanced_partition() {
         let mut rng = Rng::new(1);
-        let folds = fold_assignment(23, 5, &mut rng);
+        let folds = fold_assignment(23, 5, &mut rng).unwrap();
         assert_eq!(folds.len(), 23);
         let mut counts = vec![0usize; 5];
         for &f in &folds {
@@ -93,6 +208,31 @@ mod tests {
             counts[f] += 1;
         }
         assert!(counts.iter().all(|&c| c == 4 || c == 5));
+    }
+
+    #[test]
+    fn fold_assignment_rejects_bad_k() {
+        let mut rng = Rng::new(2);
+        assert!(fold_assignment(10, 0, &mut rng).is_err());
+        assert!(fold_assignment(10, 1, &mut rng).is_err());
+        assert!(fold_assignment(10, 11, &mut rng).is_err());
+        assert!(fold_assignment(10, 10, &mut rng).is_ok());
+    }
+
+    #[test]
+    fn cv_rejects_bad_inputs_without_panicking() {
+        let mut rng = Rng::new(3);
+        let data = synth::sine_hetero(20, &mut rng);
+        let kernel = Kernel::Rbf { sigma: 1.0 };
+        let opts = SolveOptions::default();
+        assert!(
+            cross_validate(&data, &kernel, 0.5, &[0.1], 1, &opts, &mut rng).is_err(),
+            "k=1 must be an Err"
+        );
+        assert!(
+            cross_validate(&data, &kernel, 0.5, &[], 3, &opts, &mut rng).is_err(),
+            "empty grid must be an Err"
+        );
     }
 
     #[test]
@@ -111,5 +251,48 @@ mod tests {
         // neither the most extreme over- nor under-smoothed end should win
         assert!(res.best_index > 0, "picked λ_max");
         assert_eq!(res.best_lambda, lams[res.best_index]);
+        // the refit is at the winning λ, on the full data
+        let refit = res.refit.expect("refit present");
+        assert_eq!(refit.lam, res.best_lambda);
+        assert_eq!(refit.n_train(), 90);
+    }
+
+    #[test]
+    fn parallel_and_serial_cv_agree_exactly() {
+        use crate::engine::{EngineConfig, FitEngine};
+        use crate::linalg::Parallelism;
+        let mut rng = Rng::new(7);
+        let data = synth::sine_hetero(60, &mut rng);
+        let kernel = Kernel::Rbf { sigma: 0.5 };
+        let lams = [0.5, 0.05, 0.005];
+        let opts = SolveOptions::cv_preset();
+
+        let serial_engine = FitEngine::with_config(EngineConfig {
+            par: Parallelism::serial(),
+            ..EngineConfig::default()
+        });
+        let mut rng_a = Rng::new(11);
+        let a = cross_validate_on(
+            &serial_engine, &data, &kernel, 0.3, &lams, 3, &opts, &mut rng_a,
+        )
+        .unwrap();
+
+        let par_engine = FitEngine::with_config(EngineConfig {
+            par: Parallelism::with_threads(3),
+            ..EngineConfig::default()
+        });
+        let mut rng_b = Rng::new(11);
+        let b = cross_validate_on(
+            &par_engine, &data, &kernel, 0.3, &lams, 3, &opts, &mut rng_b,
+        )
+        .unwrap();
+
+        assert_eq!(a.best_index, b.best_index);
+        for (va, vb) in a.cv_loss.iter().zip(&b.cv_loss) {
+            assert!(
+                (va - vb).abs() < 1e-12,
+                "parallel CV diverged from serial: {va} vs {vb}"
+            );
+        }
     }
 }

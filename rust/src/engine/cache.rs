@@ -1,0 +1,344 @@
+//! Content-addressed (Gram, eigenbasis) cache.
+//!
+//! The paper's entire speed story is reuse: one O(n³) `K = UΛUᵀ`
+//! amortized over every (γ, λ, τ) combination. [`GramCache`] extends that
+//! reuse across *solvers*: any consumer (CV folds, multi-τ grids,
+//! concurrent coordinator jobs, the TCP server) that fits on the same
+//! (dataset, kernel) pair gets the same `Arc`-shared Gram matrix and
+//! [`SpectralBasis`], and the eigendecomposition runs **exactly once per
+//! fingerprint per process** even under concurrent requests — late
+//! arrivals block on the in-flight computation instead of repeating it.
+//!
+//! Keys are content fingerprints (FNV-1a over the raw f64 bit patterns of
+//! X, y and the kernel parameters — the same "hash the exact bits"
+//! discipline as `data/rng.rs`'s deterministic seeding), so two identical
+//! payloads arriving over the wire share an entry even though they are
+//! different allocations.
+
+use crate::kernel::Kernel;
+use crate::linalg::Matrix;
+use crate::spectral::SpectralBasis;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Cached per-(dataset, kernel) factorization: the Gram matrix (needed by
+/// the eq.-(8) projection solves) and its eigenbasis.
+#[derive(Debug)]
+pub struct BasisEntry {
+    pub gram: Arc<Matrix>,
+    pub basis: Arc<SpectralBasis>,
+}
+
+/// Cache accounting (relaxed atomics; read with [`CacheMetrics::get`]).
+#[derive(Debug, Default)]
+pub struct CacheMetrics {
+    /// Total `get_or_compute` calls.
+    pub requests: AtomicU64,
+    /// Requests served from an existing (or in-flight) entry.
+    pub hits: AtomicU64,
+    /// Requests that computed the entry themselves.
+    pub misses: AtomicU64,
+    /// Eigendecompositions actually performed (== misses; kept separate
+    /// so tests state their invariant directly).
+    pub decompositions: AtomicU64,
+    /// Entries dropped by the capacity bound.
+    pub evictions: AtomicU64,
+}
+
+impl CacheMetrics {
+    pub fn get(counter: &AtomicU64) -> u64 {
+        counter.load(Ordering::Relaxed)
+    }
+
+    fn incr(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// 64-bit FNV-1a streaming hasher (deterministic across runs, unlike
+/// `std::collections` hashing).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    #[inline]
+    fn byte(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x100000001b3);
+    }
+
+    #[inline]
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Chained SplitMix64 accumulator (the same mixer `data/rng.rs` uses for
+/// seeding) — structurally independent of FNV-1a, so a collision must
+/// defeat both constructions *and* match the stored shape.
+struct Mix(u64);
+
+impl Mix {
+    fn new() -> Mix {
+        Mix(0x9E3779B97F4A7C15)
+    }
+
+    #[inline]
+    fn u64(&mut self, v: u64) {
+        let mut z = self.0 ^ v.wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        self.0 = z ^ (z >> 31);
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Content fingerprint of a (dataset, kernel) pair: the dataset shape in
+/// the clear plus two independent 64-bit hashes (FNV-1a and chained
+/// SplitMix64) over every f64 bit pattern of X and y and the kernel
+/// discriminant + parameters. 128 hash bits + explicit shape make an
+/// accidental collision astronomically unlikely and a constructed one
+/// require simultaneous preimages under two unrelated mixers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Fingerprint {
+    pub n: usize,
+    pub p: usize,
+    fnv: u64,
+    mix: u64,
+}
+
+/// Compute the [`Fingerprint`] of a (dataset, kernel) pair.
+pub fn fingerprint(x: &Matrix, y: &[f64], kernel: &Kernel) -> Fingerprint {
+    let mut h1 = Fnv::new();
+    let mut h2 = Mix::new();
+    let mut feed = |v: u64| {
+        h1.u64(v);
+        h2.u64(v);
+    };
+    feed(x.rows() as u64);
+    feed(x.cols() as u64);
+    for v in x.as_slice() {
+        feed(v.to_bits());
+    }
+    feed(y.len() as u64);
+    for v in y {
+        feed(v.to_bits());
+    }
+    match kernel {
+        Kernel::Rbf { sigma } => {
+            feed(1);
+            feed(sigma.to_bits());
+        }
+        Kernel::Linear { c } => {
+            feed(2);
+            feed(c.to_bits());
+        }
+        Kernel::Polynomial { gamma, c, degree } => {
+            feed(3);
+            feed(gamma.to_bits());
+            feed(c.to_bits());
+            feed(*degree as u64);
+        }
+        Kernel::Laplacian { sigma } => {
+            feed(4);
+            feed(sigma.to_bits());
+        }
+    }
+    Fingerprint { n: x.rows(), p: x.cols(), fnv: h1.finish(), mix: h2.finish() }
+}
+
+/// One cache slot: filled at most once, concurrent fillers coalesce on
+/// the `OnceLock`.
+struct Slot {
+    cell: OnceLock<Arc<BasisEntry>>,
+}
+
+struct SlotMap {
+    map: HashMap<Fingerprint, Arc<Slot>>,
+    /// Insertion order for FIFO eviction.
+    order: Vec<Fingerprint>,
+}
+
+/// Bounded, concurrency-coalescing (Gram, basis) cache.
+pub struct GramCache {
+    slots: Mutex<SlotMap>,
+    capacity: usize,
+    pub metrics: CacheMetrics,
+}
+
+impl GramCache {
+    /// A cache holding at most `capacity` factorizations (each is O(n²)
+    /// memory; oldest fully-built entries are evicted first).
+    pub fn new(capacity: usize) -> GramCache {
+        GramCache {
+            slots: Mutex::new(SlotMap { map: HashMap::new(), order: Vec::new() }),
+            capacity: capacity.max(1),
+            metrics: CacheMetrics::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry (metrics are preserved).
+    pub fn clear(&self) {
+        let mut guard = self.slots.lock().unwrap();
+        guard.map.clear();
+        guard.order.clear();
+    }
+
+    /// Fetch the (Gram, basis) pair for this exact dataset + kernel,
+    /// computing it at most once per fingerprint even under concurrent
+    /// callers: the first caller builds (Gram construction runs on the
+    /// parallel substrate), later callers block on the in-flight slot and
+    /// then share the `Arc`s.
+    pub fn get_or_compute(&self, x: &Matrix, y: &[f64], kernel: &Kernel) -> Arc<BasisEntry> {
+        let key = fingerprint(x, y, kernel);
+        CacheMetrics::incr(&self.metrics.requests);
+        let slot = {
+            let mut guard = self.slots.lock().unwrap();
+            if let Some(s) = guard.map.get(&key) {
+                s.clone()
+            } else {
+                if guard.map.len() >= self.capacity {
+                    // FIFO-evict the oldest *completed* entry; in-flight
+                    // slots are never dropped from under their builder.
+                    let victim = guard
+                        .order
+                        .iter()
+                        .copied()
+                        .find(|k| matches!(guard.map.get(k), Some(s) if s.cell.get().is_some()));
+                    if let Some(v) = victim {
+                        guard.map.remove(&v);
+                        guard.order.retain(|k| *k != v);
+                        CacheMetrics::incr(&self.metrics.evictions);
+                    }
+                }
+                let s = Arc::new(Slot { cell: OnceLock::new() });
+                guard.map.insert(key, s.clone());
+                guard.order.push(key);
+                s
+            }
+        };
+        let mut built_here = false;
+        let entry = slot
+            .cell
+            .get_or_init(|| {
+                built_here = true;
+                CacheMetrics::incr(&self.metrics.misses);
+                CacheMetrics::incr(&self.metrics.decompositions);
+                let gram = Arc::new(kernel.gram(x));
+                let basis = Arc::new(SpectralBasis::new(&gram));
+                Arc::new(BasisEntry { gram, basis })
+            })
+            .clone();
+        if !built_here {
+            CacheMetrics::incr(&self.metrics.hits);
+        }
+        entry
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn toy(n: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::from_fn(n, 2, |_, _| rng.normal());
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn fingerprint_is_content_addressed() {
+        let (x, y) = toy(12, 1);
+        let k = Kernel::Rbf { sigma: 0.7 };
+        let f1 = fingerprint(&x, &y, &k);
+        // identical content, different allocation
+        let x2 = x.clone();
+        let y2 = y.clone();
+        assert_eq!(f1, fingerprint(&x2, &y2, &k));
+        // any perturbation changes the key
+        let mut y3 = y.clone();
+        y3[3] += 1e-9;
+        assert_ne!(f1, fingerprint(&x, &y3, &k));
+        assert_ne!(f1, fingerprint(&x, &y, &Kernel::Rbf { sigma: 0.7000001 }));
+        assert_ne!(f1, fingerprint(&x, &y, &Kernel::Laplacian { sigma: 0.7 }));
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let cache = GramCache::new(4);
+        let (x, y) = toy(10, 2);
+        let k = Kernel::Rbf { sigma: 1.0 };
+        let a = cache.get_or_compute(&x, &y, &k);
+        let b = cache.get_or_compute(&x, &y, &k);
+        assert!(Arc::ptr_eq(&a.basis, &b.basis), "hit must share the Arc");
+        assert_eq!(CacheMetrics::get(&cache.metrics.requests), 2);
+        assert_eq!(CacheMetrics::get(&cache.metrics.decompositions), 1);
+        assert_eq!(CacheMetrics::get(&cache.metrics.hits), 1);
+        let (x2, y2) = toy(10, 3);
+        cache.get_or_compute(&x2, &y2, &k);
+        assert_eq!(CacheMetrics::get(&cache.metrics.decompositions), 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn capacity_bound_evicts_oldest() {
+        let cache = GramCache::new(2);
+        let k = Kernel::Rbf { sigma: 1.0 };
+        for seed in 0..3u64 {
+            let (x, y) = toy(8, 100 + seed);
+            cache.get_or_compute(&x, &y, &k);
+        }
+        assert_eq!(cache.len(), 2);
+        assert_eq!(CacheMetrics::get(&cache.metrics.evictions), 1);
+        // the first entry was evicted: asking again recomputes
+        let (x0, y0) = toy(8, 100);
+        cache.get_or_compute(&x0, &y0, &k);
+        assert_eq!(CacheMetrics::get(&cache.metrics.decompositions), 4);
+    }
+
+    #[test]
+    fn concurrent_requests_coalesce_to_one_decomposition() {
+        let cache = Arc::new(GramCache::new(4));
+        let (x, y) = toy(40, 5);
+        let k = Kernel::Rbf { sigma: 0.8 };
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let cache = cache.clone();
+                let (x, y, k) = (&x, &y, &k);
+                s.spawn(move || {
+                    cache.get_or_compute(x, y, k);
+                });
+            }
+        });
+        assert_eq!(CacheMetrics::get(&cache.metrics.requests), 4);
+        assert_eq!(
+            CacheMetrics::get(&cache.metrics.decompositions),
+            1,
+            "concurrent callers must share one eigendecomposition"
+        );
+        assert_eq!(CacheMetrics::get(&cache.metrics.hits), 3);
+    }
+}

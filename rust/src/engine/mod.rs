@@ -1,0 +1,325 @@
+//! The fit engine: a shared, cached, parallel solve layer.
+//!
+//! Everything above the raw solvers goes through this subsystem:
+//!
+//! - [`GramCache`] (in [`cache`]): content-fingerprinted, `Arc`-shared
+//!   memoization of (dataset, kernel) → (Gram, [`SpectralBasis`]) with
+//!   concurrency coalescing — the O(n³) eigendecomposition runs exactly
+//!   once per fingerprint per process, no matter how many CV folds,
+//!   τ-grid columns or concurrent coordinator jobs ask for it.
+//! - [`FitEngine`]: hands out [`KqrSolver`]s backed by the cache, owns
+//!   the [`Parallelism`] budget that bounds total concurrency, and
+//!   provides [`FitEngine::fit_grid`] — a batched τ × λ grid on one
+//!   basis with warm starts in both directions (λ descending within a
+//!   column, τ-adjacent columns seeding each other).
+//!
+//! Consumers: `cv::cross_validate` runs folds on the engine,
+//! `coordinator::scheduler` workers share one engine (concurrent jobs on
+//! the same dataset share one cached basis), and the TCP server fits
+//! through the engine so identical payloads from different connections
+//! never re-decompose.
+//!
+//! [`SpectralBasis`]: crate::spectral::SpectralBasis
+
+pub mod cache;
+
+pub use cache::{fingerprint, BasisEntry, CacheMetrics, Fingerprint, GramCache};
+
+use crate::backend::NativeBackend;
+use crate::data::Dataset;
+use crate::kernel::Kernel;
+use crate::kqr::apgd::ApgdState;
+use crate::kqr::{KqrFit, KqrSolver, SolveOptions};
+use crate::linalg::par::{self, Parallelism};
+use crate::linalg::Matrix;
+use anyhow::{ensure, Result};
+use std::sync::{Arc, OnceLock};
+
+/// Engine construction knobs.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Concurrency budget: bounds fold/grid fan-out and (via the global
+    /// linalg configuration) intra-op GEMV parallelism.
+    pub par: Parallelism,
+    /// Max cached factorizations (each O(n²) memory).
+    pub cache_capacity: usize,
+    /// Default solver options for engine-issued solvers.
+    pub opts: SolveOptions,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig {
+            par: par::global(),
+            cache_capacity: 16,
+            opts: SolveOptions::default(),
+        }
+    }
+}
+
+/// Shared, cached, parallel solve layer (see module docs).
+pub struct FitEngine {
+    pub cache: GramCache,
+    pub config: EngineConfig,
+}
+
+impl Default for FitEngine {
+    fn default() -> Self {
+        FitEngine::new()
+    }
+}
+
+impl FitEngine {
+    pub fn new() -> FitEngine {
+        FitEngine::with_config(EngineConfig::default())
+    }
+
+    pub fn with_config(config: EngineConfig) -> FitEngine {
+        FitEngine { cache: GramCache::new(config.cache_capacity), config }
+    }
+
+    /// The process-wide shared engine: every consumer that does not
+    /// construct its own engine (CV convenience wrapper, server, CLI)
+    /// funnels through this one, which is what makes "one
+    /// eigendecomposition per (dataset, kernel) per process" hold across
+    /// subsystems.
+    pub fn global() -> &'static Arc<FitEngine> {
+        static GLOBAL: OnceLock<Arc<FitEngine>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Arc::new(FitEngine::new()))
+    }
+
+    /// A solver for this exact (dataset, kernel), backed by the cached
+    /// Gram matrix + eigenbasis (computed on first use), with the
+    /// engine's default options.
+    pub fn solver(&self, x: &Matrix, y: &[f64], kernel: &Kernel) -> KqrSolver {
+        self.solver_with_options(x, y, kernel, self.config.opts.clone())
+    }
+
+    /// [`FitEngine::solver`] with explicit solve options.
+    pub fn solver_with_options(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        kernel: &Kernel,
+        opts: SolveOptions,
+    ) -> KqrSolver {
+        let entry = self.cache.get_or_compute(x, y, kernel);
+        KqrSolver::with_basis(x, y, kernel.clone(), entry.gram.clone(), entry.basis.clone())
+            .with_options(opts)
+    }
+
+    /// Convenience overload for [`Dataset`] holders.
+    pub fn solver_for(&self, data: &Dataset, kernel: &Kernel) -> KqrSolver {
+        self.solver(&data.x, &data.y, kernel)
+    }
+
+    /// Fit the full τ × λ grid on **one** cached eigenbasis.
+    ///
+    /// Within each τ column the λ path is warm-started downward exactly
+    /// like `KqrSolver::fit_path` (iterate + γ-ladder position carry
+    /// over, §2.4). Across columns, each τ seeds its first (largest-λ)
+    /// fit from the previous τ's largest-λ solution — quantile curves at
+    /// adjacent levels are close, so this is the second warm-start
+    /// direction. When the engine has >1 thread and several columns, the
+    /// τ columns are chunked onto scoped threads (bounded by the engine's
+    /// budget; cross-column seeding then applies within each chunk) and
+    /// each worker runs its solves with intra-op parallelism disabled to
+    /// avoid oversubscription.
+    ///
+    /// Returns fits indexed `[tau][lambda]`, matching the input orders.
+    pub fn fit_grid(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        kernel: &Kernel,
+        taus: &[f64],
+        lambdas: &[f64],
+    ) -> Result<GridFit> {
+        ensure!(!taus.is_empty(), "fit_grid: empty tau grid");
+        ensure!(!lambdas.is_empty(), "fit_grid: empty lambda grid");
+        let solver = self.solver(x, y, kernel);
+        // Inside an outer serial scope (e.g. a scheduler worker) the grid
+        // must not fan out — the outer level owns the parallelism.
+        let workers = if par::in_serial_scope() {
+            1
+        } else {
+            self.config.par.threads.min(taus.len()).max(1)
+        };
+        let fits: Vec<Vec<KqrFit>> = if workers > 1 && taus.len() > 1 {
+            let chunk = (taus.len() + workers - 1) / workers;
+            let solver_ref = &solver;
+            let chunk_results: Vec<Result<Vec<Vec<KqrFit>>>> = std::thread::scope(|s| {
+                let handles: Vec<_> = taus
+                    .chunks(chunk)
+                    .map(|tau_chunk| {
+                        s.spawn(move || {
+                            par::serial_scope(|| fit_tau_columns(solver_ref, tau_chunk, lambdas))
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("fit_grid worker panicked"))
+                    .collect()
+            });
+            let mut all = Vec::with_capacity(taus.len());
+            for r in chunk_results {
+                all.extend(r?);
+            }
+            all
+        } else {
+            fit_tau_columns(&solver, taus, lambdas)?
+        };
+        Ok(GridFit { taus: taus.to_vec(), lambdas: lambdas.to_vec(), fits })
+    }
+}
+
+/// Fit a run of τ columns serially, seeding each column's largest-λ fit
+/// from its predecessor's.
+fn fit_tau_columns(
+    solver: &KqrSolver,
+    taus: &[f64],
+    lambdas: &[f64],
+) -> Result<Vec<Vec<KqrFit>>> {
+    let mut cols = Vec::with_capacity(taus.len());
+    let mut seed: Option<ApgdState> = None;
+    for &tau in taus {
+        let col = fit_tau_column(solver, tau, lambdas, seed.take())?;
+        let head = &col[0];
+        seed = Some(ApgdState::from_solution(
+            head.b,
+            &solver.basis.beta_from_alpha(&head.alpha),
+        ));
+        cols.push(col);
+    }
+    Ok(cols)
+}
+
+/// One warm-started descending-λ column, optionally seeded from an
+/// adjacent τ's iterate.
+fn fit_tau_column(
+    solver: &KqrSolver,
+    tau: f64,
+    lambdas: &[f64],
+    seed: Option<ApgdState>,
+) -> Result<Vec<KqrFit>> {
+    let mut backend = NativeBackend::new();
+    let mut state = seed.unwrap_or_else(|| ApgdState::zeros(solver.n()));
+    let mut gamma_start = solver.opts.gamma_init;
+    let mut fits = Vec::with_capacity(lambdas.len());
+    for &lam in lambdas {
+        let fit = solver.fit_warm_from(tau, lam, &mut state, &mut backend, gamma_start)?;
+        gamma_start = (fit.gamma_final / solver.opts.gamma_shrink)
+            .min(solver.opts.gamma_init)
+            .max(solver.opts.gamma_min);
+        fits.push(fit);
+    }
+    Ok(fits)
+}
+
+/// Result of [`FitEngine::fit_grid`]: fits indexed `[tau][lambda]`.
+#[derive(Clone, Debug)]
+pub struct GridFit {
+    pub taus: Vec<f64>,
+    pub lambdas: Vec<f64>,
+    pub fits: Vec<Vec<KqrFit>>,
+}
+
+impl GridFit {
+    /// The fit at (τ index, λ index).
+    pub fn at(&self, ti: usize, li: usize) -> &KqrFit {
+        &self.fits[ti][li]
+    }
+
+    /// Total APGD iterations across the grid (warm-start accounting).
+    pub fn total_iters(&self) -> usize {
+        self.fits.iter().flatten().map(|f| f.apgd_iters).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::data::Rng;
+    use crate::kernel::median_heuristic_sigma;
+
+    fn fixture(n: usize, seed: u64) -> (Dataset, Kernel) {
+        let mut rng = Rng::new(seed);
+        let data = synth::sine_hetero(n, &mut rng);
+        let sigma = median_heuristic_sigma(&data.x);
+        (data, Kernel::Rbf { sigma })
+    }
+
+    #[test]
+    fn solver_reuses_cached_basis() {
+        let engine = FitEngine::new();
+        let (data, kernel) = fixture(30, 1);
+        let s1 = engine.solver_for(&data, &kernel);
+        let s2 = engine.solver_for(&data, &kernel);
+        assert!(Arc::ptr_eq(&s1.basis, &s2.basis));
+        assert_eq!(CacheMetrics::get(&engine.cache.metrics.decompositions), 1);
+        // the cached solver fits exactly like a fresh one
+        let fresh = KqrSolver::new(&data.x, &data.y, kernel.clone());
+        let a = s1.fit(0.5, 0.01).unwrap();
+        let b = fresh.fit(0.5, 0.01).unwrap();
+        assert!((a.objective - b.objective).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fit_grid_matches_cold_fits_on_one_basis() {
+        let engine = FitEngine::with_config(EngineConfig {
+            par: Parallelism::with_threads(2),
+            ..EngineConfig::default()
+        });
+        let (data, kernel) = fixture(40, 2);
+        let taus = [0.25, 0.5, 0.75];
+        let lambdas = [0.1, 0.01];
+        let grid = engine.fit_grid(&data.x, &data.y, &kernel, &taus, &lambdas).unwrap();
+        assert_eq!(grid.fits.len(), 3);
+        assert_eq!(grid.fits[0].len(), 2);
+        assert_eq!(
+            CacheMetrics::get(&engine.cache.metrics.decompositions),
+            1,
+            "a grid is one basis"
+        );
+        let cold = KqrSolver::new(&data.x, &data.y, kernel.clone());
+        for (ti, &tau) in taus.iter().enumerate() {
+            for (li, &lam) in lambdas.iter().enumerate() {
+                let warm = grid.at(ti, li);
+                assert_eq!(warm.tau, tau);
+                assert_eq!(warm.lam, lam);
+                let reference = cold.fit(tau, lam).unwrap();
+                assert!(
+                    (warm.objective - reference.objective).abs()
+                        < 1e-5 * (1.0 + reference.objective.abs()),
+                    "tau={tau} lam={lam}: warm {} vs cold {}",
+                    warm.objective,
+                    reference.objective
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fit_grid_serial_engine_also_works() {
+        let engine = FitEngine::with_config(EngineConfig {
+            par: Parallelism::serial(),
+            ..EngineConfig::default()
+        });
+        let (data, kernel) = fixture(25, 3);
+        let grid = engine
+            .fit_grid(&data.x, &data.y, &kernel, &[0.3, 0.7], &[0.05])
+            .unwrap();
+        assert!(grid.fits.iter().flatten().all(|f| f.kkt.pass));
+        assert!(grid.total_iters() > 0);
+    }
+
+    #[test]
+    fn fit_grid_rejects_empty_axes() {
+        let engine = FitEngine::new();
+        let (data, kernel) = fixture(10, 4);
+        assert!(engine.fit_grid(&data.x, &data.y, &kernel, &[], &[0.1]).is_err());
+        assert!(engine.fit_grid(&data.x, &data.y, &kernel, &[0.5], &[]).is_err());
+    }
+}

@@ -31,7 +31,7 @@ fn run_solver_cv(
     rng: &mut Rng,
 ) -> Result<f64> {
     let n = data.n();
-    let assignment = fold_assignment(n, folds, rng);
+    let assignment = fold_assignment(n, folds, rng)?;
     let mut cv_loss = vec![0.0f64; lambdas.len()];
     // held-out scoring per fold
     for fold in 0..folds {

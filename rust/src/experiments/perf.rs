@@ -2,6 +2,8 @@
 //!
 //! - GEMV throughput (the 2-GEMV/iteration inner loop) vs the streaming
 //!   bandwidth roofline;
+//! - parallel substrate speedups (row-blocked GEMV and Gram construction
+//!   vs the serial kernels — the engine-layer lever at n ≥ 1000);
 //! - APGD chunk cost, native vs XLA backend (artifact execution);
 //! - one-time eigendecomposition cost (the O(n³) amortized term).
 
@@ -10,7 +12,7 @@ use crate::data::{synth, Rng};
 use crate::kernel::{median_heuristic_sigma, Kernel};
 use crate::kqr::apgd::ApgdState;
 use crate::kqr::KqrSolver;
-use crate::linalg::{gemv, Matrix, SymEigen};
+use crate::linalg::{blas, gemv, par, Matrix, SymEigen};
 use crate::spectral::SpectralPlan;
 use crate::util::bench::{run_bench, BenchStats};
 use anyhow::Result;
@@ -29,6 +31,51 @@ pub fn gemv_throughput(n: usize, reps: usize) -> (BenchStats, f64) {
     let bytes = (n * n * 8) as f64;
     let gbps = bytes / stats.median / 1e9;
     (stats, gbps)
+}
+
+/// Serial vs row-blocked-parallel GEMV at size n. Returns
+/// (serial stats, parallel stats, speedup, workers used). With one
+/// configured thread the parallel run degenerates to serial (speedup 1).
+pub fn gemv_parallel_speedup(n: usize, reps: usize) -> (BenchStats, BenchStats, f64, usize) {
+    let mut rng = Rng::new(42);
+    let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut out = vec![0.0; n];
+    let serial = run_bench(&format!("gemv serial      n={n}"), 3, reps, |_| {
+        blas::gemv_serial(&a, &x, &mut out);
+        out[0]
+    });
+    let workers = par::global().threads.min(n);
+    let parallel = if workers > 1 {
+        run_bench(&format!("gemv {workers}-thread    n={n}"), 3, reps, |_| {
+            par::par_gemv(&a, &x, &mut out, workers);
+            out[0]
+        })
+    } else {
+        run_bench(&format!("gemv 1-thread    n={n}"), 3, reps, |_| {
+            blas::gemv_serial(&a, &x, &mut out);
+            out[0]
+        })
+    };
+    let speedup = serial.median / parallel.median.max(1e-12);
+    (serial, parallel, speedup, workers)
+}
+
+/// Serial vs parallel Gram construction at size n (RBF kernel). Returns
+/// (serial stats, parallel stats, speedup, workers used).
+pub fn gram_parallel_speedup(n: usize, reps: usize) -> (BenchStats, BenchStats, f64, usize) {
+    let mut rng = Rng::new(43);
+    let x = Matrix::from_fn(n, 4, |_, _| rng.normal());
+    let kernel = Kernel::Rbf { sigma: 1.0 };
+    let serial = run_bench(&format!("gram serial      n={n}"), 1, reps, |_| {
+        kernel.gram_blocked(&x, 1).as_slice()[0]
+    });
+    let workers = par::global().threads.min(n);
+    let parallel = run_bench(&format!("gram {workers}-thread    n={n}"), 1, reps, |_| {
+        kernel.gram_blocked(&x, workers).as_slice()[0]
+    });
+    let speedup = serial.median / parallel.median.max(1e-12);
+    (serial, parallel, speedup, workers)
 }
 
 /// APGD chunk timing: native vs XLA backend (if artifacts exist).
@@ -96,5 +143,17 @@ mod tests {
         let stats = chunk_cost(32, 3).unwrap();
         assert!(!stats.is_empty());
         assert!(stats[0].median > 0.0);
+    }
+
+    #[test]
+    fn parallel_speedup_harness_runs() {
+        // Smoke only: timing ratios are not asserted in unit tests (CI
+        // machines vary); the perf_hotpath bench reports the numbers.
+        let (s, p, speedup, workers) = gemv_parallel_speedup(96, 3);
+        assert!(s.median > 0.0 && p.median > 0.0);
+        assert!(speedup.is_finite() && speedup > 0.0);
+        assert!(workers >= 1);
+        let (gs, gp, gsp, _) = gram_parallel_speedup(64, 2);
+        assert!(gs.median > 0.0 && gp.median > 0.0 && gsp > 0.0);
     }
 }

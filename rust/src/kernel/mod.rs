@@ -45,17 +45,61 @@ impl Kernel {
 
     /// n×n Gram matrix of the training inputs (rows of `x`).
     ///
-    /// Exploits symmetry: each pair is evaluated once. For the RBF/
-    /// Laplacian kernels the diagonal is exactly 1.
+    /// Each pair is evaluated once (upper triangle) and mirrored; for the
+    /// RBF/Laplacian kernels the diagonal is exactly 1. Above the global
+    /// parallel cutoff the triangle is filled by scoped threads owning
+    /// contiguous row bands sized to equal triangle *area* (row i holds
+    /// n − i evaluations, so equal row counts would be badly unbalanced);
+    /// `eval` is deterministic, so the parallel result is bitwise equal
+    /// to the serial one.
     pub fn gram(&self, x: &Matrix) -> Matrix {
         let n = x.rows();
+        let workers = crate::linalg::par::global().workers_for(n);
+        self.gram_blocked(x, workers)
+    }
+
+    /// Gram construction with an explicit worker count (1 = the serial
+    /// pair-mirrored loop). Exposed so benches and tests can compare the
+    /// two paths without touching process-global configuration.
+    pub fn gram_blocked(&self, x: &Matrix, workers: usize) -> Matrix {
+        let n = x.rows();
         let mut k = Matrix::zeros(n, n);
-        for i in 0..n {
-            k[(i, i)] = self.eval(x.row(i), x.row(i));
-            for j in (i + 1)..n {
-                let v = self.eval(x.row(i), x.row(j));
-                k[(i, j)] = v;
-                k[(j, i)] = v;
+        if workers > 1 && n > 1 {
+            // Parallel upper-triangle fill: workers own contiguous row
+            // bands balanced by triangle area, each writing only j ≥ i.
+            let bounds = triangle_bounds(n, workers);
+            std::thread::scope(|s| {
+                let mut rows_iter = k.as_mut_slice().chunks_mut(n);
+                for w in bounds.windows(2) {
+                    let lo = w[0];
+                    let band: Vec<&mut [f64]> =
+                        rows_iter.by_ref().take(w[1] - w[0]).collect();
+                    s.spawn(move || {
+                        for (r, row) in band.into_iter().enumerate() {
+                            let i = lo + r;
+                            for (j, slot) in row.iter_mut().enumerate().skip(i) {
+                                *slot = self.eval(x.row(i), x.row(j));
+                            }
+                        }
+                    });
+                }
+            });
+            // Serial mirror of the strict lower triangle (memory copies —
+            // cheap next to the kernel evaluations above).
+            for i in 1..n {
+                for j in 0..i {
+                    let v = k[(j, i)];
+                    k[(i, j)] = v;
+                }
+            }
+        } else {
+            for i in 0..n {
+                k[(i, i)] = self.eval(x.row(i), x.row(i));
+                for j in (i + 1)..n {
+                    let v = self.eval(x.row(i), x.row(j));
+                    k[(i, j)] = v;
+                    k[(j, i)] = v;
+                }
             }
         }
         k
@@ -67,6 +111,25 @@ impl Kernel {
         assert_eq!(xt.cols(), x.cols());
         Matrix::from_fn(xt.rows(), x.rows(), |i, j| self.eval(xt.row(i), x.row(j)))
     }
+}
+
+/// Contiguous row-band boundaries `0 = b₀ < b₁ < … = n` splitting the
+/// upper triangle (row i owns n − i cells) into runs of roughly equal
+/// area — at most `workers + 1` bands.
+fn triangle_bounds(n: usize, workers: usize) -> Vec<usize> {
+    let total = n * (n + 1) / 2;
+    let per = (total + workers - 1) / workers.max(1);
+    let mut bounds = vec![0usize];
+    let mut acc = 0usize;
+    for i in 0..n {
+        acc += n - i;
+        if acc >= per && *bounds.last().unwrap() < i + 1 && i + 1 < n {
+            bounds.push(i + 1);
+            acc = 0;
+        }
+    }
+    bounds.push(n);
+    bounds
 }
 
 /// Median heuristic for the RBF bandwidth: σ = median of pairwise

@@ -207,8 +207,13 @@ mod tests {
         for m in [10usize, 40] {
             let mut rng = Rng::new(8);
             let ny = nystrom(&x, &kernel, m, &mut rng).unwrap();
-            let solver =
-                KqrSolver::with_basis(&x, &y, kernel.clone(), ny.gram, ny.basis);
+            let solver = KqrSolver::with_basis(
+                &x,
+                &y,
+                kernel.clone(),
+                std::sync::Arc::new(ny.gram),
+                std::sync::Arc::new(ny.basis),
+            );
             let fit = solver.fit(0.5, 1e-2).unwrap();
             let gap = (fit.objective - exact.objective).abs();
             assert!(gap <= prev_gap + 1e-6, "gap did not shrink: m={m} {gap} vs {prev_gap}");
@@ -218,7 +223,13 @@ mod tests {
         // m = n: the approximation is exact and the certificate holds
         let mut rng = Rng::new(9);
         let ny = nystrom(&x, &kernel, 60, &mut rng).unwrap();
-        let solver = KqrSolver::with_basis(&x, &y, kernel.clone(), ny.gram, ny.basis);
+        let solver = KqrSolver::with_basis(
+            &x,
+            &y,
+            kernel.clone(),
+            std::sync::Arc::new(ny.gram),
+            std::sync::Arc::new(ny.basis),
+        );
         let fit = solver.fit(0.5, 1e-2).unwrap();
         assert!(
             (fit.objective - exact.objective).abs() < 1e-4 * (1.0 + exact.objective),

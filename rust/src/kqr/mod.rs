@@ -27,6 +27,7 @@ use crate::spectral::{SpectralBasis, SpectralPlan};
 use anyhow::{bail, Result};
 use apgd::{ApgdState, ApgdWorkspace};
 pub use kkt::KktReport;
+use std::sync::Arc;
 
 /// Tuning knobs for the finite smoothing solver.
 #[derive(Clone, Debug)]
@@ -109,7 +110,10 @@ pub struct KqrFit {
     pub apgd_iters: usize,
     pub expansions: usize,
     pub singular_set: Vec<usize>,
-    x_train: Matrix,
+    /// Training inputs, `Arc`-shared with the solver (and with every
+    /// other fit from the same solver), so a 50-λ path does not copy the
+    /// design matrix 50 times.
+    x_train: Arc<Matrix>,
     kernel: Kernel,
 }
 
@@ -139,25 +143,32 @@ pub struct FitStats {
 }
 
 /// The KQR solver: data + kernel + eigenbasis + options.
+///
+/// The Gram matrix and eigenbasis are `Arc`-shared so any number of
+/// solvers (CV folds at different τ, concurrent scheduler jobs, the
+/// engine's [`crate::engine::GramCache`]) can reuse one O(n³)
+/// factorization without copying O(n²) state.
 pub struct KqrSolver {
-    pub x: Matrix,
+    pub x: Arc<Matrix>,
     pub y: Vec<f64>,
     pub kernel: Kernel,
     /// Gram matrix (kept for the K_SS projection solves).
-    pub gram: Matrix,
-    pub basis: SpectralBasis,
+    pub gram: Arc<Matrix>,
+    pub basis: Arc<SpectralBasis>,
     pub opts: SolveOptions,
 }
 
 impl KqrSolver {
     /// Build the solver: computes the Gram matrix and its
-    /// eigendecomposition (the single O(n³) step).
+    /// eigendecomposition (the single O(n³) step). Prefer
+    /// [`crate::engine::FitEngine::solver`] when the same (dataset,
+    /// kernel) may be fitted more than once per process.
     pub fn new(x: &Matrix, y: &[f64], kernel: Kernel) -> KqrSolver {
         assert_eq!(x.rows(), y.len());
-        let gram = kernel.gram(x);
-        let basis = SpectralBasis::new(&gram);
+        let gram = Arc::new(kernel.gram(x));
+        let basis = Arc::new(SpectralBasis::new(&gram));
         KqrSolver {
-            x: x.clone(),
+            x: Arc::new(x.clone()),
             y: y.to_vec(),
             kernel,
             gram,
@@ -166,19 +177,19 @@ impl KqrSolver {
         }
     }
 
-    /// Reuse an already-computed Gram matrix and basis (e.g. shared across
-    /// solvers at different τ on the same data).
+    /// Reuse an already-computed Gram matrix and basis (shared across
+    /// solvers at different τ on the same data, or engine-cached).
     pub fn with_basis(
         x: &Matrix,
         y: &[f64],
         kernel: Kernel,
-        gram: Matrix,
-        basis: SpectralBasis,
+        gram: Arc<Matrix>,
+        basis: Arc<SpectralBasis>,
     ) -> KqrSolver {
         assert_eq!(x.rows(), y.len());
         assert_eq!(basis.n, y.len());
         KqrSolver {
-            x: x.clone(),
+            x: Arc::new(x.clone()),
             y: y.to_vec(),
             kernel,
             gram,

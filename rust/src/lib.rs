@@ -5,11 +5,29 @@
 //! Rust + JAX + Pallas system:
 //!
 //! - **L3 (this crate)**: the exact finite-smoothing solvers for KQR and
-//!   non-crossing KQR, the spectral O(n²) update engine, baselines, CV,
-//!   the fit-job coordinator and a TCP fit/predict server.
+//!   non-crossing KQR, the spectral O(n²) update machinery, baselines,
+//!   CV, the fit-job coordinator and a TCP fit/predict server.
 //! - **L2/L1 (python/, build-time only)**: the APGD iteration chunk as a
 //!   JAX program calling Pallas kernels, AOT-lowered to HLO text and
-//!   executed from Rust through PJRT (`runtime`).
+//!   executed from Rust through PJRT (`runtime`, behind the `xla`
+//!   feature).
+//!
+//! Cross-cutting the solvers sits the **fit engine** ([`engine`]):
+//!
+//! - [`linalg::par`] — a scoped-thread parallel substrate (row-blocked
+//!   GEMV/GEMVᵀ/GEMM, parallel Gram construction) that the `linalg::blas`
+//!   kernels dispatch into above a size cutoff, with a serial fallback
+//!   that keeps small-n results bitwise unchanged. Configure with
+//!   `FASTKQR_THREADS` / `FASTKQR_PAR_MIN_DIM`.
+//! - [`engine::GramCache`] — content-fingerprinted, `Arc`-shared
+//!   memoization of (dataset, kernel) → (Gram, eigenbasis); the O(n³)
+//!   eigendecomposition runs exactly once per fingerprint per process,
+//!   even under concurrent requests.
+//! - [`engine::FitEngine`] — hands out cache-backed solvers, batches
+//!   full τ × λ grids on one basis with warm starts in both directions
+//!   ([`engine::FitEngine::fit_grid`]), and bounds the concurrency that
+//!   [`cv::cross_validate`] (parallel folds + final refit) and the
+//!   [`coordinator`] scheduler/server draw on.
 //!
 //! Quick start (native backend):
 //!
@@ -31,6 +49,7 @@ pub mod baselines;
 pub mod coordinator;
 pub mod cv;
 pub mod data;
+pub mod engine;
 pub mod experiments;
 pub mod kernel;
 pub mod kqr;
@@ -46,6 +65,7 @@ pub mod prelude {
     pub use crate::backend::Backend;
     pub use crate::cv::{cross_validate, CvResult};
     pub use crate::data::{Dataset, Rng};
+    pub use crate::engine::{FitEngine, GridFit};
     pub use crate::kernel::{median_heuristic_sigma, Kernel};
     pub use crate::kqr::{KqrFit, KqrSolver, SolveOptions};
     pub use crate::nckqr::{NckqrFit, NckqrSolver};

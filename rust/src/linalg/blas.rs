@@ -67,9 +67,25 @@ pub fn amax(x: &[f64]) -> f64 {
 
 /// out = A x  (A row-major). Row-wise dot products: each row is a
 /// contiguous streaming read, the access pattern the perf pass targets.
+///
+/// Dispatches to the row-blocked parallel kernel (`linalg::par`) for
+/// matrices above the configured serial cutoff; both paths compute each
+/// output row in the identical order, so results are bitwise equal.
 pub fn gemv(a: &Matrix, x: &[f64], out: &mut [f64]) {
     assert_eq!(a.cols(), x.len(), "gemv: dim mismatch");
     assert_eq!(a.rows(), out.len(), "gemv: out dim mismatch");
+    let workers = super::par::global().workers_for(a.rows().min(a.cols()));
+    if workers > 1 {
+        super::par::par_gemv(a, x, out, workers);
+    } else {
+        gemv_serial(a, x, out);
+    }
+}
+
+/// Serial GEMV kernel (the parallel path runs this per row block).
+pub fn gemv_serial(a: &Matrix, x: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.cols(), x.len());
+    debug_assert_eq!(a.rows(), out.len());
     for (i, o) in out.iter_mut().enumerate() {
         *o = dot(a.row(i), x);
     }
@@ -77,9 +93,24 @@ pub fn gemv(a: &Matrix, x: &[f64], out: &mut [f64]) {
 
 /// out = A^T x without materializing A^T: accumulate rows scaled by x_i.
 /// Streams A once; `out` stays hot in cache.
+///
+/// Dispatches to the row-blocked parallel kernel above the serial cutoff
+/// (per-thread partials; agrees with serial to rounding, ~1e-12).
 pub fn gemv_t(a: &Matrix, x: &[f64], out: &mut [f64]) {
     assert_eq!(a.rows(), x.len(), "gemv_t: dim mismatch");
     assert_eq!(a.cols(), out.len(), "gemv_t: out dim mismatch");
+    let workers = super::par::global().workers_for(a.rows().min(a.cols()));
+    if workers > 1 {
+        super::par::par_gemv_t(a, x, out, workers);
+    } else {
+        gemv_t_serial(a, x, out);
+    }
+}
+
+/// Serial GEMVᵀ kernel.
+pub fn gemv_t_serial(a: &Matrix, x: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.rows(), x.len());
+    debug_assert_eq!(a.cols(), out.len());
     out.fill(0.0);
     for (i, &xi) in x.iter().enumerate() {
         if xi != 0.0 {
@@ -89,8 +120,22 @@ pub fn gemv_t(a: &Matrix, x: &[f64], out: &mut [f64]) {
 }
 
 /// C = A * B, cache-blocked (i-k-j loop order keeps B rows streaming).
+///
+/// Dispatches to the row-blocked parallel kernel above the serial cutoff;
+/// C rows are computed in the identical accumulation order either way.
 pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "gemm: inner dim mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let workers = super::par::global().workers_for(m.min(n).min(k));
+    if workers > 1 {
+        return super::par::par_gemm(a, b, workers);
+    }
+    gemm_serial(a, b)
+}
+
+/// Serial cache-blocked GEMM kernel.
+pub fn gemm_serial(a: &Matrix, b: &Matrix) -> Matrix {
+    debug_assert_eq!(a.cols(), b.rows());
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     let mut c = Matrix::zeros(m, n);
     const BK: usize = 64;

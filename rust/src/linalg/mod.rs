@@ -1,7 +1,10 @@
 //! Dense linear algebra substrate (no external BLAS/LAPACK available).
 //!
 //! - [`matrix::Matrix`]: row-major dense matrix
-//! - [`blas`]: dot/axpy/GEMV/GEMM kernels (the O(n²) hot path)
+//! - [`blas`]: dot/axpy/GEMV/GEMM kernels (the O(n²) hot path), each
+//!   dispatching to the parallel substrate above a size cutoff
+//! - [`par`]: scoped-thread row-blocked parallel kernels + the
+//!   [`par::Parallelism`] configuration (env-overridable)
 //! - [`eigen::SymEigen`]: one-time K = UΛUᵀ decomposition
 //! - [`chol::Cholesky`]: SPD solves for the interior-point baseline
 
@@ -9,8 +12,10 @@ pub mod blas;
 pub mod chol;
 pub mod eigen;
 pub mod matrix;
+pub mod par;
 
 pub use blas::{amax, axpy, dot, gemm, gemv, gemv_t, nrm2, quad_form, scal};
 pub use chol::{CholError, Cholesky};
 pub use eigen::SymEigen;
 pub use matrix::Matrix;
+pub use par::Parallelism;

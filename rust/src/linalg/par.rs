@@ -1,0 +1,360 @@
+//! Scoped-thread parallel substrate for the dense kernels (engine L1).
+//!
+//! The offline image has no rayon, so this module implements the minimal
+//! data-parallel layer the fit engine needs on plain `std::thread::scope`:
+//! row-blocked GEMV/GEMVᵀ/GEMM and a generic row-filler (the Gram
+//! construction in `kernel` uses the same scoped-thread pattern with
+//! triangle-balanced row bands). Design rules:
+//!
+//! - **Bit-stable small-n behavior.** Every operation falls back to the
+//!   serial kernel below [`Parallelism::min_dim`], and the row-parallel
+//!   kernels (`par_gemv`, `par_gemm`, `par_fill_rows`) compute each
+//!   output row with the *identical* serial accumulation order, so their
+//!   results are bitwise equal to the serial path at any size. Only
+//!   `par_gemv_t` re-associates its reduction (per-thread partials summed
+//!   block-by-block); its results agree with serial to ~1e-12 relative.
+//! - **Bounded, nest-aware concurrency.** [`serial_scope`] lets an outer
+//!   parallel loop (CV folds, τ columns, scheduler workers) disable
+//!   intra-op parallelism on its worker threads, so the process never
+//!   oversubscribes: one level parallelizes, the other runs serial.
+//! - **Configurable without code.** `FASTKQR_THREADS` overrides the
+//!   worker count (default: available cores); `FASTKQR_PAR_MIN_DIM`
+//!   overrides the serial cutoff (default 512).
+
+use super::matrix::Matrix;
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// Parallel execution configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallelism {
+    /// Maximum worker threads per parallel operation.
+    pub threads: usize,
+    /// Operations whose parallel dimension is below this run serially
+    /// (thread spawn/join costs more than the work saves, and serial
+    /// small-n results stay exactly as before).
+    pub min_dim: usize,
+}
+
+impl Parallelism {
+    /// Default serial cutoff: n = 512 GEMV ≈ 2 Mflop, comfortably above
+    /// scoped-thread overhead on commodity cores.
+    pub const DEFAULT_MIN_DIM: usize = 512;
+
+    /// Strictly serial configuration.
+    pub fn serial() -> Parallelism {
+        Parallelism { threads: 1, min_dim: usize::MAX }
+    }
+
+    /// Environment-driven default: `FASTKQR_THREADS` (else available
+    /// cores) and `FASTKQR_PAR_MIN_DIM` (else 512).
+    pub fn auto() -> Parallelism {
+        let threads = std::env::var("FASTKQR_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        let min_dim = std::env::var("FASTKQR_PAR_MIN_DIM")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&d| d >= 1)
+            .unwrap_or(Self::DEFAULT_MIN_DIM);
+        Parallelism { threads, min_dim }
+    }
+
+    /// Fixed thread count with the default cutoff.
+    pub fn with_threads(threads: usize) -> Parallelism {
+        Parallelism { threads: threads.max(1), min_dim: Self::DEFAULT_MIN_DIM }
+    }
+
+    /// Effective worker count for an operation whose parallel dimension
+    /// is `dim`: 1 (serial) below the cutoff, inside a [`serial_scope`],
+    /// or when only one thread is configured.
+    pub fn workers_for(&self, dim: usize) -> usize {
+        if self.threads <= 1 || dim < self.min_dim || in_serial_scope() {
+            1
+        } else {
+            self.threads.min(dim)
+        }
+    }
+}
+
+static GLOBAL: OnceLock<Parallelism> = OnceLock::new();
+
+/// The process-wide configuration the dispatching kernels consult.
+pub fn global() -> Parallelism {
+    *GLOBAL.get_or_init(Parallelism::auto)
+}
+
+/// Install a specific global configuration. First initializer (this call
+/// or the first [`global`]) wins; returns the effective configuration.
+pub fn init_global(par: Parallelism) -> Parallelism {
+    *GLOBAL.get_or_init(|| par)
+}
+
+thread_local! {
+    static SERIAL_DEPTH: Cell<usize> = Cell::new(0);
+}
+
+/// Is intra-op parallelism disabled on this thread?
+pub fn in_serial_scope() -> bool {
+    SERIAL_DEPTH.with(|d| d.get() > 0)
+}
+
+struct SerialGuard;
+
+impl SerialGuard {
+    fn enter() -> SerialGuard {
+        SERIAL_DEPTH.with(|d| d.set(d.get() + 1));
+        SerialGuard
+    }
+}
+
+impl Drop for SerialGuard {
+    fn drop(&mut self) {
+        SERIAL_DEPTH.with(|d| d.set(d.get() - 1));
+    }
+}
+
+/// Run `f` with intra-op parallelism disabled on this thread. Outer-level
+/// parallel loops (CV folds, grid τ columns, scheduler workers) wrap their
+/// per-item work in this so nested GEMVs do not oversubscribe the machine.
+pub fn serial_scope<T>(f: impl FnOnce() -> T) -> T {
+    let _guard = SerialGuard::enter();
+    f()
+}
+
+#[inline]
+fn block_size(items: usize, workers: usize) -> usize {
+    let w = workers.max(1);
+    ((items + w - 1) / w).max(1)
+}
+
+/// Row-blocked parallel `out = A x`. Each worker computes a contiguous
+/// block of output rows with the identical serial row kernel, so the
+/// result is bitwise equal to the serial GEMV.
+pub fn par_gemv(a: &Matrix, x: &[f64], out: &mut [f64], workers: usize) {
+    assert_eq!(a.cols(), x.len(), "par_gemv: dim mismatch");
+    assert_eq!(a.rows(), out.len(), "par_gemv: out dim mismatch");
+    if workers <= 1 || a.rows() == 0 {
+        super::blas::gemv_serial(a, x, out);
+        return;
+    }
+    let block = block_size(a.rows(), workers);
+    std::thread::scope(|s| {
+        for (bi, chunk) in out.chunks_mut(block).enumerate() {
+            let start = bi * block;
+            s.spawn(move || {
+                for (r, o) in chunk.iter_mut().enumerate() {
+                    *o = super::blas::dot(a.row(start + r), x);
+                }
+            });
+        }
+    });
+}
+
+/// Row-blocked parallel `out = Aᵀ x`: each worker accumulates a private
+/// `out`-sized partial over its row block (streaming A once, like the
+/// serial kernel), partials are then summed in block order. The reduction
+/// is re-associated across blocks, so results agree with the serial path
+/// to rounding (~1e-12 relative), not bitwise.
+pub fn par_gemv_t(a: &Matrix, x: &[f64], out: &mut [f64], workers: usize) {
+    assert_eq!(a.rows(), x.len(), "par_gemv_t: dim mismatch");
+    assert_eq!(a.cols(), out.len(), "par_gemv_t: out dim mismatch");
+    if workers <= 1 || a.rows() == 0 {
+        super::blas::gemv_t_serial(a, x, out);
+        return;
+    }
+    let rows = a.rows();
+    let cols = a.cols();
+    let block = block_size(rows, workers);
+    let mut partials: Vec<Vec<f64>> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        let mut start = 0usize;
+        while start < rows {
+            let end = (start + block).min(rows);
+            handles.push(s.spawn(move || {
+                let mut acc = vec![0.0f64; cols];
+                for i in start..end {
+                    let xi = x[i];
+                    if xi != 0.0 {
+                        super::blas::axpy(xi, a.row(i), &mut acc);
+                    }
+                }
+                acc
+            }));
+            start = end;
+        }
+        for h in handles {
+            partials.push(h.join().expect("par_gemv_t worker panicked"));
+        }
+    });
+    out.fill(0.0);
+    for p in &partials {
+        super::blas::axpy(1.0, p, out);
+    }
+}
+
+/// Row-blocked parallel `C = A B`: workers own disjoint row blocks of C
+/// and run the same cache-blocked i-k-j kernel as the serial GEMM, so
+/// each C row is computed in the identical accumulation order (bitwise
+/// equal to serial).
+pub fn par_gemm(a: &Matrix, b: &Matrix, workers: usize) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "par_gemm: inner dim mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    if workers <= 1 || m == 0 || n == 0 {
+        return super::blas::gemm_serial(a, b);
+    }
+    let mut c = Matrix::zeros(m, n);
+    let block = block_size(m, workers);
+    std::thread::scope(|s| {
+        for (bi, crows) in c.as_mut_slice().chunks_mut(block * n).enumerate() {
+            let row0 = bi * block;
+            s.spawn(move || {
+                const BK: usize = 64;
+                let rows_here = crows.len() / n;
+                for kb in (0..k).step_by(BK) {
+                    let kend = (kb + BK).min(k);
+                    for r in 0..rows_here {
+                        let arow = a.row(row0 + r);
+                        let crow = &mut crows[r * n..(r + 1) * n];
+                        for kk in kb..kend {
+                            let aik = arow[kk];
+                            if aik != 0.0 {
+                                super::blas::axpy(aik, b.row(kk), crow);
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    c
+}
+
+/// Fill the rows of `out` in parallel: `f(i, row)` writes row `i`.
+/// Workers own disjoint contiguous row blocks; `f` runs exactly once per
+/// row, so results equal the serial loop whenever `f` is deterministic.
+/// Used for parallel Gram construction.
+pub fn par_fill_rows<F>(out: &mut Matrix, workers: usize, f: F)
+where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    let rows = out.rows();
+    let cols = out.cols();
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    if workers <= 1 {
+        for i in 0..rows {
+            f(i, out.row_mut(i));
+        }
+        return;
+    }
+    let block = block_size(rows, workers);
+    let fref = &f;
+    std::thread::scope(|s| {
+        for (bi, chunk) in out.as_mut_slice().chunks_mut(block * cols).enumerate() {
+            let row0 = bi * block;
+            s.spawn(move || {
+                for (r, row) in chunk.chunks_mut(cols).enumerate() {
+                    fref(row0 + r, row);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(rows, cols, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn par_gemv_bitwise_matches_serial() {
+        for workers in [2usize, 3, 7] {
+            let a = random_matrix(53, 29, 1);
+            let mut rng = Rng::new(2);
+            let x: Vec<f64> = (0..29).map(|_| rng.normal()).collect();
+            let mut serial = vec![0.0; 53];
+            super::super::blas::gemv_serial(&a, &x, &mut serial);
+            let mut par = vec![0.0; 53];
+            par_gemv(&a, &x, &mut par, workers);
+            assert_eq!(serial, par, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn par_gemv_t_matches_serial_to_rounding() {
+        for workers in [2usize, 4] {
+            let a = random_matrix(61, 37, 3);
+            let mut rng = Rng::new(4);
+            let x: Vec<f64> = (0..61).map(|_| rng.normal()).collect();
+            let mut serial = vec![0.0; 37];
+            super::super::blas::gemv_t_serial(&a, &x, &mut serial);
+            let mut par = vec![0.0; 37];
+            par_gemv_t(&a, &x, &mut par, workers);
+            for (s, p) in serial.iter().zip(&par) {
+                assert!((s - p).abs() < 1e-12, "workers={workers}: {s} vs {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_gemm_bitwise_matches_serial() {
+        let a = random_matrix(33, 21, 5);
+        let b = random_matrix(21, 17, 6);
+        let serial = super::super::blas::gemm_serial(&a, &b);
+        for workers in [2usize, 5] {
+            let par = par_gemm(&a, &b, workers);
+            assert_eq!(serial.as_slice(), par.as_slice(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn par_fill_rows_covers_every_row_once() {
+        let mut m = Matrix::zeros(41, 7);
+        par_fill_rows(&mut m, 4, |i, row| {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = (i * 7 + j) as f64;
+            }
+        });
+        for i in 0..41 {
+            for j in 0..7 {
+                assert_eq!(m[(i, j)], (i * 7 + j) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn serial_scope_disables_workers() {
+        let par = Parallelism::with_threads(8);
+        assert_eq!(par.workers_for(10_000), 8);
+        serial_scope(|| {
+            assert_eq!(par.workers_for(10_000), 1);
+            // nested scopes stack
+            serial_scope(|| assert_eq!(par.workers_for(10_000), 1));
+            assert_eq!(par.workers_for(10_000), 1);
+        });
+        assert_eq!(par.workers_for(10_000), 8);
+    }
+
+    #[test]
+    fn workers_respect_cutoff_and_dim() {
+        let par = Parallelism { threads: 4, min_dim: 100 };
+        assert_eq!(par.workers_for(99), 1);
+        assert_eq!(par.workers_for(100), 4);
+        assert_eq!(par.workers_for(2), 1); // below cutoff
+        let wide = Parallelism { threads: 16, min_dim: 1 };
+        assert_eq!(wide.workers_for(3), 3); // capped by dim
+        assert_eq!(Parallelism::serial().workers_for(1_000_000), 1);
+    }
+}

@@ -164,7 +164,9 @@ fn cmd_cv(args: &Args) -> Result<()> {
     let nlam = args.get_usize("nlam", 20);
     let folds = args.get_usize("folds", 5);
     let mut rng = Rng::new(args.get_usize("seed", 2024) as u64 ^ 0xc5);
-    let solver = KqrSolver::new(&data.x, &data.y, kernel.clone());
+    // Engine-backed solver: the basis computed here lands in the global
+    // cache, so the CV refit on the full data reuses it for free.
+    let solver = fastkqr::engine::FitEngine::global().solver_for(&data, &kernel);
     let lams = solver.lambda_grid(nlam, 1.0, 1e-4);
     let timer = Timer::start("cv");
     let res =
@@ -175,6 +177,12 @@ fn cmd_cv(args: &Args) -> Result<()> {
         println!("{l:<12.4e} {v:.6}{mark}");
     }
     println!("best lambda {:.4e} in {:.3}s", res.best_lambda, timer.total());
+    if let Some(refit) = &res.refit {
+        println!(
+            "refit at best lambda: objective {:.6}  kkt pass={}",
+            refit.objective, refit.kkt.pass
+        );
+    }
     Ok(())
 }
 

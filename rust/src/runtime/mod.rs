@@ -2,21 +2,30 @@
 //! request path (the L3 ⇄ L2/L1 bridge; Python is never involved here).
 //!
 //! - [`ArtifactManifest`]: `artifacts/manifest.json` written by
-//!   `python/compile/aot.py`.
-//! - [`XlaRuntime`]: a PJRT CPU client plus a cache of compiled
-//!   executables (compile once per artifact, execute many).
-//! - [`XlaBackend`]: implements [`Backend`](crate::backend::Backend) by
-//!   marshalling the spectral state into literals, zero-padding to the
-//!   artifact size (exact under the mask — see python/compile/model.py),
-//!   and executing the `apgd_chunk` artifact.
+//!   `python/compile/aot.py` (always available — plain JSON parsing).
+//! - `XlaRuntime` / [`XlaBackend`]: a PJRT CPU client plus a cache of
+//!   compiled executables (compile once per artifact, execute many).
+//!
+//! The PJRT pieces need the `xla` bindings crate and a PJRT CPU plugin,
+//! which the offline image does not ship. They are therefore gated behind
+//! the `xla` cargo feature; the default build exports a stub
+//! [`XlaBackend`] whose constructors return an error, so every caller
+//! that probes for the backend (`--backend xla`, the e2e example, the
+//! perf harness) degrades gracefully at runtime while still compiling.
 
-use crate::backend::Backend;
-use crate::kqr::apgd::ApgdState;
-use crate::spectral::{SpectralBasis, SpectralPlan};
 use crate::util::Json;
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
+
+#[cfg(feature = "xla")]
+mod pjrt;
+#[cfg(feature = "xla")]
+pub use pjrt::{XlaBackend, XlaRuntime};
+
+#[cfg(not(feature = "xla"))]
+mod stub;
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaBackend;
 
 /// One entry of the artifact manifest.
 #[derive(Clone, Debug)]
@@ -69,266 +78,6 @@ impl ArtifactManifest {
     }
 }
 
-/// PJRT CPU client + compiled-executable cache.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    manifest: ArtifactManifest,
-    compiled: HashMap<usize, xla::PjRtLoadedExecutable>,
-}
-
-impl XlaRuntime {
-    /// Create a CPU PJRT client and load the manifest from `dir`.
-    pub fn new(dir: impl AsRef<Path>) -> Result<XlaRuntime> {
-        let manifest = ArtifactManifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(XlaRuntime { client, manifest, compiled: HashMap::new() })
-    }
-
-    pub fn manifest(&self) -> &ArtifactManifest {
-        &self.manifest
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch from cache) the apgd_chunk executable for
-    /// problem size n. Returns (artifact_n, chunk, &executable).
-    pub fn chunk_executable(&mut self, n: usize) -> Result<(usize, usize)> {
-        let entry = self
-            .manifest
-            .best_for(n)
-            .ok_or_else(|| anyhow!("no artifact covers n={n} (max {:?})",
-                self.manifest.entries.last().map(|e| e.n)))?
-            .clone();
-        if !self.compiled.contains_key(&entry.n) {
-            let proto = xla::HloModuleProto::from_text_file(
-                entry.path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-            )
-            .map_err(|e| anyhow!("parse {:?}: {e:?}", entry.path))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {:?}: {e:?}", entry.path))?;
-            self.compiled.insert(entry.n, exe);
-        }
-        Ok((entry.n, entry.chunk))
-    }
-
-    fn exe(&self, artifact_n: usize) -> &xla::PjRtLoadedExecutable {
-        &self.compiled[&artifact_n]
-    }
-}
-
-/// Padded per-problem buffers reused across chunk calls.
-struct Prepared {
-    /// fingerprint: (basis n, U data address) — a new solver/basis
-    /// allocates a fresh matrix, so the address disambiguates.
-    key: (usize, usize),
-    artifact_n: usize,
-    chunk: usize,
-    /// Problem-constant operands cached as host literals. (A resident
-    /// device-buffer variant via `execute_b` was tried in the perf pass
-    /// and reverted: the PJRT C wrapper donates input buffers, so reusing
-    /// them across calls is unsound — see EXPERIMENTS.md §Perf.)
-    u_lit: xla::Literal,
-    lam_lit: xla::Literal,
-    y_lit: xla::Literal,
-    mask_lit: xla::Literal,
-    inv_n_lit: xla::Literal,
-    /// plan fingerprint (gamma, lam) for the cached plan literals
-    plan_key: (f64, f64),
-    pil_lit: xla::Literal,
-    p_lit: xla::Literal,
-    lam_p_lit: xla::Literal,
-    g_lit: xla::Literal,
-}
-
-/// APGD backend executing the AOT artifact through PJRT.
-pub struct XlaBackend {
-    runtime: XlaRuntime,
-    prepared: Option<Prepared>,
-    /// Number of artifact executions (for perf accounting).
-    pub executions: usize,
-}
-
-impl XlaBackend {
-    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<XlaBackend> {
-        Ok(XlaBackend { runtime: XlaRuntime::new(artifact_dir)?, prepared: None, executions: 0 })
-    }
-
-    /// Default artifact location relative to the repo root.
-    pub fn from_default_dir() -> Result<XlaBackend> {
-        XlaBackend::new("artifacts")
-    }
-
-    fn vec_literal(v: &[f64], pad_to: usize, fill: f64) -> xla::Literal {
-        let mut data = Vec::with_capacity(pad_to);
-        data.extend_from_slice(v);
-        data.resize(pad_to, fill);
-        xla::Literal::vec1(&data)
-    }
-
-    fn scalar_literal(v: f64) -> xla::Literal {
-        xla::Literal::vec1(&[v]).reshape(&[]).expect("scalar reshape")
-    }
-
-    fn prepare(
-        &mut self,
-        basis: &SpectralBasis,
-        plan: &SpectralPlan,
-        y: &[f64],
-    ) -> Result<()> {
-        let n = basis.n;
-        let key = (n, basis.u.as_slice().as_ptr() as usize);
-        let plan_key = (plan.gamma, plan.lam);
-        let need_problem =
-            self.prepared.as_ref().map(|p| p.key != key).unwrap_or(true);
-        let need_plan = need_problem
-            || self.prepared.as_ref().map(|p| p.plan_key != plan_key).unwrap_or(true);
-        if !need_problem && !need_plan {
-            return Ok(());
-        }
-        let (artifact_n, chunk) = self.runtime.chunk_executable(n)?;
-        if need_problem {
-            // padded U (artifact_n × artifact_n, row-major)
-            let mut u_pad = vec![0.0f64; artifact_n * artifact_n];
-            for i in 0..n {
-                u_pad[i * artifact_n..i * artifact_n + n].copy_from_slice(basis.u.row(i));
-            }
-            let u_lit = xla::Literal::vec1(&u_pad)
-                .reshape(&[artifact_n as i64, artifact_n as i64])
-                .map_err(|e| anyhow!("reshape U: {e:?}"))?;
-            let lam_lit = Self::vec_literal(&basis.lambda, artifact_n, 0.0);
-            let y_lit = Self::vec_literal(y, artifact_n, 0.0);
-            let mask = vec![1.0f64; n];
-            let mask_lit = Self::vec_literal(&mask, artifact_n, 0.0);
-            let inv_n_lit = Self::scalar_literal(1.0 / n as f64);
-            self.prepared = Some(Prepared {
-                key,
-                artifact_n,
-                chunk,
-                u_lit,
-                lam_lit,
-                y_lit,
-                mask_lit,
-                inv_n_lit,
-                plan_key: (f64::NAN, f64::NAN),
-                pil_lit: Self::scalar_literal(0.0),
-                p_lit: Self::scalar_literal(0.0),
-                lam_p_lit: Self::scalar_literal(0.0),
-                g_lit: Self::scalar_literal(0.0),
-            });
-        }
-        let prepared = self.prepared.as_mut().expect("prepared set above");
-        if need_plan || prepared.plan_key.0.is_nan() {
-            // padded plan vectors; pil padding uses the λ=0 limit value
-            // (inert because t_pad = 0, but keep it finite)
-            let pad_pil = 1.0 / (2.0 * n as f64 * plan.gamma * plan.lam);
-            prepared.pil_lit = Self::vec_literal(&plan.pil, prepared.artifact_n, pad_pil);
-            prepared.p_lit = Self::vec_literal(&plan.p, prepared.artifact_n, 0.0);
-            prepared.lam_p_lit = Self::vec_literal(&plan.lam_p, prepared.artifact_n, 0.0);
-            prepared.g_lit = Self::scalar_literal(plan.g);
-            prepared.plan_key = plan_key;
-        }
-        Ok(())
-    }
-
-    /// Execute one chunk; fallible inner implementation.
-    fn chunk_inner(
-        &mut self,
-        basis: &SpectralBasis,
-        plan: &SpectralPlan,
-        y: &[f64],
-        tau: f64,
-        state: &mut ApgdState,
-        iters: usize,
-    ) -> Result<f64> {
-        self.prepare(basis, plan, y)?;
-        let prepared = self.prepared.as_ref().expect("prepared");
-        if iters != prepared.chunk {
-            bail!(
-                "XlaBackend: artifact chunk={} but {iters} iterations requested \
-                 (set SolveOptions::chunk to match)",
-                prepared.chunk
-            );
-        }
-        let n = basis.n;
-        let prepared = self.prepared.as_ref().expect("prepared");
-        let an = prepared.artifact_n;
-        let nlam = n as f64 * plan.lam;
-        let beta_lit = Self::vec_literal(&state.beta, an, 0.0);
-        let beta_prev_lit = Self::vec_literal(&state.beta_prev, an, 0.0);
-        let tau_lit = Self::scalar_literal(tau);
-        let gamma_lit = Self::scalar_literal(plan.gamma);
-        let nlam_lit = Self::scalar_literal(nlam);
-        let b_lit = Self::scalar_literal(state.b);
-        let b_prev_lit = Self::scalar_literal(state.b_prev);
-        let ck_lit = Self::scalar_literal(state.ck);
-        let all_args: Vec<&xla::Literal> = vec![
-            &prepared.u_lit,
-            &prepared.lam_lit,
-            &prepared.pil_lit,
-            &prepared.p_lit,
-            &prepared.lam_p_lit,
-            &prepared.g_lit,
-            &prepared.y_lit,
-            &prepared.mask_lit,
-            &prepared.inv_n_lit,
-            &tau_lit,
-            &gamma_lit,
-            &nlam_lit,
-            &b_lit,
-            &beta_lit,
-            &b_prev_lit,
-            &beta_prev_lit,
-            &ck_lit,
-        ];
-        let exe = self.runtime.exe(an);
-        let result = exe
-            .execute::<&xla::Literal>(&all_args)
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("sync: {e:?}"))?;
-        self.executions += 1;
-        let parts = result.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
-        if parts.len() != 6 {
-            bail!("artifact returned {} outputs, expected 6", parts.len());
-        }
-        let get_scalar = |l: &xla::Literal| -> Result<f64> {
-            Ok(l.to_vec::<f64>().map_err(|e| anyhow!("scalar out: {e:?}"))?[0])
-        };
-        state.b = get_scalar(&parts[0])?;
-        let beta = parts[1].to_vec::<f64>().map_err(|e| anyhow!("beta out: {e:?}"))?;
-        state.beta.copy_from_slice(&beta[..n]);
-        state.b_prev = get_scalar(&parts[2])?;
-        let beta_prev = parts[3].to_vec::<f64>().map_err(|e| anyhow!("beta_prev: {e:?}"))?;
-        state.beta_prev.copy_from_slice(&beta_prev[..n]);
-        state.ck = get_scalar(&parts[4])?;
-        get_scalar(&parts[5])
-    }
-}
-
-impl Backend for XlaBackend {
-    fn name(&self) -> &'static str {
-        "xla"
-    }
-
-    fn apgd_chunk(
-        &mut self,
-        basis: &SpectralBasis,
-        plan: &SpectralPlan,
-        y: &[f64],
-        tau: f64,
-        state: &mut ApgdState,
-        iters: usize,
-    ) -> f64 {
-        self.chunk_inner(basis, plan, y, tau, state, iters)
-            .expect("XlaBackend chunk execution failed")
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -350,5 +99,12 @@ mod tests {
     #[test]
     fn manifest_missing_dir_errors() {
         assert!(ArtifactManifest::load("/nonexistent/dir").is_err());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_backend_reports_unavailable() {
+        let err = XlaBackend::from_default_dir().unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
     }
 }

@@ -1,0 +1,57 @@
+//! Stub XLA backend for builds without the `xla` feature.
+//!
+//! Keeps every call site (`--backend xla`, the e2e example, the perf
+//! harness, the integration tests' probes) compiling unchanged; the only
+//! observable behavior is a construction-time error explaining how to get
+//! the real backend.
+
+use crate::backend::Backend;
+use crate::kqr::apgd::ApgdState;
+use crate::spectral::{SpectralBasis, SpectralPlan};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Placeholder for the PJRT-backed APGD backend. Cannot be constructed;
+/// both constructors return an error describing the missing feature.
+pub struct XlaBackend {
+    /// Number of artifact executions (kept for API parity with the real
+    /// backend; always 0 because the stub cannot be constructed).
+    pub executions: usize,
+    _unconstructible: (),
+}
+
+impl XlaBackend {
+    pub fn new(_artifact_dir: impl AsRef<Path>) -> Result<XlaBackend> {
+        bail!(
+            "fastkqr was built without the `xla` cargo feature; the PJRT \
+             runtime is unavailable. Enabling it needs an environment with \
+             the xla bindings crate (add it to rust/Cargo.toml — it is not \
+             declared because the offline image cannot resolve it) and a \
+             PJRT CPU plugin; then build with `--features xla` and run \
+             `make artifacts`."
+        )
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn from_default_dir() -> Result<XlaBackend> {
+        XlaBackend::new("artifacts")
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn apgd_chunk(
+        &mut self,
+        _basis: &SpectralBasis,
+        _plan: &SpectralPlan,
+        _y: &[f64],
+        _tau: f64,
+        _state: &mut ApgdState,
+        _iters: usize,
+    ) -> f64 {
+        unreachable!("stub XlaBackend cannot be constructed")
+    }
+}

@@ -1,0 +1,203 @@
+//! Engine-layer integration: cache accounting across subsystems,
+//! parallel-vs-serial numerical parity, and concurrency guarantees (two
+//! scheduler jobs on the same dataset → exactly one eigendecomposition).
+
+use fastkqr::coordinator::{FitJob, JobSpec, Scheduler};
+use fastkqr::cv::{cross_validate_on, fold_assignment};
+use fastkqr::data::{synth, Rng};
+use fastkqr::engine::{CacheMetrics, EngineConfig, FitEngine};
+use fastkqr::kernel::Kernel;
+use fastkqr::kqr::SolveOptions;
+use fastkqr::linalg::{blas, par, Matrix, Parallelism};
+use std::sync::Arc;
+
+fn fresh_engine() -> Arc<FitEngine> {
+    Arc::new(FitEngine::with_config(EngineConfig {
+        par: Parallelism::with_threads(2),
+        ..EngineConfig::default()
+    }))
+}
+
+// ---------- parallel-vs-serial parity (1e-12 tolerance) ----------
+
+#[test]
+fn parallel_gemv_parity_across_sizes_and_workers() {
+    let mut rng = Rng::new(1);
+    for n in [17usize, 64, 301] {
+        let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut serial = vec![0.0; n];
+        blas::gemv_serial(&a, &x, &mut serial);
+        for workers in [2usize, 3, 8] {
+            let mut out = vec![0.0; n];
+            par::par_gemv(&a, &x, &mut out, workers);
+            for (s, p) in serial.iter().zip(&out) {
+                assert!(
+                    (s - p).abs() <= 1e-12 * (1.0 + s.abs()),
+                    "gemv n={n} workers={workers}: {s} vs {p}"
+                );
+            }
+            let mut tserial = vec![0.0; n];
+            blas::gemv_t_serial(&a, &x, &mut tserial);
+            let mut tpar = vec![0.0; n];
+            par::par_gemv_t(&a, &x, &mut tpar, workers);
+            for (s, p) in tserial.iter().zip(&tpar) {
+                assert!(
+                    (s - p).abs() <= 1e-12 * (1.0 + s.abs()),
+                    "gemv_t n={n} workers={workers}: {s} vs {p}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_gemm_and_gram_parity() {
+    let mut rng = Rng::new(2);
+    let a = Matrix::from_fn(45, 33, |_, _| rng.normal());
+    let b = Matrix::from_fn(33, 27, |_, _| rng.normal());
+    let serial = blas::gemm_serial(&a, &b);
+    for workers in [2usize, 4] {
+        let parallel = par::par_gemm(&a, &b, workers);
+        assert!(
+            serial.max_abs_diff(&parallel) <= 1e-12,
+            "gemm workers={workers}: diff {}",
+            serial.max_abs_diff(&parallel)
+        );
+    }
+    let x = Matrix::from_fn(80, 3, |_, _| rng.normal());
+    for kernel in [
+        Kernel::Rbf { sigma: 0.9 },
+        Kernel::Laplacian { sigma: 1.1 },
+        Kernel::Linear { c: 0.5 },
+    ] {
+        let gs = kernel.gram_blocked(&x, 1);
+        let gp = kernel.gram_blocked(&x, 4);
+        assert!(
+            gs.max_abs_diff(&gp) <= 1e-12,
+            "gram parity ({kernel:?}): diff {}",
+            gs.max_abs_diff(&gp)
+        );
+    }
+}
+
+#[test]
+fn small_n_serial_results_unchanged_bitwise() {
+    // Below the cutoff the dispatching kernels must take the serial path
+    // and reproduce it exactly (the 1e-12 acceptance bound is trivially 0).
+    let mut rng = Rng::new(3);
+    let n = 40; // << DEFAULT_MIN_DIM
+    let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut dispatched = vec![0.0; n];
+    fastkqr::linalg::gemv(&a, &x, &mut dispatched);
+    let mut serial = vec![0.0; n];
+    blas::gemv_serial(&a, &x, &mut serial);
+    assert_eq!(dispatched, serial);
+}
+
+// ---------- cache accounting ----------
+
+#[test]
+fn cv_folds_and_refit_hit_cache_on_rerun() {
+    let engine = fresh_engine();
+    let mut rng = Rng::new(4);
+    let data = synth::sine_hetero(45, &mut rng);
+    let kernel = Kernel::Rbf { sigma: 0.5 };
+    let opts = SolveOptions::cv_preset();
+    let lams = [0.5, 0.05];
+    let k = 3;
+
+    let mut rng_cv = Rng::new(9);
+    let first = cross_validate_on(&engine, &data, &kernel, 0.5, &lams, k, &opts, &mut rng_cv)
+        .unwrap();
+    // k fold bases + 1 full-data refit basis
+    let after_first = CacheMetrics::get(&engine.cache.metrics.decompositions);
+    assert_eq!(after_first, (k + 1) as u64, "one basis per fold + refit");
+
+    // identical seed → identical folds → every basis is a cache hit
+    let mut rng_cv2 = Rng::new(9);
+    let second = cross_validate_on(&engine, &data, &kernel, 0.5, &lams, k, &opts, &mut rng_cv2)
+        .unwrap();
+    assert_eq!(
+        CacheMetrics::get(&engine.cache.metrics.decompositions),
+        after_first,
+        "re-running CV on the same data must not re-decompose"
+    );
+    assert_eq!(first.best_index, second.best_index);
+    for (a, b) in first.cv_loss.iter().zip(&second.cv_loss) {
+        assert!((a - b).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn multi_tau_grid_is_one_decomposition() {
+    let engine = fresh_engine();
+    let mut rng = Rng::new(5);
+    let data = synth::sine_hetero(35, &mut rng);
+    let kernel = Kernel::Rbf { sigma: 0.6 };
+    let grid = engine
+        .fit_grid(&data.x, &data.y, &kernel, &[0.1, 0.5, 0.9], &[0.1, 0.01])
+        .unwrap();
+    assert_eq!(grid.fits.len(), 3);
+    assert!(grid.fits.iter().all(|col| col.len() == 2));
+    assert_eq!(
+        CacheMetrics::get(&engine.cache.metrics.decompositions),
+        1,
+        "the whole tau-grid must share one basis"
+    );
+    // and a follow-up solver on the same data is a pure hit
+    let _s = engine.solver_for(&data, &kernel);
+    assert_eq!(CacheMetrics::get(&engine.cache.metrics.decompositions), 1);
+    assert!(CacheMetrics::get(&engine.cache.metrics.hits) >= 1);
+}
+
+// ---------- scheduler concurrency ----------
+
+#[test]
+fn concurrent_scheduler_jobs_share_one_eigendecomposition() {
+    let engine = fresh_engine();
+    let sched = Scheduler::with_engine(2, SolveOptions::default(), engine.clone());
+    // two jobs, same dataset content, different τ — dispatched to two
+    // workers that race to set up the same basis
+    let mut rng = Rng::new(6);
+    let dataset = synth::sine_hetero(30, &mut rng);
+    let kernel = Kernel::Rbf { sigma: 0.4 };
+    let jobs = vec![
+        FitJob {
+            id: 1,
+            dataset: dataset.clone(),
+            kernel: kernel.clone(),
+            spec: JobSpec::Kqr { tau: 0.25, lambda: 0.05 },
+        },
+        FitJob {
+            id: 2,
+            dataset: dataset.clone(),
+            kernel: kernel.clone(),
+            spec: JobSpec::Kqr { tau: 0.75, lambda: 0.05 },
+        },
+    ];
+    let rx = sched.submit_batch(jobs);
+    for _ in 0..2 {
+        let (_, res) = rx.recv().unwrap();
+        res.unwrap();
+    }
+    sched.shutdown();
+    assert_eq!(
+        CacheMetrics::get(&engine.cache.metrics.decompositions),
+        1,
+        "two scheduler jobs on one dataset must trigger exactly one eigendecomposition"
+    );
+    assert_eq!(CacheMetrics::get(&engine.cache.metrics.requests), 2);
+}
+
+// ---------- error paths ----------
+
+#[test]
+fn fold_assignment_is_fallible_not_panicking() {
+    let mut rng = Rng::new(7);
+    assert!(fold_assignment(8, 1, &mut rng).is_err());
+    assert!(fold_assignment(8, 9, &mut rng).is_err());
+    let ok = fold_assignment(8, 4, &mut rng).unwrap();
+    assert_eq!(ok.len(), 8);
+}

@@ -1,8 +1,12 @@
 //! Integration tests for the PJRT runtime: the AOT artifact must
 //! reproduce the native APGD recurrence and plug into the full solver.
 //!
-//! Requires `make artifacts` (skipped gracefully otherwise so plain
-//! `cargo test` works before the first artifact build).
+//! Requires the `xla` cargo feature (the whole file is compiled out of
+//! the default build, which ships a stub backend) **and** `make
+//! artifacts` (skipped gracefully otherwise so plain
+//! `cargo test --features xla` works before the first artifact build).
+
+#![cfg(feature = "xla")]
 
 use fastkqr::backend::{Backend, NativeBackend};
 use fastkqr::data::{synth, Rng};
