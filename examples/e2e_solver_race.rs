@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(11);
     let data = synth::yuan(n.min(256), &mut rng);
     let kernel = Kernel::Rbf { sigma: median_heuristic_sigma(&data.x) };
-    let solver = KqrSolver::new(&data.x, &data.y, kernel);
+    let solver = KqrSolver::new(&data.x, &data.y, kernel)?;
     let lams = solver.lambda_grid(8, 1.0, 1e-3);
     let mut native = NativeBackend::new();
     let t = Timer::start("native");

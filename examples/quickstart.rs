@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
     let kernel = Kernel::Rbf { sigma: median_heuristic_sigma(&data.x) };
 
     // 3. one solver = one eigendecomposition, reused across all fits
-    let solver = KqrSolver::new(&data.x, &data.y, kernel);
+    let solver = KqrSolver::new(&data.x, &data.y, kernel)?;
 
     println!("n = {}, kernel = {:?}\n", data.n(), solver.kernel);
     println!("{:<6} {:>12} {:>10} {:>8} {:>10}", "tau", "objective", "iters", "KKT", "|S|");

@@ -1,0 +1,32 @@
+//! Grid-solve trajectory: sequential per-cell `fit_grid` (BLAS-2) vs the
+//! lockstep bundle driver (BLAS-3) on a τ×λ grid, packed-GEMM GFLOP/s and
+//! the lockstep-vs-oracle parity deviation. Writes the machine-readable
+//! baseline to `BENCH_grid.json` (override with `--out`), so the perf
+//! trajectory of future PRs has a recorded starting point.
+//!
+//! Acceptance tracking (ISSUE 2): at n ≥ 512 on an 8×8 grid the lockstep
+//! path should be ≥ 2× faster end-to-end, with `parity_max_abs ≤ 1e-10`.
+use fastkqr::experiments::perf;
+use fastkqr::linalg::par;
+use fastkqr::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 512);
+    let taus = args.get_usize("taus", 8);
+    let lams = args.get_usize("lams", 8);
+    let reps = args.get_usize("reps", 3);
+    let out = args.get_str("out", "BENCH_grid.json").to_string();
+    println!(
+        "-- grid solve: sequential (BLAS-2) vs lockstep (BLAS-3), {} threads --",
+        par::global().threads
+    );
+    let gb = perf::grid_bench(n, taus, lams, reps).expect("grid bench");
+    println!("{}", gb.seq.report_line());
+    println!("{}", gb.lockstep.report_line());
+    println!("   {:.2}x speedup on the {taus}x{lams} grid at n={n}", gb.speedup);
+    println!("{}  ({:.2} GFLOP/s packed gemm)", gb.gemm.report_line(), gb.gemm_gflops);
+    println!("   lockstep-vs-oracle parity: max |Δ(b,α)| = {:.3e}", gb.parity_max_abs);
+    std::fs::write(&out, gb.to_json().to_string()).expect("write BENCH_grid.json");
+    println!("wrote {out}");
+}

@@ -15,6 +15,11 @@ fn main() {
         let (stats, gbps) = perf::gemv_throughput(n, reps);
         println!("{}  ({gbps:.2} GB/s effective)", stats.report_line());
     }
+    println!("-- packed tiled GEMM (tiles via FASTKQR_GEMM_MC/KC/NC) --");
+    for n in args.get_usize_list("gemm-ns", &[256, 512]) {
+        let (stats, gflops) = perf::gemm_gflops(n, reps.min(5));
+        println!("{}  ({gflops:.2} GFLOP/s)", stats.report_line());
+    }
     println!(
         "-- parallel substrate: serial vs {} threads (FASTKQR_THREADS to override) --",
         par::global().threads

@@ -86,7 +86,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let x = Matrix::from_fn(20, 1, |_, _| rng.uniform());
         let k = Kernel::Rbf { sigma: 0.5 }.gram(&x);
-        let basis = SpectralBasis::new(&k);
+        let basis = SpectralBasis::new(&k).unwrap();
         let y: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
         let plan = SpectralPlan::new(&basis, 0.25, 0.01);
 

@@ -192,7 +192,7 @@ mod tests {
         let d = synth::sine_hetero(50, &mut rng);
         let sigma = median_heuristic_sigma(&d.x);
         let kernel = Kernel::Rbf { sigma };
-        let solver = KqrSolver::new(&d.x, &d.y, kernel.clone());
+        let solver = KqrSolver::new(&d.x, &d.y, kernel.clone()).unwrap();
         for (tau, lam) in [(0.5, 0.05), (0.1, 0.01), (0.9, 0.2)] {
             let fast = solver.fit(tau, lam).unwrap();
             let ipm =

@@ -248,7 +248,7 @@ mod tests {
         let d = synth::sine_hetero(40, &mut rng);
         let sigma = median_heuristic_sigma(&d.x);
         let kernel = Kernel::Rbf { sigma };
-        let solver = KqrSolver::new(&d.x, &d.y, kernel);
+        let solver = KqrSolver::new(&d.x, &d.y, kernel).unwrap();
         let fast = solver.fit(0.5, 0.05).unwrap();
         let slow = solve_kqr_lbfgs(&solver.gram, &d.y, 0.5, 0.05, 3000).unwrap();
         // nlm-class solvers land close but (slightly) above the exact optimum

@@ -151,7 +151,7 @@ mod tests {
         let mut rng = Rng::new(6);
         let d = synth::sine_hetero(25, &mut rng);
         let kernel = Kernel::Rbf { sigma: 0.5 };
-        let solver = KqrSolver::new(&d.x, &d.y, kernel);
+        let solver = KqrSolver::new(&d.x, &d.y, kernel).unwrap();
         let fast = solver.fit(0.5, 0.05).unwrap();
         let nm = solve_kqr_nelder_mead(&solver.gram, &d.y, 0.5, 0.05, 20_000).unwrap();
         assert!(nm.objective.is_finite());

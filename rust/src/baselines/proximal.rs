@@ -215,7 +215,7 @@ mod tests {
         let d = synth::sine_hetero(25, &mut rng);
         let kernel = Kernel::Rbf { sigma: 0.5 };
         let taus = [0.25, 0.75];
-        let nc = NckqrSolver::new(&d.x, &d.y, kernel, &taus);
+        let nc = NckqrSolver::new(&d.x, &d.y, kernel, &taus).unwrap();
         let exact = nc.fit(1.0, 0.1).unwrap();
         let prox =
             solve_nckqr_proximal(&nc.gram, &d.y, &taus, 1.0, 0.1, 200_000, 1e-7).unwrap();

@@ -154,7 +154,7 @@ fn dispatch(state: &ProtocolState, req: &Json) -> Result<Json> {
             let tau = req.get_f64("tau").ok_or_else(|| anyhow!("missing 'tau'"))?;
             let lambda = req.get_f64("lambda").ok_or_else(|| anyhow!("missing 'lambda'"))?;
             let kernel = kernel_from_json(req.get("kernel"), &x)?;
-            let solver = state.engine.solver_with_options(&x, &y, &kernel, state.opts.clone());
+            let solver = state.engine.solver_with_options(&x, &y, &kernel, state.opts.clone())?;
             let fit = solver.fit(tau, lambda)?;
             Metrics::incr(&state.metrics.fits_total);
             let resp = Json::obj(vec![
@@ -173,7 +173,7 @@ fn dispatch(state: &ProtocolState, req: &Json) -> Result<Json> {
             let lam1 = req.get_f64("lam1").ok_or_else(|| anyhow!("missing 'lam1'"))?;
             let lam2 = req.get_f64("lam2").ok_or_else(|| anyhow!("missing 'lam2'"))?;
             let kernel = kernel_from_json(req.get("kernel"), &x)?;
-            let solver = NckqrSolver::new(&x, &y, kernel, &taus);
+            let solver = NckqrSolver::new(&x, &y, kernel, &taus)?;
             let fit = solver.fit(lam1, lam2)?;
             Metrics::incr(&state.metrics.fits_total);
             let crossings = fit.count_crossings(&x, 1e-9);

@@ -92,6 +92,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let d = synth::sine_hetero(20, &mut rng);
         let fit = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma: 0.5 })
+            .unwrap()
             .fit(0.5, 0.1)
             .unwrap();
         let reg = ModelRegistry::new();
@@ -112,6 +113,7 @@ mod tests {
         let mut rng = Rng::new(2);
         let d = synth::sine_hetero(15, &mut rng);
         let fit = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma: 0.5 })
+            .unwrap()
             .fit(0.5, 0.1)
             .unwrap();
         let reg = ModelRegistry::new();

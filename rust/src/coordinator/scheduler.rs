@@ -202,7 +202,7 @@ fn run_job(
                 &job.dataset.y,
                 &job.kernel,
                 opts.clone(),
-            );
+            )?;
             let mut backend = NativeBackend::new();
             let mut state = match warm.take() {
                 Some(w) if w.key == key && w.tau == *tau => w.state,
@@ -220,7 +220,7 @@ fn run_job(
                 &job.dataset.y,
                 &job.kernel,
                 opts.clone(),
-            );
+            )?;
             let fits = solver.fit_path(*tau, lambdas)?;
             Metrics::add(&metrics.fits_total, fits.len() as u64);
             Metrics::add(
@@ -230,7 +230,7 @@ fn run_job(
             Ok(JobOutcome::Kqr(fits))
         }
         JobSpec::Nckqr { taus, lam1, lam2 } => {
-            let solver = NckqrSolver::new(&job.dataset.x, &job.dataset.y, job.kernel.clone(), taus);
+            let solver = NckqrSolver::new(&job.dataset.x, &job.dataset.y, job.kernel.clone(), taus)?;
             let fit = solver.fit(*lam1, *lam2)?;
             Metrics::incr(&metrics.fits_total);
             Ok(JobOutcome::Nckqr(fit))

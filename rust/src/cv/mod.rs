@@ -125,7 +125,16 @@ pub fn cross_validate_on(
                 .collect();
             handles
                 .into_iter()
-                .flat_map(|h| h.join().expect("cv fold worker panicked"))
+                .flat_map(|h| {
+                    // A poisoned fold worker becomes an error on this CV
+                    // run, not a process abort.
+                    h.join().unwrap_or_else(|p| {
+                        vec![Err(anyhow::anyhow!(
+                            "cv fold worker panicked: {}",
+                            crate::util::panic_message(&p)
+                        ))]
+                    })
+                })
                 .collect()
         })
     } else {
@@ -158,7 +167,7 @@ pub fn cross_validate_on(
     // the (truncated) path; the full-data basis lands in the cache so a
     // follow-up predict/fit job on the same dataset is free of setup.
     let refit = {
-        let solver = engine.solver_with_options(&data.x, &data.y, kernel, opts.clone());
+        let solver = engine.solver_with_options(&data.x, &data.y, kernel, opts.clone())?;
         let path: Vec<f64> = lambdas[..=best_index].to_vec();
         let mut fits = solver.fit_path(tau, &path)?;
         fits.pop()
@@ -183,7 +192,7 @@ fn fold_losses(
     lambdas: &[f64],
     opts: &SolveOptions,
 ) -> Result<Vec<f64>> {
-    let solver = engine.solver_with_options(&train.x, &train.y, kernel, opts.clone());
+    let solver = engine.solver_with_options(&train.x, &train.y, kernel, opts.clone())?;
     let path = solver.fit_path(tau, lambdas)?;
     Ok(path
         .iter()
@@ -241,7 +250,7 @@ mod tests {
         let data = synth::sine_hetero(90, &mut rng);
         let sigma = crate::kernel::median_heuristic_sigma(&data.x);
         let kernel = Kernel::Rbf { sigma };
-        let solver = KqrSolver::new(&data.x, &data.y, kernel.clone());
+        let solver = KqrSolver::new(&data.x, &data.y, kernel.clone()).unwrap();
         let lams = solver.lambda_grid(8, 10.0, 1e-6);
         let res =
             cross_validate(&data, &kernel, 0.5, &lams, 4, &SolveOptions::default(), &mut rng)

@@ -18,6 +18,7 @@
 use crate::kernel::Kernel;
 use crate::linalg::Matrix;
 use crate::spectral::SpectralBasis;
+use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -161,9 +162,10 @@ pub fn fingerprint(x: &Matrix, y: &[f64], kernel: &Kernel) -> Fingerprint {
 }
 
 /// One cache slot: filled at most once, concurrent fillers coalesce on
-/// the `OnceLock`.
+/// the `OnceLock`. Failed builds (non-PSD kernel matrix) are cached as
+/// the error message so repeated bad payloads don't re-decompose either.
 struct Slot {
-    cell: OnceLock<Arc<BasisEntry>>,
+    cell: OnceLock<Result<Arc<BasisEntry>, String>>,
 }
 
 struct SlotMap {
@@ -209,8 +211,14 @@ impl GramCache {
     /// computing it at most once per fingerprint even under concurrent
     /// callers: the first caller builds (Gram construction runs on the
     /// parallel substrate), later callers block on the in-flight slot and
-    /// then share the `Arc`s.
-    pub fn get_or_compute(&self, x: &Matrix, y: &[f64], kernel: &Kernel) -> Arc<BasisEntry> {
+    /// then share the `Arc`s. Errors (only) when the kernel matrix is not
+    /// PSD — see [`SpectralBasis::new`]; the error is cached too.
+    pub fn get_or_compute(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        kernel: &Kernel,
+    ) -> Result<Arc<BasisEntry>> {
         let key = fingerprint(x, y, kernel);
         CacheMetrics::incr(&self.metrics.requests);
         let slot = {
@@ -246,14 +254,16 @@ impl GramCache {
                 CacheMetrics::incr(&self.metrics.misses);
                 CacheMetrics::incr(&self.metrics.decompositions);
                 let gram = Arc::new(kernel.gram(x));
-                let basis = Arc::new(SpectralBasis::new(&gram));
-                Arc::new(BasisEntry { gram, basis })
+                match SpectralBasis::new(&gram) {
+                    Ok(basis) => Ok(Arc::new(BasisEntry { gram, basis: Arc::new(basis) })),
+                    Err(e) => Err(format!("{e:#}")),
+                }
             })
             .clone();
         if !built_here {
             CacheMetrics::incr(&self.metrics.hits);
         }
-        entry
+        entry.map_err(|msg| anyhow!(msg))
     }
 }
 
@@ -291,14 +301,14 @@ mod tests {
         let cache = GramCache::new(4);
         let (x, y) = toy(10, 2);
         let k = Kernel::Rbf { sigma: 1.0 };
-        let a = cache.get_or_compute(&x, &y, &k);
-        let b = cache.get_or_compute(&x, &y, &k);
+        let a = cache.get_or_compute(&x, &y, &k).unwrap();
+        let b = cache.get_or_compute(&x, &y, &k).unwrap();
         assert!(Arc::ptr_eq(&a.basis, &b.basis), "hit must share the Arc");
         assert_eq!(CacheMetrics::get(&cache.metrics.requests), 2);
         assert_eq!(CacheMetrics::get(&cache.metrics.decompositions), 1);
         assert_eq!(CacheMetrics::get(&cache.metrics.hits), 1);
         let (x2, y2) = toy(10, 3);
-        cache.get_or_compute(&x2, &y2, &k);
+        cache.get_or_compute(&x2, &y2, &k).unwrap();
         assert_eq!(CacheMetrics::get(&cache.metrics.decompositions), 2);
         assert_eq!(cache.len(), 2);
     }
@@ -309,13 +319,13 @@ mod tests {
         let k = Kernel::Rbf { sigma: 1.0 };
         for seed in 0..3u64 {
             let (x, y) = toy(8, 100 + seed);
-            cache.get_or_compute(&x, &y, &k);
+            cache.get_or_compute(&x, &y, &k).unwrap();
         }
         assert_eq!(cache.len(), 2);
         assert_eq!(CacheMetrics::get(&cache.metrics.evictions), 1);
         // the first entry was evicted: asking again recomputes
         let (x0, y0) = toy(8, 100);
-        cache.get_or_compute(&x0, &y0, &k);
+        cache.get_or_compute(&x0, &y0, &k).unwrap();
         assert_eq!(CacheMetrics::get(&cache.metrics.decompositions), 4);
     }
 
@@ -329,7 +339,7 @@ mod tests {
                 let cache = cache.clone();
                 let (x, y, k) = (&x, &y, &k);
                 s.spawn(move || {
-                    cache.get_or_compute(x, y, k);
+                    cache.get_or_compute(x, y, k).unwrap();
                 });
             }
         });

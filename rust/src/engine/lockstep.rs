@@ -1,0 +1,395 @@
+//! The BLAS-3 lockstep grid driver.
+//!
+//! `FitEngine::fit_grid`'s sequential path runs each (τ, λ) cell as its
+//! own APGD iteration stream: two O(n²) GEMVs per iteration per cell,
+//! each re-streaming the n×n eigenbasis U from memory. This driver
+//! advances all *ready* cells of the grid together in lockstep bundles:
+//! one bundle iteration costs two GEMMs against U (`linalg::gemm`) for
+//! the whole bundle — U is streamed once per iteration instead of once
+//! per cell per iteration.
+//!
+//! **Wavefront scheduling.** The warm-start graph of the sequential
+//! oracle is preserved exactly: cell (t, l+1) seeds from (t, l)'s final
+//! iterate and γ-ladder position, and each column head (t+1, 0) seeds
+//! from (t, 0)'s solution. Cells whose seeds are available form the
+//! active bundle; a cell that converges retires immediately (its bundle
+//! row is repacked out via swap-remove) and unlocks its successors, which
+//! join the bundle at the next chunk boundary. For a T×L grid the bundle
+//! ramps up along the warm-start anti-diagonal (peak width ≤ T).
+//!
+//! **Exact parity.** Each cell runs the *identical* finite-smoothing
+//! state machine as `KqrSolver::fit_warm_from` — same chunked APGD
+//! convergence checks, same eq.-(8) projection and set-expansion rounds,
+//! same KKT certificate, γ-ladder and stall bookkeeping — and the
+//! lockstep GEMMs compute each cell's column in the serial GEMV
+//! accumulation order (see `linalg::gemm`). All per-cell glue runs inside
+//! a [`par::serial_scope`], so against a sequential oracle that uses
+//! serial GEMV kernels (always the case for a multi-column grid on a
+//! threaded engine, and for any grid inside a serial scope) the fits are
+//! **bitwise identical**. `rust/tests/lockstep.rs` pins this down.
+
+use super::FitEngine;
+use crate::kqr::apgd::{
+    exact_objective, run_chunk_lockstep, ApgdState, ApgdWorkspace, LockstepCell,
+    LockstepWorkspace,
+};
+use crate::kqr::kkt::{kkt_check, KktReport};
+use crate::kqr::{project_equality, KqrFit, KqrSolver};
+use crate::linalg::{amax, par};
+use crate::spectral::SpectralPlan;
+use anyhow::{bail, Result};
+
+/// Bundle accounting from one lockstep grid solve.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LockstepStats {
+    /// Total cells fitted (the τ×λ grid size).
+    pub cells: usize,
+    /// Peak bundle width (cells advanced per GEMM pair).
+    pub max_active: usize,
+    /// Lockstep chunks executed (each = `opts.chunk` bundle iterations).
+    pub chunks: usize,
+    /// Cells retired mid-flight (every cell retires exactly once).
+    pub retired: usize,
+    /// Total APGD iterations across all cells.
+    pub total_iters: usize,
+}
+
+/// Driver-wide context shared by every cell.
+struct Ctx<'a> {
+    solver: &'a KqrSolver,
+    n: usize,
+    /// `opts.apgd_tol` (the tight solve tolerance).
+    tol_abs: f64,
+    /// `opts.kkt_band · max(1, ‖y‖∞)`.
+    band: f64,
+    /// APGD iterations per bundle chunk (1 for the plain-MM ablation).
+    chunk_len: usize,
+}
+
+/// One in-flight grid cell: its coordinates, its per-(γ, λ) plan and the
+/// full per-cell solver state of `KqrSolver::fit_warm_from`, flattened so
+/// the driver can advance it chunk by chunk.
+struct Cell {
+    ti: usize,
+    li: usize,
+    tau: f64,
+    lam: f64,
+    gamma: f64,
+    plan: SpectralPlan,
+    /// Tolerance of the current smoothed solve (tol_gamma, or tol_abs
+    /// during the tight re-solve).
+    cur_tol: f64,
+    /// Currently in the post-pass tight re-solve at the same γ?
+    tight: bool,
+    s_hat: Vec<usize>,
+    /// Expansion rounds started in the current `expand_at_gamma`
+    /// equivalent (the first round is counted at entry).
+    rounds_this_expand: usize,
+    iters_this_solve: usize,
+    total_iters: usize,
+    total_expansions: usize,
+    best: Option<Best>,
+    stall: usize,
+    state: ApgdState,
+}
+
+/// Best-scoring γ rung so far (the sequential path's `best` tuple).
+struct Best {
+    score: f64,
+    state: ApgdState,
+    rep: KktReport,
+    gamma: f64,
+    s_hat: Vec<usize>,
+}
+
+impl Cell {
+    fn admit(
+        ctx: &Ctx<'_>,
+        tau: f64,
+        lam: f64,
+        ti: usize,
+        li: usize,
+        state: ApgdState,
+        gamma_start: f64,
+    ) -> Cell {
+        let opts = &ctx.solver.opts;
+        let gamma = gamma_start.clamp(opts.gamma_min, opts.gamma_init);
+        Cell {
+            ti,
+            li,
+            tau,
+            lam,
+            gamma,
+            plan: SpectralPlan::new(&ctx.solver.basis, gamma, lam),
+            cur_tol: ctx.tol_abs.max(0.02 * gamma.min(1.0)),
+            tight: false,
+            s_hat: Vec::new(),
+            rounds_this_expand: 1,
+            iters_this_solve: 0,
+            total_iters: 0,
+            total_expansions: 0,
+            best: None,
+            stall: 0,
+            state,
+        }
+    }
+}
+
+/// Fit the whole τ×λ grid with lockstep bundles. Returns fits indexed
+/// `[tau][lambda]` plus bundle accounting.
+pub(crate) fn fit_grid_lockstep(
+    engine: &FitEngine,
+    solver: &KqrSolver,
+    taus: &[f64],
+    lambdas: &[f64],
+) -> Result<(Vec<Vec<KqrFit>>, LockstepStats)> {
+    for &tau in taus {
+        if !(0.0 < tau && tau < 1.0) {
+            bail!("tau must be in (0,1), got {tau}");
+        }
+    }
+    for &lam in lambdas {
+        if lam <= 0.0 {
+            bail!("lambda must be positive, got {lam}");
+        }
+    }
+    let n = solver.n();
+    let opts = &solver.opts;
+    let ctx = Ctx {
+        solver,
+        n,
+        tol_abs: opts.apgd_tol,
+        band: opts.kkt_band * amax(&solver.y).max(1.0),
+        chunk_len: if opts.nesterov { opts.chunk } else { 1 },
+    };
+    // The batched kernels take an explicit worker count (respecting the
+    // engine budget and any enclosing serial scope); all per-cell glue
+    // then runs inside a serial scope so its GEMVs use the serial kernels
+    // the sequential oracle's column workers use.
+    let workers = engine.config.par.workers_for(n);
+    par::serial_scope(|| drive(&ctx, taus, lambdas, workers))
+}
+
+fn drive(
+    ctx: &Ctx<'_>,
+    taus: &[f64],
+    lambdas: &[f64],
+    workers: usize,
+) -> Result<(Vec<Vec<KqrFit>>, LockstepStats)> {
+    let opts = &ctx.solver.opts;
+    let (t_count, l_count) = (taus.len(), lambdas.len());
+    let mut results: Vec<Vec<Option<KqrFit>>> =
+        (0..t_count).map(|_| (0..l_count).map(|_| None).collect()).collect();
+    let mut stats = LockstepStats { cells: t_count * l_count, ..Default::default() };
+    // (ti, li, seed iterate, γ-ladder start) of cells whose warm-start
+    // dependencies are satisfied.
+    let mut pending: Vec<(usize, usize, ApgdState, f64)> =
+        vec![(0, 0, ApgdState::zeros(ctx.n), opts.gamma_init)];
+    let mut active: Vec<Cell> = Vec::new();
+    let mut ws_bundle = LockstepWorkspace::new();
+    let mut ws = ApgdWorkspace::new(ctx.n);
+    while !pending.is_empty() || !active.is_empty() {
+        for (ti, li, seed, gamma_start) in pending.drain(..) {
+            active.push(Cell::admit(ctx, taus[ti], lambdas[li], ti, li, seed, gamma_start));
+        }
+        stats.max_active = stats.max_active.max(active.len());
+        stats.chunks += 1;
+        // One lockstep chunk over the whole bundle: two GEMMs per
+        // iteration for every active cell together.
+        {
+            let mut bundle: Vec<LockstepCell<'_>> = active
+                .iter_mut()
+                .map(|cell| {
+                    let Cell { tau, plan, state, .. } = cell;
+                    (*tau, &*plan, state)
+                })
+                .collect();
+            run_chunk_lockstep(
+                &ctx.solver.basis,
+                &ctx.solver.y,
+                &mut bundle,
+                &mut ws_bundle,
+                ctx.chunk_len,
+                workers,
+            );
+        }
+        if !opts.nesterov {
+            // plain-MM ablation: chunk of 1 with momentum reset, exactly
+            // like the sequential path
+            for cell in active.iter_mut() {
+                cell.state.restart();
+            }
+        }
+        let mut convs = ws_bundle.conv.clone();
+        // Per-cell post-chunk processing; finished cells retire and are
+        // repacked out of the bundle, unlocking their successors.
+        let mut i = 0;
+        while i < active.len() {
+            match advance_cell(&mut active[i], convs[i], ctx, &mut ws) {
+                None => i += 1,
+                Some(fit) => {
+                    let cell = active.swap_remove(i);
+                    convs.swap_remove(i);
+                    stats.retired += 1;
+                    stats.total_iters += fit.apgd_iters;
+                    if cell.li + 1 < l_count {
+                        // λ-path successor: iterate + γ-ladder carry over
+                        let gamma_start = (fit.gamma_final / opts.gamma_shrink)
+                            .min(opts.gamma_init)
+                            .max(opts.gamma_min);
+                        pending.push((cell.ti, cell.li + 1, cell.state.clone(), gamma_start));
+                    }
+                    if cell.li == 0 && cell.ti + 1 < t_count {
+                        // next column head seeds from this column head's
+                        // solution, γ ladder fresh
+                        let seed = ApgdState::from_solution(
+                            fit.b,
+                            &ctx.solver.basis.beta_from_alpha(&fit.alpha),
+                        );
+                        pending.push((cell.ti + 1, 0, seed, opts.gamma_init));
+                    }
+                    results[cell.ti][cell.li] = Some(fit);
+                }
+            }
+        }
+    }
+    let fits: Vec<Vec<KqrFit>> = results
+        .into_iter()
+        .map(|col| col.into_iter().map(|f| f.expect("every grid cell fitted")).collect())
+        .collect();
+    Ok((fits, stats))
+}
+
+/// Advance one cell's finite-smoothing state machine after a lockstep
+/// chunk (`conv` is its stationarity residual). Returns the finished fit
+/// when the cell terminates; `None` keeps it in the bundle. Mirrors
+/// `KqrSolver::fit_warm_from` + `expand_at_gamma` decision for decision.
+fn advance_cell(
+    cell: &mut Cell,
+    conv: f64,
+    ctx: &Ctx<'_>,
+    ws: &mut ApgdWorkspace,
+) -> Option<KqrFit> {
+    let opts = &ctx.solver.opts;
+    cell.iters_this_solve += ctx.chunk_len;
+    if conv >= cell.cur_tol && cell.iters_this_solve < opts.max_iters {
+        return None; // keep iterating the current smoothed solve
+    }
+    cell.total_iters += cell.iters_this_solve;
+    cell.iters_this_solve = 0;
+    let basis = &ctx.solver.basis;
+    let y = &ctx.solver.y;
+    // --- post-solve of the current expansion round (eq. 8 + E(Ŝ)) ---
+    if !cell.s_hat.is_empty() && cell.s_hat.len() <= ctx.n / 2 && opts.projection {
+        project_equality(
+            &ctx.solver.gram,
+            basis,
+            y,
+            &cell.s_hat,
+            &mut cell.state.b,
+            &mut cell.state.beta,
+            ws,
+        );
+        // (the sequential path restarts twice here — inside project_onto
+        // and after it; restart is idempotent, once is bitwise the same)
+        cell.state.restart();
+    }
+    basis.fitted(cell.state.b, &cell.state.beta, &mut ws.scratch, &mut ws.f);
+    let mut e: Vec<usize> = Vec::new();
+    for i in 0..ctx.n {
+        if (y[i] - ws.f[i]).abs() <= cell.gamma {
+            e.push(i);
+        }
+    }
+    let fixed_point = e == cell.s_hat;
+    if !fixed_point {
+        cell.s_hat = e;
+        if cell.rounds_this_expand < opts.max_expansions {
+            cell.rounds_this_expand += 1;
+            return None; // next expansion round: solve again at cur_tol
+        }
+        // round cap hit: accept the current set, as the sequential loop does
+    }
+    cell.total_expansions += cell.rounds_this_expand;
+    // --- expansion fixed point: exact KKT certificate of problem (2) ---
+    let rep = kkt_check(
+        basis,
+        y,
+        cell.tau,
+        cell.lam,
+        cell.state.b,
+        &cell.state.beta,
+        opts.kkt_tol,
+        ctx.band,
+    );
+    if !cell.tight && rep.pass && cell.cur_tol > ctx.tol_abs {
+        // A pass on a loosely-converged iterate is not trustworthy:
+        // re-solve tightly at the same γ (Ŝ carries over) and re-verify.
+        cell.tight = true;
+        cell.cur_tol = ctx.tol_abs;
+        cell.rounds_this_expand = 1;
+        return None;
+    }
+    cell.tight = false;
+    // --- γ-rung bookkeeping ---
+    let score = rep.max_stationarity.max(rep.intercept);
+    let replace = cell.best.as_ref().map_or(true, |b| score < b.score);
+    if replace {
+        cell.best = Some(Best {
+            score,
+            state: cell.state.clone(),
+            rep: rep.clone(),
+            gamma: cell.gamma,
+            s_hat: cell.s_hat.clone(),
+        });
+        cell.stall = 0;
+    } else {
+        cell.stall += 1;
+    }
+    if rep.pass || cell.stall >= opts.max_stall_rungs {
+        return Some(finish_cell(cell, ctx, ws));
+    }
+    cell.gamma *= opts.gamma_shrink;
+    if cell.gamma < opts.gamma_min {
+        return Some(finish_cell(cell, ctx, ws));
+    }
+    cell.state.restart();
+    cell.plan = SpectralPlan::new(basis, cell.gamma, cell.lam);
+    cell.cur_tol = ctx.tol_abs.max(0.02 * cell.gamma.min(1.0));
+    cell.s_hat.clear();
+    cell.rounds_this_expand = 1;
+    None
+}
+
+/// Emit the fit from the best rung (the sequential return path) and park
+/// the best iterate in `cell.state` so λ-path successors warm-start from
+/// it exactly as the sequential column does.
+fn finish_cell(cell: &mut Cell, ctx: &Ctx<'_>, ws: &mut ApgdWorkspace) -> KqrFit {
+    let best = cell.best.take().expect("at least one gamma level evaluated");
+    cell.state = best.state;
+    let basis = &ctx.solver.basis;
+    let alpha = basis.alpha_from_beta(&cell.state.beta);
+    let objective = exact_objective(
+        basis,
+        cell.lam,
+        &ctx.solver.y,
+        cell.tau,
+        cell.state.b,
+        &cell.state.beta,
+        ws,
+    );
+    KqrFit::assemble(
+        cell.tau,
+        cell.lam,
+        cell.state.b,
+        alpha,
+        objective,
+        best.rep,
+        best.gamma,
+        cell.total_iters,
+        cell.total_expansions,
+        best.s_hat,
+        ctx.solver.x.clone(),
+        ctx.solver.kernel.clone(),
+    )
+}

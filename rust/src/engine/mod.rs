@@ -12,6 +12,12 @@
 //!   provides [`FitEngine::fit_grid`] — a batched τ × λ grid on one
 //!   basis with warm starts in both directions (λ descending within a
 //!   column, τ-adjacent columns seeding each other).
+//! - [`lockstep`]: the BLAS-3 grid driver behind `FASTKQR_LOCKSTEP` /
+//!   [`EngineConfig::lockstep`] — all ready cells of the warm-start
+//!   wavefront advance together as a cell-major bundle (two GEMMs per
+//!   iteration for the whole bundle; converged cells retire via
+//!   swap-remove repacking), with the sequential path kept as the
+//!   bitwise parity oracle.
 //!
 //! Consumers: `cv::cross_validate` runs folds on the engine,
 //! `coordinator::scheduler` workers share one engine (concurrent jobs on
@@ -22,8 +28,10 @@
 //! [`SpectralBasis`]: crate::spectral::SpectralBasis
 
 pub mod cache;
+pub mod lockstep;
 
 pub use cache::{fingerprint, BasisEntry, CacheMetrics, Fingerprint, GramCache};
+pub use lockstep::LockstepStats;
 
 use crate::backend::NativeBackend;
 use crate::data::Dataset;
@@ -32,7 +40,8 @@ use crate::kqr::apgd::ApgdState;
 use crate::kqr::{KqrFit, KqrSolver, SolveOptions};
 use crate::linalg::par::{self, Parallelism};
 use crate::linalg::Matrix;
-use anyhow::{ensure, Result};
+use crate::util::panic_message;
+use anyhow::{anyhow, ensure, Result};
 use std::sync::{Arc, OnceLock};
 
 /// Engine construction knobs.
@@ -45,6 +54,10 @@ pub struct EngineConfig {
     pub cache_capacity: usize,
     /// Default solver options for engine-issued solvers.
     pub opts: SolveOptions,
+    /// Grid solve strategy: `Some(true)` forces the BLAS-3 lockstep
+    /// driver, `Some(false)` the sequential per-cell path, `None` defers
+    /// to the `FASTKQR_LOCKSTEP` environment switch (default: off).
+    pub lockstep: Option<bool>,
 }
 
 impl Default for EngineConfig {
@@ -53,8 +66,20 @@ impl Default for EngineConfig {
             par: par::global(),
             cache_capacity: 16,
             opts: SolveOptions::default(),
+            lockstep: None,
         }
     }
+}
+
+/// The `FASTKQR_LOCKSTEP` switch, read once per process: "1"/"true"/"on"
+/// enable the lockstep grid driver for engines that don't override it.
+fn env_lockstep() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("FASTKQR_LOCKSTEP")
+            .map(|v| matches!(v.trim().to_ascii_lowercase().as_str(), "1" | "true" | "on"))
+            .unwrap_or(false)
+    })
 }
 
 /// Shared, cached, parallel solve layer (see module docs).
@@ -90,8 +115,9 @@ impl FitEngine {
 
     /// A solver for this exact (dataset, kernel), backed by the cached
     /// Gram matrix + eigenbasis (computed on first use), with the
-    /// engine's default options.
-    pub fn solver(&self, x: &Matrix, y: &[f64], kernel: &Kernel) -> KqrSolver {
+    /// engine's default options. Errors when the kernel matrix is not
+    /// PSD (see [`crate::spectral::SpectralBasis::new`]).
+    pub fn solver(&self, x: &Matrix, y: &[f64], kernel: &Kernel) -> Result<KqrSolver> {
         self.solver_with_options(x, y, kernel, self.config.opts.clone())
     }
 
@@ -102,29 +128,45 @@ impl FitEngine {
         y: &[f64],
         kernel: &Kernel,
         opts: SolveOptions,
-    ) -> KqrSolver {
-        let entry = self.cache.get_or_compute(x, y, kernel);
-        KqrSolver::with_basis(x, y, kernel.clone(), entry.gram.clone(), entry.basis.clone())
-            .with_options(opts)
+    ) -> Result<KqrSolver> {
+        let entry = self.cache.get_or_compute(x, y, kernel)?;
+        Ok(
+            KqrSolver::with_basis(x, y, kernel.clone(), entry.gram.clone(), entry.basis.clone())
+                .with_options(opts),
+        )
     }
 
     /// Convenience overload for [`Dataset`] holders.
-    pub fn solver_for(&self, data: &Dataset, kernel: &Kernel) -> KqrSolver {
+    pub fn solver_for(&self, data: &Dataset, kernel: &Kernel) -> Result<KqrSolver> {
         self.solver(&data.x, &data.y, kernel)
+    }
+
+    /// Is the lockstep grid driver enabled for this engine?
+    pub fn lockstep_enabled(&self) -> bool {
+        self.config.lockstep.unwrap_or_else(env_lockstep)
     }
 
     /// Fit the full τ × λ grid on **one** cached eigenbasis.
     ///
-    /// Within each τ column the λ path is warm-started downward exactly
-    /// like `KqrSolver::fit_path` (iterate + γ-ladder position carry
-    /// over, §2.4). Across columns, each τ seeds its first (largest-λ)
-    /// fit from the previous τ's largest-λ solution — quantile curves at
-    /// adjacent levels are close, so this is the second warm-start
-    /// direction. When the engine has >1 thread and several columns, the
-    /// τ columns are chunked onto scoped threads (bounded by the engine's
-    /// budget; cross-column seeding then applies within each chunk) and
-    /// each worker runs its solves with intra-op parallelism disabled to
-    /// avoid oversubscription.
+    /// Two strategies, selected by [`EngineConfig::lockstep`] /
+    /// `FASTKQR_LOCKSTEP`:
+    ///
+    /// - **Sequential (default, the parity oracle).** Within each τ
+    ///   column the λ path is warm-started downward exactly like
+    ///   `KqrSolver::fit_path` (iterate + γ-ladder position carry over,
+    ///   §2.4). Across columns, each τ seeds its first (largest-λ) fit
+    ///   from the previous τ's largest-λ solution. When the engine has
+    ///   >1 thread and several columns, the τ columns are chunked onto
+    ///   scoped threads (cross-column seeding then applies within each
+    ///   chunk) and each worker runs its solves with intra-op parallelism
+    ///   disabled to avoid oversubscription.
+    /// - **Lockstep (BLAS-3).** [`lockstep`] advances every ready cell of
+    ///   the same warm-start wavefront together, so one bundle iteration
+    ///   costs two GEMMs against U instead of two GEMVs per cell. With
+    ///   serial GEMV kernels on the oracle side (always the case for a
+    ///   multi-column grid on a threaded engine, and for any grid inside
+    ///   a serial scope) the per-cell fits are bitwise identical to the
+    ///   single-worker sequential path.
     ///
     /// Returns fits indexed `[tau][lambda]`, matching the input orders.
     pub fn fit_grid(
@@ -137,7 +179,16 @@ impl FitEngine {
     ) -> Result<GridFit> {
         ensure!(!taus.is_empty(), "fit_grid: empty tau grid");
         ensure!(!lambdas.is_empty(), "fit_grid: empty lambda grid");
-        let solver = self.solver(x, y, kernel);
+        let solver = self.solver(x, y, kernel)?;
+        if self.lockstep_enabled() {
+            let (fits, stats) = lockstep::fit_grid_lockstep(self, &solver, taus, lambdas)?;
+            return Ok(GridFit {
+                taus: taus.to_vec(),
+                lambdas: lambdas.to_vec(),
+                fits,
+                lockstep: Some(stats),
+            });
+        }
         // Inside an outer serial scope (e.g. a scheduler worker) the grid
         // must not fan out — the outer level owns the parallelism.
         let workers = if par::in_serial_scope() {
@@ -159,7 +210,14 @@ impl FitEngine {
                     .collect();
                 handles
                     .into_iter()
-                    .map(|h| h.join().expect("fit_grid worker panicked"))
+                    .map(|h| {
+                        // A poisoned worker must not abort a process that
+                        // is serving other jobs: surface the panic as an
+                        // error on this grid only.
+                        h.join().unwrap_or_else(|p| {
+                            Err(anyhow!("fit_grid worker panicked: {}", panic_message(&p)))
+                        })
+                    })
                     .collect()
             });
             let mut all = Vec::with_capacity(taus.len());
@@ -170,7 +228,7 @@ impl FitEngine {
         } else {
             fit_tau_columns(&solver, taus, lambdas)?
         };
-        Ok(GridFit { taus: taus.to_vec(), lambdas: lambdas.to_vec(), fits })
+        Ok(GridFit { taus: taus.to_vec(), lambdas: lambdas.to_vec(), fits, lockstep: None })
     }
 }
 
@@ -223,6 +281,9 @@ pub struct GridFit {
     pub taus: Vec<f64>,
     pub lambdas: Vec<f64>,
     pub fits: Vec<Vec<KqrFit>>,
+    /// Bundle accounting when the lockstep driver produced this grid
+    /// (`None` for the sequential path).
+    pub lockstep: Option<LockstepStats>,
 }
 
 impl GridFit {
@@ -255,12 +316,12 @@ mod tests {
     fn solver_reuses_cached_basis() {
         let engine = FitEngine::new();
         let (data, kernel) = fixture(30, 1);
-        let s1 = engine.solver_for(&data, &kernel);
-        let s2 = engine.solver_for(&data, &kernel);
+        let s1 = engine.solver_for(&data, &kernel).unwrap();
+        let s2 = engine.solver_for(&data, &kernel).unwrap();
         assert!(Arc::ptr_eq(&s1.basis, &s2.basis));
         assert_eq!(CacheMetrics::get(&engine.cache.metrics.decompositions), 1);
         // the cached solver fits exactly like a fresh one
-        let fresh = KqrSolver::new(&data.x, &data.y, kernel.clone());
+        let fresh = KqrSolver::new(&data.x, &data.y, kernel.clone()).unwrap();
         let a = s1.fit(0.5, 0.01).unwrap();
         let b = fresh.fit(0.5, 0.01).unwrap();
         assert!((a.objective - b.objective).abs() < 1e-12);
@@ -283,7 +344,7 @@ mod tests {
             1,
             "a grid is one basis"
         );
-        let cold = KqrSolver::new(&data.x, &data.y, kernel.clone());
+        let cold = KqrSolver::new(&data.x, &data.y, kernel.clone()).unwrap();
         for (ti, &tau) in taus.iter().enumerate() {
             for (li, &lam) in lambdas.iter().enumerate() {
                 let warm = grid.at(ti, li);
@@ -321,5 +382,51 @@ mod tests {
         let (data, kernel) = fixture(10, 4);
         assert!(engine.fit_grid(&data.x, &data.y, &kernel, &[], &[0.1]).is_err());
         assert!(engine.fit_grid(&data.x, &data.y, &kernel, &[0.5], &[]).is_err());
+    }
+
+    #[test]
+    fn lockstep_switch_dispatches_and_agrees() {
+        let (data, kernel) = fixture(30, 5);
+        let taus = [0.3, 0.7];
+        let lambdas = [0.1, 0.01];
+        let seq_engine = FitEngine::with_config(EngineConfig {
+            par: Parallelism::serial(),
+            lockstep: Some(false),
+            ..EngineConfig::default()
+        });
+        let seq = seq_engine.fit_grid(&data.x, &data.y, &kernel, &taus, &lambdas).unwrap();
+        assert!(seq.lockstep.is_none());
+        let lock_engine = FitEngine::with_config(EngineConfig {
+            par: Parallelism::serial(),
+            lockstep: Some(true),
+            ..EngineConfig::default()
+        });
+        let lock = lock_engine.fit_grid(&data.x, &data.y, &kernel, &taus, &lambdas).unwrap();
+        let stats = lock.lockstep.expect("lockstep stats present");
+        assert_eq!(stats.cells, 4);
+        assert_eq!(stats.retired, 4);
+        assert!(stats.max_active >= 1 && stats.chunks > 0);
+        // deep parity is pinned down in tests/lockstep.rs; smoke it here
+        for ti in 0..taus.len() {
+            for li in 0..lambdas.len() {
+                assert_eq!(lock.at(ti, li).b, seq.at(ti, li).b, "({ti},{li})");
+            }
+        }
+    }
+
+    #[test]
+    fn non_psd_kernel_surfaces_as_error_not_panic() {
+        // A linear kernel with a negative offset produces an indefinite
+        // "Gram" matrix; the engine must refuse it loudly.
+        let engine = FitEngine::new();
+        let x = Matrix::from_fn(6, 1, |i, _| i as f64);
+        let y = vec![0.0; 6];
+        let bad = Kernel::Linear { c: -100.0 };
+        let err = engine.solver(&x, &y, &bad).map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("not PSD"), "got: {err}");
+        // and the cached error does not re-decompose
+        let before = CacheMetrics::get(&engine.cache.metrics.decompositions);
+        assert!(engine.solver(&x, &y, &bad).is_err());
+        assert_eq!(CacheMetrics::get(&engine.cache.metrics.decompositions), before);
     }
 }

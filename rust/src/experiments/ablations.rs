@@ -26,7 +26,7 @@ pub struct AblationRow {
     pub value: f64,
 }
 
-fn solver_fixture(n: usize, seed: u64) -> KqrSolver {
+fn solver_fixture(n: usize, seed: u64) -> Result<KqrSolver> {
     let mut rng = Rng::new(seed);
     let d = synth::sine_hetero(n, &mut rng);
     let sigma = median_heuristic_sigma(&d.x);
@@ -35,7 +35,7 @@ fn solver_fixture(n: usize, seed: u64) -> KqrSolver {
 
 /// 1. Spectral plan setup vs dense Cholesky of P per (γ, λ).
 pub fn spectral_vs_dense(n: usize, plans: usize, seed: u64) -> Result<Vec<AblationRow>> {
-    let solver = solver_fixture(n, seed);
+    let solver = solver_fixture(n, seed)?;
     let gammas_lams: Vec<(f64, f64)> = (0..plans)
         .map(|i| (0.25f64.powi((i % 4) as i32), 0.5 * 0.5f64.powi(i as i32 % 8)))
         .collect();
@@ -86,7 +86,7 @@ pub fn spectral_vs_dense(n: usize, plans: usize, seed: u64) -> Result<Vec<Ablati
 
 /// 2. Warm-started path vs cold fits over the same grid.
 pub fn warm_vs_cold(n: usize, nlam: usize, seed: u64) -> Result<Vec<AblationRow>> {
-    let solver = solver_fixture(n, seed);
+    let solver = solver_fixture(n, seed)?;
     let lams = solver.lambda_grid(nlam, 0.5, 1e-4);
     let t = Timer::start("warm");
     let warm_fits = solver.fit_path(0.5, &lams)?;
@@ -128,7 +128,7 @@ pub fn warm_vs_cold(n: usize, nlam: usize, seed: u64) -> Result<Vec<AblationRow>
 
 /// 3 + 4. Nesterov / projection switches.
 pub fn solver_switches(n: usize, seed: u64) -> Result<Vec<AblationRow>> {
-    let base = solver_fixture(n, seed);
+    let base = solver_fixture(n, seed)?;
     let mut rows = Vec::new();
     for (name, nesterov, projection) in [
         ("apgd+proj", true, true),
@@ -142,7 +142,7 @@ pub fn solver_switches(n: usize, seed: u64) -> Result<Vec<AblationRow>> {
         if !nesterov {
             opts.max_iters = 200_000;
         }
-        let solver = solver_fixture(n, seed).with_options(opts);
+        let solver = solver_fixture(n, seed)?.with_options(opts);
         let t = Timer::start(name);
         let fit = solver.fit(0.5, 0.01)?;
         rows.push(AblationRow {
@@ -183,7 +183,7 @@ pub fn nckqr_ridge(n: usize, seed: u64) -> Result<Vec<AblationRow>> {
     let taus = [0.25, 0.75];
     let mut rows = Vec::new();
     // ε = 0 (library default)
-    let nc = NckqrSolver::new(&d.x, &d.y, kernel.clone(), &taus);
+    let nc = NckqrSolver::new(&d.x, &d.y, kernel.clone(), &taus)?;
     let t = Timer::start("eps0");
     let fit0 = nc.fit(1.0, 0.05)?;
     rows.push(AblationRow {

@@ -58,7 +58,7 @@ pub fn run(seed: u64, lam: f64, lam1: f64, grid_len: usize) -> Result<Figure1Res
     let grid: Vec<f64> = grid_m.col(0);
 
     // individually fitted levels (shared eigendecomposition across τ)
-    let solver = KqrSolver::new(&data.x, &data.y, kernel.clone());
+    let solver = KqrSolver::new(&data.x, &data.y, kernel.clone())?;
     let mut curves_individual = Vec::new();
     for &tau in &TAUS {
         let fit = solver.fit(tau, lam)?;
@@ -74,7 +74,7 @@ pub fn run(seed: u64, lam: f64, lam1: f64, grid_len: usize) -> Result<Figure1Res
     opts.mm_tol = 5e-4;
     opts.kkt_tol = 2e-2;
     opts.max_stall_rungs = 2;
-    let nc = NckqrSolver::new(&data.x, &data.y, kernel, &TAUS).with_options(opts);
+    let nc = NckqrSolver::new(&data.x, &data.y, kernel, &TAUS)?.with_options(opts);
     let fit = nc.fit(lam1, lam)?;
     let curves_joint = fit.predict(&grid_m);
     let crossings_joint = count_crossings(&curves_joint, 1e-6);

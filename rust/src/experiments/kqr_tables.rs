@@ -44,7 +44,7 @@ fn run_solver_cv(
                 // fold fits use the loose CV preset (hold-out scoring needs
                 // a stable predictor, not a certificate); the final refit
                 // below runs at full rigor
-                let s = KqrSolver::new(&tr.x, &tr.y, kernel.clone())
+                let s = KqrSolver::new(&tr.x, &tr.y, kernel.clone())?
                     .with_options(SolveOptions::cv_preset());
                 let fits = s.fit_path(tau, lambdas)?;
                 for (li, fit) in fits.iter().enumerate() {
@@ -94,7 +94,7 @@ fn run_solver_cv(
     let lam_star = lambdas[best];
     let obj = match solver {
         "fastkqr" => {
-            let s = KqrSolver::new(&data.x, &data.y, kernel.clone());
+            let s = KqrSolver::new(&data.x, &data.y, kernel.clone())?;
             // warm-started down the path to λ*
             let path: Vec<f64> = lambdas[..=best].to_vec();
             let fits = s.fit_path(tau, &path)?;

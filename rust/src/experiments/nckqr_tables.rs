@@ -133,7 +133,7 @@ fn run_nc_solver(
 ) -> Result<f64> {
     match solver {
         "fastkqr" => {
-            let s = NckqrSolver::new(&data.x, &data.y, kernel.clone(), taus);
+            let s = NckqrSolver::new(&data.x, &data.y, kernel.clone(), taus)?;
             let fits = s.fit_path(lam1, lam2s)?;
             Ok(fits.last().unwrap().objective)
         }

@@ -9,12 +9,14 @@
 
 use crate::backend::{Backend, NativeBackend};
 use crate::data::{synth, Rng};
+use crate::engine::{EngineConfig, FitEngine};
 use crate::kernel::{median_heuristic_sigma, Kernel};
 use crate::kqr::apgd::ApgdState;
 use crate::kqr::KqrSolver;
-use crate::linalg::{blas, gemv, par, Matrix, SymEigen};
+use crate::linalg::{blas, gemm_into, gemv, par, Matrix, SymEigen};
 use crate::spectral::SpectralPlan;
 use crate::util::bench::{run_bench, BenchStats};
+use crate::util::Json;
 use anyhow::Result;
 
 /// GEMV throughput at size n: returns (stats, effective GB/s).
@@ -83,7 +85,7 @@ pub fn chunk_cost(n: usize, reps: usize) -> Result<Vec<BenchStats>> {
     let mut rng = Rng::new(7);
     let d = synth::sine_hetero(n, &mut rng);
     let sigma = median_heuristic_sigma(&d.x);
-    let solver = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma });
+    let solver = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma })?;
     let plan = SpectralPlan::new(&solver.basis, 0.25, 0.01);
     let chunk = solver.opts.chunk;
     let mut out = Vec::new();
@@ -121,9 +123,138 @@ pub fn fit_latency(n: usize, reps: usize) -> BenchStats {
     let mut rng = Rng::new(11);
     let d = synth::sine_hetero(n, &mut rng);
     let sigma = median_heuristic_sigma(&d.x);
-    let solver = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma });
+    let solver = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma }).expect("PSD kernel");
     run_bench(&format!("kqr fit n={n} (basis amortized)"), 1, reps, |_| {
         solver.fit(0.5, 0.01).unwrap().objective
+    })
+}
+
+/// Packed tiled GEMM throughput at size n: returns (stats, GFLOP/s).
+pub fn gemm_gflops(n: usize, reps: usize) -> (BenchStats, f64) {
+    let mut rng = Rng::new(13);
+    let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+    let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+    let mut c = Matrix::zeros(n, n);
+    let stats = run_bench(&format!("packed gemm n={n}"), 1, reps, |_| {
+        gemm_into(&a, &b, &mut c);
+        c.as_slice()[0]
+    });
+    let gflops = 2.0 * (n as f64).powi(3) / stats.median.max(1e-12) / 1e9;
+    (stats, gflops)
+}
+
+/// Result of [`grid_bench`]: the BLAS-2 (sequential) vs BLAS-3 (lockstep)
+/// grid trajectory plus a serial-scope parity measurement.
+pub struct GridBench {
+    pub n: usize,
+    pub taus: usize,
+    pub lambdas: usize,
+    pub seq: BenchStats,
+    pub lockstep: BenchStats,
+    pub speedup: f64,
+    pub gemm: BenchStats,
+    pub gemm_gflops: f64,
+    /// max over grid cells of |Δb| and sup|Δα| between the lockstep path
+    /// and the sequential oracle, both run with serial GEMV kernels.
+    pub parity_max_abs: f64,
+    pub threads: usize,
+}
+
+impl GridBench {
+    /// Machine-readable form (written to `BENCH_grid.json` by
+    /// `benches/grid_lockstep.rs` so future PRs have a perf baseline).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::num(self.n as f64)),
+            ("taus", Json::num(self.taus as f64)),
+            ("lambdas", Json::num(self.lambdas as f64)),
+            ("grid_cells", Json::num((self.taus * self.lambdas) as f64)),
+            ("threads", Json::num(self.threads as f64)),
+            ("blas2_seq_wall_s", Json::num(self.seq.median)),
+            ("blas3_lockstep_wall_s", Json::num(self.lockstep.median)),
+            ("speedup", Json::num(self.speedup)),
+            ("gemm_wall_s", Json::num(self.gemm.median)),
+            ("gemm_gflops", Json::num(self.gemm_gflops)),
+            ("parity_max_abs", Json::num(self.parity_max_abs)),
+        ])
+    }
+}
+
+/// Benchmark the full grid solve: sequential `fit_grid` (BLAS-2, the
+/// oracle) vs the lockstep driver (BLAS-3) on the same t×l (τ, λ) grid,
+/// plus packed-GEMM GFLOP/s and the lockstep-vs-oracle parity deviation.
+pub fn grid_bench(n: usize, t_count: usize, l_count: usize, reps: usize) -> Result<GridBench> {
+    let mut rng = Rng::new(17);
+    let data = synth::sine_hetero(n, &mut rng);
+    let kernel = Kernel::Rbf { sigma: median_heuristic_sigma(&data.x) };
+    let taus: Vec<f64> = (0..t_count).map(|i| (i + 1) as f64 / (t_count + 1) as f64).collect();
+    let lambdas: Vec<f64> = (0..l_count)
+        .map(|i| {
+            if l_count == 1 {
+                1e-1
+            } else {
+                (1e-1f64.ln() + (1e-4f64.ln() - 1e-1f64.ln()) * i as f64 / (l_count - 1) as f64)
+                    .exp()
+            }
+        })
+        .collect();
+
+    let seq_engine = FitEngine::with_config(EngineConfig {
+        lockstep: Some(false),
+        ..EngineConfig::default()
+    });
+    let lock_engine = FitEngine::with_config(EngineConfig {
+        lockstep: Some(true),
+        ..EngineConfig::default()
+    });
+    // warmup = 1 also puts the one-time eigendecomposition in each
+    // engine's cache, so the timed reps measure the solve path only.
+    let seq = run_bench(&format!("grid seq      n={n} {t_count}x{l_count}"), 1, reps, |_| {
+        seq_engine
+            .fit_grid(&data.x, &data.y, &kernel, &taus, &lambdas)
+            .expect("seq grid")
+            .total_iters()
+    });
+    let lockstep =
+        run_bench(&format!("grid lockstep n={n} {t_count}x{l_count}"), 1, reps, |_| {
+            lock_engine
+                .fit_grid(&data.x, &data.y, &kernel, &taus, &lambdas)
+                .expect("lockstep grid")
+                .total_iters()
+        });
+    let speedup = seq.median / lockstep.median.max(1e-12);
+    let (gemm, gflops) = gemm_gflops(n, reps.max(2));
+
+    // Parity vs the oracle: run both paths with serial GEMV kernels (the
+    // arithmetic the multi-column sequential workers use), where the
+    // lockstep path is bitwise-identical by construction.
+    let parity_max_abs = par::serial_scope(|| -> Result<f64> {
+        let a = seq_engine.fit_grid(&data.x, &data.y, &kernel, &taus, &lambdas)?;
+        let b = lock_engine.fit_grid(&data.x, &data.y, &kernel, &taus, &lambdas)?;
+        let mut worst = 0.0f64;
+        for ti in 0..t_count {
+            for li in 0..l_count {
+                let (fa, fb) = (a.at(ti, li), b.at(ti, li));
+                worst = worst.max((fa.b - fb.b).abs());
+                for (x, y) in fa.alpha.iter().zip(&fb.alpha) {
+                    worst = worst.max((x - y).abs());
+                }
+            }
+        }
+        Ok(worst)
+    })?;
+
+    Ok(GridBench {
+        n,
+        taus: t_count,
+        lambdas: l_count,
+        seq,
+        lockstep,
+        speedup,
+        gemm,
+        gemm_gflops: gflops,
+        parity_max_abs,
+        threads: par::global().threads,
     })
 }
 
@@ -143,6 +274,21 @@ mod tests {
         let stats = chunk_cost(32, 3).unwrap();
         assert!(!stats.is_empty());
         assert!(stats[0].median > 0.0);
+    }
+
+    #[test]
+    fn grid_bench_parity_and_shape() {
+        // Timing ratios are machine-dependent (not asserted); the parity
+        // contract is not — lockstep must match the serial oracle.
+        let gb = grid_bench(26, 2, 2, 1).unwrap();
+        assert_eq!((gb.taus, gb.lambdas), (2, 2));
+        assert!(gb.seq.median > 0.0 && gb.lockstep.median > 0.0);
+        assert!(gb.speedup.is_finite() && gb.speedup > 0.0);
+        assert!(gb.gemm_gflops > 0.0);
+        assert!(gb.parity_max_abs <= 1e-10, "parity {}", gb.parity_max_abs);
+        let json = gb.to_json().to_string();
+        assert!(json.contains("\"speedup\""));
+        assert!(json.contains("\"parity_max_abs\""));
     }
 
     #[test]

@@ -24,7 +24,7 @@
 
 use super::Kernel;
 use crate::data::rng::Rng;
-use crate::linalg::{gemm, gemv_t, Matrix, SymEigen};
+use crate::linalg::{gemm_into, gemv_t, Matrix, SymEigen};
 use crate::spectral::SpectralBasis;
 use anyhow::{bail, Result};
 
@@ -79,10 +79,12 @@ pub fn nystrom(x: &Matrix, kernel: &Kernel, m: usize, rng: &mut Rng) -> Result<N
         }
     }
 
-    // BᵀB = W S Wᵀ  (r0 × r0)
+    // BᵀB = W S Wᵀ  (r0 × r0), through the packed tiled GEMM
     let btb = {
         let bt = b.transpose();
-        gemm(&bt, &b)
+        let mut c = Matrix::zeros(r0, r0);
+        gemm_into(&bt, &b, &mut c);
+        c
     };
     let eig_c = SymEigen::new(&btb);
     let smax = eig_c.values.last().copied().unwrap_or(0.0).max(1e-300);
@@ -110,10 +112,12 @@ pub fn nystrom(x: &Matrix, kernel: &Kernel, m: usize, rng: &mut Rng) -> Result<N
         lambda[col] = s;
     }
 
-    // K̃ = B Bᵀ (dense, O(n²·r0))
+    // K̃ = B Bᵀ (dense, O(n²·r0), packed tiled GEMM)
     let gram = {
         let bt = b.transpose();
-        gemm(&b, &bt)
+        let mut c = Matrix::zeros(n, n);
+        gemm_into(&b, &bt, &mut c);
+        c
     };
 
     let ones = vec![1.0; n];
@@ -202,7 +206,7 @@ mod tests {
         // minimizer over the subgradient box), so we assert convergence
         // of the objective rather than `kkt.pass`.
         let (x, y, kernel) = fixture(60, 7);
-        let exact = KqrSolver::new(&x, &y, kernel.clone()).fit(0.5, 1e-2).unwrap();
+        let exact = KqrSolver::new(&x, &y, kernel.clone()).unwrap().fit(0.5, 1e-2).unwrap();
         let mut prev_gap = f64::INFINITY;
         for m in [10usize, 40] {
             let mut rng = Rng::new(8);

@@ -11,6 +11,7 @@
 //! compiled from the L2 JAX program (python/compile/model.py); parity is
 //! enforced by integration tests.
 
+use crate::linalg::Matrix;
 use crate::smooth::h_gamma_prime;
 use crate::spectral::{SpectralBasis, SpectralPlan};
 
@@ -131,6 +132,183 @@ pub fn run_chunk_native(
     t_sup.max(sum_z.abs() / n as f64)
 }
 
+/// Preallocated bundle matrices for the lockstep chunk: per-cell vectors
+/// are the rows of cell-major m×n matrices (plus one data-major n×m
+/// fitted-value matrix, the GEMM output). Reallocated only when the
+/// active bundle shape changes (cell retirement/admission).
+#[derive(Debug)]
+pub struct LockstepWorkspace {
+    m: usize,
+    n: usize,
+    beta: Matrix,
+    beta_prev: Matrix,
+    beta_bar: Matrix,
+    z: Matrix,
+    t: Matrix,
+    dbeta: Matrix,
+    scratch: Matrix,
+    f: Matrix,
+    b: Vec<f64>,
+    b_prev: Vec<f64>,
+    b_bar: Vec<f64>,
+    ck: Vec<f64>,
+    db: Vec<f64>,
+    /// Per-cell stationarity residuals of the last chunk (same definition
+    /// as the [`run_chunk_native`] return value).
+    pub conv: Vec<f64>,
+}
+
+impl Default for LockstepWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LockstepWorkspace {
+    pub fn new() -> LockstepWorkspace {
+        LockstepWorkspace {
+            m: 0,
+            n: 0,
+            beta: Matrix::zeros(0, 0),
+            beta_prev: Matrix::zeros(0, 0),
+            beta_bar: Matrix::zeros(0, 0),
+            z: Matrix::zeros(0, 0),
+            t: Matrix::zeros(0, 0),
+            dbeta: Matrix::zeros(0, 0),
+            scratch: Matrix::zeros(0, 0),
+            f: Matrix::zeros(0, 0),
+            b: Vec::new(),
+            b_prev: Vec::new(),
+            b_bar: Vec::new(),
+            ck: Vec::new(),
+            db: Vec::new(),
+            conv: Vec::new(),
+        }
+    }
+
+    fn ensure(&mut self, m: usize, n: usize) {
+        if self.m == m && self.n == n {
+            return;
+        }
+        self.m = m;
+        self.n = n;
+        self.beta = Matrix::zeros(m, n);
+        self.beta_prev = Matrix::zeros(m, n);
+        self.beta_bar = Matrix::zeros(m, n);
+        self.z = Matrix::zeros(m, n);
+        self.t = Matrix::zeros(m, n);
+        self.dbeta = Matrix::zeros(m, n);
+        self.scratch = Matrix::zeros(m, n);
+        self.f = Matrix::zeros(n, m);
+        self.b = vec![0.0; m];
+        self.b_prev = vec![0.0; m];
+        self.b_bar = vec![0.0; m];
+        self.ck = vec![0.0; m];
+        self.db = vec![0.0; m];
+        self.conv = vec![0.0; m];
+    }
+}
+
+/// One cell of a lockstep bundle: its quantile level, its (γ, λ) plan and
+/// its APGD iterate.
+pub type LockstepCell<'a> = (f64, &'a SpectralPlan, &'a mut ApgdState);
+
+/// Advance every cell of the bundle by `iters` accelerated APGD
+/// iterations in lockstep: per iteration, the whole bundle costs two
+/// GEMMs against U (fitted values + gradient carrier) instead of 2m
+/// GEMVs, plus per-cell O(n) tails.
+///
+/// Cell c's iterate trajectory and its `ws.conv[c]` residual are bitwise
+/// identical to running [`run_chunk_native`] on that cell alone with
+/// serial GEMV kernels, at any `workers` count — the lockstep GEMMs
+/// compute each column/row in the serial accumulation order (see
+/// `linalg::gemm`). That contract is what makes the lockstep grid driver
+/// an exact replica of the sequential oracle.
+pub fn run_chunk_lockstep(
+    basis: &SpectralBasis,
+    y: &[f64],
+    cells: &mut [LockstepCell<'_>],
+    ws: &mut LockstepWorkspace,
+    iters: usize,
+    workers: usize,
+) {
+    let m = cells.len();
+    let n = basis.n;
+    debug_assert_eq!(y.len(), n);
+    if m == 0 {
+        return;
+    }
+    ws.ensure(m, n);
+    // Gather the per-cell iterates into bundle rows.
+    for (c, (_, _, state)) in cells.iter().enumerate() {
+        ws.b[c] = state.b;
+        ws.b_prev[c] = state.b_prev;
+        ws.ck[c] = state.ck;
+        ws.beta.row_mut(c).copy_from_slice(&state.beta);
+        ws.beta_prev.row_mut(c).copy_from_slice(&state.beta_prev);
+    }
+    let plans: Vec<&SpectralPlan> = cells.iter().map(|(_, plan, _)| *plan).collect();
+    for _ in 0..iters {
+        // Per-cell Nesterov extrapolation (b̄, β̄) — each cell carries its
+        // own momentum counter.
+        for c in 0..m {
+            let ck_next = 0.5 * (1.0 + (1.0 + 4.0 * ws.ck[c] * ws.ck[c]).sqrt());
+            let mom = (ws.ck[c] - 1.0) / ck_next;
+            ws.b_bar[c] = ws.b[c] + mom * (ws.b[c] - ws.b_prev[c]);
+            let bar = ws.beta_bar.row_mut(c);
+            for ((bb, cur), prev) in
+                bar.iter_mut().zip(ws.beta.row(c)).zip(ws.beta_prev.row(c))
+            {
+                *bb = cur + mom * (cur - prev);
+            }
+            ws.ck[c] = ck_next; // advance below uses the updated counter
+        }
+        // Fitted values for the whole bundle (GEMM #1).
+        basis.fitted_multi(&ws.b_bar, &ws.beta_bar, &mut ws.scratch, &mut ws.f, workers);
+        // Smoothed-loss gradient carrier z per cell (strided reads of the
+        // n×m fitted matrix; O(nm), negligible next to the GEMMs).
+        for (c, (tau, plan, _)) in cells.iter().enumerate() {
+            let zrow = ws.z.row_mut(c);
+            for (i, (zi, yi)) in zrow.iter_mut().zip(y).enumerate() {
+                *zi = h_gamma_prime(yi - ws.f[(i, c)], *tau, plan.gamma);
+            }
+        }
+        // Spectral P⁻¹ζ step for the whole bundle (GEMM #2 inside).
+        SpectralPlan::step_update_multi(
+            &plans, basis, &ws.z, &ws.beta_bar, &mut ws.t, &mut ws.dbeta, &mut ws.db,
+            workers,
+        );
+        // Advance.
+        for c in 0..m {
+            ws.b_prev[c] = ws.b[c];
+            ws.b[c] = ws.b_bar[c] + ws.db[c];
+            let beta = ws.beta.row_mut(c);
+            let prev = ws.beta_prev.row_mut(c);
+            let bar = ws.beta_bar.row(c);
+            let dbeta = ws.dbeta.row(c);
+            for (((cur, pv), bb), db) in
+                beta.iter_mut().zip(prev.iter_mut()).zip(bar).zip(dbeta)
+            {
+                *pv = *cur;
+                *cur = bb + db;
+            }
+        }
+    }
+    // Stationarity residuals at the final extrapolation point, then
+    // scatter the iterates back.
+    let nf = n as f64;
+    for (c, (_, _, state)) in cells.iter_mut().enumerate() {
+        let t_sup = crate::linalg::amax(ws.t.row(c));
+        let sum_z: f64 = ws.z.row(c).iter().sum();
+        ws.conv[c] = t_sup.max(sum_z.abs() / nf);
+        state.b = ws.b[c];
+        state.b_prev = ws.b_prev[c];
+        state.ck = ws.ck[c];
+        state.beta.copy_from_slice(ws.beta.row(c));
+        state.beta_prev.copy_from_slice(ws.beta_prev.row(c));
+    }
+}
+
 /// Smoothed objective G^γ(b, β) = (1/n) Σ H_{γ,τ}(rᵢ) + (λ/2) βᵀΛβ.
 pub fn smoothed_objective(
     basis: &SpectralBasis,
@@ -186,7 +364,7 @@ mod tests {
         let y: Vec<f64> = (0..n)
             .map(|i| (4.0 * x[(i, 0)]).sin() + 0.3 * rng.normal())
             .collect();
-        (SpectralBasis::new(&k), y)
+        (SpectralBasis::new(&k).unwrap(), y)
     }
 
     #[test]
@@ -250,6 +428,51 @@ mod tests {
         for i in 0..basis.n {
             let g = basis.lambda[i] * (-utz[i] / n + plan.lam * state.beta[i]);
             assert!(g.abs() < 1e-8, "beta gradient [{i}] = {g}");
+        }
+    }
+
+    #[test]
+    fn lockstep_chunk_is_bitwise_per_cell() {
+        // Three cells with distinct (γ, λ, τ) advanced in lockstep must
+        // reproduce three independent serial chunk runs exactly — the
+        // contract the lockstep grid driver's parity rests on.
+        let n = 30;
+        let (basis, y) = fixture(n);
+        let params = [(0.25, 0.01, 0.5), (0.0625, 0.05, 0.2), (1.0, 0.002, 0.8)];
+        let plans: Vec<SpectralPlan> =
+            params.iter().map(|&(g, l, _)| SpectralPlan::new(&basis, g, l)).collect();
+        // serial references
+        let mut serial_states: Vec<ApgdState> =
+            (0..3).map(|_| ApgdState::zeros(n)).collect();
+        let mut serial_convs = vec![0.0; 3];
+        let mut ws_serial = ApgdWorkspace::new(n);
+        for (c, state) in serial_states.iter_mut().enumerate() {
+            for _ in 0..4 {
+                serial_convs[c] = run_chunk_native(
+                    &basis, &plans[c], &y, params[c].2, state, &mut ws_serial, 25,
+                );
+            }
+        }
+        for workers in [1usize, 3] {
+            let mut states: Vec<ApgdState> = (0..3).map(|_| ApgdState::zeros(n)).collect();
+            let mut ws = LockstepWorkspace::new();
+            for _ in 0..4 {
+                let mut cells: Vec<LockstepCell<'_>> = states
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(c, s)| (params[c].2, &plans[c], s))
+                    .collect();
+                run_chunk_lockstep(&basis, &y, &mut cells, &mut ws, 25, workers);
+            }
+            for c in 0..3 {
+                assert_eq!(states[c].b, serial_states[c].b, "workers={workers} cell={c}");
+                assert_eq!(
+                    states[c].beta, serial_states[c].beta,
+                    "workers={workers} cell={c}"
+                );
+                assert_eq!(states[c].ck, serial_states[c].ck, "workers={workers} cell={c}");
+                assert_eq!(ws.conv[c], serial_convs[c], "workers={workers} cell={c}");
+            }
         }
     }
 

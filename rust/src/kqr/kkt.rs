@@ -25,6 +25,7 @@ pub struct KktReport {
 
 /// Evaluate the certificate at (b, β). `tol` is the unitless subgradient
 /// tolerance; `band` the |rᵢ| ≈ 0 width (residual units).
+#[allow(clippy::too_many_arguments)]
 pub fn kkt_check(
     basis: &SpectralBasis,
     y: &[f64],
@@ -104,7 +105,7 @@ mod tests {
         let mut rng = Rng::new(8);
         let x = Matrix::from_fn(12, 1, |_, _| rng.uniform());
         let k = Kernel::Rbf { sigma: 0.7 }.gram(&x);
-        let basis = SpectralBasis::new(&k);
+        let basis = SpectralBasis::new(&k).unwrap();
         let y: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
         // alpha = large constant → g_i = nλα_i way outside [τ−1, τ]
         let alpha = vec![5.0; 12];
@@ -125,7 +126,7 @@ mod tests {
         //   unless r = 0. With an intercept the single-point optimum has
         //   r = 0 (interpolation) and α = 0, g = 0 ∈ [τ−1, τ]. Verify that.
         let k = Matrix::from_vec(1, 1, vec![1.0]);
-        let basis = SpectralBasis::new(&k);
+        let basis = SpectralBasis::new(&k).unwrap();
         let beta = basis.beta_from_alpha(&[0.0]);
         let rep = kkt_check(&basis, &[1.0], 0.5, 0.25, 1.0, &beta, 1e-6, 1e-8);
         assert!(rep.pass, "{rep:?}");
@@ -136,7 +137,7 @@ mod tests {
         // r_i slightly off zero: with a wide band, interior subgradients
         // are acceptable; with a zero band they are not.
         let k = Matrix::from_vec(1, 1, vec![1.0]);
-        let basis = SpectralBasis::new(&k);
+        let basis = SpectralBasis::new(&k).unwrap();
         let tau = 0.5;
         // y=1, fit b=0.999, α=0 → r = 0.001 > 0 needs g = τ = 0.5, but g=0.
         let beta = vec![0.0];

@@ -132,6 +132,40 @@ impl KqrFit {
     pub fn n_train(&self) -> usize {
         self.x_train.rows()
     }
+
+    /// Assemble a fit from solver-owned parts (the lockstep grid driver
+    /// produces fits outside this module but must emit the same
+    /// self-contained value as [`KqrSolver::fit_warm_from`]).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn assemble(
+        tau: f64,
+        lam: f64,
+        b: f64,
+        alpha: Vec<f64>,
+        objective: f64,
+        kkt: KktReport,
+        gamma_final: f64,
+        apgd_iters: usize,
+        expansions: usize,
+        singular_set: Vec<usize>,
+        x_train: Arc<Matrix>,
+        kernel: Kernel,
+    ) -> KqrFit {
+        KqrFit {
+            tau,
+            lam,
+            b,
+            alpha,
+            objective,
+            kkt,
+            gamma_final,
+            apgd_iters,
+            expansions,
+            singular_set,
+            x_train,
+            kernel,
+        }
+    }
 }
 
 /// Per-fit diagnostics accumulated by the solver.
@@ -160,21 +194,23 @@ pub struct KqrSolver {
 
 impl KqrSolver {
     /// Build the solver: computes the Gram matrix and its
-    /// eigendecomposition (the single O(n³) step). Prefer
+    /// eigendecomposition (the single O(n³) step). Errors when the
+    /// kernel matrix is not PSD (broken kernel parameters / data) —
+    /// see [`SpectralBasis::new`]. Prefer
     /// [`crate::engine::FitEngine::solver`] when the same (dataset,
     /// kernel) may be fitted more than once per process.
-    pub fn new(x: &Matrix, y: &[f64], kernel: Kernel) -> KqrSolver {
+    pub fn new(x: &Matrix, y: &[f64], kernel: Kernel) -> Result<KqrSolver> {
         assert_eq!(x.rows(), y.len());
         let gram = Arc::new(kernel.gram(x));
-        let basis = Arc::new(SpectralBasis::new(&gram));
-        KqrSolver {
+        let basis = Arc::new(SpectralBasis::new(&gram)?);
+        Ok(KqrSolver {
             x: Arc::new(x.clone()),
             y: y.to_vec(),
             kernel,
             gram,
             basis,
             opts: SolveOptions::default(),
-        }
+        })
     }
 
     /// Reuse an already-computed Gram matrix and basis (shared across
@@ -528,7 +564,7 @@ mod tests {
         let mut rng = Rng::new(seed);
         let data = synth::sine_hetero(n, &mut rng);
         let sigma = crate::kernel::median_heuristic_sigma(&data.x);
-        KqrSolver::new(&data.x, &data.y, Kernel::Rbf { sigma })
+        KqrSolver::new(&data.x, &data.y, Kernel::Rbf { sigma }).unwrap()
     }
 
     #[test]

@@ -19,15 +19,25 @@
 //!   kernels dispatch into above a size cutoff, with a serial fallback
 //!   that keeps small-n results bitwise unchanged. Configure with
 //!   `FASTKQR_THREADS` / `FASTKQR_PAR_MIN_DIM`.
+//! - [`linalg::gemm`] — the BLAS-3 layer: multi-RHS GEMM entry points
+//!   whose columns/rows are bitwise equal to the serial GEMV kernels
+//!   (the lockstep substrate) plus a packed Mc/Kc/Nc-tiled microkernel
+//!   (`FASTKQR_GEMM_MC`/`_KC`/`_NC`). The O(n³) `tred2` phases of the
+//!   one-time eigendecomposition also run on the parallel substrate.
 //! - [`engine::GramCache`] — content-fingerprinted, `Arc`-shared
 //!   memoization of (dataset, kernel) → (Gram, eigenbasis); the O(n³)
 //!   eigendecomposition runs exactly once per fingerprint per process,
-//!   even under concurrent requests.
+//!   even under concurrent requests. Non-PSD kernel matrices are
+//!   rejected with an error (and the rejection is cached too).
 //! - [`engine::FitEngine`] — hands out cache-backed solvers, batches
 //!   full τ × λ grids on one basis with warm starts in both directions
 //!   ([`engine::FitEngine::fit_grid`]), and bounds the concurrency that
 //!   [`cv::cross_validate`] (parallel folds + final refit) and the
-//!   [`coordinator`] scheduler/server draw on.
+//!   [`coordinator`] scheduler/server draw on. `FASTKQR_LOCKSTEP=1`
+//!   (or `EngineConfig::lockstep`) switches `fit_grid` to the
+//!   [`engine::lockstep`] driver: all ready grid cells advance together,
+//!   two GEMMs per bundle iteration instead of two GEMVs per cell, with
+//!   the sequential path kept as the bitwise parity oracle.
 //!
 //! Quick start (native backend):
 //!
@@ -38,6 +48,7 @@
 //! let data = fastkqr::data::synth::sine_hetero(200, &mut rng);
 //! let kernel = Kernel::Rbf { sigma: median_heuristic_sigma(&data.x) };
 //! let fit = KqrSolver::new(&data.x, &data.y, kernel)
+//!     .expect("PSD kernel")
 //!     .fit(0.5, 1e-2)
 //!     .expect("fit");
 //! let preds = fit.predict(&data.x);
@@ -65,7 +76,7 @@ pub mod prelude {
     pub use crate::backend::Backend;
     pub use crate::cv::{cross_validate, CvResult};
     pub use crate::data::{Dataset, Rng};
-    pub use crate::engine::{FitEngine, GridFit};
+    pub use crate::engine::{EngineConfig, FitEngine, GridFit, LockstepStats};
     pub use crate::kernel::{median_heuristic_sigma, Kernel};
     pub use crate::kqr::{KqrFit, KqrSolver, SolveOptions};
     pub use crate::nckqr::{NckqrFit, NckqrSolver};

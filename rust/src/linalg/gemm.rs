@@ -1,0 +1,428 @@
+//! BLAS-3 kernels for the lockstep grid solver (engine L1).
+//!
+//! The lockstep driver advances a *bundle* of m grid cells per iteration,
+//! turning the solver's two per-cell GEMVs against the n×n eigenbasis U
+//! into two GEMMs that stream U **once** for the whole bundle instead of
+//! once per cell — the bandwidth-to-compute upgrade that makes grid-heavy
+//! CV/server traffic run at hardware speed. Three entry points:
+//!
+//! - [`gemm_nt_into`]: `C = A·Bᵀ` with every element computed by the
+//!   *identical* 4-way unrolled serial dot product (`blas::dot`), so each
+//!   column of C is **bitwise equal** to `gemv(A, b_row)`. Row-band
+//!   parallel; used for the multi-RHS fitted values `F = U·(Λ∘B̄)`.
+//! - [`gemm_nn_into`]: `C = A·B` accumulated in the k-ascending axpy
+//!   order of `gemv_t_serial` (including its zero-skip), so each row of C
+//!   is **bitwise equal** to `gemv_t(B, a_row)`. Column-stripe parallel
+//!   with per-thread stripe buffers (each thread streams only its column
+//!   slice of B — B is read exactly once in total); used for the
+//!   multi-RHS gradient carrier `T = Uᵀ·Z`.
+//! - [`gemm_into`]: a cache-blocked, panel-packed Mc/Kc/Nc tiled GEMM
+//!   with a 4×4 register microkernel, row-band parallel over Mc blocks.
+//!   This one re-associates the k-reduction across Kc panels (it is NOT
+//!   bitwise comparable to the GEMV kernels) and is the right tool for
+//!   large one-time products (Nyström factors, benchmarking GFLOP/s).
+//!   Tile sizes come from `FASTKQR_GEMM_MC` / `_KC` / `_NC`.
+//!
+//! The bitwise contracts are what let the lockstep solve path reproduce
+//! the sequential `fit_grid` oracle exactly (see `engine::lockstep`).
+
+use super::blas::{axpy, dot};
+use super::matrix::Matrix;
+use super::par::block_size;
+use std::sync::OnceLock;
+
+/// `C = A·Bᵀ` (A: p×k, B: q×k, C: p×q); `c[i][j] = dot(a.row(i), b.row(j))`.
+///
+/// Every element is one contiguous-slice `blas::dot`, so column j of C is
+/// bitwise equal to `gemv_serial(A, b.row(j))` at any worker count. The
+/// loop order (C rows outer, B rows inner) keeps the current A row in L1
+/// across all q dot products — A is streamed once per call, not once per
+/// RHS column, which is the whole BLAS-3 point.
+pub fn gemm_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix, workers: usize) {
+    assert_eq!(a.cols(), b.cols(), "gemm_nt_into: inner dim mismatch");
+    assert_eq!(c.rows(), a.rows(), "gemm_nt_into: C rows mismatch");
+    assert_eq!(c.cols(), b.rows(), "gemm_nt_into: C cols mismatch");
+    let (p, q) = (a.rows(), b.rows());
+    if p == 0 || q == 0 {
+        return;
+    }
+    let w = workers.max(1).min(p);
+    if w <= 1 {
+        for i in 0..p {
+            let arow = a.row(i);
+            let crow = c.row_mut(i);
+            for (j, cij) in crow.iter_mut().enumerate() {
+                *cij = dot(arow, b.row(j));
+            }
+        }
+        return;
+    }
+    let block = block_size(p, w);
+    std::thread::scope(|s| {
+        for (bi, rows) in c.as_mut_slice().chunks_mut(block * q).enumerate() {
+            let r0 = bi * block;
+            s.spawn(move || {
+                for (r, crow) in rows.chunks_mut(q).enumerate() {
+                    let arow = a.row(r0 + r);
+                    for (j, cij) in crow.iter_mut().enumerate() {
+                        *cij = dot(arow, b.row(j));
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// `C = A·B` (A: m×k, B: k×n, C: m×n) in the k-ascending axpy order of
+/// `gemv_t_serial`: row r of C is bitwise equal to `gemv_t(B, a.row(r))`
+/// at any worker count (same accumulation order, same zero-skip).
+///
+/// Serial path streams B exactly once for all m rows (k outer, rows
+/// inner; the C rows act as m in-cache accumulators). The parallel path
+/// stripes the *columns* of B/C: each thread accumulates its stripe in a
+/// private buffer while reading only its contiguous column slice of each
+/// B row, so B is still read exactly once in total and per-element
+/// accumulation order is unchanged.
+pub fn gemm_nn_into(a: &Matrix, b: &Matrix, c: &mut Matrix, workers: usize) {
+    assert_eq!(a.cols(), b.rows(), "gemm_nn_into: inner dim mismatch");
+    assert_eq!(c.rows(), a.rows(), "gemm_nn_into: C rows mismatch");
+    assert_eq!(c.cols(), b.cols(), "gemm_nn_into: C cols mismatch");
+    let (m, kdim, nn) = (a.rows(), a.cols(), b.cols());
+    c.as_mut_slice().fill(0.0);
+    if m == 0 || nn == 0 || kdim == 0 {
+        return;
+    }
+    let w = workers.max(1).min(nn);
+    if w <= 1 {
+        for k in 0..kdim {
+            let brow = b.row(k);
+            for r in 0..m {
+                let ark = a[(r, k)];
+                if ark != 0.0 {
+                    axpy(ark, brow, c.row_mut(r));
+                }
+            }
+        }
+        return;
+    }
+    let stripe = block_size(nn, w);
+    let mut stripes: Vec<(usize, Matrix)> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        let mut j0 = 0usize;
+        while j0 < nn {
+            let j1 = (j0 + stripe).min(nn);
+            handles.push((
+                j0,
+                s.spawn(move || {
+                    let mut buf = Matrix::zeros(m, j1 - j0);
+                    for k in 0..kdim {
+                        let bslice = &b.row(k)[j0..j1];
+                        for r in 0..m {
+                            let ark = a[(r, k)];
+                            if ark != 0.0 {
+                                axpy(ark, bslice, buf.row_mut(r));
+                            }
+                        }
+                    }
+                    buf
+                }),
+            ));
+            j0 = j1;
+        }
+        for (start, h) in handles {
+            stripes.push((start, h.join().expect("gemm_nn_into worker panicked")));
+        }
+    });
+    for (j0, buf) in &stripes {
+        let wlen = buf.cols();
+        for r in 0..m {
+            c.row_mut(r)[*j0..j0 + wlen].copy_from_slice(buf.row(r));
+        }
+    }
+}
+
+/// Cache-tile sizes for the packed GEMM: C is computed Mc rows × Nc
+/// columns at a time over Kc-deep packed panels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmTiles {
+    /// Row-panel height (A pack is mc×kc, should sit in L2).
+    pub mc: usize,
+    /// Reduction depth per panel (bounds pack buffer size).
+    pub kc: usize,
+    /// Column-panel width (B pack is kc×nc, should sit in L1/L2).
+    pub nc: usize,
+}
+
+impl GemmTiles {
+    pub const DEFAULT: GemmTiles = GemmTiles { mc: 64, kc: 256, nc: 128 };
+
+    /// Environment-driven tiles: `FASTKQR_GEMM_MC` / `FASTKQR_GEMM_KC` /
+    /// `FASTKQR_GEMM_NC` (each ≥ 4), else [`GemmTiles::DEFAULT`]. Read
+    /// once per process.
+    pub fn auto() -> GemmTiles {
+        static AUTO: OnceLock<GemmTiles> = OnceLock::new();
+        *AUTO.get_or_init(|| {
+            let read = |key: &str, dflt: usize| {
+                std::env::var(key)
+                    .ok()
+                    .and_then(|v| v.trim().parse::<usize>().ok())
+                    .filter(|&t| t >= 4)
+                    .unwrap_or(dflt)
+            };
+            GemmTiles {
+                mc: read("FASTKQR_GEMM_MC", Self::DEFAULT.mc),
+                kc: read("FASTKQR_GEMM_KC", Self::DEFAULT.kc),
+                nc: read("FASTKQR_GEMM_NC", Self::DEFAULT.nc),
+            }
+        })
+    }
+}
+
+/// `C = A·B` through the packed tiled kernel, with env-configured tiles
+/// and the global parallel budget (row-banded above the serial cutoff).
+///
+/// The Kc panel split re-associates each k-reduction, so results agree
+/// with [`super::blas::gemm`] to rounding, not bitwise — use this for
+/// large one-time products, not for anything the lockstep parity
+/// contract covers.
+pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let dim = a.rows().min(a.cols()).min(b.cols());
+    let workers = super::par::global().workers_for(dim);
+    gemm_into_tiled(a, b, c, GemmTiles::auto(), workers);
+}
+
+/// [`gemm_into`] with explicit tiles and worker count.
+pub fn gemm_into_tiled(a: &Matrix, b: &Matrix, c: &mut Matrix, tiles: GemmTiles, workers: usize) {
+    assert_eq!(a.cols(), b.rows(), "gemm_into: inner dim mismatch");
+    assert_eq!(c.rows(), a.rows(), "gemm_into: C rows mismatch");
+    assert_eq!(c.cols(), b.cols(), "gemm_into: C cols mismatch");
+    let (m, kdim, nn) = (a.rows(), a.cols(), b.cols());
+    c.as_mut_slice().fill(0.0);
+    if m == 0 || nn == 0 || kdim == 0 {
+        return;
+    }
+    let w = workers.max(1).min(m);
+    if w <= 1 {
+        packed_band(a, b, c.as_mut_slice(), 0, m, nn, tiles);
+        return;
+    }
+    let block = block_size(m, w);
+    std::thread::scope(|s| {
+        for (bi, rows) in c.as_mut_slice().chunks_mut(block * nn).enumerate() {
+            let r0 = bi * block;
+            let rows_here = rows.len() / nn;
+            s.spawn(move || packed_band(a, b, rows, r0, rows_here, nn, tiles));
+        }
+    });
+}
+
+/// Packed tiled GEMM for one contiguous row band of C (`crows` holds
+/// `m_band` rows of width `nn`, starting at global row `r0`).
+fn packed_band(
+    a: &Matrix,
+    b: &Matrix,
+    crows: &mut [f64],
+    r0: usize,
+    m_band: usize,
+    nn: usize,
+    tiles: GemmTiles,
+) {
+    let kdim = a.cols();
+    let mut apack = vec![0.0f64; tiles.mc * tiles.kc];
+    let mut bpack = vec![0.0f64; tiles.kc * tiles.nc];
+    for kb in (0..kdim).step_by(tiles.kc) {
+        let k_eff = tiles.kc.min(kdim - kb);
+        for jb in (0..nn).step_by(tiles.nc) {
+            let n_eff = tiles.nc.min(nn - jb);
+            // pack B panel (k_eff × n_eff, row-major)
+            for kk in 0..k_eff {
+                bpack[kk * n_eff..(kk + 1) * n_eff]
+                    .copy_from_slice(&b.row(kb + kk)[jb..jb + n_eff]);
+            }
+            for ib in (0..m_band).step_by(tiles.mc) {
+                let m_eff = tiles.mc.min(m_band - ib);
+                // pack A panel (m_eff × k_eff, row-major)
+                for ir in 0..m_eff {
+                    apack[ir * k_eff..(ir + 1) * k_eff]
+                        .copy_from_slice(&a.row(r0 + ib + ir)[kb..kb + k_eff]);
+                }
+                micro_tile(
+                    &apack[..m_eff * k_eff],
+                    &bpack[..k_eff * n_eff],
+                    m_eff,
+                    k_eff,
+                    n_eff,
+                    crows,
+                    ib,
+                    jb,
+                    nn,
+                );
+            }
+        }
+    }
+}
+
+/// 4×4 register-tile microkernel: `C[ib+i][jb+j] += Σ_k Apack[i][k]·Bpack[k][j]`.
+#[allow(clippy::too_many_arguments)]
+fn micro_tile(
+    apack: &[f64],
+    bpack: &[f64],
+    m_eff: usize,
+    k_eff: usize,
+    n_eff: usize,
+    crows: &mut [f64],
+    ib: usize,
+    jb: usize,
+    nn: usize,
+) {
+    const MR: usize = 4;
+    const NR: usize = 4;
+    for i0 in (0..m_eff).step_by(MR) {
+        let irn = MR.min(m_eff - i0);
+        for j0 in (0..n_eff).step_by(NR) {
+            let jrn = NR.min(n_eff - j0);
+            if irn == MR && jrn == NR {
+                // Full tile: fixed-bound loops so LLVM keeps the 16
+                // accumulators in registers.
+                let mut acc = [[0.0f64; NR]; MR];
+                for kk in 0..k_eff {
+                    let bofs = kk * n_eff + j0;
+                    let bv = [bpack[bofs], bpack[bofs + 1], bpack[bofs + 2], bpack[bofs + 3]];
+                    for (ir, accr) in acc.iter_mut().enumerate() {
+                        let av = apack[(i0 + ir) * k_eff + kk];
+                        for (jr, av_acc) in accr.iter_mut().enumerate() {
+                            *av_acc += av * bv[jr];
+                        }
+                    }
+                }
+                for (ir, accr) in acc.iter().enumerate() {
+                    let base = (ib + i0 + ir) * nn + jb + j0;
+                    for (jr, v) in accr.iter().enumerate() {
+                        crows[base + jr] += v;
+                    }
+                }
+            } else {
+                // Edge tile: plain scalar loops.
+                for ir in 0..irn {
+                    let arow = &apack[(i0 + ir) * k_eff..(i0 + ir + 1) * k_eff];
+                    let base = (ib + i0 + ir) * nn + jb + j0;
+                    for jr in 0..jrn {
+                        let mut s = 0.0;
+                        for kk in 0..k_eff {
+                            s += arow[kk] * bpack[kk * n_eff + j0 + jr];
+                        }
+                        crows[base + jr] += s;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::linalg::blas;
+
+    fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(rows, cols, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn gemm_nt_columns_bitwise_match_gemv() {
+        let a = random_matrix(37, 23, 1); // plays U
+        let b = random_matrix(5, 23, 2); // bundle rows (cell-major)
+        for workers in [1usize, 2, 4] {
+            let mut c = Matrix::zeros(37, 5);
+            gemm_nt_into(&a, &b, &mut c, workers);
+            for cell in 0..5 {
+                let mut expect = vec![0.0; 37];
+                blas::gemv_serial(&a, b.row(cell), &mut expect);
+                for i in 0..37 {
+                    assert_eq!(c[(i, cell)], expect[i], "workers={workers} cell={cell} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_nn_rows_bitwise_match_gemv_t() {
+        let z = random_matrix(4, 41, 3); // bundle rows (cell-major)
+        let u = random_matrix(41, 29, 4);
+        for workers in [1usize, 2, 5] {
+            let mut t = Matrix::zeros(4, 29);
+            gemm_nn_into(&z, &u, &mut t, workers);
+            for cell in 0..4 {
+                let mut expect = vec![0.0; 29];
+                blas::gemv_t_serial(&u, z.row(cell), &mut expect);
+                assert_eq!(t.row(cell), &expect[..], "workers={workers} cell={cell}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_nn_handles_exact_zeros_like_serial() {
+        // The zero-skip must match gemv_t's; seed exact zeros in A.
+        let mut z = random_matrix(3, 20, 5);
+        for k in (0..20).step_by(3) {
+            z[(1, k)] = 0.0;
+        }
+        let u = random_matrix(20, 11, 6);
+        let mut t1 = Matrix::zeros(3, 11);
+        gemm_nn_into(&z, &u, &mut t1, 1);
+        let mut t4 = Matrix::zeros(3, 11);
+        gemm_nn_into(&z, &u, &mut t4, 4);
+        assert_eq!(t1.as_slice(), t4.as_slice());
+    }
+
+    #[test]
+    fn packed_gemm_matches_reference_across_shapes() {
+        // Shapes straddling the tile boundaries, incl. non-multiples.
+        let tiles = GemmTiles { mc: 8, kc: 16, nc: 8 };
+        for (m, k, n, seed) in
+            [(1usize, 1usize, 1usize, 7u64), (9, 17, 9, 8), (8, 16, 8, 9), (33, 50, 21, 10)]
+        {
+            let a = random_matrix(m, k, seed);
+            let b = random_matrix(k, n, seed + 100);
+            let reference = blas::gemm_serial(&a, &b);
+            for workers in [1usize, 3] {
+                let mut c = Matrix::zeros(m, n);
+                gemm_into_tiled(&a, &b, &mut c, tiles, workers);
+                assert!(
+                    reference.max_abs_diff(&c) < 1e-11,
+                    "m={m} k={k} n={n} workers={workers}: diff {}",
+                    reference.max_abs_diff(&c)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemm_default_entry_point() {
+        let a = random_matrix(30, 40, 11);
+        let b = random_matrix(40, 25, 12);
+        let mut c = Matrix::zeros(30, 25);
+        gemm_into(&a, &b, &mut c);
+        let reference = blas::gemm_serial(&a, &b);
+        assert!(reference.max_abs_diff(&c) < 1e-11);
+    }
+
+    #[test]
+    fn empty_dims_are_noops() {
+        let a = Matrix::zeros(0, 3);
+        let b = Matrix::zeros(4, 3);
+        let mut c = Matrix::zeros(0, 4);
+        gemm_nt_into(&a, &b, &mut c, 2);
+        let a2 = Matrix::zeros(2, 0);
+        let b2 = Matrix::zeros(0, 3);
+        let mut c2 = Matrix::from_fn(2, 3, |_, _| 9.0);
+        gemm_nn_into(&a2, &b2, &mut c2, 2);
+        assert!(c2.as_slice().iter().all(|&v| v == 0.0), "C must be cleared");
+        let mut c3 = Matrix::from_fn(2, 3, |_, _| 9.0);
+        gemm_into_tiled(&a2, &b2, &mut c3, GemmTiles::DEFAULT, 2);
+        assert!(c3.as_slice().iter().all(|&v| v == 0.0));
+    }
+}

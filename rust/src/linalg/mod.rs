@@ -3,19 +3,27 @@
 //! - [`matrix::Matrix`]: row-major dense matrix
 //! - [`blas`]: dot/axpy/GEMV/GEMM kernels (the O(n²) hot path), each
 //!   dispatching to the parallel substrate above a size cutoff
+//! - [`gemm`]: BLAS-3 layer — multi-RHS `gemm_nt_into`/`gemm_nn_into`
+//!   (bitwise equal per column/row to the serial GEMV kernels; the
+//!   lockstep grid solver's two-GEMMs-per-iteration substrate) and the
+//!   packed Mc/Kc/Nc-tiled [`gemm::gemm_into`] microkernel
+//!   (`FASTKQR_GEMM_MC`/`_KC`/`_NC`)
 //! - [`par`]: scoped-thread row-blocked parallel kernels + the
 //!   [`par::Parallelism`] configuration (env-overridable)
-//! - [`eigen::SymEigen`]: one-time K = UΛUᵀ decomposition
+//! - [`eigen::SymEigen`]: one-time K = UΛUᵀ decomposition, with the
+//!   O(n³) `tred2` phases row-banded onto the parallel substrate
 //! - [`chol::Cholesky`]: SPD solves for the interior-point baseline
 
 pub mod blas;
 pub mod chol;
 pub mod eigen;
+pub mod gemm;
 pub mod matrix;
 pub mod par;
 
 pub use blas::{amax, axpy, dot, gemm, gemv, gemv_t, nrm2, quad_form, scal};
 pub use chol::{CholError, Cholesky};
 pub use eigen::SymEigen;
+pub use gemm::{gemm_into, gemm_nn_into, gemm_nt_into, GemmTiles};
 pub use matrix::Matrix;
 pub use par::Parallelism;

@@ -126,8 +126,11 @@ pub fn serial_scope<T>(f: impl FnOnce() -> T) -> T {
     f()
 }
 
+/// Contiguous band size for distributing `items` across `workers`
+/// (shared by the row-blocked kernels here and the BLAS-3 layer in
+/// [`super::gemm`]).
 #[inline]
-fn block_size(items: usize, workers: usize) -> usize {
+pub(crate) fn block_size(items: usize, workers: usize) -> usize {
     let w = workers.max(1);
     ((items + w - 1) / w).max(1)
 }

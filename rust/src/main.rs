@@ -44,6 +44,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "fit" => cmd_fit(args),
         "path" => cmd_path(args),
+        "grid" => cmd_grid(args),
         "cv" => cmd_cv(args),
         "nckqr" => cmd_nckqr(args),
         "serve" => cmd_serve(args),
@@ -59,7 +60,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "perf" => cmd_perf(args),
         "help" | "--help" => {
             println!("fastkqr {} — exact kernel quantile regression", fastkqr::version());
-            println!("subcommands: fit path cv nckqr serve client table1..6 figure1 ablations perf");
+            println!("subcommands: fit path grid cv nckqr serve client table1..6 figure1 ablations perf");
             println!("see README.md for options");
             Ok(())
         }
@@ -108,7 +109,7 @@ fn cmd_fit(args: &Args) -> Result<()> {
     let lambda = args.get_f64("lambda", 1e-2);
     let mut backend = backend_from_args(args)?;
     let mut timer = Timer::start("fit");
-    let solver = KqrSolver::new(&data.x, &data.y, kernel);
+    let solver = KqrSolver::new(&data.x, &data.y, kernel)?;
     let setup = timer.lap();
     let mut state = ApgdState::zeros(solver.n());
     let fit = solver.fit_warm(tau, lambda, &mut state, backend.as_mut())?;
@@ -137,7 +138,7 @@ fn cmd_path(args: &Args) -> Result<()> {
     let tau = args.get_f64("tau", 0.5);
     let nlam = args.get_usize("nlam", 50);
     let mut backend = backend_from_args(args)?;
-    let solver = KqrSolver::new(&data.x, &data.y, kernel);
+    let solver = KqrSolver::new(&data.x, &data.y, kernel)?;
     let lams = solver.lambda_grid(nlam, args.get_f64("lambda-max", 1.0), 1e-4);
     let timer = Timer::start("path");
     let fits = solver.fit_path_with_backend(tau, &lams, backend.as_mut())?;
@@ -157,6 +158,57 @@ fn cmd_path(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Fit a whole τ×λ grid on one cached eigenbasis through the engine.
+/// `FASTKQR_LOCKSTEP=1` (or --lockstep / --no-lockstep overriding it)
+/// selects the BLAS-3 lockstep driver; default is the sequential path.
+fn cmd_grid(args: &Args) -> Result<()> {
+    let data = dataset_from_args(args)?;
+    let kernel = kernel_from_args(args, &data);
+    let taus = args.get_f64_list("taus", &[0.1, 0.25, 0.5, 0.75, 0.9]);
+    let nlam = args.get_usize("nlam", 8);
+    let lockstep = if args.flag("lockstep") {
+        Some(true)
+    } else if args.flag("no-lockstep") {
+        Some(false)
+    } else {
+        None // defer to FASTKQR_LOCKSTEP
+    };
+    let engine = fastkqr::engine::FitEngine::with_config(fastkqr::engine::EngineConfig {
+        lockstep,
+        ..Default::default()
+    });
+    let solver = engine.solver_for(&data, &kernel)?;
+    let lams = solver.lambda_grid(nlam, args.get_f64("lambda-max", 1.0), 1e-4);
+    let timer = Timer::start("grid");
+    let grid = engine.fit_grid(&data.x, &data.y, &kernel, &taus, &lams)?;
+    let total = timer.total();
+    println!("{:<8} {:<12} {:<14} {:<10} {:<6}", "tau", "lambda", "objective", "iters", "kkt");
+    for (ti, &tau) in grid.taus.iter().enumerate() {
+        for (li, &lam) in grid.lambdas.iter().enumerate() {
+            let f = grid.at(ti, li);
+            println!(
+                "{tau:<8} {lam:<12.4e} {:<14.6} {:<10} {:<6}",
+                f.objective, f.apgd_iters, f.kkt.pass
+            );
+        }
+    }
+    let pass = grid.fits.iter().flatten().filter(|f| f.kkt.pass).count();
+    println!(
+        "grid {}x{}: {pass}/{} kkt pass, {} total iters, {total:.3}s",
+        grid.taus.len(),
+        grid.lambdas.len(),
+        grid.taus.len() * grid.lambdas.len(),
+        grid.total_iters()
+    );
+    if let Some(stats) = grid.lockstep {
+        println!(
+            "lockstep: bundle peak {} cells, {} chunks, {} retired",
+            stats.max_active, stats.chunks, stats.retired
+        );
+    }
+    Ok(())
+}
+
 fn cmd_cv(args: &Args) -> Result<()> {
     let data = dataset_from_args(args)?;
     let kernel = kernel_from_args(args, &data);
@@ -166,7 +218,7 @@ fn cmd_cv(args: &Args) -> Result<()> {
     let mut rng = Rng::new(args.get_usize("seed", 2024) as u64 ^ 0xc5);
     // Engine-backed solver: the basis computed here lands in the global
     // cache, so the CV refit on the full data reuses it for free.
-    let solver = fastkqr::engine::FitEngine::global().solver_for(&data, &kernel);
+    let solver = fastkqr::engine::FitEngine::global().solver_for(&data, &kernel)?;
     let lams = solver.lambda_grid(nlam, 1.0, 1e-4);
     let timer = Timer::start("cv");
     let res =
@@ -192,7 +244,7 @@ fn cmd_nckqr(args: &Args) -> Result<()> {
     let taus = args.get_f64_list("taus", &[0.1, 0.3, 0.5, 0.7, 0.9]);
     let lam1 = args.get_f64("lam1", 10.0);
     let lam2 = args.get_f64("lam2", 1e-2);
-    let solver = NckqrSolver::new(&data.x, &data.y, kernel, &taus);
+    let solver = NckqrSolver::new(&data.x, &data.y, kernel, &taus)?;
     let timer = Timer::start("nckqr");
     let fit = solver.fit(lam1, lam2)?;
     let crossings = fit.count_crossings(&data.x, 1e-9);

@@ -158,7 +158,8 @@ pub struct NckqrSolver {
 }
 
 impl NckqrSolver {
-    pub fn new(x: &Matrix, y: &[f64], kernel: Kernel, taus: &[f64]) -> NckqrSolver {
+    /// Errors when the kernel matrix is not PSD (see [`SpectralBasis::new`]).
+    pub fn new(x: &Matrix, y: &[f64], kernel: Kernel, taus: &[f64]) -> Result<NckqrSolver> {
         assert_eq!(x.rows(), y.len());
         assert!(!taus.is_empty());
         let mut ts = taus.to_vec();
@@ -166,8 +167,8 @@ impl NckqrSolver {
         assert!(ts.iter().all(|t| 0.0 < *t && *t < 1.0), "taus must be in (0,1)");
         assert!(ts.windows(2).all(|w| w[0] < w[1]), "taus must be distinct");
         let gram = kernel.gram(x);
-        let basis = SpectralBasis::new(&gram);
-        NckqrSolver {
+        let basis = SpectralBasis::new(&gram)?;
+        Ok(NckqrSolver {
             x: x.clone(),
             y: y.to_vec(),
             kernel,
@@ -175,7 +176,7 @@ impl NckqrSolver {
             basis,
             taus: ts,
             opts: NcOptions::default(),
-        }
+        })
     }
 
     pub fn with_options(mut self, opts: NcOptions) -> NckqrSolver {
@@ -540,9 +541,9 @@ mod tests {
     #[test]
     fn single_level_matches_kqr() {
         let (x, y, kernel) = fixture(40, 1);
-        let nc = NckqrSolver::new(&x, &y, kernel.clone(), &[0.5]);
+        let nc = NckqrSolver::new(&x, &y, kernel.clone(), &[0.5]).unwrap();
         let fit_nc = nc.fit(0.3, 0.02).unwrap();
-        let kqr = KqrSolver::new(&x, &y, kernel);
+        let kqr = KqrSolver::new(&x, &y, kernel).unwrap();
         let fit_k = kqr.fit(0.5, 0.02).unwrap();
         // with one level the crossing penalty vanishes; objectives agree
         assert!(
@@ -557,9 +558,9 @@ mod tests {
     fn lam1_zero_matches_independent_fits() {
         let (x, y, kernel) = fixture(40, 2);
         let taus = [0.25, 0.75];
-        let nc = NckqrSolver::new(&x, &y, kernel.clone(), &taus);
+        let nc = NckqrSolver::new(&x, &y, kernel.clone(), &taus).unwrap();
         let fit_nc = nc.fit(0.0, 0.05).unwrap();
-        let kqr = KqrSolver::new(&x, &y, kernel);
+        let kqr = KqrSolver::new(&x, &y, kernel).unwrap();
         let sum_obj: f64 = taus.iter().map(|&t| kqr.fit(t, 0.05).unwrap().objective).sum();
         assert!(
             (fit_nc.objective - sum_obj).abs() < 1e-3 * (1.0 + sum_obj),
@@ -571,7 +572,7 @@ mod tests {
     #[test]
     fn kkt_certificate_passes() {
         let (x, y, kernel) = fixture(50, 3);
-        let nc = NckqrSolver::new(&x, &y, kernel, &[0.1, 0.5, 0.9]);
+        let nc = NckqrSolver::new(&x, &y, kernel, &[0.1, 0.5, 0.9]).unwrap();
         let fit = nc.fit(1.0, 0.02).unwrap();
         assert!(fit.kkt.pass, "{:?}", fit.kkt);
     }
@@ -582,7 +583,7 @@ mod tests {
         // scenario; with strong λ₁ the curves must be ordered.
         let (x, y, kernel) = fixture(60, 4);
         let taus = [0.1, 0.3, 0.5, 0.7, 0.9];
-        let nc = NckqrSolver::new(&x, &y, kernel.clone(), &taus);
+        let nc = NckqrSolver::new(&x, &y, kernel.clone(), &taus).unwrap();
         // independent fits (λ₁ = 0): typically cross somewhere
         let free = nc.fit(0.0, 1e-3).unwrap();
         let tight = nc.fit(50.0, 1e-3).unwrap();
@@ -596,7 +597,7 @@ mod tests {
     #[test]
     fn levels_are_ordered_in_probability() {
         let (x, y, kernel) = fixture(60, 5);
-        let nc = NckqrSolver::new(&x, &y, kernel, &[0.2, 0.8]);
+        let nc = NckqrSolver::new(&x, &y, kernel, &[0.2, 0.8]).unwrap();
         let fit = nc.fit(10.0, 0.01).unwrap();
         let preds = fit.predict(&x);
         // the 0.8-quantile curve should lie above the 0.2 curve on average
@@ -608,7 +609,7 @@ mod tests {
     #[test]
     fn warm_lam2_path_consistent_with_cold() {
         let (x, y, kernel) = fixture(35, 6);
-        let nc = NckqrSolver::new(&x, &y, kernel, &[0.3, 0.7]);
+        let nc = NckqrSolver::new(&x, &y, kernel, &[0.3, 0.7]).unwrap();
         let lam2s = [0.2, 0.05, 0.01];
         let path = nc.fit_path(1.0, &lam2s).unwrap();
         for (i, f) in path.iter().enumerate() {
@@ -626,7 +627,7 @@ mod tests {
     #[test]
     fn input_validation() {
         let (x, y, kernel) = fixture(10, 7);
-        let nc = NckqrSolver::new(&x, &y, kernel, &[0.5]);
+        let nc = NckqrSolver::new(&x, &y, kernel, &[0.5]).unwrap();
         assert!(nc.fit(-1.0, 0.1).is_err());
         assert!(nc.fit(1.0, 0.0).is_err());
     }

@@ -138,7 +138,7 @@ mod tests {
         let mut rng = Rng::new(seed);
         let x = Matrix::from_fn(n, 2, |_, _| rng.normal());
         let k = Kernel::Rbf { sigma: 1.0 }.gram(&x);
-        let b = SpectralBasis::new(&k);
+        let b = SpectralBasis::new(&k).unwrap();
         (k, b)
     }
 
@@ -233,7 +233,7 @@ mod tests {
             x[(i, 0)] = (i / 2) as f64;
         }
         let k = Kernel::Rbf { sigma: 1.0 }.gram(&x);
-        let basis = SpectralBasis::new(&k);
+        let basis = SpectralBasis::new(&k).unwrap();
         let plan = NcPlan::new(&basis, 1e-5, 0.5, 0.1);
         assert!(plan.pil.iter().all(|v| v.is_finite()));
         assert!(plan.g.is_finite() && plan.g > 0.0);

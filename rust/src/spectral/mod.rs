@@ -18,8 +18,17 @@
 //! Note (Π⁻¹Λ)ᵢᵢ = 1/(λᵢ + 2nγλ) stays bounded even for zero kernel
 //! eigenvalues, so a merely PSD Gram matrix is handled without explicit
 //! pseudo-inversion. Cost per iteration: exactly two O(n²) GEMVs.
+//!
+//! **Multi-column (lockstep) variants.** [`SpectralBasis::fitted_multi`]
+//! and [`SpectralPlan::step_update_multi`] carry a *bundle* of m grid
+//! cells at once — per-cell vectors are the rows of cell-major m×n
+//! matrices, each cell with its own (γ, λ) plan — so one bundle
+//! iteration costs two GEMMs against U instead of 2m GEMVs, and each
+//! cell's column is bitwise equal to its serial counterpart (see
+//! `linalg::gemm`). This is the substrate of `engine::lockstep`.
 
-use crate::linalg::{gemv, gemv_t, Matrix, SymEigen};
+use crate::linalg::{gemm_nn_into, gemm_nt_into, gemv, gemv_t, Matrix, SymEigen};
+use anyhow::{bail, Result};
 
 /// Eigenbasis of the kernel matrix, shared across all tuning parameters.
 #[derive(Clone, Debug)]
@@ -35,25 +44,29 @@ pub struct SpectralBasis {
 
 impl SpectralBasis {
     /// Decompose a symmetric PSD kernel matrix.
-    pub fn new(k: &Matrix) -> SpectralBasis {
+    ///
+    /// Errors on a meaningfully negative eigenvalue (below `−1e-10·λmax`):
+    /// a non-PSD "kernel" matrix means the caller's kernel function or
+    /// data is broken, and silently clamping it would produce a model
+    /// that quietly optimizes the wrong problem. Tiny negative values —
+    /// ordinary finite-precision noise on a PSD spectrum — are clamped
+    /// to zero as before.
+    pub fn new(k: &Matrix) -> Result<SpectralBasis> {
         let n = k.rows();
         let eig = SymEigen::new(k);
         let max_ev = eig.values.iter().cloned().fold(0.0f64, f64::max);
-        // Clamp the tiny negative values a finite-precision decomposition
-        // of a PSD matrix can produce.
         let floor = -1e-10 * max_ev.max(1.0);
-        let lambda: Vec<f64> = eig
-            .values
-            .iter()
-            .map(|&v| {
-                debug_assert!(v > floor, "kernel matrix is not PSD: eigenvalue {v}");
-                v.max(0.0)
-            })
-            .collect();
+        if let Some(&bad) = eig.values.iter().find(|&&v| v <= floor) {
+            bail!(
+                "kernel matrix is not PSD: eigenvalue {bad:e} below the \
+                 numerical floor {floor:e} (check the kernel parameters / data)"
+            );
+        }
+        let lambda: Vec<f64> = eig.values.iter().map(|&v| v.max(0.0)).collect();
         let ones = vec![1.0; n];
         let mut u1 = vec![0.0; n];
         gemv_t(&eig.vectors, &ones, &mut u1);
-        SpectralBasis { n, u: eig.vectors, lambda, u1 }
+        Ok(SpectralBasis { n, u: eig.vectors, lambda, u1 })
     }
 
     /// f = b·1 + UΛβ (fitted values). `scratch` must have length n.
@@ -64,6 +77,45 @@ impl SpectralBasis {
         gemv(&self.u, scratch, out);
         for o in out.iter_mut() {
             *o += b;
+        }
+    }
+
+    /// Multi-RHS [`SpectralBasis::fitted`]: fitted values for a *bundle*
+    /// of m cells in one GEMM instead of m GEMVs.
+    ///
+    /// Bundle layout (the lockstep convention): per-cell vectors are the
+    /// **rows** of cell-major m×n matrices (`beta_cm`, `scratch_cm`),
+    /// while the GEMM output `out_nm` is data-major n×m (`out[(i, c)]` =
+    /// fitted value of point i under cell c) so the kernel can write
+    /// contiguous row bands. Column c of the output is bitwise equal to
+    /// the serial `fitted(b[c], beta_cm.row(c), ..)` at any worker count
+    /// (see [`gemm_nt_into`]).
+    pub fn fitted_multi(
+        &self,
+        b: &[f64],
+        beta_cm: &Matrix,
+        scratch_cm: &mut Matrix,
+        out_nm: &mut Matrix,
+        workers: usize,
+    ) {
+        let m = beta_cm.rows();
+        debug_assert_eq!(beta_cm.cols(), self.n);
+        debug_assert_eq!(b.len(), m);
+        debug_assert_eq!((scratch_cm.rows(), scratch_cm.cols()), (m, self.n));
+        debug_assert_eq!((out_nm.rows(), out_nm.cols()), (self.n, m));
+        for c in 0..m {
+            let beta = beta_cm.row(c);
+            for (s, (l, bt)) in
+                scratch_cm.row_mut(c).iter_mut().zip(self.lambda.iter().zip(beta))
+            {
+                *s = l * bt;
+            }
+        }
+        gemm_nt_into(&self.u, scratch_cm, out_nm, workers);
+        for i in 0..self.n {
+            for (o, bc) in out_nm.row_mut(i).iter_mut().zip(b) {
+                *o += bc;
+            }
         }
     }
 
@@ -175,6 +227,54 @@ impl SpectralPlan {
         }
         two_g * delta
     }
+
+    /// Multi-cell [`SpectralPlan::step_update`]: one iteration of an
+    /// m-cell bundle, each cell with its **own** (γ, λ) plan, at the cost
+    /// of a single `T = Uᵀ·Z` GEMM plus per-cell O(n) tails.
+    ///
+    /// Bundle layout: per-cell vectors are the rows of cell-major m×n
+    /// matrices (`plans[c]` goes with row c of `z_cm`/`beta_bar_cm`/
+    /// outputs). Row c of `t_cm`/`dbeta_cm` and `db[c]` are bitwise equal
+    /// to the serial `plans[c].step_update(..)` at any worker count (see
+    /// [`gemm_nn_into`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_update_multi(
+        plans: &[&SpectralPlan],
+        basis: &SpectralBasis,
+        z_cm: &Matrix,
+        beta_bar_cm: &Matrix,
+        t_cm: &mut Matrix,
+        dbeta_cm: &mut Matrix,
+        db: &mut [f64],
+        workers: usize,
+    ) {
+        let m = plans.len();
+        let n = basis.n as f64;
+        debug_assert_eq!((z_cm.rows(), z_cm.cols()), (m, basis.n));
+        debug_assert_eq!((beta_bar_cm.rows(), beta_bar_cm.cols()), (m, basis.n));
+        debug_assert_eq!((t_cm.rows(), t_cm.cols()), (m, basis.n));
+        debug_assert_eq!((dbeta_cm.rows(), dbeta_cm.cols()), (m, basis.n));
+        debug_assert_eq!(db.len(), m);
+        // T = Uᵀ·Z for every cell in one pass over U.
+        gemm_nn_into(z_cm, &basis.u, t_cm, workers);
+        for (c, plan) in plans.iter().enumerate() {
+            let nlam = n * plan.lam;
+            let t = t_cm.row_mut(c);
+            for (tj, bj) in t.iter_mut().zip(beta_bar_cm.row(c)) {
+                *tj -= nlam * bj;
+            }
+            let sum_z: f64 = z_cm.row(c).iter().sum();
+            let vkw: f64 = plan.lam_p.iter().zip(t.iter()).map(|(a, t)| a * t).sum();
+            let delta = plan.g * (sum_z - vkw);
+            let two_g = 2.0 * plan.gamma;
+            let t = t_cm.row(c);
+            let dbeta = dbeta_cm.row_mut(c);
+            for j in 0..dbeta.len() {
+                dbeta[j] = two_g * (plan.pil[j] * t[j] - delta * plan.p[j]);
+            }
+            db[c] = two_g * delta;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -188,7 +288,7 @@ mod tests {
         let mut rng = Rng::new(seed);
         let x = Matrix::from_fn(n, 2, |_, _| rng.normal());
         let k = Kernel::Rbf { sigma: 1.0 }.gram(&x);
-        let b = SpectralBasis::new(&k);
+        let b = SpectralBasis::new(&k).unwrap();
         (k, b)
     }
 
@@ -314,10 +414,80 @@ mod tests {
             x[(i, 0)] = (i / 2) as f64; // three distinct points, duplicated
         }
         let k = Kernel::Rbf { sigma: 1.0 }.gram(&x);
-        let basis = SpectralBasis::new(&k);
+        let basis = SpectralBasis::new(&k).unwrap();
         assert!(basis.lambda[0].abs() < 1e-10); // singular
         let plan = SpectralPlan::new(&basis, 0.5, 0.1);
         assert!(plan.g.is_finite() && plan.g > 0.0);
         assert!(plan.pil.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn non_psd_matrix_is_rejected() {
+        // diag(1, −1) is symmetric but indefinite: a broken "kernel" must
+        // fail loudly instead of being silently clamped.
+        let mut k = Matrix::eye(2);
+        k[(1, 1)] = -1.0;
+        let err = SpectralBasis::new(&k).unwrap_err();
+        assert!(err.to_string().contains("not PSD"), "unexpected error: {err}");
+        // ...while finite-precision noise on a PSD spectrum still passes.
+        let (_, basis) = basis_fixture(8, 11);
+        assert!(basis.lambda.iter().all(|&l| l >= 0.0));
+    }
+
+    #[test]
+    fn fitted_multi_is_bitwise_per_cell() {
+        let n = 24;
+        let (_, basis) = basis_fixture(n, 21);
+        let mut rng = Rng::new(22);
+        let m = 3;
+        let beta_cm = Matrix::from_fn(m, n, |_, _| rng.normal());
+        let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        for workers in [1usize, 3] {
+            let mut scratch_cm = Matrix::zeros(m, n);
+            let mut out = Matrix::zeros(n, m);
+            basis.fitted_multi(&b, &beta_cm, &mut scratch_cm, &mut out, workers);
+            for c in 0..m {
+                let mut scratch = vec![0.0; n];
+                let mut f = vec![0.0; n];
+                basis.fitted(b[c], beta_cm.row(c), &mut scratch, &mut f);
+                for i in 0..n {
+                    assert_eq!(out[(i, c)], f[i], "workers={workers} cell={c} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_update_multi_is_bitwise_per_cell() {
+        let n = 20;
+        let (_, basis) = basis_fixture(n, 23);
+        let mut rng = Rng::new(24);
+        // three cells with distinct (γ, λ) plans
+        let plans: Vec<SpectralPlan> = [(0.5, 0.1), (0.125, 0.02), (1.0, 0.5)]
+            .iter()
+            .map(|&(g, l)| SpectralPlan::new(&basis, g, l))
+            .collect();
+        let m = plans.len();
+        let z_cm = Matrix::from_fn(m, n, |_, _| rng.normal());
+        let beta_cm = Matrix::from_fn(m, n, |_, _| rng.normal());
+        for workers in [1usize, 2] {
+            let plan_refs: Vec<&SpectralPlan> = plans.iter().collect();
+            let mut t_cm = Matrix::zeros(m, n);
+            let mut dbeta_cm = Matrix::zeros(m, n);
+            let mut db = vec![0.0; m];
+            SpectralPlan::step_update_multi(
+                &plan_refs, &basis, &z_cm, &beta_cm, &mut t_cm, &mut dbeta_cm, &mut db,
+                workers,
+            );
+            for (c, plan) in plans.iter().enumerate() {
+                let mut t = vec![0.0; n];
+                let mut dbeta = vec![0.0; n];
+                let db_ref =
+                    plan.step_update(&basis, z_cm.row(c), beta_cm.row(c), &mut t, &mut dbeta);
+                assert_eq!(db[c], db_ref, "workers={workers} cell={c}");
+                assert_eq!(t_cm.row(c), &t[..], "workers={workers} cell={c} (t)");
+                assert_eq!(dbeta_cm.row(c), &dbeta[..], "workers={workers} cell={c} (dbeta)");
+            }
+        }
     }
 }

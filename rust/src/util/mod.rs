@@ -9,3 +9,16 @@ pub mod timer;
 pub use cli::Args;
 pub use json::Json;
 pub use timer::Timer;
+
+/// Best-effort extraction of a panic payload's message, for worker pools
+/// that surface a poisoned thread as an `Err` on the affected job instead
+/// of aborting a process serving other jobs.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}

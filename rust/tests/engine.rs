@@ -147,7 +147,7 @@ fn multi_tau_grid_is_one_decomposition() {
         "the whole tau-grid must share one basis"
     );
     // and a follow-up solver on the same data is a pure hit
-    let _s = engine.solver_for(&data, &kernel);
+    let _s = engine.solver_for(&data, &kernel).unwrap();
     assert_eq!(CacheMetrics::get(&engine.cache.metrics.decompositions), 1);
     assert!(CacheMetrics::get(&engine.cache.metrics.hits) >= 1);
 }

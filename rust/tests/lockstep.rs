@@ -1,0 +1,169 @@
+//! Lockstep grid driver vs the sequential oracle (ISSUE 2 acceptance):
+//! per-cell parity at ≤ 1e-10 in (b, α) — bitwise by construction, since
+//! the lockstep GEMMs reproduce the serial GEMV accumulation order and
+//! the driver replicates the sequential state machine decision for
+//! decision — plus wavefront-scheduler invariants, a singular-Gram
+//! fixture, and serial-vs-parallel eigendecomposition parity.
+
+use fastkqr::data::{synth, Dataset, Rng};
+use fastkqr::engine::{EngineConfig, FitEngine, GridFit};
+use fastkqr::kernel::{median_heuristic_sigma, Kernel};
+use fastkqr::linalg::{Matrix, Parallelism, SymEigen};
+
+/// (sequential oracle, lockstep) engine pair. The oracle runs serial
+/// (single-worker column chaining — the full warm-start graph the
+/// lockstep driver replicates); the lockstep engine gets a min_dim-1
+/// budget so its batched kernels really run multi-threaded at test sizes.
+fn engine_pair() -> (FitEngine, FitEngine) {
+    let seq = FitEngine::with_config(EngineConfig {
+        par: Parallelism::serial(),
+        lockstep: Some(false),
+        ..EngineConfig::default()
+    });
+    let lock = FitEngine::with_config(EngineConfig {
+        par: Parallelism { threads: 3, min_dim: 1 },
+        lockstep: Some(true),
+        ..EngineConfig::default()
+    });
+    (seq, lock)
+}
+
+fn assert_grid_parity(seq: &GridFit, lock: &GridFit, tol: f64, label: &str) {
+    for ti in 0..seq.taus.len() {
+        for li in 0..seq.lambdas.len() {
+            let (a, b) = (seq.at(ti, li), lock.at(ti, li));
+            assert_eq!(
+                a.apgd_iters, b.apgd_iters,
+                "{label} ({ti},{li}): iteration trajectories diverged"
+            );
+            assert_eq!(a.kkt.pass, b.kkt.pass, "{label} ({ti},{li})");
+            assert!(
+                (a.b - b.b).abs() <= tol,
+                "{label} ({ti},{li}): b {} vs {}",
+                a.b,
+                b.b
+            );
+            for (i, (x, y)) in a.alpha.iter().zip(&b.alpha).enumerate() {
+                assert!(
+                    (x - y).abs() <= tol,
+                    "{label} ({ti},{li}) alpha[{i}]: {x} vs {y}"
+                );
+            }
+            assert!(
+                (a.objective - b.objective).abs() <= tol * (1.0 + a.objective.abs()),
+                "{label} ({ti},{li}): objective {} vs {}",
+                a.objective,
+                b.objective
+            );
+        }
+    }
+}
+
+#[test]
+fn lockstep_matches_sequential_oracle_on_grid() {
+    let mut rng = Rng::new(1);
+    let data = synth::sine_hetero(48, &mut rng);
+    let kernel = Kernel::Rbf { sigma: median_heuristic_sigma(&data.x) };
+    let taus = [0.25, 0.5, 0.75];
+    let lambdas = [0.2, 0.04, 0.008, 0.0016];
+    let (seq_e, lock_e) = engine_pair();
+    let seq = seq_e.fit_grid(&data.x, &data.y, &kernel, &taus, &lambdas).unwrap();
+    let lock = lock_e.fit_grid(&data.x, &data.y, &kernel, &taus, &lambdas).unwrap();
+    assert_grid_parity(&seq, &lock, 1e-10, "grid");
+
+    // wavefront invariants: every cell retired exactly once, the bundle
+    // really overlapped cells mid-flight, and never exceeded one active
+    // cell per τ column
+    let stats = lock.lockstep.expect("lockstep stats");
+    assert_eq!(stats.cells, taus.len() * lambdas.len());
+    assert_eq!(stats.retired, stats.cells);
+    assert!(
+        stats.max_active >= 2,
+        "bundle never overlapped cells: {stats:?}"
+    );
+    assert!(
+        stats.max_active <= taus.len(),
+        "more than one active cell per column: {stats:?}"
+    );
+    assert!(stats.total_iters > 0 && stats.chunks > 0);
+    assert_eq!(stats.total_iters, lock.total_iters());
+}
+
+#[test]
+fn lockstep_parity_on_singular_gram() {
+    // Duplicated rows → an exactly singular Gram matrix, exercising the
+    // zero-eigenvalue plans, the K_SS projection and the rank-deficient
+    // certificate path under lockstep retirement.
+    let n = 30;
+    let x = Matrix::from_fn(n, 1, |i, _| (i / 2) as f64 * 0.3);
+    let mut rng = Rng::new(2);
+    let y: Vec<f64> = (0..n)
+        .map(|i| (x[(i, 0)]).sin() + 0.1 * rng.normal())
+        .collect();
+    let data = Dataset::new("dup", x, y);
+    let kernel = Kernel::Rbf { sigma: 1.0 };
+    let taus = [0.3, 0.7];
+    let lambdas = [0.1, 0.01];
+    let (seq_e, lock_e) = engine_pair();
+    let seq = seq_e.fit_grid(&data.x, &data.y, &kernel, &taus, &lambdas).unwrap();
+    let lock = lock_e.fit_grid(&data.x, &data.y, &kernel, &taus, &lambdas).unwrap();
+    assert_grid_parity(&seq, &lock, 1e-10, "singular");
+}
+
+#[test]
+fn lockstep_retires_cells_midflight_on_uneven_grid() {
+    // λ values spanning 4 decades converge at very different speeds, so
+    // cells must retire while others keep iterating (and their λ-path
+    // successors join the live bundle).
+    let mut rng = Rng::new(3);
+    let data = synth::sine_hetero(40, &mut rng);
+    let kernel = Kernel::Rbf { sigma: median_heuristic_sigma(&data.x) };
+    let taus = [0.1, 0.5, 0.9];
+    let lambdas = [1.0, 0.1, 0.01, 0.001];
+    let (seq_e, lock_e) = engine_pair();
+    let seq = seq_e.fit_grid(&data.x, &data.y, &kernel, &taus, &lambdas).unwrap();
+    let lock = lock_e.fit_grid(&data.x, &data.y, &kernel, &taus, &lambdas).unwrap();
+    assert_grid_parity(&seq, &lock, 1e-10, "uneven");
+    let stats = lock.lockstep.unwrap();
+    // Retirement happened mid-flight: the warm-start wavefront has
+    // T + L − 1 sequential generations, each needing at least one chunk,
+    // and a bundle width ≥ 2 proves successors joined a live bundle.
+    assert!(
+        stats.chunks >= taus.len() + lambdas.len() - 1,
+        "suspiciously few chunks: {stats:?}"
+    );
+    assert!(stats.max_active >= 2 && stats.max_active <= taus.len(), "{stats:?}");
+}
+
+#[test]
+fn lockstep_rejects_bad_grid_values_like_sequential() {
+    let mut rng = Rng::new(4);
+    let data = synth::sine_hetero(12, &mut rng);
+    let kernel = Kernel::Rbf { sigma: 0.7 };
+    let (_, lock_e) = engine_pair();
+    assert!(lock_e
+        .fit_grid(&data.x, &data.y, &kernel, &[0.5, 1.5], &[0.1])
+        .is_err());
+    assert!(lock_e
+        .fit_grid(&data.x, &data.y, &kernel, &[0.5], &[0.1, -1.0])
+        .is_err());
+}
+
+#[test]
+fn eigendecomposition_parallel_matches_serial() {
+    // tred2's banded phases keep the serial accumulation order, so the
+    // whole decomposition must be bitwise identical at any worker count.
+    let mut rng = Rng::new(5);
+    let x = Matrix::from_fn(180, 3, |_, _| rng.normal());
+    let k = Kernel::Rbf { sigma: 1.0 }.gram(&x);
+    let serial = SymEigen::with_workers(&k, 1);
+    for workers in [2usize, 4] {
+        let par = SymEigen::with_workers(&k, workers);
+        assert_eq!(serial.values, par.values, "workers={workers}");
+        assert_eq!(
+            serial.vectors.as_slice(),
+            par.vectors.as_slice(),
+            "workers={workers}"
+        );
+    }
+}

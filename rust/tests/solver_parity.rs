@@ -16,7 +16,7 @@ fn fastkqr_matches_ipm_across_grid() {
         let mut rng = Rng::new(seed);
         let d = synth::sine_hetero(n, &mut rng);
         let sigma = median_heuristic_sigma(&d.x);
-        let solver = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma });
+        let solver = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma }).unwrap();
         for tau in [0.1, 0.5, 0.9] {
             for lam in [0.2, 0.02, 0.002] {
                 let fast = solver.fit(tau, lam).expect("fastkqr");
@@ -45,7 +45,7 @@ fn fastkqr_matches_ipm_on_benchmark_lookalikes() {
         let idx = rng.permutation(data.n());
         let data = data.subset(&idx[..80]);
         let sigma = median_heuristic_sigma(&data.x);
-        let solver = KqrSolver::new(&data.x, &data.y, Kernel::Rbf { sigma });
+        let solver = KqrSolver::new(&data.x, &data.y, Kernel::Rbf { sigma }).unwrap();
         let fast = solver.fit(0.5, lam).expect("fastkqr");
         let ipm =
             solve_kqr_ipm(&solver.gram, &data.y, 0.5, lam, &IpmOptions::default()).expect("ipm");
@@ -65,7 +65,7 @@ fn generic_solvers_never_beat_fastkqr() {
     let mut rng = Rng::new(4);
     let d = synth::yuan(60, &mut rng);
     let sigma = median_heuristic_sigma(&d.x);
-    let solver = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma });
+    let solver = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma }).unwrap();
     for tau in [0.25, 0.75] {
         let fast = solver.fit(tau, 0.05).unwrap();
         let lb = solve_kqr_lbfgs(&solver.gram, &d.y, tau, 0.05, 2000).unwrap();
@@ -85,7 +85,7 @@ fn nckqr_exactness_and_monotone_crossing_penalty() {
     let sigma = median_heuristic_sigma(&d.x);
     let kernel = Kernel::Rbf { sigma };
     let taus = [0.1, 0.5, 0.9];
-    let nc = NckqrSolver::new(&d.x, &d.y, kernel, &taus);
+    let nc = NckqrSolver::new(&d.x, &d.y, kernel, &taus).unwrap();
     // crossing count decreases with λ₁
     let grid = fastkqr::linalg::Matrix::from_fn(100, 1, |i, _| i as f64 / 99.0);
     let mut last_cross = usize::MAX;
@@ -103,7 +103,7 @@ fn cv_pipeline_end_to_end_small() {
     let mut rng = Rng::new(8);
     let data = synth::yuan(60, &mut rng);
     let kernel = Kernel::Rbf { sigma: median_heuristic_sigma(&data.x) };
-    let solver = KqrSolver::new(&data.x, &data.y, kernel.clone());
+    let solver = KqrSolver::new(&data.x, &data.y, kernel.clone()).unwrap();
     let lams = solver.lambda_grid(6, 1.0, 1e-4);
     let res =
         fastkqr::cv::cross_validate(&data, &kernel, 0.5, &lams, 3, &solver.opts, &mut rng)

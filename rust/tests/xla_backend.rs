@@ -24,7 +24,7 @@ fn make_solver(n: usize, seed: u64) -> KqrSolver {
     let mut rng = Rng::new(seed);
     let d = synth::sine_hetero(n, &mut rng);
     let sigma = median_heuristic_sigma(&d.x);
-    KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma })
+    KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma }).unwrap()
 }
 
 #[test]
