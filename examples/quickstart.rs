@@ -53,6 +53,28 @@ fn main() -> anyhow::Result<()> {
     let width_hi = curves[2][54] - curves[0][54];
     println!("\nband width at x=0.1: {width_lo:.2}, at x=0.9: {width_hi:.2}");
     assert!(width_hi > width_lo, "band should widen with the noise");
+
+    // 6. the declarative surface: the same fit as a FitSpec on the
+    //    engine, persisted to an artifact and reloaded bitwise.
+    let spec = FitSpec::grid(
+        solver.x.as_ref().clone(),
+        solver.y.clone(),
+        KernelSpec::exact(&solver.kernel),
+        vec![0.1, 0.5, 0.9],
+        vec![1e-3],
+    );
+    let model = FitEngine::global().run(&spec)?;
+    assert!(model.kkt_pass(), "every grid cell certifies");
+    let path = std::env::temp_dir().join("fastkqr-quickstart-model.json");
+    model.save(&path)?;
+    let reloaded = QuantileModel::load(&path)?;
+    assert_eq!(reloaded.predict(&grid), model.predict(&grid), "reload is exact");
+    println!(
+        "FitSpec -> QuantileModel: {} levels saved to {} and reloaded bitwise",
+        model.n_levels(),
+        path.display()
+    );
+    let _ = std::fs::remove_file(&path);
     println!("quickstart OK");
     Ok(())
 }

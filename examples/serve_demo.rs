@@ -15,7 +15,7 @@ fn matrix_json(x: &fastkqr::linalg::Matrix) -> Json {
 fn main() -> anyhow::Result<()> {
     let server = Server::spawn(ServerConfig {
         addr: "127.0.0.1:0".to_string(),
-        opts: Default::default(),
+        ..Default::default()
     })?;
     println!("server on {}", server.local_addr);
 
@@ -85,7 +85,46 @@ fn main() -> anyhow::Result<()> {
         lat[reqs - 1] * 1e3
     );
 
-    // 4. metrics + cleanup
+    // 4. protocol v2: one declarative FitSpec fits a whole non-crossing
+    //    model over the wire, and `export` hands back the portable
+    //    artifact any process can reload with QuantileModel::load.
+    let spec = fastkqr::api::FitSpec::non_crossing(
+        data.x.clone(),
+        data.y.clone(),
+        fastkqr::api::KernelSpec::Auto,
+        vec![0.1, 0.5, 0.9],
+        5.0,
+        1e-2,
+    );
+    let resp = client.request(&Json::obj(vec![
+        ("cmd", Json::str("fit")),
+        ("spec", spec.to_json()),
+    ]))?;
+    anyhow::ensure!(
+        resp.get("ok").and_then(Json::as_bool) == Some(true),
+        "spec fit failed: {}",
+        resp.to_string()
+    );
+    let nc_id = resp.get_str("model").unwrap().to_string();
+    println!(
+        "\nspec fit (noncrossing): model={nc_id} crossings={} kkt={}",
+        resp.get_f64("crossings").unwrap_or(f64::NAN),
+        resp.get("kkt_pass").and_then(Json::as_bool).unwrap_or(false)
+    );
+    let export = client.request(&Json::obj(vec![
+        ("cmd", Json::str("export")),
+        ("model", Json::str(nc_id.clone())),
+    ]))?;
+    let artifact = export.get("artifact").expect("artifact document");
+    let reloaded = fastkqr::api::QuantileModel::from_artifact(artifact)?;
+    println!(
+        "exported artifact reloads in-process: kind={} levels={}",
+        reloaded.kind(),
+        reloaded.n_levels()
+    );
+    model_ids.push(nc_id);
+
+    // 5. metrics + cleanup
     let m = client.request(&Json::obj(vec![("cmd", Json::str("metrics"))]))?;
     println!("\nserver metrics: {}", m.to_string());
     for id in &model_ids {

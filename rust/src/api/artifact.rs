@@ -1,0 +1,311 @@
+//! Versioned JSON model artifacts.
+//!
+//! An artifact is everything `predict` needs — resolved kernel, training
+//! inputs, per-level coefficients — plus the fit provenance (objective,
+//! KKT report, iteration counts), in one self-describing document:
+//!
+//! ```json
+//! { "format": "fastkqr.model", "format_version": 1,
+//!   "created_by": "fastkqr 0.1.0", "kind": "kqr|set|nckqr",
+//!   "kernel": {"type":"rbf","sigma":…}, "x_train": [[…]…], … }
+//! ```
+//!
+//! Numbers are written with Rust's shortest-round-trip float formatting,
+//! so every f64 — coefficients, intercepts, training inputs — reloads to
+//! the identical bit pattern and a reloaded model's predictions equal the
+//! original's bitwise. Readers accept any `format_version` ≤ theirs and
+//! reject newer documents loudly instead of misreading them.
+
+use super::model::{shape_from_json, shape_to_json, CvSummary, ModelSet, QuantileModel};
+use super::{kernel_from_json, kernel_to_json, matrix_from_json, matrix_to_json};
+use crate::kernel::Kernel;
+use crate::kqr::kkt::KktReport;
+use crate::kqr::KqrFit;
+use crate::linalg::Matrix;
+use crate::nckqr::{LevelCoef, NckqrFit};
+use crate::util::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Artifact document version written by [`to_json`].
+pub const ARTIFACT_VERSION: u64 = 1;
+/// Magic `format` tag distinguishing model artifacts from other JSON.
+pub const ARTIFACT_FORMAT: &str = "fastkqr.model";
+
+fn kqr_fit_to_json(f: &KqrFit) -> Json {
+    Json::obj(vec![
+        ("tau", Json::num(f.tau)),
+        ("lambda", Json::num(f.lam)),
+        ("b", Json::num(f.b)),
+        ("alpha", Json::arr_f64(&f.alpha)),
+        ("objective", Json::num(f.objective)),
+        ("gamma_final", Json::num(f.gamma_final)),
+        ("apgd_iters", Json::num(f.apgd_iters as f64)),
+        ("expansions", Json::num(f.expansions as f64)),
+        ("singular_set", Json::arr_usize(&f.singular_set)),
+        ("kkt", f.kkt.to_json()),
+    ])
+}
+
+fn kqr_fit_from_json(v: &Json, x_train: &Arc<Matrix>, kernel: &Kernel) -> Result<KqrFit> {
+    let need = |key: &str| v.get_f64(key).ok_or_else(|| anyhow!("fit: missing {key:?}"));
+    let alpha = v
+        .get_f64_arr_strict("alpha")
+        .ok_or_else(|| anyhow!("fit: missing 'alpha'"))?;
+    if alpha.len() != x_train.rows() {
+        bail!("fit: len(alpha)={} != n_train={}", alpha.len(), x_train.rows());
+    }
+    let kkt = KktReport::from_json(v.get("kkt").ok_or_else(|| anyhow!("fit: missing 'kkt'"))?)?;
+    Ok(KqrFit::assemble(
+        need("tau")?,
+        need("lambda")?,
+        need("b")?,
+        alpha,
+        need("objective")?,
+        kkt,
+        need("gamma_final")?,
+        v.get_usize("apgd_iters").unwrap_or(0),
+        v.get_usize("expansions").unwrap_or(0),
+        v.get_usize_arr("singular_set").unwrap_or_default(),
+        x_train.clone(),
+        kernel.clone(),
+    ))
+}
+
+/// Serialize a model to the artifact document. Errors on an empty fit
+/// set (which [`from_json`] would reject anyway).
+pub fn to_json(model: &QuantileModel) -> Result<Json> {
+    let mut pairs = vec![
+        ("format", Json::str(ARTIFACT_FORMAT)),
+        ("format_version", Json::num(ARTIFACT_VERSION as f64)),
+        ("created_by", Json::str(format!("fastkqr {}", crate::version()))),
+        ("kind", Json::str(model.kind())),
+    ];
+    match model {
+        QuantileModel::Kqr(f) => {
+            pairs.push(("kernel", kernel_to_json(f.kernel())));
+            pairs.push(("x_train", matrix_to_json(f.x_train())));
+            pairs.push(("fit", kqr_fit_to_json(f)));
+        }
+        QuantileModel::Set(s) => {
+            // All fits of a set share one solver, hence one kernel and
+            // one Arc'd design matrix — serialize them once.
+            let head = s
+                .fits
+                .first()
+                .ok_or_else(|| anyhow!("cannot serialize an empty model set"))?;
+            pairs.push(("kernel", kernel_to_json(head.kernel())));
+            pairs.push(("x_train", matrix_to_json(head.x_train())));
+            pairs.push(("fits", Json::Arr(s.fits.iter().map(kqr_fit_to_json).collect())));
+            pairs.push(("shape", shape_to_json(&s.shape)));
+            if !s.cv.is_empty() {
+                pairs.push(("cv", Json::Arr(s.cv.iter().map(CvSummary::to_json).collect())));
+            }
+        }
+        QuantileModel::Nckqr(f) => {
+            pairs.push(("kernel", kernel_to_json(f.kernel())));
+            pairs.push(("x_train", matrix_to_json(f.x_train())));
+            pairs.push(("taus", Json::arr_f64(&f.taus)));
+            pairs.push(("lam1", Json::num(f.lam1)));
+            pairs.push(("lam2", Json::num(f.lam2)));
+            pairs.push((
+                "levels",
+                Json::Arr(
+                    f.levels
+                        .iter()
+                        .map(|lv| {
+                            Json::obj(vec![
+                                ("tau", Json::num(lv.tau)),
+                                ("b", Json::num(lv.b)),
+                                ("alpha", Json::arr_f64(&lv.alpha)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+            pairs.push(("objective", Json::num(f.objective)));
+            pairs.push(("mm_iters", Json::num(f.mm_iters as f64)));
+            pairs.push(("gamma_final", Json::num(f.gamma_final)));
+            pairs.push(("train_crossings", Json::num(f.train_crossings as f64)));
+            pairs.push(("kkt", f.kkt.to_json()));
+        }
+    }
+    Ok(Json::obj(pairs))
+}
+
+/// Deserialize an artifact document.
+pub fn from_json(v: &Json) -> Result<QuantileModel> {
+    match v.get_str("format") {
+        Some(ARTIFACT_FORMAT) => {}
+        Some(other) => bail!("not a fastkqr model artifact (format {other:?})"),
+        None => bail!("not a fastkqr model artifact (missing 'format')"),
+    }
+    let version = v.get_usize("format_version").unwrap_or(0) as u64;
+    if version == 0 || version > ARTIFACT_VERSION {
+        bail!(
+            "artifact format_version {version} unsupported (this build reads 1..={ARTIFACT_VERSION})"
+        );
+    }
+    let kernel =
+        kernel_from_json(v.get("kernel").ok_or_else(|| anyhow!("artifact: missing 'kernel'"))?)?;
+    let x_train = Arc::new(matrix_from_json(
+        v.get("x_train").ok_or_else(|| anyhow!("artifact: missing 'x_train'"))?,
+    )?);
+    match v.get_str("kind") {
+        Some("kqr") => {
+            let fit = v.get("fit").ok_or_else(|| anyhow!("artifact: missing 'fit'"))?;
+            Ok(QuantileModel::Kqr(kqr_fit_from_json(fit, &x_train, &kernel)?))
+        }
+        Some("set") => {
+            let fits_json = v
+                .get("fits")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact: missing 'fits'"))?;
+            if fits_json.is_empty() {
+                bail!("artifact: empty fit set");
+            }
+            let fits: Vec<KqrFit> = fits_json
+                .iter()
+                .map(|f| kqr_fit_from_json(f, &x_train, &kernel))
+                .collect::<Result<_>>()?;
+            let shape = shape_from_json(
+                v.get("shape").ok_or_else(|| anyhow!("artifact: missing 'shape'"))?,
+            )?;
+            let cv = match v.get("cv").and_then(Json::as_arr) {
+                None => Vec::new(),
+                Some(arr) => arr.iter().map(CvSummary::from_json).collect::<Result<_>>()?,
+            };
+            Ok(QuantileModel::Set(ModelSet { fits, shape, cv, lockstep: None }))
+        }
+        Some("nckqr") => {
+            let taus = v
+                .get_f64_arr_strict("taus")
+                .ok_or_else(|| anyhow!("artifact: missing 'taus'"))?;
+            let levels_json = v
+                .get("levels")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact: missing 'levels'"))?;
+            if levels_json.len() != taus.len() {
+                bail!("artifact: {} levels for {} taus", levels_json.len(), taus.len());
+            }
+            let mut levels = Vec::with_capacity(levels_json.len());
+            for lv in levels_json {
+                let alpha = lv
+                    .get_f64_arr_strict("alpha")
+                    .ok_or_else(|| anyhow!("level: missing 'alpha'"))?;
+                if alpha.len() != x_train.rows() {
+                    bail!("level: len(alpha)={} != n_train={}", alpha.len(), x_train.rows());
+                }
+                levels.push(LevelCoef {
+                    tau: lv.get_f64("tau").ok_or_else(|| anyhow!("level: missing 'tau'"))?,
+                    b: lv.get_f64("b").ok_or_else(|| anyhow!("level: missing 'b'"))?,
+                    alpha,
+                });
+            }
+            let kkt = KktReport::from_json(
+                v.get("kkt").ok_or_else(|| anyhow!("artifact: missing 'kkt'"))?,
+            )?;
+            Ok(QuantileModel::Nckqr(NckqrFit::assemble(
+                taus,
+                v.get_f64("lam1").ok_or_else(|| anyhow!("artifact: missing 'lam1'"))?,
+                v.get_f64("lam2").ok_or_else(|| anyhow!("artifact: missing 'lam2'"))?,
+                levels,
+                v.get_f64("objective").ok_or_else(|| anyhow!("artifact: missing 'objective'"))?,
+                kkt,
+                v.get_usize("mm_iters").unwrap_or(0),
+                v.get_f64("gamma_final").unwrap_or(0.0),
+                v.get_usize("train_crossings").unwrap_or(0),
+                x_train,
+                kernel,
+            )))
+        }
+        other => bail!("artifact: unknown kind {other:?}"),
+    }
+}
+
+/// Write `model` to `path` as one compact JSON document.
+///
+/// The write is atomic (temp file in the same directory + rename): a
+/// crash or full disk mid-write never leaves a truncated artifact behind
+/// — important for registry persistence directories, which are reloaded
+/// wholesale at server startup.
+pub fn save(model: &QuantileModel, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("create {}", parent.display()))?;
+        }
+    }
+    let mut doc = to_json(model)?.to_string();
+    doc.push('\n');
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, doc).with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| {
+        let _ = std::fs::remove_file(&tmp);
+        format!("rename {} -> {}", tmp.display(), path.display())
+    })?;
+    Ok(())
+}
+
+/// Read a model artifact from `path`.
+pub fn load(path: &Path) -> Result<QuantileModel> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+    let v = Json::parse(text.trim())
+        .map_err(|e| anyhow!("{}: not valid JSON: {e}", path.display()))?;
+    from_json(&v).with_context(|| format!("load model artifact {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, Rng};
+
+    fn toy_kqr_model() -> QuantileModel {
+        let mut rng = Rng::new(21);
+        let d = synth::sine_hetero(18, &mut rng);
+        let fit = crate::kqr::KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma: 0.4 })
+            .unwrap()
+            .fit(0.5, 0.05)
+            .unwrap();
+        QuantileModel::Kqr(fit)
+    }
+
+    #[test]
+    fn kqr_artifact_roundtrips_in_memory() {
+        let model = toy_kqr_model();
+        let doc = to_json(&model).unwrap();
+        assert_eq!(doc.get_str("format"), Some(ARTIFACT_FORMAT));
+        let back = from_json(&doc).unwrap();
+        // the serialized form of the reloaded model is identical
+        assert_eq!(to_json(&back).unwrap().to_string(), doc.to_string());
+    }
+
+    #[test]
+    fn rejects_foreign_and_future_documents() {
+        assert!(from_json(&Json::parse(r#"{"hello":1}"#).unwrap()).is_err());
+        assert!(from_json(
+            &Json::parse(r#"{"format":"fastkqr.model","format_version":999,"kind":"kqr"}"#)
+                .unwrap()
+        )
+        .is_err());
+        let mut doc = to_json(&toy_kqr_model()).unwrap();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("kind".into(), Json::str("mystery"));
+        }
+        assert!(from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn empty_set_serialization_is_an_error_not_a_panic() {
+        use crate::api::{ModelSet, SetShape};
+        let empty = QuantileModel::Set(ModelSet {
+            fits: Vec::new(),
+            shape: SetShape::Path { tau: 0.5 },
+            cv: Vec::new(),
+            lockstep: None,
+        });
+        assert!(to_json(&empty).is_err());
+    }
+}

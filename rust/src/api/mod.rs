@@ -1,0 +1,780 @@
+//! The declarative fit API: one `FitSpec` → one [`QuantileModel`].
+//!
+//! Every consumer — the CLI subcommands, the TCP line-JSON protocol, the
+//! Rust library surface and the CV driver — funnels through this layer
+//! instead of hand-assembling solvers. A [`FitSpec`] names the data, the
+//! kernel, the task and optional solver/strategy overrides; it
+//! round-trips through [`crate::util::Json`] (so the exact same document
+//! fits identically over the wire, from a file, or in-process); and
+//! [`FitEngine::run`] executes it on the engine's GramCache, so *every*
+//! task — including `NonCrossing`, which used to construct its solver
+//! outside the cache — shares one eigendecomposition per (dataset,
+//! kernel) fingerprint per process.
+//!
+//! ```text
+//!   FitSpec { x, y, kernel, task, opts?, nc_opts?, lockstep?, backend? }
+//!     task ∈ Single{τ,λ} | Path{τ,λs} | Grid{τs,λs}
+//!          | NonCrossing{τs,λ₁,λ₂} | Cv{τs,λs,folds,seed}
+//!        │  FitEngine::run(&spec)
+//!        ▼
+//!   QuantileModel (predict / taus / diagnostics / save / load)
+//! ```
+//!
+//! The resulting [`QuantileModel`] unifies `KqrFit` / `NckqrFit` /
+//! grid-and-CV fit sets behind one `predict`/`taus`/`diagnostics` API
+//! and persists to a versioned JSON artifact (see [`artifact`]) that a
+//! fresh process reloads to bitwise-identical predictions.
+
+pub mod artifact;
+pub mod model;
+
+pub use model::{CvSummary, ModelSet, QuantileModel, SetShape};
+
+use crate::backend::{Backend, NativeBackend};
+use crate::cv::cross_validate_on;
+use crate::data::{Dataset, Rng};
+use crate::engine::FitEngine;
+use crate::kernel::{median_heuristic_sigma, Kernel};
+use crate::kqr::apgd::ApgdState;
+use crate::kqr::SolveOptions;
+use crate::linalg::Matrix;
+use crate::nckqr::NcOptions;
+use crate::util::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// Spec document version written by [`FitSpec::to_json`]; readers accept
+/// anything ≤ this.
+pub const SPEC_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// Matrix JSON helpers (shared by specs, artifacts and the wire protocol)
+// ---------------------------------------------------------------------------
+
+/// Parse an n×p matrix from a JSON array of arrays (strict: non-empty,
+/// rectangular, all numbers).
+pub fn matrix_from_json(v: &Json) -> Result<Matrix> {
+    let rows = v.as_arr().ok_or_else(|| anyhow!("x must be an array of arrays"))?;
+    if rows.is_empty() {
+        bail!("x must be non-empty");
+    }
+    let p = rows[0].as_arr().ok_or_else(|| anyhow!("x rows must be arrays"))?.len();
+    if p == 0 {
+        bail!("x rows must be non-empty");
+    }
+    let mut m = Matrix::zeros(rows.len(), p);
+    for (i, r) in rows.iter().enumerate() {
+        let r = r.as_arr().ok_or_else(|| anyhow!("x rows must be arrays"))?;
+        if r.len() != p {
+            bail!("ragged x: row {i} has {} cols, expected {p}", r.len());
+        }
+        for (j, cell) in r.iter().enumerate() {
+            m[(i, j)] = cell.as_f64().ok_or_else(|| anyhow!("x[{i}][{j}] not a number"))?;
+        }
+    }
+    Ok(m)
+}
+
+/// Inverse of [`matrix_from_json`].
+pub fn matrix_to_json(m: &Matrix) -> Json {
+    Json::Arr((0..m.rows()).map(|i| Json::arr_f64(m.row(i))).collect())
+}
+
+// ---------------------------------------------------------------------------
+// Kernel spec
+// ---------------------------------------------------------------------------
+
+/// A possibly-unresolved kernel: bandwidths may be left to the median
+/// heuristic, which is resolved against the actual training inputs by
+/// [`KernelSpec::resolve`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum KernelSpec {
+    /// RBF with the median-heuristic bandwidth (the default).
+    #[default]
+    Auto,
+    Rbf { sigma: Option<f64> },
+    Linear { c: f64 },
+    Polynomial { gamma: f64, c: f64, degree: u32 },
+    Laplacian { sigma: Option<f64> },
+}
+
+impl KernelSpec {
+    /// Pin a fully-specified kernel.
+    pub fn exact(kernel: &Kernel) -> KernelSpec {
+        match kernel {
+            Kernel::Rbf { sigma } => KernelSpec::Rbf { sigma: Some(*sigma) },
+            Kernel::Linear { c } => KernelSpec::Linear { c: *c },
+            Kernel::Polynomial { gamma, c, degree } => {
+                KernelSpec::Polynomial { gamma: *gamma, c: *c, degree: *degree }
+            }
+            Kernel::Laplacian { sigma } => KernelSpec::Laplacian { sigma: Some(*sigma) },
+        }
+    }
+
+    /// Resolve against the training inputs (fills median-heuristic σ).
+    pub fn resolve(&self, x: &Matrix) -> Kernel {
+        match self {
+            KernelSpec::Auto => Kernel::Rbf { sigma: median_heuristic_sigma(x) },
+            KernelSpec::Rbf { sigma } => {
+                Kernel::Rbf { sigma: sigma.unwrap_or_else(|| median_heuristic_sigma(x)) }
+            }
+            KernelSpec::Linear { c } => Kernel::Linear { c: *c },
+            KernelSpec::Polynomial { gamma, c, degree } => {
+                Kernel::Polynomial { gamma: *gamma, c: *c, degree: *degree }
+            }
+            KernelSpec::Laplacian { sigma } => {
+                Kernel::Laplacian { sigma: sigma.unwrap_or_else(|| median_heuristic_sigma(x)) }
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            KernelSpec::Auto => Json::obj(vec![("type", Json::str("auto"))]),
+            KernelSpec::Rbf { sigma } => {
+                let mut pairs = vec![("type", Json::str("rbf"))];
+                if let Some(s) = sigma {
+                    pairs.push(("sigma", Json::num(*s)));
+                }
+                Json::obj(pairs)
+            }
+            KernelSpec::Linear { c } => {
+                Json::obj(vec![("type", Json::str("linear")), ("c", Json::num(*c))])
+            }
+            KernelSpec::Polynomial { gamma, c, degree } => Json::obj(vec![
+                ("type", Json::str("polynomial")),
+                ("gamma", Json::num(*gamma)),
+                ("c", Json::num(*c)),
+                ("degree", Json::num(*degree as f64)),
+            ]),
+            KernelSpec::Laplacian { sigma } => {
+                let mut pairs = vec![("type", Json::str("laplacian"))];
+                if let Some(s) = sigma {
+                    pairs.push(("sigma", Json::num(*s)));
+                }
+                Json::obj(pairs)
+            }
+        }
+    }
+
+    /// Parse a kernel spec. The type defaults to `"rbf"` (the wire
+    /// protocol's historical behavior); an unknown type is an error.
+    pub fn from_json(v: &Json) -> Result<KernelSpec> {
+        match v.get_str("type").unwrap_or("rbf") {
+            "auto" => Ok(KernelSpec::Auto),
+            "rbf" => Ok(KernelSpec::Rbf { sigma: v.get_f64("sigma") }),
+            "linear" => Ok(KernelSpec::Linear { c: v.get_f64("c").unwrap_or(0.0) }),
+            "polynomial" => Ok(KernelSpec::Polynomial {
+                gamma: v.get_f64("gamma").unwrap_or(1.0),
+                c: v.get_f64("c").unwrap_or(1.0),
+                degree: v.get_usize("degree").unwrap_or(2) as u32,
+            }),
+            "laplacian" => Ok(KernelSpec::Laplacian { sigma: v.get_f64("sigma") }),
+            other => bail!("unknown kernel type {other:?}"),
+        }
+    }
+}
+
+/// Serialize a *resolved* kernel (artifacts pin exact parameters).
+pub fn kernel_to_json(k: &Kernel) -> Json {
+    KernelSpec::exact(k).to_json()
+}
+
+/// Parse a resolved kernel from an artifact (σ is required there — an
+/// artifact must not re-derive bandwidths from data).
+pub fn kernel_from_json(v: &Json) -> Result<Kernel> {
+    match KernelSpec::from_json(v)? {
+        KernelSpec::Auto | KernelSpec::Rbf { sigma: None } | KernelSpec::Laplacian { sigma: None } => {
+            bail!("artifact kernel must carry an explicit sigma")
+        }
+        KernelSpec::Rbf { sigma: Some(s) } => Ok(Kernel::Rbf { sigma: s }),
+        KernelSpec::Laplacian { sigma: Some(s) } => Ok(Kernel::Laplacian { sigma: s }),
+        KernelSpec::Linear { c } => Ok(Kernel::Linear { c }),
+        KernelSpec::Polynomial { gamma, c, degree } => {
+            Ok(Kernel::Polynomial { gamma, c, degree })
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Solver option overrides
+// ---------------------------------------------------------------------------
+
+macro_rules! opt_fields {
+    // internal per-field rules first, so `@one` never reaches the
+    // public rule's `expr` fragment parser
+    (@one $v:ident, $opts:ident, $key:tt, $field:ident, f64) => {
+        if $v.get($key).is_some() {
+            $opts.$field = $v
+                .get_f64($key)
+                .ok_or_else(|| anyhow!(concat!($key, " must be a number")))?;
+        }
+    };
+    (@one $v:ident, $opts:ident, $key:tt, $field:ident, usize) => {
+        if $v.get($key).is_some() {
+            $opts.$field = $v
+                .get_usize($key)
+                .ok_or_else(|| anyhow!(concat!($key, " must be a non-negative integer")))?;
+        }
+    };
+    (@one $v:ident, $opts:ident, $key:tt, $field:ident, bool) => {
+        if $v.get($key).is_some() {
+            $opts.$field = $v
+                .get_bool($key)
+                .ok_or_else(|| anyhow!(concat!($key, " must be a boolean")))?;
+        }
+    };
+    ($v:ident, $opts:ident, { $($key:tt => $field:ident : $kind:tt),+ $(,)? }) => {{
+        if let Json::Obj(map) = $v {
+            for key in map.keys() {
+                if ![$($key),+].contains(&key.as_str()) {
+                    bail!("unknown option {key:?} (have: {})", [$($key),+].join(", "));
+                }
+            }
+        } else {
+            bail!("options must be an object");
+        }
+        $(opt_fields!(@one $v, $opts, $key, $field, $kind);)+
+    }};
+}
+
+/// Apply a partial JSON override on top of `base` [`SolveOptions`].
+/// Unknown keys are errors — a typo'd tolerance silently ignored is a
+/// wrong-model bug.
+pub fn solve_options_from_json(v: &Json, base: SolveOptions) -> Result<SolveOptions> {
+    let mut opts = base;
+    opt_fields!(v, opts, {
+        "chunk" => chunk: usize,
+        "max_iters" => max_iters: usize,
+        "apgd_tol" => apgd_tol: f64,
+        "kkt_tol" => kkt_tol: f64,
+        "kkt_band" => kkt_band: f64,
+        "gamma_init" => gamma_init: f64,
+        "gamma_shrink" => gamma_shrink: f64,
+        "gamma_min" => gamma_min: f64,
+        "max_expansions" => max_expansions: usize,
+        "max_stall_rungs" => max_stall_rungs: usize,
+        "projection" => projection: bool,
+        "nesterov" => nesterov: bool,
+    });
+    Ok(opts)
+}
+
+/// Full serialization of [`SolveOptions`] (round-trips exactly).
+pub fn solve_options_to_json(o: &SolveOptions) -> Json {
+    Json::obj(vec![
+        ("chunk", Json::num(o.chunk as f64)),
+        ("max_iters", Json::num(o.max_iters as f64)),
+        ("apgd_tol", Json::num(o.apgd_tol)),
+        ("kkt_tol", Json::num(o.kkt_tol)),
+        ("kkt_band", Json::num(o.kkt_band)),
+        ("gamma_init", Json::num(o.gamma_init)),
+        ("gamma_shrink", Json::num(o.gamma_shrink)),
+        ("gamma_min", Json::num(o.gamma_min)),
+        ("max_expansions", Json::num(o.max_expansions as f64)),
+        ("max_stall_rungs", Json::num(o.max_stall_rungs as f64)),
+        ("projection", Json::Bool(o.projection)),
+        ("nesterov", Json::Bool(o.nesterov)),
+    ])
+}
+
+/// Apply a partial JSON override on top of `base` [`NcOptions`].
+pub fn nc_options_from_json(v: &Json, base: NcOptions) -> Result<NcOptions> {
+    let mut opts = base;
+    opt_fields!(v, opts, {
+        "max_iters" => max_iters: usize,
+        "mm_tol" => mm_tol: f64,
+        "kkt_tol" => kkt_tol: f64,
+        "kkt_band" => kkt_band: f64,
+        "gamma_init" => gamma_init: f64,
+        "gamma_shrink" => gamma_shrink: f64,
+        "gamma_min" => gamma_min: f64,
+        "max_expansions" => max_expansions: usize,
+        "projection" => projection: bool,
+        "max_stall_rungs" => max_stall_rungs: usize,
+    });
+    Ok(opts)
+}
+
+/// Full serialization of [`NcOptions`] (round-trips exactly).
+pub fn nc_options_to_json(o: &NcOptions) -> Json {
+    Json::obj(vec![
+        ("max_iters", Json::num(o.max_iters as f64)),
+        ("mm_tol", Json::num(o.mm_tol)),
+        ("kkt_tol", Json::num(o.kkt_tol)),
+        ("kkt_band", Json::num(o.kkt_band)),
+        ("gamma_init", Json::num(o.gamma_init)),
+        ("gamma_shrink", Json::num(o.gamma_shrink)),
+        ("gamma_min", Json::num(o.gamma_min)),
+        ("max_expansions", Json::num(o.max_expansions as f64)),
+        ("projection", Json::Bool(o.projection)),
+        ("max_stall_rungs", Json::num(o.max_stall_rungs as f64)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Task
+// ---------------------------------------------------------------------------
+
+/// What to compute on the spec's (x, y, kernel).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Task {
+    /// One (τ, λ) KQR fit.
+    Single { tau: f64, lambda: f64 },
+    /// Warm-started descending-λ path at one τ.
+    Path { tau: f64, lambdas: Vec<f64> },
+    /// Full τ×λ grid on one cached basis ([`FitEngine::fit_grid`]).
+    Grid { taus: Vec<f64>, lambdas: Vec<f64> },
+    /// Simultaneous non-crossing fit (NCKQR).
+    NonCrossing { taus: Vec<f64>, lam1: f64, lam2: f64 },
+    /// k-fold CV over a λ grid, one run per τ, each refit at its best λ.
+    Cv { taus: Vec<f64>, lambdas: Vec<f64>, folds: usize, seed: u64 },
+}
+
+impl Task {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Task::Single { tau, lambda } => Json::obj(vec![
+                ("type", Json::str("single")),
+                ("tau", Json::num(*tau)),
+                ("lambda", Json::num(*lambda)),
+            ]),
+            Task::Path { tau, lambdas } => Json::obj(vec![
+                ("type", Json::str("path")),
+                ("tau", Json::num(*tau)),
+                ("lambdas", Json::arr_f64(lambdas)),
+            ]),
+            Task::Grid { taus, lambdas } => Json::obj(vec![
+                ("type", Json::str("grid")),
+                ("taus", Json::arr_f64(taus)),
+                ("lambdas", Json::arr_f64(lambdas)),
+            ]),
+            Task::NonCrossing { taus, lam1, lam2 } => Json::obj(vec![
+                ("type", Json::str("noncrossing")),
+                ("taus", Json::arr_f64(taus)),
+                ("lam1", Json::num(*lam1)),
+                ("lam2", Json::num(*lam2)),
+            ]),
+            Task::Cv { taus, lambdas, folds, seed } => Json::obj(vec![
+                ("type", Json::str("cv")),
+                ("taus", Json::arr_f64(taus)),
+                ("lambdas", Json::arr_f64(lambdas)),
+                ("folds", Json::num(*folds as f64)),
+                ("seed", Json::num(*seed as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Task> {
+        let ty = v.get_str("type").ok_or_else(|| anyhow!("task: missing 'type'"))?;
+        let f = |key: &str| v.get_f64(key).ok_or_else(|| anyhow!("task: missing number {key:?}"));
+        let fs = |key: &str| {
+            v.get_f64_arr_strict(key)
+                .ok_or_else(|| anyhow!("task: missing numeric array {key:?}"))
+        };
+        match ty {
+            "single" => Ok(Task::Single { tau: f("tau")?, lambda: f("lambda")? }),
+            "path" => Ok(Task::Path { tau: f("tau")?, lambdas: fs("lambdas")? }),
+            "grid" => Ok(Task::Grid { taus: fs("taus")?, lambdas: fs("lambdas")? }),
+            "noncrossing" | "non_crossing" | "nckqr" => Ok(Task::NonCrossing {
+                taus: fs("taus")?,
+                lam1: f("lam1")?,
+                lam2: f("lam2")?,
+            }),
+            "cv" => {
+                // Absent → default; present-but-invalid → error, like
+                // every other spec field (a "folds":"ten" must not
+                // silently run 5-fold CV).
+                let folds = match v.get("folds") {
+                    None => 5,
+                    Some(_) => v
+                        .get_usize("folds")
+                        .ok_or_else(|| anyhow!("task: folds must be a non-negative integer"))?,
+                };
+                let seed = match v.get("seed") {
+                    None => 2024,
+                    Some(_) => v
+                        .get_usize("seed")
+                        .ok_or_else(|| anyhow!("task: seed must be a non-negative integer"))?
+                        as u64,
+                };
+                Ok(Task::Cv { taus: fs("taus")?, lambdas: fs("lambdas")?, folds, seed })
+            }
+            other => bail!("unknown task type {other:?} (single|path|grid|noncrossing|cv)"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FitSpec
+// ---------------------------------------------------------------------------
+
+/// A complete, declarative, serializable fit request.
+#[derive(Clone, Debug)]
+pub struct FitSpec {
+    pub x: Matrix,
+    pub y: Vec<f64>,
+    pub kernel: KernelSpec,
+    pub task: Task,
+    /// KQR solver overrides; `None` → the executing engine's defaults.
+    pub opts: Option<SolveOptions>,
+    /// NCKQR solver overrides; `None` → [`NcOptions::default`].
+    pub nc_opts: Option<NcOptions>,
+    /// Grid strategy hint: force the lockstep / sequential driver
+    /// (`None` → engine config / `FASTKQR_LOCKSTEP`).
+    pub lockstep: Option<bool>,
+    /// APGD backend hint for Single/Path tasks: `"native"` (default) or
+    /// `"xla"` (requires the `xla` cargo feature at runtime).
+    pub backend: Option<String>,
+}
+
+impl FitSpec {
+    pub fn new(x: Matrix, y: Vec<f64>, kernel: KernelSpec, task: Task) -> FitSpec {
+        FitSpec { x, y, kernel, task, opts: None, nc_opts: None, lockstep: None, backend: None }
+    }
+
+    pub fn single(x: Matrix, y: Vec<f64>, kernel: KernelSpec, tau: f64, lambda: f64) -> FitSpec {
+        FitSpec::new(x, y, kernel, Task::Single { tau, lambda })
+    }
+
+    pub fn path(x: Matrix, y: Vec<f64>, kernel: KernelSpec, tau: f64, lambdas: Vec<f64>) -> FitSpec {
+        FitSpec::new(x, y, kernel, Task::Path { tau, lambdas })
+    }
+
+    pub fn grid(
+        x: Matrix,
+        y: Vec<f64>,
+        kernel: KernelSpec,
+        taus: Vec<f64>,
+        lambdas: Vec<f64>,
+    ) -> FitSpec {
+        FitSpec::new(x, y, kernel, Task::Grid { taus, lambdas })
+    }
+
+    pub fn non_crossing(
+        x: Matrix,
+        y: Vec<f64>,
+        kernel: KernelSpec,
+        taus: Vec<f64>,
+        lam1: f64,
+        lam2: f64,
+    ) -> FitSpec {
+        FitSpec::new(x, y, kernel, Task::NonCrossing { taus, lam1, lam2 })
+    }
+
+    pub fn cv(
+        x: Matrix,
+        y: Vec<f64>,
+        kernel: KernelSpec,
+        taus: Vec<f64>,
+        lambdas: Vec<f64>,
+        folds: usize,
+        seed: u64,
+    ) -> FitSpec {
+        FitSpec::new(x, y, kernel, Task::Cv { taus, lambdas, folds, seed })
+    }
+
+    pub fn with_opts(mut self, opts: SolveOptions) -> FitSpec {
+        self.opts = Some(opts);
+        self
+    }
+
+    pub fn with_nc_opts(mut self, opts: NcOptions) -> FitSpec {
+        self.nc_opts = Some(opts);
+        self
+    }
+
+    pub fn with_lockstep(mut self, lockstep: bool) -> FitSpec {
+        self.lockstep = Some(lockstep);
+        self
+    }
+
+    pub fn with_backend(mut self, backend: impl Into<String>) -> FitSpec {
+        self.backend = Some(backend.into());
+        self
+    }
+
+    /// Structural validation (shape + non-empty axes). Numeric validity
+    /// (τ ∈ (0,1), λ > 0, fold counts) is enforced by the solvers, which
+    /// already error rather than panic on bad values.
+    pub fn validate(&self) -> Result<()> {
+        if self.x.rows() == 0 || self.x.cols() == 0 {
+            bail!("spec: x must be non-empty");
+        }
+        if self.y.len() != self.x.rows() {
+            bail!("spec: len(y)={} != rows(x)={}", self.y.len(), self.x.rows());
+        }
+        match &self.task {
+            Task::Path { lambdas, .. } if lambdas.is_empty() => bail!("spec: empty lambdas"),
+            Task::Grid { taus, lambdas } if taus.is_empty() || lambdas.is_empty() => {
+                bail!("spec: empty grid axis")
+            }
+            Task::NonCrossing { taus, .. } if taus.is_empty() => bail!("spec: empty taus"),
+            Task::Cv { taus, lambdas, .. } if taus.is_empty() || lambdas.is_empty() => {
+                bail!("spec: empty cv axis")
+            }
+            _ => Ok(()),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("version", Json::num(SPEC_VERSION as f64)),
+            ("kernel", self.kernel.to_json()),
+            ("task", self.task.to_json()),
+            ("x", matrix_to_json(&self.x)),
+            ("y", Json::arr_f64(&self.y)),
+        ];
+        if let Some(o) = &self.opts {
+            pairs.push(("opts", solve_options_to_json(o)));
+        }
+        if let Some(o) = &self.nc_opts {
+            pairs.push(("nc_opts", nc_options_to_json(o)));
+        }
+        if let Some(l) = self.lockstep {
+            pairs.push(("lockstep", Json::Bool(l)));
+        }
+        if let Some(b) = &self.backend {
+            pairs.push(("backend", Json::str(b.clone())));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<FitSpec> {
+        let version = v.get_usize("version").unwrap_or(1) as u64;
+        if version > SPEC_VERSION {
+            bail!("spec version {version} is newer than supported {SPEC_VERSION}");
+        }
+        let x = matrix_from_json(v.get("x").ok_or_else(|| anyhow!("spec: missing 'x'"))?)?;
+        let y = v
+            .get_f64_arr_strict("y")
+            .ok_or_else(|| anyhow!("spec: 'y' must be a numeric array"))?;
+        let kernel = match v.get("kernel") {
+            None => KernelSpec::Auto,
+            Some(k) => KernelSpec::from_json(k)?,
+        };
+        let task = Task::from_json(v.get("task").ok_or_else(|| anyhow!("spec: missing 'task'"))?)?;
+        let opts = match v.get("opts") {
+            None => None,
+            Some(o) => Some(solve_options_from_json(o, SolveOptions::default())?),
+        };
+        let nc_opts = match v.get("nc_opts") {
+            None => None,
+            Some(o) => Some(nc_options_from_json(o, NcOptions::default())?),
+        };
+        let lockstep = match v.get("lockstep") {
+            None => None,
+            Some(l) => Some(l.as_bool().ok_or_else(|| anyhow!("spec: lockstep must be a bool"))?),
+        };
+        let backend = v.get_str("backend").map(String::from);
+        let spec = FitSpec { x, y, kernel, task, opts, nc_opts, lockstep, backend };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a spec from JSON text.
+    pub fn parse(s: &str) -> Result<FitSpec> {
+        let v = Json::parse(s).map_err(|e| anyhow!("spec: {e}"))?;
+        FitSpec::from_json(&v)
+    }
+}
+
+fn backend_for(name: Option<&str>) -> Result<Box<dyn Backend>> {
+    match name.unwrap_or("native") {
+        "native" => Ok(Box::new(NativeBackend::new())),
+        "xla" => Ok(Box::new(crate::runtime::XlaBackend::from_default_dir()?)),
+        other => bail!("unknown backend {other:?} (native|xla)"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Execution
+// ---------------------------------------------------------------------------
+
+impl FitEngine {
+    /// Execute a [`FitSpec`] on this engine. Every task — including
+    /// `NonCrossing` — draws its Gram matrix and eigenbasis from the
+    /// engine's [`crate::engine::GramCache`], so repeated or concurrent
+    /// specs on the same (x, y, kernel) share one O(n³) decomposition.
+    pub fn run(&self, spec: &FitSpec) -> Result<QuantileModel> {
+        spec.validate()?;
+        let kernel = spec.kernel.resolve(&spec.x);
+        let opts = spec.opts.clone().unwrap_or_else(|| self.config.opts.clone());
+        match &spec.task {
+            Task::Single { tau, lambda } => {
+                let solver = self.solver_with_options(&spec.x, &spec.y, &kernel, opts)?;
+                let mut backend = backend_for(spec.backend.as_deref())?;
+                let mut state = ApgdState::zeros(solver.n());
+                let fit = solver.fit_warm(*tau, *lambda, &mut state, backend.as_mut())?;
+                Ok(QuantileModel::Kqr(fit))
+            }
+            Task::Path { tau, lambdas } => {
+                let solver = self.solver_with_options(&spec.x, &spec.y, &kernel, opts)?;
+                let mut backend = backend_for(spec.backend.as_deref())?;
+                let fits = solver.fit_path_with_backend(*tau, lambdas, backend.as_mut())?;
+                Ok(QuantileModel::Set(ModelSet {
+                    fits,
+                    shape: SetShape::Path { tau: *tau },
+                    cv: Vec::new(),
+                    lockstep: None,
+                }))
+            }
+            Task::Grid { taus, lambdas } => {
+                let grid = self.fit_grid_with_strategy(
+                    &spec.x,
+                    &spec.y,
+                    &kernel,
+                    taus,
+                    lambdas,
+                    spec.lockstep,
+                    spec.opts.clone(),
+                )?;
+                Ok(QuantileModel::from_grid(grid))
+            }
+            Task::NonCrossing { taus, lam1, lam2 } => {
+                let nc_opts = spec.nc_opts.clone().unwrap_or_default();
+                let solver =
+                    self.nc_solver_with_options(&spec.x, &spec.y, &kernel, taus, nc_opts)?;
+                let fit = solver.fit(*lam1, *lam2)?;
+                Ok(QuantileModel::Nckqr(fit))
+            }
+            Task::Cv { taus, lambdas, folds, seed } => {
+                let data = Dataset::new("spec", spec.x.clone(), spec.y.clone());
+                let mut fits = Vec::with_capacity(taus.len());
+                let mut summaries = Vec::with_capacity(taus.len());
+                for &tau in taus {
+                    // A fresh RNG from the same seed per τ: every level
+                    // scores on the identical fold assignment, so CV
+                    // losses are comparable across τ.
+                    let mut rng = Rng::new(*seed);
+                    let res = cross_validate_on(
+                        self, &data, &kernel, tau, lambdas, *folds, &opts, &mut rng,
+                    )?;
+                    let refit = res
+                        .refit
+                        .clone()
+                        .ok_or_else(|| anyhow!("cv produced no refit at tau={tau}"))?;
+                    fits.push(refit);
+                    summaries.push(CvSummary {
+                        tau,
+                        lambdas: res.lambdas,
+                        cv_loss: res.cv_loss,
+                        best_index: res.best_index,
+                        best_lambda: res.best_lambda,
+                    });
+                }
+                Ok(QuantileModel::Set(ModelSet {
+                    fits,
+                    shape: SetShape::Cv { folds: *folds, seed: *seed },
+                    cv: summaries,
+                    lockstep: None,
+                }))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn toy_spec(task: Task) -> FitSpec {
+        let mut rng = Rng::new(11);
+        let d = synth::sine_hetero(24, &mut rng);
+        FitSpec::new(d.x, d.y, KernelSpec::Rbf { sigma: Some(0.5) }, task)
+    }
+
+    #[test]
+    fn spec_json_roundtrip_is_exact() {
+        let spec = toy_spec(Task::Grid { taus: vec![0.25, 0.5], lambdas: vec![0.1, 0.01] })
+            .with_lockstep(true)
+            .with_opts(SolveOptions::cv_preset());
+        let s1 = spec.to_json().to_string();
+        let back = FitSpec::parse(&s1).unwrap();
+        assert_eq!(back.to_json().to_string(), s1, "to_json∘from_json must be identity");
+        assert_eq!(back.task, spec.task);
+        assert_eq!(back.kernel, spec.kernel);
+        assert_eq!(back.lockstep, Some(true));
+        assert_eq!(back.x.as_slice(), spec.x.as_slice());
+    }
+
+    #[test]
+    fn spec_rejects_malformed_documents() {
+        // ragged x
+        assert!(FitSpec::parse(
+            r#"{"x":[[1,2],[3]],"y":[1,2],"task":{"type":"single","tau":0.5,"lambda":0.1}}"#
+        )
+        .is_err());
+        // unknown task
+        assert!(FitSpec::parse(
+            r#"{"x":[[1],[2]],"y":[1,2],"task":{"type":"warp","tau":0.5}}"#
+        )
+        .is_err());
+        // bad kernel type
+        assert!(FitSpec::parse(
+            r#"{"x":[[1],[2]],"y":[1,2],"kernel":{"type":"sinc"},
+                "task":{"type":"single","tau":0.5,"lambda":0.1}}"#
+        )
+        .is_err());
+        // y/x length mismatch
+        assert!(FitSpec::parse(
+            r#"{"x":[[1],[2]],"y":[1],"task":{"type":"single","tau":0.5,"lambda":0.1}}"#
+        )
+        .is_err());
+        // non-numeric y entry
+        assert!(FitSpec::parse(
+            r#"{"x":[[1],[2]],"y":[1,"a"],"task":{"type":"single","tau":0.5,"lambda":0.1}}"#
+        )
+        .is_err());
+        // unknown solver option key
+        assert!(FitSpec::parse(
+            r#"{"x":[[1],[2]],"y":[1,2],"opts":{"kkt_tolerance":0.1},
+                "task":{"type":"single","tau":0.5,"lambda":0.1}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn kernel_spec_resolves_median_heuristic() {
+        let mut rng = Rng::new(3);
+        let d = synth::sine_hetero(20, &mut rng);
+        let auto = KernelSpec::Auto.resolve(&d.x);
+        let expect = Kernel::Rbf { sigma: median_heuristic_sigma(&d.x) };
+        assert_eq!(auto, expect);
+        let pinned = KernelSpec::Rbf { sigma: Some(0.3) }.resolve(&d.x);
+        assert_eq!(pinned, Kernel::Rbf { sigma: 0.3 });
+    }
+
+    #[test]
+    fn run_single_matches_direct_solver() {
+        let spec = toy_spec(Task::Single { tau: 0.5, lambda: 0.05 });
+        let engine = FitEngine::new();
+        let model = engine.run(&spec).unwrap();
+        let direct = crate::kqr::KqrSolver::new(&spec.x, &spec.y, spec.kernel.resolve(&spec.x))
+            .unwrap()
+            .fit(0.5, 0.05)
+            .unwrap();
+        match &model {
+            QuantileModel::Kqr(f) => {
+                assert_eq!(f.objective, direct.objective, "engine path must be exact");
+                assert_eq!(f.alpha, direct.alpha);
+            }
+            other => panic!("expected Kqr model, got {}", other.kind()),
+        }
+        assert_eq!(model.taus(), vec![0.5]);
+    }
+
+    #[test]
+    fn run_noncrossing_uses_the_gram_cache() {
+        let spec = toy_spec(Task::NonCrossing { taus: vec![0.25, 0.75], lam1: 5.0, lam2: 0.05 });
+        let engine = FitEngine::new();
+        let m1 = engine.run(&spec).unwrap();
+        let m2 = engine.run(&spec).unwrap();
+        assert_eq!(
+            crate::engine::CacheMetrics::get(&engine.cache.metrics.decompositions),
+            1,
+            "repeated NonCrossing specs must share one decomposition"
+        );
+        assert_eq!(m1.taus(), m2.taus());
+    }
+}

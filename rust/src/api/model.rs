@@ -1,0 +1,304 @@
+//! The unified model facade over KQR, NCKQR and fit-set results.
+//!
+//! Everything downstream of a fit — the registry, the predict path, the
+//! CLI and the persistence layer — handles a [`QuantileModel`] instead of
+//! caring which solver produced it. One `predict` (one output row per
+//! quantile level / grid cell), one `taus`, one `diagnostics`, one
+//! versioned save/load (see [`super::artifact`]).
+
+use super::artifact;
+use crate::engine::{GridFit, LockstepStats};
+use crate::kqr::KqrFit;
+use crate::linalg::Matrix;
+use crate::nckqr::NckqrFit;
+use crate::util::Json;
+use anyhow::Result;
+use std::path::Path;
+
+/// Provenance of a [`ModelSet`]'s fits.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SetShape {
+    /// A λ path at one τ (fits in grid order).
+    Path { tau: f64 },
+    /// A full τ×λ grid; fits are flattened τ-major (`fits[ti*|λ|+li]`).
+    Grid { taus: Vec<f64>, lambdas: Vec<f64> },
+    /// Per-τ CV winners (one refit per τ).
+    Cv { folds: usize, seed: u64 },
+}
+
+/// One τ level's cross-validation outcome (kept for diagnostics and
+/// persisted with the artifact).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CvSummary {
+    pub tau: f64,
+    pub lambdas: Vec<f64>,
+    pub cv_loss: Vec<f64>,
+    pub best_index: usize,
+    pub best_lambda: f64,
+}
+
+impl CvSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tau", Json::num(self.tau)),
+            ("lambdas", Json::arr_f64(&self.lambdas)),
+            ("cv_loss", Json::arr_f64(&self.cv_loss)),
+            ("best_index", Json::num(self.best_index as f64)),
+            ("best_lambda", Json::num(self.best_lambda)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<CvSummary> {
+        use anyhow::anyhow;
+        Ok(CvSummary {
+            tau: v.get_f64("tau").ok_or_else(|| anyhow!("cv summary: missing tau"))?,
+            lambdas: v
+                .get_f64_arr_strict("lambdas")
+                .ok_or_else(|| anyhow!("cv summary: missing lambdas"))?,
+            cv_loss: v
+                .get_f64_arr_strict("cv_loss")
+                .ok_or_else(|| anyhow!("cv summary: missing cv_loss"))?,
+            best_index: v
+                .get_usize("best_index")
+                .ok_or_else(|| anyhow!("cv summary: missing best_index"))?,
+            best_lambda: v
+                .get_f64("best_lambda")
+                .ok_or_else(|| anyhow!("cv summary: missing best_lambda"))?,
+        })
+    }
+}
+
+/// A collection of single-τ fits (path, grid or CV winners) presented as
+/// one model: one prediction row per fit.
+#[derive(Clone, Debug)]
+pub struct ModelSet {
+    pub fits: Vec<KqrFit>,
+    pub shape: SetShape,
+    /// Per-τ CV outcomes (non-empty only for [`SetShape::Cv`]).
+    pub cv: Vec<CvSummary>,
+    /// Runtime-only bundle accounting from the lockstep grid driver;
+    /// not persisted (it does not affect predictions).
+    pub lockstep: Option<LockstepStats>,
+}
+
+/// The unified fitted-model facade (see module docs).
+#[derive(Clone, Debug)]
+pub enum QuantileModel {
+    Kqr(KqrFit),
+    Nckqr(NckqrFit),
+    Set(ModelSet),
+}
+
+impl QuantileModel {
+    /// Flatten an engine [`GridFit`] (τ-major) into a model.
+    pub fn from_grid(grid: GridFit) -> QuantileModel {
+        let shape = SetShape::Grid { taus: grid.taus, lambdas: grid.lambdas };
+        QuantileModel::Set(ModelSet {
+            fits: grid.fits.into_iter().flatten().collect(),
+            shape,
+            cv: Vec::new(),
+            lockstep: grid.lockstep,
+        })
+    }
+
+    /// Artifact/registry kind tag.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            QuantileModel::Kqr(_) => "kqr",
+            QuantileModel::Nckqr(_) => "nckqr",
+            QuantileModel::Set(_) => "set",
+        }
+    }
+
+    /// Predict at the rows of `xt`: one output row per quantile level
+    /// (KQR: one; NCKQR: one per τ level; sets: one per fit).
+    pub fn predict(&self, xt: &Matrix) -> Vec<Vec<f64>> {
+        match self {
+            QuantileModel::Kqr(f) => vec![f.predict(xt)],
+            QuantileModel::Nckqr(f) => f.predict(xt),
+            QuantileModel::Set(s) => s.fits.iter().map(|f| f.predict(xt)).collect(),
+        }
+    }
+
+    /// The τ of each prediction row, in row order.
+    pub fn taus(&self) -> Vec<f64> {
+        match self {
+            QuantileModel::Kqr(f) => vec![f.tau],
+            QuantileModel::Nckqr(f) => f.taus.clone(),
+            QuantileModel::Set(s) => s.fits.iter().map(|f| f.tau).collect(),
+        }
+    }
+
+    /// The λ of each prediction row (NCKQR levels all share λ₂).
+    pub fn lambdas(&self) -> Vec<f64> {
+        match self {
+            QuantileModel::Kqr(f) => vec![f.lam],
+            QuantileModel::Nckqr(f) => vec![f.lam2; f.taus.len()],
+            QuantileModel::Set(s) => s.fits.iter().map(|f| f.lam).collect(),
+        }
+    }
+
+    /// Number of prediction rows.
+    pub fn n_levels(&self) -> usize {
+        match self {
+            QuantileModel::Kqr(_) => 1,
+            QuantileModel::Nckqr(f) => f.taus.len(),
+            QuantileModel::Set(s) => s.fits.len(),
+        }
+    }
+
+    pub fn n_train(&self) -> usize {
+        match self {
+            QuantileModel::Kqr(f) => f.n_train(),
+            QuantileModel::Nckqr(f) => f.x_train().rows(),
+            QuantileModel::Set(s) => s.fits.first().map(|f| f.n_train()).unwrap_or(0),
+        }
+    }
+
+    /// Feature dimension the model was trained on (p of `x_train`).
+    pub fn n_features(&self) -> usize {
+        match self {
+            QuantileModel::Kqr(f) => f.x_train().cols(),
+            QuantileModel::Nckqr(f) => f.x_train().cols(),
+            QuantileModel::Set(s) => s.fits.first().map(|f| f.x_train().cols()).unwrap_or(0),
+        }
+    }
+
+    /// Representative objective (first fit's for sets).
+    pub fn objective(&self) -> f64 {
+        match self {
+            QuantileModel::Kqr(f) => f.objective,
+            QuantileModel::Nckqr(f) => f.objective,
+            QuantileModel::Set(s) => s.fits.first().map(|f| f.objective).unwrap_or(f64::NAN),
+        }
+    }
+
+    /// Did every constituent fit certify its exact KKT conditions?
+    pub fn kkt_pass(&self) -> bool {
+        match self {
+            QuantileModel::Kqr(f) => f.kkt.pass,
+            QuantileModel::Nckqr(f) => f.kkt.pass,
+            QuantileModel::Set(s) => s.fits.iter().all(|f| f.kkt.pass),
+        }
+    }
+
+    /// Structured per-model diagnostics (served by the protocol's fit
+    /// response and the CLI).
+    pub fn diagnostics(&self) -> Json {
+        match self {
+            QuantileModel::Kqr(f) => Json::obj(vec![
+                ("kind", Json::str("kqr")),
+                ("n_train", Json::num(f.n_train() as f64)),
+                ("tau", Json::num(f.tau)),
+                ("lambda", Json::num(f.lam)),
+                ("objective", Json::num(f.objective)),
+                ("apgd_iters", Json::num(f.apgd_iters as f64)),
+                ("expansions", Json::num(f.expansions as f64)),
+                ("gamma_final", Json::num(f.gamma_final)),
+                ("singular_set_size", Json::num(f.singular_set.len() as f64)),
+                ("kkt", f.kkt.to_json()),
+            ]),
+            QuantileModel::Nckqr(f) => Json::obj(vec![
+                ("kind", Json::str("nckqr")),
+                ("n_train", Json::num(f.x_train().rows() as f64)),
+                ("taus", Json::arr_f64(&f.taus)),
+                ("lam1", Json::num(f.lam1)),
+                ("lam2", Json::num(f.lam2)),
+                ("objective", Json::num(f.objective)),
+                ("mm_iters", Json::num(f.mm_iters as f64)),
+                ("gamma_final", Json::num(f.gamma_final)),
+                ("train_crossings", Json::num(f.train_crossings as f64)),
+                ("kkt", f.kkt.to_json()),
+            ]),
+            QuantileModel::Set(s) => {
+                let mut pairs = vec![
+                    ("kind", Json::str("set")),
+                    ("n_train", Json::num(self.n_train() as f64)),
+                    ("count", Json::num(s.fits.len() as f64)),
+                    ("taus", Json::arr_f64(&self.taus())),
+                    ("lambdas", Json::arr_f64(&self.lambdas())),
+                    (
+                        "objectives",
+                        Json::arr_f64(&s.fits.iter().map(|f| f.objective).collect::<Vec<_>>()),
+                    ),
+                    ("kkt_pass", Json::Bool(self.kkt_pass())),
+                    ("shape", shape_to_json(&s.shape)),
+                ];
+                if !s.cv.is_empty() {
+                    pairs.push(("cv", Json::Arr(s.cv.iter().map(CvSummary::to_json).collect())));
+                }
+                if let Some(l) = &s.lockstep {
+                    pairs.push((
+                        "lockstep",
+                        Json::obj(vec![
+                            ("cells", Json::num(l.cells as f64)),
+                            ("chunks", Json::num(l.chunks as f64)),
+                            ("retired", Json::num(l.retired as f64)),
+                            ("max_active", Json::num(l.max_active as f64)),
+                        ]),
+                    ));
+                }
+                Json::obj(pairs)
+            }
+        }
+    }
+
+    /// Serialize to the versioned artifact document (errors on an empty
+    /// fit set).
+    pub fn to_artifact(&self) -> Result<Json> {
+        artifact::to_json(self)
+    }
+
+    /// Deserialize from an artifact document.
+    pub fn from_artifact(v: &Json) -> Result<QuantileModel> {
+        artifact::from_json(v)
+    }
+
+    /// Write the artifact to a file (pretty enough: one compact line).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        artifact::save(self, path.as_ref())
+    }
+
+    /// Load an artifact file written by [`QuantileModel::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<QuantileModel> {
+        artifact::load(path.as_ref())
+    }
+}
+
+pub(super) fn shape_to_json(shape: &SetShape) -> Json {
+    match shape {
+        SetShape::Path { tau } => {
+            Json::obj(vec![("type", Json::str("path")), ("tau", Json::num(*tau))])
+        }
+        SetShape::Grid { taus, lambdas } => Json::obj(vec![
+            ("type", Json::str("grid")),
+            ("taus", Json::arr_f64(taus)),
+            ("lambdas", Json::arr_f64(lambdas)),
+        ]),
+        SetShape::Cv { folds, seed } => Json::obj(vec![
+            ("type", Json::str("cv")),
+            ("folds", Json::num(*folds as f64)),
+            ("seed", Json::num(*seed as f64)),
+        ]),
+    }
+}
+
+pub(super) fn shape_from_json(v: &Json) -> Result<SetShape> {
+    use anyhow::{anyhow, bail};
+    match v.get_str("type").ok_or_else(|| anyhow!("shape: missing type"))? {
+        "path" => Ok(SetShape::Path {
+            tau: v.get_f64("tau").ok_or_else(|| anyhow!("shape: missing tau"))?,
+        }),
+        "grid" => Ok(SetShape::Grid {
+            taus: v.get_f64_arr_strict("taus").ok_or_else(|| anyhow!("shape: missing taus"))?,
+            lambdas: v
+                .get_f64_arr_strict("lambdas")
+                .ok_or_else(|| anyhow!("shape: missing lambdas"))?,
+        }),
+        "cv" => Ok(SetShape::Cv {
+            folds: v.get_usize("folds").ok_or_else(|| anyhow!("shape: missing folds"))?,
+            seed: v.get_usize("seed").ok_or_else(|| anyhow!("shape: missing seed"))? as u64,
+        }),
+        other => bail!("unknown set shape {other:?}"),
+    }
+}

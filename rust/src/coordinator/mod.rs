@@ -9,16 +9,19 @@
 //!
 //! - [`job`]: job specs (single fit, warm-started λ path, NCKQR, CV);
 //! - [`scheduler`]: a worker pool with warm-start-aware batch ordering;
-//!   solver setup goes through the shared [`crate::engine::FitEngine`],
-//!   so jobs on the same dataset — adjacent *or concurrent* — reuse one
-//!   cached eigendecomposition, and per-worker APGD state warm-starts
-//!   the λ grid;
-//! - [`registry`]: a concurrent model store for the predict path;
+//!   solver setup — including NCKQR — goes through the shared
+//!   [`crate::engine::FitEngine`], so jobs on the same dataset —
+//!   adjacent *or concurrent* — reuse one cached eigendecomposition, and
+//!   per-worker APGD state warm-starts the λ grid;
+//! - [`registry`]: a concurrent [`crate::api::QuantileModel`] store for
+//!   the predict path, with optional write-through persistence to
+//!   versioned JSON artifacts (the server survives restarts);
 //! - [`metrics`]: atomic counters surfaced by the server and CLI;
 //! - [`server`]/[`protocol`]: a threaded TCP line-JSON service
 //!   (std::net — the offline environment has no tokio; a blocking
 //!   thread-per-connection design is appropriate for a compute-bound
-//!   service anyway).
+//!   service anyway). Protocol v2 accepts full [`crate::api::FitSpec`]
+//!   documents for `fit` and adds `save`/`load`/`export` for artifacts.
 
 pub mod job;
 pub mod metrics;

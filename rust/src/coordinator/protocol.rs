@@ -1,30 +1,40 @@
-//! Line-JSON protocol of the fit/predict service.
+//! Line-JSON protocol of the fit/predict service (v2: spec-driven).
 //!
-//! One request per line, one JSON response per line. Commands:
+//! One request per line, one JSON response per line. Fits are declarative
+//! [`FitSpec`] documents executed by the shared [`FitEngine`]; fitted
+//! models are [`crate::api::QuantileModel`]s held in the registry (and,
+//! with a persistence directory configured, mirrored to versioned JSON
+//! artifacts that survive restarts).
 //!
 //! | cmd | fields | response |
 //! |---|---|---|
 //! | `ping` | — | `{"ok":true,"pong":true,"version":…}` |
-//! | `fit` | `x` (n×p), `y` (n), `tau`, `lambda`, optional `kernel` | `{"ok":true,"model":"m0","objective":…,"kkt_pass":…}` |
-//! | `fit_nc` | `x`, `y`, `taus`, `lam1`, `lam2`, optional `kernel` | idem + `crossings` on the training points |
+//! | `fit` | `spec` (a full [`FitSpec`] document: kernel + task `single`/`path`/`grid`/`noncrossing`/`cv` + option overrides), **or** the legacy flat form `x`, `y`, `tau`, `lambda`, optional `kernel` | `{"ok":true,"model":"m0","kind":…,"taus":[…],"objective":…,"kkt_pass":…,"diagnostics":{…}}` plus `apgd_iters` (kqr) / `crossings` (nckqr) / `count` (set) |
+//! | `fit_nc` | legacy flat non-crossing form: `x`, `y`, `taus`, `lam1`, `lam2`, optional `kernel` | as `fit` (kind `nckqr`) |
 //! | `predict` | `model`, `x` | `{"ok":true,"taus":[…],"pred":[[…]…]}` |
+//! | `save` | `model`, optional `name` (single path component; the artifact lands in the registry's persistence dir — wire clients can never address arbitrary server paths) | `{"ok":true,"path":…}` |
+//! | `load` | `name` of an artifact in the persistence dir | `{"ok":true,"model":…,"kind":…,"taus":[…]}` |
+//! | `export` | `model` | `{"ok":true,"model":…,"artifact":{…}}` (inline artifact document) |
 //! | `models` | — | `{"ok":true,"models":[…]}` |
-//! | `drop` | `model` | `{"ok":true}` |
-//! | `metrics` | — | counter object |
+//! | `drop` | `model` | `{"ok":true}` (also removes the persisted artifact) |
+//! | `metrics` | — | counter object incl. `gram_cache_*` |
 //!
 //! Kernel spec: `{"type":"rbf","sigma":σ}` (σ omitted → median
-//! heuristic), `{"type":"linear","c":…}`, `{"type":"laplacian","sigma":…}`.
+//! heuristic), `"auto"`, `"linear"`, `"polynomial"`, `"laplacian"` — see
+//! [`crate::api::KernelSpec`].
 
 use super::metrics::Metrics;
-use super::registry::{ModelRegistry, StoredModel};
+use super::registry::ModelRegistry;
+use crate::api::{FitSpec, KernelSpec, QuantileModel};
 use crate::engine::{CacheMetrics, FitEngine};
-use crate::kernel::{median_heuristic_sigma, Kernel};
 use crate::kqr::SolveOptions;
-use crate::linalg::Matrix;
-use crate::nckqr::NckqrSolver;
 use crate::util::Json;
 use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
+
+// The strict matrix parser moved to the api layer with the rest of the
+// spec plumbing; re-exported here for existing consumers.
+pub use crate::api::matrix_from_json;
 
 /// Shared state the protocol operates on.
 pub struct ProtocolState {
@@ -32,52 +42,9 @@ pub struct ProtocolState {
     pub metrics: Arc<Metrics>,
     pub opts: SolveOptions,
     /// All fit requests go through the engine: concurrent connections
-    /// fitting the same payload share one cached Gram/eigenbasis.
+    /// fitting the same payload share one cached Gram/eigenbasis —
+    /// including non-crossing fits.
     pub engine: Arc<FitEngine>,
-}
-
-/// Parse an n×p matrix from a JSON array of arrays.
-pub fn matrix_from_json(v: &Json) -> Result<Matrix> {
-    let rows = v.as_arr().ok_or_else(|| anyhow!("x must be an array of arrays"))?;
-    if rows.is_empty() {
-        bail!("x must be non-empty");
-    }
-    let p = rows[0].as_arr().ok_or_else(|| anyhow!("x rows must be arrays"))?.len();
-    if p == 0 {
-        bail!("x rows must be non-empty");
-    }
-    let mut m = Matrix::zeros(rows.len(), p);
-    for (i, r) in rows.iter().enumerate() {
-        let r = r.as_arr().ok_or_else(|| anyhow!("x rows must be arrays"))?;
-        if r.len() != p {
-            bail!("ragged x: row {i} has {} cols, expected {p}", r.len());
-        }
-        for (j, cell) in r.iter().enumerate() {
-            m[(i, j)] = cell.as_f64().ok_or_else(|| anyhow!("x[{i}][{j}] not a number"))?;
-        }
-    }
-    Ok(m)
-}
-
-fn kernel_from_json(spec: Option<&Json>, x: &Matrix) -> Result<Kernel> {
-    match spec {
-        None => Ok(Kernel::Rbf { sigma: median_heuristic_sigma(x) }),
-        Some(s) => match s.get_str("type").unwrap_or("rbf") {
-            "rbf" => Ok(Kernel::Rbf {
-                sigma: s.get_f64("sigma").unwrap_or_else(|| median_heuristic_sigma(x)),
-            }),
-            "linear" => Ok(Kernel::Linear { c: s.get_f64("c").unwrap_or(0.0) }),
-            "laplacian" => Ok(Kernel::Laplacian {
-                sigma: s.get_f64("sigma").unwrap_or_else(|| median_heuristic_sigma(x)),
-            }),
-            "polynomial" => Ok(Kernel::Polynomial {
-                gamma: s.get_f64("gamma").unwrap_or(1.0),
-                c: s.get_f64("c").unwrap_or(1.0),
-                degree: s.get_f64("degree").unwrap_or(2.0) as u32,
-            }),
-            other => bail!("unknown kernel type {other:?}"),
-        },
-    }
 }
 
 fn err_json(msg: impl std::fmt::Display) -> Json {
@@ -101,6 +68,64 @@ pub fn handle_line(state: &ProtocolState, line: &str) -> Json {
             err_json(e)
         }
     }
+}
+
+/// Build the [`FitSpec`] for a `fit`/`fit_nc` request: either the full
+/// `spec` document, or the legacy flat field form. The server's
+/// configured solve options apply when the spec carries no override.
+fn spec_from_request(state: &ProtocolState, req: &Json, nc: bool) -> Result<FitSpec> {
+    let mut spec = if let Some(s) = req.get("spec") {
+        FitSpec::from_json(s)?
+    } else {
+        let x = matrix_from_json(req.get("x").ok_or_else(|| anyhow!("missing 'x'"))?)?;
+        let y = req
+            .get_f64_arr_strict("y")
+            .ok_or_else(|| anyhow!("'y' must be a numeric array"))?;
+        if y.len() != x.rows() {
+            bail!("len(y)={} != rows(x)={}", y.len(), x.rows());
+        }
+        let kernel = match req.get("kernel") {
+            None => KernelSpec::Auto,
+            Some(k) => KernelSpec::from_json(k)?,
+        };
+        if nc {
+            let taus = req
+                .get_f64_arr_strict("taus")
+                .ok_or_else(|| anyhow!("missing 'taus'"))?;
+            let lam1 = req.get_f64("lam1").ok_or_else(|| anyhow!("missing 'lam1'"))?;
+            let lam2 = req.get_f64("lam2").ok_or_else(|| anyhow!("missing 'lam2'"))?;
+            FitSpec::non_crossing(x, y, kernel, taus, lam1, lam2)
+        } else {
+            let tau = req.get_f64("tau").ok_or_else(|| anyhow!("missing 'tau'"))?;
+            let lambda = req.get_f64("lambda").ok_or_else(|| anyhow!("missing 'lambda'"))?;
+            FitSpec::single(x, y, kernel, tau, lambda)
+        }
+    };
+    if spec.opts.is_none() {
+        spec.opts = Some(state.opts.clone());
+    }
+    Ok(spec)
+}
+
+/// The `fit` response: unified fields plus one kind-specific extra kept
+/// for protocol-v1 clients (`apgd_iters` / `crossings`).
+fn fit_response(model: &QuantileModel) -> Vec<(&'static str, Json)> {
+    let mut pairs = vec![
+        ("ok", Json::Bool(true)),
+        ("kind", Json::str(model.kind())),
+        ("taus", Json::arr_f64(&model.taus())),
+        ("objective", Json::num(model.objective())),
+        ("kkt_pass", Json::Bool(model.kkt_pass())),
+        ("diagnostics", model.diagnostics()),
+    ];
+    match model {
+        QuantileModel::Kqr(f) => pairs.push(("apgd_iters", Json::num(f.apgd_iters as f64))),
+        QuantileModel::Nckqr(f) => {
+            pairs.push(("crossings", Json::num(f.train_crossings as f64)))
+        }
+        QuantileModel::Set(s) => pairs.push(("count", Json::num(s.fits.len() as f64))),
+    }
+    pairs
 }
 
 fn dispatch(state: &ProtocolState, req: &Json) -> Result<Json> {
@@ -145,45 +170,13 @@ fn dispatch(state: &ProtocolState, req: &Json) -> Result<Json> {
                 bail!("no such model {id:?}")
             }
         }
-        "fit" => {
-            let x = matrix_from_json(req.get("x").ok_or_else(|| anyhow!("missing 'x'"))?)?;
-            let y = req.get_f64_arr("y").ok_or_else(|| anyhow!("missing 'y'"))?;
-            if y.len() != x.rows() {
-                bail!("len(y)={} != rows(x)={}", y.len(), x.rows());
-            }
-            let tau = req.get_f64("tau").ok_or_else(|| anyhow!("missing 'tau'"))?;
-            let lambda = req.get_f64("lambda").ok_or_else(|| anyhow!("missing 'lambda'"))?;
-            let kernel = kernel_from_json(req.get("kernel"), &x)?;
-            let solver = state.engine.solver_with_options(&x, &y, &kernel, state.opts.clone())?;
-            let fit = solver.fit(tau, lambda)?;
+        "fit" | "fit_nc" => {
+            let spec = spec_from_request(state, req, cmd == "fit_nc")?;
+            let model = state.engine.run(&spec)?;
             Metrics::incr(&state.metrics.fits_total);
-            let resp = Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("objective", Json::num(fit.objective)),
-                ("kkt_pass", Json::Bool(fit.kkt.pass)),
-                ("apgd_iters", Json::num(fit.apgd_iters as f64)),
-                ("model", Json::str(state.registry.insert(StoredModel::Kqr(fit)))),
-            ]);
-            Ok(resp)
-        }
-        "fit_nc" => {
-            let x = matrix_from_json(req.get("x").ok_or_else(|| anyhow!("missing 'x'"))?)?;
-            let y = req.get_f64_arr("y").ok_or_else(|| anyhow!("missing 'y'"))?;
-            let taus = req.get_f64_arr("taus").ok_or_else(|| anyhow!("missing 'taus'"))?;
-            let lam1 = req.get_f64("lam1").ok_or_else(|| anyhow!("missing 'lam1'"))?;
-            let lam2 = req.get_f64("lam2").ok_or_else(|| anyhow!("missing 'lam2'"))?;
-            let kernel = kernel_from_json(req.get("kernel"), &x)?;
-            let solver = NckqrSolver::new(&x, &y, kernel, &taus)?;
-            let fit = solver.fit(lam1, lam2)?;
-            Metrics::incr(&state.metrics.fits_total);
-            let crossings = fit.count_crossings(&x, 1e-9);
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("objective", Json::num(fit.objective)),
-                ("kkt_pass", Json::Bool(fit.kkt.pass)),
-                ("crossings", Json::num(crossings as f64)),
-                ("model", Json::str(state.registry.insert(StoredModel::Nckqr(fit)))),
-            ]))
+            let mut pairs = fit_response(&model);
+            pairs.push(("model", Json::str(state.registry.insert(model))));
+            Ok(Json::obj(pairs))
         }
         "predict" => {
             Metrics::incr(&state.metrics.predict_requests);
@@ -196,6 +189,41 @@ fn dispatch(state: &ProtocolState, req: &Json) -> Result<Json> {
                 ("ok", Json::Bool(true)),
                 ("taus", Json::arr_f64(&model.taus())),
                 ("pred", Json::Arr(preds.iter().map(|p| Json::arr_f64(p)).collect())),
+            ]))
+        }
+        "save" => {
+            // Confined to the persistence directory: a network client
+            // must never address arbitrary server paths. Use `export`
+            // to move an artifact off-box.
+            let id = req.get_str("model").ok_or_else(|| anyhow!("missing 'model'"))?;
+            let path = match req.get_str("name") {
+                Some(name) => state.registry.persist_as(id, name)?,
+                None => state.registry.persist(id)?,
+            };
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("path", Json::str(path.display().to_string())),
+            ]))
+        }
+        "load" => {
+            let name = req.get_str("name").ok_or_else(|| anyhow!("missing 'name'"))?;
+            let id = state.registry.load_named(name)?;
+            let model = state.registry.get(&id).expect("just inserted");
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("model", Json::str(id)),
+                ("kind", Json::str(model.kind())),
+                ("taus", Json::arr_f64(&model.taus())),
+            ]))
+        }
+        "export" => {
+            let id = req.get_str("model").ok_or_else(|| anyhow!("missing 'model'"))?;
+            let model =
+                state.registry.get(id).ok_or_else(|| anyhow!("no such model {id:?}"))?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("model", Json::str(id)),
+                ("artifact", model.to_artifact()?),
             ]))
         }
         other => bail!("unknown cmd {other:?}"),
@@ -232,6 +260,25 @@ mod tests {
     }
 
     #[test]
+    fn repeated_fit_nc_payloads_share_one_decomposition() {
+        // NonCrossing goes through the same GramCache as everything else.
+        let st = state();
+        let req = r#"{"cmd":"fit_nc","x":[[0.0],[0.25],[0.5],[0.75],[1.0],[0.1],[0.6],[0.9]],
+                      "y":[0.1,0.4,0.2,0.5,0.1,0.3,0.4,0.2],
+                      "taus":[0.25,0.75],"lam1":5.0,"lam2":0.05}"#
+            .replace('\n', " ");
+        for _ in 0..3 {
+            let r = handle_line(&st, &req);
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{}", r.to_string());
+        }
+        assert_eq!(
+            CacheMetrics::get(&st.engine.cache.metrics.decompositions),
+            1,
+            "fit_nc must hit the GramCache"
+        );
+    }
+
+    #[test]
     fn ping_and_unknown() {
         let st = state();
         let r = handle_line(&st, r#"{"cmd":"ping"}"#);
@@ -252,6 +299,7 @@ mod tests {
             .replace('\n', " ");
         let r = handle_line(&st, &req);
         assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{}", r.to_string());
+        assert_eq!(r.get_str("kind"), Some("kqr"));
         let id = r.get_str("model").unwrap().to_string();
         let pr = handle_line(&st, &format!(r#"{{"cmd":"predict","model":"{id}","x":[[0.5]]}}"#));
         assert_eq!(pr.get("ok").and_then(Json::as_bool), Some(true));
@@ -286,5 +334,55 @@ mod tests {
         let r = handle_line(&st, &req);
         assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{}", r.to_string());
         assert_eq!(r.get_f64("crossings"), Some(0.0));
+    }
+
+    #[test]
+    fn spec_fit_grid_and_export() {
+        let st = state();
+        let req = r#"{"cmd":"fit","spec":{
+            "x":[[0.0],[0.2],[0.4],[0.6],[0.8],[1.0],[0.1],[0.9]],
+            "y":[0.0,0.6,0.9,0.9,0.6,0.0,0.3,0.3],
+            "kernel":{"type":"rbf","sigma":0.4},
+            "task":{"type":"grid","taus":[0.25,0.75],"lambdas":[0.1,0.01]}}}"#
+            .replace('\n', " ");
+        let r = handle_line(&st, &req);
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{}", r.to_string());
+        assert_eq!(r.get_str("kind"), Some("set"));
+        assert_eq!(r.get_f64("count"), Some(4.0));
+        let id = r.get_str("model").unwrap().to_string();
+        // predict returns one row per grid cell
+        let pr = handle_line(&st, &format!(r#"{{"cmd":"predict","model":"{id}","x":[[0.5]]}}"#));
+        assert_eq!(pr.get("pred").unwrap().as_arr().unwrap().len(), 4);
+        // export returns the inline artifact
+        let ex = handle_line(&st, &format!(r#"{{"cmd":"export","model":"{id}"}}"#));
+        assert_eq!(ex.get("ok").and_then(Json::as_bool), Some(true));
+        let art = ex.get("artifact").unwrap();
+        assert_eq!(art.get_str("format"), Some("fastkqr.model"));
+        let back = QuantileModel::from_artifact(art).unwrap();
+        assert_eq!(back.n_levels(), 4);
+    }
+
+    #[test]
+    fn malformed_specs_are_errors_not_panics() {
+        let st = state();
+        for bad in [
+            // ragged x inside a spec
+            r#"{"cmd":"fit","spec":{"x":[[1],[2,3]],"y":[1,2],
+                "task":{"type":"single","tau":0.5,"lambda":0.1}}}"#,
+            // unknown task
+            r#"{"cmd":"fit","spec":{"x":[[1],[2]],"y":[1,2],"task":{"type":"nope"}}}"#,
+            // duplicate taus reach the NCKQR constructor as an error
+            r#"{"cmd":"fit_nc","x":[[1],[2]],"y":[1,2],"taus":[0.5,0.5],"lam1":1,"lam2":0.1}"#,
+            // length mismatch
+            r#"{"cmd":"fit_nc","x":[[1],[2]],"y":[1],"taus":[0.5],"lam1":1,"lam2":0.1}"#,
+            // save of unknown model
+            r#"{"cmd":"save","model":"nope"}"#,
+            // load of missing file
+            r#"{"cmd":"load","path":"/definitely/not/here.json"}"#,
+        ] {
+            let line = bad.replace('\n', " ");
+            let r = handle_line(&st, &line);
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "{bad}");
+        }
     }
 }

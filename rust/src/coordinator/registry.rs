@@ -1,48 +1,30 @@
-//! Concurrent model registry for the predict path.
+//! Concurrent model registry for the predict path, with optional
+//! persistence.
+//!
+//! The registry stores [`QuantileModel`]s (the unified facade from
+//! [`crate::api`]) under generated ids. With a persistence directory
+//! configured, every inserted model is written as a versioned JSON
+//! artifact (`<dir>/<id>.json`) and reloaded on construction — a server
+//! restarted on the same directory serves the same models.
 
-use crate::kqr::KqrFit;
-use crate::linalg::Matrix;
-use crate::nckqr::NckqrFit;
+use crate::api::QuantileModel;
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
-/// A stored, predict-ready model.
-#[derive(Clone, Debug)]
-pub enum StoredModel {
-    Kqr(KqrFit),
-    Nckqr(NckqrFit),
-}
-
-impl StoredModel {
-    /// Predict: one output row per quantile level (KQR has one level).
-    pub fn predict(&self, xt: &Matrix) -> Vec<Vec<f64>> {
-        match self {
-            StoredModel::Kqr(f) => vec![f.predict(xt)],
-            StoredModel::Nckqr(f) => f.predict(xt),
-        }
-    }
-
-    pub fn taus(&self) -> Vec<f64> {
-        match self {
-            StoredModel::Kqr(f) => vec![f.tau],
-            StoredModel::Nckqr(f) => f.taus.clone(),
-        }
-    }
-
-    pub fn objective(&self) -> f64 {
-        match self {
-            StoredModel::Kqr(f) => f.objective,
-            StoredModel::Nckqr(f) => f.objective,
-        }
-    }
-}
+/// Historical name for the registry's stored value: the registry now
+/// stores the unified model facade directly (`StoredModel::Kqr(fit)`
+/// still constructs, via the [`QuantileModel`] variants).
+pub type StoredModel = QuantileModel;
 
 /// Thread-safe model store with generated ids.
 #[derive(Debug, Default)]
 pub struct ModelRegistry {
-    models: RwLock<HashMap<String, StoredModel>>,
+    models: RwLock<HashMap<String, QuantileModel>>,
     next_id: AtomicU64,
+    /// When set, inserts are mirrored to `<dir>/<id>.json` artifacts.
+    persist_dir: Option<PathBuf>,
 }
 
 impl ModelRegistry {
@@ -50,11 +32,124 @@ impl ModelRegistry {
         ModelRegistry::default()
     }
 
-    /// Insert, returning the generated id (`m<seq>`).
+    /// A registry backed by an artifact directory: existing `*.json`
+    /// artifacts in `dir` are loaded (file stem = model id), and every
+    /// future insert is written through to the directory, so the process
+    /// can be restarted without losing models. Unreadable files are an
+    /// error — silently serving a subset of the persisted models would
+    /// be worse than failing loudly at startup.
+    pub fn with_persistence(dir: impl Into<PathBuf>) -> anyhow::Result<ModelRegistry> {
+        use anyhow::Context;
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir).with_context(|| format!("create {}", dir.display()))?;
+        let mut models = HashMap::new();
+        let mut max_seq: Option<u64> = None;
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .with_context(|| format!("read {}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().and_then(|s| s.to_str()) == Some("json"))
+            .collect();
+        entries.sort();
+        for path in entries {
+            let id = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .map(String::from)
+                .ok_or_else(|| anyhow::anyhow!("bad artifact file name {}", path.display()))?;
+            let model = QuantileModel::load(&path)?;
+            if let Some(seq) = id.strip_prefix('m').and_then(|s| s.parse::<u64>().ok()) {
+                max_seq = Some(max_seq.map_or(seq, |m| m.max(seq)));
+            }
+            models.insert(id, model);
+        }
+        Ok(ModelRegistry {
+            models: RwLock::new(models),
+            next_id: AtomicU64::new(max_seq.map_or(0, |m| m + 1)),
+            persist_dir: Some(dir),
+        })
+    }
+
+    /// The configured persistence directory, if any.
+    pub fn persist_dir(&self) -> Option<&PathBuf> {
+        self.persist_dir.as_ref()
+    }
+
+    /// Insert, returning the generated id (`m<seq>`). With persistence
+    /// configured the artifact is written through; a failed write keeps
+    /// the model serving in memory but is reported unconditionally on
+    /// stderr (a full disk must not be silent — use
+    /// [`ModelRegistry::persist`] for a checked write).
     pub fn insert(&self, model: StoredModel) -> String {
         let id = format!("m{}", self.next_id.fetch_add(1, Ordering::Relaxed));
+        if let Some(dir) = &self.persist_dir {
+            if let Err(e) = model.save(dir.join(format!("{id}.json"))) {
+                eprintln!(
+                    "fastkqr registry: persisting model {id} to {} FAILED ({e:#}); \
+                     the model is served from memory only and will NOT survive a restart",
+                    dir.display()
+                );
+            }
+        }
         self.models.write().unwrap().insert(id.clone(), model);
         id
+    }
+
+    /// Validate an artifact name from an untrusted source (the wire
+    /// protocol) and resolve it inside the persistence directory. Names
+    /// are single path components: no separators, no leading dot, only
+    /// `[A-Za-z0-9._-]` — a remote client must never address paths
+    /// outside the configured directory.
+    fn artifact_path(&self, name: &str) -> anyhow::Result<PathBuf> {
+        let dir = self
+            .persist_dir
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no persistence directory configured"))?;
+        if name.is_empty()
+            || name.len() > 128
+            || name.starts_with('.')
+            || !name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
+        {
+            anyhow::bail!(
+                "invalid artifact name {name:?} (one path component, [A-Za-z0-9._-], \
+                 no leading dot)"
+            );
+        }
+        Ok(dir.join(format!("{name}.json")))
+    }
+
+    /// Write the artifact for `id` to the persistence directory (checked;
+    /// errors when no directory is configured or the write fails).
+    /// Returns the artifact path.
+    pub fn persist(&self, id: &str) -> anyhow::Result<PathBuf> {
+        self.persist_as(id, id)
+    }
+
+    /// [`ModelRegistry::persist`] under an explicit artifact name (still
+    /// confined to the persistence directory).
+    pub fn persist_as(&self, id: &str, name: &str) -> anyhow::Result<PathBuf> {
+        let path = self.artifact_path(name)?;
+        let model =
+            self.get(id).ok_or_else(|| anyhow::anyhow!("no such model {id:?}"))?;
+        model.save(&path)?;
+        Ok(path)
+    }
+
+    /// Load a named artifact from the persistence directory into the
+    /// registry, returning its new id.
+    pub fn load_named(&self, name: &str) -> anyhow::Result<String> {
+        let path = self.artifact_path(name)?;
+        let model = QuantileModel::load(&path)?;
+        Ok(self.insert(model))
+    }
+
+    /// Load an artifact file into the registry, returning its new id.
+    /// Takes an arbitrary path — for *trusted* callers (library users,
+    /// the CLI); the wire protocol goes through [`ModelRegistry::load_named`].
+    pub fn load_artifact(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<String> {
+        let model = QuantileModel::load(path.as_ref())?;
+        Ok(self.insert(model))
     }
 
     pub fn get(&self, id: &str) -> Option<StoredModel> {
@@ -62,7 +157,13 @@ impl ModelRegistry {
     }
 
     pub fn remove(&self, id: &str) -> bool {
-        self.models.write().unwrap().remove(id).is_some()
+        let removed = self.models.write().unwrap().remove(id).is_some();
+        if removed {
+            if let Some(dir) = &self.persist_dir {
+                let _ = std::fs::remove_file(dir.join(format!("{id}.json")));
+            }
+        }
+        removed
     }
 
     pub fn list(&self) -> Vec<String> {
@@ -87,6 +188,15 @@ mod tests {
     use crate::kernel::Kernel;
     use crate::kqr::KqrSolver;
 
+    fn toy_fit(n: usize, seed: u64) -> crate::kqr::KqrFit {
+        let mut rng = Rng::new(seed);
+        let d = synth::sine_hetero(n, &mut rng);
+        KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma: 0.5 })
+            .unwrap()
+            .fit(0.5, 0.1)
+            .unwrap()
+    }
+
     #[test]
     fn insert_get_remove_roundtrip() {
         let mut rng = Rng::new(1);
@@ -110,16 +220,47 @@ mod tests {
 
     #[test]
     fn ids_are_unique_and_listed() {
-        let mut rng = Rng::new(2);
-        let d = synth::sine_hetero(15, &mut rng);
-        let fit = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma: 0.5 })
-            .unwrap()
-            .fit(0.5, 0.1)
-            .unwrap();
+        let fit = toy_fit(15, 2);
         let reg = ModelRegistry::new();
         let a = reg.insert(StoredModel::Kqr(fit.clone()));
         let b = reg.insert(StoredModel::Kqr(fit));
         assert_ne!(a, b);
         assert_eq!(reg.list().len(), 2);
+    }
+
+    #[test]
+    fn persistence_survives_reconstruction() {
+        let dir = std::env::temp_dir().join(format!(
+            "fastkqr-registry-test-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let fit = toy_fit(16, 3);
+        let xt = {
+            let mut rng = Rng::new(9);
+            synth::sine_hetero(5, &mut rng).x
+        };
+        let (id, preds_before) = {
+            let reg = ModelRegistry::with_persistence(&dir).unwrap();
+            let id = reg.insert(StoredModel::Kqr(fit));
+            let preds = reg.get(&id).unwrap().predict(&xt);
+            (id, preds)
+        };
+        // a fresh registry on the same dir serves the same model, bitwise
+        let reg2 = ModelRegistry::with_persistence(&dir).unwrap();
+        assert_eq!(reg2.list(), vec![id.clone()]);
+        let preds_after = reg2.get(&id).unwrap().predict(&xt);
+        assert_eq!(preds_before, preds_after, "reloaded predictions must be identical");
+        // new inserts do not collide with reloaded ids
+        let id2 = reg2.insert(reg2.get(&id).unwrap());
+        assert_ne!(id, id2);
+        // drop removes the artifact too
+        assert!(reg2.remove(&id));
+        let reg3 = ModelRegistry::with_persistence(&dir).unwrap();
+        assert_eq!(reg3.list(), vec![id2]);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -20,7 +20,6 @@ use crate::engine::{fingerprint, Fingerprint, FitEngine};
 use crate::kqr::apgd::ApgdState;
 use crate::kqr::SolveOptions;
 use crate::linalg::par;
-use crate::nckqr::NckqrSolver;
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -230,7 +229,9 @@ fn run_job(
             Ok(JobOutcome::Kqr(fits))
         }
         JobSpec::Nckqr { taus, lam1, lam2 } => {
-            let solver = NckqrSolver::new(&job.dataset.x, &job.dataset.y, job.kernel.clone(), taus)?;
+            // Engine-backed: an NCKQR job on the same dataset as any other
+            // job (or a previous run) reuses the cached Gram/eigenbasis.
+            let solver = engine.nc_solver(&job.dataset.x, &job.dataset.y, &job.kernel, taus)?;
             let fit = solver.fit(*lam1, *lam2)?;
             Metrics::incr(&metrics.fits_total);
             Ok(JobOutcome::Nckqr(fit))

@@ -20,11 +20,20 @@ use std::thread::JoinHandle;
 pub struct ServerConfig {
     pub addr: String,
     pub opts: SolveOptions,
+    /// Artifact directory for the model registry: fitted models are
+    /// written through as versioned JSON artifacts and reloaded on the
+    /// next spawn, so the server survives restarts (`None` = in-memory
+    /// only).
+    pub persist_dir: Option<String>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:7787".to_string(), opts: SolveOptions::default() }
+        ServerConfig {
+            addr: "127.0.0.1:7787".to_string(),
+            opts: SolveOptions::default(),
+            persist_dir: None,
+        }
     }
 }
 
@@ -43,7 +52,11 @@ impl Server {
         let listener =
             TcpListener::bind(&config.addr).with_context(|| format!("bind {}", config.addr))?;
         let local_addr = listener.local_addr()?;
-        let registry = Arc::new(ModelRegistry::new());
+        let registry = Arc::new(match &config.persist_dir {
+            Some(dir) => ModelRegistry::with_persistence(dir)
+                .with_context(|| format!("open model persistence dir {dir}"))?,
+            None => ModelRegistry::new(),
+        });
         let metrics = Arc::new(Metrics::new());
         let stop = Arc::new(AtomicBool::new(false));
         let state = Arc::new(ProtocolState {
@@ -160,7 +173,7 @@ mod tests {
         }
         let server = Server::spawn(ServerConfig {
             addr: "127.0.0.1:0".to_string(),
-            opts: SolveOptions::default(),
+            ..ServerConfig::default()
         })
         .unwrap();
         let mut client = Client::connect(server.local_addr).unwrap();

@@ -10,6 +10,14 @@
 //! intra-op GEMV parallelism disabled inside each fold to avoid
 //! oversubscription), and the winning λ gets a final warm-started refit
 //! on the full data.
+//!
+//! The declarative entry point is the [`crate::api::Task::Cv`] variant of
+//! a [`crate::api::FitSpec`]: `FitEngine::run` drives this module once
+//! per requested τ (same seed → same fold assignment across levels, so
+//! losses are comparable) and packages the per-τ winners as one
+//! [`crate::api::QuantileModel`] with the CV curves kept as diagnostics.
+//! The CLI `cv` subcommand and the protocol's `{"task":{"type":"cv",…}}`
+//! are thin shells over that path.
 
 use crate::data::{Dataset, Rng};
 use crate::engine::FitEngine;

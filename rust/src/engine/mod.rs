@@ -40,6 +40,7 @@ use crate::kqr::apgd::ApgdState;
 use crate::kqr::{KqrFit, KqrSolver, SolveOptions};
 use crate::linalg::par::{self, Parallelism};
 use crate::linalg::Matrix;
+use crate::nckqr::{NcOptions, NckqrSolver};
 use crate::util::panic_message;
 use anyhow::{anyhow, ensure, Result};
 use std::sync::{Arc, OnceLock};
@@ -141,6 +142,36 @@ impl FitEngine {
         self.solver(&data.x, &data.y, kernel)
     }
 
+    /// A non-crossing solver for this exact (dataset, kernel), backed by
+    /// the same cached Gram/eigenbasis the KQR solvers share — an NCKQR
+    /// fit after (or concurrent with) any other fit on the same data
+    /// costs zero additional eigendecompositions.
+    pub fn nc_solver(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        kernel: &Kernel,
+        taus: &[f64],
+    ) -> Result<NckqrSolver> {
+        // Validate the τ grid before paying for (or caching) a Gram
+        // matrix the request can never use.
+        crate::nckqr::normalize_taus(taus)?;
+        let entry = self.cache.get_or_compute(x, y, kernel)?;
+        NckqrSolver::with_basis(x, y, kernel.clone(), taus, entry.gram.clone(), entry.basis.clone())
+    }
+
+    /// [`FitEngine::nc_solver`] with explicit NCKQR options.
+    pub fn nc_solver_with_options(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        kernel: &Kernel,
+        taus: &[f64],
+        opts: NcOptions,
+    ) -> Result<NckqrSolver> {
+        Ok(self.nc_solver(x, y, kernel, taus)?.with_options(opts))
+    }
+
     /// Is the lockstep grid driver enabled for this engine?
     pub fn lockstep_enabled(&self) -> bool {
         self.config.lockstep.unwrap_or_else(env_lockstep)
@@ -177,10 +208,33 @@ impl FitEngine {
         taus: &[f64],
         lambdas: &[f64],
     ) -> Result<GridFit> {
+        self.fit_grid_with_strategy(x, y, kernel, taus, lambdas, None, None)
+    }
+
+    /// [`FitEngine::fit_grid`] with per-call overrides: `lockstep`
+    /// `Some(true)`/`Some(false)` forces the lockstep / sequential driver
+    /// for this grid only (`None` defers to the engine configuration,
+    /// which in turn defers to `FASTKQR_LOCKSTEP`), and `opts` replaces
+    /// the engine's default solve options. This is the hook the
+    /// [`crate::api::FitSpec`] hints ride on.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fit_grid_with_strategy(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        kernel: &Kernel,
+        taus: &[f64],
+        lambdas: &[f64],
+        lockstep: Option<bool>,
+        opts: Option<SolveOptions>,
+    ) -> Result<GridFit> {
         ensure!(!taus.is_empty(), "fit_grid: empty tau grid");
         ensure!(!lambdas.is_empty(), "fit_grid: empty lambda grid");
-        let solver = self.solver(x, y, kernel)?;
-        if self.lockstep_enabled() {
+        let solver = match opts {
+            Some(o) => self.solver_with_options(x, y, kernel, o)?,
+            None => self.solver(x, y, kernel)?,
+        };
+        if lockstep.unwrap_or_else(|| self.lockstep_enabled()) {
             let (fits, stats) = lockstep::fit_grid_lockstep(self, &solver, taus, lambdas)?;
             return Ok(GridFit {
                 taus: taus.to_vec(),
@@ -412,6 +466,19 @@ mod tests {
                 assert_eq!(lock.at(ti, li).b, seq.at(ti, li).b, "({ti},{li})");
             }
         }
+    }
+
+    #[test]
+    fn nc_solver_shares_cached_basis_with_kqr() {
+        let engine = FitEngine::new();
+        let (data, kernel) = fixture(25, 6);
+        let s = engine.solver_for(&data, &kernel).unwrap();
+        let nc = engine.nc_solver(&data.x, &data.y, &kernel, &[0.25, 0.75]).unwrap();
+        assert!(Arc::ptr_eq(&s.basis, &nc.basis), "KQR and NCKQR share one basis");
+        assert_eq!(CacheMetrics::get(&engine.cache.metrics.decompositions), 1);
+        // repeated NC solver construction is pure cache hits
+        let _ = engine.nc_solver(&data.x, &data.y, &kernel, &[0.1, 0.9]).unwrap();
+        assert_eq!(CacheMetrics::get(&engine.cache.metrics.decompositions), 1);
     }
 
     #[test]

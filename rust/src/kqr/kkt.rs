@@ -23,6 +23,32 @@ pub struct KktReport {
     pub pass: bool,
 }
 
+impl KktReport {
+    /// Artifact/diagnostics serialization (see [`crate::api`]).
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj(vec![
+            ("pass", Json::Bool(self.pass)),
+            ("max_stationarity", Json::num(self.max_stationarity)),
+            ("intercept", Json::num(self.intercept)),
+            ("band", Json::num(self.band)),
+        ])
+    }
+
+    /// Inverse of [`KktReport::to_json`].
+    pub fn from_json(v: &crate::util::Json) -> anyhow::Result<KktReport> {
+        use anyhow::anyhow;
+        Ok(KktReport {
+            max_stationarity: v
+                .get_f64("max_stationarity")
+                .ok_or_else(|| anyhow!("kkt: missing max_stationarity"))?,
+            intercept: v.get_f64("intercept").ok_or_else(|| anyhow!("kkt: missing intercept"))?,
+            band: v.get_f64("band").ok_or_else(|| anyhow!("kkt: missing band"))?,
+            pass: v.get_bool("pass").ok_or_else(|| anyhow!("kkt: missing pass"))?,
+        })
+    }
+}
+
 /// Evaluate the certificate at (b, β). `tol` is the unitless subgradient
 /// tolerance; `band` the |rᵢ| ≈ 0 width (residual units).
 #[allow(clippy::too_many_arguments)]

@@ -133,6 +133,16 @@ impl KqrFit {
         self.x_train.rows()
     }
 
+    /// The kernel this fit predicts with (artifact serialization).
+    pub fn kernel(&self) -> &Kernel {
+        &self.kernel
+    }
+
+    /// Training inputs (artifact serialization).
+    pub fn x_train(&self) -> &Matrix {
+        &self.x_train
+    }
+
     /// Assemble a fit from solver-owned parts (the lockstep grid driver
     /// produces fits outside this module but must emit the same
     /// self-contained value as [`KqrSolver::fit_warm_from`]).
@@ -244,17 +254,9 @@ impl KqrSolver {
     }
 
     /// Log-spaced λ grid from `max` down to `max·min_ratio` (descending,
-    /// the warm-start order).
+    /// the warm-start order). See the free [`lambda_grid`].
     pub fn lambda_grid(&self, count: usize, max: f64, min_ratio: f64) -> Vec<f64> {
-        assert!(count >= 1 && max > 0.0 && min_ratio > 0.0 && min_ratio < 1.0);
-        if count == 1 {
-            return vec![max];
-        }
-        let log_max = max.ln();
-        let log_min = (max * min_ratio).ln();
-        (0..count)
-            .map(|i| (log_max + (log_min - log_max) * i as f64 / (count - 1) as f64).exp())
-            .collect()
+        lambda_grid(count, max, min_ratio)
     }
 
     /// Fit at a single (τ, λ) with the native backend.
@@ -504,6 +506,22 @@ impl KqrSolver {
         project_equality(&self.gram, &self.basis, &self.y, s, &mut state.b, &mut state.beta, ws);
         state.restart();
     }
+}
+
+/// Log-spaced descending λ grid from `max` down to `max·min_ratio` — the
+/// single definition of the warm-start grid spacing, shared by
+/// [`KqrSolver::lambda_grid`] and the CLI's spec builders so they can
+/// never diverge.
+pub fn lambda_grid(count: usize, max: f64, min_ratio: f64) -> Vec<f64> {
+    assert!(count >= 1 && max > 0.0 && min_ratio > 0.0 && min_ratio < 1.0);
+    if count == 1 {
+        return vec![max];
+    }
+    let log_max = max.ln();
+    let log_min = (max * min_ratio).ln();
+    (0..count)
+        .map(|i| (log_max + (log_min - log_max) * i as f64 / (count - 1) as f64).exp())
+        .collect()
 }
 
 /// Shared equality-constraint projection (used by both KQR and NCKQR; see

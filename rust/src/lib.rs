@@ -39,6 +39,14 @@
 //!   two GEMMs per bundle iteration instead of two GEMVs per cell, with
 //!   the sequential path kept as the bitwise parity oracle.
 //!
+//! On top of the engine sits the declarative **fit API** ([`api`]): a
+//! serializable [`api::FitSpec`] (kernel + task + option overrides)
+//! executed by [`engine::FitEngine::run`] into a unified
+//! [`api::QuantileModel`] with one `predict`/`taus`/`diagnostics`
+//! surface and versioned save/load artifacts. The CLI subcommands, the
+//! TCP protocol and the CV driver are all thin shells over this one
+//! entry point.
+//!
 //! Quick start (native backend):
 //!
 //! ```no_run
@@ -46,15 +54,15 @@
 //!
 //! let mut rng = Rng::new(7);
 //! let data = fastkqr::data::synth::sine_hetero(200, &mut rng);
-//! let kernel = Kernel::Rbf { sigma: median_heuristic_sigma(&data.x) };
-//! let fit = KqrSolver::new(&data.x, &data.y, kernel)
-//!     .expect("PSD kernel")
-//!     .fit(0.5, 1e-2)
-//!     .expect("fit");
-//! let preds = fit.predict(&data.x);
-//! assert_eq!(preds.len(), 200);
+//! let spec = FitSpec::single(data.x, data.y, KernelSpec::Auto, 0.5, 1e-2);
+//! let model = FitEngine::global().run(&spec).expect("fit");
+//! assert!(model.kkt_pass(), "exactness certificate");
+//! model.save("model.json").expect("persist");
+//! let back = QuantileModel::load("model.json").expect("reload");
+//! assert_eq!(back.taus(), vec![0.5]);
 //! ```
 
+pub mod api;
 pub mod backend;
 pub mod baselines;
 pub mod coordinator;
@@ -73,13 +81,14 @@ pub mod util;
 
 /// Convenience re-exports for the common fitting workflow.
 pub mod prelude {
+    pub use crate::api::{FitSpec, KernelSpec, QuantileModel, Task};
     pub use crate::backend::Backend;
     pub use crate::cv::{cross_validate, CvResult};
     pub use crate::data::{Dataset, Rng};
     pub use crate::engine::{EngineConfig, FitEngine, GridFit, LockstepStats};
     pub use crate::kernel::{median_heuristic_sigma, Kernel};
     pub use crate::kqr::{KqrFit, KqrSolver, SolveOptions};
-    pub use crate::nckqr::{NckqrFit, NckqrSolver};
+    pub use crate::nckqr::{NcOptions, NckqrFit, NckqrSolver};
     pub use crate::smooth::pinball_loss;
 }
 

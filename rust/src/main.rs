@@ -1,11 +1,17 @@
 //! fastkqr CLI — the L3 leader entrypoint.
 //!
+//! Every fitting subcommand builds one declarative [`FitSpec`] and runs
+//! it on the process-global [`FitEngine`] (shared GramCache: repeated
+//! fits on the same data in one process share one eigendecomposition).
+//!
 //! Subcommands:
-//!   fit        fit one KQR model on a named workload
+//!   fit        fit one KQR model on a named workload (--save <file>)
 //!   path       warm-started λ path at one τ
-//!   cv         k-fold cross-validated path
+//!   grid       full τ×λ grid on one cached basis (--lockstep/--no-lockstep)
+//!   cv         k-fold cross-validated path (+ refit at the best λ)
 //!   nckqr      simultaneous non-crossing fit
-//!   serve      start the TCP fit/predict server
+//!   predict    predict from a saved model artifact (--model <file>)
+//!   serve      start the TCP fit/predict server (--persist <dir>)
 //!   client     send one JSON request line to a running server
 //!   table1..6  regenerate the paper's tables (quick scale; --paper full)
 //!   figure1    regenerate the crossing figure (writes CSV)
@@ -14,17 +20,15 @@
 //!
 //! Common options: --data yuan|friedman|sine|gagurine|mcycle|crabs|boston
 //! --n --p --tau --lambda --backend native|xla --seed; see DESIGN.md §5.
+//! Statistical flags (σ, τ, λ, folds, …) are parsed strictly: a
+//! malformed value is an error, never a silent default.
 
 use anyhow::{bail, Result};
-use fastkqr::backend::{Backend, NativeBackend};
+use fastkqr::api::{FitSpec, KernelSpec, QuantileModel};
 use fastkqr::coordinator::{Server, ServerConfig};
 use fastkqr::data::{benchmarks, synth, Dataset, Rng};
+use fastkqr::engine::FitEngine;
 use fastkqr::experiments::{self, print_table, speedups, TableConfig};
-use fastkqr::kernel::{median_heuristic_sigma, Kernel};
-use fastkqr::kqr::apgd::ApgdState;
-use fastkqr::kqr::KqrSolver;
-use fastkqr::nckqr::NckqrSolver;
-use fastkqr::runtime::XlaBackend;
 use fastkqr::util::{Args, Json, Timer};
 
 fn main() {
@@ -47,6 +51,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "grid" => cmd_grid(args),
         "cv" => cmd_cv(args),
         "nckqr" => cmd_nckqr(args),
+        "predict" => cmd_predict(args),
         "serve" => cmd_serve(args),
         "client" => cmd_client(args),
         "table1" => cmd_table(args, 1),
@@ -60,7 +65,9 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "perf" => cmd_perf(args),
         "help" | "--help" => {
             println!("fastkqr {} — exact kernel quantile regression", fastkqr::version());
-            println!("subcommands: fit path grid cv nckqr serve client table1..6 figure1 ablations perf");
+            println!(
+                "subcommands: fit path grid cv nckqr predict serve client table1..6 figure1 ablations perf"
+            );
             println!("see README.md for options");
             Ok(())
         }
@@ -70,9 +77,9 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 
 /// Build the dataset selected by --data/--n/--p/--seed.
 fn dataset_from_args(args: &Args) -> Result<Dataset> {
-    let n = args.get_usize("n", 200);
-    let p = args.get_usize("p", 10);
-    let seed = args.get_usize("seed", 2024) as u64;
+    let n = args.try_usize("n", 200)?;
+    let p = args.try_usize("p", 10)?;
+    let seed = args.try_usize("seed", 2024)? as u64;
     let mut rng = Rng::new(seed);
     Ok(match args.get_str("data", "yuan") {
         "yuan" => synth::yuan(n, &mut rng),
@@ -87,64 +94,96 @@ fn dataset_from_args(args: &Args) -> Result<Dataset> {
     })
 }
 
-fn kernel_from_args(args: &Args, data: &Dataset) -> Kernel {
+/// Kernel spec from --sigma: strict parse — a malformed bandwidth must
+/// not silently become some default, and an absent one resolves to the
+/// median heuristic at run time.
+fn kernel_from_args(args: &Args) -> Result<KernelSpec> {
     match args.get("sigma") {
-        Some(s) => Kernel::Rbf { sigma: s.parse().unwrap_or(1.0) },
-        None => Kernel::Rbf { sigma: median_heuristic_sigma(&data.x) },
+        Some(s) => {
+            let sigma: f64 = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--sigma: expected a number, got {s:?}"))?;
+            if !(sigma.is_finite() && sigma > 0.0) {
+                bail!("--sigma must be a positive number, got {sigma}");
+            }
+            Ok(KernelSpec::Rbf { sigma: Some(sigma) })
+        }
+        None => Ok(KernelSpec::Auto),
     }
 }
 
-fn backend_from_args(args: &Args) -> Result<Box<dyn Backend>> {
+/// The shared spec builder: dataset + kernel + backend hint. Every
+/// fitting subcommand (fit/path/grid/nckqr/cv) attaches its task to this.
+fn spec_from_args(args: &Args, task: fastkqr::api::Task) -> Result<FitSpec> {
+    let data = dataset_from_args(args)?;
+    let kernel = kernel_from_args(args)?;
+    let name = data.name.clone();
+    let mut spec = FitSpec::new(data.x, data.y, kernel, task);
     match args.get_str("backend", "native") {
-        "native" => Ok(Box::new(NativeBackend::new())),
-        "xla" => Ok(Box::new(XlaBackend::from_default_dir()?)),
+        "native" => {}
+        other @ "xla" => spec = spec.with_backend(other),
         other => bail!("unknown --backend {other:?} (native|xla)"),
     }
+    println!("dataset        {name}  (n={}, p={})", spec.x.rows(), spec.x.cols());
+    Ok(spec)
 }
 
-fn cmd_fit(args: &Args) -> Result<()> {
-    let data = dataset_from_args(args)?;
-    let kernel = kernel_from_args(args, &data);
-    let tau = args.get_f64("tau", 0.5);
-    let lambda = args.get_f64("lambda", 1e-2);
-    let mut backend = backend_from_args(args)?;
-    let mut timer = Timer::start("fit");
-    let solver = KqrSolver::new(&data.x, &data.y, kernel)?;
-    let setup = timer.lap();
-    let mut state = ApgdState::zeros(solver.n());
-    let fit = solver.fit_warm(tau, lambda, &mut state, backend.as_mut())?;
-    let solve = timer.lap();
-    println!("dataset        {}", data.name);
-    println!("backend        {}", backend.name());
-    println!("tau/lambda     {tau} / {lambda}");
-    println!("objective      {:.6}", fit.objective);
-    println!(
-        "kkt            pass={} stat={:.2e} intercept={:.2e}",
-        fit.kkt.pass, fit.kkt.max_stationarity, fit.kkt.intercept
-    );
-    println!(
-        "gamma_final    {:.2e}   |singular set| {}",
-        fit.gamma_final,
-        fit.singular_set.len()
-    );
-    println!("apgd iters     {}", fit.apgd_iters);
-    println!("setup/solve    {setup:.3}s / {solve:.3}s");
+/// Log-spaced descending λ grid for path/grid/cv specs (the solver's
+/// `kqr::lambda_grid` spacing, shared so CLI and library never diverge).
+fn lambda_grid_from_args(args: &Args, default_count: usize) -> Result<Vec<f64>> {
+    let count = args.try_usize("nlam", default_count)?;
+    let max = args.try_f64("lambda-max", 1.0)?;
+    let min_ratio = args.try_f64("lambda-min-ratio", 1e-4)?;
+    if count == 0 || max <= 0.0 || min_ratio <= 0.0 || min_ratio >= 1.0 {
+        bail!("need --nlam >= 1, --lambda-max > 0 and 0 < --lambda-min-ratio < 1");
+    }
+    Ok(fastkqr::kqr::lambda_grid(count, max, min_ratio))
+}
+
+fn maybe_save(args: &Args, model: &QuantileModel) -> Result<()> {
+    if let Some(path) = args.get("save") {
+        model.save(path)?;
+        println!("saved          {path}");
+    }
     Ok(())
 }
 
+fn cmd_fit(args: &Args) -> Result<()> {
+    let tau = args.try_f64("tau", 0.5)?;
+    let lambda = args.try_f64("lambda", 1e-2)?;
+    let spec = spec_from_args(args, fastkqr::api::Task::Single { tau, lambda })?;
+    let timer = Timer::start("fit");
+    let model = FitEngine::global().run(&spec)?;
+    let solve = timer.total();
+    println!("backend        {}", spec.backend.as_deref().unwrap_or("native"));
+    println!("tau/lambda     {tau} / {lambda}");
+    if let QuantileModel::Kqr(fit) = &model {
+        println!("objective      {:.6}", fit.objective);
+        println!(
+            "kkt            pass={} stat={:.2e} intercept={:.2e}",
+            fit.kkt.pass, fit.kkt.max_stationarity, fit.kkt.intercept
+        );
+        println!(
+            "gamma_final    {:.2e}   |singular set| {}",
+            fit.gamma_final,
+            fit.singular_set.len()
+        );
+        println!("apgd iters     {}", fit.apgd_iters);
+    }
+    println!("total          {solve:.3}s");
+    maybe_save(args, &model)
+}
+
 fn cmd_path(args: &Args) -> Result<()> {
-    let data = dataset_from_args(args)?;
-    let kernel = kernel_from_args(args, &data);
-    let tau = args.get_f64("tau", 0.5);
-    let nlam = args.get_usize("nlam", 50);
-    let mut backend = backend_from_args(args)?;
-    let solver = KqrSolver::new(&data.x, &data.y, kernel)?;
-    let lams = solver.lambda_grid(nlam, args.get_f64("lambda-max", 1.0), 1e-4);
+    let tau = args.try_f64("tau", 0.5)?;
+    let lams = lambda_grid_from_args(args, 50)?;
+    let spec = spec_from_args(args, fastkqr::api::Task::Path { tau, lambdas: lams })?;
     let timer = Timer::start("path");
-    let fits = solver.fit_path_with_backend(tau, &lams, backend.as_mut())?;
+    let model = FitEngine::global().run(&spec)?;
     let total = timer.total();
+    let QuantileModel::Set(set) = &model else { bail!("path produced a non-set model") };
     println!("{:<12} {:<14} {:<10} {:<8} {:<6}", "lambda", "objective", "iters", "|S|", "kkt");
-    for f in &fits {
+    for f in &set.fits {
         println!(
             "{:<12.4e} {:<14.6} {:<10} {:<8} {:<6}",
             f.lam,
@@ -154,113 +193,164 @@ fn cmd_path(args: &Args) -> Result<()> {
             f.kkt.pass
         );
     }
-    println!("total {total:.3}s for {} fits ({} backend)", fits.len(), backend.name());
-    Ok(())
+    println!(
+        "total {total:.3}s for {} fits ({} backend)",
+        set.fits.len(),
+        spec.backend.as_deref().unwrap_or("native")
+    );
+    maybe_save(args, &model)
 }
 
 /// Fit a whole τ×λ grid on one cached eigenbasis through the engine.
 /// `FASTKQR_LOCKSTEP=1` (or --lockstep / --no-lockstep overriding it)
 /// selects the BLAS-3 lockstep driver; default is the sequential path.
 fn cmd_grid(args: &Args) -> Result<()> {
-    let data = dataset_from_args(args)?;
-    let kernel = kernel_from_args(args, &data);
-    let taus = args.get_f64_list("taus", &[0.1, 0.25, 0.5, 0.75, 0.9]);
-    let nlam = args.get_usize("nlam", 8);
-    let lockstep = if args.flag("lockstep") {
-        Some(true)
+    let taus = args.try_f64_list("taus", &[0.1, 0.25, 0.5, 0.75, 0.9])?;
+    let lams = lambda_grid_from_args(args, 8)?;
+    let task = fastkqr::api::Task::Grid { taus: taus.clone(), lambdas: lams.clone() };
+    let mut spec = spec_from_args(args, task)?;
+    if args.flag("lockstep") {
+        spec = spec.with_lockstep(true);
     } else if args.flag("no-lockstep") {
-        Some(false)
-    } else {
-        None // defer to FASTKQR_LOCKSTEP
-    };
-    let engine = fastkqr::engine::FitEngine::with_config(fastkqr::engine::EngineConfig {
-        lockstep,
-        ..Default::default()
-    });
-    let solver = engine.solver_for(&data, &kernel)?;
-    let lams = solver.lambda_grid(nlam, args.get_f64("lambda-max", 1.0), 1e-4);
+        spec = spec.with_lockstep(false);
+    } // else: defer to FASTKQR_LOCKSTEP
     let timer = Timer::start("grid");
-    let grid = engine.fit_grid(&data.x, &data.y, &kernel, &taus, &lams)?;
+    let model = FitEngine::global().run(&spec)?;
     let total = timer.total();
+    let QuantileModel::Set(set) = &model else { bail!("grid produced a non-set model") };
     println!("{:<8} {:<12} {:<14} {:<10} {:<6}", "tau", "lambda", "objective", "iters", "kkt");
-    for (ti, &tau) in grid.taus.iter().enumerate() {
-        for (li, &lam) in grid.lambdas.iter().enumerate() {
-            let f = grid.at(ti, li);
-            println!(
-                "{tau:<8} {lam:<12.4e} {:<14.6} {:<10} {:<6}",
-                f.objective, f.apgd_iters, f.kkt.pass
-            );
-        }
+    for f in &set.fits {
+        println!(
+            "{:<8} {:<12.4e} {:<14.6} {:<10} {:<6}",
+            f.tau, f.lam, f.objective, f.apgd_iters, f.kkt.pass
+        );
     }
-    let pass = grid.fits.iter().flatten().filter(|f| f.kkt.pass).count();
+    let pass = set.fits.iter().filter(|f| f.kkt.pass).count();
+    let iters: usize = set.fits.iter().map(|f| f.apgd_iters).sum();
     println!(
-        "grid {}x{}: {pass}/{} kkt pass, {} total iters, {total:.3}s",
-        grid.taus.len(),
-        grid.lambdas.len(),
-        grid.taus.len() * grid.lambdas.len(),
-        grid.total_iters()
+        "grid {}x{}: {pass}/{} kkt pass, {iters} total iters, {total:.3}s",
+        taus.len(),
+        lams.len(),
+        set.fits.len()
     );
-    if let Some(stats) = grid.lockstep {
+    if let Some(stats) = &set.lockstep {
         println!(
             "lockstep: bundle peak {} cells, {} chunks, {} retired",
             stats.max_active, stats.chunks, stats.retired
         );
     }
-    Ok(())
+    maybe_save(args, &model)
 }
 
 fn cmd_cv(args: &Args) -> Result<()> {
-    let data = dataset_from_args(args)?;
-    let kernel = kernel_from_args(args, &data);
-    let tau = args.get_f64("tau", 0.5);
-    let nlam = args.get_usize("nlam", 20);
-    let folds = args.get_usize("folds", 5);
-    let mut rng = Rng::new(args.get_usize("seed", 2024) as u64 ^ 0xc5);
-    // Engine-backed solver: the basis computed here lands in the global
-    // cache, so the CV refit on the full data reuses it for free.
-    let solver = fastkqr::engine::FitEngine::global().solver_for(&data, &kernel)?;
-    let lams = solver.lambda_grid(nlam, 1.0, 1e-4);
+    let tau = args.try_f64("tau", 0.5)?;
+    let folds = args.try_usize("folds", 5)?;
+    let seed = args.try_usize("seed", 2024)? as u64 ^ 0xc5;
+    let lams = lambda_grid_from_args(args, 20)?;
+    let task =
+        fastkqr::api::Task::Cv { taus: vec![tau], lambdas: lams, folds, seed };
+    let spec = spec_from_args(args, task)?;
     let timer = Timer::start("cv");
-    let res =
-        fastkqr::cv::cross_validate(&data, &kernel, tau, &lams, folds, &solver.opts, &mut rng)?;
+    let model = FitEngine::global().run(&spec)?;
+    let total = timer.total();
+    let QuantileModel::Set(set) = &model else { bail!("cv produced a non-set model") };
+    let cv = set.cv.first().ok_or_else(|| anyhow::anyhow!("cv summary missing"))?;
     println!("{:<12} {}", "lambda", "cv pinball");
-    for (l, v) in res.lambdas.iter().zip(&res.cv_loss) {
-        let mark = if *l == res.best_lambda { "  <- best" } else { "" };
+    for (l, v) in cv.lambdas.iter().zip(&cv.cv_loss) {
+        let mark = if *l == cv.best_lambda { "  <- best" } else { "" };
         println!("{l:<12.4e} {v:.6}{mark}");
     }
-    println!("best lambda {:.4e} in {:.3}s", res.best_lambda, timer.total());
-    if let Some(refit) = &res.refit {
+    println!("best lambda {:.4e} in {total:.3}s", cv.best_lambda);
+    if let Some(refit) = set.fits.first() {
         println!(
             "refit at best lambda: objective {:.6}  kkt pass={}",
             refit.objective, refit.kkt.pass
         );
     }
-    Ok(())
+    maybe_save(args, &model)
 }
 
 fn cmd_nckqr(args: &Args) -> Result<()> {
-    let data = dataset_from_args(args)?;
-    let kernel = kernel_from_args(args, &data);
-    let taus = args.get_f64_list("taus", &[0.1, 0.3, 0.5, 0.7, 0.9]);
-    let lam1 = args.get_f64("lam1", 10.0);
-    let lam2 = args.get_f64("lam2", 1e-2);
-    let solver = NckqrSolver::new(&data.x, &data.y, kernel, &taus)?;
+    let taus = args.try_f64_list("taus", &[0.1, 0.3, 0.5, 0.7, 0.9])?;
+    let lam1 = args.try_f64("lam1", 10.0)?;
+    let lam2 = args.try_f64("lam2", 1e-2)?;
+    let task = fastkqr::api::Task::NonCrossing { taus: taus.clone(), lam1, lam2 };
+    let spec = spec_from_args(args, task)?;
     let timer = Timer::start("nckqr");
-    let fit = solver.fit(lam1, lam2)?;
-    let crossings = fit.count_crossings(&data.x, 1e-9);
-    println!("dataset     {}", data.name);
+    let model = FitEngine::global().run(&spec)?;
+    let total = timer.total();
+    let QuantileModel::Nckqr(fit) = &model else { bail!("nckqr produced a non-nckqr model") };
     println!("taus        {taus:?}  lam1={lam1}  lam2={lam2}");
     println!("objective   {:.6}", fit.objective);
     println!("kkt         pass={} stat={:.2e}", fit.kkt.pass, fit.kkt.max_stationarity);
-    println!("crossings   {crossings} (training points)");
-    println!("mm iters    {}   time {:.3}s", fit.mm_iters, timer.total());
+    println!("crossings   {} (training points)", fit.train_crossings);
+    println!("mm iters    {}   time {total:.3}s", fit.mm_iters);
+    maybe_save(args, &model)
+}
+
+/// Predict from a saved model artifact: `fastkqr predict --model m.json
+/// [--data … --n …] [--head k]`. Evaluation points come from the same
+/// --data selector as the fitting subcommands.
+fn cmd_predict(args: &Args) -> Result<()> {
+    let path = args
+        .get("model")
+        .ok_or_else(|| anyhow::anyhow!("predict: --model <artifact.json> is required"))?;
+    let model = QuantileModel::load(path)?;
+    let data = dataset_from_args(args)?;
+    if data.p() != model.n_features() {
+        bail!(
+            "eval data has {} features but the model was trained on {}",
+            data.p(),
+            model.n_features()
+        );
+    }
+    let timer = Timer::start("predict");
+    let preds = model.predict(&data.x);
+    let total = timer.total();
+    let taus = model.taus();
+    println!(
+        "model          {path}  (kind={}, {} levels, n_train={})",
+        model.kind(),
+        model.n_levels(),
+        model.n_train()
+    );
+    println!("eval points    {} ({})", data.n(), data.name);
+    let head = args.try_usize("head", 10)?.min(data.n());
+    let mut header = format!("{:<6}", "row");
+    for t in &taus {
+        header.push_str(&format!(" {:>12}", format!("tau={t}")));
+    }
+    println!("{header}");
+    for i in 0..head {
+        let mut line = format!("{i:<6}");
+        for row in &preds {
+            line.push_str(&format!(" {:>12.6}", row[i]));
+        }
+        println!("{line}");
+    }
+    if head < data.n() {
+        println!("… ({} more rows; --head N to show more)", data.n() - head);
+    }
+    println!("{} levels x {} points in {total:.3}s", preds.len(), data.n());
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_str("addr", "127.0.0.1:7787").to_string();
-    let server = Server::spawn(ServerConfig { addr: addr.clone(), opts: Default::default() })?;
+    let persist_dir = args.get("persist").map(String::from);
+    let server = Server::spawn(ServerConfig {
+        addr: addr.clone(),
+        opts: Default::default(),
+        persist_dir: persist_dir.clone(),
+    })?;
     println!("fastkqr {} serving on {}", fastkqr::version(), server.local_addr);
+    match &persist_dir {
+        Some(dir) => println!(
+            "persistence: {dir} ({} model(s) reloaded)",
+            server.registry.len()
+        ),
+        None => println!("persistence: off (models are in-memory; --persist <dir> to keep them)"),
+    }
     println!("protocol: one JSON request per line; try: {{\"cmd\":\"ping\"}}");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -292,23 +382,23 @@ fn cmd_table(args: &Args, which: usize) -> Result<()> {
             if args.get("solvers").is_none() {
                 cfg.solvers = vec!["fastkqr".into(), "proximal".into(), "lbfgs".into()];
             }
-            experiments::nckqr_tables::table2(&cfg, args.get_f64("lam1", 1.0))?
+            experiments::nckqr_tables::table2(&cfg, args.try_f64("lam1", 1.0)?)?
         }
         3 => {
-            cfg.p = args.get_usize("p", 100);
+            cfg.p = args.try_usize("p", 100)?;
             experiments::kqr_tables::table3(&cfg)?
         }
         4 => experiments::kqr_tables::table4(&cfg)?,
         5 => {
-            let cap = if args.flag("paper") { None } else { Some(args.get_usize("cap", 120)) };
+            let cap = if args.flag("paper") { None } else { Some(args.try_usize("cap", 120)?) };
             experiments::kqr_tables::table5(&cfg, cap)?
         }
         6 => {
             if args.get("solvers").is_none() {
                 cfg.solvers = vec!["fastkqr".into(), "proximal".into()];
             }
-            let cap = if args.flag("paper") { None } else { Some(args.get_usize("cap", 100)) };
-            experiments::nckqr_tables::table6(&cfg, args.get_f64("lam1", 1.0), cap)?
+            let cap = if args.flag("paper") { None } else { Some(args.try_usize("cap", 100)?) };
+            experiments::nckqr_tables::table6(&cfg, args.try_f64("lam1", 1.0)?, cap)?
         }
         _ => unreachable!(),
     };
@@ -321,11 +411,11 @@ fn cmd_table(args: &Args, which: usize) -> Result<()> {
 }
 
 fn cmd_figure1(args: &Args) -> Result<()> {
-    let seed = args.get_usize("seed", 2025) as u64;
-    let lam = args.get_f64("lambda", 2e-5);
-    let lam1 = args.get_f64("lam1", 5.0);
+    let seed = args.try_usize("seed", 2025)? as u64;
+    let lam = args.try_f64("lambda", 2e-5)?;
+    let lam1 = args.try_f64("lam1", 5.0)?;
     let out = args.get_str("out", "out/figure1");
-    let res = experiments::figure1::run(seed, lam, lam1, args.get_usize("grid", 200))?;
+    let res = experiments::figure1::run(seed, lam, lam1, args.try_usize("grid", 200)?)?;
     experiments::figure1::write_csv(&res, out)?;
     println!("Figure 1 (GAGurine lookalike, 5 quantile levels)");
     println!("  individual fits: {} crossing violations on the grid", res.crossings_individual);
@@ -335,11 +425,11 @@ fn cmd_figure1(args: &Args) -> Result<()> {
 }
 
 fn cmd_ablations(args: &Args) -> Result<()> {
-    let n = args.get_usize("n", 100);
-    let seed = args.get_usize("seed", 2024) as u64;
+    let n = args.try_usize("n", 100)?;
+    let seed = args.try_usize("seed", 2024)? as u64;
     let mut rows = Vec::new();
-    rows.extend(experiments::ablations::spectral_vs_dense(n, args.get_usize("plans", 8), seed)?);
-    rows.extend(experiments::ablations::warm_vs_cold(n, args.get_usize("nlam", 20), seed)?);
+    rows.extend(experiments::ablations::spectral_vs_dense(n, args.try_usize("plans", 8)?, seed)?);
+    rows.extend(experiments::ablations::warm_vs_cold(n, args.try_usize("nlam", 20)?, seed)?);
     rows.extend(experiments::ablations::solver_switches(n.min(80), seed)?);
     rows.extend(experiments::ablations::nckqr_ridge(n.min(60), seed)?);
     experiments::ablations::print_rows(&rows);
@@ -347,7 +437,7 @@ fn cmd_ablations(args: &Args) -> Result<()> {
 }
 
 fn cmd_perf(args: &Args) -> Result<()> {
-    let reps = args.get_usize("reps", 20);
+    let reps = args.try_usize("reps", 20)?;
     for n in args.get_usize_list("ns", &[128, 256, 512, 1024]) {
         let (stats, gbps) = experiments::perf::gemv_throughput(n, reps);
         println!("{}  ({gbps:.2} GB/s effective)", stats.report_line());
@@ -362,7 +452,7 @@ fn cmd_perf(args: &Args) -> Result<()> {
     }
     println!(
         "{}",
-        experiments::perf::fit_latency(args.get_usize("fit-n", 200), 3).report_line()
+        experiments::perf::fit_latency(args.try_usize("fit-n", 200)?, 3).report_line()
     );
     Ok(())
 }

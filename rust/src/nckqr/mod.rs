@@ -28,6 +28,7 @@ use crate::smooth::{h_gamma_prime, rho_subgradient, rho_tau, smooth_relu, smooth
 use crate::spectral::SpectralBasis;
 use anyhow::{bail, Result};
 use plan::NcPlan;
+use std::sync::Arc;
 
 /// The η at which the exact problem (12) is defined (paper: 10⁻⁵).
 pub const ETA_EXACT: f64 = 1e-5;
@@ -90,7 +91,13 @@ pub struct NckqrFit {
     pub kkt: KktReport,
     pub mm_iters: usize,
     pub gamma_final: f64,
-    x_train: Matrix,
+    /// Crossing violations on the **training** points (tol 1e-9),
+    /// computed by the solver from the fitted values it already holds —
+    /// consumers must not rebuild the n×n cross-Gram just to count them.
+    pub train_crossings: usize,
+    /// Training inputs, `Arc`-shared with the solver (and with every fit
+    /// from the same solver), like [`crate::kqr::KqrFit`].
+    x_train: Arc<Matrix>,
     kernel: Kernel,
 }
 
@@ -99,11 +106,20 @@ impl NckqrFit {
     /// vector per level (same order as `taus`).
     pub fn predict(&self, xt: &Matrix) -> Vec<Vec<f64>> {
         let cg = self.kernel.cross_gram(xt, &self.x_train);
+        self.predict_from_cross_gram(&cg)
+    }
+
+    /// Predict from a precomputed cross-Gram matrix (rows = evaluation
+    /// points, columns = training points). Lets consumers that already
+    /// hold the training Gram (the solver, the engine cache) evaluate at
+    /// the training points without rebuilding an n×n kernel matrix.
+    pub fn predict_from_cross_gram(&self, cg: &Matrix) -> Vec<Vec<f64>> {
+        assert_eq!(cg.cols(), self.x_train.rows());
         self.levels
             .iter()
             .map(|lv| {
-                let mut out = vec![0.0; xt.rows()];
-                gemv(&cg, &lv.alpha, &mut out);
+                let mut out = vec![0.0; cg.rows()];
+                gemv(cg, &lv.alpha, &mut out);
                 for o in out.iter_mut() {
                     *o += lv.b;
                 }
@@ -116,17 +132,62 @@ impl NckqrFit {
     /// (point, adjacent level) where the higher quantile dips more than
     /// `tol` below the lower one.
     pub fn count_crossings(&self, xt: &Matrix, tol: f64) -> usize {
-        let preds = self.predict(xt);
-        let mut c = 0usize;
-        for t in 0..preds.len().saturating_sub(1) {
-            for i in 0..xt.rows() {
-                if preds[t + 1][i] < preds[t][i] - tol {
-                    c += 1;
-                }
+        count_crossings_in(&self.predict(xt), tol)
+    }
+
+    /// The kernel this fit predicts with (artifact serialization).
+    pub fn kernel(&self) -> &Kernel {
+        &self.kernel
+    }
+
+    /// Training inputs (artifact serialization).
+    pub fn x_train(&self) -> &Matrix {
+        &self.x_train
+    }
+
+    /// Assemble a fit from stored parts (the artifact loader must emit the
+    /// same self-contained value as the solver).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn assemble(
+        taus: Vec<f64>,
+        lam1: f64,
+        lam2: f64,
+        levels: Vec<LevelCoef>,
+        objective: f64,
+        kkt: KktReport,
+        mm_iters: usize,
+        gamma_final: f64,
+        train_crossings: usize,
+        x_train: Arc<Matrix>,
+        kernel: Kernel,
+    ) -> NckqrFit {
+        NckqrFit {
+            taus,
+            lam1,
+            lam2,
+            levels,
+            objective,
+            kkt,
+            mm_iters,
+            gamma_final,
+            train_crossings,
+            x_train,
+            kernel,
+        }
+    }
+}
+
+/// Count adjacent-level crossing violations in per-level prediction rows.
+fn count_crossings_in(preds: &[Vec<f64>], tol: f64) -> usize {
+    let mut c = 0usize;
+    for t in 0..preds.len().saturating_sub(1) {
+        for i in 0..preds[t].len() {
+            if preds[t + 1][i] < preds[t][i] - tol {
+                c += 1;
             }
         }
-        c
     }
+    c
 }
 
 /// Per-level mutable MM state (current + previous iterate for the
@@ -146,30 +207,87 @@ impl LevelState {
     }
 }
 
+/// Validate and sort a τ grid: all in (0,1), strictly distinct after
+/// sorting. These arrive from wire payloads and CLI flags, so bad input
+/// is an expected runtime condition (error), not a programmer bug
+/// (assert).
+pub fn normalize_taus(taus: &[f64]) -> Result<Vec<f64>> {
+    if taus.is_empty() {
+        bail!("taus must be non-empty");
+    }
+    if taus.iter().any(|t| !t.is_finite()) {
+        bail!("taus must be finite numbers, got {taus:?}");
+    }
+    let mut ts = taus.to_vec();
+    ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if !ts.iter().all(|t| 0.0 < *t && *t < 1.0) {
+        bail!("taus must be in (0,1), got {taus:?}");
+    }
+    if !ts.windows(2).all(|w| w[0] < w[1]) {
+        bail!("taus must be distinct, got {taus:?}");
+    }
+    Ok(ts)
+}
+
 /// NCKQR solver: data + kernel + eigenbasis + quantile levels.
+///
+/// Like [`crate::kqr::KqrSolver`], the training inputs, Gram matrix and
+/// eigenbasis are `Arc`-shared so the engine's
+/// [`crate::engine::GramCache`] can hand out solvers without copying
+/// O(n²) state — prefer [`crate::engine::FitEngine::nc_solver`] when the
+/// same (dataset, kernel) may be fitted more than once per process.
 pub struct NckqrSolver {
-    pub x: Matrix,
+    pub x: Arc<Matrix>,
     pub y: Vec<f64>,
     pub kernel: Kernel,
-    pub gram: Matrix,
-    pub basis: SpectralBasis,
+    pub gram: Arc<Matrix>,
+    pub basis: Arc<SpectralBasis>,
     pub taus: Vec<f64>,
     pub opts: NcOptions,
 }
 
 impl NckqrSolver {
-    /// Errors when the kernel matrix is not PSD (see [`SpectralBasis::new`]).
+    /// Build the solver: computes the Gram matrix and its
+    /// eigendecomposition. Errors on malformed inputs (shape mismatch,
+    /// invalid τ grid) or a non-PSD kernel matrix (see
+    /// [`SpectralBasis::new`]).
     pub fn new(x: &Matrix, y: &[f64], kernel: Kernel, taus: &[f64]) -> Result<NckqrSolver> {
-        assert_eq!(x.rows(), y.len());
-        assert!(!taus.is_empty());
-        let mut ts = taus.to_vec();
-        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        assert!(ts.iter().all(|t| 0.0 < *t && *t < 1.0), "taus must be in (0,1)");
-        assert!(ts.windows(2).all(|w| w[0] < w[1]), "taus must be distinct");
-        let gram = kernel.gram(x);
-        let basis = SpectralBasis::new(&gram)?;
+        if x.rows() != y.len() {
+            bail!("rows(x)={} != len(y)={}", x.rows(), y.len());
+        }
+        let ts = normalize_taus(taus)?;
+        let gram = Arc::new(kernel.gram(x));
+        let basis = Arc::new(SpectralBasis::new(&gram)?);
         Ok(NckqrSolver {
-            x: x.clone(),
+            x: Arc::new(x.clone()),
+            y: y.to_vec(),
+            kernel,
+            gram,
+            basis,
+            taus: ts,
+            opts: NcOptions::default(),
+        })
+    }
+
+    /// Reuse an already-computed Gram matrix and basis (engine-cached, or
+    /// shared with a [`crate::kqr::KqrSolver`] on the same data).
+    pub fn with_basis(
+        x: &Matrix,
+        y: &[f64],
+        kernel: Kernel,
+        taus: &[f64],
+        gram: Arc<Matrix>,
+        basis: Arc<SpectralBasis>,
+    ) -> Result<NckqrSolver> {
+        if x.rows() != y.len() {
+            bail!("rows(x)={} != len(y)={}", x.rows(), y.len());
+        }
+        if basis.n != y.len() {
+            bail!("basis dimension {} != len(y)={}", basis.n, y.len());
+        }
+        let ts = normalize_taus(taus)?;
+        Ok(NckqrSolver {
+            x: Arc::new(x.clone()),
             y: y.to_vec(),
             kernel,
             gram,
@@ -305,7 +423,11 @@ impl NckqrSolver {
                 alpha: self.basis.alpha_from_beta(&best_state[t].beta),
             })
             .collect();
-        let objective = self.exact_objective(lam1, lam2, &best_state, &mut ws);
+        // One pass of fitted values serves both the exact objective and
+        // the training-point crossings count — no cross-Gram rebuild.
+        let fs = self.fitted_levels(&best_state, &mut ws);
+        let objective = self.exact_objective(lam1, lam2, &best_state, &fs);
+        let train_crossings = count_crossings_in(&fs, 1e-9);
         Ok(NckqrFit {
             taus: self.taus.clone(),
             lam1,
@@ -315,9 +437,21 @@ impl NckqrSolver {
             kkt,
             mm_iters: total_iters,
             gamma_final,
+            train_crossings,
             x_train: self.x.clone(),
             kernel: self.kernel.clone(),
         })
+    }
+
+    /// Fitted values of every level at the training points (f_t = b_t·1 +
+    /// UΛβ_t).
+    fn fitted_levels(&self, state: &[LevelState], ws: &mut ApgdWorkspace) -> Vec<Vec<f64>> {
+        let n = self.n();
+        let mut fs = vec![vec![0.0; n]; self.t_levels()];
+        for (t, f) in fs.iter_mut().enumerate() {
+            self.basis.fitted(state[t].b, &state[t].beta, &mut ws.scratch, f);
+        }
+        fs
     }
 
     /// One γ level: MM solve + per-level eq.-(19) projection + multi-level
@@ -494,21 +628,18 @@ impl NckqrSolver {
         }
     }
 
-    /// Exact objective Q of problem (12).
+    /// Exact objective Q of problem (12), from precomputed fitted values
+    /// (see [`NckqrSolver::fitted_levels`]).
     fn exact_objective(
         &self,
         lam1: f64,
         lam2: f64,
         state: &[LevelState],
-        ws: &mut ApgdWorkspace,
+        fs: &[Vec<f64>],
     ) -> f64 {
         let n = self.n();
         let nf = n as f64;
         let t_lv = self.t_levels();
-        let mut fs = vec![vec![0.0; n]; t_lv];
-        for t in 0..t_lv {
-            self.basis.fitted(state[t].b, &state[t].beta, &mut ws.scratch, &mut fs[t]);
-        }
         let mut q = 0.0;
         for t in 0..t_lv {
             let loss: f64 =
@@ -633,9 +764,33 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn duplicate_taus_rejected() {
+    fn bad_construction_inputs_are_errors_not_panics() {
+        // These arrive from wire payloads: they must surface as Err.
         let (x, y, kernel) = fixture(10, 8);
-        let _ = NckqrSolver::new(&x, &y, kernel, &[0.5, 0.5]);
+        assert!(NckqrSolver::new(&x, &y, kernel.clone(), &[0.5, 0.5]).is_err(), "dup taus");
+        assert!(NckqrSolver::new(&x, &y, kernel.clone(), &[]).is_err(), "empty taus");
+        assert!(NckqrSolver::new(&x, &y, kernel.clone(), &[0.0]).is_err(), "tau=0");
+        assert!(NckqrSolver::new(&x, &y[..5], kernel, &[0.5]).is_err(), "len mismatch");
+    }
+
+    #[test]
+    fn with_basis_matches_fresh_solver() {
+        let (x, y, kernel) = fixture(30, 9);
+        let fresh = NckqrSolver::new(&x, &y, kernel.clone(), &[0.3, 0.7]).unwrap();
+        let shared = NckqrSolver::with_basis(
+            &x,
+            &y,
+            kernel,
+            &[0.3, 0.7],
+            fresh.gram.clone(),
+            fresh.basis.clone(),
+        )
+        .unwrap();
+        let a = fresh.fit(1.0, 0.05).unwrap();
+        let b = shared.fit(1.0, 0.05).unwrap();
+        assert_eq!(a.objective, b.objective, "same basis ⇒ identical solve");
+        assert_eq!(a.train_crossings, b.train_crossings);
+        // training crossings agree with the predict-based count
+        assert_eq!(a.train_crossings, a.count_crossings(&x, 1e-9));
     }
 }

@@ -2,7 +2,19 @@
 //!
 //! Supports `--flag`, `--key value`, `--key=value` and positional args.
 //! Unknown flags are collected so subcommands can validate their own set.
+//!
+//! Two families of numeric accessors:
+//!
+//! - `get_*(name, default)` — lenient: absent **or malformed** values fall
+//!   back to the default. Only appropriate where a wrong value cannot
+//!   silently change results (e.g. bench repetition counts).
+//! - `try_*(name, default)` — strict: absent falls back to the default,
+//!   but a present-and-malformed value is a hard error. Use these for
+//!   anything statistical (σ, τ, λ, fold counts): `--sigma 0.5x`
+//!   silently becoming some default bandwidth is a wrong-model bug, not a
+//!   convenience.
 
+use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
 #[derive(Debug, Clone, Default)]
@@ -60,6 +72,49 @@ impl Args {
 
     pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
+    }
+
+    /// Strict f64 option: default when absent, error when malformed.
+    pub fn try_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected a number, got {v:?}")),
+        }
+    }
+
+    /// Strict usize option: default when absent, error when malformed.
+    pub fn try_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected a non-negative integer, got {v:?}")),
+        }
+    }
+
+    /// Strict comma-separated f64 list: default when absent, error when
+    /// any entry is malformed (the lenient [`Args::get_f64_list`] silently
+    /// drops bad entries — fine for bench sweeps, wrong for τ grids).
+    pub fn try_f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => {
+                let mut out = Vec::new();
+                for t in s.split(',') {
+                    let t = t.trim();
+                    match t.parse() {
+                        Ok(v) => out.push(v),
+                        Err(_) => bail!("--{name}: expected a number, got {t:?} in {s:?}"),
+                    }
+                }
+                if out.is_empty() {
+                    bail!("--{name}: empty list");
+                }
+                Ok(out)
+            }
+        }
     }
 
     /// Comma-separated f64 list option.
@@ -126,5 +181,19 @@ mod tests {
     fn trailing_flag() {
         let a = parse(&["--paper"]);
         assert!(a.flag("paper"));
+    }
+
+    #[test]
+    fn strict_parsers_error_on_malformed_values() {
+        let a = parse(&["--sigma", "0.5x", "--tau", "0.3", "--folds", "five"]);
+        assert!(a.try_f64("sigma", 1.0).is_err(), "malformed --sigma must not default");
+        assert_eq!(a.try_f64("tau", 0.5).unwrap(), 0.3);
+        assert_eq!(a.try_f64("missing", 0.7).unwrap(), 0.7);
+        assert!(a.try_usize("folds", 5).is_err());
+        let b = parse(&["--taus", "0.1,oops,0.9"]);
+        assert!(b.try_f64_list("taus", &[0.5]).is_err(), "bad list entry must error");
+        assert_eq!(b.try_f64_list("other", &[0.5]).unwrap(), vec![0.5]);
+        let c = parse(&["--taus", "0.1, 0.9"]);
+        assert_eq!(c.try_f64_list("taus", &[]).unwrap(), vec![0.1, 0.9]);
     }
 }

@@ -96,6 +96,51 @@ impl Json {
         self.get(key)?.as_arr().map(|a| a.iter().filter_map(Json::as_f64).collect())
     }
 
+    /// Strict numeric array: `None` if the key is missing, not an array,
+    /// or any element is not a number (unlike [`Json::get_f64_arr`], which
+    /// silently drops non-numeric entries).
+    pub fn get_f64_arr_strict(&self, key: &str) -> Option<Vec<f64>> {
+        let arr = self.get(key)?.as_arr()?;
+        let mut out = Vec::with_capacity(arr.len());
+        for v in arr {
+            out.push(v.as_f64()?);
+        }
+        Some(out)
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Json::as_bool)
+    }
+
+    /// Non-negative integer field (rejects negatives and non-integers).
+    pub fn get_usize(&self, key: &str) -> Option<usize> {
+        let v = self.get_f64(key)?;
+        if v >= 0.0 && v == v.trunc() && v < 9e15 {
+            Some(v as usize)
+        } else {
+            None
+        }
+    }
+
+    /// Extract a usize array of indices (all entries must be non-negative
+    /// integers, else `None`).
+    pub fn get_usize_arr(&self, key: &str) -> Option<Vec<usize>> {
+        let arr = self.get(key)?.as_arr()?;
+        let mut out = Vec::with_capacity(arr.len());
+        for v in arr {
+            let f = v.as_f64()?;
+            if f < 0.0 || f != f.trunc() || f >= 9e15 {
+                return None;
+            }
+            out.push(f as usize);
+        }
+        Some(out)
+    }
+
+    pub fn arr_usize(v: &[usize]) -> Json {
+        Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
     /// Serialize (compact).
     pub fn to_string(&self) -> String {
         let mut out = String::new();

@@ -1,0 +1,275 @@
+//! Integration tests for the declarative fit API: spec round-trips, the
+//! one-spec/many-consumers parity guarantee, artifact persistence and the
+//! NonCrossing-through-the-cache invariant.
+
+use fastkqr::api::{FitSpec, KernelSpec, QuantileModel, Task};
+use fastkqr::coordinator::protocol::{handle_line, ProtocolState};
+use fastkqr::coordinator::{Metrics, ModelRegistry};
+use fastkqr::data::{synth, Rng};
+use fastkqr::engine::{CacheMetrics, FitEngine};
+use fastkqr::kqr::SolveOptions;
+use fastkqr::linalg::Matrix;
+use fastkqr::util::Json;
+use std::sync::Arc;
+
+fn temp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "fastkqr-api-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ))
+}
+
+fn toy_spec(n: usize, seed: u64, task: Task) -> FitSpec {
+    let mut rng = Rng::new(seed);
+    let d = synth::sine_hetero(n, &mut rng);
+    FitSpec::new(d.x, d.y, KernelSpec::Rbf { sigma: Some(0.5) }, task)
+}
+
+fn eval_grid(m: usize) -> Matrix {
+    Matrix::from_fn(m, 1, |i, _| i as f64 / (m - 1) as f64)
+}
+
+#[test]
+fn kqr_artifact_roundtrip_predicts_identically() {
+    let spec = toy_spec(40, 1, Task::Single { tau: 0.3, lambda: 0.02 });
+    let model = FitEngine::global().run(&spec).unwrap();
+    let xt = eval_grid(23);
+    let before = model.predict(&xt);
+
+    let path = temp_path("kqr").with_extension("json");
+    model.save(&path).unwrap();
+    let back = QuantileModel::load(&path).unwrap();
+    let after = back.predict(&xt);
+    assert_eq!(before, after, "save→load must reproduce predictions exactly");
+    assert_eq!(back.taus(), model.taus());
+    assert_eq!(back.kind(), "kqr");
+    // double round-trip is byte-stable
+    let doc1 = model.to_artifact().unwrap().to_string();
+    let doc2 = back.to_artifact().unwrap().to_string();
+    assert_eq!(doc1, doc2);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn nckqr_artifact_roundtrip_predicts_identically() {
+    let spec = toy_spec(35, 2, Task::NonCrossing { taus: vec![0.2, 0.5, 0.8], lam1: 5.0, lam2: 0.05 });
+    let model = FitEngine::global().run(&spec).unwrap();
+    let xt = eval_grid(17);
+    let before = model.predict(&xt);
+    assert_eq!(before.len(), 3, "one row per level");
+
+    let path = temp_path("nckqr").with_extension("json");
+    model.save(&path).unwrap();
+    let back = QuantileModel::load(&path).unwrap();
+    assert_eq!(back.kind(), "nckqr");
+    assert_eq!(back.taus(), vec![0.2, 0.5, 0.8]);
+    let after = back.predict(&xt);
+    assert_eq!(before, after, "NCKQR reload must predict identically");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn grid_artifact_roundtrip_keeps_all_cells() {
+    let spec = toy_spec(30, 3, Task::Grid { taus: vec![0.25, 0.75], lambdas: vec![0.1, 0.01] });
+    let model = FitEngine::global().run(&spec).unwrap();
+    assert_eq!(model.n_levels(), 4);
+    let xt = eval_grid(9);
+    let before = model.predict(&xt);
+    let path = temp_path("grid").with_extension("json");
+    model.save(&path).unwrap();
+    let back = QuantileModel::load(&path).unwrap();
+    assert_eq!(back.n_levels(), 4);
+    assert_eq!(back.taus(), model.taus());
+    assert_eq!(back.lambdas(), model.lambdas());
+    assert_eq!(back.predict(&xt), before);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn one_spec_fits_identically_via_api_and_protocol() {
+    // The SAME FitSpec JSON document, executed (a) in-process through
+    // FitEngine::run and (b) over the protocol's spec-based `fit`, must
+    // produce the same model (≤1e-12; same engine code path ⇒ equal).
+    let spec = toy_spec(32, 4, Task::Single { tau: 0.5, lambda: 0.05 })
+        .with_opts(SolveOptions::default());
+    let doc = spec.to_json().to_string();
+
+    // (a) direct API on a fresh engine
+    let engine_a = FitEngine::new();
+    let model_a = engine_a.run(&FitSpec::parse(&doc).unwrap()).unwrap();
+
+    // (b) protocol on its own fresh engine
+    let st = ProtocolState {
+        registry: Arc::new(ModelRegistry::new()),
+        metrics: Arc::new(Metrics::new()),
+        opts: SolveOptions::default(),
+        engine: Arc::new(FitEngine::new()),
+    };
+    let resp = handle_line(&st, &format!(r#"{{"cmd":"fit","spec":{doc}}}"#));
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{}", resp.to_string());
+    let id = resp.get_str("model").unwrap();
+    let model_b = st.registry.get(id).unwrap();
+
+    let xt = eval_grid(21);
+    let pa = model_a.predict(&xt);
+    let pb = model_b.predict(&xt);
+    assert_eq!(pa.len(), pb.len());
+    for (ra, rb) in pa.iter().zip(&pb) {
+        for (a, b) in ra.iter().zip(rb) {
+            assert!((a - b).abs() <= 1e-12, "api {a} vs protocol {b}");
+        }
+    }
+    assert_eq!(model_a.objective(), model_b.objective());
+}
+
+#[test]
+fn noncrossing_specs_share_one_decomposition_with_everything_else() {
+    // One engine, three consumers' worth of tasks on the same (x, y,
+    // kernel): Single, Grid and repeated NonCrossing — exactly one
+    // eigendecomposition in total.
+    let engine = FitEngine::new();
+    let base = toy_spec(28, 5, Task::Single { tau: 0.5, lambda: 0.05 });
+    engine.run(&base).unwrap();
+    let nc = FitSpec::new(
+        base.x.clone(),
+        base.y.clone(),
+        base.kernel.clone(),
+        Task::NonCrossing { taus: vec![0.25, 0.75], lam1: 2.0, lam2: 0.05 },
+    );
+    engine.run(&nc).unwrap();
+    engine.run(&nc).unwrap();
+    let grid = FitSpec::new(
+        base.x.clone(),
+        base.y.clone(),
+        base.kernel.clone(),
+        Task::Grid { taus: vec![0.3, 0.7], lambdas: vec![0.1] },
+    );
+    engine.run(&grid).unwrap();
+    assert_eq!(
+        CacheMetrics::get(&engine.cache.metrics.decompositions),
+        1,
+        "all tasks on one dataset must share one decomposition"
+    );
+}
+
+#[test]
+fn cv_task_returns_per_tau_winners_with_summaries() {
+    let mut rng = Rng::new(6);
+    let d = synth::sine_hetero(45, &mut rng);
+    let spec = FitSpec::new(
+        d.x,
+        d.y,
+        KernelSpec::Rbf { sigma: Some(0.5) },
+        Task::Cv { taus: vec![0.25, 0.75], lambdas: vec![0.5, 0.05, 0.005], folds: 3, seed: 9 },
+    )
+    .with_opts(SolveOptions::cv_preset());
+    let model = FitEngine::new().run(&spec).unwrap();
+    let QuantileModel::Set(set) = &model else { panic!("cv must produce a set") };
+    assert_eq!(set.fits.len(), 2, "one refit per tau");
+    assert_eq!(set.cv.len(), 2);
+    for (fit, cv) in set.fits.iter().zip(&set.cv) {
+        assert_eq!(fit.tau, cv.tau);
+        assert_eq!(fit.lam, cv.best_lambda, "refit must be at the CV winner");
+        assert_eq!(cv.cv_loss.len(), 3);
+        assert!(cv.cv_loss.iter().all(|v| v.is_finite()));
+    }
+    // artifact round-trip keeps the CV diagnostics
+    let back = QuantileModel::from_artifact(&model.to_artifact().unwrap()).unwrap();
+    let QuantileModel::Set(set2) = &back else { panic!() };
+    assert_eq!(set2.cv, set.cv);
+}
+
+#[test]
+fn spec_fuzz_documents_fail_loudly() {
+    // Integration-level fuzz: every malformed document must error (never
+    // panic), both at parse time and through the protocol dispatcher.
+    let st = ProtocolState {
+        registry: Arc::new(ModelRegistry::new()),
+        metrics: Arc::new(Metrics::new()),
+        opts: SolveOptions::default(),
+        engine: Arc::new(FitEngine::new()),
+    };
+    let bad_specs = [
+        r#"{"x":[[1,2],[3]],"y":[1,2],"task":{"type":"single","tau":0.5,"lambda":0.1}}"#,
+        r#"{"x":[],"y":[],"task":{"type":"single","tau":0.5,"lambda":0.1}}"#,
+        r#"{"x":[[1],[2]],"y":[1,2],"task":{"type":"teleport"}}"#,
+        r#"{"x":[[1],[2]],"y":[1,2],"task":{"type":"grid","taus":[],"lambdas":[0.1]}}"#,
+        r#"{"x":[[1],[2]],"y":[1,2],"kernel":{"type":"fourier"},"task":{"type":"single","tau":0.5,"lambda":0.1}}"#,
+        r#"{"x":[[1],[2]],"y":[1,2],"version":99,"task":{"type":"single","tau":0.5,"lambda":0.1}}"#,
+        r#"{"x":[[1],[2]],"y":["a",2],"task":{"type":"single","tau":0.5,"lambda":0.1}}"#,
+        r#"{"x":[[1],[2]],"y":[1,2],"task":{"type":"cv","taus":[0.5],"lambdas":[]}}"#,
+    ];
+    for bad in bad_specs {
+        assert!(FitSpec::parse(bad).is_err(), "must reject: {bad}");
+        let resp = handle_line(&st, &format!(r#"{{"cmd":"fit","spec":{bad}}}"#));
+        assert_eq!(
+            resp.get("ok").and_then(Json::as_bool),
+            Some(false),
+            "protocol must reject: {bad}"
+        );
+    }
+    // runtime-invalid values error through run(), too
+    let engine = FitEngine::new();
+    for task in [
+        Task::Single { tau: 1.5, lambda: 0.1 },
+        Task::Single { tau: 0.5, lambda: -1.0 },
+        Task::NonCrossing { taus: vec![0.5, 0.5], lam1: 1.0, lam2: 0.1 },
+        Task::Cv { taus: vec![0.5], lambdas: vec![0.1], folds: 1, seed: 0 },
+    ] {
+        let spec = toy_spec(12, 7, task.clone());
+        assert!(engine.run(&spec).is_err(), "must reject at run time: {task:?}");
+    }
+}
+
+#[test]
+fn save_load_through_protocol_matches_export() {
+    let dir = temp_path("proto-registry");
+    let st = ProtocolState {
+        registry: Arc::new(ModelRegistry::with_persistence(&dir).unwrap()),
+        metrics: Arc::new(Metrics::new()),
+        opts: SolveOptions::default(),
+        engine: Arc::new(FitEngine::new()),
+    };
+    let spec = toy_spec(20, 8, Task::Single { tau: 0.5, lambda: 0.05 });
+    let doc = spec.to_json().to_string();
+    let fit = handle_line(&st, &format!(r#"{{"cmd":"fit","spec":{doc}}}"#));
+    assert_eq!(fit.get("ok").and_then(Json::as_bool), Some(true), "{}", fit.to_string());
+    let id = fit.get_str("model").unwrap().to_string();
+
+    // save under an explicit name (confined to the persistence dir),
+    // then load it back as a new model
+    let save = handle_line(&st, &format!(r#"{{"cmd":"save","model":"{id}","name":"snapshot"}}"#));
+    assert_eq!(save.get("ok").and_then(Json::as_bool), Some(true), "{}", save.to_string());
+    let load = handle_line(&st, r#"{"cmd":"load","name":"snapshot"}"#);
+    assert_eq!(load.get("ok").and_then(Json::as_bool), Some(true), "{}", load.to_string());
+    let id2 = load.get_str("model").unwrap().to_string();
+    assert_ne!(id, id2);
+
+    // the loaded model predicts identically to the original
+    let xt = eval_grid(7);
+    let a = st.registry.get(&id).unwrap().predict(&xt);
+    let b = st.registry.get(&id2).unwrap().predict(&xt);
+    assert_eq!(a, b);
+
+    // export of the original equals the saved file's contents
+    let export = handle_line(&st, &format!(r#"{{"cmd":"export","model":"{id}"}}"#));
+    let inline = export.get("artifact").unwrap().to_string();
+    let on_disk = std::fs::read_to_string(dir.join("snapshot.json")).unwrap();
+    assert_eq!(inline, on_disk.trim());
+
+    // path traversal and absolute names are rejected outright
+    for bad in ["../evil", "a/b", "/etc/x", ".hidden", ""] {
+        let r = handle_line(
+            &st,
+            &format!(r#"{{"cmd":"save","model":"{id}","name":"{bad}"}}"#),
+        );
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "name {bad:?}");
+        let r = handle_line(&st, &format!(r#"{{"cmd":"load","name":"{bad}"}}"#));
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "name {bad:?}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -14,7 +14,7 @@ fn net_available() -> bool {
 }
 
 fn spawn() -> Server {
-    Server::spawn(ServerConfig { addr: "127.0.0.1:0".into(), opts: Default::default() })
+    Server::spawn(ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() })
         .expect("server")
 }
 
@@ -118,6 +118,75 @@ fn concurrent_clients_share_registry() {
     let m = a.request(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
     assert_eq!(m.get_f64("predict_requests"), Some(20.0));
     server.shutdown();
+}
+
+#[test]
+fn server_restart_with_persistence_serves_same_models() {
+    if !net_available() {
+        eprintln!("skipping: no loopback TCP available");
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!(
+        "fastkqr-server-restart-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    let config = || ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        persist_dir: Some(dir.display().to_string()),
+        ..Default::default()
+    };
+    let mut rng = Rng::new(5);
+    let data = synth::sine_hetero(40, &mut rng);
+    let grid = fastkqr::linalg::Matrix::from_fn(16, 1, |i, _| i as f64 / 15.0);
+
+    // fit on the first server instance, record predictions
+    let server = Server::spawn(config()).unwrap();
+    let mut client = Client::connect(server.local_addr).unwrap();
+    let fit = client
+        .request(&Json::obj(vec![
+            ("cmd", Json::str("fit")),
+            ("x", matrix_json(&data.x)),
+            ("y", Json::arr_f64(&data.y)),
+            ("tau", Json::num(0.5)),
+            ("lambda", Json::num(1e-2)),
+        ]))
+        .unwrap();
+    assert_eq!(fit.get("ok").and_then(Json::as_bool), Some(true), "{}", fit.to_string());
+    let id = fit.get_str("model").unwrap().to_string();
+    let before = client
+        .request(&Json::obj(vec![
+            ("cmd", Json::str("predict")),
+            ("model", Json::str(id.clone())),
+            ("x", matrix_json(&grid)),
+        ]))
+        .unwrap();
+    assert_eq!(before.get("ok").and_then(Json::as_bool), Some(true));
+    server.shutdown();
+
+    // a fresh server on the same persistence dir serves the reloaded
+    // model under the same id, with identical predictions
+    let server2 = Server::spawn(config()).unwrap();
+    assert_eq!(server2.registry.len(), 1, "model must survive the restart");
+    let mut client2 = Client::connect(server2.local_addr).unwrap();
+    let after = client2
+        .request(&Json::obj(vec![
+            ("cmd", Json::str("predict")),
+            ("model", Json::str(id)),
+            ("x", matrix_json(&grid)),
+        ]))
+        .unwrap();
+    assert_eq!(after.get("ok").and_then(Json::as_bool), Some(true), "{}", after.to_string());
+    assert_eq!(
+        before.get("pred").unwrap().to_string(),
+        after.get("pred").unwrap().to_string(),
+        "reloaded model must predict identically"
+    );
+    server2.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
