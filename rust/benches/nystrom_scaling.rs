@@ -1,0 +1,101 @@
+//! Low-rank (Nyström) scaling trajectory: wall time and in-sample check
+//! loss vs the landmark count m at a fixed n, against the exact dense
+//! baseline at the same n. Writes the machine-readable baseline to
+//! `BENCH_lowrank.json` (override with `--out`) so the scale trajectory
+//! of future PRs has a recorded starting point.
+//!
+//! Expectation (ISSUE 4): setup drops from O(n³) to O(n·m² + m³) and
+//! per-iteration cost from O(n²) to O(n·m), so wall time falls steeply
+//! with m while the check loss approaches the dense baseline as m grows.
+
+use fastkqr::data::{synth, Rng};
+use fastkqr::engine::{ApproxSpec, EngineConfig, FitEngine};
+use fastkqr::kernel::{median_heuristic_sigma, Kernel};
+use fastkqr::smooth::pinball_loss;
+use fastkqr::util::{Args, Json};
+use std::time::Instant;
+
+fn fit_once(
+    engine: &FitEngine,
+    data: &fastkqr::data::Dataset,
+    kernel: &Kernel,
+    approx: ApproxSpec,
+    tau: f64,
+    lam: f64,
+) -> (f64, f64, usize) {
+    let t0 = Instant::now();
+    let solver = engine
+        .solver_approx(&data.x, &data.y, kernel, approx, engine.config.opts.clone())
+        .expect("solver");
+    let fit = solver.fit(tau, lam).expect("fit");
+    let secs = t0.elapsed().as_secs_f64();
+    let loss = pinball_loss(&data.y, &fit.predict(&data.x), tau);
+    (secs, loss, fit.apgd_iters)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 768);
+    let tau = args.get_f64("tau", 0.5);
+    let lam = args.get_f64("lambda", 1e-2);
+    let ms: Vec<usize> = {
+        let def = [32usize, 64, 128, 256];
+        args.get_usize_list("ms", &def).into_iter().filter(|&m| m <= n).collect()
+    };
+    let seed = args.get_usize("seed", 2024) as u64;
+    let out = args.get_str("out", "BENCH_lowrank.json").to_string();
+
+    let mut rng = Rng::new(seed);
+    let data = synth::sine_hetero(n, &mut rng);
+    let kernel = Kernel::Rbf { sigma: median_heuristic_sigma(&data.x) };
+    println!("-- nystrom scaling: n={n}, tau={tau}, lambda={lam:.1e} --");
+
+    // Dense baseline at the same n (fresh engine: cold factorization).
+    let dense_engine = FitEngine::with_config(EngineConfig::default());
+    let (dense_secs, dense_loss, dense_iters) =
+        fit_once(&dense_engine, &data, &kernel, ApproxSpec::Exact, tau, lam);
+    println!(
+        "   exact     n={n:<5}           {dense_secs:8.3}s   check-loss {dense_loss:.6}  \
+         ({dense_iters} iters)"
+    );
+
+    let mut rows = Vec::new();
+    for &m in &ms {
+        let engine = FitEngine::with_config(EngineConfig::default());
+        let (secs, loss, iters) =
+            fit_once(&engine, &data, &kernel, ApproxSpec::Nystrom { m, seed }, tau, lam);
+        let speedup = dense_secs / secs.max(1e-12);
+        let loss_gap = loss - dense_loss;
+        println!(
+            "   nystrom   m={m:<5} ({speedup:5.2}x) {secs:8.3}s   check-loss {loss:.6}  \
+             (gap {loss_gap:+.2e}, {iters} iters)"
+        );
+        rows.push(Json::obj(vec![
+            ("m", Json::num(m as f64)),
+            ("secs", Json::num(secs)),
+            ("check_loss", Json::num(loss)),
+            ("loss_gap_vs_dense", Json::num(loss_gap)),
+            ("speedup_vs_dense", Json::num(speedup)),
+            ("apgd_iters", Json::num(iters as f64)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("nystrom_scaling")),
+        ("n", Json::num(n as f64)),
+        ("tau", Json::num(tau)),
+        ("lambda", Json::num(lam)),
+        ("seed", Json::num(seed as f64)),
+        (
+            "dense",
+            Json::obj(vec![
+                ("secs", Json::num(dense_secs)),
+                ("check_loss", Json::num(dense_loss)),
+                ("apgd_iters", Json::num(dense_iters as f64)),
+            ]),
+        ),
+        ("lowrank", Json::Arr(rows)),
+    ]);
+    std::fs::write(&out, doc.to_string()).expect("write BENCH_lowrank.json");
+    println!("wrote {out}");
+}

@@ -15,6 +15,17 @@
 //! the identical bit pattern and a reloaded model's predictions equal the
 //! original's bitwise. Readers accept any `format_version` ≤ theirs and
 //! reject newer documents loudly instead of misreading them.
+//!
+//! **Compressed low-rank documents (format_version 2).** A fit produced
+//! on a Nyström basis persists `"repr":"lowrank"` with the m landmark
+//! inputs `z`, their training-row indices, `n_train`, and per-fit
+//! m-dimensional kernel weights `w` — **no** `x_train` and no
+//! n-dimensional α, so the artifact is O(m·p) instead of O(n·p + n) per
+//! fit. Prediction from a reloaded document goes through the identical
+//! landmark path the in-memory model uses, so it stays bitwise. Dense
+//! models keep writing format_version 1 (older readers stay compatible);
+//! version-1 readers reject low-rank documents loudly instead of
+//! misreading them.
 
 use super::model::{shape_from_json, shape_to_json, CvSummary, ModelSet, QuantileModel};
 use super::{kernel_from_json, kernel_to_json, matrix_from_json, matrix_to_json};
@@ -22,30 +33,41 @@ use crate::kernel::Kernel;
 use crate::kqr::kkt::KktReport;
 use crate::kqr::KqrFit;
 use crate::linalg::Matrix;
-use crate::nckqr::{LevelCoef, NckqrFit};
+use crate::nckqr::{LevelCoef, NcLowRank, NckqrFit};
+use crate::spectral::LowRankCoef;
 use crate::util::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
 use std::sync::Arc;
 
-/// Artifact document version written by [`to_json`].
-pub const ARTIFACT_VERSION: u64 = 1;
+/// Highest artifact document version this build reads. [`to_json`]
+/// writes the lowest version that can represent the model: 1 (dense) or
+/// 2 (compressed low-rank).
+pub const ARTIFACT_VERSION: u64 = 2;
 /// Magic `format` tag distinguishing model artifacts from other JSON.
 pub const ARTIFACT_FORMAT: &str = "fastkqr.model";
 
 fn kqr_fit_to_json(f: &KqrFit) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("tau", Json::num(f.tau)),
         ("lambda", Json::num(f.lam)),
         ("b", Json::num(f.b)),
-        ("alpha", Json::arr_f64(&f.alpha)),
+    ];
+    // Low-rank fits persist the m-dim landmark weights instead of the
+    // n-dim α — that single choice is what makes the artifact O(m).
+    match &f.lowrank {
+        Some(lr) => pairs.push(("w", Json::arr_f64(&lr.w))),
+        None => pairs.push(("alpha", Json::arr_f64(&f.alpha))),
+    }
+    pairs.extend(vec![
         ("objective", Json::num(f.objective)),
         ("gamma_final", Json::num(f.gamma_final)),
         ("apgd_iters", Json::num(f.apgd_iters as f64)),
         ("expansions", Json::num(f.expansions as f64)),
         ("singular_set", Json::arr_usize(&f.singular_set)),
         ("kkt", f.kkt.to_json()),
-    ])
+    ]);
+    Json::obj(pairs)
 }
 
 fn kqr_fit_from_json(v: &Json, x_train: &Arc<Matrix>, kernel: &Kernel) -> Result<KqrFit> {
@@ -68,35 +90,100 @@ fn kqr_fit_from_json(v: &Json, x_train: &Arc<Matrix>, kernel: &Kernel) -> Result
         v.get_usize("apgd_iters").unwrap_or(0),
         v.get_usize("expansions").unwrap_or(0),
         v.get_usize_arr("singular_set").unwrap_or_default(),
+        None,
         x_train.clone(),
         kernel.clone(),
     ))
 }
 
+/// Parse one compressed low-rank fit object (`"w"` instead of `"alpha"`).
+fn kqr_fit_from_json_lowrank(
+    v: &Json,
+    z: &Arc<Matrix>,
+    landmarks: &[usize],
+    n_train: usize,
+    kernel: &Kernel,
+) -> Result<KqrFit> {
+    let need = |key: &str| v.get_f64(key).ok_or_else(|| anyhow!("fit: missing {key:?}"));
+    let w = v.get_f64_arr_strict("w").ok_or_else(|| anyhow!("lowrank fit: missing 'w'"))?;
+    if w.len() != z.rows() {
+        bail!("lowrank fit: len(w)={} != landmarks m={}", w.len(), z.rows());
+    }
+    let kkt = KktReport::from_json(v.get("kkt").ok_or_else(|| anyhow!("fit: missing 'kkt'"))?)?;
+    Ok(KqrFit::assemble_compressed(
+        need("tau")?,
+        need("lambda")?,
+        need("b")?,
+        need("objective")?,
+        kkt,
+        need("gamma_final")?,
+        v.get_usize("apgd_iters").unwrap_or(0),
+        v.get_usize("expansions").unwrap_or(0),
+        v.get_usize_arr("singular_set").unwrap_or_default(),
+        n_train,
+        LowRankCoef { z: z.clone(), landmarks: landmarks.to_vec(), w },
+        kernel.clone(),
+    ))
+}
+
+/// Shared header of a compressed low-rank document (every kind writes
+/// the same four keys): landmark indices, landmark inputs Z, original
+/// training size.
+fn push_lowrank_header<'a>(
+    pairs: &mut Vec<(&'a str, Json)>,
+    z: &Matrix,
+    landmarks: &[usize],
+    n_train: usize,
+) {
+    pairs.push(("repr", Json::str("lowrank")));
+    pairs.push(("landmarks", Json::arr_usize(landmarks)));
+    pairs.push(("z", matrix_to_json(z)));
+    pairs.push(("n_train", Json::num(n_train as f64)));
+}
+
 /// Serialize a model to the artifact document. Errors on an empty fit
-/// set (which [`from_json`] would reject anyway).
+/// set (which [`from_json`] would reject anyway) or a set mixing dense
+/// and low-rank fits (impossible from one solver).
 pub fn to_json(model: &QuantileModel) -> Result<Json> {
+    let lowrank_doc = match model {
+        QuantileModel::Kqr(f) => f.lowrank.is_some(),
+        QuantileModel::Set(s) => s.fits.first().map(|f| f.lowrank.is_some()).unwrap_or(false),
+        QuantileModel::Nckqr(f) => f.lowrank.is_some(),
+    };
+    // Lowest version that represents the document (see ARTIFACT_VERSION).
+    let version: u64 = if lowrank_doc { 2 } else { 1 };
     let mut pairs = vec![
         ("format", Json::str(ARTIFACT_FORMAT)),
-        ("format_version", Json::num(ARTIFACT_VERSION as f64)),
+        ("format_version", Json::num(version as f64)),
         ("created_by", Json::str(format!("fastkqr {}", crate::version()))),
         ("kind", Json::str(model.kind())),
     ];
     match model {
         QuantileModel::Kqr(f) => {
             pairs.push(("kernel", kernel_to_json(f.kernel())));
-            pairs.push(("x_train", matrix_to_json(f.x_train())));
+            match &f.lowrank {
+                Some(lr) => push_lowrank_header(&mut pairs, &lr.z, &lr.landmarks, f.n_train()),
+                None => pairs.push(("x_train", matrix_to_json(f.x_train()))),
+            }
             pairs.push(("fit", kqr_fit_to_json(f)));
         }
         QuantileModel::Set(s) => {
             // All fits of a set share one solver, hence one kernel and
-            // one Arc'd design matrix — serialize them once.
+            // one Arc'd design matrix / landmark set — serialize once.
             let head = s
                 .fits
                 .first()
                 .ok_or_else(|| anyhow!("cannot serialize an empty model set"))?;
+            if s.fits.iter().any(|f| f.lowrank.is_some() != head.lowrank.is_some()) {
+                bail!("cannot serialize a set mixing dense and low-rank fits");
+            }
             pairs.push(("kernel", kernel_to_json(head.kernel())));
-            pairs.push(("x_train", matrix_to_json(head.x_train())));
+            match &head.lowrank {
+                Some(lr) => {
+                    push_lowrank_header(&mut pairs, &lr.z, &lr.landmarks, head.n_train())
+                }
+                None => pairs.push(("x_train", matrix_to_json(head.x_train()))),
+            }
             pairs.push(("fits", Json::Arr(s.fits.iter().map(kqr_fit_to_json).collect())));
             pairs.push(("shape", shape_to_json(&s.shape)));
             if !s.cv.is_empty() {
@@ -105,25 +192,48 @@ pub fn to_json(model: &QuantileModel) -> Result<Json> {
         }
         QuantileModel::Nckqr(f) => {
             pairs.push(("kernel", kernel_to_json(f.kernel())));
-            pairs.push(("x_train", matrix_to_json(f.x_train())));
+            match &f.lowrank {
+                Some(lr) => {
+                    push_lowrank_header(&mut pairs, &lr.z, &lr.landmarks, f.n_train());
+                    pairs.push((
+                        "levels",
+                        Json::Arr(
+                            f.levels
+                                .iter()
+                                .zip(&lr.w)
+                                .map(|(lv, w)| {
+                                    Json::obj(vec![
+                                        ("tau", Json::num(lv.tau)),
+                                        ("b", Json::num(lv.b)),
+                                        ("w", Json::arr_f64(w)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ));
+                }
+                None => {
+                    pairs.push(("x_train", matrix_to_json(f.x_train())));
+                    pairs.push((
+                        "levels",
+                        Json::Arr(
+                            f.levels
+                                .iter()
+                                .map(|lv| {
+                                    Json::obj(vec![
+                                        ("tau", Json::num(lv.tau)),
+                                        ("b", Json::num(lv.b)),
+                                        ("alpha", Json::arr_f64(&lv.alpha)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ));
+                }
+            }
             pairs.push(("taus", Json::arr_f64(&f.taus)));
             pairs.push(("lam1", Json::num(f.lam1)));
             pairs.push(("lam2", Json::num(f.lam2)));
-            pairs.push((
-                "levels",
-                Json::Arr(
-                    f.levels
-                        .iter()
-                        .map(|lv| {
-                            Json::obj(vec![
-                                ("tau", Json::num(lv.tau)),
-                                ("b", Json::num(lv.b)),
-                                ("alpha", Json::arr_f64(&lv.alpha)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ));
             pairs.push(("objective", Json::num(f.objective)));
             pairs.push(("mm_iters", Json::num(f.mm_iters as f64)));
             pairs.push(("gamma_final", Json::num(f.gamma_final)));
@@ -149,13 +259,47 @@ pub fn from_json(v: &Json) -> Result<QuantileModel> {
     }
     let kernel =
         kernel_from_json(v.get("kernel").ok_or_else(|| anyhow!("artifact: missing 'kernel'"))?)?;
-    let x_train = Arc::new(matrix_from_json(
-        v.get("x_train").ok_or_else(|| anyhow!("artifact: missing 'x_train'"))?,
-    )?);
+    // Compressed low-rank documents carry (z, landmarks, n_train) instead
+    // of x_train; dense documents are parsed exactly as before.
+    let lowrank_doc = match v.get_str("repr") {
+        None => false,
+        Some("lowrank") => true,
+        Some(other) => bail!("artifact: unknown repr {other:?}"),
+    };
+    let compressed = if lowrank_doc {
+        let z = Arc::new(matrix_from_json(
+            v.get("z").ok_or_else(|| anyhow!("lowrank artifact: missing 'z'"))?,
+        )?);
+        let landmarks = v
+            .get_usize_arr("landmarks")
+            .ok_or_else(|| anyhow!("lowrank artifact: missing 'landmarks'"))?;
+        if landmarks.len() != z.rows() {
+            bail!("lowrank artifact: {} landmarks for {} z rows", landmarks.len(), z.rows());
+        }
+        let n_train = v
+            .get_usize("n_train")
+            .ok_or_else(|| anyhow!("lowrank artifact: missing 'n_train'"))?;
+        Some((z, landmarks, n_train))
+    } else {
+        None
+    };
+    let dense_x_train = || -> Result<Arc<Matrix>> {
+        Ok(Arc::new(matrix_from_json(
+            v.get("x_train").ok_or_else(|| anyhow!("artifact: missing 'x_train'"))?,
+        )?))
+    };
     match v.get_str("kind") {
         Some("kqr") => {
             let fit = v.get("fit").ok_or_else(|| anyhow!("artifact: missing 'fit'"))?;
-            Ok(QuantileModel::Kqr(kqr_fit_from_json(fit, &x_train, &kernel)?))
+            match &compressed {
+                Some((z, landmarks, n_train)) => Ok(QuantileModel::Kqr(
+                    kqr_fit_from_json_lowrank(fit, z, landmarks, *n_train, &kernel)?,
+                )),
+                None => {
+                    let x_train = dense_x_train()?;
+                    Ok(QuantileModel::Kqr(kqr_fit_from_json(fit, &x_train, &kernel)?))
+                }
+            }
         }
         Some("set") => {
             let fits_json = v
@@ -165,10 +309,19 @@ pub fn from_json(v: &Json) -> Result<QuantileModel> {
             if fits_json.is_empty() {
                 bail!("artifact: empty fit set");
             }
-            let fits: Vec<KqrFit> = fits_json
-                .iter()
-                .map(|f| kqr_fit_from_json(f, &x_train, &kernel))
-                .collect::<Result<_>>()?;
+            let fits: Vec<KqrFit> = match &compressed {
+                Some((z, landmarks, n_train)) => fits_json
+                    .iter()
+                    .map(|f| kqr_fit_from_json_lowrank(f, z, landmarks, *n_train, &kernel))
+                    .collect::<Result<_>>()?,
+                None => {
+                    let x_train = dense_x_train()?;
+                    fits_json
+                        .iter()
+                        .map(|f| kqr_fit_from_json(f, &x_train, &kernel))
+                        .collect::<Result<_>>()?
+                }
+            };
             let shape = shape_from_json(
                 v.get("shape").ok_or_else(|| anyhow!("artifact: missing 'shape'"))?,
             )?;
@@ -189,36 +342,91 @@ pub fn from_json(v: &Json) -> Result<QuantileModel> {
             if levels_json.len() != taus.len() {
                 bail!("artifact: {} levels for {} taus", levels_json.len(), taus.len());
             }
-            let mut levels = Vec::with_capacity(levels_json.len());
-            for lv in levels_json {
-                let alpha = lv
-                    .get_f64_arr_strict("alpha")
-                    .ok_or_else(|| anyhow!("level: missing 'alpha'"))?;
-                if alpha.len() != x_train.rows() {
-                    bail!("level: len(alpha)={} != n_train={}", alpha.len(), x_train.rows());
-                }
-                levels.push(LevelCoef {
-                    tau: lv.get_f64("tau").ok_or_else(|| anyhow!("level: missing 'tau'"))?,
-                    b: lv.get_f64("b").ok_or_else(|| anyhow!("level: missing 'b'"))?,
-                    alpha,
-                });
-            }
             let kkt = KktReport::from_json(
                 v.get("kkt").ok_or_else(|| anyhow!("artifact: missing 'kkt'"))?,
             )?;
-            Ok(QuantileModel::Nckqr(NckqrFit::assemble(
-                taus,
-                v.get_f64("lam1").ok_or_else(|| anyhow!("artifact: missing 'lam1'"))?,
-                v.get_f64("lam2").ok_or_else(|| anyhow!("artifact: missing 'lam2'"))?,
-                levels,
-                v.get_f64("objective").ok_or_else(|| anyhow!("artifact: missing 'objective'"))?,
-                kkt,
-                v.get_usize("mm_iters").unwrap_or(0),
-                v.get_f64("gamma_final").unwrap_or(0.0),
-                v.get_usize("train_crossings").unwrap_or(0),
-                x_train,
-                kernel,
-            )))
+            let lam1 =
+                v.get_f64("lam1").ok_or_else(|| anyhow!("artifact: missing 'lam1'"))?;
+            let lam2 =
+                v.get_f64("lam2").ok_or_else(|| anyhow!("artifact: missing 'lam2'"))?;
+            let objective = v
+                .get_f64("objective")
+                .ok_or_else(|| anyhow!("artifact: missing 'objective'"))?;
+            let mm_iters = v.get_usize("mm_iters").unwrap_or(0);
+            let gamma_final = v.get_f64("gamma_final").unwrap_or(0.0);
+            let train_crossings = v.get_usize("train_crossings").unwrap_or(0);
+            match compressed {
+                Some((z, landmarks, n_train)) => {
+                    let mut levels = Vec::with_capacity(levels_json.len());
+                    let mut ws = Vec::with_capacity(levels_json.len());
+                    for lv in levels_json {
+                        let w = lv
+                            .get_f64_arr_strict("w")
+                            .ok_or_else(|| anyhow!("lowrank level: missing 'w'"))?;
+                        if w.len() != z.rows() {
+                            bail!("lowrank level: len(w)={} != m={}", w.len(), z.rows());
+                        }
+                        levels.push(LevelCoef {
+                            tau: lv
+                                .get_f64("tau")
+                                .ok_or_else(|| anyhow!("level: missing 'tau'"))?,
+                            b: lv.get_f64("b").ok_or_else(|| anyhow!("level: missing 'b'"))?,
+                            alpha: Vec::new(),
+                        });
+                        ws.push(w);
+                    }
+                    Ok(QuantileModel::Nckqr(NckqrFit::assemble_compressed(
+                        taus,
+                        lam1,
+                        lam2,
+                        levels,
+                        objective,
+                        kkt,
+                        mm_iters,
+                        gamma_final,
+                        train_crossings,
+                        n_train,
+                        NcLowRank { z, landmarks, w: ws },
+                        kernel,
+                    )))
+                }
+                None => {
+                    let x_train = dense_x_train()?;
+                    let mut levels = Vec::with_capacity(levels_json.len());
+                    for lv in levels_json {
+                        let alpha = lv
+                            .get_f64_arr_strict("alpha")
+                            .ok_or_else(|| anyhow!("level: missing 'alpha'"))?;
+                        if alpha.len() != x_train.rows() {
+                            bail!(
+                                "level: len(alpha)={} != n_train={}",
+                                alpha.len(),
+                                x_train.rows()
+                            );
+                        }
+                        levels.push(LevelCoef {
+                            tau: lv
+                                .get_f64("tau")
+                                .ok_or_else(|| anyhow!("level: missing 'tau'"))?,
+                            b: lv.get_f64("b").ok_or_else(|| anyhow!("level: missing 'b'"))?,
+                            alpha,
+                        });
+                    }
+                    Ok(QuantileModel::Nckqr(NckqrFit::assemble(
+                        taus,
+                        lam1,
+                        lam2,
+                        levels,
+                        objective,
+                        kkt,
+                        mm_iters,
+                        gamma_final,
+                        train_crossings,
+                        x_train,
+                        kernel,
+                    )))
+                }
+            }
         }
         other => bail!("artifact: unknown kind {other:?}"),
     }

@@ -12,9 +12,11 @@
 //! kernel) fingerprint per process.
 //!
 //! ```text
-//!   FitSpec { x, y, kernel, task, opts?, nc_opts?, lockstep?, backend? }
-//!     task ∈ Single{τ,λ} | Path{τ,λs} | Grid{τs,λs}
-//!          | NonCrossing{τs,λ₁,λ₂} | Cv{τs,λs,folds,seed}
+//!   FitSpec { x, y, kernel(+approx), task, opts?, nc_opts?, lockstep?,
+//!             backend?, seed }
+//!     task   ∈ Single{τ,λ} | Path{τ,λs} | Grid{τs,λs}
+//!            | NonCrossing{τs,λ₁,λ₂} | Cv{τs,λs,folds,seed}
+//!     approx ∈ exact | nystrom{m, seed}      (Gram representation)
 //!        │  FitEngine::run(&spec)
 //!        ▼
 //!   QuantileModel (predict / taus / diagnostics / save / load)
@@ -33,7 +35,7 @@ pub use model::{CvSummary, ModelSet, QuantileModel, SetShape};
 use crate::backend::{Backend, NativeBackend};
 use crate::cv::cross_validate_on;
 use crate::data::{Dataset, Rng};
-use crate::engine::FitEngine;
+use crate::engine::{ApproxSpec, FitEngine};
 use crate::kernel::{median_heuristic_sigma, Kernel};
 use crate::kqr::apgd::ApgdState;
 use crate::kqr::SolveOptions;
@@ -42,9 +44,19 @@ use crate::nckqr::NcOptions;
 use crate::util::Json;
 use anyhow::{anyhow, bail, Result};
 
-/// Spec document version written by [`FitSpec::to_json`]; readers accept
-/// anything ≤ this.
-pub const SPEC_VERSION: u64 = 1;
+/// Highest spec document version this build reads. [`FitSpec::to_json`]
+/// writes the **lowest** version that can represent the document — 1 for
+/// exact specs (older readers keep working), 2 once the kernel carries an
+/// `approx` (Nyström) block, which older readers must reject rather than
+/// silently fit exactly.
+pub const SPEC_VERSION: u64 = 2;
+
+/// Default master seed of a spec (`"seed"`): drives Nyström landmark
+/// sampling when the `approx` block carries no seed of its own, and is
+/// the documented default for CV fold shuffling (`task.seed`). Pinning it
+/// in the document makes every randomized choice reproducible from the
+/// spec alone.
+pub const DEFAULT_SEED: u64 = 2024;
 
 // ---------------------------------------------------------------------------
 // Matrix JSON helpers (shared by specs, artifacts and the wire protocol)
@@ -192,6 +204,64 @@ pub fn kernel_from_json(v: &Json) -> Result<Kernel> {
         KernelSpec::Polynomial { gamma, c, degree } => {
             Ok(Kernel::Polynomial { gamma, c, degree })
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Approximation spec (the kernel object's `approx` block)
+// ---------------------------------------------------------------------------
+
+/// Serialize an [`ApproxSpec`] (the kernel object's `approx` block).
+/// `Exact` is the implicit default and is not written.
+pub fn approx_to_json(a: &ApproxSpec) -> Option<Json> {
+    match a {
+        ApproxSpec::Exact => None,
+        ApproxSpec::Nystrom { m, seed } => Some(Json::obj(vec![
+            ("type", Json::str("nystrom")),
+            ("m", Json::num(*m as f64)),
+            ("seed", Json::num(*seed as f64)),
+        ])),
+    }
+}
+
+/// Parse the kernel object's `approx` block. Unknown keys are errors —
+/// a typo'd `"m"` silently ignored would fit a different model. A
+/// `nystrom` block without a seed inherits `default_seed` (the spec's
+/// master seed).
+pub fn approx_from_json(v: &Json, default_seed: u64) -> Result<ApproxSpec> {
+    let Json::Obj(map) = v else { bail!("approx must be an object") };
+    let ty = v.get_str("type").ok_or_else(|| anyhow!("approx: missing 'type'"))?;
+    match ty {
+        "exact" => {
+            for key in map.keys() {
+                if key != "type" {
+                    bail!("approx: unknown key {key:?} for type \"exact\"");
+                }
+            }
+            Ok(ApproxSpec::Exact)
+        }
+        "nystrom" => {
+            for key in map.keys() {
+                if !["type", "m", "seed"].contains(&key.as_str()) {
+                    bail!("approx: unknown key {key:?} (have: type, m, seed)");
+                }
+            }
+            let m = v
+                .get_usize("m")
+                .ok_or_else(|| anyhow!("approx: nystrom needs a positive integer 'm'"))?;
+            if m == 0 {
+                bail!("approx: nystrom needs m >= 1");
+            }
+            let seed = match v.get("seed") {
+                None => default_seed,
+                Some(_) => v
+                    .get_usize("seed")
+                    .ok_or_else(|| anyhow!("approx: seed must be a non-negative integer"))?
+                    as u64,
+            };
+            Ok(ApproxSpec::Nystrom { m, seed })
+        }
+        other => bail!("unknown approx type {other:?} (exact|nystrom)"),
     }
 }
 
@@ -365,6 +435,13 @@ impl Task {
     }
 
     pub fn from_json(v: &Json) -> Result<Task> {
+        Task::from_json_seeded(v, DEFAULT_SEED)
+    }
+
+    /// [`Task::from_json`] with an explicit default for `cv.seed` — the
+    /// spec's master seed, so one `"seed"` at the top of the document
+    /// pins both landmark sampling and fold shuffling.
+    pub fn from_json_seeded(v: &Json, default_seed: u64) -> Result<Task> {
         let ty = v.get_str("type").ok_or_else(|| anyhow!("task: missing 'type'"))?;
         let f = |key: &str| v.get_f64(key).ok_or_else(|| anyhow!("task: missing number {key:?}"));
         let fs = |key: &str| {
@@ -391,7 +468,7 @@ impl Task {
                         .ok_or_else(|| anyhow!("task: folds must be a non-negative integer"))?,
                 };
                 let seed = match v.get("seed") {
-                    None => 2024,
+                    None => default_seed,
                     Some(_) => v
                         .get_usize("seed")
                         .ok_or_else(|| anyhow!("task: seed must be a non-negative integer"))?
@@ -414,6 +491,10 @@ pub struct FitSpec {
     pub x: Matrix,
     pub y: Vec<f64>,
     pub kernel: KernelSpec,
+    /// Gram representation: exact (default, the bitwise oracle) or a
+    /// rank-m Nyström thin factor. Serialized as the kernel object's
+    /// `approx` block.
+    pub approx: ApproxSpec,
     pub task: Task,
     /// KQR solver overrides; `None` → the executing engine's defaults.
     pub opts: Option<SolveOptions>,
@@ -425,11 +506,26 @@ pub struct FitSpec {
     /// APGD backend hint for Single/Path tasks: `"native"` (default) or
     /// `"xla"` (requires the `xla` cargo feature at runtime).
     pub backend: Option<String>,
+    /// Master seed (`"seed"`, default [`DEFAULT_SEED`]): the default for
+    /// Nyström landmark sampling and CV fold shuffling, so a spec
+    /// document alone reproduces every randomized choice.
+    pub seed: u64,
 }
 
 impl FitSpec {
     pub fn new(x: Matrix, y: Vec<f64>, kernel: KernelSpec, task: Task) -> FitSpec {
-        FitSpec { x, y, kernel, task, opts: None, nc_opts: None, lockstep: None, backend: None }
+        FitSpec {
+            x,
+            y,
+            kernel,
+            approx: ApproxSpec::Exact,
+            task,
+            opts: None,
+            nc_opts: None,
+            lockstep: None,
+            backend: None,
+            seed: DEFAULT_SEED,
+        }
     }
 
     pub fn single(x: Matrix, y: Vec<f64>, kernel: KernelSpec, tau: f64, lambda: f64) -> FitSpec {
@@ -493,6 +589,18 @@ impl FitSpec {
         self
     }
 
+    /// Select the Gram representation (e.g. `ApproxSpec::Nystrom`).
+    pub fn with_approx(mut self, approx: ApproxSpec) -> FitSpec {
+        self.approx = approx;
+        self
+    }
+
+    /// Pin the spec's master seed (see [`FitSpec::seed`]).
+    pub fn with_seed(mut self, seed: u64) -> FitSpec {
+        self.seed = seed;
+        self
+    }
+
     /// Structural validation (shape + non-empty axes). Numeric validity
     /// (τ ∈ (0,1), λ > 0, fold counts) is enforced by the solvers, which
     /// already error rather than panic on bad values.
@@ -502,6 +610,41 @@ impl FitSpec {
         }
         if self.y.len() != self.x.rows() {
             bail!("spec: len(y)={} != rows(x)={}", self.y.len(), self.x.rows());
+        }
+        // Seeds travel through JSON numbers (f64): anything above 2^53
+        // would silently round on round-trip, breaking the
+        // reproducibility-from-document guarantee the field exists for.
+        const SEED_MAX: u64 = 1 << 53;
+        if self.seed > SEED_MAX {
+            bail!("spec: seed must be <= 2^53 for exact JSON round-trip, got {}", self.seed);
+        }
+        if let ApproxSpec::Nystrom { m, seed } = self.approx {
+            if m == 0 || m > self.x.rows() {
+                bail!("spec: nystrom needs 0 < m <= n (m={m}, n={})", self.x.rows());
+            }
+            if seed > SEED_MAX {
+                bail!("spec: nystrom seed must be <= 2^53 for exact JSON round-trip");
+            }
+            // CV fits each fold on ~n(k-1)/k rows: m must fit the
+            // smallest fold-training set, not just the full data, or the
+            // task errors confusingly mid-run inside nystrom().
+            if let Task::Cv { folds, .. } = &self.task {
+                if *folds >= 2 {
+                    let n = self.x.rows();
+                    let min_train = n - (n + *folds - 1) / *folds;
+                    if m > min_train {
+                        bail!(
+                            "spec: nystrom m={m} exceeds the smallest CV fold \
+                             training size {min_train} (n={n}, folds={folds})"
+                        );
+                    }
+                }
+            }
+        }
+        if let Task::Cv { seed, .. } = &self.task {
+            if *seed > SEED_MAX {
+                bail!("spec: cv seed must be <= 2^53 for exact JSON round-trip");
+            }
         }
         match &self.task {
             Task::Path { lambdas, .. } if lambdas.is_empty() => bail!("spec: empty lambdas"),
@@ -517,12 +660,21 @@ impl FitSpec {
     }
 
     pub fn to_json(&self) -> Json {
+        let mut kernel_json = self.kernel.to_json();
+        if let Some(a) = approx_to_json(&self.approx) {
+            if let Json::Obj(map) = &mut kernel_json {
+                map.insert("approx".into(), a);
+            }
+        }
+        // Lowest version that represents the document (see SPEC_VERSION).
+        let version: u64 = if matches!(self.approx, ApproxSpec::Nystrom { .. }) { 2 } else { 1 };
         let mut pairs = vec![
-            ("version", Json::num(SPEC_VERSION as f64)),
-            ("kernel", self.kernel.to_json()),
+            ("version", Json::num(version as f64)),
+            ("kernel", kernel_json),
             ("task", self.task.to_json()),
             ("x", matrix_to_json(&self.x)),
             ("y", Json::arr_f64(&self.y)),
+            ("seed", Json::num(self.seed as f64)),
         ];
         if let Some(o) = &self.opts {
             pairs.push(("opts", solve_options_to_json(o)));
@@ -548,11 +700,27 @@ impl FitSpec {
         let y = v
             .get_f64_arr_strict("y")
             .ok_or_else(|| anyhow!("spec: 'y' must be a numeric array"))?;
-        let kernel = match v.get("kernel") {
-            None => KernelSpec::Auto,
-            Some(k) => KernelSpec::from_json(k)?,
+        let seed = match v.get("seed") {
+            None => DEFAULT_SEED,
+            Some(_) => v
+                .get_usize("seed")
+                .ok_or_else(|| anyhow!("spec: seed must be a non-negative integer"))?
+                as u64,
         };
-        let task = Task::from_json(v.get("task").ok_or_else(|| anyhow!("spec: missing 'task'"))?)?;
+        let (kernel, approx) = match v.get("kernel") {
+            None => (KernelSpec::Auto, ApproxSpec::Exact),
+            Some(k) => {
+                let approx = match k.get("approx") {
+                    None => ApproxSpec::Exact,
+                    Some(a) => approx_from_json(a, seed)?,
+                };
+                (KernelSpec::from_json(k)?, approx)
+            }
+        };
+        let task = Task::from_json_seeded(
+            v.get("task").ok_or_else(|| anyhow!("spec: missing 'task'"))?,
+            seed,
+        )?;
         let opts = match v.get("opts") {
             None => None,
             Some(o) => Some(solve_options_from_json(o, SolveOptions::default())?),
@@ -566,7 +734,8 @@ impl FitSpec {
             Some(l) => Some(l.as_bool().ok_or_else(|| anyhow!("spec: lockstep must be a bool"))?),
         };
         let backend = v.get_str("backend").map(String::from);
-        let spec = FitSpec { x, y, kernel, task, opts, nc_opts, lockstep, backend };
+        let spec =
+            FitSpec { x, y, kernel, approx, task, opts, nc_opts, lockstep, backend, seed };
         spec.validate()?;
         Ok(spec)
     }
@@ -598,17 +767,21 @@ impl FitEngine {
     pub fn run(&self, spec: &FitSpec) -> Result<QuantileModel> {
         spec.validate()?;
         let kernel = spec.kernel.resolve(&spec.x);
+        let approx = spec.approx;
+        if approx != ApproxSpec::Exact && matches!(spec.backend.as_deref(), Some("xla")) {
+            bail!("the xla backend does not support low-rank (Nyström) bases; use native");
+        }
         let opts = spec.opts.clone().unwrap_or_else(|| self.config.opts.clone());
         match &spec.task {
             Task::Single { tau, lambda } => {
-                let solver = self.solver_with_options(&spec.x, &spec.y, &kernel, opts)?;
+                let solver = self.solver_approx(&spec.x, &spec.y, &kernel, approx, opts)?;
                 let mut backend = backend_for(spec.backend.as_deref())?;
-                let mut state = ApgdState::zeros(solver.n());
+                let mut state = ApgdState::zeros(solver.state_dim());
                 let fit = solver.fit_warm(*tau, *lambda, &mut state, backend.as_mut())?;
                 Ok(QuantileModel::Kqr(fit))
             }
             Task::Path { tau, lambdas } => {
-                let solver = self.solver_with_options(&spec.x, &spec.y, &kernel, opts)?;
+                let solver = self.solver_approx(&spec.x, &spec.y, &kernel, approx, opts)?;
                 let mut backend = backend_for(spec.backend.as_deref())?;
                 let fits = solver.fit_path_with_backend(*tau, lambdas, backend.as_mut())?;
                 Ok(QuantileModel::Set(ModelSet {
@@ -625,6 +798,7 @@ impl FitEngine {
                     &kernel,
                     taus,
                     lambdas,
+                    approx,
                     spec.lockstep,
                     spec.opts.clone(),
                 )?;
@@ -632,8 +806,9 @@ impl FitEngine {
             }
             Task::NonCrossing { taus, lam1, lam2 } => {
                 let nc_opts = spec.nc_opts.clone().unwrap_or_default();
-                let solver =
-                    self.nc_solver_with_options(&spec.x, &spec.y, &kernel, taus, nc_opts)?;
+                let solver = self.nc_solver_approx_with_options(
+                    &spec.x, &spec.y, &kernel, taus, approx, nc_opts,
+                )?;
                 let fit = solver.fit(*lam1, *lam2)?;
                 Ok(QuantileModel::Nckqr(fit))
             }
@@ -647,7 +822,7 @@ impl FitEngine {
                     // losses are comparable across τ.
                     let mut rng = Rng::new(*seed);
                     let res = cross_validate_on(
-                        self, &data, &kernel, tau, lambdas, *folds, &opts, &mut rng,
+                        self, &data, &kernel, tau, lambdas, *folds, &opts, approx, &mut rng,
                     )?;
                     let refit = res
                         .refit
@@ -732,6 +907,52 @@ mod tests {
                 "task":{"type":"single","tau":0.5,"lambda":0.1}}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn nystrom_spec_roundtrips_versions_and_runs() {
+        let ny = ApproxSpec::Nystrom { m: 10, seed: 7 };
+        let spec = toy_spec(Task::Single { tau: 0.5, lambda: 0.05 }).with_approx(ny).with_seed(7);
+        // version bump rules: exact specs stay v1, nystrom specs write v2
+        assert_eq!(spec.to_json().get_usize("version"), Some(2));
+        assert_eq!(
+            toy_spec(Task::Single { tau: 0.5, lambda: 0.05 }).to_json().get_usize("version"),
+            Some(1)
+        );
+        let s1 = spec.to_json().to_string();
+        let back = FitSpec::parse(&s1).unwrap();
+        assert_eq!(back.approx, ny);
+        assert_eq!(back.seed, 7);
+        assert_eq!(back.to_json().to_string(), s1, "to_json∘from_json identity");
+        // approx seed defaults to the spec's master seed
+        let doc = r#"{"x":[[1],[2],[3]],"y":[1,2,3],"seed":99,
+            "kernel":{"type":"rbf","sigma":0.5,"approx":{"type":"nystrom","m":2}},
+            "task":{"type":"single","tau":0.5,"lambda":0.1}}"#
+            .replace('\n', " ");
+        let parsed = FitSpec::parse(&doc).unwrap();
+        assert_eq!(parsed.approx, ApproxSpec::Nystrom { m: 2, seed: 99 });
+        // unknown approx keys / bad m are rejected loudly
+        assert!(FitSpec::parse(
+            r#"{"x":[[1],[2]],"y":[1,2],
+                "kernel":{"approx":{"type":"nystrom","m":1,"mm":3}},
+                "task":{"type":"single","tau":0.5,"lambda":0.1}}"#
+        )
+        .is_err());
+        assert!(FitSpec::parse(
+            r#"{"x":[[1],[2]],"y":[1,2],
+                "kernel":{"approx":{"type":"nystrom","m":9}},
+                "task":{"type":"single","tau":0.5,"lambda":0.1}}"#
+        )
+        .is_err(), "m > n must be rejected");
+        // and the spec executes on the thin basis end-to-end
+        let engine = FitEngine::new();
+        let model = engine.run(&spec).unwrap();
+        match &model {
+            QuantileModel::Kqr(f) => {
+                assert!(f.lowrank.is_some(), "low-rank fit carries the compressed predictor")
+            }
+            other => panic!("expected Kqr model, got {}", other.kind()),
+        }
     }
 
     #[test]

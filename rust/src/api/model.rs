@@ -112,11 +112,17 @@ impl QuantileModel {
 
     /// Predict at the rows of `xt`: one output row per quantile level
     /// (KQR: one; NCKQR: one per τ level; sets: one per fit).
+    ///
+    /// Sets are **batched**: fits sharing one predictor basis (the
+    /// `Arc`'d training inputs, or the landmark set for low-rank fits)
+    /// get one cross-Gram + one multi-RHS GEMM for the whole group
+    /// instead of per-fit kernel evaluations; each row stays bitwise
+    /// equal to the per-fit `KqrFit::predict` path.
     pub fn predict(&self, xt: &Matrix) -> Vec<Vec<f64>> {
         match self {
             QuantileModel::Kqr(f) => vec![f.predict(xt)],
             QuantileModel::Nckqr(f) => f.predict(xt),
-            QuantileModel::Set(s) => s.fits.iter().map(|f| f.predict(xt)).collect(),
+            QuantileModel::Set(s) => predict_set(&s.fits, xt),
         }
     }
 
@@ -150,7 +156,7 @@ impl QuantileModel {
     pub fn n_train(&self) -> usize {
         match self {
             QuantileModel::Kqr(f) => f.n_train(),
-            QuantileModel::Nckqr(f) => f.x_train().rows(),
+            QuantileModel::Nckqr(f) => f.n_train(),
             QuantileModel::Set(s) => s.fits.first().map(|f| f.n_train()).unwrap_or(0),
         }
     }
@@ -186,30 +192,42 @@ impl QuantileModel {
     /// response and the CLI).
     pub fn diagnostics(&self) -> Json {
         match self {
-            QuantileModel::Kqr(f) => Json::obj(vec![
-                ("kind", Json::str("kqr")),
-                ("n_train", Json::num(f.n_train() as f64)),
-                ("tau", Json::num(f.tau)),
-                ("lambda", Json::num(f.lam)),
-                ("objective", Json::num(f.objective)),
-                ("apgd_iters", Json::num(f.apgd_iters as f64)),
-                ("expansions", Json::num(f.expansions as f64)),
-                ("gamma_final", Json::num(f.gamma_final)),
-                ("singular_set_size", Json::num(f.singular_set.len() as f64)),
-                ("kkt", f.kkt.to_json()),
-            ]),
-            QuantileModel::Nckqr(f) => Json::obj(vec![
-                ("kind", Json::str("nckqr")),
-                ("n_train", Json::num(f.x_train().rows() as f64)),
-                ("taus", Json::arr_f64(&f.taus)),
-                ("lam1", Json::num(f.lam1)),
-                ("lam2", Json::num(f.lam2)),
-                ("objective", Json::num(f.objective)),
-                ("mm_iters", Json::num(f.mm_iters as f64)),
-                ("gamma_final", Json::num(f.gamma_final)),
-                ("train_crossings", Json::num(f.train_crossings as f64)),
-                ("kkt", f.kkt.to_json()),
-            ]),
+            QuantileModel::Kqr(f) => {
+                let mut pairs = vec![
+                    ("kind", Json::str("kqr")),
+                    ("n_train", Json::num(f.n_train() as f64)),
+                    ("tau", Json::num(f.tau)),
+                    ("lambda", Json::num(f.lam)),
+                    ("objective", Json::num(f.objective)),
+                    ("apgd_iters", Json::num(f.apgd_iters as f64)),
+                    ("expansions", Json::num(f.expansions as f64)),
+                    ("gamma_final", Json::num(f.gamma_final)),
+                    ("singular_set_size", Json::num(f.singular_set.len() as f64)),
+                    ("kkt", f.kkt.to_json()),
+                ];
+                if let Some(lr) = &f.lowrank {
+                    pairs.push(("lowrank_m", Json::num(lr.w.len() as f64)));
+                }
+                Json::obj(pairs)
+            }
+            QuantileModel::Nckqr(f) => {
+                let mut pairs = vec![
+                    ("kind", Json::str("nckqr")),
+                    ("n_train", Json::num(f.n_train() as f64)),
+                    ("taus", Json::arr_f64(&f.taus)),
+                    ("lam1", Json::num(f.lam1)),
+                    ("lam2", Json::num(f.lam2)),
+                    ("objective", Json::num(f.objective)),
+                    ("mm_iters", Json::num(f.mm_iters as f64)),
+                    ("gamma_final", Json::num(f.gamma_final)),
+                    ("train_crossings", Json::num(f.train_crossings as f64)),
+                    ("kkt", f.kkt.to_json()),
+                ];
+                if let Some(lr) = &f.lowrank {
+                    pairs.push(("lowrank_m", Json::num(lr.landmarks.len() as f64)));
+                }
+                Json::obj(pairs)
+            }
             QuantileModel::Set(s) => {
                 let mut pairs = vec![
                     ("kind", Json::str("set")),
@@ -281,6 +299,46 @@ pub(super) fn shape_to_json(shape: &SetShape) -> Json {
             ("seed", Json::num(*seed as f64)),
         ]),
     }
+}
+
+/// Batched set prediction: group adjacent fits that share one predictor
+/// basis (same `Arc`'d x_train / landmark set + same kernel) and run one
+/// cross-Gram + one multi-RHS GEMM per group (`kqr::predict_rows`).
+fn predict_set(fits: &[KqrFit], xt: &Matrix) -> Vec<Vec<f64>> {
+    fn same_group(a: &KqrFit, b: &KqrFit) -> bool {
+        if a.kernel() != b.kernel() {
+            return false;
+        }
+        match (&a.lowrank, &b.lowrank) {
+            (None, None) => std::ptr::eq(a.x_train(), b.x_train()),
+            (Some(la), Some(lb)) => std::sync::Arc::ptr_eq(&la.z, &lb.z),
+            _ => false,
+        }
+    }
+    let mut out: Vec<Vec<f64>> = Vec::with_capacity(fits.len());
+    let mut i = 0;
+    while i < fits.len() {
+        let mut j = i + 1;
+        while j < fits.len() && same_group(&fits[i], &fits[j]) {
+            j += 1;
+        }
+        let group = &fits[i..j];
+        let head = &group[0];
+        let (cg, coefs): (Matrix, Vec<&[f64]>) = match &head.lowrank {
+            Some(lr) => (
+                head.kernel().cross_gram(xt, &lr.z),
+                group.iter().map(|f| f.lowrank.as_ref().unwrap().w.as_slice()).collect(),
+            ),
+            None => (
+                head.kernel().cross_gram(xt, head.x_train()),
+                group.iter().map(|f| f.alpha.as_slice()).collect(),
+            ),
+        };
+        let bs: Vec<f64> = group.iter().map(|f| f.b).collect();
+        out.extend(crate::kqr::predict_rows(&coefs, &bs, &cg));
+        i = j;
+    }
+    out
 }
 
 pub(super) fn shape_from_json(v: &Json) -> Result<SetShape> {

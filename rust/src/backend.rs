@@ -66,9 +66,9 @@ impl Backend for NativeBackend {
         state: &mut ApgdState,
         iters: usize,
     ) -> f64 {
-        let n = basis.n;
-        if self.ws.as_ref().map(|w| w.f.len()) != Some(n) {
-            self.ws = Some(ApgdWorkspace::new(n));
+        let (n, dim) = (basis.n, basis.dim());
+        if self.ws.as_ref().map(|w| (w.f.len(), w.t.len())) != Some((n, dim)) {
+            self.ws = Some(ApgdWorkspace::with_dims(n, dim));
         }
         run_chunk_native(basis, plan, y, tau, state, self.ws.as_mut().unwrap(), iters)
     }

@@ -196,7 +196,7 @@ mod tests {
         for (tau, lam) in [(0.5, 0.05), (0.1, 0.01), (0.9, 0.2)] {
             let fast = solver.fit(tau, lam).unwrap();
             let ipm =
-                solve_kqr_ipm(&solver.gram, &d.y, tau, lam, &IpmOptions::default()).unwrap();
+                solve_kqr_ipm(solver.gram(), &d.y, tau, lam, &IpmOptions::default()).unwrap();
             let rel = (fast.objective - ipm.objective).abs() / (1.0 + fast.objective);
             assert!(
                 rel < 5e-4,

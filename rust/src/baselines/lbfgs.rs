@@ -250,7 +250,7 @@ mod tests {
         let kernel = Kernel::Rbf { sigma };
         let solver = KqrSolver::new(&d.x, &d.y, kernel).unwrap();
         let fast = solver.fit(0.5, 0.05).unwrap();
-        let slow = solve_kqr_lbfgs(&solver.gram, &d.y, 0.5, 0.05, 3000).unwrap();
+        let slow = solve_kqr_lbfgs(solver.gram(), &d.y, 0.5, 0.05, 3000).unwrap();
         // nlm-class solvers land close but (slightly) above the exact optimum
         assert!(slow.objective >= fast.objective - 1e-6);
         assert!(

@@ -153,7 +153,7 @@ mod tests {
         let kernel = Kernel::Rbf { sigma: 0.5 };
         let solver = KqrSolver::new(&d.x, &d.y, kernel).unwrap();
         let fast = solver.fit(0.5, 0.05).unwrap();
-        let nm = solve_kqr_nelder_mead(&solver.gram, &d.y, 0.5, 0.05, 20_000).unwrap();
+        let nm = solve_kqr_nelder_mead(solver.gram(), &d.y, 0.5, 0.05, 20_000).unwrap();
         assert!(nm.objective.is_finite());
         // NM never beats the exact solver, and typically trails it
         assert!(nm.objective >= fast.objective - 1e-8);

@@ -218,7 +218,7 @@ mod tests {
         let nc = NckqrSolver::new(&d.x, &d.y, kernel, &taus).unwrap();
         let exact = nc.fit(1.0, 0.1).unwrap();
         let prox =
-            solve_nckqr_proximal(&nc.gram, &d.y, &taus, 1.0, 0.1, 200_000, 1e-7).unwrap();
+            solve_nckqr_proximal(nc.gram(), &d.y, &taus, 1.0, 0.1, 200_000, 1e-7).unwrap();
         // generic solver never beats the exact objective, lands near it
         assert!(prox.objective >= exact.objective - 1e-6);
         assert!(

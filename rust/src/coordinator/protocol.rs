@@ -9,15 +9,15 @@
 //! | cmd | fields | response |
 //! |---|---|---|
 //! | `ping` | — | `{"ok":true,"pong":true,"version":…}` |
-//! | `fit` | `spec` (a full [`FitSpec`] document: kernel + task `single`/`path`/`grid`/`noncrossing`/`cv` + option overrides), **or** the legacy flat form `x`, `y`, `tau`, `lambda`, optional `kernel` | `{"ok":true,"model":"m0","kind":…,"taus":[…],"objective":…,"kkt_pass":…,"diagnostics":{…}}` plus `apgd_iters` (kqr) / `crossings` (nckqr) / `count` (set) |
+//! | `fit` | `spec` (a full [`FitSpec`] document: kernel — optionally with an `approx` block `{"type":"nystrom","m":…,"seed":…}` selecting the low-rank Nyström representation — + task `single`/`path`/`grid`/`noncrossing`/`cv` + option overrides + top-level `seed`), **or** the legacy flat form `x`, `y`, `tau`, `lambda`, optional `kernel` | `{"ok":true,"model":"m0","kind":…,"taus":[…],"objective":…,"kkt_pass":…,"diagnostics":{…}}` plus `apgd_iters` (kqr) / `crossings` (nckqr) / `count` (set) |
 //! | `fit_nc` | legacy flat non-crossing form: `x`, `y`, `taus`, `lam1`, `lam2`, optional `kernel` | as `fit` (kind `nckqr`) |
 //! | `predict` | `model`, `x` | `{"ok":true,"taus":[…],"pred":[[…]…]}` |
-//! | `save` | `model`, optional `name` (single path component; the artifact lands in the registry's persistence dir — wire clients can never address arbitrary server paths) | `{"ok":true,"path":…}` |
+//! | `save` | `model`, optional `name` (single path component; the artifact lands in the registry's persistence dir — wire clients can never address arbitrary server paths) | `{"ok":true,"path":…}`, plus `warning` when this model's earlier write-through persistence had failed |
 //! | `load` | `name` of an artifact in the persistence dir | `{"ok":true,"model":…,"kind":…,"taus":[…]}` |
 //! | `export` | `model` | `{"ok":true,"model":…,"artifact":{…}}` (inline artifact document) |
 //! | `models` | — | `{"ok":true,"models":[…]}` |
 //! | `drop` | `model` | `{"ok":true}` (also removes the persisted artifact) |
-//! | `metrics` | — | counter object incl. `gram_cache_*` |
+//! | `metrics` | — | counter object incl. `gram_cache_*` and `persist_errors` (failed registry write-throughs) |
 //!
 //! Kernel spec: `{"type":"rbf","sigma":σ}` (σ omitted → median
 //! heuristic), `"auto"`, `"linear"`, `"polynomial"`, `"laplacian"` — see
@@ -152,6 +152,10 @@ fn dispatch(state: &ProtocolState, req: &Json) -> Result<Json> {
                     "gram_cache_decompositions".into(),
                     Json::num(CacheMetrics::get(&c.decompositions) as f64),
                 );
+                map.insert(
+                    "persist_errors".into(),
+                    Json::num(state.registry.persist_errors() as f64),
+                );
             }
             Ok(m)
         }
@@ -200,10 +204,24 @@ fn dispatch(state: &ProtocolState, req: &Json) -> Result<Json> {
                 Some(name) => state.registry.persist_as(id, name)?,
                 None => state.registry.persist(id)?,
             };
-            Ok(Json::obj(vec![
+            let mut pairs = vec![
                 ("ok", Json::Bool(true)),
                 ("path", Json::str(path.display().to_string())),
-            ]))
+            ];
+            // An earlier write-through of this model failed silently (it
+            // only went to stderr at insert time); now that a checked
+            // persist succeeded, surface it so the client knows the
+            // artifact was missing until this call.
+            if let Some(msg) = state.registry.take_persist_failure(id) {
+                pairs.push((
+                    "warning",
+                    Json::str(format!(
+                        "write-through persistence of {id} had failed ({msg}); \
+                         the artifact exists only as of this save"
+                    )),
+                ));
+            }
+            Ok(Json::obj(pairs))
         }
         "load" => {
             let name = req.get_str("name").ok_or_else(|| anyhow!("missing 'name'"))?;
@@ -360,6 +378,27 @@ mod tests {
         assert_eq!(art.get_str("format"), Some("fastkqr.model"));
         let back = QuantileModel::from_artifact(art).unwrap();
         assert_eq!(back.n_levels(), 4);
+    }
+
+    #[test]
+    fn nystrom_spec_fits_over_the_wire() {
+        let st = state();
+        let req = r#"{"cmd":"fit","spec":{
+            "x":[[0.0],[0.2],[0.4],[0.6],[0.8],[1.0],[0.1],[0.9],[0.3],[0.7]],
+            "y":[0.0,0.6,0.9,0.9,0.6,0.0,0.3,0.3,0.8,0.8],
+            "kernel":{"type":"rbf","sigma":0.4,
+                      "approx":{"type":"nystrom","m":6,"seed":11}},
+            "task":{"type":"single","tau":0.5,"lambda":0.01}}}"#
+            .replace('\n', " ");
+        let r = handle_line(&st, &req);
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{}", r.to_string());
+        assert_eq!(r.get("diagnostics").and_then(|d| d.get_f64("lowrank_m")), Some(6.0));
+        let id = r.get_str("model").unwrap().to_string();
+        let pr = handle_line(&st, &format!(r#"{{"cmd":"predict","model":"{id}","x":[[0.5]]}}"#));
+        assert_eq!(pr.get("ok").and_then(Json::as_bool), Some(true));
+        // metrics reports the persistence-failure counter (0 here)
+        let m = handle_line(&st, r#"{"cmd":"metrics"}"#);
+        assert_eq!(m.get_f64("persist_errors"), Some(0.0));
     }
 
     #[test]

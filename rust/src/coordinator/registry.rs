@@ -13,6 +13,15 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
+/// Tracking for write-through persistence failures: the total counter is
+/// surfaced by the protocol's `metrics` command, and the per-model
+/// messages become `warning` fields on a later successful `save`.
+#[derive(Debug, Default)]
+struct PersistFailures {
+    total: AtomicU64,
+    by_id: RwLock<HashMap<String, String>>,
+}
+
 /// Historical name for the registry's stored value: the registry now
 /// stores the unified model facade directly (`StoredModel::Kqr(fit)`
 /// still constructs, via the [`QuantileModel`] variants).
@@ -25,6 +34,8 @@ pub struct ModelRegistry {
     next_id: AtomicU64,
     /// When set, inserts are mirrored to `<dir>/<id>.json` artifacts.
     persist_dir: Option<PathBuf>,
+    /// Write-through failures (see [`ModelRegistry::persist_errors`]).
+    failures: PersistFailures,
 }
 
 impl ModelRegistry {
@@ -66,6 +77,7 @@ impl ModelRegistry {
             models: RwLock::new(models),
             next_id: AtomicU64::new(max_seq.map_or(0, |m| m + 1)),
             persist_dir: Some(dir),
+            failures: PersistFailures::default(),
         })
     }
 
@@ -76,9 +88,10 @@ impl ModelRegistry {
 
     /// Insert, returning the generated id (`m<seq>`). With persistence
     /// configured the artifact is written through; a failed write keeps
-    /// the model serving in memory but is reported unconditionally on
-    /// stderr (a full disk must not be silent — use
-    /// [`ModelRegistry::persist`] for a checked write).
+    /// the model serving in memory, is reported on stderr, **counted**
+    /// (`persist_errors`, surfaced by the protocol's `metrics` command)
+    /// and **remembered per id** so a later successful `save` of the same
+    /// model carries a warning instead of looking like nothing happened.
     pub fn insert(&self, model: StoredModel) -> String {
         let id = format!("m{}", self.next_id.fetch_add(1, Ordering::Relaxed));
         if let Some(dir) = &self.persist_dir {
@@ -88,10 +101,23 @@ impl ModelRegistry {
                      the model is served from memory only and will NOT survive a restart",
                     dir.display()
                 );
+                self.failures.total.fetch_add(1, Ordering::Relaxed);
+                self.failures.by_id.write().unwrap().insert(id.clone(), format!("{e:#}"));
             }
         }
         self.models.write().unwrap().insert(id.clone(), model);
         id
+    }
+
+    /// Total write-through persistence failures since construction.
+    pub fn persist_errors(&self) -> u64 {
+        self.failures.total.load(Ordering::Relaxed)
+    }
+
+    /// Take (and clear) the recorded write-through failure for `id`, if
+    /// any — called after a successful checked persist of that model.
+    pub fn take_persist_failure(&self, id: &str) -> Option<String> {
+        self.failures.by_id.write().unwrap().remove(id)
     }
 
     /// Validate an artifact name from an untrusted source (the wire
@@ -159,6 +185,7 @@ impl ModelRegistry {
     pub fn remove(&self, id: &str) -> bool {
         let removed = self.models.write().unwrap().remove(id).is_some();
         if removed {
+            self.failures.by_id.write().unwrap().remove(id);
             if let Some(dir) = &self.persist_dir {
                 let _ = std::fs::remove_file(dir.join(format!("{id}.json")));
             }
@@ -226,6 +253,37 @@ mod tests {
         let b = reg.insert(StoredModel::Kqr(fit));
         assert_ne!(a, b);
         assert_eq!(reg.list().len(), 2);
+    }
+
+    #[test]
+    fn write_through_failures_are_counted_and_remembered() {
+        let dir = std::env::temp_dir().join(format!(
+            "fastkqr-registry-failtest-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let reg = ModelRegistry::with_persistence(&dir).unwrap();
+        // Sabotage the write: the atomic-save temp path of the next id
+        // (m0) is occupied by a DIRECTORY, so fs::write fails even when
+        // the test runs as root (permission tricks would not).
+        std::fs::create_dir_all(dir.join("m0.json.tmp")).unwrap();
+        let fit = toy_fit(12, 5);
+        let id = reg.insert(StoredModel::Kqr(fit));
+        assert_eq!(id, "m0");
+        assert_eq!(reg.persist_errors(), 1, "failed write-through must be counted");
+        // the model still serves from memory
+        assert!(reg.get(&id).is_some());
+        // a later checked persist succeeds (temp dir removed) and the
+        // recorded failure is taken exactly once
+        std::fs::remove_dir_all(dir.join("m0.json.tmp")).unwrap();
+        reg.persist(&id).unwrap();
+        let msg = reg.take_persist_failure(&id);
+        assert!(msg.is_some(), "failure message recorded for the id");
+        assert!(reg.take_persist_failure(&id).is_none(), "taken = cleared");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -16,7 +16,7 @@ use super::metrics::Metrics;
 use crate::backend::NativeBackend;
 use crate::cv::cross_validate_on;
 use crate::data::Rng;
-use crate::engine::{fingerprint, Fingerprint, FitEngine};
+use crate::engine::{fingerprint, ApproxSpec, Fingerprint, FitEngine};
 use crate::kqr::apgd::ApgdState;
 use crate::kqr::SolveOptions;
 use crate::linalg::par;
@@ -205,7 +205,7 @@ fn run_job(
             let mut backend = NativeBackend::new();
             let mut state = match warm.take() {
                 Some(w) if w.key == key && w.tau == *tau => w.state,
-                _ => ApgdState::zeros(solver.n()),
+                _ => ApgdState::zeros(solver.state_dim()),
             };
             let fit = solver.fit_warm(*tau, *lambda, &mut state, &mut backend)?;
             *warm = Some(WarmState { key, tau: *tau, state });
@@ -246,6 +246,7 @@ fn run_job(
                 lambdas,
                 *folds,
                 opts,
+                ApproxSpec::Exact,
                 &mut rng,
             )?;
             // fold path fits + the final full-data refit path (λ_max..λ*)

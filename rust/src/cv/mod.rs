@@ -20,7 +20,7 @@
 //! are thin shells over that path.
 
 use crate::data::{Dataset, Rng};
-use crate::engine::FitEngine;
+use crate::engine::{ApproxSpec, FitEngine};
 use crate::kernel::Kernel;
 use crate::kqr::{KqrFit, SolveOptions};
 use crate::linalg::par;
@@ -70,12 +70,25 @@ pub fn cross_validate(
     opts: &SolveOptions,
     rng: &mut Rng,
 ) -> Result<CvResult> {
-    cross_validate_on(FitEngine::global(), data, kernel, tau, lambdas, k, opts, rng)
+    cross_validate_on(
+        FitEngine::global(),
+        data,
+        kernel,
+        tau,
+        lambdas,
+        k,
+        opts,
+        ApproxSpec::Exact,
+        rng,
+    )
 }
 
 /// k-fold CV on an explicit engine (fold bases and the full-data refit
 /// basis are served from — and deposited into — its cache; folds run on
-/// its thread budget).
+/// its thread budget). `approx` selects the Gram representation per fold
+/// (and for the refit): with `ApproxSpec::Nystrom` each fold's training
+/// subset gets its own seeded thin factor, so CV at n ≫ 10⁴ never
+/// materializes an n×n matrix.
 #[allow(clippy::too_many_arguments)]
 pub fn cross_validate_on(
     engine: &FitEngine,
@@ -85,6 +98,7 @@ pub fn cross_validate_on(
     lambdas: &[f64],
     k: usize,
     opts: &SolveOptions,
+    approx: ApproxSpec,
     rng: &mut Rng,
 ) -> Result<CvResult> {
     ensure!(!lambdas.is_empty(), "cross_validate: empty lambda grid");
@@ -124,7 +138,7 @@ pub fn cross_validate_on(
                             .iter()
                             .map(|(tr, te)| {
                                 par::serial_scope(|| {
-                                    fold_losses(engine, tr, te, kernel, tau, lambdas, opts)
+                                    fold_losses(engine, tr, te, kernel, tau, lambdas, opts, approx)
                                 })
                             })
                             .collect::<Vec<Result<Vec<f64>>>>()
@@ -149,7 +163,9 @@ pub fn cross_validate_on(
         splits
             .iter()
             .map(|(tr, te)| {
-                par::serial_scope(|| fold_losses(engine, tr, te, kernel, tau, lambdas, opts))
+                par::serial_scope(|| {
+                    fold_losses(engine, tr, te, kernel, tau, lambdas, opts, approx)
+                })
             })
             .collect()
     };
@@ -175,7 +191,7 @@ pub fn cross_validate_on(
     // the (truncated) path; the full-data basis lands in the cache so a
     // follow-up predict/fit job on the same dataset is free of setup.
     let refit = {
-        let solver = engine.solver_with_options(&data.x, &data.y, kernel, opts.clone())?;
+        let solver = engine.solver_approx(&data.x, &data.y, kernel, approx, opts.clone())?;
         let path: Vec<f64> = lambdas[..=best_index].to_vec();
         let mut fits = solver.fit_path(tau, &path)?;
         fits.pop()
@@ -191,6 +207,7 @@ pub fn cross_validate_on(
 }
 
 /// Held-out pinball losses of one fold's warm-started λ path.
+#[allow(clippy::too_many_arguments)]
 fn fold_losses(
     engine: &FitEngine,
     train: &Dataset,
@@ -199,8 +216,9 @@ fn fold_losses(
     tau: f64,
     lambdas: &[f64],
     opts: &SolveOptions,
+    approx: ApproxSpec,
 ) -> Result<Vec<f64>> {
-    let solver = engine.solver_with_options(&train.x, &train.y, kernel, opts.clone())?;
+    let solver = engine.solver_approx(&train.x, &train.y, kernel, approx, opts.clone())?;
     let path = solver.fit_path(tau, lambdas)?;
     Ok(path
         .iter()
@@ -290,7 +308,7 @@ mod tests {
         });
         let mut rng_a = Rng::new(11);
         let a = cross_validate_on(
-            &serial_engine, &data, &kernel, 0.3, &lams, 3, &opts, &mut rng_a,
+            &serial_engine, &data, &kernel, 0.3, &lams, 3, &opts, ApproxSpec::Exact, &mut rng_a,
         )
         .unwrap();
 
@@ -300,7 +318,7 @@ mod tests {
         });
         let mut rng_b = Rng::new(11);
         let b = cross_validate_on(
-            &par_engine, &data, &kernel, 0.3, &lams, 3, &opts, &mut rng_b,
+            &par_engine, &data, &kernel, 0.3, &lams, 3, &opts, ApproxSpec::Exact, &mut rng_b,
         )
         .unwrap();
 

@@ -15,20 +15,43 @@
 //! payloads arriving over the wire share an entry even though they are
 //! different allocations.
 
+use crate::data::rng::Rng;
 use crate::kernel::Kernel;
 use crate::linalg::Matrix;
-use crate::spectral::SpectralBasis;
+use crate::spectral::{GramRepr, SpectralBasis};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-/// Cached per-(dataset, kernel) factorization: the Gram matrix (needed by
-/// the eq.-(8) projection solves) and its eigenbasis.
+/// How a (dataset, kernel) pair should be factorized — part of the cache
+/// key, so exact and approximate bases for the same data coexist without
+/// evicting each other.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ApproxSpec {
+    /// Full n×n Gram matrix + O(n³) eigendecomposition (the default and
+    /// the bitwise oracle).
+    #[default]
+    Exact,
+    /// Rank-m Nyström thin factor (O(n·m²+m³) setup, O(n·m) memory) with
+    /// the landmark-sampling seed pinned so the factorization — and every
+    /// fit on it — is reproducible from a spec document alone.
+    Nystrom { m: usize, seed: u64 },
+}
+
+/// Cached per-(dataset, kernel, approx) factorization: the Gram
+/// representation (dense matrix or Nyström thin factor — needed by the
+/// eq.-(8) projection solves), its eigenbasis, and one `Arc`'d copy of
+/// the training inputs. Every solver handed out for this entry shares
+/// that single `x` allocation, so all their fits share one `x_train`
+/// pointer — which is what lets `QuantileModel::predict` batch a whole
+/// fit set (even across solvers, e.g. per-τ CV refits) through one
+/// cross-Gram.
 #[derive(Debug)]
 pub struct BasisEntry {
-    pub gram: Arc<Matrix>,
+    pub repr: GramRepr,
     pub basis: Arc<SpectralBasis>,
+    pub x: Arc<Matrix>,
 }
 
 /// Cache accounting (relaxed atomics; read with [`CacheMetrics::get`]).
@@ -121,8 +144,19 @@ pub struct Fingerprint {
     mix: u64,
 }
 
-/// Compute the [`Fingerprint`] of a (dataset, kernel) pair.
+/// Compute the [`Fingerprint`] of a (dataset, kernel) pair (exact
+/// factorization).
 pub fn fingerprint(x: &Matrix, y: &[f64], kernel: &Kernel) -> Fingerprint {
+    fingerprint_approx(x, y, kernel, ApproxSpec::Exact)
+}
+
+/// Compute the [`Fingerprint`] of a (dataset, kernel, approx) triple.
+pub fn fingerprint_approx(
+    x: &Matrix,
+    y: &[f64],
+    kernel: &Kernel,
+    approx: ApproxSpec,
+) -> Fingerprint {
     let mut h1 = Fnv::new();
     let mut h2 = Mix::new();
     let mut feed = |v: u64| {
@@ -156,6 +190,14 @@ pub fn fingerprint(x: &Matrix, y: &[f64], kernel: &Kernel) -> Fingerprint {
         Kernel::Laplacian { sigma } => {
             feed(4);
             feed(sigma.to_bits());
+        }
+    }
+    match approx {
+        ApproxSpec::Exact => feed(0),
+        ApproxSpec::Nystrom { m, seed } => {
+            feed(0x4e79_7374);
+            feed(m as u64);
+            feed(seed);
         }
     }
     Fingerprint { n: x.rows(), p: x.cols(), fnv: h1.finish(), mix: h2.finish() }
@@ -207,19 +249,34 @@ impl GramCache {
         guard.order.clear();
     }
 
-    /// Fetch the (Gram, basis) pair for this exact dataset + kernel,
-    /// computing it at most once per fingerprint even under concurrent
-    /// callers: the first caller builds (Gram construction runs on the
-    /// parallel substrate), later callers block on the in-flight slot and
-    /// then share the `Arc`s. Errors (only) when the kernel matrix is not
-    /// PSD — see [`SpectralBasis::new`]; the error is cached too.
+    /// Fetch the exact (Gram, basis) pair for this dataset + kernel —
+    /// see [`GramCache::get_or_compute_approx`].
     pub fn get_or_compute(
         &self,
         x: &Matrix,
         y: &[f64],
         kernel: &Kernel,
     ) -> Result<Arc<BasisEntry>> {
-        let key = fingerprint(x, y, kernel);
+        self.get_or_compute_approx(x, y, kernel, ApproxSpec::Exact)
+    }
+
+    /// Fetch the factorization for this exact (dataset, kernel, approx)
+    /// triple, computing it at most once per fingerprint even under
+    /// concurrent callers: the first caller builds (Gram/Nyström
+    /// construction runs on the parallel substrate), later callers block
+    /// on the in-flight slot and then share the `Arc`s. Exact and
+    /// approximate entries for the same dataset are distinct keys and
+    /// coexist. Errors when the kernel matrix is not PSD (exact — see
+    /// [`SpectralBasis::new`]) or the Nyström construction is degenerate;
+    /// errors are cached too.
+    pub fn get_or_compute_approx(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        kernel: &Kernel,
+        approx: ApproxSpec,
+    ) -> Result<Arc<BasisEntry>> {
+        let key = fingerprint_approx(x, y, kernel, approx);
         CacheMetrics::incr(&self.metrics.requests);
         let slot = {
             let mut guard = self.slots.lock().unwrap();
@@ -253,10 +310,36 @@ impl GramCache {
                 built_here = true;
                 CacheMetrics::incr(&self.metrics.misses);
                 CacheMetrics::incr(&self.metrics.decompositions);
-                let gram = Arc::new(kernel.gram(x));
-                match SpectralBasis::new(&gram) {
-                    Ok(basis) => Ok(Arc::new(BasisEntry { gram, basis: Arc::new(basis) })),
-                    Err(e) => Err(format!("{e:#}")),
+                let x_arc = Arc::new(x.clone());
+                match approx {
+                    ApproxSpec::Exact => {
+                        let gram = Arc::new(kernel.gram(x));
+                        match SpectralBasis::new(&gram) {
+                            Ok(basis) => {
+                                let basis = Arc::new(basis);
+                                Ok(Arc::new(BasisEntry {
+                                    repr: GramRepr::dense(gram, basis.clone()),
+                                    basis,
+                                    x: x_arc,
+                                }))
+                            }
+                            Err(e) => Err(format!("{e:#}")),
+                        }
+                    }
+                    ApproxSpec::Nystrom { m, seed } => {
+                        let mut rng = Rng::new(seed);
+                        match crate::kernel::nystrom::nystrom(x, kernel, m, &mut rng) {
+                            Ok(factor) => {
+                                let basis = factor.basis.clone();
+                                Ok(Arc::new(BasisEntry {
+                                    repr: GramRepr::LowRank(Arc::new(factor)),
+                                    basis,
+                                    x: x_arc,
+                                }))
+                            }
+                            Err(e) => Err(format!("{e:#}")),
+                        }
+                    }
                 }
             })
             .clone();
@@ -327,6 +410,34 @@ mod tests {
         let (x0, y0) = toy(8, 100);
         cache.get_or_compute(&x0, &y0, &k).unwrap();
         assert_eq!(CacheMetrics::get(&cache.metrics.decompositions), 4);
+    }
+
+    #[test]
+    fn exact_and_approx_entries_coexist() {
+        let cache = GramCache::new(4);
+        let (x, y) = toy(20, 7);
+        let k = Kernel::Rbf { sigma: 0.9 };
+        let exact = cache.get_or_compute(&x, &y, &k).unwrap();
+        let ny = cache
+            .get_or_compute_approx(&x, &y, &k, ApproxSpec::Nystrom { m: 8, seed: 3 })
+            .unwrap();
+        assert!(!exact.repr.is_low_rank());
+        assert!(ny.repr.is_low_rank());
+        assert_eq!(cache.len(), 2, "distinct keys, no eviction thrash");
+        assert_eq!(CacheMetrics::get(&cache.metrics.decompositions), 2);
+        // repeat requests are pure hits on their respective entries
+        let exact2 = cache.get_or_compute(&x, &y, &k).unwrap();
+        let ny2 = cache
+            .get_or_compute_approx(&x, &y, &k, ApproxSpec::Nystrom { m: 8, seed: 3 })
+            .unwrap();
+        assert!(Arc::ptr_eq(&exact.basis, &exact2.basis));
+        assert!(Arc::ptr_eq(&ny.basis, &ny2.basis));
+        assert_eq!(CacheMetrics::get(&cache.metrics.decompositions), 2);
+        // a different (m, seed) is a different factorization
+        cache
+            .get_or_compute_approx(&x, &y, &k, ApproxSpec::Nystrom { m: 8, seed: 4 })
+            .unwrap();
+        assert_eq!(CacheMetrics::get(&cache.metrics.decompositions), 3);
     }
 
     #[test]

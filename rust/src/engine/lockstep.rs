@@ -58,6 +58,8 @@ pub struct LockstepStats {
 struct Ctx<'a> {
     solver: &'a KqrSolver,
     n: usize,
+    /// Spectral state dimension (n for dense bases, rank r for low-rank).
+    dim: usize,
     /// `opts.apgd_tol` (the tight solve tolerance).
     tol_abs: f64,
     /// `opts.kkt_band · max(1, ‖y‖∞)`.
@@ -158,6 +160,7 @@ pub(crate) fn fit_grid_lockstep(
     let ctx = Ctx {
         solver,
         n,
+        dim: solver.state_dim(),
         tol_abs: opts.apgd_tol,
         band: opts.kkt_band * amax(&solver.y).max(1.0),
         chunk_len: if opts.nesterov { opts.chunk } else { 1 },
@@ -184,10 +187,10 @@ fn drive(
     // (ti, li, seed iterate, γ-ladder start) of cells whose warm-start
     // dependencies are satisfied.
     let mut pending: Vec<(usize, usize, ApgdState, f64)> =
-        vec![(0, 0, ApgdState::zeros(ctx.n), opts.gamma_init)];
+        vec![(0, 0, ApgdState::zeros(ctx.dim), opts.gamma_init)];
     let mut active: Vec<Cell> = Vec::new();
     let mut ws_bundle = LockstepWorkspace::new();
-    let mut ws = ApgdWorkspace::new(ctx.n);
+    let mut ws = ApgdWorkspace::for_basis(&ctx.solver.basis);
     while !pending.is_empty() || !active.is_empty() {
         for (ti, li, seed, gamma_start) in pending.drain(..) {
             active.push(Cell::admit(ctx, taus[ti], lambdas[li], ti, li, seed, gamma_start));
@@ -282,8 +285,7 @@ fn advance_cell(
     // --- post-solve of the current expansion round (eq. 8 + E(Ŝ)) ---
     if !cell.s_hat.is_empty() && cell.s_hat.len() <= ctx.n / 2 && opts.projection {
         project_equality(
-            &ctx.solver.gram,
-            basis,
+            &ctx.solver.repr,
             y,
             &cell.s_hat,
             &mut cell.state.b,
@@ -378,6 +380,8 @@ fn finish_cell(cell: &mut Cell, ctx: &Ctx<'_>, ws: &mut ApgdWorkspace) -> KqrFit
         &cell.state.beta,
         ws,
     );
+    // Same compressed-predictor attachment as the sequential return path.
+    let lowrank = ctx.solver.repr.low_rank().map(|f| f.coef(&cell.state.beta));
     KqrFit::assemble(
         cell.tau,
         cell.lam,
@@ -389,6 +393,7 @@ fn finish_cell(cell: &mut Cell, ctx: &Ctx<'_>, ws: &mut ApgdWorkspace) -> KqrFit
         cell.total_iters,
         cell.total_expansions,
         best.s_hat,
+        lowrank,
         ctx.solver.x.clone(),
         ctx.solver.kernel.clone(),
     )

@@ -30,7 +30,9 @@
 pub mod cache;
 pub mod lockstep;
 
-pub use cache::{fingerprint, BasisEntry, CacheMetrics, Fingerprint, GramCache};
+pub use cache::{
+    fingerprint, fingerprint_approx, ApproxSpec, BasisEntry, CacheMetrics, Fingerprint, GramCache,
+};
 pub use lockstep::LockstepStats;
 
 use crate::backend::NativeBackend;
@@ -130,11 +132,25 @@ impl FitEngine {
         kernel: &Kernel,
         opts: SolveOptions,
     ) -> Result<KqrSolver> {
-        let entry = self.cache.get_or_compute(x, y, kernel)?;
-        Ok(
-            KqrSolver::with_basis(x, y, kernel.clone(), entry.gram.clone(), entry.basis.clone())
-                .with_options(opts),
-        )
+        self.solver_approx(x, y, kernel, ApproxSpec::Exact, opts)
+    }
+
+    /// A solver on an explicit Gram representation: `ApproxSpec::Exact`
+    /// is the dense cached path (bitwise-identical to
+    /// [`FitEngine::solver`]); `ApproxSpec::Nystrom` serves the rank-m
+    /// thin factor from the same cache — exact and approximate entries
+    /// for one dataset coexist under distinct fingerprints.
+    pub fn solver_approx(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        kernel: &Kernel,
+        approx: ApproxSpec,
+        opts: SolveOptions,
+    ) -> Result<KqrSolver> {
+        let entry = self.cache.get_or_compute_approx(x, y, kernel, approx)?;
+        Ok(KqrSolver::with_repr_arc(entry.x.clone(), y, kernel.clone(), entry.repr.clone())
+            .with_options(opts))
     }
 
     /// Convenience overload for [`Dataset`] holders.
@@ -153,11 +169,23 @@ impl FitEngine {
         kernel: &Kernel,
         taus: &[f64],
     ) -> Result<NckqrSolver> {
+        self.nc_solver_approx(x, y, kernel, taus, ApproxSpec::Exact)
+    }
+
+    /// [`FitEngine::nc_solver`] on an explicit Gram representation.
+    pub fn nc_solver_approx(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        kernel: &Kernel,
+        taus: &[f64],
+        approx: ApproxSpec,
+    ) -> Result<NckqrSolver> {
         // Validate the τ grid before paying for (or caching) a Gram
         // matrix the request can never use.
         crate::nckqr::normalize_taus(taus)?;
-        let entry = self.cache.get_or_compute(x, y, kernel)?;
-        NckqrSolver::with_basis(x, y, kernel.clone(), taus, entry.gram.clone(), entry.basis.clone())
+        let entry = self.cache.get_or_compute_approx(x, y, kernel, approx)?;
+        NckqrSolver::with_repr_arc(entry.x.clone(), y, kernel.clone(), taus, entry.repr.clone())
     }
 
     /// [`FitEngine::nc_solver`] with explicit NCKQR options.
@@ -170,6 +198,19 @@ impl FitEngine {
         opts: NcOptions,
     ) -> Result<NckqrSolver> {
         Ok(self.nc_solver(x, y, kernel, taus)?.with_options(opts))
+    }
+
+    /// [`FitEngine::nc_solver_approx`] with explicit NCKQR options.
+    pub fn nc_solver_approx_with_options(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        kernel: &Kernel,
+        taus: &[f64],
+        approx: ApproxSpec,
+        opts: NcOptions,
+    ) -> Result<NckqrSolver> {
+        Ok(self.nc_solver_approx(x, y, kernel, taus, approx)?.with_options(opts))
     }
 
     /// Is the lockstep grid driver enabled for this engine?
@@ -208,15 +249,17 @@ impl FitEngine {
         taus: &[f64],
         lambdas: &[f64],
     ) -> Result<GridFit> {
-        self.fit_grid_with_strategy(x, y, kernel, taus, lambdas, None, None)
+        self.fit_grid_with_strategy(x, y, kernel, taus, lambdas, ApproxSpec::Exact, None, None)
     }
 
-    /// [`FitEngine::fit_grid`] with per-call overrides: `lockstep`
-    /// `Some(true)`/`Some(false)` forces the lockstep / sequential driver
-    /// for this grid only (`None` defers to the engine configuration,
-    /// which in turn defers to `FASTKQR_LOCKSTEP`), and `opts` replaces
-    /// the engine's default solve options. This is the hook the
-    /// [`crate::api::FitSpec`] hints ride on.
+    /// [`FitEngine::fit_grid`] with per-call overrides: `approx` selects
+    /// the Gram representation (`Exact` or a rank-m Nyström thin factor —
+    /// both the sequential and lockstep drivers run unchanged on either),
+    /// `lockstep` `Some(true)`/`Some(false)` forces the lockstep /
+    /// sequential driver for this grid only (`None` defers to the engine
+    /// configuration, which in turn defers to `FASTKQR_LOCKSTEP`), and
+    /// `opts` replaces the engine's default solve options. This is the
+    /// hook the [`crate::api::FitSpec`] hints ride on.
     #[allow(clippy::too_many_arguments)]
     pub fn fit_grid_with_strategy(
         &self,
@@ -225,15 +268,14 @@ impl FitEngine {
         kernel: &Kernel,
         taus: &[f64],
         lambdas: &[f64],
+        approx: ApproxSpec,
         lockstep: Option<bool>,
         opts: Option<SolveOptions>,
     ) -> Result<GridFit> {
         ensure!(!taus.is_empty(), "fit_grid: empty tau grid");
         ensure!(!lambdas.is_empty(), "fit_grid: empty lambda grid");
-        let solver = match opts {
-            Some(o) => self.solver_with_options(x, y, kernel, o)?,
-            None => self.solver(x, y, kernel)?,
-        };
+        let opts = opts.unwrap_or_else(|| self.config.opts.clone());
+        let solver = self.solver_approx(x, y, kernel, approx, opts)?;
         if lockstep.unwrap_or_else(|| self.lockstep_enabled()) {
             let (fits, stats) = lockstep::fit_grid_lockstep(self, &solver, taus, lambdas)?;
             return Ok(GridFit {
@@ -316,7 +358,7 @@ fn fit_tau_column(
     seed: Option<ApgdState>,
 ) -> Result<Vec<KqrFit>> {
     let mut backend = NativeBackend::new();
-    let mut state = seed.unwrap_or_else(|| ApgdState::zeros(solver.n()));
+    let mut state = seed.unwrap_or_else(|| ApgdState::zeros(solver.state_dim()));
     let mut gamma_start = solver.opts.gamma_init;
     let mut fits = Vec::with_capacity(lambdas.len());
     for &lam in lambdas {

@@ -47,20 +47,20 @@ pub fn spectral_vs_dense(n: usize, plans: usize, seed: u64) -> Result<Vec<Ablati
     }
     let spectral_s = t.total();
     // dense: assemble + factor P per plan (the O(n³) the paper avoids)
-    let k2 = gemm(&solver.gram, &solver.gram);
+    let k2 = gemm(solver.gram(), solver.gram());
     let t = Timer::start("dense");
     for &(g, l) in &gammas_lams {
         let nf = n as f64;
         let mut p = Matrix::zeros(n + 1, n + 1);
         p[(0, 0)] = nf;
         for j in 0..n {
-            let cs: f64 = (0..n).map(|i| solver.gram[(i, j)]).sum();
+            let cs: f64 = (0..n).map(|i| solver.gram()[(i, j)]).sum();
             p[(0, j + 1)] = cs;
             p[(j + 1, 0)] = cs;
         }
         for i in 0..n {
             for j in 0..n {
-                p[(i + 1, j + 1)] = k2[(i, j)] + 2.0 * nf * g * l * solver.gram[(i, j)];
+                p[(i + 1, j + 1)] = k2[(i, j)] + 2.0 * nf * g * l * solver.gram()[(i, j)];
             }
             p[(i + 1, i + 1)] += 1e-10;
         }

@@ -1,4 +1,5 @@
-//! Nyström kernel approximation — the paper's §5 extension, implemented.
+//! Nyström kernel approximation — the paper's §5 extension, implemented
+//! as a first-class **low-rank** compute path.
 //!
 //! The paper's closing discussion proposes integrating "random features
 //! (Rahimi & Recht 2007) or Nyström subsampling (Rudi et al. 2015) …
@@ -16,34 +17,30 @@
 //! paper's "exact update formula" is preserved.
 //!
 //! Construction (standard): with landmark set Z (m rows of X),
-//! K_mm = VDVᵀ, B = K_nm V D^{-1/2} (n×m, dropping negligible D), then
+//! K_mm = VDVᵀ, B = K_nm V D^{-1/2} (n×r₀, dropping negligible D), then
 //! BᵀB = WSWᵀ gives the thin factor U = B W S^{-1/2} with orthonormal
-//! columns and K̃ = BBᵀ. U is zero-padded to n×n so every downstream
-//! structure (state sizes, the AOT artifacts) is unchanged; the padded
-//! eigenvalues are 0 and therefore inert in all spectral formulas.
+//! columns and K̃ = BBᵀ. The result is emitted **directly as a thin
+//! [`LowRankFactor`]** — U stays n×r, nothing is zero-padded to n×n and
+//! the dense K̃ is never materialized; downstream consumers reconstruct
+//! Gram entries on demand through [`crate::spectral::GramRepr`].
+//!
+//! The factor also carries the compressed-predictor coefficient map
+//! M = V D^{-1/2} W S^{1/2} (m×r): for any spectral iterate β,
+//! w = M β satisfies k(X, Z)·w = UΛβ exactly, so a fitted model predicts
+//! with m kernel evaluations per point and persists in O(m) — the
+//! "landmarks + m-dimensional coefficients" artifact format.
 
 use super::Kernel;
 use crate::data::rng::Rng;
 use crate::linalg::{gemm_into, gemv_t, Matrix, SymEigen};
-use crate::spectral::SpectralBasis;
+use crate::spectral::{LowRankFactor, SpectralBasis};
 use anyhow::{bail, Result};
-
-/// Result of the Nyström construction.
-pub struct NystromApprox {
-    /// Dense approximate Gram matrix K̃ (needed by the eq.-(8)/(19)
-    /// K_SS projection solves).
-    pub gram: Matrix,
-    /// Spectral basis of K̃ (rank ≤ m, zero-padded to n).
-    pub basis: SpectralBasis,
-    /// Landmark row indices actually used.
-    pub landmarks: Vec<usize>,
-    /// Numerical rank retained.
-    pub rank: usize,
-}
+use std::sync::Arc;
 
 /// Build the rank-`m` Nyström approximation of `kernel` on the rows of
-/// `x`, sampling landmarks uniformly with `rng`.
-pub fn nystrom(x: &Matrix, kernel: &Kernel, m: usize, rng: &mut Rng) -> Result<NystromApprox> {
+/// `x`, sampling landmarks uniformly with `rng`. Returns the thin factor
+/// (basis rank ≤ m); the dense n×n K̃ is never formed.
+pub fn nystrom(x: &Matrix, kernel: &Kernel, m: usize, rng: &mut Rng) -> Result<LowRankFactor> {
     let n = x.rows();
     if m == 0 || m > n {
         bail!("nystrom: need 0 < m <= n (got m={m}, n={n})");
@@ -54,32 +51,31 @@ pub fn nystrom(x: &Matrix, kernel: &Kernel, m: usize, rng: &mut Rng) -> Result<N
     landmarks.sort_unstable();
     let z = Matrix::from_fn(m, x.cols(), |i, j| x[(landmarks[i], j)]);
 
-    // K_mm = V D Vᵀ (+ tiny ridge via eigenvalue clamping below)
+    // K_mm = V D Vᵀ; drop negligible eigenvalues
     let kmm = kernel.gram(&z);
     let eig_mm = SymEigen::new(&kmm);
     let dmax = eig_mm.values.last().copied().unwrap_or(0.0).max(1e-300);
-    let keep: Vec<usize> =
-        (0..m).filter(|&j| eig_mm.values[j] > 1e-12 * dmax).collect();
+    let keep: Vec<usize> = (0..m).filter(|&j| eig_mm.values[j] > 1e-12 * dmax).collect();
     if keep.is_empty() {
         bail!("nystrom: landmark kernel matrix is numerically zero");
     }
-
-    // B = K_nm V D^{-1/2}  (n × r)
-    let knm = kernel.cross_gram(x, &z);
     let r0 = keep.len();
-    let mut b = Matrix::zeros(n, r0);
+
+    // vd = V D^{-1/2} on the kept columns (m × r₀)
+    let mut vd = Matrix::zeros(m, r0);
     for (col, &j) in keep.iter().enumerate() {
         let inv_sqrt = 1.0 / eig_mm.values[j].sqrt();
-        for i in 0..n {
-            let mut s = 0.0;
-            for k in 0..m {
-                s += knm[(i, k)] * eig_mm.vectors[(k, j)];
-            }
-            b[(i, col)] = s * inv_sqrt;
+        for k in 0..m {
+            vd[(k, col)] = eig_mm.vectors[(k, j)] * inv_sqrt;
         }
     }
 
-    // BᵀB = W S Wᵀ  (r0 × r0), through the packed tiled GEMM
+    // B = K_nm · vd (n × r₀), through the packed tiled GEMM
+    let knm = kernel.cross_gram(x, &z);
+    let mut b = Matrix::zeros(n, r0);
+    gemm_into(&knm, &vd, &mut b);
+
+    // BᵀB = W S Wᵀ (r₀ × r₀)
     let btb = {
         let bt = b.transpose();
         let mut c = Matrix::zeros(r0, r0);
@@ -88,43 +84,38 @@ pub fn nystrom(x: &Matrix, kernel: &Kernel, m: usize, rng: &mut Rng) -> Result<N
     };
     let eig_c = SymEigen::new(&btb);
     let smax = eig_c.values.last().copied().unwrap_or(0.0).max(1e-300);
-    // keep descending-significance components
-    let keep_c: Vec<usize> =
-        (0..r0).filter(|&j| eig_c.values[j] > 1e-12 * smax).collect();
+    let keep_c: Vec<usize> = (0..r0).filter(|&j| eig_c.values[j] > 1e-12 * smax).collect();
     let rank = keep_c.len();
-
-    // thin U = B W S^{-1/2}, written into the zero-padded n×n basis with
-    // ASCENDING eigenvalue order to match SymEigen conventions: the kept
-    // components go in the LAST `rank` columns.
-    let mut u = Matrix::zeros(n, n);
-    let mut lambda = vec![0.0; n];
-    for (slot, &j) in keep_c.iter().enumerate() {
-        let col = n - rank + slot; // eig_c.values ascending over keep_c
-        let s = eig_c.values[j];
-        let inv_sqrt = 1.0 / s.sqrt();
-        for i in 0..n {
-            let mut acc = 0.0;
-            for k in 0..r0 {
-                acc += b[(i, k)] * eig_c.vectors[(k, j)];
-            }
-            u[(i, col)] = acc * inv_sqrt;
-        }
-        lambda[col] = s;
+    if rank == 0 {
+        bail!("nystrom: approximate kernel matrix is numerically zero");
     }
 
-    // K̃ = B Bᵀ (dense, O(n²·r0), packed tiled GEMM)
-    let gram = {
-        let bt = b.transpose();
-        let mut c = Matrix::zeros(n, n);
-        gemm_into(&b, &bt, &mut c);
-        c
-    };
+    // Kept components, ASCENDING eigenvalue order to match the SymEigen /
+    // SpectralBasis convention (keep_c is ascending over eig_c.values).
+    //   U   = B · (W S^{-1/2})   (n × r, orthonormal columns)
+    //   map = vd · (W S^{1/2})   (m × r; w = map·β ⇒ k(X,Z)w = UΛβ)
+    let mut w_shalf = Matrix::zeros(r0, rank);
+    let mut w_ssqrt = Matrix::zeros(r0, rank);
+    let mut lambda = vec![0.0; rank];
+    for (slot, &j) in keep_c.iter().enumerate() {
+        let s = eig_c.values[j];
+        let sq = s.sqrt();
+        lambda[slot] = s;
+        for k in 0..r0 {
+            w_shalf[(k, slot)] = eig_c.vectors[(k, j)] / sq;
+            w_ssqrt[(k, slot)] = eig_c.vectors[(k, j)] * sq;
+        }
+    }
+    let mut u = Matrix::zeros(n, rank);
+    gemm_into(&b, &w_shalf, &mut u);
+    let mut map = Matrix::zeros(m, rank);
+    gemm_into(&vd, &w_ssqrt, &mut map);
 
     let ones = vec![1.0; n];
-    let mut u1 = vec![0.0; n];
+    let mut u1 = vec![0.0; rank];
     gemv_t(&u, &ones, &mut u1);
     let basis = SpectralBasis { n, u, lambda, u1 };
-    Ok(NystromApprox { gram, basis, landmarks, rank })
+    Ok(LowRankFactor { basis: Arc::new(basis), landmarks, z: Arc::new(z), map })
 }
 
 #[cfg(test)]
@@ -133,6 +124,7 @@ mod tests {
     use crate::data::synth;
     use crate::kernel::median_heuristic_sigma;
     use crate::kqr::KqrSolver;
+    use crate::spectral::GramRepr;
 
     fn fixture(n: usize, seed: u64) -> (Matrix, Vec<f64>, Kernel) {
         let mut rng = Rng::new(seed);
@@ -146,36 +138,30 @@ mod tests {
         let (x, _, kernel) = fixture(30, 1);
         let mut rng = Rng::new(2);
         let ny = nystrom(&x, &kernel, 30, &mut rng).unwrap();
+        let repr = GramRepr::LowRank(Arc::new(ny));
         let exact = kernel.gram(&x);
-        assert!(
-            ny.gram.max_abs_diff(&exact) < 1e-8,
-            "m=n Nyström must be exact: {}",
-            ny.gram.max_abs_diff(&exact)
-        );
+        let mut max_diff = 0.0f64;
+        for i in 0..30 {
+            for j in 0..30 {
+                max_diff = max_diff.max((repr.entry(i, j) - exact[(i, j)]).abs());
+            }
+        }
+        assert!(max_diff < 1e-8, "m=n Nyström must be exact: {max_diff}");
     }
 
     #[test]
-    fn basis_reconstructs_gram_approx() {
+    fn factor_is_thin_with_positive_spectrum() {
         let (x, _, kernel) = fixture(40, 3);
         let mut rng = Rng::new(4);
         let ny = nystrom(&x, &kernel, 15, &mut rng).unwrap();
-        // U Λ Uᵀ == K̃
-        let n = 40;
-        for probe in 0..8 {
-            let i = (probe * 5) % n;
-            let j = (probe * 7 + 3) % n;
-            let mut s = 0.0;
-            for k in 0..n {
-                s += ny.basis.u[(i, k)] * ny.basis.lambda[k] * ny.basis.u[(j, k)];
-            }
-            assert!(
-                (s - ny.gram[(i, j)]).abs() < 1e-9,
-                "UΛUᵀ[{i},{j}]={s} vs K̃={}",
-                ny.gram[(i, j)]
-            );
-        }
-        assert!(ny.rank <= 15);
+        let r = ny.basis.dim();
+        assert!(r <= 15 && r > 0);
+        assert_eq!(ny.basis.u.rows(), 40);
+        assert_eq!(ny.basis.u.cols(), r, "no zero-padding: U is thin");
         assert_eq!(ny.landmarks.len(), 15);
+        assert_eq!(ny.z.rows(), 15);
+        assert!(ny.basis.lambda.iter().all(|&l| l > 0.0));
+        assert!(ny.basis.lambda.windows(2).all(|w| w[0] <= w[1]), "ascending");
     }
 
     #[test]
@@ -184,8 +170,9 @@ mod tests {
         let mut rng = Rng::new(6);
         let ny = nystrom(&x, &kernel, 10, &mut rng).unwrap();
         let n = 25;
-        for a in (n - ny.rank)..n {
-            for b in (n - ny.rank)..n {
+        let r = ny.basis.dim();
+        for a in 0..r {
+            for b in 0..r {
                 let mut s = 0.0;
                 for i in 0..n {
                     s += ny.basis.u[(i, a)] * ny.basis.u[(i, b)];
@@ -196,44 +183,60 @@ mod tests {
         }
     }
 
+    /// The compressed-predictor identity: k(X, Z)·(map·β) = UΛβ for any
+    /// spectral coordinates β — the contract the O(m) artifacts rest on.
+    #[test]
+    fn coefficient_map_reproduces_fitted_values() {
+        let (x, _, kernel) = fixture(35, 7);
+        let mut rng = Rng::new(8);
+        let ny = nystrom(&x, &kernel, 12, &mut rng).unwrap();
+        let r = ny.basis.dim();
+        let beta: Vec<f64> = (0..r).map(|_| rng.normal()).collect();
+        let coef = ny.coef(&beta);
+        assert_eq!(coef.w.len(), 12);
+        // f_lr = k(X, Z) w
+        let kxz = kernel.cross_gram(&x, &ny.z);
+        let mut f_lr = vec![0.0; 35];
+        crate::linalg::gemv(&kxz, &coef.w, &mut f_lr);
+        // f_spec = UΛβ
+        let mut scratch = vec![0.0; r];
+        let mut f_spec = vec![0.0; 35];
+        ny.basis.fitted(0.0, &beta, &mut scratch, &mut f_spec);
+        for i in 0..35 {
+            assert!(
+                (f_lr[i] - f_spec[i]).abs() < 1e-8,
+                "i={i}: lowrank {} vs spectral {}",
+                f_lr[i],
+                f_spec[i]
+            );
+        }
+    }
+
     #[test]
     fn kqr_on_nystrom_basis_close_to_exact() {
         // The §5 extension end-to-end: solve KQR on K̃ with the unchanged
         // finite smoothing machinery. The objective approaches the
-        // exact-kernel one as m grows; at m = n the full certificate
-        // passes (K̃ = K). For m < n the rank-deficient certificate is
-        // *conservative* (the clamp candidate ĝ is not the projected-norm
-        // minimizer over the subgradient box), so we assert convergence
-        // of the objective rather than `kkt.pass`.
+        // exact-kernel one as m grows.
         let (x, y, kernel) = fixture(60, 7);
         let exact = KqrSolver::new(&x, &y, kernel.clone()).unwrap().fit(0.5, 1e-2).unwrap();
         let mut prev_gap = f64::INFINITY;
         for m in [10usize, 40] {
             let mut rng = Rng::new(8);
             let ny = nystrom(&x, &kernel, m, &mut rng).unwrap();
-            let solver = KqrSolver::with_basis(
-                &x,
-                &y,
-                kernel.clone(),
-                std::sync::Arc::new(ny.gram),
-                std::sync::Arc::new(ny.basis),
-            );
+            let solver =
+                KqrSolver::with_repr(&x, &y, kernel.clone(), GramRepr::LowRank(Arc::new(ny)));
             let fit = solver.fit(0.5, 1e-2).unwrap();
             let gap = (fit.objective - exact.objective).abs();
             assert!(gap <= prev_gap + 1e-6, "gap did not shrink: m={m} {gap} vs {prev_gap}");
+            assert!(fit.lowrank.is_some(), "low-rank fit carries the compressed predictor");
             prev_gap = gap;
         }
         assert!(prev_gap < 0.05 * (1.0 + exact.objective), "m=40 gap {prev_gap}");
-        // m = n: the approximation is exact and the certificate holds
+        // m = n: the approximation is exact
         let mut rng = Rng::new(9);
         let ny = nystrom(&x, &kernel, 60, &mut rng).unwrap();
-        let solver = KqrSolver::with_basis(
-            &x,
-            &y,
-            kernel.clone(),
-            std::sync::Arc::new(ny.gram),
-            std::sync::Arc::new(ny.basis),
-        );
+        let solver =
+            KqrSolver::with_repr(&x, &y, kernel.clone(), GramRepr::LowRank(Arc::new(ny)));
         let fit = solver.fit(0.5, 1e-2).unwrap();
         assert!(
             (fit.objective - exact.objective).abs() < 1e-4 * (1.0 + exact.objective),

@@ -57,7 +57,10 @@ impl ApgdState {
     }
 }
 
-/// Preallocated n-sized buffers so the hot loop never allocates.
+/// Preallocated buffers so the hot loop never allocates. Data-space
+/// vectors (`f`, `z`) have length n; spectral-space vectors (`t`,
+/// `dbeta`, `beta_bar`, `scratch`) have length [`SpectralBasis::dim`] —
+/// n for a dense basis, the retained rank for a low-rank one.
 #[derive(Clone, Debug)]
 pub struct ApgdWorkspace {
     pub f: Vec<f64>,
@@ -69,15 +72,26 @@ pub struct ApgdWorkspace {
 }
 
 impl ApgdWorkspace {
+    /// Square workspace (dense basis: dim = n).
     pub fn new(n: usize) -> ApgdWorkspace {
+        ApgdWorkspace::with_dims(n, n)
+    }
+
+    /// Workspace for `n` data points and spectral dimension `dim`.
+    pub fn with_dims(n: usize, dim: usize) -> ApgdWorkspace {
         ApgdWorkspace {
             f: vec![0.0; n],
             z: vec![0.0; n],
-            t: vec![0.0; n],
-            dbeta: vec![0.0; n],
-            beta_bar: vec![0.0; n],
-            scratch: vec![0.0; n],
+            t: vec![0.0; dim],
+            dbeta: vec![0.0; dim],
+            beta_bar: vec![0.0; dim],
+            scratch: vec![0.0; dim],
         }
+    }
+
+    /// Workspace sized for `basis` (handles thin low-rank bases).
+    pub fn for_basis(basis: &SpectralBasis) -> ApgdWorkspace {
+        ApgdWorkspace::with_dims(basis.n, basis.dim())
     }
 }
 
@@ -101,13 +115,15 @@ pub fn run_chunk_native(
     iters: usize,
 ) -> f64 {
     let n = basis.n;
+    let dim = basis.dim();
     debug_assert_eq!(y.len(), n);
+    debug_assert_eq!(state.beta.len(), dim);
     for _ in 0..iters {
         let ck_next = 0.5 * (1.0 + (1.0 + 4.0 * state.ck * state.ck).sqrt());
         let mom = (state.ck - 1.0) / ck_next;
         // Extrapolation point (b̄, β̄).
         let b_bar = state.b + mom * (state.b - state.b_prev);
-        for i in 0..n {
+        for i in 0..dim {
             ws.beta_bar[i] = state.beta[i] + mom * (state.beta[i] - state.beta_prev[i]);
         }
         // Fitted values + smoothed-loss gradient carrier z.
@@ -120,7 +136,7 @@ pub fn run_chunk_native(
         // Advance.
         state.b_prev = state.b;
         state.b = b_bar + db;
-        for i in 0..n {
+        for i in 0..dim {
             state.beta_prev[i] = state.beta[i];
             state.beta[i] = ws.beta_bar[i] + ws.dbeta[i];
         }
@@ -140,6 +156,7 @@ pub fn run_chunk_native(
 pub struct LockstepWorkspace {
     m: usize,
     n: usize,
+    dim: usize,
     beta: Matrix,
     beta_prev: Matrix,
     beta_bar: Matrix,
@@ -169,6 +186,7 @@ impl LockstepWorkspace {
         LockstepWorkspace {
             m: 0,
             n: 0,
+            dim: 0,
             beta: Matrix::zeros(0, 0),
             beta_prev: Matrix::zeros(0, 0),
             beta_bar: Matrix::zeros(0, 0),
@@ -186,19 +204,20 @@ impl LockstepWorkspace {
         }
     }
 
-    fn ensure(&mut self, m: usize, n: usize) {
-        if self.m == m && self.n == n {
+    fn ensure(&mut self, m: usize, n: usize, dim: usize) {
+        if self.m == m && self.n == n && self.dim == dim {
             return;
         }
         self.m = m;
         self.n = n;
-        self.beta = Matrix::zeros(m, n);
-        self.beta_prev = Matrix::zeros(m, n);
-        self.beta_bar = Matrix::zeros(m, n);
+        self.dim = dim;
+        self.beta = Matrix::zeros(m, dim);
+        self.beta_prev = Matrix::zeros(m, dim);
+        self.beta_bar = Matrix::zeros(m, dim);
         self.z = Matrix::zeros(m, n);
-        self.t = Matrix::zeros(m, n);
-        self.dbeta = Matrix::zeros(m, n);
-        self.scratch = Matrix::zeros(m, n);
+        self.t = Matrix::zeros(m, dim);
+        self.dbeta = Matrix::zeros(m, dim);
+        self.scratch = Matrix::zeros(m, dim);
         self.f = Matrix::zeros(n, m);
         self.b = vec![0.0; m];
         self.b_prev = vec![0.0; m];
@@ -238,7 +257,7 @@ pub fn run_chunk_lockstep(
     if m == 0 {
         return;
     }
-    ws.ensure(m, n);
+    ws.ensure(m, n, basis.dim());
     // Gather the per-cell iterates into bundle rows.
     for (c, (_, _, state)) in cells.iter().enumerate() {
         ws.b[c] = state.b;

@@ -69,18 +69,19 @@ pub fn kkt_check(
     // tiny-eigenvalue directions barely move fitted values but carry the
     // subgradient identity nλα = z that this certificate verifies.
     let alpha = basis.alpha_from_beta(beta);
-    let mut scratch = vec![0.0; n];
+    let mut scratch = vec![0.0; basis.dim()];
     let mut f = vec![0.0; n];
     basis.fitted(b, beta, &mut scratch, &mut f);
 
-    // Rank-deficient bases (exact zero eigenvalues, e.g. the Nyström
-    // approximation of kernel::nystrom) cannot satisfy nλαᵢ = zᵢ
-    // elementwise — stationarity only holds on range(K̃). In that case we
-    // certify with an explicit subgradient candidate ĝ = clamp(nλα, ∂ρ):
-    // range-projected stationarity ‖Uᵀ_r(nλα − ĝ)‖∞ and b-stationarity
-    // |Σᵢ ĝᵢ|/n. For strictly positive spectra the elementwise box check
-    // (tighter) is used.
-    let rank_deficient = basis.lambda.iter().any(|&l| l == 0.0);
+    // Rank-deficient bases (exact zero eigenvalues, or a thin low-rank
+    // factor from kernel::nystrom whose span is a strict subspace of ℝⁿ)
+    // cannot satisfy nλαᵢ = zᵢ elementwise — stationarity only holds on
+    // range(K̃). In that case we certify with an explicit subgradient
+    // candidate ĝ = clamp(nλα, ∂ρ): range-projected stationarity
+    // ‖Uᵀ_r(nλα − ĝ)‖∞ and b-stationarity |Σᵢ ĝᵢ|/n. For strictly
+    // positive full-rank spectra the elementwise box check (tighter) is
+    // used.
+    let rank_deficient = basis.rank_deficient();
     let mut max_stat = 0.0f64;
     let mut sum_g = 0.0f64;
     let mut excess = vec![0.0f64; n];
@@ -98,7 +99,7 @@ pub fn kkt_check(
     }
     if rank_deficient {
         // project the excess onto the retained eigendirections
-        let mut e = vec![0.0; n];
+        let mut e = vec![0.0; basis.dim()];
         crate::linalg::gemv_t(&basis.u, &excess, &mut e);
         max_stat = 0.0;
         for (j, &l) in basis.lambda.iter().enumerate() {

@@ -23,7 +23,7 @@ pub mod kkt;
 use crate::backend::{Backend, NativeBackend};
 use crate::kernel::Kernel;
 use crate::linalg::{amax, Matrix};
-use crate::spectral::{SpectralBasis, SpectralPlan};
+use crate::spectral::{GramRepr, LowRankCoef, SpectralBasis, SpectralPlan};
 use anyhow::{bail, Result};
 use apgd::{ApgdState, ApgdWorkspace};
 pub use kkt::KktReport;
@@ -110,19 +110,37 @@ pub struct KqrFit {
     pub apgd_iters: usize,
     pub expansions: usize,
     pub singular_set: Vec<usize>,
+    /// The compressed low-rank predictor (landmarks + m-dim kernel
+    /// weights), present iff the fit was produced on a Nyström
+    /// [`GramRepr::LowRank`] basis. When present, `predict` uses it —
+    /// O(m·p) per point — and artifacts persist it instead of
+    /// (x_train, alpha), which is what makes low-rank artifacts O(m).
+    pub lowrank: Option<LowRankCoef>,
     /// Training inputs, `Arc`-shared with the solver (and with every
     /// other fit from the same solver), so a 50-λ path does not copy the
-    /// design matrix 50 times.
+    /// design matrix 50 times. Empty (0×p) for models reloaded from a
+    /// compressed low-rank artifact.
     x_train: Arc<Matrix>,
+    /// Training-set size (kept explicitly so compressed reloads still
+    /// report it).
+    n_train: usize,
     kernel: Kernel,
 }
 
 impl KqrFit {
     /// Predict the τ-th conditional quantile at the rows of `xt`.
     pub fn predict(&self, xt: &Matrix) -> Vec<f64> {
-        let cg = self.kernel.cross_gram(xt, &self.x_train);
         let mut out = vec![0.0; xt.rows()];
-        crate::linalg::gemv(&cg, &self.alpha, &mut out);
+        match &self.lowrank {
+            Some(lr) => {
+                let cg = self.kernel.cross_gram(xt, &lr.z);
+                crate::linalg::gemv(&cg, &lr.w, &mut out);
+            }
+            None => {
+                let cg = self.kernel.cross_gram(xt, &self.x_train);
+                crate::linalg::gemv(&cg, &self.alpha, &mut out);
+            }
+        }
         for o in out.iter_mut() {
             *o += self.b;
         }
@@ -130,7 +148,7 @@ impl KqrFit {
     }
 
     pub fn n_train(&self) -> usize {
-        self.x_train.rows()
+        self.n_train
     }
 
     /// The kernel this fit predicts with (artifact serialization).
@@ -144,8 +162,8 @@ impl KqrFit {
     }
 
     /// Assemble a fit from solver-owned parts (the lockstep grid driver
-    /// produces fits outside this module but must emit the same
-    /// self-contained value as [`KqrSolver::fit_warm_from`]).
+    /// and the artifact loader produce fits outside this module but must
+    /// emit the same self-contained value as [`KqrSolver::fit_warm_from`]).
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn assemble(
         tau: f64,
@@ -158,9 +176,11 @@ impl KqrFit {
         apgd_iters: usize,
         expansions: usize,
         singular_set: Vec<usize>,
+        lowrank: Option<LowRankCoef>,
         x_train: Arc<Matrix>,
         kernel: Kernel,
     ) -> KqrFit {
+        let n_train = x_train.rows();
         KqrFit {
             tau,
             lam,
@@ -172,7 +192,46 @@ impl KqrFit {
             apgd_iters,
             expansions,
             singular_set,
+            lowrank,
             x_train,
+            n_train,
+            kernel,
+        }
+    }
+
+    /// Assemble a fit from a compressed low-rank artifact: no training
+    /// inputs, no n-dimensional α — prediction goes through the
+    /// [`LowRankCoef`]. `p` is the feature dimension (for shape checks).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn assemble_compressed(
+        tau: f64,
+        lam: f64,
+        b: f64,
+        objective: f64,
+        kkt: KktReport,
+        gamma_final: f64,
+        apgd_iters: usize,
+        expansions: usize,
+        singular_set: Vec<usize>,
+        n_train: usize,
+        lowrank: LowRankCoef,
+        kernel: Kernel,
+    ) -> KqrFit {
+        let p = lowrank.z.cols();
+        KqrFit {
+            tau,
+            lam,
+            b,
+            alpha: Vec::new(),
+            objective,
+            kkt,
+            gamma_final,
+            apgd_iters,
+            expansions,
+            singular_set,
+            lowrank: Some(lowrank),
+            x_train: Arc::new(Matrix::zeros(0, p)),
+            n_train,
             kernel,
         }
     }
@@ -186,18 +245,19 @@ pub struct FitStats {
     pub gamma_levels: usize,
 }
 
-/// The KQR solver: data + kernel + eigenbasis + options.
+/// The KQR solver: data + kernel + Gram representation + options.
 ///
-/// The Gram matrix and eigenbasis are `Arc`-shared so any number of
+/// The Gram representation ([`GramRepr`]: exact dense matrix or Nyström
+/// thin factor) and its eigenbasis are `Arc`-shared so any number of
 /// solvers (CV folds at different τ, concurrent scheduler jobs, the
-/// engine's [`crate::engine::GramCache`]) can reuse one O(n³)
-/// factorization without copying O(n²) state.
+/// engine's [`crate::engine::GramCache`]) can reuse one factorization
+/// without copying O(n²) state.
 pub struct KqrSolver {
     pub x: Arc<Matrix>,
     pub y: Vec<f64>,
     pub kernel: Kernel,
-    /// Gram matrix (kept for the K_SS projection solves).
-    pub gram: Arc<Matrix>,
+    /// Gram representation (kept for the K_SS projection solves).
+    pub repr: GramRepr,
     pub basis: Arc<SpectralBasis>,
     pub opts: SolveOptions,
 }
@@ -213,14 +273,7 @@ impl KqrSolver {
         assert_eq!(x.rows(), y.len());
         let gram = Arc::new(kernel.gram(x));
         let basis = Arc::new(SpectralBasis::new(&gram)?);
-        Ok(KqrSolver {
-            x: Arc::new(x.clone()),
-            y: y.to_vec(),
-            kernel,
-            gram,
-            basis,
-            opts: SolveOptions::default(),
-        })
+        Ok(KqrSolver::with_repr(x, y, kernel, GramRepr::dense(gram, basis)))
     }
 
     /// Reuse an already-computed Gram matrix and basis (shared across
@@ -232,16 +285,24 @@ impl KqrSolver {
         gram: Arc<Matrix>,
         basis: Arc<SpectralBasis>,
     ) -> KqrSolver {
+        KqrSolver::with_repr(x, y, kernel, GramRepr::dense(gram, basis))
+    }
+
+    /// Build on an arbitrary Gram representation — the entry point of the
+    /// low-rank (Nyström) compute path.
+    pub fn with_repr(x: &Matrix, y: &[f64], kernel: Kernel, repr: GramRepr) -> KqrSolver {
+        KqrSolver::with_repr_arc(Arc::new(x.clone()), y, kernel, repr)
+    }
+
+    /// [`KqrSolver::with_repr`] with `Arc`-shared training inputs (the
+    /// engine passes its cache entry's copy, so fits from *different*
+    /// solvers on the same dataset still share one `x_train` pointer and
+    /// batch in `QuantileModel::predict`).
+    pub fn with_repr_arc(x: Arc<Matrix>, y: &[f64], kernel: Kernel, repr: GramRepr) -> KqrSolver {
         assert_eq!(x.rows(), y.len());
-        assert_eq!(basis.n, y.len());
-        KqrSolver {
-            x: Arc::new(x.clone()),
-            y: y.to_vec(),
-            kernel,
-            gram,
-            basis,
-            opts: SolveOptions::default(),
-        }
+        assert_eq!(repr.n(), y.len());
+        let basis = repr.basis().clone();
+        KqrSolver { x, y: y.to_vec(), kernel, repr, basis, opts: SolveOptions::default() }
     }
 
     pub fn with_options(mut self, opts: SolveOptions) -> KqrSolver {
@@ -253,6 +314,21 @@ impl KqrSolver {
         self.y.len()
     }
 
+    /// Dimension of the spectral iterate state (β): n for a dense basis,
+    /// the retained rank for a low-rank one.
+    pub fn state_dim(&self) -> usize {
+        self.basis.dim()
+    }
+
+    /// The materialized dense Gram matrix. Panics on a low-rank solver —
+    /// only the exact path keeps one (used by the dense baselines and the
+    /// ablation harnesses).
+    pub fn gram(&self) -> &Arc<Matrix> {
+        self.repr
+            .dense_gram()
+            .expect("dense Gram matrix is not materialized for a low-rank solver")
+    }
+
     /// Log-spaced λ grid from `max` down to `max·min_ratio` (descending,
     /// the warm-start order). See the free [`lambda_grid`].
     pub fn lambda_grid(&self, count: usize, max: f64, min_ratio: f64) -> Vec<f64> {
@@ -262,7 +338,7 @@ impl KqrSolver {
     /// Fit at a single (τ, λ) with the native backend.
     pub fn fit(&self, tau: f64, lam: f64) -> Result<KqrFit> {
         let mut backend = NativeBackend::new();
-        let mut state = ApgdState::zeros(self.n());
+        let mut state = ApgdState::zeros(self.state_dim());
         self.fit_warm(tau, lam, &mut state, &mut backend)
     }
 
@@ -284,7 +360,7 @@ impl KqrSolver {
         lambdas: &[f64],
         backend: &mut dyn Backend,
     ) -> Result<Vec<KqrFit>> {
-        let mut state = ApgdState::zeros(self.n());
+        let mut state = ApgdState::zeros(self.state_dim());
         let mut fits = Vec::with_capacity(lambdas.len());
         let mut gamma_start = self.opts.gamma_init;
         for &lam in lambdas {
@@ -325,11 +401,10 @@ impl KqrSolver {
         if lam <= 0.0 {
             bail!("lambda must be positive, got {lam}");
         }
-        let n = self.n();
         let yscale = amax(&self.y).max(1.0);
         let tol_abs = self.opts.apgd_tol;
         let band = self.opts.kkt_band * yscale;
-        let mut ws = ApgdWorkspace::new(n);
+        let mut ws = ApgdWorkspace::for_basis(&self.basis);
 
         let mut gamma = gamma_start.clamp(self.opts.gamma_min, self.opts.gamma_init);
         let mut total_iters = 0usize;
@@ -412,6 +487,9 @@ impl KqrSolver {
             &beta,
             &mut ws,
         );
+        // On a low-rank basis, compress the solution into the O(m)
+        // landmark predictor (w = map·β) alongside α.
+        let lowrank = self.repr.low_rank().map(|f| f.coef(&beta));
         Ok(KqrFit {
             tau,
             lam,
@@ -423,7 +501,9 @@ impl KqrSolver {
             apgd_iters: total_iters,
             expansions: total_expansions,
             singular_set: singular,
+            lowrank,
             x_train: self.x.clone(),
+            n_train: self.x.rows(),
             kernel: self.kernel.clone(),
         })
     }
@@ -503,7 +583,7 @@ impl KqrSolver {
     }
 
     fn project_onto(&self, s: &[usize], state: &mut ApgdState, ws: &mut ApgdWorkspace) {
-        project_equality(&self.gram, &self.basis, &self.y, s, &mut state.b, &mut state.beta, ws);
+        project_equality(&self.repr, &self.y, s, &mut state.b, &mut state.beta, ws);
         state.restart();
     }
 }
@@ -524,17 +604,49 @@ pub fn lambda_grid(count: usize, max: f64, min_ratio: f64) -> Vec<f64> {
         .collect()
 }
 
+/// Batched prediction rows: one multi-RHS GEMM for k coefficient vectors
+/// against one shared cross-Gram matrix (t×d), plus per-row intercepts.
+/// Row i is bitwise equal to the per-fit `gemv(cg, coefs[i])` path at any
+/// worker count (`gemm_nt_into` computes every element with the identical
+/// serial dot kernel), so batching sets never changes predictions — it
+/// only stops re-evaluating the kernel once per fit.
+pub(crate) fn predict_rows(coefs: &[&[f64]], bs: &[f64], cg: &Matrix) -> Vec<Vec<f64>> {
+    let k = coefs.len();
+    debug_assert_eq!(bs.len(), k);
+    let (t, d) = (cg.rows(), cg.cols());
+    let mut coef = Matrix::zeros(k, d);
+    for (r, c) in coefs.iter().enumerate() {
+        debug_assert_eq!(c.len(), d);
+        coef.row_mut(r).copy_from_slice(c);
+    }
+    let mut out = Matrix::zeros(k, t);
+    let workers = crate::linalg::par::global().workers_for(t.min(d));
+    crate::linalg::gemm_nt_into(&coef, cg, &mut out, workers);
+    (0..k)
+        .map(|r| {
+            let mut row = out.row(r).to_vec();
+            for v in &mut row {
+                *v += bs[r];
+            }
+            row
+        })
+        .collect()
+}
+
 /// Shared equality-constraint projection (used by both KQR and NCKQR; see
-/// `KqrSolver::project_onto` for the derivation and numerics).
+/// `KqrSolver::project_onto` for the derivation and numerics). Works on
+/// any [`GramRepr`]: the dense path indexes the stored K (bitwise as
+/// before); the low-rank path reconstructs K̃_SS from the thin factor in
+/// O(|S|²·r) without materializing n×n state.
 pub(crate) fn project_equality(
-    gram: &Matrix,
-    basis: &SpectralBasis,
+    repr: &GramRepr,
     y: &[f64],
     s: &[usize],
     b: &mut f64,
     beta: &mut [f64],
     ws: &mut ApgdWorkspace,
 ) {
+    let basis = repr.basis();
     let m = s.len();
     if m == 0 {
         return;
@@ -549,7 +661,7 @@ pub(crate) fn project_equality(
     // c on S
     let c: Vec<f64> = s.iter().map(|&i| y[i] - b_new - ws.f[i]).collect();
     // K_SS (+ escalating ridge) ν = c
-    let mut kss = Matrix::from_fn(m, m, |a, bidx| gram[(s[a], s[bidx])]);
+    let mut kss = repr.kss(s);
     let base = (0..m).map(|a| kss[(a, a)]).sum::<f64>() / m as f64;
     let mut ridge = 1e-12 * base.max(1e-12);
     let nu = loop {

@@ -39,13 +39,26 @@
 //!   two GEMMs per bundle iteration instead of two GEMVs per cell, with
 //!   the sequential path kept as the bitwise parity oracle.
 //!
+//! The **scale axis** is the first-class Gram representation
+//! ([`spectral::GramRepr`]): every layer — solvers, KKT certificates,
+//! the eq.-(8)/(19) projection solves, the engine cache, the lockstep
+//! grid driver, CV, artifacts — operates on either the exact dense n×n
+//! matrix (the default and the bitwise oracle) or a rank-m **Nyström
+//! thin factor** ([`kernel::nystrom`]): O(n·m) memory, O(n·m²+m³)
+//! setup, no n×n materialization and no zero-padding anywhere, which
+//! lifts the n ≫ 10⁴ cap. [`engine::ApproxSpec`] keys the GramCache so
+//! exact and approximate bases for one dataset coexist; fitted models
+//! carry a compressed O(m) landmark predictor that persists as an O(m)
+//! artifact and predicts in O(m·p) per point.
+//!
 //! On top of the engine sits the declarative **fit API** ([`api`]): a
-//! serializable [`api::FitSpec`] (kernel + task + option overrides)
-//! executed by [`engine::FitEngine::run`] into a unified
-//! [`api::QuantileModel`] with one `predict`/`taus`/`diagnostics`
-//! surface and versioned save/load artifacts. The CLI subcommands, the
-//! TCP protocol and the CV driver are all thin shells over this one
-//! entry point.
+//! serializable [`api::FitSpec`] (kernel — optionally with a Nyström
+//! `approx` block — + task + option overrides + a master `seed` that
+//! pins landmark sampling and CV fold shuffling) executed by
+//! [`engine::FitEngine::run`] into a unified [`api::QuantileModel`]
+//! with one `predict`/`taus`/`diagnostics` surface and versioned
+//! save/load artifacts. The CLI subcommands, the TCP protocol and the
+//! CV driver are all thin shells over this one entry point.
 //!
 //! Quick start (native backend):
 //!
@@ -85,11 +98,12 @@ pub mod prelude {
     pub use crate::backend::Backend;
     pub use crate::cv::{cross_validate, CvResult};
     pub use crate::data::{Dataset, Rng};
-    pub use crate::engine::{EngineConfig, FitEngine, GridFit, LockstepStats};
+    pub use crate::engine::{ApproxSpec, EngineConfig, FitEngine, GridFit, LockstepStats};
     pub use crate::kernel::{median_heuristic_sigma, Kernel};
     pub use crate::kqr::{KqrFit, KqrSolver, SolveOptions};
     pub use crate::nckqr::{NcOptions, NckqrFit, NckqrSolver};
     pub use crate::smooth::pinball_loss;
+    pub use crate::spectral::{GramRepr, LowRankCoef, LowRankFactor};
 }
 
 /// Crate version string (reported by the CLI and the server banner).

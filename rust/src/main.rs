@@ -5,7 +5,8 @@
 //! fits on the same data in one process share one eigendecomposition).
 //!
 //! Subcommands:
-//!   fit        fit one KQR model on a named workload (--save <file>)
+//!   fit        fit one KQR model on a named workload (--save <file>,
+//!              --nystrom <m> for the low-rank Gram representation)
 //!   path       warm-started λ path at one τ
 //!   grid       full τ×λ grid on one cached basis (--lockstep/--no-lockstep)
 //!   cv         k-fold cross-validated path (+ refit at the best λ)
@@ -20,11 +21,16 @@
 //!
 //! Common options: --data yuan|friedman|sine|gagurine|mcycle|crabs|boston
 //! --n --p --tau --lambda --backend native|xla --seed; see DESIGN.md §5.
-//! Statistical flags (σ, τ, λ, folds, …) are parsed strictly: a
-//! malformed value is an error, never a silent default.
+//! `--nystrom <m>` switches every fitting subcommand to the rank-m
+//! low-rank (Nyström) Gram representation — no n×n matrix, O(n·m)
+//! memory — with landmark sampling seeded by `--seed` (default 2024) so
+//! runs are reproducible. Statistical flags (σ, τ, λ, folds, …) are
+//! parsed strictly: a malformed value is an error, never a silent
+//! default.
 
 use anyhow::{bail, Result};
 use fastkqr::api::{FitSpec, KernelSpec, QuantileModel};
+use fastkqr::engine::ApproxSpec;
 use fastkqr::coordinator::{Server, ServerConfig};
 use fastkqr::data::{benchmarks, synth, Dataset, Rng};
 use fastkqr::engine::FitEngine;
@@ -112,19 +118,34 @@ fn kernel_from_args(args: &Args) -> Result<KernelSpec> {
     }
 }
 
-/// The shared spec builder: dataset + kernel + backend hint. Every
-/// fitting subcommand (fit/path/grid/nckqr/cv) attaches its task to this.
+/// The shared spec builder: dataset + kernel + approx + backend hint.
+/// Every fitting subcommand (fit/path/grid/nckqr/cv) attaches its task to
+/// this. `--nystrom <m>` selects the rank-m low-rank representation,
+/// seeded by `--seed` (the spec's master seed, default 2024).
 fn spec_from_args(args: &Args, task: fastkqr::api::Task) -> Result<FitSpec> {
     let data = dataset_from_args(args)?;
     let kernel = kernel_from_args(args)?;
+    let seed = args.try_usize("seed", 2024)? as u64;
     let name = data.name.clone();
-    let mut spec = FitSpec::new(data.x, data.y, kernel, task);
+    let mut spec = FitSpec::new(data.x, data.y, kernel, task).with_seed(seed);
+    if let Some(mstr) = args.get("nystrom") {
+        let m: usize = mstr
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--nystrom: expected a positive integer, got {mstr:?}"))?;
+        if m == 0 {
+            bail!("--nystrom must be >= 1");
+        }
+        spec = spec.with_approx(ApproxSpec::Nystrom { m, seed });
+    }
     match args.get_str("backend", "native") {
         "native" => {}
         other @ "xla" => spec = spec.with_backend(other),
         other => bail!("unknown --backend {other:?} (native|xla)"),
     }
     println!("dataset        {name}  (n={}, p={})", spec.x.rows(), spec.x.cols());
+    if let ApproxSpec::Nystrom { m, seed } = spec.approx {
+        println!("gram repr      nystrom (m={m}, seed={seed}; O(n·m) memory)");
+    }
     Ok(spec)
 }
 

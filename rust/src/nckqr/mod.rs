@@ -23,9 +23,10 @@ pub mod plan;
 use crate::kernel::Kernel;
 use crate::kqr::apgd::ApgdWorkspace;
 use crate::kqr::kkt::KktReport;
-use crate::linalg::{amax, gemv, Matrix};
+use crate::kqr::predict_rows;
+use crate::linalg::{amax, Matrix};
 use crate::smooth::{h_gamma_prime, rho_subgradient, rho_tau, smooth_relu, smooth_relu_prime};
-use crate::spectral::SpectralBasis;
+use crate::spectral::{GramRepr, SpectralBasis};
 use anyhow::{bail, Result};
 use plan::NcPlan;
 use std::sync::Arc;
@@ -79,6 +80,19 @@ pub struct LevelCoef {
     pub alpha: Vec<f64>,
 }
 
+/// Compressed low-rank predictor for a multi-level fit: one m-dim weight
+/// vector per level over the shared landmark set (see
+/// [`crate::spectral::LowRankCoef`] for the single-level analogue).
+#[derive(Clone, Debug)]
+pub struct NcLowRank {
+    /// Landmark inputs (m×p), `Arc`-shared with the solver's factor.
+    pub z: Arc<Matrix>,
+    /// Landmark row indices into the training set (provenance).
+    pub landmarks: Vec<usize>,
+    /// Per-level kernel weights (aligned with `NckqrFit::levels`).
+    pub w: Vec<Vec<f64>>,
+}
+
 /// A fitted NCKQR model.
 #[derive(Clone, Debug)]
 pub struct NckqrFit {
@@ -95,37 +109,59 @@ pub struct NckqrFit {
     /// computed by the solver from the fitted values it already holds —
     /// consumers must not rebuild the n×n cross-Gram just to count them.
     pub train_crossings: usize,
+    /// Compressed low-rank predictor, present iff the fit was produced on
+    /// a Nyström basis; `predict` routes through it (m kernel evaluations
+    /// per point per level) and artifacts persist it instead of
+    /// (x_train, α).
+    pub lowrank: Option<NcLowRank>,
     /// Training inputs, `Arc`-shared with the solver (and with every fit
-    /// from the same solver), like [`crate::kqr::KqrFit`].
+    /// from the same solver), like [`crate::kqr::KqrFit`]. Empty (0×p)
+    /// for models reloaded from a compressed low-rank artifact.
     x_train: Arc<Matrix>,
+    /// Training-set size (kept explicitly so compressed reloads still
+    /// report it).
+    n_train: usize,
     kernel: Kernel,
 }
 
 impl NckqrFit {
     /// Predict all T quantile curves at the rows of `xt`; returns one
     /// vector per level (same order as `taus`).
+    ///
+    /// One cross-Gram + one multi-RHS GEMM for the whole level set —
+    /// never per-row kernel evaluations — on both the dense and low-rank
+    /// representations.
     pub fn predict(&self, xt: &Matrix) -> Vec<Vec<f64>> {
-        let cg = self.kernel.cross_gram(xt, &self.x_train);
-        self.predict_from_cross_gram(&cg)
+        match &self.lowrank {
+            Some(lr) => {
+                let cg = self.kernel.cross_gram(xt, &lr.z);
+                let coefs: Vec<&[f64]> = lr.w.iter().map(Vec::as_slice).collect();
+                let bs: Vec<f64> = self.levels.iter().map(|lv| lv.b).collect();
+                predict_rows(&coefs, &bs, &cg)
+            }
+            None => {
+                let cg = self.kernel.cross_gram(xt, &self.x_train);
+                self.predict_from_cross_gram(&cg)
+            }
+        }
     }
 
     /// Predict from a precomputed cross-Gram matrix (rows = evaluation
     /// points, columns = training points). Lets consumers that already
     /// hold the training Gram (the solver, the engine cache) evaluate at
     /// the training points without rebuilding an n×n kernel matrix.
+    /// Dense-coefficient path only (the low-rank predictor's support set
+    /// is the landmark set, not the training set).
     pub fn predict_from_cross_gram(&self, cg: &Matrix) -> Vec<Vec<f64>> {
         assert_eq!(cg.cols(), self.x_train.rows());
-        self.levels
-            .iter()
-            .map(|lv| {
-                let mut out = vec![0.0; cg.rows()];
-                gemv(cg, &lv.alpha, &mut out);
-                for o in out.iter_mut() {
-                    *o += lv.b;
-                }
-                out
-            })
-            .collect()
+        let coefs: Vec<&[f64]> = self.levels.iter().map(|lv| lv.alpha.as_slice()).collect();
+        let bs: Vec<f64> = self.levels.iter().map(|lv| lv.b).collect();
+        predict_rows(&coefs, &bs, cg)
+    }
+
+    /// Training-set size.
+    pub fn n_train(&self) -> usize {
+        self.n_train
     }
 
     /// Count crossing violations on a set of evaluation points: pairs
@@ -161,6 +197,7 @@ impl NckqrFit {
         x_train: Arc<Matrix>,
         kernel: Kernel,
     ) -> NckqrFit {
+        let n_train = x_train.rows();
         NckqrFit {
             taus,
             lam1,
@@ -171,7 +208,45 @@ impl NckqrFit {
             mm_iters,
             gamma_final,
             train_crossings,
+            lowrank: None,
             x_train,
+            n_train,
+            kernel,
+        }
+    }
+
+    /// Assemble a fit from a compressed low-rank artifact: no training
+    /// inputs, no n-dimensional α per level — prediction goes through the
+    /// [`NcLowRank`] weights.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn assemble_compressed(
+        taus: Vec<f64>,
+        lam1: f64,
+        lam2: f64,
+        levels: Vec<LevelCoef>,
+        objective: f64,
+        kkt: KktReport,
+        mm_iters: usize,
+        gamma_final: f64,
+        train_crossings: usize,
+        n_train: usize,
+        lowrank: NcLowRank,
+        kernel: Kernel,
+    ) -> NckqrFit {
+        let p = lowrank.z.cols();
+        NckqrFit {
+            taus,
+            lam1,
+            lam2,
+            levels,
+            objective,
+            kkt,
+            mm_iters,
+            gamma_final,
+            train_crossings,
+            lowrank: Some(lowrank),
+            x_train: Arc::new(Matrix::zeros(0, p)),
+            n_train,
             kernel,
         }
     }
@@ -240,7 +315,8 @@ pub struct NckqrSolver {
     pub x: Arc<Matrix>,
     pub y: Vec<f64>,
     pub kernel: Kernel,
-    pub gram: Arc<Matrix>,
+    /// Gram representation (kept for the eq.-(19) K_SS projection solves).
+    pub repr: GramRepr,
     pub basis: Arc<SpectralBasis>,
     pub taus: Vec<f64>,
     pub opts: NcOptions,
@@ -255,18 +331,9 @@ impl NckqrSolver {
         if x.rows() != y.len() {
             bail!("rows(x)={} != len(y)={}", x.rows(), y.len());
         }
-        let ts = normalize_taus(taus)?;
         let gram = Arc::new(kernel.gram(x));
         let basis = Arc::new(SpectralBasis::new(&gram)?);
-        Ok(NckqrSolver {
-            x: Arc::new(x.clone()),
-            y: y.to_vec(),
-            kernel,
-            gram,
-            basis,
-            taus: ts,
-            opts: NcOptions::default(),
-        })
+        NckqrSolver::with_repr(x, y, kernel, taus, GramRepr::dense(gram, basis))
     }
 
     /// Reuse an already-computed Gram matrix and basis (engine-cached, or
@@ -279,22 +346,56 @@ impl NckqrSolver {
         gram: Arc<Matrix>,
         basis: Arc<SpectralBasis>,
     ) -> Result<NckqrSolver> {
+        NckqrSolver::with_repr(x, y, kernel, taus, GramRepr::dense(gram, basis))
+    }
+
+    /// Build on an arbitrary Gram representation — the entry point of the
+    /// low-rank (Nyström) compute path.
+    pub fn with_repr(
+        x: &Matrix,
+        y: &[f64],
+        kernel: Kernel,
+        taus: &[f64],
+        repr: GramRepr,
+    ) -> Result<NckqrSolver> {
+        NckqrSolver::with_repr_arc(Arc::new(x.clone()), y, kernel, taus, repr)
+    }
+
+    /// [`NckqrSolver::with_repr`] with `Arc`-shared training inputs (the
+    /// engine passes its cache entry's copy — see
+    /// [`crate::engine::BasisEntry`]).
+    pub fn with_repr_arc(
+        x: Arc<Matrix>,
+        y: &[f64],
+        kernel: Kernel,
+        taus: &[f64],
+        repr: GramRepr,
+    ) -> Result<NckqrSolver> {
         if x.rows() != y.len() {
             bail!("rows(x)={} != len(y)={}", x.rows(), y.len());
         }
-        if basis.n != y.len() {
-            bail!("basis dimension {} != len(y)={}", basis.n, y.len());
+        if repr.n() != y.len() {
+            bail!("basis dimension {} != len(y)={}", repr.n(), y.len());
         }
         let ts = normalize_taus(taus)?;
+        let basis = repr.basis().clone();
         Ok(NckqrSolver {
-            x: Arc::new(x.clone()),
+            x,
             y: y.to_vec(),
             kernel,
-            gram,
+            repr,
             basis,
             taus: ts,
             opts: NcOptions::default(),
         })
+    }
+
+    /// The materialized dense Gram matrix. Panics on a low-rank solver —
+    /// only the exact path keeps one (dense baselines / ablations).
+    pub fn gram(&self) -> &Arc<Matrix> {
+        self.repr
+            .dense_gram()
+            .expect("dense Gram matrix is not materialized for a low-rank solver")
     }
 
     pub fn with_options(mut self, opts: NcOptions) -> NckqrSolver {
@@ -334,12 +435,13 @@ impl NckqrSolver {
     }
 
     fn init_state(&self) -> Vec<LevelState> {
+        let dim = self.basis.dim();
         (0..self.t_levels())
             .map(|_| LevelState {
                 b: 0.0,
-                beta: vec![0.0; self.n()],
+                beta: vec![0.0; dim],
                 b_prev: 0.0,
-                beta_prev: vec![0.0; self.n()],
+                beta_prev: vec![0.0; dim],
             })
             .collect()
     }
@@ -362,11 +464,10 @@ impl NckqrSolver {
         if lam2 <= 0.0 {
             bail!("lambda2 must be positive, got {lam2}");
         }
-        let n = self.n();
         let t_lv = self.t_levels();
         let yscale = amax(&self.y).max(1.0);
         let band = self.opts.kkt_band * yscale;
-        let mut ws = ApgdWorkspace::new(n);
+        let mut ws = ApgdWorkspace::for_basis(&self.basis);
 
         let mut gamma = gamma_start.clamp(self.opts.gamma_min, self.opts.gamma_init);
         let mut total_iters = 0usize;
@@ -428,6 +529,13 @@ impl NckqrSolver {
         let fs = self.fitted_levels(&best_state, &mut ws);
         let objective = self.exact_objective(lam1, lam2, &best_state, &fs);
         let train_crossings = count_crossings_in(&fs, 1e-9);
+        // On a low-rank basis, compress every level into the O(m)
+        // landmark predictor (w_t = map·β_t) alongside α.
+        let lowrank = self.repr.low_rank().map(|f| NcLowRank {
+            z: f.z.clone(),
+            landmarks: f.landmarks.clone(),
+            w: (0..t_lv).map(|t| f.coef(&best_state[t].beta).w).collect(),
+        });
         Ok(NckqrFit {
             taus: self.taus.clone(),
             lam1,
@@ -438,7 +546,9 @@ impl NckqrSolver {
             mm_iters: total_iters,
             gamma_final,
             train_crossings,
+            lowrank,
             x_train: self.x.clone(),
+            n_train: self.x.rows(),
             kernel: self.kernel.clone(),
         })
     }
@@ -479,8 +589,7 @@ impl NckqrSolver {
                         let lv = &mut state[t];
                         let LevelState { b, beta, .. } = lv;
                         crate::kqr::project_equality(
-                            &self.gram,
-                            &self.basis,
+                            &self.repr,
                             &self.y,
                             &s_hat[t],
                             b,
@@ -528,6 +637,7 @@ impl NckqrSolver {
     ) -> Result<usize> {
         let n = self.n();
         let nf = n as f64;
+        let dim = self.basis.dim();
         let t_lv = self.t_levels();
         let gamma = plan.gamma;
         let lam1 = plan.lam1;
@@ -535,7 +645,7 @@ impl NckqrSolver {
         let mut qs = vec![vec![0.0; n]; t_lv.saturating_sub(1)];
         let mut w = vec![0.0; n];
         let mut bars: Vec<(f64, Vec<f64>)> =
-            (0..t_lv).map(|_| (0.0, vec![0.0; n])).collect();
+            (0..t_lv).map(|_| (0.0, vec![0.0; dim])).collect();
         let mut ck = 1.0f64;
         let mut iters = 0usize;
         loop {
@@ -545,7 +655,7 @@ impl NckqrSolver {
             for t in 0..t_lv {
                 let lv = &state[t];
                 bars[t].0 = lv.b + mom * (lv.b - lv.b_prev);
-                for i in 0..n {
+                for i in 0..dim {
                     bars[t].1[i] = lv.beta[i] + mom * (lv.beta[i] - lv.beta_prev[i]);
                 }
                 self.basis.fitted(bars[t].0, &bars[t].1, &mut ws.scratch, &mut fs[t]);
@@ -572,7 +682,7 @@ impl NckqrSolver {
                 let lv = &mut state[t];
                 lv.b_prev = lv.b;
                 lv.b = bars[t].0 + db;
-                for i in 0..n {
+                for i in 0..dim {
                     lv.beta_prev[i] = lv.beta[i];
                     lv.beta[i] = bars[t].1[i] + ws.dbeta[i];
                 }
@@ -590,7 +700,7 @@ impl NckqrSolver {
         let n = self.n();
         let nf = n as f64;
         let t_lv = self.t_levels();
-        let mut scratch = vec![0.0; n];
+        let mut scratch = vec![0.0; self.basis.dim()];
         let mut fs = vec![vec![0.0; n]; t_lv];
         for t in 0..t_lv {
             self.basis.fitted(state[t].b, &state[t].beta, &mut scratch, &mut fs[t]);
@@ -782,7 +892,7 @@ mod tests {
             &y,
             kernel,
             &[0.3, 0.7],
-            fresh.gram.clone(),
+            fresh.gram().clone(),
             fresh.basis.clone(),
         )
         .unwrap();

@@ -124,6 +124,14 @@ impl XlaBackend {
         y: &[f64],
     ) -> Result<()> {
         let n = basis.n;
+        if basis.dim() != n {
+            bail!(
+                "XlaBackend requires a square (dense) spectral basis: the AOT \
+                 artifacts are compiled for n×n U, got a rank-{} thin factor \
+                 (use the native backend for low-rank/Nyström bases)",
+                basis.dim()
+            );
+        }
         let key = (n, basis.u.as_slice().as_ptr() as usize);
         let plan_key = (plan.gamma, plan.lam);
         let need_problem =

@@ -1,0 +1,191 @@
+//! First-class Gram representations: dense n×n vs low-rank thin factor.
+//!
+//! Everything downstream of the kernel — the solvers, the engine cache,
+//! the lockstep grid driver, the artifacts — touches the Gram matrix
+//! through a [`GramRepr`] instead of assuming a materialized n×n matrix:
+//!
+//! - [`GramRepr::Dense`]: the exact path (bitwise-identical to the
+//!   historical code): the n×n Gram matrix plus its full eigenbasis.
+//! - [`GramRepr::LowRank`]: a rank-r Nyström factor K̃ = UΛUᵀ with U an
+//!   n×r **thin** matrix (orthonormal columns) — no n×n materialization
+//!   and no zero-padding anywhere. Every spectral operation costs
+//!   O(n·r) per apply, Gram entries are reconstructed on demand in O(r),
+//!   and the factor carries what a *compressed* predictor needs: the
+//!   landmark inputs Z (m×p) and the coefficient map `map` (m×r) with
+//!   w = map·β such that f(x) = b + Σⱼ wⱼ k(x, zⱼ) reproduces the
+//!   in-RKHS fitted values k̃(x, X)α exactly.
+//!
+//! This is the abstraction that lifts the n ≫ 10⁴ cap: O(n·m) memory and
+//! O(n·m² + m³) setup instead of O(n²) / O(n³) (see `kernel::nystrom`).
+
+use super::SpectralBasis;
+use crate::linalg::Matrix;
+use std::sync::Arc;
+
+/// Low-rank Nyström factorization K̃ = UΛUᵀ of an (implicit) kernel
+/// matrix, produced by [`crate::kernel::nystrom::nystrom`].
+#[derive(Clone, Debug)]
+pub struct LowRankFactor {
+    /// Thin spectral basis: `u` is n×r with orthonormal columns, `lambda`
+    /// the r strictly positive eigenvalues (ascending), `u1 = Uᵀ1` — the
+    /// same invariants as the dense basis, at rank r instead of n.
+    pub basis: Arc<SpectralBasis>,
+    /// Landmark row indices into the training set (sorted; provenance).
+    pub landmarks: Vec<usize>,
+    /// Landmark inputs Z (m×p) — the compressed predictor's support set.
+    pub z: Arc<Matrix>,
+    /// Coefficient map (m×r): w = map·β turns spectral coordinates into
+    /// m-dimensional kernel weights with k(X, Z)·w = UΛβ exactly.
+    pub map: Matrix,
+}
+
+impl LowRankFactor {
+    /// Compress spectral coordinates β into the m-dimensional predictor
+    /// w = map·β (see [`LowRankCoef`]).
+    pub fn coef(&self, beta: &[f64]) -> LowRankCoef {
+        let mut w = vec![0.0; self.map.rows()];
+        crate::linalg::gemv(&self.map, beta, &mut w);
+        LowRankCoef { z: self.z.clone(), landmarks: self.landmarks.clone(), w }
+    }
+}
+
+/// The compressed low-rank predictor of one fit: f(x) = b + Σⱼ wⱼ k(x, zⱼ).
+/// O(m·p) per prediction and O(m) artifact size instead of O(n).
+#[derive(Clone, Debug)]
+pub struct LowRankCoef {
+    /// Landmark inputs (m×p), `Arc`-shared across every fit of a solver.
+    pub z: Arc<Matrix>,
+    /// Landmark row indices into the original training set (provenance).
+    pub landmarks: Vec<usize>,
+    /// Kernel weights over the landmarks (length m).
+    pub w: Vec<f64>,
+}
+
+/// How a solver sees its kernel matrix (see module docs).
+#[derive(Clone, Debug)]
+pub enum GramRepr {
+    /// Exact: materialized n×n Gram matrix + full eigenbasis.
+    Dense { gram: Arc<Matrix>, basis: Arc<SpectralBasis> },
+    /// Nyström: rank-r thin factor, no n×n anywhere.
+    LowRank(Arc<LowRankFactor>),
+}
+
+impl GramRepr {
+    pub fn dense(gram: Arc<Matrix>, basis: Arc<SpectralBasis>) -> GramRepr {
+        debug_assert_eq!(gram.rows(), basis.n);
+        GramRepr::Dense { gram, basis }
+    }
+
+    /// The spectral basis (full for dense, thin for low-rank).
+    pub fn basis(&self) -> &Arc<SpectralBasis> {
+        match self {
+            GramRepr::Dense { basis, .. } => basis,
+            GramRepr::LowRank(f) => &f.basis,
+        }
+    }
+
+    /// Number of data points.
+    pub fn n(&self) -> usize {
+        self.basis().n
+    }
+
+    /// Spectral dimension (n for dense, rank r for low-rank).
+    pub fn dim(&self) -> usize {
+        self.basis().dim()
+    }
+
+    pub fn is_low_rank(&self) -> bool {
+        matches!(self, GramRepr::LowRank(_))
+    }
+
+    pub fn low_rank(&self) -> Option<&Arc<LowRankFactor>> {
+        match self {
+            GramRepr::LowRank(f) => Some(f),
+            GramRepr::Dense { .. } => None,
+        }
+    }
+
+    /// The dense Gram matrix, when materialized (exact path only).
+    pub fn dense_gram(&self) -> Option<&Arc<Matrix>> {
+        match self {
+            GramRepr::Dense { gram, .. } => Some(gram),
+            GramRepr::LowRank(_) => None,
+        }
+    }
+
+    /// One Gram entry: K(i,j) for dense, K̃(i,j) = Σₖ uᵢₖ λₖ uⱼₖ (O(r))
+    /// for low-rank.
+    pub fn entry(&self, i: usize, j: usize) -> f64 {
+        match self {
+            GramRepr::Dense { gram, .. } => gram[(i, j)],
+            GramRepr::LowRank(f) => {
+                let b = &f.basis;
+                b.u.row(i)
+                    .iter()
+                    .zip(b.u.row(j))
+                    .zip(&b.lambda)
+                    .map(|((ui, uj), l)| ui * l * uj)
+                    .sum()
+            }
+        }
+    }
+
+    /// The |S|×|S| principal submatrix K_SS — the eq.-(8)/(19) projection
+    /// system. Dense indexes the stored matrix (bitwise-identical to the
+    /// historical path); low-rank reconstructs it from the factor in
+    /// O(|S|²·r).
+    pub fn kss(&self, s: &[usize]) -> Matrix {
+        match self {
+            GramRepr::Dense { gram, .. } => {
+                Matrix::from_fn(s.len(), s.len(), |a, b| gram[(s[a], s[b])])
+            }
+            GramRepr::LowRank(_) => {
+                Matrix::from_fn(s.len(), s.len(), |a, b| self.entry(s[a], s[b]))
+            }
+        }
+    }
+
+    /// Total f64s held by this representation — the accounting hook the
+    /// no-n×n-allocation tests assert on. Dense is Θ(n²); low-rank is
+    /// Θ(n·r + m·(p + r)).
+    pub fn memory_floats(&self) -> usize {
+        let b = self.basis();
+        let basis_floats = b.u.rows() * b.u.cols() + b.lambda.len() + b.u1.len();
+        match self {
+            GramRepr::Dense { gram, .. } => gram.rows() * gram.cols() + basis_floats,
+            GramRepr::LowRank(f) => {
+                basis_floats
+                    + f.z.rows() * f.z.cols()
+                    + f.map.rows() * f.map.cols()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::kernel::Kernel;
+
+    #[test]
+    fn dense_repr_mirrors_gram_entries() {
+        let mut rng = Rng::new(3);
+        let x = Matrix::from_fn(10, 2, |_, _| rng.normal());
+        let gram = Arc::new(Kernel::Rbf { sigma: 1.0 }.gram(&x));
+        let basis = Arc::new(SpectralBasis::new(&gram).unwrap());
+        let repr = GramRepr::dense(gram.clone(), basis);
+        assert!(!repr.is_low_rank());
+        assert_eq!(repr.n(), 10);
+        assert_eq!(repr.dim(), 10);
+        assert_eq!(repr.entry(2, 7), gram[(2, 7)]);
+        let s = [1usize, 4, 8];
+        let kss = repr.kss(&s);
+        for a in 0..3 {
+            for b in 0..3 {
+                assert_eq!(kss[(a, b)], gram[(s[a], s[b])]);
+            }
+        }
+        assert!(repr.memory_floats() >= 2 * 100);
+    }
+}

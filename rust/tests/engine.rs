@@ -5,7 +5,7 @@
 use fastkqr::coordinator::{FitJob, JobSpec, Scheduler};
 use fastkqr::cv::{cross_validate_on, fold_assignment};
 use fastkqr::data::{synth, Rng};
-use fastkqr::engine::{CacheMetrics, EngineConfig, FitEngine};
+use fastkqr::engine::{ApproxSpec, CacheMetrics, EngineConfig, FitEngine};
 use fastkqr::kernel::Kernel;
 use fastkqr::kqr::SolveOptions;
 use fastkqr::linalg::{blas, par, Matrix, Parallelism};
@@ -109,16 +109,20 @@ fn cv_folds_and_refit_hit_cache_on_rerun() {
     let k = 3;
 
     let mut rng_cv = Rng::new(9);
-    let first = cross_validate_on(&engine, &data, &kernel, 0.5, &lams, k, &opts, &mut rng_cv)
-        .unwrap();
+    let first = cross_validate_on(
+        &engine, &data, &kernel, 0.5, &lams, k, &opts, ApproxSpec::Exact, &mut rng_cv,
+    )
+    .unwrap();
     // k fold bases + 1 full-data refit basis
     let after_first = CacheMetrics::get(&engine.cache.metrics.decompositions);
     assert_eq!(after_first, (k + 1) as u64, "one basis per fold + refit");
 
     // identical seed → identical folds → every basis is a cache hit
     let mut rng_cv2 = Rng::new(9);
-    let second = cross_validate_on(&engine, &data, &kernel, 0.5, &lams, k, &opts, &mut rng_cv2)
-        .unwrap();
+    let second = cross_validate_on(
+        &engine, &data, &kernel, 0.5, &lams, k, &opts, ApproxSpec::Exact, &mut rng_cv2,
+    )
+    .unwrap();
     assert_eq!(
         CacheMetrics::get(&engine.cache.metrics.decompositions),
         after_first,

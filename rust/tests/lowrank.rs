@@ -1,0 +1,342 @@
+//! End-to-end tests of the low-rank (Nyström) compute path: exactness
+//! ladder at m = n, compressed O(m) artifacts, cache coexistence,
+//! lockstep-on-thin-basis parity and the no-n×n-allocation accounting.
+
+use fastkqr::api::{FitSpec, KernelSpec, QuantileModel};
+use fastkqr::data::{synth, Rng};
+use fastkqr::engine::{ApproxSpec, CacheMetrics, EngineConfig, FitEngine};
+use fastkqr::kernel::Kernel;
+use fastkqr::kqr::SolveOptions;
+use fastkqr::linalg::Parallelism;
+use fastkqr::nckqr::NcOptions;
+
+fn temp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "fastkqr-lowrank-{tag}-{}-{}.json",
+        std::process::id(),
+        std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH).unwrap().as_nanos()
+    ))
+}
+
+fn fixture(n: usize, seed: u64) -> (fastkqr::data::Dataset, Kernel) {
+    let mut rng = Rng::new(seed);
+    let data = synth::sine_hetero(n, &mut rng);
+    (data, Kernel::Rbf { sigma: 0.5 })
+}
+
+/// Tight options so both the exact and the m = n Nyström solve follow
+/// the same trajectory to (numerically) the same minimizer: the
+/// remaining gap is then the K̃ − K factorization noise, not solver
+/// slack, and certificate decisions sit far from their thresholds.
+fn tight_opts() -> SolveOptions {
+    SolveOptions {
+        apgd_tol: 1e-8,
+        kkt_tol: 1e-4,
+        max_iters: 100_000,
+        ..SolveOptions::default()
+    }
+}
+
+/// Nyström exactness ladder (KQR): the objective gap shrinks with m and
+/// at m = n the approximate fit reproduces the exact one to ≤ 1e-8.
+#[test]
+fn nystrom_ladder_kqr_m_equals_n_matches_exact() {
+    let n = 40;
+    let (data, kernel) = fixture(n, 41);
+    let engine = FitEngine::with_config(EngineConfig {
+        par: Parallelism::serial(),
+        opts: tight_opts(),
+        ..EngineConfig::default()
+    });
+    let exact = engine
+        .solver_with_options(&data.x, &data.y, &kernel, tight_opts())
+        .unwrap()
+        .fit(0.5, 2e-2)
+        .unwrap();
+    let mut prev_gap = f64::INFINITY;
+    for m in [10usize, 20, 40] {
+        let ny = ApproxSpec::Nystrom { m, seed: 7 };
+        let solver =
+            engine.solver_approx(&data.x, &data.y, &kernel, ny, tight_opts()).unwrap();
+        let fit = solver.fit(0.5, 2e-2).unwrap();
+        let gap = (fit.objective - exact.objective).abs();
+        assert!(gap <= prev_gap + 1e-9, "objective gap must shrink: m={m} {gap} vs {prev_gap}");
+        prev_gap = gap;
+        if m == n {
+            assert!(
+                gap <= 1e-8 * (1.0 + exact.objective.abs()),
+                "m=n objective gap {gap} (exact {})",
+                exact.objective
+            );
+            let pe = exact.predict(&data.x);
+            let pl = fit.predict(&data.x);
+            let sup = pe
+                .iter()
+                .zip(&pl)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            assert!(sup < 1e-6, "m=n prediction sup-gap {sup}");
+        }
+    }
+}
+
+/// Nyström exactness at m = n for the simultaneous non-crossing solver.
+#[test]
+fn nystrom_m_equals_n_matches_exact_nckqr() {
+    let n = 28;
+    let (data, kernel) = fixture(n, 43);
+    let taus = [0.3, 0.7];
+    let opts =
+        NcOptions { mm_tol: 1e-8, kkt_tol: 1e-3, max_iters: 200_000, ..NcOptions::default() };
+    let engine = FitEngine::with_config(EngineConfig {
+        par: Parallelism::serial(),
+        ..EngineConfig::default()
+    });
+    let exact = engine
+        .nc_solver_with_options(&data.x, &data.y, &kernel, &taus, opts.clone())
+        .unwrap()
+        .fit(1.0, 0.05)
+        .unwrap();
+    let approx = engine
+        .nc_solver_approx_with_options(
+            &data.x,
+            &data.y,
+            &kernel,
+            &taus,
+            ApproxSpec::Nystrom { m: n, seed: 9 },
+            opts,
+        )
+        .unwrap()
+        .fit(1.0, 0.05)
+        .unwrap();
+    let gap = (approx.objective - exact.objective).abs();
+    assert!(
+        gap <= 1e-8 * (1.0 + exact.objective.abs()),
+        "m=n NCKQR objective gap {gap} (exact {})",
+        exact.objective
+    );
+    assert!(approx.lowrank.is_some(), "NCKQR low-rank fit carries the compressed predictor");
+    let pe = exact.predict(&data.x);
+    let pl = approx.predict(&data.x);
+    for (re, rl) in pe.iter().zip(&pl) {
+        let sup =
+            re.iter().zip(rl).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+        assert!(sup < 1e-6, "m=n NCKQR prediction sup-gap {sup}");
+    }
+}
+
+/// A low-rank grid model persists as an O(m) compressed artifact (no
+/// x_train, no n-dim α), reloads, and predicts bitwise.
+#[test]
+fn lowrank_artifact_is_compressed_and_roundtrips_bitwise() {
+    let (data, kernel) = fixture(36, 45);
+    let m = 12;
+    let spec = FitSpec::grid(
+        data.x.clone(),
+        data.y.clone(),
+        KernelSpec::exact(&kernel),
+        vec![0.25, 0.75],
+        vec![0.1, 0.01],
+    )
+    .with_approx(ApproxSpec::Nystrom { m, seed: 3 });
+    let engine = FitEngine::new();
+    let model = engine.run(&spec).unwrap();
+    let doc = model.to_artifact().unwrap();
+    assert_eq!(doc.get_usize("format_version"), Some(2));
+    assert_eq!(doc.get_str("repr"), Some("lowrank"));
+    assert!(doc.get("x_train").is_none(), "compressed artifact must not carry x_train");
+    assert_eq!(doc.get("z").unwrap().as_arr().unwrap().len(), m);
+    assert_eq!(doc.get_usize("n_train"), Some(36));
+    for fit in doc.get("fits").unwrap().as_arr().unwrap() {
+        assert!(fit.get("alpha").is_none(), "compressed fits store w, not alpha");
+        assert_eq!(fit.get_f64_arr("w").unwrap().len(), m);
+    }
+    // it really is smaller than the dense artifact of the same task
+    let dense = engine.run(&spec.clone().with_approx(ApproxSpec::Exact)).unwrap();
+    let dense_len = dense.to_artifact().unwrap().to_string().len();
+    let lowrank_len = doc.to_string().len();
+    assert!(
+        lowrank_len < dense_len,
+        "lowrank artifact ({lowrank_len} bytes) should undercut dense ({dense_len} bytes)"
+    );
+    // save → load → predict bitwise
+    let path = temp_path("grid");
+    model.save(&path).unwrap();
+    let back = QuantileModel::load(&path).unwrap();
+    let mut rng = Rng::new(46);
+    let xt = synth::sine_hetero(9, &mut rng).x;
+    assert_eq!(back.predict(&xt), model.predict(&xt), "reload must predict bitwise");
+    assert_eq!(back.n_train(), 36);
+    assert_eq!(back.n_levels(), 4);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// One dataset, exact + approx entries: both live in the cache at once,
+/// rerunning either costs zero further factorizations, and identical
+/// seeds reproduce identical low-rank fits bitwise.
+#[test]
+fn cache_coexistence_and_seed_reproducibility() {
+    let (data, kernel) = fixture(30, 47);
+    let kspec = KernelSpec::exact(&kernel);
+    let exact_spec = FitSpec::single(data.x.clone(), data.y.clone(), kspec.clone(), 0.5, 0.05);
+    let ny_spec = exact_spec.clone().with_approx(ApproxSpec::Nystrom { m: 10, seed: 21 });
+    let engine = FitEngine::new();
+    let a1 = engine.run(&exact_spec).unwrap();
+    let b1 = engine.run(&ny_spec).unwrap();
+    assert_eq!(CacheMetrics::get(&engine.cache.metrics.decompositions), 2);
+    assert_eq!(engine.cache.len(), 2, "exact and approx coexist without eviction thrash");
+    let a2 = engine.run(&exact_spec).unwrap();
+    let b2 = engine.run(&ny_spec).unwrap();
+    assert_eq!(
+        CacheMetrics::get(&engine.cache.metrics.decompositions),
+        2,
+        "reruns are pure cache hits"
+    );
+    let mut rng = Rng::new(48);
+    let xt = synth::sine_hetero(7, &mut rng).x;
+    assert_eq!(a1.predict(&xt), a2.predict(&xt));
+    assert_eq!(b1.predict(&xt), b2.predict(&xt), "same seed ⇒ bitwise-identical low-rank fit");
+    // a fresh engine (fresh landmark sampling from the same seed) agrees
+    let engine2 = FitEngine::new();
+    let b3 = engine2.run(&ny_spec).unwrap();
+    assert_eq!(
+        b1.predict(&xt),
+        b3.predict(&xt),
+        "spec document alone reproduces the low-rank fit"
+    );
+}
+
+/// The BLAS-3 lockstep grid driver on a thin basis matches the sequential
+/// low-rank path to ≤ 1e-10 (same contract as the dense parity suite).
+#[test]
+fn lockstep_grid_matches_sequential_on_lowrank_basis() {
+    let (data, kernel) = fixture(40, 49);
+    let taus = [0.25, 0.75];
+    let lambdas = [0.1, 0.01];
+    let approx = ApproxSpec::Nystrom { m: 16, seed: 5 };
+    let seq_e = FitEngine::with_config(EngineConfig {
+        par: Parallelism::serial(),
+        lockstep: Some(false),
+        ..EngineConfig::default()
+    });
+    let lock_e = FitEngine::with_config(EngineConfig {
+        par: Parallelism::serial(),
+        lockstep: Some(true),
+        ..EngineConfig::default()
+    });
+    let seq = seq_e
+        .fit_grid_with_strategy(&data.x, &data.y, &kernel, &taus, &lambdas, approx, None, None)
+        .unwrap();
+    let lock = lock_e
+        .fit_grid_with_strategy(&data.x, &data.y, &kernel, &taus, &lambdas, approx, None, None)
+        .unwrap();
+    assert!(lock.lockstep.is_some() && seq.lockstep.is_none());
+    for ti in 0..taus.len() {
+        for li in 0..lambdas.len() {
+            let (a, b) = (seq.at(ti, li), lock.at(ti, li));
+            assert_eq!(a.apgd_iters, b.apgd_iters, "({ti},{li}) iteration trajectory");
+            assert!((a.b - b.b).abs() <= 1e-10, "({ti},{li}) intercept");
+            let sup = a
+                .alpha
+                .iter()
+                .zip(&b.alpha)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f64, f64::max);
+            assert!(sup <= 1e-10, "({ti},{li}) alpha sup {sup}");
+            let (wa, wb) = (
+                a.lowrank.as_ref().expect("seq lowrank").w.clone(),
+                b.lowrank.as_ref().expect("lock lowrank").w.clone(),
+            );
+            let wsup =
+                wa.iter().zip(&wb).map(|(x, y)| (x - y).abs()).fold(0.0f64, f64::max);
+            assert!(wsup <= 1e-10, "({ti},{li}) landmark-weight sup {wsup}");
+        }
+    }
+}
+
+/// n = 4096-scale accounting: the approx path holds O(n·m) state — no
+/// n×n matrix anywhere — and a grid fits end-to-end on it.
+#[test]
+fn no_dense_allocation_on_approx_path_at_4096() {
+    let n = 4096;
+    let m = 64;
+    let (data, kernel) = fixture(n, 51);
+    // Loose accounting-oriented options: this test bounds memory, not
+    // certificate quality (projection off ⇒ no large K_SS solves).
+    let opts = SolveOptions {
+        apgd_tol: 1e-2,
+        kkt_tol: 1e-2,
+        max_iters: 500,
+        max_expansions: 3,
+        max_stall_rungs: 1,
+        projection: false,
+        ..SolveOptions::default()
+    };
+    let engine = FitEngine::with_config(EngineConfig {
+        par: Parallelism::serial(),
+        opts: opts.clone(),
+        ..EngineConfig::default()
+    });
+    let solver = engine
+        .solver_approx(&data.x, &data.y, &kernel, ApproxSpec::Nystrom { m, seed: 13 }, opts.clone())
+        .unwrap();
+    assert!(solver.repr.is_low_rank());
+    let r = solver.basis.dim();
+    assert!(r <= m && r > 0);
+    assert_eq!(solver.basis.u.rows(), n);
+    assert_eq!(solver.basis.u.cols(), r, "thin factor, no zero-padding to n×n");
+    let floats = solver.repr.memory_floats();
+    assert!(
+        floats < n * n / 16,
+        "approx repr holds {floats} f64s — must be far below n² = {}",
+        n * n
+    );
+    assert!(floats >= n * r, "sanity: the thin factor itself is accounted");
+    // the full grid machinery runs on the thin basis
+    let grid = engine
+        .fit_grid_with_strategy(
+            &data.x,
+            &data.y,
+            &kernel,
+            &[0.25, 0.75],
+            &[0.1, 0.01],
+            ApproxSpec::Nystrom { m, seed: 13 },
+            Some(false),
+            Some(opts),
+        )
+        .unwrap();
+    assert_eq!(grid.fits.len(), 2);
+    for col in &grid.fits {
+        for fit in col {
+            assert!(fit.objective.is_finite());
+            let lr = fit.lowrank.as_ref().expect("compressed predictor attached");
+            assert_eq!(lr.w.len(), m);
+        }
+    }
+    assert_eq!(
+        CacheMetrics::get(&engine.cache.metrics.decompositions),
+        1,
+        "one thin factorization serves the whole grid"
+    );
+}
+
+/// A low-rank model predicts the same through the engine task pipeline
+/// and through a saved artifact in a "fresh process" (new load).
+#[test]
+fn lowrank_kqr_artifact_single_fit_roundtrip() {
+    let (data, kernel) = fixture(32, 53);
+    let spec =
+        FitSpec::single(data.x.clone(), data.y.clone(), KernelSpec::exact(&kernel), 0.3, 0.02)
+            .with_approx(ApproxSpec::Nystrom { m: 8, seed: 2 });
+    let model = FitEngine::new().run(&spec).unwrap();
+    let doc = model.to_artifact().unwrap();
+    assert_eq!(doc.get_str("kind"), Some("kqr"));
+    assert_eq!(doc.get_str("repr"), Some("lowrank"));
+    let path = temp_path("kqr");
+    model.save(&path).unwrap();
+    let back = QuantileModel::load(&path).unwrap();
+    assert_eq!(back.predict(&data.x), model.predict(&data.x));
+    assert_eq!(back.taus(), vec![0.3]);
+    assert_eq!(back.n_train(), 32);
+    let _ = std::fs::remove_file(&path);
+}

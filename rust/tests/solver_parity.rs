@@ -20,7 +20,7 @@ fn fastkqr_matches_ipm_across_grid() {
         for tau in [0.1, 0.5, 0.9] {
             for lam in [0.2, 0.02, 0.002] {
                 let fast = solver.fit(tau, lam).expect("fastkqr");
-                let ipm = solve_kqr_ipm(&solver.gram, &d.y, tau, lam, &IpmOptions::default())
+                let ipm = solve_kqr_ipm(solver.gram(), &d.y, tau, lam, &IpmOptions::default())
                     .expect("ipm");
                 let rel = (fast.objective - ipm.objective).abs() / (1.0 + ipm.objective);
                 assert!(
@@ -48,7 +48,7 @@ fn fastkqr_matches_ipm_on_benchmark_lookalikes() {
         let solver = KqrSolver::new(&data.x, &data.y, Kernel::Rbf { sigma }).unwrap();
         let fast = solver.fit(0.5, lam).expect("fastkqr");
         let ipm =
-            solve_kqr_ipm(&solver.gram, &data.y, 0.5, lam, &IpmOptions::default()).expect("ipm");
+            solve_kqr_ipm(solver.gram(), &data.y, 0.5, lam, &IpmOptions::default()).expect("ipm");
         let rel = (fast.objective - ipm.objective).abs() / (1.0 + ipm.objective.abs());
         assert!(
             rel < 2e-3,
@@ -68,7 +68,7 @@ fn generic_solvers_never_beat_fastkqr() {
     let solver = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma }).unwrap();
     for tau in [0.25, 0.75] {
         let fast = solver.fit(tau, 0.05).unwrap();
-        let lb = solve_kqr_lbfgs(&solver.gram, &d.y, tau, 0.05, 2000).unwrap();
+        let lb = solve_kqr_lbfgs(solver.gram(), &d.y, tau, 0.05, 2000).unwrap();
         assert!(
             lb.objective >= fast.objective - 1e-7,
             "tau={tau}: lbfgs {} beat exact {}",
