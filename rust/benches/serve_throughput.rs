@@ -1,0 +1,151 @@
+//! Serving-path throughput: per-request baseline vs the PredictEngine's
+//! cross-request micro-batching, measured end-to-end over real TCP.
+//!
+//! Fits one τ×λ grid model (default 8×8 at n = 256), inserts it into two
+//! servers — one with batching disabled (`window_us = 0`, the
+//! per-request baseline) and one with a generous coalescing window —
+//! then fires `--clients` concurrent connections (default 64) each
+//! sending `--reps` sequential single-row predicts, and reports
+//! requests/second for both paths plus the batch-occupancy metrics.
+//! Writes the machine-readable baseline to `BENCH_serve.json` (override
+//! with `--out`).
+//!
+//! Acceptance tracking (ISSUE 5): ≥ 3× requests/sec at 64 concurrent
+//! single-row clients on an 8×8 grid model versus the per-request
+//! baseline.
+
+use fastkqr::coordinator::server::Client;
+use fastkqr::coordinator::{BatchConfig, Server, ServerConfig};
+use fastkqr::data::{synth, Rng};
+use fastkqr::engine::FitEngine;
+use fastkqr::kernel::Kernel;
+use fastkqr::util::{Args, Json};
+use std::time::Instant;
+
+/// Fire `clients` concurrent connections × `reps` single-row predicts
+/// at `server`; returns (requests/sec, failed request count).
+fn storm(server: &Server, model_id: &str, clients: usize, reps: usize) -> (f64, usize) {
+    let addr = server.local_addr;
+    let req = Json::parse(&format!(
+        r#"{{"cmd":"predict","model":"{model_id}","x":[[0.42]]}}"#
+    ))
+    .expect("request json");
+    let t0 = Instant::now();
+    let failures: usize = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let req = &req;
+                s.spawn(move || {
+                    let mut failed = 0usize;
+                    let mut client = match Client::connect(addr) {
+                        Ok(c) => c,
+                        Err(_) => return reps,
+                    };
+                    for _ in 0..reps {
+                        match client.request(req) {
+                            Ok(resp)
+                                if resp.get("ok").and_then(Json::as_bool)
+                                    == Some(true) => {}
+                            _ => failed += 1,
+                        }
+                    }
+                    failed
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap_or(reps)).sum()
+    });
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    ((clients * reps) as f64 / wall, failures)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 256);
+    let taus = args.get_usize("taus", 8);
+    let lams = args.get_usize("lams", 8);
+    let clients = args.get_usize("clients", 64);
+    let reps = args.get_usize("reps", 50);
+    let window_us = args.get_usize("window-us", 500) as u64;
+    let out = args.get_str("out", "BENCH_serve.json").to_string();
+
+    if std::net::TcpListener::bind("127.0.0.1:0").is_err() {
+        println!("no loopback TCP in this environment; skipping serve bench");
+        return;
+    }
+
+    // One grid model, shared by both servers (the fit cost is not what
+    // this bench measures).
+    let mut rng = Rng::new(7);
+    let data = synth::sine_hetero(n, &mut rng);
+    let kernel = Kernel::Rbf { sigma: 0.5 };
+    let tau_grid: Vec<f64> =
+        (0..taus).map(|i| 0.1 + 0.8 * i as f64 / (taus.max(2) - 1) as f64).collect();
+    let lam_grid = fastkqr::kqr::lambda_grid(lams, 1.0, 1e-3);
+    println!("fitting the {taus}x{lams} grid at n={n} ...");
+    let grid = FitEngine::global()
+        .fit_grid(&data.x, &data.y, &kernel, &tau_grid, &lam_grid)
+        .expect("grid fit");
+    let model = fastkqr::api::QuantileModel::from_grid(grid);
+
+    let spawn = |window_us: u64| -> (Server, String) {
+        let server = Server::spawn(ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            batch: BatchConfig { window_us, max_rows: 4096 },
+            ..ServerConfig::default()
+        })
+        .expect("spawn server");
+        let id = server.registry.insert(model.clone());
+        (server, id)
+    };
+
+    println!(
+        "-- serve throughput: {clients} clients x {reps} single-row predicts, \
+         {}-level model --",
+        model.n_levels()
+    );
+    let (baseline_srv, id) = spawn(0);
+    let (baseline_rps, baseline_failed) = storm(&baseline_srv, &id, clients, reps);
+    println!("   per-request baseline: {baseline_rps:>10.0} req/s  ({baseline_failed} failed)");
+    baseline_srv.shutdown();
+
+    let (batched_srv, id) = spawn(window_us);
+    let (batched_rps, batched_failed) = storm(&batched_srv, &id, clients, reps);
+    let m = &batched_srv.metrics;
+    let batches = fastkqr::coordinator::Metrics::get(&m.predict_batches);
+    let batch_p95 = m.predict_batch_size.p95();
+    let batch_max = m.predict_batch_size.max();
+    let lat_p99 = m.predict_latency.p99();
+    println!(
+        "   micro-batched ({window_us}us window): {batched_rps:>10.0} req/s  \
+         ({batched_failed} failed)"
+    );
+    println!(
+        "   {batches} batches, occupancy p95 {batch_p95} / max {batch_max}, \
+         latency p99 {lat_p99}us"
+    );
+    let speedup = batched_rps / baseline_rps.max(1e-9);
+    println!("   {speedup:.2}x requests/sec vs the per-request baseline (target >= 3x)");
+    batched_srv.shutdown();
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve_throughput")),
+        ("n", Json::num(n as f64)),
+        ("taus", Json::num(taus as f64)),
+        ("lams", Json::num(lams as f64)),
+        ("clients", Json::num(clients as f64)),
+        ("reps", Json::num(reps as f64)),
+        ("window_us", Json::num(window_us as f64)),
+        ("baseline_rps", Json::num(baseline_rps)),
+        ("batched_rps", Json::num(batched_rps)),
+        ("speedup", Json::num(speedup)),
+        ("failed", Json::num((baseline_failed + batched_failed) as f64)),
+        ("predict_batches", Json::num(batches as f64)),
+        ("batch_p95", Json::num(batch_p95 as f64)),
+        ("batch_max", Json::num(batch_max as f64)),
+        ("latency_us_p99", Json::num(lat_p99 as f64)),
+    ]);
+    std::fs::write(&out, doc.to_string()).expect("write BENCH_serve.json");
+    println!("wrote {out}");
+    assert_eq!(baseline_failed + batched_failed, 0, "all storm requests must succeed");
+}

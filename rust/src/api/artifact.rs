@@ -465,6 +465,21 @@ pub fn load(path: &Path) -> Result<QuantileModel> {
     from_json(&v).with_context(|| format!("load model artifact {}", path.display()))
 }
 
+/// [`load`] plus the compiled serving plan: the consumers that load in
+/// order to *predict* (the CLI's `predict` subcommand, registry reloads,
+/// benches) get the [`PredictPlan`](crate::engine::PredictPlan) compiled
+/// exactly once at artifact-load time instead of re-deriving the
+/// coefficient layout per request. An artifact parses into one shared
+/// `x_train`/landmark `Arc` for all its fits, so the plan always
+/// compiles to a single group.
+pub fn load_compiled(
+    path: &Path,
+) -> Result<(QuantileModel, std::sync::Arc<crate::engine::PredictPlan>)> {
+    let model = load(path)?;
+    let plan = std::sync::Arc::new(model.compile_plan());
+    Ok((model, plan))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

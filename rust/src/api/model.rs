@@ -7,7 +7,7 @@
 //! versioned save/load (see [`super::artifact`]).
 
 use super::artifact;
-use crate::engine::{GridFit, LockstepStats};
+use crate::engine::{GridFit, LockstepStats, PredictPlan};
 use crate::kqr::KqrFit;
 use crate::linalg::Matrix;
 use crate::nckqr::NckqrFit;
@@ -113,17 +113,24 @@ impl QuantileModel {
     /// Predict at the rows of `xt`: one output row per quantile level
     /// (KQR: one; NCKQR: one per τ level; sets: one per fit).
     ///
-    /// Sets are **batched**: fits sharing one predictor basis (the
-    /// `Arc`'d training inputs, or the landmark set for low-rank fits)
-    /// get one cross-Gram + one multi-RHS GEMM for the whole group
-    /// instead of per-fit kernel evaluations; each row stays bitwise
-    /// equal to the per-fit `KqrFit::predict` path.
+    /// Routed through a freshly compiled [`PredictPlan`]: fits sharing
+    /// one predictor basis (the `Arc`'d training inputs, or the landmark
+    /// set for low-rank fits) get one cross-Gram + one multi-RHS GEMM
+    /// for the whole group instead of per-fit kernel evaluations; each
+    /// row stays bitwise equal to the per-fit `KqrFit::predict` path.
+    /// Callers that predict repeatedly (the registry, the CLI, benches)
+    /// should [`compile_plan`](QuantileModel::compile_plan) once and
+    /// reuse it — this convenience re-packs coefficients per call.
     pub fn predict(&self, xt: &Matrix) -> Vec<Vec<f64>> {
-        match self {
-            QuantileModel::Kqr(f) => vec![f.predict(xt)],
-            QuantileModel::Nckqr(f) => f.predict(xt),
-            QuantileModel::Set(s) => predict_set(&s.fits, xt),
-        }
+        self.compile_plan().predict(xt)
+    }
+
+    /// Compile the serving representation of this model (see
+    /// [`PredictPlan`]): resolved kernel + `Arc`'d block + packed
+    /// coefficient matrix, built once so every subsequent predict is one
+    /// cross-Gram + one GEMM with no per-request packing.
+    pub fn compile_plan(&self) -> PredictPlan {
+        PredictPlan::compile(self)
     }
 
     /// The τ of each prediction row, in row order.
@@ -299,46 +306,6 @@ pub(super) fn shape_to_json(shape: &SetShape) -> Json {
             ("seed", Json::num(*seed as f64)),
         ]),
     }
-}
-
-/// Batched set prediction: group adjacent fits that share one predictor
-/// basis (same `Arc`'d x_train / landmark set + same kernel) and run one
-/// cross-Gram + one multi-RHS GEMM per group (`kqr::predict_rows`).
-fn predict_set(fits: &[KqrFit], xt: &Matrix) -> Vec<Vec<f64>> {
-    fn same_group(a: &KqrFit, b: &KqrFit) -> bool {
-        if a.kernel() != b.kernel() {
-            return false;
-        }
-        match (&a.lowrank, &b.lowrank) {
-            (None, None) => std::ptr::eq(a.x_train(), b.x_train()),
-            (Some(la), Some(lb)) => std::sync::Arc::ptr_eq(&la.z, &lb.z),
-            _ => false,
-        }
-    }
-    let mut out: Vec<Vec<f64>> = Vec::with_capacity(fits.len());
-    let mut i = 0;
-    while i < fits.len() {
-        let mut j = i + 1;
-        while j < fits.len() && same_group(&fits[i], &fits[j]) {
-            j += 1;
-        }
-        let group = &fits[i..j];
-        let head = &group[0];
-        let (cg, coefs): (Matrix, Vec<&[f64]>) = match &head.lowrank {
-            Some(lr) => (
-                head.kernel().cross_gram(xt, &lr.z),
-                group.iter().map(|f| f.lowrank.as_ref().unwrap().w.as_slice()).collect(),
-            ),
-            None => (
-                head.kernel().cross_gram(xt, head.x_train()),
-                group.iter().map(|f| f.alpha.as_slice()).collect(),
-            ),
-        };
-        let bs: Vec<f64> = group.iter().map(|f| f.b).collect();
-        out.extend(crate::kqr::predict_rows(&coefs, &bs, &cg));
-        i = j;
-    }
-    out
 }
 
 pub(super) fn shape_from_json(v: &Json) -> Result<SetShape> {

@@ -1,0 +1,278 @@
+//! Cross-request predict micro-batching.
+//!
+//! Concurrent `predict` requests targeting the **same model** inside a
+//! small window are coalesced: the first arriving connection thread
+//! becomes the *leader* of that model's queue, sleeps for the batch
+//! window (`FASTKQR_BATCH_WINDOW_US`, default 200 µs) while followers
+//! enqueue their query matrices, then drains the queue, stacks every
+//! request's rows into one matrix, runs the compiled
+//! [`PredictPlan`](crate::engine::PredictPlan) **once** (one cross-Gram
+//! + one multi-RHS GEMM per plan group) and scatters the output columns
+//! back to the parked connections. Every returned row is bitwise equal
+//! to what the request would have computed alone — see
+//! [`crate::engine::predict`] for the argument — so batching is purely a
+//! throughput lever, never a numerics one.
+//!
+//! Backpressure: each per-model queue holds at most
+//! `FASTKQR_BATCH_MAX_ROWS` query rows (default 4096). A request that
+//! would overflow the cap gets a clean error immediately (counted in
+//! [`Metrics::predict_rejects`]), never a hang; followers whose leader
+//! dies mid-batch get an error too (the result channel hangs up).
+//!
+//! With `FASTKQR_BATCH_WINDOW_US=0` batching is disabled and every
+//! request executes directly on its own thread (the per-request
+//! baseline `benches/serve_throughput.rs` measures against).
+
+use super::metrics::Metrics;
+use crate::engine::PredictPlan;
+use crate::linalg::Matrix;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Micro-batching knobs (see module docs). The server reads them from
+/// the environment once at spawn; tests and benches construct explicit
+/// configs.
+#[derive(Clone, Debug)]
+pub struct BatchConfig {
+    /// Coalescing window in microseconds; 0 disables batching.
+    pub window_us: u64,
+    /// Per-model queue cap in query **rows** (backpressure bound).
+    pub max_rows: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> BatchConfig {
+        BatchConfig { window_us: 200, max_rows: 4096 }
+    }
+}
+
+impl BatchConfig {
+    /// Read `FASTKQR_BATCH_WINDOW_US` / `FASTKQR_BATCH_MAX_ROWS`,
+    /// falling back to the defaults (200 µs window, 4096-row cap).
+    pub fn from_env() -> BatchConfig {
+        let d = BatchConfig::default();
+        let parse = |key: &str, default: u64| {
+            std::env::var(key)
+                .ok()
+                .and_then(|v| v.trim().parse::<u64>().ok())
+                .unwrap_or(default)
+        };
+        BatchConfig {
+            window_us: parse("FASTKQR_BATCH_WINDOW_US", d.window_us),
+            max_rows: parse("FASTKQR_BATCH_MAX_ROWS", d.max_rows as u64).max(1) as usize,
+        }
+    }
+}
+
+/// One parked request: its query rows and the channel its result (or the
+/// leader's failure) comes back on.
+struct Pending {
+    x: Matrix,
+    tx: Sender<Result<Vec<Vec<f64>>, String>>,
+}
+
+#[derive(Default)]
+struct ModelQueue {
+    pending: Vec<Pending>,
+    rows: usize,
+    /// A leader thread is currently inside its window for this queue.
+    leader: bool,
+}
+
+/// The per-model predict queues (see module docs).
+pub struct PredictBatcher {
+    queues: Mutex<HashMap<String, ModelQueue>>,
+    config: BatchConfig,
+}
+
+impl PredictBatcher {
+    pub fn new(config: BatchConfig) -> PredictBatcher {
+        PredictBatcher { queues: Mutex::new(HashMap::new()), config }
+    }
+
+    pub fn config(&self) -> &BatchConfig {
+        &self.config
+    }
+
+    /// Predict `x` on `plan`, coalescing with concurrent requests for
+    /// the same `model_id`. Blocks the calling thread for at most one
+    /// batch window (plus the batched compute); returns this request's
+    /// rows, bitwise equal to `plan.predict(&x)`.
+    pub fn predict(
+        &self,
+        model_id: &str,
+        plan: &PredictPlan,
+        x: Matrix,
+        metrics: &Metrics,
+    ) -> Result<Vec<Vec<f64>>> {
+        if self.config.window_us == 0 {
+            Metrics::incr(&metrics.predict_batches);
+            metrics.predict_batch_size.record(1);
+            return Ok(plan.predict(&x));
+        }
+        let n_rows = x.rows();
+        let (tx, rx) = channel();
+        let leader = {
+            let mut queues = self.queues.lock().unwrap();
+            let q = queues.entry(model_id.to_string()).or_default();
+            if q.rows + n_rows > self.config.max_rows {
+                let queued = q.rows;
+                drop(queues);
+                Metrics::incr(&metrics.predict_rejects);
+                bail!(
+                    "predict queue for model {model_id:?} is full \
+                     ({queued} rows queued, cap {}); retry shortly",
+                    self.config.max_rows
+                );
+            }
+            q.pending.push(Pending { x, tx });
+            q.rows += n_rows;
+            if q.leader {
+                false
+            } else {
+                q.leader = true;
+                true
+            }
+        };
+        if leader {
+            std::thread::sleep(Duration::from_micros(self.config.window_us));
+            let batch = {
+                let mut queues = self.queues.lock().unwrap();
+                let q = queues.get_mut(model_id).expect("leader's queue exists");
+                q.leader = false;
+                q.rows = 0;
+                let batch = std::mem::take(&mut q.pending);
+                // don't leak empty queue entries for dropped models
+                queues.remove(model_id);
+                batch
+            };
+            Metrics::incr(&metrics.predict_batches);
+            metrics.predict_batch_size.record(batch.len() as u64);
+            let (parts, senders): (Vec<Matrix>, Vec<Sender<_>>) =
+                batch.into_iter().map(|p| (p.x, p.tx)).unzip();
+            // A panic inside the batched compute must surface as an error
+            // on every coalesced request, not hang the followers.
+            let computed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                plan.predict_many(&parts)
+            }));
+            match computed {
+                Ok(results) => {
+                    for (res, tx) in results.into_iter().zip(&senders) {
+                        let _ = tx.send(Ok(res));
+                    }
+                }
+                Err(payload) => {
+                    let msg = crate::util::panic_message(&payload);
+                    for tx in &senders {
+                        let _ = tx.send(Err(format!("batched predict failed: {msg}")));
+                    }
+                }
+            }
+        }
+        match rx.recv() {
+            Ok(Ok(rows)) => Ok(rows),
+            Ok(Err(msg)) => bail!(msg),
+            Err(_) => bail!("predict batch leader hung up without a result"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::QuantileModel;
+    use crate::data::{synth, Rng};
+    use crate::kernel::Kernel;
+    use crate::kqr::KqrSolver;
+    use std::sync::Arc;
+
+    fn toy_plan() -> (QuantileModel, PredictPlan) {
+        let mut rng = Rng::new(5);
+        let d = synth::sine_hetero(20, &mut rng);
+        let fit = KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma: 0.5 })
+            .unwrap()
+            .fit(0.5, 0.05)
+            .unwrap();
+        let model = QuantileModel::Kqr(fit);
+        let plan = model.compile_plan();
+        (model, plan)
+    }
+
+    #[test]
+    fn disabled_window_is_the_direct_path() {
+        let (model, plan) = toy_plan();
+        let batcher = PredictBatcher::new(BatchConfig { window_us: 0, max_rows: 16 });
+        let metrics = Metrics::new();
+        let xt = Matrix::from_fn(3, 1, |i, _| i as f64 * 0.3);
+        let got = batcher.predict("m0", &plan, xt.clone(), &metrics).unwrap();
+        assert_eq!(got, model.predict(&xt));
+        assert_eq!(Metrics::get(&metrics.predict_batches), 1);
+    }
+
+    #[test]
+    fn concurrent_requests_coalesce_and_match_bitwise() {
+        let (model, plan) = toy_plan();
+        let plan = Arc::new(plan);
+        let batcher =
+            Arc::new(PredictBatcher::new(BatchConfig { window_us: 20_000, max_rows: 4096 }));
+        let metrics = Arc::new(Metrics::new());
+        let queries: Vec<Matrix> =
+            (0..8).map(|i| Matrix::from_fn(1, 1, |_, _| 0.1 * i as f64)).collect();
+        let results: Vec<Vec<Vec<f64>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = queries
+                .iter()
+                .map(|q| {
+                    let batcher = batcher.clone();
+                    let plan = plan.clone();
+                    let metrics = metrics.clone();
+                    let q = q.clone();
+                    s.spawn(move || batcher.predict("m0", &plan, q, &metrics).unwrap())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (q, got) in queries.iter().zip(&results) {
+            assert_eq!(got, &model.predict(q), "batched row must be bitwise equal");
+        }
+        let batches = Metrics::get(&metrics.predict_batches);
+        assert!(batches >= 1 && batches <= 8, "batches = {batches}");
+        // every request was served by exactly one batch
+        assert_eq!(metrics.predict_batch_size.count(), batches);
+    }
+
+    #[test]
+    fn backpressure_rejects_cleanly_without_hanging() {
+        let (_, plan) = toy_plan();
+        let plan = Arc::new(plan);
+        let batcher =
+            Arc::new(PredictBatcher::new(BatchConfig { window_us: 500_000, max_rows: 2 }));
+        let metrics = Arc::new(Metrics::new());
+        let barrier = Arc::new(std::sync::Barrier::new(3));
+        let outcomes: Vec<Result<Vec<Vec<f64>>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..3)
+                .map(|i| {
+                    let batcher = batcher.clone();
+                    let plan = plan.clone();
+                    let metrics = metrics.clone();
+                    let barrier = barrier.clone();
+                    s.spawn(move || {
+                        let x = Matrix::from_fn(1, 1, |_, _| 0.2 * i as f64);
+                        barrier.wait();
+                        batcher.predict("m0", &plan, x, &metrics)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let ok = outcomes.iter().filter(|r| r.is_ok()).count();
+        let rejected: Vec<String> =
+            outcomes.iter().filter_map(|r| r.as_ref().err().map(|e| e.to_string())).collect();
+        assert_eq!(ok, 2, "cap of 2 rows admits exactly 2 single-row requests");
+        assert_eq!(rejected.len(), 1);
+        assert!(rejected[0].contains("full"), "clean backpressure error: {rejected:?}");
+        assert_eq!(Metrics::get(&metrics.predict_rejects), 1);
+    }
+}

@@ -1,5 +1,6 @@
 //! Lock-free operational metrics.
 
+use crate::util::Histogram;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Atomic counters shared between workers, server threads and the CLI.
@@ -15,6 +16,20 @@ pub struct Metrics {
     pub solver_micros: AtomicU64,
     pub requests_total: AtomicU64,
     pub protocol_errors: AtomicU64,
+    /// Batches flushed by the predict micro-batcher (each serves ≥ 1
+    /// request; `predict_batches <= predict_requests` always holds).
+    pub predict_batches: AtomicU64,
+    /// Predict requests rejected by the per-model queue's backpressure
+    /// cap (the client gets a clean error, never a hang).
+    pub predict_rejects: AtomicU64,
+    /// Per-worker warm-start states dropped because the engine's
+    /// GramCache no longer holds their dataset's factorization.
+    pub warm_evictions: AtomicU64,
+    /// End-to-end predict latency (µs, from request dispatch to response
+    /// ready — includes batch-window parking).
+    pub predict_latency: Histogram,
+    /// Requests coalesced per flushed predict batch.
+    pub predict_batch_size: Histogram,
 }
 
 impl Metrics {
@@ -47,6 +62,17 @@ impl Metrics {
             ("solver_micros", Json::num(Self::get(&self.solver_micros) as f64)),
             ("requests_total", Json::num(Self::get(&self.requests_total) as f64)),
             ("protocol_errors", Json::num(Self::get(&self.protocol_errors) as f64)),
+            ("predict_batches", Json::num(Self::get(&self.predict_batches) as f64)),
+            ("predict_rejects", Json::num(Self::get(&self.predict_rejects) as f64)),
+            ("warm_evictions", Json::num(Self::get(&self.warm_evictions) as f64)),
+            ("predict_latency_us_p50", Json::num(self.predict_latency.p50() as f64)),
+            ("predict_latency_us_p95", Json::num(self.predict_latency.p95() as f64)),
+            ("predict_latency_us_p99", Json::num(self.predict_latency.p99() as f64)),
+            ("predict_latency_us_max", Json::num(self.predict_latency.max() as f64)),
+            ("predict_batch_p50", Json::num(self.predict_batch_size.p50() as f64)),
+            ("predict_batch_p95", Json::num(self.predict_batch_size.p95() as f64)),
+            ("predict_batch_p99", Json::num(self.predict_batch_size.p99() as f64)),
+            ("predict_batch_max", Json::num(self.predict_batch_size.max() as f64)),
         ])
     }
 }
@@ -63,5 +89,17 @@ mod tests {
         assert_eq!(Metrics::get(&m.jobs_submitted), 3);
         let j = m.to_json();
         assert_eq!(j.get_f64("jobs_submitted"), Some(3.0));
+    }
+
+    #[test]
+    fn histograms_surface_in_json() {
+        let m = Metrics::new();
+        m.predict_batch_size.record(1);
+        m.predict_batch_size.record(4);
+        m.predict_latency.record(100);
+        let j = m.to_json();
+        assert_eq!(j.get_f64("predict_batch_max"), Some(4.0));
+        assert!(j.get_f64("predict_latency_us_p50").unwrap() >= 100.0);
+        assert_eq!(j.get_f64("predict_batches"), Some(0.0));
     }
 }

@@ -16,13 +16,22 @@
 //! - [`registry`]: a concurrent [`crate::api::QuantileModel`] store for
 //!   the predict path, with optional write-through persistence to
 //!   versioned JSON artifacts (the server survives restarts);
-//! - [`metrics`]: atomic counters surfaced by the server and CLI;
+//! - [`metrics`]: atomic counters + log-bucketed latency/occupancy
+//!   histograms surfaced by the server and CLI;
+//! - [`batcher`]: the predict micro-batcher — concurrent `predict`
+//!   requests for one model coalesce (inside `FASTKQR_BATCH_WINDOW_US`)
+//!   into a single execution of the registry's compiled
+//!   [`crate::engine::PredictPlan`], with bitwise-identical rows and a
+//!   per-model backpressure cap;
 //! - [`server`]/[`protocol`]: a threaded TCP line-JSON service
 //!   (std::net — the offline environment has no tokio; a blocking
 //!   thread-per-connection design is appropriate for a compute-bound
 //!   service anyway). Protocol v2 accepts full [`crate::api::FitSpec`]
-//!   documents for `fit` and adds `save`/`load`/`export` for artifacts.
+//!   documents for `fit`, adds `save`/`load`/`export` for artifacts, and
+//!   streams large predict responses (`"stream": true`) in bounded
+//!   chunks.
 
+pub mod batcher;
 pub mod job;
 pub mod metrics;
 pub mod protocol;
@@ -30,6 +39,7 @@ pub mod registry;
 pub mod scheduler;
 pub mod server;
 
+pub use batcher::{BatchConfig, PredictBatcher};
 pub use job::{FitJob, JobOutcome, JobSpec};
 pub use metrics::Metrics;
 pub use registry::ModelRegistry;

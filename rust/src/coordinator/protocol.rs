@@ -11,30 +11,43 @@
 //! | `ping` | — | `{"ok":true,"pong":true,"version":…}` |
 //! | `fit` | `spec` (a full [`FitSpec`] document: kernel — optionally with an `approx` block `{"type":"nystrom","m":…,"seed":…}` selecting the low-rank Nyström representation — + task `single`/`path`/`grid`/`noncrossing`/`cv` + option overrides + top-level `seed`), **or** the legacy flat form `x`, `y`, `tau`, `lambda`, optional `kernel` | `{"ok":true,"model":"m0","kind":…,"taus":[…],"objective":…,"kkt_pass":…,"diagnostics":{…}}` plus `apgd_iters` (kqr) / `crossings` (nckqr) / `count` (set) |
 //! | `fit_nc` | legacy flat non-crossing form: `x`, `y`, `taus`, `lam1`, `lam2`, optional `kernel` | as `fit` (kind `nckqr`) |
-//! | `predict` | `model`, `x` | `{"ok":true,"taus":[…],"pred":[[…]…]}` |
+//! | `predict` | `model`, `x`, optional `"stream": true` (+ `chunk_points`, default 256) | `{"ok":true,"taus":[…],"pred":[[…]…]}`; with `stream` the prediction matrix is chunked across lines — a header `{"ok":true,"stream":true,"taus":…,"levels":…,"points":…,"chunk_points":…,"chunks":…}`, one `{"chunk":i,"start":j,"pred":[[…]…]}` record per column range, and a `{"ok":true,"done":true,"chunks":n}` terminator — so a connection never holds one giant response line in memory |
 //! | `save` | `model`, optional `name` (single path component; the artifact lands in the registry's persistence dir — wire clients can never address arbitrary server paths) | `{"ok":true,"path":…}`, plus `warning` when this model's earlier write-through persistence had failed |
 //! | `load` | `name` of an artifact in the persistence dir | `{"ok":true,"model":…,"kind":…,"taus":[…]}` |
 //! | `export` | `model` | `{"ok":true,"model":…,"artifact":{…}}` (inline artifact document) |
 //! | `models` | — | `{"ok":true,"models":[…]}` |
 //! | `drop` | `model` | `{"ok":true}` (also removes the persisted artifact) |
-//! | `metrics` | — | counter object incl. `gram_cache_*` and `persist_errors` (failed registry write-throughs) |
+//! | `metrics` | — | counter object incl. `gram_cache_*`, `persist_errors` (failed registry write-throughs), and the serving-path fields `predict_batches` / `predict_rejects` / `predict_latency_us_p50|p95|p99|max` / `predict_batch_p50|p95|p99|max`; `warm_evictions` (like `jobs_*`) is populated by a scheduler — non-zero on the wire only when a co-located scheduler shares this server's `Metrics` (see `Scheduler::with_engine_and_metrics`) |
+//!
+//! `predict` requests are **micro-batched**: concurrent requests for the
+//! same model inside the `FASTKQR_BATCH_WINDOW_US` window are coalesced
+//! into one cross-Gram + one multi-RHS GEMM on the model's compiled
+//! [`PredictPlan`](crate::engine::PredictPlan) and scattered back, with
+//! every row bitwise equal to the unbatched path — see
+//! [`super::batcher`].
 //!
 //! Kernel spec: `{"type":"rbf","sigma":σ}` (σ omitted → median
 //! heuristic), `"auto"`, `"linear"`, `"polynomial"`, `"laplacian"` — see
 //! [`crate::api::KernelSpec`].
 
+use super::batcher::{BatchConfig, PredictBatcher};
 use super::metrics::Metrics;
 use super::registry::ModelRegistry;
 use crate::api::{FitSpec, KernelSpec, QuantileModel};
 use crate::engine::{CacheMetrics, FitEngine};
 use crate::kqr::SolveOptions;
 use crate::util::Json;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use std::sync::Arc;
+use std::time::Instant;
 
 // The strict matrix parser moved to the api layer with the rest of the
 // spec plumbing; re-exported here for existing consumers.
 pub use crate::api::matrix_from_json;
+
+/// Default `chunk_points` for streamed predict responses (columns of the
+/// prediction matrix per response line).
+pub const DEFAULT_STREAM_CHUNK: usize = 256;
 
 /// Shared state the protocol operates on.
 pub struct ProtocolState {
@@ -45,28 +58,129 @@ pub struct ProtocolState {
     /// fitting the same payload share one cached Gram/eigenbasis —
     /// including non-crossing fits.
     pub engine: Arc<FitEngine>,
+    /// The predict micro-batcher: concurrent `predict` requests for one
+    /// model coalesce into a single plan execution.
+    pub batcher: Arc<PredictBatcher>,
+}
+
+impl ProtocolState {
+    /// Assemble the state with a batcher built from `batch` (tests and
+    /// the server both construct through here so the field list has one
+    /// authoritative spot).
+    pub fn new(
+        registry: Arc<ModelRegistry>,
+        metrics: Arc<Metrics>,
+        opts: SolveOptions,
+        engine: Arc<FitEngine>,
+        batch: BatchConfig,
+    ) -> ProtocolState {
+        ProtocolState {
+            registry,
+            metrics,
+            opts,
+            engine,
+            batcher: Arc::new(PredictBatcher::new(batch)),
+        }
+    }
+}
+
+/// One dispatched request's reply: a single response line, or a streamed
+/// prediction (header + chunk records + terminator, rendered by
+/// [`handle_request`] one line at a time so memory per connection stays
+/// bounded by the chunk size).
+enum Reply {
+    One(Json),
+    PredictStream { taus: Vec<f64>, preds: Vec<Vec<f64>>, chunk_points: usize },
 }
 
 fn err_json(msg: impl std::fmt::Display) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg.to_string()))])
 }
 
-/// Handle one request line; never panics, always returns a response.
-pub fn handle_line(state: &ProtocolState, line: &str) -> Json {
+/// Handle one request line, emitting one or more response lines through
+/// `emit` (streamed predicts produce header + chunks + terminator; every
+/// other request exactly one line). `emit` returning `false` (dead
+/// connection) stops the stream. Never panics, always emits at least one
+/// line for a live sink.
+pub fn handle_request(
+    state: &ProtocolState,
+    line: &str,
+    emit: &mut dyn FnMut(Json) -> bool,
+) {
     Metrics::incr(&state.metrics.requests_total);
     let req = match Json::parse(line) {
         Ok(v) => v,
         Err(e) => {
             Metrics::incr(&state.metrics.protocol_errors);
-            return err_json(format!("bad json: {e}"));
+            emit(err_json(format!("bad json: {e}")));
+            return;
         }
     };
     match dispatch(state, &req) {
-        Ok(resp) => resp,
+        Ok(Reply::One(resp)) => {
+            emit(resp);
+        }
+        Ok(Reply::PredictStream { taus, preds, chunk_points }) => {
+            let levels = preds.len();
+            let points = preds.first().map(|r| r.len()).unwrap_or(0);
+            // (manual div_ceil: the crate's MSRV predates the std one)
+            let chunks = (points + chunk_points - 1) / chunk_points;
+            let header = Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("stream", Json::Bool(true)),
+                ("taus", Json::arr_f64(&taus)),
+                ("levels", Json::num(levels as f64)),
+                ("points", Json::num(points as f64)),
+                ("chunk_points", Json::num(chunk_points as f64)),
+                ("chunks", Json::num(chunks as f64)),
+            ]);
+            if !emit(header) {
+                return;
+            }
+            for ci in 0..chunks {
+                let start = ci * chunk_points;
+                let end = (start + chunk_points).min(points);
+                let rec = Json::obj(vec![
+                    ("chunk", Json::num(ci as f64)),
+                    ("start", Json::num(start as f64)),
+                    (
+                        "pred",
+                        Json::Arr(
+                            preds.iter().map(|row| Json::arr_f64(&row[start..end])).collect(),
+                        ),
+                    ),
+                ]);
+                if !emit(rec) {
+                    return;
+                }
+            }
+            emit(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("done", Json::Bool(true)),
+                ("chunks", Json::num(chunks as f64)),
+            ]));
+        }
         Err(e) => {
             Metrics::incr(&state.metrics.protocol_errors);
-            err_json(e)
+            emit(err_json(e));
         }
+    }
+}
+
+/// Handle one request line; never panics, always returns a response.
+/// Single-line entry point (tests, embedders): a streamed reply is
+/// collected and returned as `{"ok":true,"lines":[…]}` — the TCP server
+/// uses [`handle_request`] to write chunk lines as they render.
+pub fn handle_line(state: &ProtocolState, line: &str) -> Json {
+    let mut lines: Vec<Json> = Vec::new();
+    handle_request(state, line, &mut |j| {
+        lines.push(j);
+        true
+    });
+    if lines.len() == 1 {
+        lines.pop().expect("one line")
+    } else {
+        Json::obj(vec![("ok", Json::Bool(true)), ("lines", Json::Arr(lines))])
     }
 }
 
@@ -128,10 +242,11 @@ fn fit_response(model: &QuantileModel) -> Vec<(&'static str, Json)> {
     pairs
 }
 
-fn dispatch(state: &ProtocolState, req: &Json) -> Result<Json> {
+fn dispatch(state: &ProtocolState, req: &Json) -> Result<Reply> {
     let cmd = req.get_str("cmd").ok_or_else(|| anyhow!("missing 'cmd'"))?;
+    let one = |j: Json| Ok(Reply::One(j));
     match cmd {
-        "ping" => Ok(Json::obj(vec![
+        "ping" => one(Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("pong", Json::Bool(true)),
             ("version", Json::str(crate::version())),
@@ -157,9 +272,9 @@ fn dispatch(state: &ProtocolState, req: &Json) -> Result<Json> {
                     Json::num(state.registry.persist_errors() as f64),
                 );
             }
-            Ok(m)
+            one(m)
         }
-        "models" => Ok(Json::obj(vec![
+        "models" => one(Json::obj(vec![
             ("ok", Json::Bool(true)),
             (
                 "models",
@@ -169,7 +284,7 @@ fn dispatch(state: &ProtocolState, req: &Json) -> Result<Json> {
         "drop" => {
             let id = req.get_str("model").ok_or_else(|| anyhow!("missing 'model'"))?;
             if state.registry.remove(id) {
-                Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+                one(Json::obj(vec![("ok", Json::Bool(true))]))
             } else {
                 bail!("no such model {id:?}")
             }
@@ -180,20 +295,45 @@ fn dispatch(state: &ProtocolState, req: &Json) -> Result<Json> {
             Metrics::incr(&state.metrics.fits_total);
             let mut pairs = fit_response(&model);
             pairs.push(("model", Json::str(state.registry.insert(model))));
-            Ok(Json::obj(pairs))
+            one(Json::obj(pairs))
         }
         "predict" => {
             Metrics::incr(&state.metrics.predict_requests);
+            let t0 = Instant::now();
             let id = req.get_str("model").ok_or_else(|| anyhow!("missing 'model'"))?;
-            let model =
-                state.registry.get(id).ok_or_else(|| anyhow!("no such model {id:?}"))?;
+            // An Arc'd compiled plan — no model clone on the hot path.
+            let plan =
+                state.registry.plan(id).ok_or_else(|| anyhow!("no such model {id:?}"))?;
             let x = matrix_from_json(req.get("x").ok_or_else(|| anyhow!("missing 'x'"))?)?;
-            let preds = model.predict(&x);
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("taus", Json::arr_f64(&model.taus())),
-                ("pred", Json::Arr(preds.iter().map(|p| Json::arr_f64(p)).collect())),
-            ]))
+            // Validate here so a shape mismatch is a clean protocol error
+            // instead of a panic inside a (possibly shared) batch.
+            if plan.n_features() != 0 && x.cols() != plan.n_features() {
+                bail!(
+                    "x has {} features but model {id:?} was trained on {}",
+                    x.cols(),
+                    plan.n_features()
+                );
+            }
+            let stream = req.get_bool("stream").unwrap_or(false);
+            let chunk_points = req.get_usize("chunk_points").unwrap_or(DEFAULT_STREAM_CHUNK);
+            ensure!(chunk_points >= 1, "'chunk_points' must be >= 1");
+            // Park on the micro-batcher: coalesces with concurrent
+            // requests for this model, rows bitwise-unchanged.
+            let preds = state.batcher.predict(id, &plan, x, &state.metrics)?;
+            state
+                .metrics
+                .predict_latency
+                .record(t0.elapsed().as_micros().min(u64::MAX as u128) as u64);
+            let taus = plan.taus().to_vec();
+            if stream {
+                Ok(Reply::PredictStream { taus, preds, chunk_points })
+            } else {
+                one(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("taus", Json::arr_f64(&taus)),
+                    ("pred", Json::Arr(preds.iter().map(|p| Json::arr_f64(p)).collect())),
+                ]))
+            }
         }
         "save" => {
             // Confined to the persistence directory: a network client
@@ -221,13 +361,13 @@ fn dispatch(state: &ProtocolState, req: &Json) -> Result<Json> {
                     )),
                 ));
             }
-            Ok(Json::obj(pairs))
+            one(Json::obj(pairs))
         }
         "load" => {
             let name = req.get_str("name").ok_or_else(|| anyhow!("missing 'name'"))?;
             let id = state.registry.load_named(name)?;
             let model = state.registry.get(&id).expect("just inserted");
-            Ok(Json::obj(vec![
+            one(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("model", Json::str(id)),
                 ("kind", Json::str(model.kind())),
@@ -238,7 +378,7 @@ fn dispatch(state: &ProtocolState, req: &Json) -> Result<Json> {
             let id = req.get_str("model").ok_or_else(|| anyhow!("missing 'model'"))?;
             let model =
                 state.registry.get(id).ok_or_else(|| anyhow!("no such model {id:?}"))?;
-            Ok(Json::obj(vec![
+            one(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("model", Json::str(id)),
                 ("artifact", model.to_artifact()?),
@@ -253,12 +393,14 @@ mod tests {
     use super::*;
 
     fn state() -> ProtocolState {
-        ProtocolState {
-            registry: Arc::new(ModelRegistry::new()),
-            metrics: Arc::new(Metrics::new()),
-            opts: SolveOptions::default(),
-            engine: Arc::new(FitEngine::new()),
-        }
+        // window 0: single-threaded tests take the direct predict path
+        ProtocolState::new(
+            Arc::new(ModelRegistry::new()),
+            Arc::new(Metrics::new()),
+            SolveOptions::default(),
+            Arc::new(FitEngine::new()),
+            BatchConfig { window_us: 0, max_rows: 4096 },
+        )
     }
 
     #[test]
@@ -331,6 +473,78 @@ mod tests {
         assert_eq!(dr.get("ok").and_then(Json::as_bool), Some(true));
         let pr2 = handle_line(&st, &format!(r#"{{"cmd":"predict","model":"{id}","x":[[0.5]]}}"#));
         assert_eq!(pr2.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn streamed_predict_chunks_and_terminates() {
+        let st = state();
+        let req = r#"{"cmd":"fit","x":[[0.0],[0.2],[0.4],[0.6],[0.8],[1.0],[0.1],[0.9]],
+                      "y":[0.0,0.6,0.9,0.9,0.6,0.0,0.3,0.3],"tau":0.5,"lambda":0.01}"#
+            .replace('\n', " ");
+        let r = handle_line(&st, &req);
+        let id = r.get_str("model").unwrap().to_string();
+        // 5 evaluation points, 2 per chunk -> header + 3 chunks + done
+        let xs = "[[0.0],[0.25],[0.5],[0.75],[1.0]]";
+        let plain = handle_line(
+            &st,
+            &format!(r#"{{"cmd":"predict","model":"{id}","x":{xs}}}"#),
+        );
+        let full: Vec<f64> = plain.get("pred").unwrap().as_arr().unwrap()[0]
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        let mut lines: Vec<Json> = Vec::new();
+        handle_request(
+            &st,
+            &format!(
+                r#"{{"cmd":"predict","model":"{id}","x":{xs},"stream":true,"chunk_points":2}}"#
+            ),
+            &mut |j| {
+                lines.push(j);
+                true
+            },
+        );
+        assert_eq!(lines.len(), 5, "header + 3 chunks + terminator: {lines:?}");
+        let header = &lines[0];
+        assert_eq!(header.get("stream").and_then(Json::as_bool), Some(true));
+        assert_eq!(header.get_f64("points"), Some(5.0));
+        assert_eq!(header.get_f64("chunks"), Some(3.0));
+        // reassemble and compare to the plain response
+        let mut rebuilt: Vec<f64> = Vec::new();
+        for rec in &lines[1..4] {
+            let rows = rec.get("pred").unwrap().as_arr().unwrap();
+            assert_eq!(rows.len(), 1, "one level");
+            rebuilt.extend(
+                rows[0].as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()),
+            );
+        }
+        assert_eq!(rebuilt, full, "streamed chunks must reassemble bitwise");
+        let done = &lines[4];
+        assert_eq!(done.get("done").and_then(Json::as_bool), Some(true));
+        assert_eq!(done.get_f64("chunks"), Some(3.0));
+    }
+
+    #[test]
+    fn predict_metrics_and_shape_validation() {
+        let st = state();
+        let req = r#"{"cmd":"fit","x":[[0.0],[0.2],[0.4],[0.6],[0.8],[1.0],[0.1],[0.9]],
+                      "y":[0.0,0.6,0.9,0.9,0.6,0.0,0.3,0.3],"tau":0.5,"lambda":0.01}"#
+            .replace('\n', " ");
+        let id = handle_line(&st, &req).get_str("model").unwrap().to_string();
+        let ok = handle_line(&st, &format!(r#"{{"cmd":"predict","model":"{id}","x":[[0.5]]}}"#));
+        assert_eq!(ok.get("ok").and_then(Json::as_bool), Some(true));
+        // wrong feature count is a clean error, not a panic
+        let bad =
+            handle_line(&st, &format!(r#"{{"cmd":"predict","model":"{id}","x":[[0.5,0.5]]}}"#));
+        assert_eq!(bad.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(bad.get_str("error").unwrap().contains("features"), "{bad:?}");
+        let m = handle_line(&st, r#"{"cmd":"metrics"}"#);
+        assert_eq!(m.get_f64("predict_requests"), Some(2.0));
+        assert_eq!(m.get_f64("predict_batches"), Some(1.0), "only the valid predict batched");
+        assert_eq!(m.get_f64("predict_batch_max"), Some(1.0));
+        assert!(m.get_f64("predict_latency_us_max").unwrap() >= 0.0);
     }
 
     #[test]

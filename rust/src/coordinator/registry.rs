@@ -2,16 +2,20 @@
 //! persistence.
 //!
 //! The registry stores [`QuantileModel`]s (the unified facade from
-//! [`crate::api`]) under generated ids. With a persistence directory
-//! configured, every inserted model is written as a versioned JSON
-//! artifact (`<dir>/<id>.json`) and reloaded on construction — a server
-//! restarted on the same directory serves the same models.
+//! [`crate::api`]) under generated ids, each beside its compiled
+//! [`PredictPlan`] — built exactly once at insert (and at write-through
+//! reload), so the serving path fetches an `Arc`'d plan instead of
+//! cloning models per request. With a persistence directory configured,
+//! every inserted model is written as a versioned JSON artifact
+//! (`<dir>/<id>.json`) and reloaded on construction — a server restarted
+//! on the same directory serves the same models.
 
 use crate::api::QuantileModel;
+use crate::engine::PredictPlan;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 
 /// Tracking for write-through persistence failures: the total counter is
 /// surfaced by the protocol's `metrics` command, and the per-model
@@ -27,10 +31,19 @@ struct PersistFailures {
 /// still constructs, via the [`QuantileModel`] variants).
 pub type StoredModel = QuantileModel;
 
+/// A stored model and its serving representation, compiled exactly once
+/// at insert / reload time (see [`PredictPlan`]). The predict path asks
+/// for the `Arc`'d plan and never clones the model.
+#[derive(Debug)]
+struct StoredEntry {
+    model: QuantileModel,
+    plan: Arc<PredictPlan>,
+}
+
 /// Thread-safe model store with generated ids.
 #[derive(Debug, Default)]
 pub struct ModelRegistry {
-    models: RwLock<HashMap<String, QuantileModel>>,
+    models: RwLock<HashMap<String, StoredEntry>>,
     next_id: AtomicU64,
     /// When set, inserts are mirrored to `<dir>/<id>.json` artifacts.
     persist_dir: Option<PathBuf>,
@@ -67,11 +80,14 @@ impl ModelRegistry {
                 .and_then(|s| s.to_str())
                 .map(String::from)
                 .ok_or_else(|| anyhow::anyhow!("bad artifact file name {}", path.display()))?;
-            let model = QuantileModel::load(&path)?;
+            // Compile the serving plan at reload time, exactly like a
+            // fresh insert: a restarted server answers its first predict
+            // without re-deriving any coefficient layout.
+            let (model, plan) = crate::api::artifact::load_compiled(&path)?;
             if let Some(seq) = id.strip_prefix('m').and_then(|s| s.parse::<u64>().ok()) {
                 max_seq = Some(max_seq.map_or(seq, |m| m.max(seq)));
             }
-            models.insert(id, model);
+            models.insert(id, StoredEntry { model, plan });
         }
         Ok(ModelRegistry {
             models: RwLock::new(models),
@@ -105,7 +121,10 @@ impl ModelRegistry {
                 self.failures.by_id.write().unwrap().insert(id.clone(), format!("{e:#}"));
             }
         }
-        self.models.write().unwrap().insert(id.clone(), model);
+        // Compile the serving plan once, outside any lock: every predict
+        // for this id shares the Arc instead of re-packing coefficients.
+        let plan = Arc::new(model.compile_plan());
+        self.models.write().unwrap().insert(id.clone(), StoredEntry { model, plan });
         id
     }
 
@@ -179,7 +198,14 @@ impl ModelRegistry {
     }
 
     pub fn get(&self, id: &str) -> Option<StoredModel> {
-        self.models.read().unwrap().get(id).cloned()
+        self.models.read().unwrap().get(id).map(|e| e.model.clone())
+    }
+
+    /// The compiled serving plan for `id` — an `Arc` clone, no model
+    /// copy. This is what the protocol's `predict` (and the micro-
+    /// batcher behind it) runs on.
+    pub fn plan(&self, id: &str) -> Option<Arc<PredictPlan>> {
+        self.models.read().unwrap().get(id).map(|e| e.plan.clone())
     }
 
     pub fn remove(&self, id: &str) -> bool {
@@ -243,6 +269,23 @@ mod tests {
         assert!(reg.remove(&id));
         assert!(reg.is_empty());
         assert!(reg.get(&id).is_none());
+    }
+
+    #[test]
+    fn plans_are_compiled_on_insert_and_shared() {
+        let fit = toy_fit(14, 8);
+        let reg = ModelRegistry::new();
+        let id = reg.insert(StoredModel::Kqr(fit.clone()));
+        let plan = reg.plan(&id).unwrap();
+        let again = reg.plan(&id).unwrap();
+        assert!(Arc::ptr_eq(&plan, &again), "plan is compiled once and Arc-shared");
+        let xt = {
+            let mut rng = Rng::new(31);
+            synth::sine_hetero(6, &mut rng).x
+        };
+        assert_eq!(plan.predict(&xt), vec![fit.predict(&xt)]);
+        assert!(reg.remove(&id));
+        assert!(reg.plan(&id).is_none());
     }
 
     #[test]

@@ -62,13 +62,25 @@ impl Scheduler {
         opts: SolveOptions,
         engine: Arc<FitEngine>,
     ) -> Scheduler {
+        Scheduler::with_engine_and_metrics(n_workers, opts, engine, Arc::new(Metrics::new()))
+    }
+
+    /// [`Scheduler::with_engine`] on a shared [`Metrics`] instance — hand
+    /// in a co-located TCP server's metrics so the wire `metrics` command
+    /// surfaces the scheduler-side counters (`jobs_*`, `fits_total`,
+    /// `warm_evictions`) instead of reporting a disjoint instance's zeros.
+    pub fn with_engine_and_metrics(
+        n_workers: usize,
+        opts: SolveOptions,
+        engine: Arc<FitEngine>,
+        metrics: Arc<Metrics>,
+    ) -> Scheduler {
         assert!(n_workers >= 1);
         let queue = Arc::new(Queue {
             jobs: Mutex::new(VecDeque::new()),
             ready: Condvar::new(),
             shutdown: Mutex::new(false),
         });
-        let metrics = Arc::new(Metrics::new());
         let mut workers = Vec::new();
         // With several workers the pool itself is the parallel dimension:
         // each worker runs its solves with intra-op (GEMV) parallelism
@@ -141,7 +153,12 @@ impl Scheduler {
 }
 
 /// Per-worker warm-start state: APGD iterate keyed by (dataset
-/// fingerprint, τ).
+/// fingerprint, τ). Its lifetime is bounded by the engine's GramCache:
+/// after every job the worker checks whether the fingerprint is still
+/// cached and drops the state when it is not (see `worker_loop`) —
+/// otherwise the O(n) iterate vectors of a dataset whose jobs finished
+/// long ago would sit in the worker forever, and a revived dataset
+/// would pay the eigendecomposition again anyway.
 struct WarmState {
     key: Fingerprint,
     tau: f64,
@@ -180,6 +197,15 @@ fn worker_loop(
         match &result {
             Ok(_) => Metrics::incr(&metrics.jobs_completed),
             Err(_) => Metrics::incr(&metrics.jobs_failed),
+        }
+        // Evict warm-start state whose dataset the GramCache has dropped:
+        // the iterate can never warm-start a cheaper solve than a cold
+        // one once the factorization must be recomputed anyway.
+        if let Some(w) = &warm {
+            if !engine.cache.contains(&w.key) {
+                warm = None;
+                Metrics::incr(&metrics.warm_evictions);
+            }
         }
         // receiver may have been dropped; that's fine
         let _ = tx.send((job.id, result));
@@ -342,6 +368,54 @@ mod tests {
         let (_, res) = rx.recv().unwrap();
         assert!(res.is_err());
         assert_eq!(Metrics::get(&sched.metrics.jobs_failed), 1);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn warm_state_is_evicted_with_the_gram_cache_entry() {
+        use crate::engine::EngineConfig;
+        // capacity-1 cache: fitting dataset B evicts dataset A's entry,
+        // and the worker must then drop A's warm-start state too.
+        let engine = std::sync::Arc::new(FitEngine::with_config(EngineConfig {
+            cache_capacity: 1,
+            ..EngineConfig::default()
+        }));
+        // externally-shared metrics (what a co-located server would pass)
+        let shared = std::sync::Arc::new(Metrics::new());
+        let sched = Scheduler::with_engine_and_metrics(
+            1,
+            SolveOptions::default(),
+            engine,
+            shared.clone(),
+        );
+        let rx = sched.submit(make_job(1, 20, 11, JobSpec::Kqr { tau: 0.5, lambda: 0.1 }));
+        rx.recv().unwrap().1.unwrap();
+        assert_eq!(
+            Metrics::get(&sched.metrics.warm_evictions),
+            0,
+            "dataset A still cached; its warm state survives"
+        );
+        // different seed => different dataset => cache eviction of A
+        let rx = sched.submit(make_job(
+            2,
+            20,
+            12,
+            JobSpec::KqrPath { tau: 0.5, lambdas: vec![0.1] },
+        ));
+        rx.recv().unwrap().1.unwrap();
+        assert_eq!(
+            Metrics::get(&sched.metrics.warm_evictions),
+            1,
+            "A's fingerprint left the GramCache; warm state must go with it"
+        );
+        assert_eq!(
+            Metrics::get(&shared.warm_evictions),
+            1,
+            "the externally-shared metrics handle sees the same counter"
+        );
+        // the worker keeps serving jobs afterwards
+        let rx = sched.submit(make_job(3, 20, 11, JobSpec::Kqr { tau: 0.5, lambda: 0.1 }));
+        assert!(rx.recv().unwrap().1.is_ok());
         sched.shutdown();
     }
 

@@ -5,8 +5,9 @@
 //! for a compute-bound service (fits run for seconds) blocking threads
 //! are the simpler and equally scalable design at this fan-in.
 
+use super::batcher::BatchConfig;
 use super::metrics::Metrics;
-use super::protocol::{handle_line, ProtocolState};
+use super::protocol::{handle_request, ProtocolState};
 use super::registry::ModelRegistry;
 use crate::kqr::SolveOptions;
 use anyhow::{Context, Result};
@@ -25,6 +26,10 @@ pub struct ServerConfig {
     /// next spawn, so the server survives restarts (`None` = in-memory
     /// only).
     pub persist_dir: Option<String>,
+    /// Predict micro-batching knobs; the default reads
+    /// `FASTKQR_BATCH_WINDOW_US` / `FASTKQR_BATCH_MAX_ROWS` from the
+    /// environment at config construction.
+    pub batch: BatchConfig,
 }
 
 impl Default for ServerConfig {
@@ -33,6 +38,7 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:7787".to_string(),
             opts: SolveOptions::default(),
             persist_dir: None,
+            batch: BatchConfig::from_env(),
         }
     }
 }
@@ -59,14 +65,15 @@ impl Server {
         });
         let metrics = Arc::new(Metrics::new());
         let stop = Arc::new(AtomicBool::new(false));
-        let state = Arc::new(ProtocolState {
-            registry: registry.clone(),
-            metrics: metrics.clone(),
-            opts: config.opts,
+        let state = Arc::new(ProtocolState::new(
+            registry.clone(),
+            metrics.clone(),
+            config.opts,
             // the process-global engine: concurrent connections (and any
             // co-located scheduler) share one Gram/basis per dataset
-            engine: crate::engine::FitEngine::global().clone(),
-        });
+            crate::engine::FitEngine::global().clone(),
+            config.batch,
+        ));
         let stop2 = stop.clone();
         let accept_thread = std::thread::Builder::new()
             .name("fastkqr-accept".into())
@@ -125,10 +132,18 @@ fn handle_connection(stream: TcpStream, state: &ProtocolState) {
         if line.trim() == "quit" {
             break;
         }
-        let resp = handle_line(state, &line);
-        let mut out = resp.to_string();
-        out.push('\n');
-        if writer.write_all(out.as_bytes()).is_err() {
+        // One request, one *or more* response lines (streamed predicts
+        // emit header + chunk records + terminator); each line is
+        // serialized and written as it renders, so memory per connection
+        // is bounded by the chunk size, not the prediction matrix.
+        let mut write_ok = true;
+        handle_request(state, &line, &mut |resp| {
+            let mut out = resp.to_string();
+            out.push('\n');
+            write_ok = writer.write_all(out.as_bytes()).is_ok();
+            write_ok
+        });
+        if !write_ok {
             break;
         }
     }
@@ -157,6 +172,35 @@ impl Client {
         self.reader.read_line(&mut resp)?;
         crate::util::Json::parse(resp.trim())
             .map_err(|e| anyhow::anyhow!("bad response: {e} ({resp:?})"))
+    }
+
+    /// Send one request and collect **all** of its response lines: one
+    /// for ordinary commands, header + chunk records + terminator for a
+    /// streamed predict (`"stream": true`). Reading stops at the
+    /// terminator (`"done": true`), at a single non-stream response, or
+    /// at a leading error.
+    pub fn request_stream(&mut self, req: &crate::util::Json) -> Result<Vec<crate::util::Json>> {
+        use crate::util::Json;
+        let mut line = req.to_string();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        let mut lines = Vec::new();
+        loop {
+            let mut resp = String::new();
+            if self.reader.read_line(&mut resp)? == 0 {
+                anyhow::bail!("connection closed mid-stream after {} line(s)", lines.len());
+            }
+            let v = Json::parse(resp.trim())
+                .map_err(|e| anyhow::anyhow!("bad response: {e} ({resp:?})"))?;
+            let first = lines.is_empty();
+            let streaming_header =
+                first && v.get("stream").and_then(Json::as_bool) == Some(true);
+            let done = v.get("done").and_then(Json::as_bool) == Some(true);
+            lines.push(v);
+            if (first && !streaming_header) || done {
+                return Ok(lines);
+            }
+        }
     }
 }
 

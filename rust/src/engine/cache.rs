@@ -238,6 +238,15 @@ impl GramCache {
         self.slots.lock().unwrap().map.len()
     }
 
+    /// Is a factorization (built or in-flight) still cached under this
+    /// fingerprint? Scheduler workers use this to bound the lifetime of
+    /// their per-worker warm-start state: once the cache has dropped a
+    /// dataset, the matching O(n) APGD iterate can never pay for itself
+    /// again and is evicted too.
+    pub fn contains(&self, key: &Fingerprint) -> bool {
+        self.slots.lock().unwrap().map.contains_key(key)
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -18,6 +18,12 @@
 //!   iteration for the whole bundle; converged cells retire via
 //!   swap-remove repacking), with the sequential path kept as the
 //!   bitwise parity oracle.
+//! - [`predict`]: the serving-side counterpart — [`PredictPlan`]s compile
+//!   a fitted model once (resolved kernel, `Arc`'d train-row/landmark
+//!   block, coefficients packed into one matrix) so every predict request
+//!   is one cross-Gram + one multi-RHS GEMM, and `predict_many` stacks
+//!   concurrent requests for the coordinator's micro-batcher with
+//!   bitwise-identical per-request rows.
 //!
 //! Consumers: `cv::cross_validate` runs folds on the engine,
 //! `coordinator::scheduler` workers share one engine (concurrent jobs on
@@ -29,11 +35,13 @@
 
 pub mod cache;
 pub mod lockstep;
+pub mod predict;
 
 pub use cache::{
     fingerprint, fingerprint_approx, ApproxSpec, BasisEntry, CacheMetrics, Fingerprint, GramCache,
 };
 pub use lockstep::LockstepStats;
+pub use predict::{PlanGroup, PredictPlan};
 
 use crate::backend::NativeBackend;
 use crate::data::Dataset;

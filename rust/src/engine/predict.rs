@@ -1,0 +1,339 @@
+//! The PredictEngine: compiled per-model prediction plans and multi-
+//! request batch assembly for the serving path.
+//!
+//! Fitting got its shared substrate in PRs 1–4 (GramCache, lockstep
+//! grids, Nyström factors); this module gives *inference* the same
+//! treatment. A [`PredictPlan`] is compiled **once** per model — at
+//! registry insert, artifact load, or on demand — and resolves everything
+//! a request would otherwise re-derive per call:
+//!
+//! - the resolved [`Kernel`] and the `Arc`'d **block** the cross-Gram is
+//!   built against (training rows for dense models, the Nyström landmark
+//!   set for low-rank ones — the plan is representation-agnostic);
+//! - every per-fit coefficient vector packed into one k×d matrix, so a
+//!   request is **one** cross-Gram build plus **one** multi-RHS
+//!   [`gemm_nt_into`](crate::linalg::gemm_nt_into) instead of k GEMVs.
+//!
+//! Fits that do not share a predictor basis (a hand-assembled
+//! [`ModelSet`](crate::api::ModelSet) mixing solvers) compile into
+//! multiple [`PlanGroup`]s — one cross-Gram + GEMM per group, mirroring
+//! exactly the grouping `QuantileModel::predict` batched by before, so
+//! every output row stays **bitwise equal** to the per-fit
+//! `KqrFit::predict` path. Models from one solver (paths, grids, CV
+//! winners, NCKQR) always compile to a single group.
+//!
+//! [`PredictPlan::predict_many`] is the micro-batcher's compute kernel:
+//! it stacks the query matrices of several concurrent requests
+//! ([`Matrix::vstack`] — a pure memcpy), runs the plan once on the
+//! stacked rows, and scatters the output columns back per request.
+//! Because every output element is an independent dot product (+
+//! intercept) over its own query row, batched rows are bitwise equal to
+//! the rows each request would have computed alone — the same guarantee
+//! fit-set batching already has.
+
+use crate::api::QuantileModel;
+use crate::kernel::Kernel;
+use crate::kqr::KqrFit;
+use crate::linalg::Matrix;
+use std::sync::Arc;
+
+/// One (kernel, block, packed coefficients) unit of a plan: everything
+/// needed to predict the rows of its fits with one cross-Gram + one GEMM.
+#[derive(Debug)]
+pub struct PlanGroup {
+    kernel: Kernel,
+    /// The d×p matrix the cross-Gram is built against: `Arc`-shared
+    /// training rows (dense) or the landmark set (low-rank).
+    block: Arc<Matrix>,
+    /// k×d packed coefficient rows (α for dense fits, landmark weights w
+    /// for low-rank fits), one row per prediction level.
+    coef: Matrix,
+    /// Per-level intercepts.
+    bs: Vec<f64>,
+}
+
+impl PlanGroup {
+    fn predict_into(&self, xt: &Matrix, out: &mut Vec<Vec<f64>>) {
+        let cg = self.kernel.cross_gram(xt, &self.block);
+        out.extend(crate::kqr::predict_packed(&self.coef, &self.bs, &cg));
+    }
+}
+
+/// A compiled prediction plan (see module docs). Compile once with
+/// [`PredictPlan::compile`], then serve any number of requests through
+/// [`predict`](PredictPlan::predict) /
+/// [`predict_many`](PredictPlan::predict_many).
+#[derive(Debug)]
+pub struct PredictPlan {
+    groups: Vec<PlanGroup>,
+    taus: Vec<f64>,
+    n_features: usize,
+    kind: &'static str,
+}
+
+impl PredictPlan {
+    /// Compile the model's serving representation. Cheap relative to a
+    /// fit — O(Σ k·d) coefficient copies, no kernel evaluations — but
+    /// meant to run once per model (registry insert / artifact load), not
+    /// once per request.
+    pub fn compile(model: &QuantileModel) -> PredictPlan {
+        let groups = match model {
+            QuantileModel::Kqr(f) => compile_kqr_groups(std::slice::from_ref(f)),
+            QuantileModel::Set(s) => compile_kqr_groups(&s.fits),
+            QuantileModel::Nckqr(f) => {
+                let bs: Vec<f64> = f.levels.iter().map(|lv| lv.b).collect();
+                let group = match &f.lowrank {
+                    Some(lr) => {
+                        let rows: Vec<&[f64]> = lr.w.iter().map(Vec::as_slice).collect();
+                        PlanGroup {
+                            kernel: f.kernel().clone(),
+                            block: lr.z.clone(),
+                            coef: pack_rows(&rows, lr.z.rows()),
+                            bs,
+                        }
+                    }
+                    None => {
+                        let rows: Vec<&[f64]> =
+                            f.levels.iter().map(|lv| lv.alpha.as_slice()).collect();
+                        PlanGroup {
+                            kernel: f.kernel().clone(),
+                            block: f.x_train_arc().clone(),
+                            coef: pack_rows(&rows, f.x_train().rows()),
+                            bs,
+                        }
+                    }
+                };
+                vec![group]
+            }
+        };
+        PredictPlan {
+            groups,
+            taus: model.taus(),
+            n_features: model.n_features(),
+            kind: model.kind(),
+        }
+    }
+
+    /// Predict at the rows of `xt`: one output row per quantile level, in
+    /// the same order as [`PredictPlan::taus`]. Bitwise equal to
+    /// `QuantileModel::predict` on the source model (both drive the same
+    /// packed GEMM kernel).
+    pub fn predict(&self, xt: &Matrix) -> Vec<Vec<f64>> {
+        let mut out = Vec::with_capacity(self.n_levels());
+        for g in &self.groups {
+            g.predict_into(xt, &mut out);
+        }
+        out
+    }
+
+    /// The batched entry point: stack every part's query rows, run the
+    /// plan once, scatter the output columns back per part (see module
+    /// docs for the bitwise-equality argument). Returns one prediction
+    /// matrix per input part, in order.
+    pub fn predict_many(&self, parts: &[Matrix]) -> Vec<Vec<Vec<f64>>> {
+        match parts.len() {
+            0 => Vec::new(),
+            1 => vec![self.predict(&parts[0])],
+            _ => {
+                let refs: Vec<&Matrix> = parts.iter().collect();
+                let full = self.predict(&Matrix::vstack(&refs));
+                let mut out = Vec::with_capacity(parts.len());
+                let mut off = 0usize;
+                for part in parts {
+                    let t = part.rows();
+                    out.push(
+                        full.iter().map(|row| row[off..off + t].to_vec()).collect(),
+                    );
+                    off += t;
+                }
+                out
+            }
+        }
+    }
+
+    /// The τ of each prediction row.
+    pub fn taus(&self) -> &[f64] {
+        &self.taus
+    }
+
+    /// Number of prediction rows per request.
+    pub fn n_levels(&self) -> usize {
+        self.taus.len()
+    }
+
+    /// Feature dimension the plan's kernels expect (0 only for an empty
+    /// fit set, which predicts nothing).
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Model kind tag of the source model (`"kqr"`/`"nckqr"`/`"set"`).
+    pub fn kind(&self) -> &'static str {
+        self.kind
+    }
+
+    /// Number of (kernel, block) groups — 1 for every model produced by
+    /// one solver.
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Total cross-Gram columns a request pays for (Σ group block rows).
+    pub fn block_rows(&self) -> usize {
+        self.groups.iter().map(|g| g.block.rows()).sum()
+    }
+
+    /// Floats held by the plan's packed coefficients (the blocks are
+    /// `Arc`-shared with the model, not copies).
+    pub fn coef_floats(&self) -> usize {
+        self.groups.iter().map(|g| g.coef.rows() * g.coef.cols()).sum()
+    }
+}
+
+/// Pack coefficient slices as the rows of a k×d matrix.
+fn pack_rows(rows: &[&[f64]], d: usize) -> Matrix {
+    let mut coef = Matrix::zeros(rows.len(), d);
+    for (r, c) in rows.iter().enumerate() {
+        debug_assert_eq!(c.len(), d);
+        coef.row_mut(r).copy_from_slice(c);
+    }
+    coef
+}
+
+/// Group adjacent fits that share one predictor basis — the same
+/// grouping `QuantileModel::predict` batched by before plans existed
+/// (same kernel + same `Arc`'d training block / landmark set) — and pack
+/// each run's coefficients.
+fn compile_kqr_groups(fits: &[KqrFit]) -> Vec<PlanGroup> {
+    fn same_group(a: &KqrFit, b: &KqrFit) -> bool {
+        if a.kernel() != b.kernel() {
+            return false;
+        }
+        match (&a.lowrank, &b.lowrank) {
+            (None, None) => Arc::ptr_eq(a.x_train_arc(), b.x_train_arc()),
+            (Some(la), Some(lb)) => Arc::ptr_eq(&la.z, &lb.z),
+            _ => false,
+        }
+    }
+    let mut groups = Vec::new();
+    let mut i = 0;
+    while i < fits.len() {
+        let mut j = i + 1;
+        while j < fits.len() && same_group(&fits[i], &fits[j]) {
+            j += 1;
+        }
+        let run = &fits[i..j];
+        let head = &run[0];
+        let bs: Vec<f64> = run.iter().map(|f| f.b).collect();
+        let group = match &head.lowrank {
+            Some(lr) => {
+                let rows: Vec<&[f64]> =
+                    run.iter().map(|f| f.lowrank.as_ref().unwrap().w.as_slice()).collect();
+                PlanGroup {
+                    kernel: head.kernel().clone(),
+                    block: lr.z.clone(),
+                    coef: pack_rows(&rows, lr.z.rows()),
+                    bs,
+                }
+            }
+            None => {
+                let rows: Vec<&[f64]> = run.iter().map(|f| f.alpha.as_slice()).collect();
+                PlanGroup {
+                    kernel: head.kernel().clone(),
+                    block: head.x_train_arc().clone(),
+                    coef: pack_rows(&rows, head.x_train().rows()),
+                    bs,
+                }
+            }
+        };
+        groups.push(group);
+        i = j;
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, Rng};
+    use crate::kqr::KqrSolver;
+
+    fn toy(n: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let d = synth::sine_hetero(n, &mut rng);
+        (d.x, d.y)
+    }
+
+    #[test]
+    fn plan_matches_per_fit_predict_bitwise() {
+        let (x, y) = toy(30, 1);
+        let solver = KqrSolver::new(&x, &y, Kernel::Rbf { sigma: 0.5 }).unwrap();
+        let fits = solver.fit_path(0.5, &[0.1, 0.01]).unwrap();
+        let model = QuantileModel::Set(crate::api::ModelSet {
+            fits: fits.clone(),
+            shape: crate::api::SetShape::Path { tau: 0.5 },
+            cv: Vec::new(),
+            lockstep: None,
+        });
+        let plan = PredictPlan::compile(&model);
+        assert_eq!(plan.n_groups(), 1, "one solver => one group");
+        assert_eq!(plan.n_levels(), 2);
+        let xt = {
+            let mut rng = Rng::new(9);
+            synth::sine_hetero(7, &mut rng).x
+        };
+        let rows = plan.predict(&xt);
+        for (i, f) in fits.iter().enumerate() {
+            assert_eq!(rows[i], f.predict(&xt), "fit {i}");
+        }
+    }
+
+    #[test]
+    fn predict_many_scatters_bitwise() {
+        let (x, y) = toy(25, 2);
+        let solver = KqrSolver::new(&x, &y, Kernel::Rbf { sigma: 0.5 }).unwrap();
+        let fit = solver.fit(0.5, 0.05).unwrap();
+        let model = QuantileModel::Kqr(fit);
+        let plan = PredictPlan::compile(&model);
+        let mut rng = Rng::new(11);
+        let parts: Vec<Matrix> = (0..4)
+            .map(|i| synth::sine_hetero(1 + i, &mut rng).x)
+            .collect();
+        let batched = plan.predict_many(&parts);
+        assert_eq!(batched.len(), parts.len());
+        for (part, got) in parts.iter().zip(&batched) {
+            assert_eq!(got, &plan.predict(part), "scatter must be bitwise");
+        }
+        assert!(plan.predict_many(&[]).is_empty());
+    }
+
+    #[test]
+    fn mixed_basis_sets_compile_to_multiple_groups() {
+        // Two independent solvers => different x_train Arcs => 2 groups,
+        // and the plan still matches per-fit prediction exactly.
+        let (x, y) = toy(20, 3);
+        let f1 = KqrSolver::new(&x, &y, Kernel::Rbf { sigma: 0.5 })
+            .unwrap()
+            .fit(0.5, 0.1)
+            .unwrap();
+        let f2 = KqrSolver::new(&x, &y, Kernel::Rbf { sigma: 0.5 })
+            .unwrap()
+            .fit(0.5, 0.1)
+            .unwrap();
+        let model = QuantileModel::Set(crate::api::ModelSet {
+            fits: vec![f1.clone(), f2.clone()],
+            shape: crate::api::SetShape::Path { tau: 0.5 },
+            cv: Vec::new(),
+            lockstep: None,
+        });
+        let plan = PredictPlan::compile(&model);
+        assert_eq!(plan.n_groups(), 2);
+        let xt = {
+            let mut rng = Rng::new(4);
+            synth::sine_hetero(5, &mut rng).x
+        };
+        let rows = plan.predict(&xt);
+        assert_eq!(rows[0], f1.predict(&xt));
+        assert_eq!(rows[1], f2.predict(&xt));
+    }
+}

@@ -161,6 +161,14 @@ impl KqrFit {
         &self.x_train
     }
 
+    /// The `Arc`-shared training inputs — the predict-plan compiler holds
+    /// (and pointer-compares) the allocation itself, so plans keep the
+    /// block alive without copying it and fits from one solver compile
+    /// into one group.
+    pub(crate) fn x_train_arc(&self) -> &Arc<Matrix> {
+        &self.x_train
+    }
+
     /// Assemble a fit from solver-owned parts (the lockstep grid driver
     /// and the artifact loader produce fits outside this module but must
     /// emit the same self-contained value as [`KqrSolver::fit_warm_from`]).
@@ -613,15 +621,27 @@ pub fn lambda_grid(count: usize, max: f64, min_ratio: f64) -> Vec<f64> {
 pub(crate) fn predict_rows(coefs: &[&[f64]], bs: &[f64], cg: &Matrix) -> Vec<Vec<f64>> {
     let k = coefs.len();
     debug_assert_eq!(bs.len(), k);
-    let (t, d) = (cg.rows(), cg.cols());
+    let d = cg.cols();
     let mut coef = Matrix::zeros(k, d);
     for (r, c) in coefs.iter().enumerate() {
         debug_assert_eq!(c.len(), d);
         coef.row_mut(r).copy_from_slice(c);
     }
+    predict_packed(&coef, bs, cg)
+}
+
+/// [`predict_rows`] from an **already-packed** k×d coefficient matrix —
+/// the single GEMM kernel both the per-call path above and the compiled
+/// [`crate::engine::PredictPlan`] (which packs once per model, not once
+/// per request) drive, so the two can never diverge numerically.
+pub(crate) fn predict_packed(coef: &Matrix, bs: &[f64], cg: &Matrix) -> Vec<Vec<f64>> {
+    let k = coef.rows();
+    debug_assert_eq!(bs.len(), k);
+    debug_assert_eq!(coef.cols(), cg.cols());
+    let (t, d) = (cg.rows(), cg.cols());
     let mut out = Matrix::zeros(k, t);
     let workers = crate::linalg::par::global().workers_for(t.min(d));
-    crate::linalg::gemm_nt_into(&coef, cg, &mut out, workers);
+    crate::linalg::gemm_nt_into(coef, cg, &mut out, workers);
     (0..k)
         .map(|r| {
             let mut row = out.row(r).to_vec();

@@ -60,6 +60,17 @@
 //! save/load artifacts. The CLI subcommands, the TCP protocol and the
 //! CV driver are all thin shells over this one entry point.
 //!
+//! The **serving path** mirrors the fit engine: every model compiles
+//! once into an [`engine::PredictPlan`] (resolved kernel + `Arc`'d
+//! train-row/landmark block + all coefficients packed into one matrix,
+//! so a request is one cross-Gram + one multi-RHS GEMM), the model
+//! registry stores the plan beside the model, and the coordinator's
+//! [`coordinator::batcher`] coalesces concurrent predict requests for
+//! one model into a single plan execution with bitwise-identical rows
+//! (`FASTKQR_BATCH_WINDOW_US` / `FASTKQR_BATCH_MAX_ROWS`; large
+//! responses stream in bounded chunks via the protocol's
+//! `"stream": true`).
+//!
 //! Quick start (native backend):
 //!
 //! ```no_run
@@ -98,7 +109,9 @@ pub mod prelude {
     pub use crate::backend::Backend;
     pub use crate::cv::{cross_validate, CvResult};
     pub use crate::data::{Dataset, Rng};
-    pub use crate::engine::{ApproxSpec, EngineConfig, FitEngine, GridFit, LockstepStats};
+    pub use crate::engine::{
+        ApproxSpec, EngineConfig, FitEngine, GridFit, LockstepStats, PredictPlan,
+    };
     pub use crate::kernel::{median_heuristic_sigma, Kernel};
     pub use crate::kqr::{KqrFit, KqrSolver, SolveOptions};
     pub use crate::nckqr::{NcOptions, NckqrFit, NckqrSolver};

@@ -135,6 +135,30 @@ impl Matrix {
     pub fn fro_norm(&self) -> f64 {
         self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
     }
+
+    /// Stack matrices vertically (row-wise concatenation). All parts must
+    /// have the same column count; the result's row r holds the same bits
+    /// as the corresponding part row (pure memcpy of the row-major
+    /// storage), which is what lets the predict micro-batcher stack query
+    /// matrices without perturbing any downstream arithmetic.
+    pub fn vstack(parts: &[&Matrix]) -> Matrix {
+        assert!(!parts.is_empty(), "vstack of zero matrices");
+        let cols = parts[0].cols;
+        let rows: usize = parts
+            .iter()
+            .map(|m| {
+                assert_eq!(m.cols, cols, "vstack: mismatched column counts");
+                m.rows
+            })
+            .sum();
+        let mut out = Matrix::zeros(rows, cols);
+        let mut off = 0usize;
+        for m in parts {
+            out.data[off..off + m.data.len()].copy_from_slice(&m.data);
+            off += m.data.len();
+        }
+        out
+    }
 }
 
 impl Index<(usize, usize)> for Matrix {
@@ -199,6 +223,26 @@ mod tests {
         let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(m.row(1), &[3.0, 4.0]);
         assert_eq!(m.col(0), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn vstack_concatenates_rows_bitwise() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(1, 2, vec![5.0, 6.0]);
+        let s = Matrix::vstack(&[&a, &b]);
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s.cols(), 2);
+        assert_eq!(s.row(0), a.row(0));
+        assert_eq!(s.row(1), a.row(1));
+        assert_eq!(s.row(2), b.row(0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn vstack_rejects_mismatched_cols() {
+        let a = Matrix::zeros(1, 2);
+        let b = Matrix::zeros(1, 3);
+        let _ = Matrix::vstack(&[&a, &b]);
     }
 
     #[test]

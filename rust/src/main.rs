@@ -12,8 +12,11 @@
 //!   cv         k-fold cross-validated path (+ refit at the best λ)
 //!   nckqr      simultaneous non-crossing fit
 //!   predict    predict from a saved model artifact (--model <file>)
-//!   serve      start the TCP fit/predict server (--persist <dir>)
+//!   serve      start the TCP fit/predict server (--persist <dir>;
+//!              predict micro-batching via FASTKQR_BATCH_WINDOW_US)
 //!   client     send one JSON request line to a running server
+//!              (--concurrency N --repeat R opens N connections firing
+//!              the request R times each — a predict-batching storm)
 //!   table1..6  regenerate the paper's tables (quick scale; --paper full)
 //!   figure1    regenerate the crossing figure (writes CSV)
 //!   ablations  design-choice ablations
@@ -316,7 +319,11 @@ fn cmd_predict(args: &Args) -> Result<()> {
     let path = args
         .get("model")
         .ok_or_else(|| anyhow::anyhow!("predict: --model <artifact.json> is required"))?;
-    let model = QuantileModel::load(path)?;
+    // Compile the serving plan once at artifact load (resolved kernel +
+    // packed coefficient block); every predict below is then one
+    // cross-Gram + one multi-RHS GEMM.
+    let (model, plan) =
+        fastkqr::api::artifact::load_compiled(std::path::Path::new(path))?;
     let data = dataset_from_args(args)?;
     if data.p() != model.n_features() {
         bail!(
@@ -326,7 +333,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
         );
     }
     let timer = Timer::start("predict");
-    let preds = model.predict(&data.x);
+    let preds = plan.predict(&data.x);
     let total = timer.total();
     let taus = model.taus();
     println!(
@@ -334,6 +341,12 @@ fn cmd_predict(args: &Args) -> Result<()> {
         model.kind(),
         model.n_levels(),
         model.n_train()
+    );
+    println!(
+        "plan           {} group(s), {} coefficient rows x {} block rows",
+        plan.n_groups(),
+        plan.n_levels(),
+        plan.block_rows()
     );
     println!("eval points    {} ({})", data.n(), data.name);
     let head = args.try_usize("head", 10)?.min(data.n());
@@ -378,15 +391,76 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 }
 
+/// Send one JSON request line to a running server. `--concurrency N`
+/// (with optional `--repeat R`) opens N connections and fires the same
+/// request R times from each — the load generator behind the CI serve
+/// smoke and a quick way to exercise the predict micro-batcher.
 fn cmd_client(args: &Args) -> Result<()> {
+    use fastkqr::coordinator::server::Client;
     let addr = args.get_str("addr", "127.0.0.1:7787");
-    let req = args
+    let req_str = args
         .get("json")
         .map(String::from)
         .unwrap_or_else(|| r#"{"cmd":"ping"}"#.to_string());
-    let mut client = fastkqr::coordinator::server::Client::connect(addr)?;
-    let resp = client.request(&Json::parse(&req).map_err(|e| anyhow::anyhow!("{e}"))?)?;
-    println!("{}", resp.to_string());
+    let req = Json::parse(&req_str).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let concurrency = args.try_usize("concurrency", 1)?;
+    let repeat = args.try_usize("repeat", 1)?;
+    if concurrency == 0 || repeat == 0 {
+        bail!("--concurrency and --repeat must be >= 1");
+    }
+    if concurrency == 1 && repeat == 1 {
+        let mut client = Client::connect(addr)?;
+        // request_stream prints every line of a streamed predict too
+        for line in client.request_stream(&req)? {
+            println!("{}", line.to_string());
+        }
+        return Ok(());
+    }
+    let t0 = std::time::Instant::now();
+    let results: Vec<Result<()>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..concurrency)
+            .map(|_| {
+                let req = &req;
+                s.spawn(move || -> Result<()> {
+                    let mut client = Client::connect(addr)?;
+                    for _ in 0..repeat {
+                        // request_stream drains streamed replies fully, so
+                        // a "stream":true payload cannot desynchronize the
+                        // connection across iterations
+                        let lines = client.request_stream(req)?;
+                        let first = lines.first().expect("at least one response line");
+                        // only an explicit failure counts (the `metrics`
+                        // response carries no "ok" field)
+                        if first.get("ok").and_then(Json::as_bool) == Some(false) {
+                            bail!("request failed: {}", first.to_string());
+                        }
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow::anyhow!("client thread panicked")))
+            })
+            .collect()
+    });
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let failed = results.iter().filter(|r| r.is_err()).count();
+    let ok_conns = concurrency - failed;
+    println!(
+        "{ok_conns}/{concurrency} connections ok x {repeat} request(s) each in {wall:.3}s \
+         ({:.0} req/s)",
+        (ok_conns * repeat) as f64 / wall
+    );
+    for e in results.iter().filter_map(|r| r.as_ref().err()).take(3) {
+        eprintln!("  error: {e:#}");
+    }
+    if failed > 0 {
+        bail!("{failed} of {concurrency} client connections failed");
+    }
     Ok(())
 }
 

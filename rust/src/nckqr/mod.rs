@@ -181,6 +181,11 @@ impl NckqrFit {
         &self.x_train
     }
 
+    /// The `Arc`-shared training inputs (see `KqrFit::x_train_arc`).
+    pub(crate) fn x_train_arc(&self) -> &Arc<Matrix> {
+        &self.x_train
+    }
+
     /// Assemble a fit from stored parts (the artifact loader must emit the
     /// same self-contained value as the solver).
     #[allow(clippy::too_many_arguments)]

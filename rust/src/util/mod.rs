@@ -3,10 +3,12 @@
 
 pub mod bench;
 pub mod cli;
+pub mod hist;
 pub mod json;
 pub mod timer;
 
 pub use cli::Args;
+pub use hist::Histogram;
 pub use json::Json;
 pub use timer::Timer;
 

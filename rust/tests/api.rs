@@ -4,7 +4,7 @@
 
 use fastkqr::api::{FitSpec, KernelSpec, QuantileModel, Task};
 use fastkqr::coordinator::protocol::{handle_line, ProtocolState};
-use fastkqr::coordinator::{Metrics, ModelRegistry};
+use fastkqr::coordinator::{BatchConfig, Metrics, ModelRegistry};
 use fastkqr::data::{synth, Rng};
 use fastkqr::engine::{CacheMetrics, FitEngine};
 use fastkqr::kqr::SolveOptions;
@@ -103,12 +103,13 @@ fn one_spec_fits_identically_via_api_and_protocol() {
     let model_a = engine_a.run(&FitSpec::parse(&doc).unwrap()).unwrap();
 
     // (b) protocol on its own fresh engine
-    let st = ProtocolState {
-        registry: Arc::new(ModelRegistry::new()),
-        metrics: Arc::new(Metrics::new()),
-        opts: SolveOptions::default(),
-        engine: Arc::new(FitEngine::new()),
-    };
+    let st = ProtocolState::new(
+        Arc::new(ModelRegistry::new()),
+        Arc::new(Metrics::new()),
+        SolveOptions::default(),
+        Arc::new(FitEngine::new()),
+        BatchConfig { window_us: 0, max_rows: 4096 },
+    );
     let resp = handle_line(&st, &format!(r#"{{"cmd":"fit","spec":{doc}}}"#));
     assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{}", resp.to_string());
     let id = resp.get_str("model").unwrap();
@@ -187,12 +188,13 @@ fn cv_task_returns_per_tau_winners_with_summaries() {
 fn spec_fuzz_documents_fail_loudly() {
     // Integration-level fuzz: every malformed document must error (never
     // panic), both at parse time and through the protocol dispatcher.
-    let st = ProtocolState {
-        registry: Arc::new(ModelRegistry::new()),
-        metrics: Arc::new(Metrics::new()),
-        opts: SolveOptions::default(),
-        engine: Arc::new(FitEngine::new()),
-    };
+    let st = ProtocolState::new(
+        Arc::new(ModelRegistry::new()),
+        Arc::new(Metrics::new()),
+        SolveOptions::default(),
+        Arc::new(FitEngine::new()),
+        BatchConfig { window_us: 0, max_rows: 4096 },
+    );
     let bad_specs = [
         r#"{"x":[[1,2],[3]],"y":[1,2],"task":{"type":"single","tau":0.5,"lambda":0.1}}"#,
         r#"{"x":[],"y":[],"task":{"type":"single","tau":0.5,"lambda":0.1}}"#,
@@ -228,12 +230,13 @@ fn spec_fuzz_documents_fail_loudly() {
 #[test]
 fn save_load_through_protocol_matches_export() {
     let dir = temp_path("proto-registry");
-    let st = ProtocolState {
-        registry: Arc::new(ModelRegistry::with_persistence(&dir).unwrap()),
-        metrics: Arc::new(Metrics::new()),
-        opts: SolveOptions::default(),
-        engine: Arc::new(FitEngine::new()),
-    };
+    let st = ProtocolState::new(
+        Arc::new(ModelRegistry::with_persistence(&dir).unwrap()),
+        Arc::new(Metrics::new()),
+        SolveOptions::default(),
+        Arc::new(FitEngine::new()),
+        BatchConfig { window_us: 0, max_rows: 4096 },
+    );
     let spec = toy_spec(20, 8, Task::Single { tau: 0.5, lambda: 0.05 });
     let doc = spec.to_json().to_string();
     let fit = handle_line(&st, &format!(r#"{{"cmd":"fit","spec":{doc}}}"#));

@@ -1,0 +1,258 @@
+//! PredictEngine integration: batched-vs-unbatched bitwise parity (dense
+//! grid and Nyström models), backpressure behaviour, streamed predict
+//! responses, and plan compilation at registry insert/reload.
+
+use fastkqr::api::QuantileModel;
+use fastkqr::coordinator::batcher::{BatchConfig, PredictBatcher};
+use fastkqr::coordinator::{Metrics, ModelRegistry};
+use fastkqr::data::{synth, Rng};
+use fastkqr::engine::{ApproxSpec, FitEngine};
+use fastkqr::kernel::Kernel;
+use fastkqr::linalg::Matrix;
+use std::sync::Arc;
+
+fn dense_grid_model(n: usize, seed: u64) -> QuantileModel {
+    let mut rng = Rng::new(seed);
+    let data = synth::sine_hetero(n, &mut rng);
+    let grid = FitEngine::new()
+        .fit_grid(&data.x, &data.y, &Kernel::Rbf { sigma: 0.5 }, &[0.25, 0.75], &[0.1, 0.01])
+        .unwrap();
+    QuantileModel::from_grid(grid)
+}
+
+fn nystrom_model(n: usize, m: usize, seed: u64) -> QuantileModel {
+    let mut rng = Rng::new(seed);
+    let data = synth::sine_hetero(n, &mut rng);
+    let engine = FitEngine::new();
+    let solver = engine
+        .solver_approx(
+            &data.x,
+            &data.y,
+            &Kernel::Rbf { sigma: 0.5 },
+            ApproxSpec::Nystrom { m, seed: 11 },
+            Default::default(),
+        )
+        .unwrap();
+    let fit = solver.fit(0.5, 0.05).unwrap();
+    assert!(fit.lowrank.is_some(), "nystrom fit carries the landmark predictor");
+    QuantileModel::Kqr(fit)
+}
+
+/// N threads firing single-row predicts through the batcher must produce
+/// rows identical to sequential `model.predict`, whatever batches they
+/// landed in.
+fn assert_concurrent_parity(model: &QuantileModel, label: &str) {
+    let plan = Arc::new(model.compile_plan());
+    let batcher =
+        Arc::new(PredictBatcher::new(BatchConfig { window_us: 10_000, max_rows: 4096 }));
+    let metrics = Arc::new(Metrics::new());
+    let queries: Vec<Matrix> =
+        (0..12).map(|i| Matrix::from_fn(1, 1, |_, _| -0.5 + 0.09 * i as f64)).collect();
+    let results: Vec<Vec<Vec<f64>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = queries
+            .iter()
+            .map(|q| {
+                let batcher = batcher.clone();
+                let plan = plan.clone();
+                let metrics = metrics.clone();
+                let q = q.clone();
+                s.spawn(move || batcher.predict("m0", &plan, q, &metrics).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (q, got) in queries.iter().zip(&results) {
+        let want = model.predict(q);
+        assert_eq!(got, &want, "{label}: batched row must be bitwise equal");
+    }
+    let batches = Metrics::get(&metrics.predict_batches);
+    assert!(
+        (1..=12).contains(&batches),
+        "{label}: {batches} batches for 12 requests"
+    );
+    assert_eq!(
+        metrics.predict_batch_size.count(),
+        batches,
+        "{label}: every batch recorded once"
+    );
+}
+
+#[test]
+fn batched_predicts_match_sequential_dense_grid() {
+    assert_concurrent_parity(&dense_grid_model(50, 1), "dense 2x2 grid");
+}
+
+#[test]
+fn batched_predicts_match_sequential_nystrom() {
+    assert_concurrent_parity(&nystrom_model(60, 20, 2), "nystrom m=20");
+}
+
+#[test]
+fn multi_row_requests_batch_bitwise_too() {
+    // Mixed-size requests stacked into one GEMM still scatter exactly.
+    let model = dense_grid_model(40, 3);
+    let plan = model.compile_plan();
+    let mut rng = Rng::new(17);
+    let parts: Vec<Matrix> = (1..=5).map(|i| synth::sine_hetero(i, &mut rng).x).collect();
+    let batched = plan.predict_many(&parts);
+    for (part, got) in parts.iter().zip(&batched) {
+        assert_eq!(got, &model.predict(part));
+    }
+}
+
+#[test]
+fn backpressure_rejects_cleanly_instead_of_hanging() {
+    let model = dense_grid_model(30, 4);
+    let plan = Arc::new(model.compile_plan());
+    // 1 s window so every thread (released together by the barrier) lands
+    // inside one batch cycle; cap 3 rows.
+    let batcher =
+        Arc::new(PredictBatcher::new(BatchConfig { window_us: 1_000_000, max_rows: 3 }));
+    let metrics = Arc::new(Metrics::new());
+    let barrier = Arc::new(std::sync::Barrier::new(5));
+    let t0 = std::time::Instant::now();
+    let outcomes: Vec<anyhow::Result<Vec<Vec<f64>>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..5)
+            .map(|i| {
+                let batcher = batcher.clone();
+                let plan = plan.clone();
+                let metrics = metrics.clone();
+                let barrier = barrier.clone();
+                s.spawn(move || {
+                    let x = Matrix::from_fn(1, 1, |_, _| 0.1 * i as f64);
+                    barrier.wait();
+                    batcher.predict("m0", &plan, x, &metrics)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert!(t0.elapsed().as_secs() < 30, "no hang");
+    let ok = outcomes.iter().filter(|r| r.is_ok()).count();
+    assert_eq!(ok, 3, "cap of 3 rows admits exactly 3 single-row requests");
+    for err in outcomes.iter().filter_map(|r| r.as_ref().err()) {
+        assert!(err.to_string().contains("full"), "clean error, got: {err:#}");
+    }
+    assert_eq!(Metrics::get(&metrics.predict_rejects), 2);
+}
+
+#[test]
+fn server_batches_concurrent_tcp_predicts_and_streams() {
+    if std::net::TcpListener::bind("127.0.0.1:0").is_err() {
+        eprintln!("skipping: no loopback TCP available in this environment");
+        return;
+    }
+    use fastkqr::coordinator::server::Client;
+    use fastkqr::coordinator::{Server, ServerConfig};
+    use fastkqr::util::Json;
+    let server = Server::spawn(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        batch: BatchConfig { window_us: 5_000, max_rows: 4096 },
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let model = dense_grid_model(30, 9);
+    let id = server.registry.insert(model.clone());
+    let want: Vec<f64> =
+        model.predict(&Matrix::from_fn(1, 1, |_, _| 0.5)).iter().map(|r| r[0]).collect();
+    let addr = server.local_addr;
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let id = &id;
+            let want = &want;
+            s.spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let req = Json::parse(&format!(
+                    r#"{{"cmd":"predict","model":"{id}","x":[[0.5]]}}"#
+                ))
+                .unwrap();
+                let r = c.request(&req).unwrap();
+                assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r:?}");
+                // shortest-roundtrip floats: the wire row is bitwise equal
+                let got: Vec<f64> = r
+                    .get("pred")
+                    .unwrap()
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|row| row.as_arr().unwrap()[0].as_f64().unwrap())
+                    .collect();
+                assert_eq!(&got, want);
+            });
+        }
+    });
+    // streamed predict over the same wire
+    let mut c = Client::connect(addr).unwrap();
+    let req = Json::parse(&format!(
+        r#"{{"cmd":"predict","model":"{id}","x":[[0.1],[0.5],[0.9]],"stream":true,"chunk_points":2}}"#
+    ))
+    .unwrap();
+    let lines = c.request_stream(&req).unwrap();
+    assert_eq!(lines.len(), 4, "header + 2 chunks + done: {lines:?}");
+    assert_eq!(lines[0].get("stream").and_then(Json::as_bool), Some(true));
+    assert_eq!(lines[3].get("done").and_then(Json::as_bool), Some(true));
+    // metrics over the wire: batching accounted, never more batches than
+    // requests
+    let m = c.request(&Json::parse(r#"{"cmd":"metrics"}"#).unwrap()).unwrap();
+    assert_eq!(m.get_f64("predict_requests"), Some(9.0));
+    let batches = m.get_f64("predict_batches").unwrap();
+    assert!(batches >= 1.0 && batches <= 9.0, "batches = {batches}");
+    server.shutdown();
+}
+
+#[test]
+fn registry_compiles_plans_at_insert_and_reload() {
+    let dir = std::env::temp_dir().join(format!(
+        "fastkqr-predict-engine-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    let model = dense_grid_model(25, 5);
+    let xt = {
+        let mut rng = Rng::new(23);
+        synth::sine_hetero(6, &mut rng).x
+    };
+    let want = model.predict(&xt);
+    let id = {
+        let reg = ModelRegistry::with_persistence(&dir).unwrap();
+        let id = reg.insert(model.clone());
+        assert_eq!(reg.plan(&id).unwrap().predict(&xt), want);
+        id
+    };
+    // a fresh registry on the same dir compiles the plan from the
+    // artifact and serves bitwise-identical rows
+    let reg2 = ModelRegistry::with_persistence(&dir).unwrap();
+    let plan = reg2.plan(&id).expect("plan recompiled on reload");
+    assert_eq!(plan.n_levels(), 4);
+    assert_eq!(plan.predict(&xt), want, "reloaded plan predicts bitwise");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn nystrom_plan_reloads_bitwise_through_registry() {
+    let dir = std::env::temp_dir().join(format!(
+        "fastkqr-predict-engine-ny-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    let model = nystrom_model(48, 16, 6);
+    let xt = {
+        let mut rng = Rng::new(29);
+        synth::sine_hetero(5, &mut rng).x
+    };
+    let want = model.predict(&xt);
+    let id = {
+        let reg = ModelRegistry::with_persistence(&dir).unwrap();
+        reg.insert(model)
+    };
+    let reg2 = ModelRegistry::with_persistence(&dir).unwrap();
+    let plan = reg2.plan(&id).expect("compressed artifact compiles a plan");
+    assert_eq!(plan.predict(&xt), want, "low-rank plan predicts bitwise after reload");
+    let _ = std::fs::remove_dir_all(&dir);
+}
