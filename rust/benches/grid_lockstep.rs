@@ -26,6 +26,14 @@ fn main() {
     println!("{}", gb.lockstep.report_line());
     println!("   {:.2}x speedup on the {taus}x{lams} grid at n={n}", gb.speedup);
     println!("{}  ({:.2} GFLOP/s packed gemm)", gb.gemm.report_line(), gb.gemm_gflops);
+    println!(
+        "   simd: isa={} fma={}  gemm {:.2} -> {:.2} GFLOP/s ({:.2}x scalar -> simd)",
+        gb.simd_isa,
+        gb.simd_fma,
+        gb.gemm_gflops_scalar,
+        gb.gemm_gflops,
+        gb.gemm_gflops / gb.gemm_gflops_scalar.max(1e-12)
+    );
     println!("   lockstep-vs-oracle parity: max |Δ(b,α)| = {:.3e}", gb.parity_max_abs);
     std::fs::write(&out, gb.to_json().to_string()).expect("write BENCH_grid.json");
     println!("wrote {out}");

@@ -4,7 +4,7 @@
 //! (native vs XLA), eigendecomposition, end-to-end fit latency. Feeds
 //! EXPERIMENTS.md §Perf.
 use fastkqr::experiments::perf;
-use fastkqr::linalg::par;
+use fastkqr::linalg::{par, simd};
 use fastkqr::util::Args;
 
 fn main() {
@@ -19,6 +19,24 @@ fn main() {
     for n in args.get_usize_list("gemm-ns", &[256, 512]) {
         let (stats, gflops) = perf::gemm_gflops(n, reps.min(5));
         println!("{}  ({gflops:.2} GFLOP/s)", stats.report_line());
+    }
+    let table = simd::global();
+    println!(
+        "-- SIMD dispatch: isa={} fma={} (FASTKQR_SIMD/FASTKQR_FMA to override) --",
+        table.isa.as_str(),
+        table.fma
+    );
+    for n in args.get_usize_list("simd-ns", &[256, 512, 1024]) {
+        let (scalar, dispatched, speedup) = perf::gemv_simd_speedup(n, reps.min(10));
+        println!("{}", scalar.report_line());
+        println!("{}", dispatched.report_line());
+        println!("   gemv n={n}: {speedup:.2}x scalar -> {}", table.isa.as_str());
+        let (_, gf_scalar) = perf::gemm_gflops_with(n, reps.min(5), simd::scalar());
+        let (_, gf_simd) = perf::gemm_gflops_with(n, reps.min(5), table);
+        println!(
+            "   gemm n={n}: {gf_scalar:.2} -> {gf_simd:.2} GFLOP/s ({:.2}x)",
+            gf_simd / gf_scalar.max(1e-12)
+        );
     }
     println!(
         "-- parallel substrate: serial vs {} threads (FASTKQR_THREADS to override) --",

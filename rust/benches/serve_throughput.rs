@@ -144,6 +144,8 @@ fn main() {
         ("batch_p95", Json::num(batch_p95 as f64)),
         ("batch_max", Json::num(batch_max as f64)),
         ("latency_us_p99", Json::num(lat_p99 as f64)),
+        ("simd_isa", Json::str(fastkqr::linalg::simd::global().isa.as_str())),
+        ("simd_fma", Json::Bool(fastkqr::linalg::simd::global().fma)),
     ]);
     std::fs::write(&out, doc.to_string()).expect("write BENCH_serve.json");
     println!("wrote {out}");

@@ -17,7 +17,7 @@
 //! | `export` | `model` | `{"ok":true,"model":…,"artifact":{…}}` (inline artifact document) |
 //! | `models` | — | `{"ok":true,"models":[…]}` |
 //! | `drop` | `model` | `{"ok":true}` (also removes the persisted artifact) |
-//! | `metrics` | — | counter object incl. `gram_cache_*`, `persist_errors` (failed registry write-throughs), and the serving-path fields `predict_batches` / `predict_rejects` / `predict_latency_us_p50|p95|p99|max` / `predict_batch_p50|p95|p99|max`; `warm_evictions` (like `jobs_*`) is populated by a scheduler — non-zero on the wire only when a co-located scheduler shares this server's `Metrics` (see `Scheduler::with_engine_and_metrics`) |
+//! | `metrics` | — | counter object incl. `gram_cache_*`, `persist_errors` (failed registry write-throughs), and the serving-path fields `predict_batches` / `predict_rejects` / `predict_latency_us_p50|p95|p99|max` / `predict_batch_p50|p95|p99|max`; `warm_evictions` (like `jobs_*`) is populated by a scheduler — non-zero on the wire only when a co-located scheduler shares this server's `Metrics` (see `Scheduler::with_engine_and_metrics`); also reports the resolved SIMD dispatch (`simd_isa`: `"avx2"`/`"neon"`/`"scalar"`, `simd_fma`: bool) |
 //!
 //! `predict` requests are **micro-batched**: concurrent requests for the
 //! same model inside the `FASTKQR_BATCH_WINDOW_US` window are coalesced
@@ -271,6 +271,11 @@ fn dispatch(state: &ProtocolState, req: &Json) -> Result<Reply> {
                     "persist_errors".into(),
                     Json::num(state.registry.persist_errors() as f64),
                 );
+                // Resolved SIMD dispatch, so metrics scraped from
+                // different hosts are comparable.
+                let simd = crate::linalg::simd::global();
+                map.insert("simd_isa".into(), Json::str(simd.isa.as_str()));
+                map.insert("simd_fma".into(), Json::Bool(simd.fma));
             }
             one(m)
         }

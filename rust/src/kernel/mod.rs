@@ -28,7 +28,10 @@ impl Kernel {
         debug_assert_eq!(a.len(), b.len());
         match self {
             Kernel::Rbf { sigma } => {
-                let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+                // Dispatched squared distance (linalg::simd): AVX2/NEON
+                // lanes mirroring the scalar 4-accumulator reduction, so
+                // Gram entries are ISA-invariant bitwise.
+                let d2 = (crate::linalg::simd::global().sqdist)(a, b);
                 (-d2 / (2.0 * sigma * sigma)).exp()
             }
             Kernel::Linear { c } => a.iter().zip(b).map(|(x, y)| x * y).sum::<f64>() + c,

@@ -14,6 +14,12 @@
 //!
 //! Cross-cutting the solvers sits the **fit engine** ([`engine`]):
 //!
+//! - [`linalg::simd`] — a runtime-resolved SIMD dispatch table
+//!   (`FASTKQR_SIMD`: AVX2 on x86_64, NEON on aarch64, scalar elsewhere
+//!   or on `off`) feeding every level-1 kernel. The SIMD lanes mirror
+//!   the scalar accumulator structure, so results are bitwise-identical
+//!   to the scalar oracle at every tier; the opt-in `FASTKQR_FMA=1`
+//!   fused tier trades that for ≤1e-12 tolerance parity.
 //! - [`linalg::par`] — a scoped-thread parallel substrate (row-blocked
 //!   GEMV/GEMVᵀ/GEMM, parallel Gram construction) that the `linalg::blas`
 //!   kernels dispatch into above a size cutoff, with a serial fallback

@@ -1,50 +1,39 @@
 //! Level-1/2/3 dense kernels (hand-rolled BLAS substrate).
 //!
 //! The fastkqr hot path is two GEMVs per APGD iteration against the
-//! eigenbasis U (see `spectral`). These kernels are written so LLVM can
-//! auto-vectorize them: contiguous row dot-products with 4-way unrolled
-//! accumulators, and a cache-blocked GEMM for the one-time products the
-//! baselines need.
+//! eigenbasis U (see `spectral`). The level-1 primitives (`dot`/`axpy`/
+//! `scal`) delegate to the runtime-resolved SIMD dispatch table
+//! (`linalg::simd`): AVX2/NEON microkernels where the CPU supports them,
+//! otherwise the scalar reference kernels with 4-way unrolled
+//! accumulators. Both tiers produce bitwise-identical results (the SIMD
+//! lanes mirror the scalar accumulator structure), so everything built
+//! on top — GEMV, GEMVᵀ, the cache-blocked GEMM — inherits exact parity
+//! with the pre-SIMD code path.
 
 use super::matrix::Matrix;
+use super::simd::{self, SimdDispatch};
 
-/// Dot product with 4 accumulators (helps LLVM vectorize and breaks the
-/// sequential FP dependency chain).
+/// Dot product with 4 accumulators reduced as `(s0+s1)+(s2+s3)`.
+/// Dispatched: one 4-lane vector on AVX2/NEON, 4 scalar accumulators
+/// otherwise — bitwise-identical either way.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for c in 0..chunks {
-        let i = 4 * c;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for i in 4 * chunks..n {
-        s += a[i] * b[i];
-    }
-    s
+    (simd::global().dot)(a, b)
 }
 
-/// y <- alpha*x + y
+/// y <- alpha*x + y (elementwise, dispatched; lane width cannot change
+/// rounding).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    (simd::global().axpy)(alpha, x, y)
 }
 
-/// x <- alpha*x
+/// x <- alpha*x (elementwise, dispatched).
 #[inline]
 pub fn scal(alpha: f64, x: &mut [f64]) {
-    for xi in x.iter_mut() {
-        *xi *= alpha;
-    }
+    (simd::global().scal)(alpha, x)
 }
 
 /// Sum of entries.
@@ -84,10 +73,16 @@ pub fn gemv(a: &Matrix, x: &[f64], out: &mut [f64]) {
 
 /// Serial GEMV kernel (the parallel path runs this per row block).
 pub fn gemv_serial(a: &Matrix, x: &[f64], out: &mut [f64]) {
+    gemv_serial_with(simd::global(), a, x, out)
+}
+
+/// Serial GEMV through an explicit dispatch table — benches and parity
+/// tests pass `simd::scalar()` here to pin the oracle path.
+pub fn gemv_serial_with(t: &SimdDispatch, a: &Matrix, x: &[f64], out: &mut [f64]) {
     debug_assert_eq!(a.cols(), x.len());
     debug_assert_eq!(a.rows(), out.len());
     for (i, o) in out.iter_mut().enumerate() {
-        *o = dot(a.row(i), x);
+        *o = (t.dot)(a.row(i), x);
     }
 }
 
@@ -109,12 +104,19 @@ pub fn gemv_t(a: &Matrix, x: &[f64], out: &mut [f64]) {
 
 /// Serial GEMVᵀ kernel.
 pub fn gemv_t_serial(a: &Matrix, x: &[f64], out: &mut [f64]) {
+    gemv_t_serial_with(simd::global(), a, x, out)
+}
+
+/// Serial GEMVᵀ through an explicit dispatch table. The `xi != 0.0`
+/// zero-skip stays out here (not in the kernel), so both tiers skip the
+/// same rows and parity is preserved.
+pub fn gemv_t_serial_with(t: &SimdDispatch, a: &Matrix, x: &[f64], out: &mut [f64]) {
     debug_assert_eq!(a.rows(), x.len());
     debug_assert_eq!(a.cols(), out.len());
     out.fill(0.0);
     for (i, &xi) in x.iter().enumerate() {
         if xi != 0.0 {
-            axpy(xi, a.row(i), out);
+            (t.axpy)(xi, a.row(i), out);
         }
     }
 }

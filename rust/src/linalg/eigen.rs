@@ -22,6 +22,10 @@
 //! serial accumulation order, so the parallel decomposition is bitwise
 //! equal to the serial one at any worker count (`tql2` and the
 //! eigenvector back-accumulation stay serial; they see identical inputs).
+//! Both phases' inner loops run the `linalg::simd` dispatched kernels
+//! (the matvec's contiguous prefix via `blas::dot`, the rank-2 rows via
+//! the elementwise `rank2` kernel), which are bitwise-equal to the
+//! scalar oracle — so the decomposition is also invariant to ISA tier.
 
 use super::matrix::Matrix;
 
@@ -229,7 +233,9 @@ fn householder_e(
 /// `A[j][k] -= v[j]·e[k] + e[j]·v[k]` on the lower triangle (`k ≤ j ≤ l`),
 /// with `v` in row `i = l+1` (untouched here) and `e` fully updated.
 /// Rows are independent, so they are distributed in area-balanced bands;
-/// per-element arithmetic is identical at any worker count.
+/// each row runs the dispatched elementwise `rank2` kernel
+/// (`linalg::simd`), whose per-element arithmetic is identical at any
+/// worker count and ISA tier.
 fn rank2_update(
     z: &mut Matrix,
     e: &[f64],
@@ -238,17 +244,14 @@ fn rank2_update(
     workers: usize,
     par_floor: usize,
 ) {
+    let t = super::simd::global();
     let ncols = z.cols();
     let (lower, upper) = z.as_mut_slice().split_at_mut(i * ncols);
     let zi = &upper[..ncols]; // row i: the Householder vector v
     let w = if l + 1 < par_floor.max(2) { 1 } else { workers.max(1).min(l + 1) };
     if w <= 1 {
         for (j, row) in lower.chunks_mut(ncols).enumerate() {
-            let f = zi[j];
-            let g = e[j];
-            for (k, a) in row[..=j].iter_mut().enumerate() {
-                *a -= f * e[k] + g * zi[k];
-            }
+            (t.rank2)(zi[j], &e[..=j], e[j], &zi[..=j], &mut row[..=j]);
         }
         return;
     }
@@ -263,11 +266,7 @@ fn rank2_update(
             s.spawn(move || {
                 for (r, row) in head.chunks_mut(ncols).enumerate() {
                     let j = j0 + r;
-                    let f = zi[j];
-                    let g = e[j];
-                    for (k, a) in row[..=j].iter_mut().enumerate() {
-                        *a -= f * e[k] + g * zi[k];
-                    }
+                    (t.rank2)(zi[j], &e[..=j], e[j], &zi[..=j], &mut row[..=j]);
                 }
             });
             row0 = hi;

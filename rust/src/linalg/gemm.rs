@@ -25,10 +25,15 @@
 //!
 //! The bitwise contracts are what let the lockstep solve path reproduce
 //! the sequential `fit_grid` oracle exactly (see `engine::lockstep`).
+//!
+//! All three entry points pull their inner kernels (dot / axpy / the 4×4
+//! register tile) from the `linalg::simd` dispatch table, which is
+//! bitwise-equal to the scalar oracle by construction — so the contracts
+//! above hold at every ISA tier.
 
-use super::blas::{axpy, dot};
 use super::matrix::Matrix;
 use super::par::block_size;
+use super::simd::{self, SimdDispatch};
 use std::sync::OnceLock;
 
 /// `C = A·Bᵀ` (A: p×k, B: q×k, C: p×q); `c[i][j] = dot(a.row(i), b.row(j))`.
@@ -46,13 +51,14 @@ pub fn gemm_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix, workers: usize) {
     if p == 0 || q == 0 {
         return;
     }
+    let t = simd::global();
     let w = workers.max(1).min(p);
     if w <= 1 {
         for i in 0..p {
             let arow = a.row(i);
             let crow = c.row_mut(i);
             for (j, cij) in crow.iter_mut().enumerate() {
-                *cij = dot(arow, b.row(j));
+                *cij = (t.dot)(arow, b.row(j));
             }
         }
         return;
@@ -65,7 +71,7 @@ pub fn gemm_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix, workers: usize) {
                 for (r, crow) in rows.chunks_mut(q).enumerate() {
                     let arow = a.row(r0 + r);
                     for (j, cij) in crow.iter_mut().enumerate() {
-                        *cij = dot(arow, b.row(j));
+                        *cij = (t.dot)(arow, b.row(j));
                     }
                 }
             });
@@ -92,6 +98,7 @@ pub fn gemm_nn_into(a: &Matrix, b: &Matrix, c: &mut Matrix, workers: usize) {
     if m == 0 || nn == 0 || kdim == 0 {
         return;
     }
+    let t = simd::global();
     let w = workers.max(1).min(nn);
     if w <= 1 {
         for k in 0..kdim {
@@ -99,7 +106,7 @@ pub fn gemm_nn_into(a: &Matrix, b: &Matrix, c: &mut Matrix, workers: usize) {
             for r in 0..m {
                 let ark = a[(r, k)];
                 if ark != 0.0 {
-                    axpy(ark, brow, c.row_mut(r));
+                    (t.axpy)(ark, brow, c.row_mut(r));
                 }
             }
         }
@@ -121,7 +128,7 @@ pub fn gemm_nn_into(a: &Matrix, b: &Matrix, c: &mut Matrix, workers: usize) {
                         for r in 0..m {
                             let ark = a[(r, k)];
                             if ark != 0.0 {
-                                axpy(ark, bslice, buf.row_mut(r));
+                                (t.axpy)(ark, bslice, buf.row_mut(r));
                             }
                         }
                     }
@@ -194,6 +201,19 @@ pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 
 /// [`gemm_into`] with explicit tiles and worker count.
 pub fn gemm_into_tiled(a: &Matrix, b: &Matrix, c: &mut Matrix, tiles: GemmTiles, workers: usize) {
+    gemm_into_tiled_with(a, b, c, tiles, workers, simd::global())
+}
+
+/// [`gemm_into_tiled`] through an explicit dispatch table — benches and
+/// parity tests pass `simd::scalar()` here to pin the oracle microkernel.
+pub fn gemm_into_tiled_with(
+    a: &Matrix,
+    b: &Matrix,
+    c: &mut Matrix,
+    tiles: GemmTiles,
+    workers: usize,
+    t: &SimdDispatch,
+) {
     assert_eq!(a.cols(), b.rows(), "gemm_into: inner dim mismatch");
     assert_eq!(c.rows(), a.rows(), "gemm_into: C rows mismatch");
     assert_eq!(c.cols(), b.cols(), "gemm_into: C cols mismatch");
@@ -204,7 +224,7 @@ pub fn gemm_into_tiled(a: &Matrix, b: &Matrix, c: &mut Matrix, tiles: GemmTiles,
     }
     let w = workers.max(1).min(m);
     if w <= 1 {
-        packed_band(a, b, c.as_mut_slice(), 0, m, nn, tiles);
+        packed_band(a, b, c.as_mut_slice(), 0, m, nn, tiles, t);
         return;
     }
     let block = block_size(m, w);
@@ -212,13 +232,14 @@ pub fn gemm_into_tiled(a: &Matrix, b: &Matrix, c: &mut Matrix, tiles: GemmTiles,
         for (bi, rows) in c.as_mut_slice().chunks_mut(block * nn).enumerate() {
             let r0 = bi * block;
             let rows_here = rows.len() / nn;
-            s.spawn(move || packed_band(a, b, rows, r0, rows_here, nn, tiles));
+            s.spawn(move || packed_band(a, b, rows, r0, rows_here, nn, tiles, t));
         }
     });
 }
 
 /// Packed tiled GEMM for one contiguous row band of C (`crows` holds
 /// `m_band` rows of width `nn`, starting at global row `r0`).
+#[allow(clippy::too_many_arguments)]
 fn packed_band(
     a: &Matrix,
     b: &Matrix,
@@ -227,6 +248,7 @@ fn packed_band(
     m_band: usize,
     nn: usize,
     tiles: GemmTiles,
+    t: &SimdDispatch,
 ) {
     let kdim = a.cols();
     let mut apack = vec![0.0f64; tiles.mc * tiles.kc];
@@ -257,6 +279,7 @@ fn packed_band(
                     ib,
                     jb,
                     nn,
+                    t,
                 );
             }
         }
@@ -264,6 +287,11 @@ fn packed_band(
 }
 
 /// 4×4 register-tile microkernel: `C[ib+i][jb+j] += Σ_k Apack[i][k]·Bpack[k][j]`.
+///
+/// Full tiles go through the dispatched `tile4x4` kernel (AVX2/NEON on
+/// capable hosts, the scalar register tile otherwise — bitwise equal).
+/// Edge tiles use the same 4-way unrolled `(s0+s1)+(s2+s3)` accumulation
+/// as `blas::dot` over the strided B column, shared by every ISA tier.
 #[allow(clippy::too_many_arguments)]
 fn micro_tile(
     apack: &[f64],
@@ -275,6 +303,7 @@ fn micro_tile(
     ib: usize,
     jb: usize,
     nn: usize,
+    t: &SimdDispatch,
 ) {
     const MR: usize = 4;
     const NR: usize = 4;
@@ -283,19 +312,8 @@ fn micro_tile(
         for j0 in (0..n_eff).step_by(NR) {
             let jrn = NR.min(n_eff - j0);
             if irn == MR && jrn == NR {
-                // Full tile: fixed-bound loops so LLVM keeps the 16
-                // accumulators in registers.
-                let mut acc = [[0.0f64; NR]; MR];
-                for kk in 0..k_eff {
-                    let bofs = kk * n_eff + j0;
-                    let bv = [bpack[bofs], bpack[bofs + 1], bpack[bofs + 2], bpack[bofs + 3]];
-                    for (ir, accr) in acc.iter_mut().enumerate() {
-                        let av = apack[(i0 + ir) * k_eff + kk];
-                        for (jr, av_acc) in accr.iter_mut().enumerate() {
-                            *av_acc += av * bv[jr];
-                        }
-                    }
-                }
+                // Full tile: dispatched 16-accumulator register kernel.
+                let acc = (t.tile4x4)(apack, bpack, i0, j0, k_eff, n_eff);
                 for (ir, accr) in acc.iter().enumerate() {
                     let base = (ib + i0 + ir) * nn + jb + j0;
                     for (jr, v) in accr.iter().enumerate() {
@@ -303,13 +321,25 @@ fn micro_tile(
                     }
                 }
             } else {
-                // Edge tile: plain scalar loops.
+                // Edge tile: 4-way unrolled strided accumulation, same
+                // reduction shape as blas::dot (kept scalar — the B
+                // column is strided, so vector loads don't apply).
                 for ir in 0..irn {
                     let arow = &apack[(i0 + ir) * k_eff..(i0 + ir + 1) * k_eff];
                     let base = (ib + i0 + ir) * nn + jb + j0;
                     for jr in 0..jrn {
-                        let mut s = 0.0;
-                        for kk in 0..k_eff {
+                        let chunks = k_eff / 4;
+                        let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+                        for c in 0..chunks {
+                            let kk = 4 * c;
+                            let bofs = kk * n_eff + j0 + jr;
+                            s0 += arow[kk] * bpack[bofs];
+                            s1 += arow[kk + 1] * bpack[bofs + n_eff];
+                            s2 += arow[kk + 2] * bpack[bofs + 2 * n_eff];
+                            s3 += arow[kk + 3] * bpack[bofs + 3 * n_eff];
+                        }
+                        let mut s = (s0 + s1) + (s2 + s3);
+                        for kk in 4 * chunks..k_eff {
                             s += arow[kk] * bpack[kk * n_eff + j0 + jr];
                         }
                         crows[base + jr] += s;

@@ -1,6 +1,10 @@
 //! Dense linear algebra substrate (no external BLAS/LAPACK available).
 //!
 //! - [`matrix::Matrix`]: row-major dense matrix
+//! - [`simd`]: runtime-resolved vector microkernel dispatch table
+//!   (`FASTKQR_SIMD` / `FASTKQR_FMA`) — AVX2 on x86_64, NEON on aarch64,
+//!   with the scalar reference kernels as the **bitwise oracle**; every
+//!   level-1 primitive below pulls its inner loop from here
 //! - [`blas`]: dot/axpy/GEMV/GEMM kernels (the O(n²) hot path), each
 //!   dispatching to the parallel substrate above a size cutoff
 //! - [`gemm`]: BLAS-3 layer — multi-RHS `gemm_nt_into`/`gemm_nn_into`
@@ -13,6 +17,10 @@
 //! - [`eigen::SymEigen`]: one-time K = UΛUᵀ decomposition, with the
 //!   O(n³) `tred2` phases row-banded onto the parallel substrate
 //! - [`chol::Cholesky`]: SPD solves for the interior-point baseline
+//!
+//! Parallel × SIMD compose cleanly: the row-band workers call the same
+//! dispatched serial kernels per band, so turning either axis on or off
+//! never changes a result bit (outside the opt-in FMA tier).
 
 pub mod blas;
 pub mod chol;
@@ -20,6 +28,7 @@ pub mod eigen;
 pub mod gemm;
 pub mod matrix;
 pub mod par;
+pub mod simd;
 
 pub use blas::{amax, axpy, dot, gemm, gemv, gemv_t, nrm2, quad_form, scal};
 pub use chol::{CholError, Cholesky};
@@ -27,3 +36,4 @@ pub use eigen::SymEigen;
 pub use gemm::{gemm_into, gemm_nn_into, gemm_nt_into, GemmTiles};
 pub use matrix::Matrix;
 pub use par::Parallelism;
+pub use simd::SimdDispatch;

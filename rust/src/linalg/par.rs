@@ -20,6 +20,10 @@
 //! - **Configurable without code.** `FASTKQR_THREADS` overrides the
 //!   worker count (default: available cores); `FASTKQR_PAR_MIN_DIM`
 //!   overrides the serial cutoff (default 512).
+//! - **Orthogonal to SIMD.** Each band runs the same dispatched serial
+//!   kernels (`linalg::simd`), which are bitwise-equal to the scalar
+//!   oracle — so the thread axis and the ISA axis compose without any
+//!   new parity surface.
 
 use super::matrix::Matrix;
 use std::cell::Cell;

@@ -1,0 +1,1146 @@
+//! Runtime-dispatched SIMD microkernels with the scalar path as the
+//! bitwise oracle.
+//!
+//! Every hot loop in the crate — the two GEMVs per APGD iteration, the
+//! lockstep bundle GEMMs, the packed `gemm::micro_tile`, `tred2`'s two
+//! O(n³) phases and the RBF Gram row — funnels through a handful of
+//! level-1 vector primitives. This module owns those primitives as a
+//! process-global **dispatch table** ([`global`], resolved once like
+//! `par::global()`):
+//!
+//! - **x86_64 + AVX2** (`is_x86_feature_detected!("avx2")`): 4-lane
+//!   `__m256d` kernels,
+//! - **aarch64**: 2×2-lane NEON kernels (NEON is part of the aarch64
+//!   baseline, so no runtime probe is needed),
+//! - **anywhere else, or `FASTKQR_SIMD=off`**: the scalar reference
+//!   kernels — byte-for-byte the arithmetic the crate used before this
+//!   module existed.
+//!
+//! **The design constraint that makes this safe in this codebase:** the
+//! SIMD lanes mirror the scalar accumulator structure exactly. `dot`'s
+//! four unrolled accumulators become one 4-lane vector (two 2-lane
+//! vectors on NEON) reduced in the same `(s0+s1)+(s2+s3)` order; the
+//! 4×4 register tile becomes four 4-lane row vectors with identical
+//! per-k accumulation; `axpy`/`scal`/`rank2` are elementwise, so lane
+//! width cannot change rounding at all. Each vector op performs the
+//! identical IEEE-754 multiply/add sequence per element, so results are
+//! **bitwise equal** to the scalar oracle — parallel row-bands call
+//! these same serial kernels per band, so parallel × SIMD composes with
+//! no new parity surface.
+//!
+//! The exception is the opt-in **FMA tier** (`FASTKQR_FMA=1`): fused
+//! multiply-add contracts `a*b + c` into one rounding, so it is
+//! *excluded* from the bitwise contract and covered by ≤1e-12 tolerance
+//! parity instead (like the lockstep driver's parallel GEMVᵀ).
+//!
+//! Env knobs (read once per process):
+//!
+//! - `FASTKQR_SIMD` — `auto` (default; pick the best ISA the CPU
+//!   supports) or `off`/`0`/`false`/`scalar` (pin the scalar oracle,
+//!   restoring the exact pre-SIMD code path).
+//! - `FASTKQR_FMA` — `1`/`true`/`on` enables the fused tier on ISAs
+//!   that support it; ignored when the scalar path is active.
+
+use std::sync::OnceLock;
+
+/// Instruction-set tier the dispatch table resolved to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// x86_64 AVX2 (4-lane f64).
+    Avx2,
+    /// aarch64 NEON (2-lane f64, paired to mirror the 4-accumulator
+    /// scalar structure).
+    Neon,
+    /// The scalar reference kernels (the bitwise oracle).
+    Scalar,
+}
+
+impl Isa {
+    /// Stable lowercase name, reported by `fastkqr version`, the server
+    /// `metrics` command and the bench JSONs.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+            Isa::Scalar => "scalar",
+        }
+    }
+}
+
+/// The resolved kernel table. All fields are plain `fn` pointers so the
+/// table is `Copy`, `Sync` and free of lifetimes; callers hoist
+/// [`global`] out of their loops and call through the fields.
+#[derive(Clone, Copy)]
+pub struct SimdDispatch {
+    /// Active ISA tier.
+    pub isa: Isa,
+    /// Whether the fused-multiply-add kernel variants are installed
+    /// (never true when `isa` is [`Isa::Scalar`]).
+    pub fma: bool,
+    /// `Σ a[i]·b[i]` with the 4-accumulator structure of `blas::dot`.
+    pub dot: fn(&[f64], &[f64]) -> f64,
+    /// `y[i] += alpha·x[i]` (elementwise).
+    pub axpy: fn(f64, &[f64], &mut [f64]),
+    /// `x[i] *= alpha` (elementwise).
+    pub scal: fn(f64, &mut [f64]),
+    /// `Σ (a[i]−b[i])²` with the same 4-accumulator reduction shape as
+    /// `dot` — the RBF Gram row primitive.
+    pub sqdist: fn(&[f64], &[f64]) -> f64,
+    /// `row[k] -= f·e[k] + g·v[k]` (elementwise) — the tred2 symmetric
+    /// rank-2 update row kernel.
+    pub rank2: fn(f64, &[f64], f64, &[f64], &mut [f64]),
+    /// Full 4×4 register tile for the packed GEMM:
+    /// `(apack, bpack, i0, j0, k_eff, n_eff) -> acc` with
+    /// `acc[ir][jr] = Σ_k apack[(i0+ir)·k_eff + k] · bpack[k·n_eff + j0 + jr]`,
+    /// accumulated in the identical per-k order as the scalar tile.
+    /// Caller contract: `(i0+4)·k_eff ≤ apack.len()` and
+    /// `(k_eff−1)·n_eff + j0 + 4 ≤ bpack.len()` (full tiles only).
+    pub tile4x4: fn(&[f64], &[f64], usize, usize, usize, usize) -> [[f64; 4]; 4],
+}
+
+/// The scalar oracle table — byte-for-byte the pre-SIMD arithmetic.
+static SCALAR: SimdDispatch = SimdDispatch {
+    isa: Isa::Scalar,
+    fma: false,
+    dot: dot_scalar,
+    axpy: axpy_scalar,
+    scal: scal_scalar,
+    sqdist: sqdist_scalar,
+    rank2: rank2_scalar,
+    tile4x4: tile4x4_scalar,
+};
+
+static GLOBAL: OnceLock<SimdDispatch> = OnceLock::new();
+
+/// The process-wide dispatch table (resolved from the environment on
+/// first use, then immutable — mirroring `par::global()`).
+pub fn global() -> &'static SimdDispatch {
+    GLOBAL.get_or_init(SimdDispatch::from_env)
+}
+
+/// The scalar oracle table, always available — benches and parity tests
+/// run the same workload through [`scalar`] and [`global`] to measure
+/// speedups and assert bitwise equality.
+pub fn scalar() -> &'static SimdDispatch {
+    &SCALAR
+}
+
+/// Convenience: the active ISA name (`"avx2" | "neon" | "scalar"`).
+pub fn isa_str() -> &'static str {
+    global().isa.as_str()
+}
+
+/// Convenience: is the fused-multiply-add tier active?
+pub fn fma_enabled() -> bool {
+    global().fma
+}
+
+impl SimdDispatch {
+    /// Resolve from `FASTKQR_SIMD` / `FASTKQR_FMA`. Unlike [`global`]
+    /// this re-reads the environment on every call (the env-override
+    /// tests drive it directly).
+    pub fn from_env() -> SimdDispatch {
+        let simd = std::env::var("FASTKQR_SIMD").ok();
+        let fma = std::env::var("FASTKQR_FMA").ok();
+        SimdDispatch::resolve(simd.as_deref(), fma.as_deref())
+    }
+
+    /// Pure resolution policy: `simd` pins the scalar oracle when it is
+    /// `off`/`0`/`false`/`scalar` (anything else, including unset, means
+    /// `auto`); `fma` opts into the fused tier when `1`/`true`/`on` and
+    /// the resolved ISA supports it.
+    pub fn resolve(simd: Option<&str>, fma: Option<&str>) -> SimdDispatch {
+        if matches!(simd.map(str::trim), Some("off" | "0" | "false" | "scalar")) {
+            return SCALAR;
+        }
+        let want_fma = matches!(fma.map(str::trim), Some("1" | "true" | "on"));
+        detect(want_fma)
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect(want_fma: bool) -> SimdDispatch {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        if want_fma && std::arch::is_x86_feature_detected!("fma") {
+            x86::TABLE_FMA
+        } else {
+            x86::TABLE
+        }
+    } else {
+        SCALAR
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect(want_fma: bool) -> SimdDispatch {
+    if want_fma {
+        neon::TABLE_FMA
+    } else {
+        neon::TABLE
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect(_want_fma: bool) -> SimdDispatch {
+    SCALAR
+}
+
+// ---------------------------------------------------------------------
+// Scalar oracle kernels. These define the reference arithmetic: the
+// SIMD tiers below must be bitwise-equal to them (FMA tier excepted).
+// ---------------------------------------------------------------------
+
+/// Dot product with 4 independent accumulators reduced as
+/// `(s0+s1)+(s2+s3)` — the exact structure of the original `blas::dot`.
+pub(crate) fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = 4 * c;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += alpha·x`, elementwise (one multiply, one add per element).
+pub(crate) fn axpy_scalar(alpha: f64, x: &[f64], y: &mut [f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `x *= alpha`, elementwise.
+pub(crate) fn scal_scalar(alpha: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Squared Euclidean distance with the same 4-accumulator reduction as
+/// [`dot_scalar`] (sub, mul, add per element).
+pub(crate) fn sqdist_scalar(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = 4 * c;
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// `row[k] -= f·e[k] + g·v[k]`, elementwise — exactly the inner loop of
+/// `eigen::rank2_update` (mul, mul, add, sub per element).
+pub(crate) fn rank2_scalar(f: f64, e: &[f64], g: f64, v: &[f64], row: &mut [f64]) {
+    for (k, r) in row.iter_mut().enumerate() {
+        *r -= f * e[k] + g * v[k];
+    }
+}
+
+/// Full 4×4 register tile with fixed-bound loops — exactly the full-tile
+/// branch of `gemm::micro_tile` before dispatch, returning the
+/// accumulator block instead of writing C directly.
+pub(crate) fn tile4x4_scalar(
+    apack: &[f64],
+    bpack: &[f64],
+    i0: usize,
+    j0: usize,
+    k_eff: usize,
+    n_eff: usize,
+) -> [[f64; 4]; 4] {
+    let mut acc = [[0.0f64; 4]; 4];
+    for kk in 0..k_eff {
+        let bofs = kk * n_eff + j0;
+        let bv = [bpack[bofs], bpack[bofs + 1], bpack[bofs + 2], bpack[bofs + 3]];
+        for (ir, accr) in acc.iter_mut().enumerate() {
+            let av = apack[(i0 + ir) * k_eff + kk];
+            for (jr, c) in accr.iter_mut().enumerate() {
+                *c += av * bv[jr];
+            }
+        }
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------
+// AVX2 tier (x86_64). Each `unsafe fn` below carries
+// `#[target_feature(enable = "avx2")]` (plus `fma` for the fused
+// variants); its safety contract is that the caller has verified AVX2
+// support. The safe wrappers discharge that contract because they are
+// only ever installed into a dispatch table by `detect()` *after*
+// `is_x86_feature_detected!("avx2")` returned true.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{Isa, SimdDispatch};
+    use core::arch::x86_64::*;
+
+    pub(super) static TABLE: SimdDispatch = SimdDispatch {
+        isa: Isa::Avx2,
+        fma: false,
+        dot,
+        axpy,
+        scal,
+        sqdist,
+        rank2,
+        tile4x4,
+    };
+
+    pub(super) static TABLE_FMA: SimdDispatch = SimdDispatch {
+        isa: Isa::Avx2,
+        fma: true,
+        dot: dot_fma,
+        axpy: axpy_fma,
+        scal,
+        sqdist: sqdist_fma,
+        rank2: rank2_fma,
+        tile4x4: tile4x4_fma,
+    };
+
+    fn dot(a: &[f64], b: &[f64]) -> f64 {
+        // SAFETY: this entry is only installed by `detect()` after
+        // `is_x86_feature_detected!("avx2")` confirmed AVX2 support.
+        unsafe { dot_avx2(a, b) }
+    }
+
+    fn dot_fma(a: &[f64], b: &[f64]) -> f64 {
+        // SAFETY: installed by `detect()` only after both "avx2" and
+        // "fma" were runtime-detected.
+        unsafe { dot_avx2_fma(a, b) }
+    }
+
+    fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        // SAFETY: installed only after AVX2 was runtime-detected.
+        unsafe { axpy_avx2(alpha, x, y) }
+    }
+
+    fn axpy_fma(alpha: f64, x: &[f64], y: &mut [f64]) {
+        // SAFETY: installed only after AVX2 + FMA were runtime-detected.
+        unsafe { axpy_avx2_fma(alpha, x, y) }
+    }
+
+    fn scal(alpha: f64, x: &mut [f64]) {
+        // SAFETY: installed only after AVX2 was runtime-detected.
+        unsafe { scal_avx2(alpha, x) }
+    }
+
+    fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+        // SAFETY: installed only after AVX2 was runtime-detected.
+        unsafe { sqdist_avx2(a, b) }
+    }
+
+    fn sqdist_fma(a: &[f64], b: &[f64]) -> f64 {
+        // SAFETY: installed only after AVX2 + FMA were runtime-detected.
+        unsafe { sqdist_avx2_fma(a, b) }
+    }
+
+    fn rank2(f: f64, e: &[f64], g: f64, v: &[f64], row: &mut [f64]) {
+        // SAFETY: installed only after AVX2 was runtime-detected.
+        unsafe { rank2_avx2(f, e, g, v, row) }
+    }
+
+    fn rank2_fma(f: f64, e: &[f64], g: f64, v: &[f64], row: &mut [f64]) {
+        // SAFETY: installed only after AVX2 + FMA were runtime-detected.
+        unsafe { rank2_avx2_fma(f, e, g, v, row) }
+    }
+
+    fn tile4x4(
+        apack: &[f64],
+        bpack: &[f64],
+        i0: usize,
+        j0: usize,
+        k_eff: usize,
+        n_eff: usize,
+    ) -> [[f64; 4]; 4] {
+        debug_assert!((i0 + 4) * k_eff <= apack.len());
+        debug_assert!(k_eff == 0 || (k_eff - 1) * n_eff + j0 + 4 <= bpack.len());
+        // SAFETY: installed only after AVX2 was runtime-detected; the
+        // in-bounds contract is `SimdDispatch::tile4x4`'s caller
+        // contract, debug-asserted above.
+        unsafe { tile4x4_avx2(apack, bpack, i0, j0, k_eff, n_eff) }
+    }
+
+    fn tile4x4_fma(
+        apack: &[f64],
+        bpack: &[f64],
+        i0: usize,
+        j0: usize,
+        k_eff: usize,
+        n_eff: usize,
+    ) -> [[f64; 4]; 4] {
+        debug_assert!((i0 + 4) * k_eff <= apack.len());
+        debug_assert!(k_eff == 0 || (k_eff - 1) * n_eff + j0 + 4 <= bpack.len());
+        // SAFETY: installed only after AVX2 + FMA were runtime-detected;
+        // bounds are the tile4x4 caller contract, debug-asserted above.
+        unsafe { tile4x4_avx2_fma(apack, bpack, i0, j0, k_eff, n_eff) }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the wrapper's install path).
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let i = 4 * c;
+            let va = _mm256_loadu_pd(a.as_ptr().add(i));
+            let vb = _mm256_loadu_pd(b.as_ptr().add(i));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(va, vb));
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+        for i in 4 * chunks..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires AVX2 + FMA (guaranteed by the wrapper's install path).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot_avx2_fma(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let i = 4 * c;
+            let va = _mm256_loadu_pd(a.as_ptr().add(i));
+            let vb = _mm256_loadu_pd(b.as_ptr().add(i));
+            acc = _mm256_fmadd_pd(va, vb, acc);
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+        for i in 4 * chunks..n {
+            s = a[i].mul_add(b[i], s);
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the wrapper's install path).
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_avx2(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = y.len();
+        let chunks = n / 4;
+        let va = _mm256_set1_pd(alpha);
+        for c in 0..chunks {
+            let i = 4 * c;
+            let vx = _mm256_loadu_pd(x.as_ptr().add(i));
+            let vy = _mm256_loadu_pd(y.as_ptr().add(i));
+            _mm256_storeu_pd(y.as_mut_ptr().add(i), _mm256_add_pd(vy, _mm256_mul_pd(va, vx)));
+        }
+        for i in 4 * chunks..n {
+            y[i] += alpha * x[i];
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 + FMA (guaranteed by the wrapper's install path).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy_avx2_fma(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = y.len();
+        let chunks = n / 4;
+        let va = _mm256_set1_pd(alpha);
+        for c in 0..chunks {
+            let i = 4 * c;
+            let vx = _mm256_loadu_pd(x.as_ptr().add(i));
+            let vy = _mm256_loadu_pd(y.as_ptr().add(i));
+            _mm256_storeu_pd(y.as_mut_ptr().add(i), _mm256_fmadd_pd(va, vx, vy));
+        }
+        for i in 4 * chunks..n {
+            y[i] = alpha.mul_add(x[i], y[i]);
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the wrapper's install path).
+    #[target_feature(enable = "avx2")]
+    unsafe fn scal_avx2(alpha: f64, x: &mut [f64]) {
+        let n = x.len();
+        let chunks = n / 4;
+        let va = _mm256_set1_pd(alpha);
+        for c in 0..chunks {
+            let i = 4 * c;
+            let vx = _mm256_loadu_pd(x.as_ptr().add(i));
+            _mm256_storeu_pd(x.as_mut_ptr().add(i), _mm256_mul_pd(vx, va));
+        }
+        for xi in x[4 * chunks..].iter_mut() {
+            *xi *= alpha;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the wrapper's install path).
+    #[target_feature(enable = "avx2")]
+    unsafe fn sqdist_avx2(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let i = 4 * c;
+            let va = _mm256_loadu_pd(a.as_ptr().add(i));
+            let vb = _mm256_loadu_pd(b.as_ptr().add(i));
+            let d = _mm256_sub_pd(va, vb);
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(d, d));
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+        for i in 4 * chunks..n {
+            let d = a[i] - b[i];
+            s += d * d;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires AVX2 + FMA (guaranteed by the wrapper's install path).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn sqdist_avx2_fma(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let i = 4 * c;
+            let va = _mm256_loadu_pd(a.as_ptr().add(i));
+            let vb = _mm256_loadu_pd(b.as_ptr().add(i));
+            let d = _mm256_sub_pd(va, vb);
+            acc = _mm256_fmadd_pd(d, d, acc);
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+        for i in 4 * chunks..n {
+            let d = a[i] - b[i];
+            s = d.mul_add(d, s);
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the wrapper's install path).
+    #[target_feature(enable = "avx2")]
+    unsafe fn rank2_avx2(f: f64, e: &[f64], g: f64, v: &[f64], row: &mut [f64]) {
+        let n = row.len();
+        let chunks = n / 4;
+        let vf = _mm256_set1_pd(f);
+        let vg = _mm256_set1_pd(g);
+        for c in 0..chunks {
+            let i = 4 * c;
+            let ve = _mm256_loadu_pd(e.as_ptr().add(i));
+            let vv = _mm256_loadu_pd(v.as_ptr().add(i));
+            let vr = _mm256_loadu_pd(row.as_ptr().add(i));
+            let t = _mm256_add_pd(_mm256_mul_pd(vf, ve), _mm256_mul_pd(vg, vv));
+            _mm256_storeu_pd(row.as_mut_ptr().add(i), _mm256_sub_pd(vr, t));
+        }
+        for i in 4 * chunks..n {
+            row[i] -= f * e[i] + g * v[i];
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 + FMA (guaranteed by the wrapper's install path).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn rank2_avx2_fma(f: f64, e: &[f64], g: f64, v: &[f64], row: &mut [f64]) {
+        let n = row.len();
+        let chunks = n / 4;
+        let vf = _mm256_set1_pd(f);
+        let vg = _mm256_set1_pd(g);
+        for c in 0..chunks {
+            let i = 4 * c;
+            let ve = _mm256_loadu_pd(e.as_ptr().add(i));
+            let vv = _mm256_loadu_pd(v.as_ptr().add(i));
+            let vr = _mm256_loadu_pd(row.as_ptr().add(i));
+            let t = _mm256_fmadd_pd(vf, ve, _mm256_mul_pd(vg, vv));
+            _mm256_storeu_pd(row.as_mut_ptr().add(i), _mm256_sub_pd(vr, t));
+        }
+        for i in 4 * chunks..n {
+            row[i] -= f.mul_add(e[i], g * v[i]);
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2, and the tile4x4 caller contract:
+    /// `(i0+4)·k_eff ≤ apack.len()`, `(k_eff−1)·n_eff + j0 + 4 ≤ bpack.len()`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn tile4x4_avx2(
+        apack: &[f64],
+        bpack: &[f64],
+        i0: usize,
+        j0: usize,
+        k_eff: usize,
+        n_eff: usize,
+    ) -> [[f64; 4]; 4] {
+        let mut acc = [_mm256_setzero_pd(); 4];
+        for kk in 0..k_eff {
+            let bv = _mm256_loadu_pd(bpack.as_ptr().add(kk * n_eff + j0));
+            for (ir, accr) in acc.iter_mut().enumerate() {
+                let av = _mm256_set1_pd(*apack.get_unchecked((i0 + ir) * k_eff + kk));
+                *accr = _mm256_add_pd(*accr, _mm256_mul_pd(av, bv));
+            }
+        }
+        let mut out = [[0.0f64; 4]; 4];
+        for (orow, accr) in out.iter_mut().zip(&acc) {
+            _mm256_storeu_pd(orow.as_mut_ptr(), *accr);
+        }
+        out
+    }
+
+    /// # Safety
+    /// Requires AVX2 + FMA, and the tile4x4 caller contract (see
+    /// [`tile4x4_avx2`]).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn tile4x4_avx2_fma(
+        apack: &[f64],
+        bpack: &[f64],
+        i0: usize,
+        j0: usize,
+        k_eff: usize,
+        n_eff: usize,
+    ) -> [[f64; 4]; 4] {
+        let mut acc = [_mm256_setzero_pd(); 4];
+        for kk in 0..k_eff {
+            let bv = _mm256_loadu_pd(bpack.as_ptr().add(kk * n_eff + j0));
+            for (ir, accr) in acc.iter_mut().enumerate() {
+                let av = _mm256_set1_pd(*apack.get_unchecked((i0 + ir) * k_eff + kk));
+                *accr = _mm256_fmadd_pd(av, bv, *accr);
+            }
+        }
+        let mut out = [[0.0f64; 4]; 4];
+        for (orow, accr) in out.iter_mut().zip(&acc) {
+            _mm256_storeu_pd(orow.as_mut_ptr(), *accr);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON tier (aarch64). NEON is part of the aarch64 baseline, so the
+// wrappers' safety argument is the target architecture itself; the
+// 2-lane vectors are paired (acc01/acc23) so the reduction tree is
+// identical to the scalar 4-accumulator shape.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{Isa, SimdDispatch};
+    use core::arch::aarch64::*;
+
+    pub(super) static TABLE: SimdDispatch = SimdDispatch {
+        isa: Isa::Neon,
+        fma: false,
+        dot,
+        axpy,
+        scal,
+        sqdist,
+        rank2,
+        tile4x4,
+    };
+
+    pub(super) static TABLE_FMA: SimdDispatch = SimdDispatch {
+        isa: Isa::Neon,
+        fma: true,
+        dot: dot_fma,
+        axpy: axpy_fma,
+        scal,
+        sqdist: sqdist_fma,
+        rank2: rank2_fma,
+        tile4x4: tile4x4_fma,
+    };
+
+    fn dot(a: &[f64], b: &[f64]) -> f64 {
+        // SAFETY: NEON is mandatory in the aarch64 baseline this module
+        // is compiled for.
+        unsafe { dot_neon(a, b) }
+    }
+
+    fn dot_fma(a: &[f64], b: &[f64]) -> f64 {
+        // SAFETY: NEON (incl. vfmaq) is mandatory on aarch64.
+        unsafe { dot_neon_fma(a, b) }
+    }
+
+    fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        // SAFETY: NEON is mandatory on aarch64.
+        unsafe { axpy_neon(alpha, x, y) }
+    }
+
+    fn axpy_fma(alpha: f64, x: &[f64], y: &mut [f64]) {
+        // SAFETY: NEON is mandatory on aarch64.
+        unsafe { axpy_neon_fma(alpha, x, y) }
+    }
+
+    fn scal(alpha: f64, x: &mut [f64]) {
+        // SAFETY: NEON is mandatory on aarch64.
+        unsafe { scal_neon(alpha, x) }
+    }
+
+    fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+        // SAFETY: NEON is mandatory on aarch64.
+        unsafe { sqdist_neon(a, b) }
+    }
+
+    fn sqdist_fma(a: &[f64], b: &[f64]) -> f64 {
+        // SAFETY: NEON is mandatory on aarch64.
+        unsafe { sqdist_neon_fma(a, b) }
+    }
+
+    fn rank2(f: f64, e: &[f64], g: f64, v: &[f64], row: &mut [f64]) {
+        // SAFETY: NEON is mandatory on aarch64.
+        unsafe { rank2_neon(f, e, g, v, row) }
+    }
+
+    fn rank2_fma(f: f64, e: &[f64], g: f64, v: &[f64], row: &mut [f64]) {
+        // SAFETY: NEON is mandatory on aarch64.
+        unsafe { rank2_neon_fma(f, e, g, v, row) }
+    }
+
+    fn tile4x4(
+        apack: &[f64],
+        bpack: &[f64],
+        i0: usize,
+        j0: usize,
+        k_eff: usize,
+        n_eff: usize,
+    ) -> [[f64; 4]; 4] {
+        debug_assert!((i0 + 4) * k_eff <= apack.len());
+        debug_assert!(k_eff == 0 || (k_eff - 1) * n_eff + j0 + 4 <= bpack.len());
+        // SAFETY: NEON is mandatory on aarch64; bounds are the tile4x4
+        // caller contract, debug-asserted above.
+        unsafe { tile4x4_neon(apack, bpack, i0, j0, k_eff, n_eff) }
+    }
+
+    fn tile4x4_fma(
+        apack: &[f64],
+        bpack: &[f64],
+        i0: usize,
+        j0: usize,
+        k_eff: usize,
+        n_eff: usize,
+    ) -> [[f64; 4]; 4] {
+        debug_assert!((i0 + 4) * k_eff <= apack.len());
+        debug_assert!(k_eff == 0 || (k_eff - 1) * n_eff + j0 + 4 <= bpack.len());
+        // SAFETY: NEON is mandatory on aarch64; bounds are the tile4x4
+        // caller contract, debug-asserted above.
+        unsafe { tile4x4_neon_fma(apack, bpack, i0, j0, k_eff, n_eff) }
+    }
+
+    /// # Safety
+    /// Requires NEON (the aarch64 baseline).
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_neon(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        for c in 0..chunks {
+            let i = 4 * c;
+            let va01 = vld1q_f64(a.as_ptr().add(i));
+            let vb01 = vld1q_f64(b.as_ptr().add(i));
+            let va23 = vld1q_f64(a.as_ptr().add(i + 2));
+            let vb23 = vld1q_f64(b.as_ptr().add(i + 2));
+            acc01 = vaddq_f64(acc01, vmulq_f64(va01, vb01));
+            acc23 = vaddq_f64(acc23, vmulq_f64(va23, vb23));
+        }
+        let (s0, s1) = (vgetq_lane_f64::<0>(acc01), vgetq_lane_f64::<1>(acc01));
+        let (s2, s3) = (vgetq_lane_f64::<0>(acc23), vgetq_lane_f64::<1>(acc23));
+        let mut s = (s0 + s1) + (s2 + s3);
+        for i in 4 * chunks..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires NEON (the aarch64 baseline).
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_neon_fma(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        for c in 0..chunks {
+            let i = 4 * c;
+            let va01 = vld1q_f64(a.as_ptr().add(i));
+            let vb01 = vld1q_f64(b.as_ptr().add(i));
+            let va23 = vld1q_f64(a.as_ptr().add(i + 2));
+            let vb23 = vld1q_f64(b.as_ptr().add(i + 2));
+            acc01 = vfmaq_f64(acc01, va01, vb01);
+            acc23 = vfmaq_f64(acc23, va23, vb23);
+        }
+        let (s0, s1) = (vgetq_lane_f64::<0>(acc01), vgetq_lane_f64::<1>(acc01));
+        let (s2, s3) = (vgetq_lane_f64::<0>(acc23), vgetq_lane_f64::<1>(acc23));
+        let mut s = (s0 + s1) + (s2 + s3);
+        for i in 4 * chunks..n {
+            s = a[i].mul_add(b[i], s);
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires NEON (the aarch64 baseline).
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy_neon(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = y.len();
+        let chunks = n / 2;
+        let va = vdupq_n_f64(alpha);
+        for c in 0..chunks {
+            let i = 2 * c;
+            let vx = vld1q_f64(x.as_ptr().add(i));
+            let vy = vld1q_f64(y.as_ptr().add(i));
+            vst1q_f64(y.as_mut_ptr().add(i), vaddq_f64(vy, vmulq_f64(va, vx)));
+        }
+        for i in 2 * chunks..n {
+            y[i] += alpha * x[i];
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON (the aarch64 baseline).
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy_neon_fma(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = y.len();
+        let chunks = n / 2;
+        let va = vdupq_n_f64(alpha);
+        for c in 0..chunks {
+            let i = 2 * c;
+            let vx = vld1q_f64(x.as_ptr().add(i));
+            let vy = vld1q_f64(y.as_ptr().add(i));
+            vst1q_f64(y.as_mut_ptr().add(i), vfmaq_f64(vy, va, vx));
+        }
+        for i in 2 * chunks..n {
+            y[i] = alpha.mul_add(x[i], y[i]);
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON (the aarch64 baseline).
+    #[target_feature(enable = "neon")]
+    unsafe fn scal_neon(alpha: f64, x: &mut [f64]) {
+        let n = x.len();
+        let chunks = n / 2;
+        let va = vdupq_n_f64(alpha);
+        for c in 0..chunks {
+            let i = 2 * c;
+            let vx = vld1q_f64(x.as_ptr().add(i));
+            vst1q_f64(x.as_mut_ptr().add(i), vmulq_f64(vx, va));
+        }
+        for xi in x[2 * chunks..].iter_mut() {
+            *xi *= alpha;
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON (the aarch64 baseline).
+    #[target_feature(enable = "neon")]
+    unsafe fn sqdist_neon(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        for c in 0..chunks {
+            let i = 4 * c;
+            let d01 = vsubq_f64(vld1q_f64(a.as_ptr().add(i)), vld1q_f64(b.as_ptr().add(i)));
+            let d23 =
+                vsubq_f64(vld1q_f64(a.as_ptr().add(i + 2)), vld1q_f64(b.as_ptr().add(i + 2)));
+            acc01 = vaddq_f64(acc01, vmulq_f64(d01, d01));
+            acc23 = vaddq_f64(acc23, vmulq_f64(d23, d23));
+        }
+        let (s0, s1) = (vgetq_lane_f64::<0>(acc01), vgetq_lane_f64::<1>(acc01));
+        let (s2, s3) = (vgetq_lane_f64::<0>(acc23), vgetq_lane_f64::<1>(acc23));
+        let mut s = (s0 + s1) + (s2 + s3);
+        for i in 4 * chunks..n {
+            let d = a[i] - b[i];
+            s += d * d;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires NEON (the aarch64 baseline).
+    #[target_feature(enable = "neon")]
+    unsafe fn sqdist_neon_fma(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        for c in 0..chunks {
+            let i = 4 * c;
+            let d01 = vsubq_f64(vld1q_f64(a.as_ptr().add(i)), vld1q_f64(b.as_ptr().add(i)));
+            let d23 =
+                vsubq_f64(vld1q_f64(a.as_ptr().add(i + 2)), vld1q_f64(b.as_ptr().add(i + 2)));
+            acc01 = vfmaq_f64(acc01, d01, d01);
+            acc23 = vfmaq_f64(acc23, d23, d23);
+        }
+        let (s0, s1) = (vgetq_lane_f64::<0>(acc01), vgetq_lane_f64::<1>(acc01));
+        let (s2, s3) = (vgetq_lane_f64::<0>(acc23), vgetq_lane_f64::<1>(acc23));
+        let mut s = (s0 + s1) + (s2 + s3);
+        for i in 4 * chunks..n {
+            let d = a[i] - b[i];
+            s = d.mul_add(d, s);
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires NEON (the aarch64 baseline).
+    #[target_feature(enable = "neon")]
+    unsafe fn rank2_neon(f: f64, e: &[f64], g: f64, v: &[f64], row: &mut [f64]) {
+        let n = row.len();
+        let chunks = n / 2;
+        let vf = vdupq_n_f64(f);
+        let vg = vdupq_n_f64(g);
+        for c in 0..chunks {
+            let i = 2 * c;
+            let ve = vld1q_f64(e.as_ptr().add(i));
+            let vv = vld1q_f64(v.as_ptr().add(i));
+            let vr = vld1q_f64(row.as_ptr().add(i));
+            let t = vaddq_f64(vmulq_f64(vf, ve), vmulq_f64(vg, vv));
+            vst1q_f64(row.as_mut_ptr().add(i), vsubq_f64(vr, t));
+        }
+        for i in 2 * chunks..n {
+            row[i] -= f * e[i] + g * v[i];
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON (the aarch64 baseline).
+    #[target_feature(enable = "neon")]
+    unsafe fn rank2_neon_fma(f: f64, e: &[f64], g: f64, v: &[f64], row: &mut [f64]) {
+        let n = row.len();
+        let chunks = n / 2;
+        let vf = vdupq_n_f64(f);
+        let vg = vdupq_n_f64(g);
+        for c in 0..chunks {
+            let i = 2 * c;
+            let ve = vld1q_f64(e.as_ptr().add(i));
+            let vv = vld1q_f64(v.as_ptr().add(i));
+            let vr = vld1q_f64(row.as_ptr().add(i));
+            let t = vfmaq_f64(vmulq_f64(vg, vv), vf, ve);
+            vst1q_f64(row.as_mut_ptr().add(i), vsubq_f64(vr, t));
+        }
+        for i in 2 * chunks..n {
+            row[i] -= f.mul_add(e[i], g * v[i]);
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON, and the tile4x4 caller contract:
+    /// `(i0+4)·k_eff ≤ apack.len()`, `(k_eff−1)·n_eff + j0 + 4 ≤ bpack.len()`.
+    #[target_feature(enable = "neon")]
+    unsafe fn tile4x4_neon(
+        apack: &[f64],
+        bpack: &[f64],
+        i0: usize,
+        j0: usize,
+        k_eff: usize,
+        n_eff: usize,
+    ) -> [[f64; 4]; 4] {
+        let mut lo = [vdupq_n_f64(0.0); 4];
+        let mut hi = [vdupq_n_f64(0.0); 4];
+        for kk in 0..k_eff {
+            let bofs = kk * n_eff + j0;
+            let bv_lo = vld1q_f64(bpack.as_ptr().add(bofs));
+            let bv_hi = vld1q_f64(bpack.as_ptr().add(bofs + 2));
+            for ir in 0..4 {
+                let av = vdupq_n_f64(*apack.get_unchecked((i0 + ir) * k_eff + kk));
+                lo[ir] = vaddq_f64(lo[ir], vmulq_f64(av, bv_lo));
+                hi[ir] = vaddq_f64(hi[ir], vmulq_f64(av, bv_hi));
+            }
+        }
+        let mut out = [[0.0f64; 4]; 4];
+        for (ir, orow) in out.iter_mut().enumerate() {
+            vst1q_f64(orow.as_mut_ptr(), lo[ir]);
+            vst1q_f64(orow.as_mut_ptr().add(2), hi[ir]);
+        }
+        out
+    }
+
+    /// # Safety
+    /// Requires NEON, and the tile4x4 caller contract (see
+    /// [`tile4x4_neon`]).
+    #[target_feature(enable = "neon")]
+    unsafe fn tile4x4_neon_fma(
+        apack: &[f64],
+        bpack: &[f64],
+        i0: usize,
+        j0: usize,
+        k_eff: usize,
+        n_eff: usize,
+    ) -> [[f64; 4]; 4] {
+        let mut lo = [vdupq_n_f64(0.0); 4];
+        let mut hi = [vdupq_n_f64(0.0); 4];
+        for kk in 0..k_eff {
+            let bofs = kk * n_eff + j0;
+            let bv_lo = vld1q_f64(bpack.as_ptr().add(bofs));
+            let bv_hi = vld1q_f64(bpack.as_ptr().add(bofs + 2));
+            for ir in 0..4 {
+                let av = vdupq_n_f64(*apack.get_unchecked((i0 + ir) * k_eff + kk));
+                lo[ir] = vfmaq_f64(lo[ir], av, bv_lo);
+                hi[ir] = vfmaq_f64(hi[ir], av, bv_hi);
+            }
+        }
+        let mut out = [[0.0f64; 4]; 4];
+        for (ir, orow) in out.iter_mut().enumerate() {
+            vst1q_f64(orow.as_mut_ptr(), lo[ir]);
+            vst1q_f64(orow.as_mut_ptr().add(2), hi[ir]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        (a, b)
+    }
+
+    /// Bitwise when the table is exact; ≤1e-12 relative when FMA is on.
+    fn assert_feq(t: &SimdDispatch, got: f64, want: f64, ctx: &str) {
+        if t.fma {
+            let scale = want.abs().max(1.0);
+            assert!((got - want).abs() <= 1e-12 * scale, "{ctx}: {got} vs {want}");
+        } else {
+            assert_eq!(got.to_bits(), want.to_bits(), "{ctx}: {got} vs {want}");
+        }
+    }
+
+    /// The detected (auto) table — exercises real SIMD on capable hosts
+    /// regardless of what `FASTKQR_SIMD` says for the process global.
+    fn auto() -> SimdDispatch {
+        SimdDispatch::resolve(Some("auto"), None)
+    }
+
+    #[test]
+    fn resolve_policy() {
+        for off in ["off", "0", "false", "scalar", " off "] {
+            let t = SimdDispatch::resolve(Some(off), Some("1"));
+            assert_eq!(t.isa, Isa::Scalar, "{off:?}");
+            assert!(!t.fma, "FMA must be ignored when the oracle is pinned");
+        }
+        let t = SimdDispatch::resolve(None, None);
+        assert!(!t.fma, "FMA is opt-in");
+        let t = SimdDispatch::resolve(Some("auto"), Some("1"));
+        if t.isa == Isa::Scalar {
+            assert!(!t.fma, "scalar tier has no FMA variant");
+        }
+        // global() resolves to *something* and is stable across calls
+        assert_eq!(global().isa.as_str(), global().isa.as_str());
+    }
+
+    #[test]
+    fn env_override_pins_scalar() {
+        // Resolve the process global first so set_var cannot race another
+        // test's first global() initialization.
+        let _ = global();
+        std::env::set_var("FASTKQR_SIMD", "off");
+        let t = SimdDispatch::from_env();
+        std::env::remove_var("FASTKQR_SIMD");
+        assert_eq!(t.isa, Isa::Scalar);
+        assert_eq!((t.dot)(&[1.0, 2.0], &[3.0, 4.0]).to_bits(), 11.0f64.to_bits());
+    }
+
+    #[test]
+    fn dot_sqdist_parity_all_tail_sizes() {
+        let t = auto();
+        for n in 0..=33 {
+            let (a, b) = vecs(n, 7 + n as u64);
+            assert_feq(&t, (t.dot)(&a, &b), dot_scalar(&a, &b), &format!("dot n={n}"));
+            assert_feq(&t, (t.sqdist)(&a, &b), sqdist_scalar(&a, &b), &format!("sqdist n={n}"));
+        }
+    }
+
+    #[test]
+    fn axpy_scal_rank2_parity_all_tail_sizes() {
+        let t = auto();
+        for n in 0..=33 {
+            let (x, e) = vecs(n, 101 + n as u64);
+            let (v, y0) = vecs(n, 211 + n as u64);
+            let mut y_simd = y0.clone();
+            let mut y_ref = y0.clone();
+            (t.axpy)(0.37, &x, &mut y_simd);
+            axpy_scalar(0.37, &x, &mut y_ref);
+            for (g, w) in y_simd.iter().zip(&y_ref) {
+                assert_feq(&t, *g, *w, &format!("axpy n={n}"));
+            }
+            (t.scal)(-1.25, &mut y_simd);
+            scal_scalar(-1.25, &mut y_ref);
+            for (g, w) in y_simd.iter().zip(&y_ref) {
+                assert_feq(&t, *g, *w, &format!("scal n={n}"));
+            }
+            let mut r_simd = y0.clone();
+            let mut r_ref = y0;
+            (t.rank2)(0.61, &e, -0.23, &v, &mut r_simd);
+            rank2_scalar(0.61, &e, -0.23, &v, &mut r_ref);
+            for (g, w) in r_simd.iter().zip(&r_ref) {
+                assert_feq(&t, *g, *w, &format!("rank2 n={n}"));
+            }
+        }
+    }
+
+    #[test]
+    fn tile4x4_parity_across_k_and_offsets() {
+        let t = auto();
+        for (k_eff, n_eff, i0, j0) in
+            [(1usize, 4usize, 0usize, 0usize), (3, 8, 4, 4), (4, 4, 0, 0), (17, 12, 8, 8)]
+        {
+            let (apack, _) = vecs((i0 + 4) * k_eff, 31 + k_eff as u64);
+            let (bpack, _) = vecs(k_eff * n_eff, 47 + n_eff as u64);
+            let got = (t.tile4x4)(&apack, &bpack, i0, j0, k_eff, n_eff);
+            let want = tile4x4_scalar(&apack, &bpack, i0, j0, k_eff, n_eff);
+            for ir in 0..4 {
+                for jr in 0..4 {
+                    assert_feq(
+                        &t,
+                        got[ir][jr],
+                        want[ir][jr],
+                        &format!("tile k={k_eff} n={n_eff} [{ir}][{jr}]"),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nan_and_inf_propagate() {
+        let t = auto();
+        for idx in [0usize, 5, 16] {
+            let (mut a, b) = vecs(17, 83);
+            a[idx] = f64::NAN;
+            assert!((t.dot)(&a, &b).is_nan(), "NaN at {idx} must propagate");
+            assert!((t.sqdist)(&a, &b).is_nan());
+            a[idx] = f64::INFINITY;
+            let d = (t.dot)(&a, &b);
+            assert!(!d.is_finite(), "inf at {idx} must not be masked");
+        }
+    }
+}

@@ -21,6 +21,7 @@
 //!   figure1    regenerate the crossing figure (writes CSV)
 //!   ablations  design-choice ablations
 //!   perf       hot-path microbenchmarks
+//!   version    version + resolved SIMD dispatch (ISA tier, FMA, threads)
 //!
 //! Common options: --data yuan|friedman|sine|gagurine|mcycle|crabs|boston
 //! --n --p --tau --lambda --backend native|xla --seed; see DESIGN.md §5.
@@ -72,10 +73,21 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "figure1" => cmd_figure1(args),
         "ablations" => cmd_ablations(args),
         "perf" => cmd_perf(args),
+        "version" | "--version" => {
+            // The dispatch snapshot makes bench JSONs and bug reports
+            // interpretable: the same binary runs different microkernels
+            // on different hosts (and under FASTKQR_SIMD/FASTKQR_FMA).
+            let simd = fastkqr::linalg::simd::global();
+            println!("fastkqr {}", fastkqr::version());
+            println!("simd_isa       {}", simd.isa.as_str());
+            println!("simd_fma       {}", simd.fma);
+            println!("threads        {}", fastkqr::linalg::par::global().threads);
+            Ok(())
+        }
         "help" | "--help" => {
             println!("fastkqr {} — exact kernel quantile regression", fastkqr::version());
             println!(
-                "subcommands: fit path grid cv nckqr predict serve client table1..6 figure1 ablations perf"
+                "subcommands: fit path grid cv nckqr predict serve client table1..6 figure1 ablations perf version"
             );
             println!("see README.md for options");
             Ok(())

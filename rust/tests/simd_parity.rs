@@ -1,0 +1,302 @@
+//! SIMD-vs-scalar parity: the dispatched microkernels (`linalg::simd`)
+//! must be **bitwise** equal to the scalar oracle at every tail size and
+//! every MR/NR edge combination of the packed GEMM — that is the design
+//! contract that lets the whole crate switch ISA tiers without moving a
+//! single bit anywhere (solvers, lockstep parity, KKT certificates).
+//!
+//! The one sanctioned exception: the opt-in `FASTKQR_FMA=1` tier fuses
+//! multiply-add (different rounding), so when the resolved global table
+//! has `fma` set these tests relax to ≤1e-12 relative tolerance — the
+//! same contract the parallel GEMVᵀ reduction carries.
+//!
+//! CI runs this suite twice: `FASTKQR_SIMD=off` (oracle vs itself — the
+//! pre-PR code path) and `FASTKQR_SIMD=auto` (real vector kernels on
+//! capable hosts), plus an FMA tolerance pass.
+
+use fastkqr::data::Rng;
+use fastkqr::linalg::gemm::{gemm_into_tiled_with, gemm_nn_into, gemm_nt_into};
+use fastkqr::linalg::simd::{self, SimdDispatch};
+use fastkqr::linalg::{blas, GemmTiles, Matrix};
+
+fn rvec(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn rmat(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+/// Bitwise equality, unless the resolved table runs the FMA tier — then
+/// ≤1e-12 relative (fused rounding is the sanctioned exception).
+fn assert_feq(t: &SimdDispatch, got: f64, want: f64, ctx: &str) {
+    if t.fma {
+        // Non-finite values carry no rounding: NaN must stay NaN and an
+        // infinity must keep its sign even under fused arithmetic.
+        if want.is_nan() {
+            assert!(got.is_nan(), "{ctx}: got {got}, want NaN");
+            return;
+        }
+        if want.is_infinite() {
+            assert_eq!(got, want, "{ctx}: got {got}, want {want}");
+            return;
+        }
+        let scale = want.abs().max(1.0);
+        assert!(
+            (got - want).abs() <= 1e-12 * scale,
+            "{ctx}: got {got}, want {want} (fma tolerance)"
+        );
+    } else {
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "{ctx}: got {got} ({:#x}), want {want} ({:#x})",
+            got.to_bits(),
+            want.to_bits()
+        );
+    }
+}
+
+fn assert_slices_eq(t: &SimdDispatch, got: &[f64], want: &[f64], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_feq(t, *g, *w, &format!("{ctx}[{i}]"));
+    }
+}
+
+/// Exhaustive tail sweep: every length 0–17 plus a few vector-width
+/// multiples, for each level-1 kernel, dispatched table vs scalar oracle.
+#[test]
+fn level1_kernels_bitwise_match_oracle_at_all_tail_sizes() {
+    let t = simd::global();
+    let o = simd::scalar();
+    let lengths: Vec<usize> = (0..=17).chain([31, 32, 33, 64, 65]).collect();
+    for &n in &lengths {
+        let a = rvec(n, 1000 + n as u64);
+        let b = rvec(n, 2000 + n as u64);
+        assert_feq(t, (t.dot)(&a, &b), (o.dot)(&a, &b), &format!("dot n={n}"));
+        assert_feq(t, (t.sqdist)(&a, &b), (o.sqdist)(&a, &b), &format!("sqdist n={n}"));
+
+        let y0 = rvec(n, 3000 + n as u64);
+        let mut y_t = y0.clone();
+        let mut y_o = y0.clone();
+        (t.axpy)(0.731, &a, &mut y_t);
+        (o.axpy)(0.731, &a, &mut y_o);
+        assert_slices_eq(t, &y_t, &y_o, &format!("axpy n={n}"));
+
+        (t.scal)(-2.5, &mut y_t);
+        (o.scal)(-2.5, &mut y_o);
+        assert_slices_eq(t, &y_t, &y_o, &format!("scal n={n}"));
+
+        let mut r_t = y0.clone();
+        let mut r_o = y0;
+        (t.rank2)(0.37, &a, -0.93, &b, &mut r_t);
+        (o.rank2)(0.37, &a, -0.93, &b, &mut r_o);
+        assert_slices_eq(t, &r_t, &r_o, &format!("rank2 n={n}"));
+    }
+}
+
+/// GEMV / GEMVᵀ over dims covering every remainder class, through the
+/// explicit-table serial kernels.
+#[test]
+fn gemv_and_gemv_t_bitwise_match_oracle() {
+    let t = simd::global();
+    let o = simd::scalar();
+    let dims: Vec<usize> = (1..=9).chain([16, 17]).collect();
+    for &m in &dims {
+        for &k in &dims {
+            let a = rmat(m, k, (m * 100 + k) as u64);
+            let x = rvec(k, (m * 7 + k) as u64);
+            let mut out_t = vec![0.0; m];
+            let mut out_o = vec![0.0; m];
+            blas::gemv_serial_with(t, &a, &x, &mut out_t);
+            blas::gemv_serial_with(o, &a, &x, &mut out_o);
+            assert_slices_eq(t, &out_t, &out_o, &format!("gemv {m}x{k}"));
+
+            let xt = rvec(m, (m * 11 + k) as u64);
+            let mut tt = vec![0.0; k];
+            let mut to = vec![0.0; k];
+            blas::gemv_t_serial_with(t, &a, &xt, &mut tt);
+            blas::gemv_t_serial_with(o, &a, &xt, &mut to);
+            assert_slices_eq(t, &tt, &to, &format!("gemv_t {m}x{k}"));
+        }
+    }
+}
+
+/// `gemm_nt_into` columns must stay bitwise equal to the scalar serial
+/// GEMV — the lockstep driver's parity contract, now across ISA tiers.
+#[test]
+fn gemm_nt_columns_match_scalar_gemv() {
+    let t = simd::global();
+    let o = simd::scalar();
+    for (p, q, k) in [(1usize, 1usize, 1usize), (5, 3, 7), (8, 4, 16), (9, 5, 17), (33, 6, 21)] {
+        let a = rmat(p, k, (p * 31 + k) as u64);
+        let b = rmat(q, k, (q * 37 + k) as u64);
+        for workers in [1usize, 3] {
+            let mut c = Matrix::zeros(p, q);
+            gemm_nt_into(&a, &b, &mut c, workers);
+            for cell in 0..q {
+                let mut expect = vec![0.0; p];
+                blas::gemv_serial_with(o, &a, b.row(cell), &mut expect);
+                for i in 0..p {
+                    assert_feq(
+                        t,
+                        c[(i, cell)],
+                        expect[i],
+                        &format!("nt p={p} q={q} k={k} w={workers} [{i},{cell}]"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// `gemm_nn_into` rows must stay bitwise equal to the scalar serial
+/// GEMVᵀ (k-ascending axpy order, zero-skip included).
+#[test]
+fn gemm_nn_rows_match_scalar_gemv_t() {
+    let t = simd::global();
+    let o = simd::scalar();
+    for (m, k, n) in [(1usize, 1usize, 1usize), (3, 7, 5), (4, 16, 8), (5, 17, 9), (6, 21, 33)] {
+        let mut a = rmat(m, k, (m * 41 + k) as u64);
+        a[(0, 0)] = 0.0; // exercise the zero-skip on both paths
+        let b = rmat(k, n, (n * 43 + k) as u64);
+        for workers in [1usize, 3] {
+            let mut c = Matrix::zeros(m, n);
+            gemm_nn_into(&a, &b, &mut c, workers);
+            for r in 0..m {
+                let mut expect = vec![0.0; n];
+                blas::gemv_t_serial_with(o, &b, a.row(r), &mut expect);
+                assert_slices_eq(
+                    t,
+                    c.row(r),
+                    &expect,
+                    &format!("nn m={m} k={k} n={n} w={workers} row {r}"),
+                );
+            }
+        }
+    }
+}
+
+/// The packed tiled GEMM: dispatched table vs pinned scalar oracle must
+/// be bitwise equal element-for-element, across shapes hitting every
+/// MR/NR edge combination (full tiles, row edges, column edges, both).
+#[test]
+fn packed_gemm_bitwise_matches_scalar_across_edge_shapes() {
+    let t = simd::global();
+    let o = simd::scalar();
+    // Tiny tiles so a 12×17×12 problem crosses many panel boundaries.
+    let tiles = GemmTiles { mc: 8, kc: 8, nc: 8 };
+    let ms = [1usize, 2, 3, 4, 5, 7, 8, 9, 12];
+    let ks = [1usize, 4, 5, 16, 17];
+    for &m in &ms {
+        for &n in &ms {
+            for &k in &ks {
+                let a = rmat(m, k, (m * 53 + k) as u64);
+                let b = rmat(k, n, (n * 59 + k) as u64);
+                let mut c_t = Matrix::zeros(m, n);
+                let mut c_o = Matrix::zeros(m, n);
+                gemm_into_tiled_with(&a, &b, &mut c_t, tiles, 1, t);
+                gemm_into_tiled_with(&a, &b, &mut c_o, tiles, 1, o);
+                assert_slices_eq(
+                    t,
+                    c_t.as_slice(),
+                    c_o.as_slice(),
+                    &format!("packed m={m} k={k} n={n}"),
+                );
+            }
+        }
+    }
+}
+
+/// NaN and ∞ must flow through the vector kernels exactly as through the
+/// scalar ones — no masking, no lane blending surprises.
+#[test]
+fn nan_and_inf_propagation() {
+    let t = simd::global();
+    let o = simd::scalar();
+    for idx in [0usize, 3, 4, 7, 15, 16] {
+        let n = 17;
+        let mut a = rvec(n, 71 + idx as u64);
+        let b = rvec(n, 72 + idx as u64);
+
+        a[idx] = f64::NAN;
+        assert!((t.dot)(&a, &b).is_nan(), "dot NaN at {idx}");
+        assert!((o.dot)(&a, &b).is_nan());
+        assert!((t.sqdist)(&a, &b).is_nan(), "sqdist NaN at {idx}");
+        let mut y_t = b.clone();
+        let mut y_o = b.clone();
+        (t.axpy)(1.0, &a, &mut y_t);
+        (o.axpy)(1.0, &a, &mut y_o);
+        assert!(y_t[idx].is_nan() && y_o[idx].is_nan(), "axpy NaN at {idx}");
+
+        a[idx] = f64::INFINITY;
+        let (dt, dok) = ((t.dot)(&a, &b), (o.dot)(&a, &b));
+        assert!(!dt.is_finite(), "dot inf at {idx} must not be masked");
+        assert_feq(t, dt, dok, &format!("dot inf at {idx}"));
+        let mut z_t = b.clone();
+        let mut z_o = b;
+        (t.scal)(f64::INFINITY, &mut z_t);
+        (o.scal)(f64::INFINITY, &mut z_o);
+        for (g, w) in z_t.iter().zip(&z_o) {
+            assert_feq(t, *g, *w, &format!("scal inf at {idx}"));
+        }
+    }
+}
+
+/// `FASTKQR_SIMD=off` (and friends) must pin the scalar oracle no matter
+/// what the host CPU supports — the env-override contract. Drives the
+/// pure resolver (the process-global table is read-once by design).
+#[test]
+fn env_off_pins_the_scalar_oracle() {
+    // Resolve the process global first, so the set_var below can never
+    // race another test's first global() initialization.
+    let _ = simd::global();
+    for off in ["off", "0", "false", "scalar"] {
+        let t = SimdDispatch::resolve(Some(off), None);
+        assert_eq!(t.isa.as_str(), "scalar", "FASTKQR_SIMD={off}");
+        assert!(!t.fma);
+        // FMA request is ignored when the oracle is pinned.
+        let t = SimdDispatch::resolve(Some(off), Some("1"));
+        assert_eq!(t.isa.as_str(), "scalar");
+        assert!(!t.fma);
+    }
+    // The pinned table must be the oracle arithmetic, not merely labeled
+    // scalar: spot-check one dot against the hand-rolled reduction.
+    let t = SimdDispatch::resolve(Some("off"), None);
+    let a = rvec(17, 81);
+    let b = rvec(17, 82);
+    let o = simd::scalar();
+    assert_eq!((t.dot)(&a, &b).to_bits(), (o.dot)(&a, &b).to_bits());
+
+    // from_env honors the variable end-to-end.
+    std::env::set_var("FASTKQR_SIMD", "off");
+    let t = SimdDispatch::from_env();
+    std::env::remove_var("FASTKQR_SIMD");
+    assert_eq!(t.isa.as_str(), "scalar");
+}
+
+/// The RBF Gram row runs the dispatched squared distance; Gram entries
+/// must be identical whichever table the process resolved (and the FMA
+/// tier stays within its tolerance contract).
+#[test]
+fn rbf_gram_matches_oracle_sqdist() {
+    let t = simd::global();
+    let o = simd::scalar();
+    let x = rmat(13, 7, 91);
+    let k = fastkqr::kernel::Kernel::Rbf { sigma: 1.3 }.gram(&x);
+    for i in 0..13 {
+        for j in 0..13 {
+            let d2 = (o.sqdist)(x.row(i), x.row(j));
+            let want = (-d2 / (2.0 * 1.3 * 1.3)).exp();
+            // exp() amplifies the fused-rounding delta slightly; bitwise
+            // when the table is exact, small tolerance under FMA.
+            if t.fma {
+                assert!((k[(i, j)] - want).abs() <= 1e-12, "gram[{i},{j}]");
+            } else {
+                assert_eq!(k[(i, j)].to_bits(), want.to_bits(), "gram[{i},{j}]");
+            }
+        }
+    }
+}

@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Print per-metric deltas between the two most recent bench snapshots.
+
+Snapshots are directories under benchmarks/ (sorted by name — use
+ISO dates so lexicographic == chronological), each holding the
+machine-readable bench outputs: BENCH_grid.json, BENCH_serve.json,
+BENCH_lowrank.json. Record one with tools/bench_snapshot.sh.
+
+With a single snapshot, values are printed with "n/a" deltas so the
+first recording is still inspectable. Null / non-numeric fields (e.g.
+the schema-only placeholder committed from a toolchain-less build
+container) are skipped gracefully.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+BENCH_FILES = ["BENCH_grid.json", "BENCH_serve.json", "BENCH_lowrank.json"]
+
+
+def flatten(doc, prefix=""):
+    """Yield (dotted.key, value) for every numeric leaf in a JSON doc."""
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            yield from flatten(v, f"{prefix}{k}.")
+    elif isinstance(doc, list):
+        for i, v in enumerate(doc):
+            yield from flatten(v, f"{prefix}{i}.")
+    elif isinstance(doc, bool):
+        return  # bools are ints in python; not a perf metric
+    elif isinstance(doc, (int, float)):
+        yield prefix.rstrip("."), float(doc)
+
+
+def load_metrics(snap_dir):
+    """Map bench-file stem -> {metric: value} for one snapshot dir."""
+    out = {}
+    for name in BENCH_FILES:
+        path = snap_dir / name
+        if not path.is_file():
+            continue
+        try:
+            doc = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as exc:
+            print(f"  ! skipping {path}: {exc}", file=sys.stderr)
+            continue
+        out[name] = dict(flatten(doc))
+    return out
+
+
+def fmt(v):
+    return f"{v:.6g}"
+
+
+def main():
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(__file__).resolve().parent.parent / "benchmarks"
+    snaps = sorted(d for d in root.iterdir() if d.is_dir()) if root.is_dir() else []
+    if not snaps:
+        print(f"no snapshot directories under {root}; run tools/bench_snapshot.sh first")
+        return 1
+
+    new_dir = snaps[-1]
+    old_dir = snaps[-2] if len(snaps) > 1 else None
+    new = load_metrics(new_dir)
+    old = load_metrics(old_dir) if old_dir else {}
+    print(f"comparing {old_dir.name if old_dir else '(none)'} -> {new_dir.name}\n")
+
+    for name in BENCH_FILES:
+        if name not in new and name not in old:
+            continue
+        print(f"== {name} ==")
+        new_m = new.get(name, {})
+        old_m = old.get(name, {})
+        keys = sorted(set(new_m) | set(old_m))
+        if not keys:
+            print("  (no numeric metrics — placeholder snapshot?)")
+        width = max((len(k) for k in keys), default=0)
+        for key in keys:
+            a, b = old_m.get(key), new_m.get(key)
+            if b is None:
+                print(f"  {key:<{width}}  {fmt(a)} -> (gone)")
+            elif a is None:
+                print(f"  {key:<{width}}  {fmt(b)}  (delta n/a)")
+            else:
+                delta = b - a
+                pct = f"{100.0 * delta / a:+.1f}%" if a != 0 else "n/a"
+                print(f"  {key:<{width}}  {fmt(a)} -> {fmt(b)}  ({delta:+.6g}, {pct})")
+        print()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

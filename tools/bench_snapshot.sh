@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Record a dated bench snapshot under benchmarks/<name>/ and diff it
+# against the previous one. Usage: tools/bench_snapshot.sh [name]
+# (name defaults to today's ISO date; pass e.g. "2026-08-08-avx2" to
+# keep several machines apart).
+set -euo pipefail
+
+repo="$(cd "$(dirname "$0")/.." && pwd)"
+name="${1:-$(date +%F)}"
+dest="$repo/benchmarks/$name"
+mkdir -p "$dest"
+
+cd "$repo/rust"
+cargo bench --bench grid_lockstep -- --out "$dest/BENCH_grid.json"
+cargo bench --bench serve_throughput -- --out "$dest/BENCH_serve.json"
+cargo bench --bench nystrom_scaling -- --out "$dest/BENCH_lowrank.json"
+
+echo
+python3 "$repo/tools/bench_diff.py"
