@@ -1,12 +1,21 @@
-//! Low-rank (Nyström) scaling trajectory: wall time and in-sample check
-//! loss vs the landmark count m at a fixed n, against the exact dense
-//! baseline at the same n. Writes the machine-readable baseline to
-//! `BENCH_lowrank.json` (override with `--out`) so the scale trajectory
-//! of future PRs has a recorded starting point.
+//! Low-rank scaling trajectory: wall time and in-sample check loss vs
+//! the basis budget (Nyström landmark count m, random-feature count D)
+//! at a fixed n, against the exact dense baseline at the same n. Writes
+//! the machine-readable baseline to `BENCH_lowrank.json` (override with
+//! `--out`) so the scale trajectory of future PRs has a recorded
+//! starting point.
 //!
 //! Expectation (ISSUE 4): setup drops from O(n³) to O(n·m² + m³) and
 //! per-iteration cost from O(n²) to O(n·m), so wall time falls steeply
 //! with m while the check loss approaches the dense baseline as m grows.
+//! The RF column (ISSUE 7) tracks the same trajectory with D random
+//! Fourier features — setup O(n·D²) streamed in row blocks, no n×n
+//! Gram ever materialized.
+//!
+//! `--big <n>` (e.g. `--big 1000000`) appends one streaming-fit entry at
+//! that n through the RF path with loose accounting-oriented solver
+//! options, recording wall time, check loss and the representation's
+//! peak float count (which must sit far below n²).
 
 use fastkqr::data::{synth, Rng};
 use fastkqr::engine::{ApproxSpec, EngineConfig, FitEngine};
@@ -80,7 +89,98 @@ fn main() {
         ]));
     }
 
-    let doc = Json::obj(vec![
+    // RF column at the same basis budgets: D random features instead of
+    // m landmarks, same dense baseline (unlike Nyström, D may exceed n).
+    let ds: Vec<usize> = {
+        let def = [32usize, 64, 128, 256];
+        args.get_usize_list("ds", &def)
+    };
+    let mut rff_rows = Vec::new();
+    for &d in &ds {
+        let engine = FitEngine::with_config(EngineConfig::default());
+        let (secs, loss, iters) =
+            fit_once(&engine, &data, &kernel, ApproxSpec::RandomFeatures { d, seed }, tau, lam);
+        let speedup = dense_secs / secs.max(1e-12);
+        let loss_gap = loss - dense_loss;
+        println!(
+            "   rff       D={d:<5} ({speedup:5.2}x) {secs:8.3}s   check-loss {loss:.6}  \
+             (gap {loss_gap:+.2e}, {iters} iters)"
+        );
+        rff_rows.push(Json::obj(vec![
+            ("d", Json::num(d as f64)),
+            ("secs", Json::num(secs)),
+            ("check_loss", Json::num(loss)),
+            ("loss_gap_vs_dense", Json::num(loss_gap)),
+            ("speedup_vs_dense", Json::num(speedup)),
+            ("apgd_iters", Json::num(iters as f64)),
+        ]));
+    }
+
+    // Opt-in large-n streaming entry: `--big 1000000 [--big-d 256]`
+    // fits once through the RF path and records the representation's
+    // peak float count — the machine-checkable no-n×n claim at scale.
+    let rff_big = match args.get("big") {
+        None => Json::Null,
+        Some(_) => {
+            let big_n = args.get_usize("big", 1_000_000);
+            let big_d = args.get_usize("big-d", 256);
+            let mut brng = Rng::new(seed ^ 0xb16);
+            let bdata = synth::sine_hetero(big_n, &mut brng);
+            // Median heuristic over all n² pairs would itself be
+            // quadratic; a fixed bandwidth keeps setup linear in n.
+            let bkernel = Kernel::Rbf { sigma: 0.5 };
+            // Loose accounting-oriented options (the entry bounds memory
+            // and wall-clock scaling, not certificate quality).
+            let opts = fastkqr::kqr::SolveOptions {
+                apgd_tol: 1e-2,
+                kkt_tol: 1e-2,
+                max_iters: 300,
+                max_expansions: 2,
+                max_stall_rungs: 1,
+                projection: false,
+                ..fastkqr::kqr::SolveOptions::default()
+            };
+            let engine = FitEngine::with_config(EngineConfig {
+                opts: opts.clone(),
+                ..EngineConfig::default()
+            });
+            let t0 = Instant::now();
+            let solver = engine
+                .solver_approx(&bdata.x, &bdata.y, &bkernel, ApproxSpec::RandomFeatures {
+                    d: big_d,
+                    seed,
+                }, opts)
+                .expect("big-n rff solver");
+            let setup_secs = t0.elapsed().as_secs_f64();
+            let floats = solver.repr.memory_floats();
+            assert!(
+                floats < big_n.saturating_mul(big_n) / 16,
+                "rff repr holds {floats} f64s at n={big_n} — streaming build must stay \
+                 far below n²"
+            );
+            let t1 = Instant::now();
+            let fit = solver.fit(tau, lam).expect("big-n rff fit");
+            let fit_secs = t1.elapsed().as_secs_f64();
+            let loss = pinball_loss(&bdata.y, &fit.predict(&bdata.x), tau);
+            println!(
+                "   rff-big   n={big_n} D={big_d}  setup {setup_secs:.3}s  fit {fit_secs:.3}s  \
+                 check-loss {loss:.6}  ({} repr floats, {:.1} MB)",
+                floats,
+                floats as f64 * 8.0 / 1e6
+            );
+            Json::obj(vec![
+                ("n", Json::num(big_n as f64)),
+                ("d", Json::num(big_d as f64)),
+                ("setup_secs", Json::num(setup_secs)),
+                ("fit_secs", Json::num(fit_secs)),
+                ("check_loss", Json::num(loss)),
+                ("memory_floats", Json::num(floats as f64)),
+                ("apgd_iters", Json::num(fit.apgd_iters as f64)),
+            ])
+        }
+    };
+
+    let mut pairs = vec![
         ("bench", Json::str("nystrom_scaling")),
         ("n", Json::num(n as f64)),
         ("tau", Json::num(tau)),
@@ -95,7 +195,12 @@ fn main() {
             ]),
         ),
         ("lowrank", Json::Arr(rows)),
-    ]);
+        ("rff", Json::Arr(rff_rows)),
+    ];
+    if !matches!(rff_big, Json::Null) {
+        pairs.push(("rff_big", rff_big));
+    }
+    let doc = Json::obj(pairs);
     std::fs::write(&out, doc.to_string()).expect("write BENCH_lowrank.json");
     println!("wrote {out}");
 }

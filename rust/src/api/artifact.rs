@@ -26,24 +26,35 @@
 //! models keep writing format_version 1 (older readers stay compatible);
 //! version-1 readers reject low-rank documents loudly instead of
 //! misreading them.
+//!
+//! **Random-feature documents (format_version 3).** A fit produced on a
+//! random Fourier feature basis persists `"repr":"rff"` with the D×p
+//! frequency matrix, the D phases, the drawing seed and `n_train`, plus
+//! one D-dimensional feature weight vector `w` per fit — the artifact is
+//! O(D·p) **independent of n**, smaller than any landmark document once
+//! n outgrows D. The √(2/D) normalizer is recomputed from D on load
+//! (bit-identical), so a reloaded model's predictions equal the
+//! original's bitwise. Each version is the lowest that can represent the
+//! model; older readers reject newer documents loudly.
 
 use super::model::{shape_from_json, shape_to_json, CvSummary, ModelSet, QuantileModel};
 use super::{kernel_from_json, kernel_to_json, matrix_from_json, matrix_to_json};
+use crate::kernel::rff::RffMap;
 use crate::kernel::Kernel;
 use crate::kqr::kkt::KktReport;
 use crate::kqr::KqrFit;
 use crate::linalg::Matrix;
-use crate::nckqr::{LevelCoef, NcLowRank, NckqrFit};
-use crate::spectral::LowRankCoef;
+use crate::nckqr::{LevelCoef, NcLowRank, NcRff, NckqrFit};
+use crate::spectral::{LowRankCoef, RffCoef};
 use crate::util::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
 use std::sync::Arc;
 
 /// Highest artifact document version this build reads. [`to_json`]
-/// writes the lowest version that can represent the model: 1 (dense) or
-/// 2 (compressed low-rank).
-pub const ARTIFACT_VERSION: u64 = 2;
+/// writes the lowest version that can represent the model: 1 (dense),
+/// 2 (compressed low-rank) or 3 (random features).
+pub const ARTIFACT_VERSION: u64 = 3;
 /// Magic `format` tag distinguishing model artifacts from other JSON.
 pub const ARTIFACT_FORMAT: &str = "fastkqr.model";
 
@@ -53,11 +64,13 @@ fn kqr_fit_to_json(f: &KqrFit) -> Json {
         ("lambda", Json::num(f.lam)),
         ("b", Json::num(f.b)),
     ];
-    // Low-rank fits persist the m-dim landmark weights instead of the
-    // n-dim α — that single choice is what makes the artifact O(m).
-    match &f.lowrank {
-        Some(lr) => pairs.push(("w", Json::arr_f64(&lr.w))),
-        None => pairs.push(("alpha", Json::arr_f64(&f.alpha))),
+    // Compressed fits persist the small weight vector instead of the
+    // n-dim α — that single choice is what makes the artifact O(m)
+    // (landmark weights) or O(D) (feature weights).
+    match (&f.rff, &f.lowrank) {
+        (Some(rf), _) => pairs.push(("w", Json::arr_f64(&rf.w))),
+        (None, Some(lr)) => pairs.push(("w", Json::arr_f64(&lr.w))),
+        (None, None) => pairs.push(("alpha", Json::arr_f64(&f.alpha))),
     }
     pairs.extend(vec![
         ("objective", Json::num(f.objective)),
@@ -90,6 +103,7 @@ fn kqr_fit_from_json(v: &Json, x_train: &Arc<Matrix>, kernel: &Kernel) -> Result
         v.get_usize("apgd_iters").unwrap_or(0),
         v.get_usize("expansions").unwrap_or(0),
         v.get_usize_arr("singular_set").unwrap_or_default(),
+        None,
         None,
         x_train.clone(),
         kernel.clone(),
@@ -126,6 +140,36 @@ fn kqr_fit_from_json_lowrank(
     ))
 }
 
+/// Parse one random-feature fit object (`"w"` holds the D-dimensional
+/// feature weights).
+fn kqr_fit_from_json_rff(
+    v: &Json,
+    map: &Arc<RffMap>,
+    n_train: usize,
+    kernel: &Kernel,
+) -> Result<KqrFit> {
+    let need = |key: &str| v.get_f64(key).ok_or_else(|| anyhow!("fit: missing {key:?}"));
+    let w = v.get_f64_arr_strict("w").ok_or_else(|| anyhow!("rff fit: missing 'w'"))?;
+    if w.len() != map.d() {
+        bail!("rff fit: len(w)={} != d={}", w.len(), map.d());
+    }
+    let kkt = KktReport::from_json(v.get("kkt").ok_or_else(|| anyhow!("fit: missing 'kkt'"))?)?;
+    Ok(KqrFit::assemble_compressed_rff(
+        need("tau")?,
+        need("lambda")?,
+        need("b")?,
+        need("objective")?,
+        kkt,
+        need("gamma_final")?,
+        v.get_usize("apgd_iters").unwrap_or(0),
+        v.get_usize("expansions").unwrap_or(0),
+        v.get_usize_arr("singular_set").unwrap_or_default(),
+        n_train,
+        RffCoef { map: map.clone(), w },
+        kernel.clone(),
+    ))
+}
+
 /// Shared header of a compressed low-rank document (every kind writes
 /// the same four keys): landmark indices, landmark inputs Z, original
 /// training size.
@@ -141,17 +185,32 @@ fn push_lowrank_header<'a>(
     pairs.push(("n_train", Json::num(n_train as f64)));
 }
 
+/// Shared header of a random-feature document: the seed-pinned map
+/// (frequencies + phases + seed) and the original training size. The
+/// √(2/D) normalizer is a function of D and is recomputed on load.
+fn push_rff_header<'a>(pairs: &mut Vec<(&'a str, Json)>, map: &RffMap, n_train: usize) {
+    pairs.push(("repr", Json::str("rff")));
+    pairs.push(("freqs", matrix_to_json(&map.freqs)));
+    pairs.push(("phases", Json::arr_f64(&map.phases)));
+    pairs.push(("rff_seed", Json::num(map.seed as f64)));
+    pairs.push(("n_train", Json::num(n_train as f64)));
+}
+
 /// Serialize a model to the artifact document. Errors on an empty fit
-/// set (which [`from_json`] would reject anyway) or a set mixing dense
-/// and low-rank fits (impossible from one solver).
+/// set (which [`from_json`] would reject anyway) or a set mixing gram
+/// representations (impossible from one solver).
 pub fn to_json(model: &QuantileModel) -> Result<Json> {
-    let lowrank_doc = match model {
-        QuantileModel::Kqr(f) => f.lowrank.is_some(),
-        QuantileModel::Set(s) => s.fits.first().map(|f| f.lowrank.is_some()).unwrap_or(false),
-        QuantileModel::Nckqr(f) => f.lowrank.is_some(),
-    };
     // Lowest version that represents the document (see ARTIFACT_VERSION).
-    let version: u64 = if lowrank_doc { 2 } else { 1 };
+    let fit_version = |lowrank: bool, rff: bool| if rff { 3u64 } else if lowrank { 2 } else { 1 };
+    let version: u64 = match model {
+        QuantileModel::Kqr(f) => fit_version(f.lowrank.is_some(), f.rff.is_some()),
+        QuantileModel::Set(s) => s
+            .fits
+            .first()
+            .map(|f| fit_version(f.lowrank.is_some(), f.rff.is_some()))
+            .unwrap_or(1),
+        QuantileModel::Nckqr(f) => fit_version(f.lowrank.is_some(), f.rff.is_some()),
+    };
     let mut pairs = vec![
         ("format", Json::str(ARTIFACT_FORMAT)),
         ("format_version", Json::num(version as f64)),
@@ -161,9 +220,12 @@ pub fn to_json(model: &QuantileModel) -> Result<Json> {
     match model {
         QuantileModel::Kqr(f) => {
             pairs.push(("kernel", kernel_to_json(f.kernel())));
-            match &f.lowrank {
-                Some(lr) => push_lowrank_header(&mut pairs, &lr.z, &lr.landmarks, f.n_train()),
-                None => pairs.push(("x_train", matrix_to_json(f.x_train()))),
+            match (&f.rff, &f.lowrank) {
+                (Some(rf), _) => push_rff_header(&mut pairs, &rf.map, f.n_train()),
+                (None, Some(lr)) => {
+                    push_lowrank_header(&mut pairs, &lr.z, &lr.landmarks, f.n_train())
+                }
+                (None, None) => pairs.push(("x_train", matrix_to_json(f.x_train()))),
             }
             pairs.push(("fit", kqr_fit_to_json(f)));
         }
@@ -174,15 +236,19 @@ pub fn to_json(model: &QuantileModel) -> Result<Json> {
                 .fits
                 .first()
                 .ok_or_else(|| anyhow!("cannot serialize an empty model set"))?;
-            if s.fits.iter().any(|f| f.lowrank.is_some() != head.lowrank.is_some()) {
-                bail!("cannot serialize a set mixing dense and low-rank fits");
+            if s.fits.iter().any(|f| {
+                f.lowrank.is_some() != head.lowrank.is_some()
+                    || f.rff.is_some() != head.rff.is_some()
+            }) {
+                bail!("cannot serialize a set mixing gram representations");
             }
             pairs.push(("kernel", kernel_to_json(head.kernel())));
-            match &head.lowrank {
-                Some(lr) => {
+            match (&head.rff, &head.lowrank) {
+                (Some(rf), _) => push_rff_header(&mut pairs, &rf.map, head.n_train()),
+                (None, Some(lr)) => {
                     push_lowrank_header(&mut pairs, &lr.z, &lr.landmarks, head.n_train())
                 }
-                None => pairs.push(("x_train", matrix_to_json(head.x_train()))),
+                (None, None) => pairs.push(("x_train", matrix_to_json(head.x_train()))),
             }
             pairs.push(("fits", Json::Arr(s.fits.iter().map(kqr_fit_to_json).collect())));
             pairs.push(("shape", shape_to_json(&s.shape)));
@@ -192,8 +258,27 @@ pub fn to_json(model: &QuantileModel) -> Result<Json> {
         }
         QuantileModel::Nckqr(f) => {
             pairs.push(("kernel", kernel_to_json(f.kernel())));
-            match &f.lowrank {
-                Some(lr) => {
+            match (&f.rff, &f.lowrank) {
+                (Some(rf), _) => {
+                    push_rff_header(&mut pairs, &rf.map, f.n_train());
+                    pairs.push((
+                        "levels",
+                        Json::Arr(
+                            f.levels
+                                .iter()
+                                .zip(&rf.w)
+                                .map(|(lv, w)| {
+                                    Json::obj(vec![
+                                        ("tau", Json::num(lv.tau)),
+                                        ("b", Json::num(lv.b)),
+                                        ("w", Json::arr_f64(w)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ));
+                }
+                (None, Some(lr)) => {
                     push_lowrank_header(&mut pairs, &lr.z, &lr.landmarks, f.n_train());
                     pairs.push((
                         "levels",
@@ -212,7 +297,7 @@ pub fn to_json(model: &QuantileModel) -> Result<Json> {
                         ),
                     ));
                 }
-                None => {
+                (None, None) => {
                     pairs.push(("x_train", matrix_to_json(f.x_train())));
                     pairs.push((
                         "levels",
@@ -259,11 +344,13 @@ pub fn from_json(v: &Json) -> Result<QuantileModel> {
     }
     let kernel =
         kernel_from_json(v.get("kernel").ok_or_else(|| anyhow!("artifact: missing 'kernel'"))?)?;
-    // Compressed low-rank documents carry (z, landmarks, n_train) instead
-    // of x_train; dense documents are parsed exactly as before.
-    let lowrank_doc = match v.get_str("repr") {
-        None => false,
-        Some("lowrank") => true,
+    // Compressed documents carry their representation instead of
+    // x_train: low-rank brings (z, landmarks, n_train), random features
+    // bring (freqs, phases, n_train). Dense documents parse as before.
+    let (lowrank_doc, rff_doc_tag) = match v.get_str("repr") {
+        None => (false, false),
+        Some("lowrank") => (true, false),
+        Some("rff") => (false, true),
         Some(other) => bail!("artifact: unknown repr {other:?}"),
     };
     let compressed = if lowrank_doc {
@@ -283,6 +370,29 @@ pub fn from_json(v: &Json) -> Result<QuantileModel> {
     } else {
         None
     };
+    let rff_doc = if rff_doc_tag {
+        let freqs = matrix_from_json(
+            v.get("freqs").ok_or_else(|| anyhow!("rff artifact: missing 'freqs'"))?,
+        )?;
+        let phases = v
+            .get_f64_arr_strict("phases")
+            .ok_or_else(|| anyhow!("rff artifact: missing 'phases'"))?;
+        if freqs.rows() == 0 {
+            bail!("rff artifact: empty frequency matrix");
+        }
+        if phases.len() != freqs.rows() {
+            bail!("rff artifact: {} phases for {} frequencies", phases.len(), freqs.rows());
+        }
+        let n_train = v
+            .get_usize("n_train")
+            .ok_or_else(|| anyhow!("rff artifact: missing 'n_train'"))?;
+        let seed = v.get_usize("rff_seed").unwrap_or(0) as u64;
+        // √(2/D) is a pure function of D — recomputed bit-identically.
+        let scale = (2.0 / freqs.rows() as f64).sqrt();
+        Some((Arc::new(RffMap { freqs, phases, scale, seed }), n_train))
+    } else {
+        None
+    };
     let dense_x_train = || -> Result<Arc<Matrix>> {
         Ok(Arc::new(matrix_from_json(
             v.get("x_train").ok_or_else(|| anyhow!("artifact: missing 'x_train'"))?,
@@ -291,11 +401,14 @@ pub fn from_json(v: &Json) -> Result<QuantileModel> {
     match v.get_str("kind") {
         Some("kqr") => {
             let fit = v.get("fit").ok_or_else(|| anyhow!("artifact: missing 'fit'"))?;
-            match &compressed {
-                Some((z, landmarks, n_train)) => Ok(QuantileModel::Kqr(
+            match (&rff_doc, &compressed) {
+                (Some((map, n_train)), _) => Ok(QuantileModel::Kqr(kqr_fit_from_json_rff(
+                    fit, map, *n_train, &kernel,
+                )?)),
+                (None, Some((z, landmarks, n_train))) => Ok(QuantileModel::Kqr(
                     kqr_fit_from_json_lowrank(fit, z, landmarks, *n_train, &kernel)?,
                 )),
-                None => {
+                (None, None) => {
                     let x_train = dense_x_train()?;
                     Ok(QuantileModel::Kqr(kqr_fit_from_json(fit, &x_train, &kernel)?))
                 }
@@ -309,12 +422,16 @@ pub fn from_json(v: &Json) -> Result<QuantileModel> {
             if fits_json.is_empty() {
                 bail!("artifact: empty fit set");
             }
-            let fits: Vec<KqrFit> = match &compressed {
-                Some((z, landmarks, n_train)) => fits_json
+            let fits: Vec<KqrFit> = match (&rff_doc, &compressed) {
+                (Some((map, n_train)), _) => fits_json
+                    .iter()
+                    .map(|f| kqr_fit_from_json_rff(f, map, *n_train, &kernel))
+                    .collect::<Result<_>>()?,
+                (None, Some((z, landmarks, n_train))) => fits_json
                     .iter()
                     .map(|f| kqr_fit_from_json_lowrank(f, z, landmarks, *n_train, &kernel))
                     .collect::<Result<_>>()?,
-                None => {
+                (None, None) => {
                     let x_train = dense_x_train()?;
                     fits_json
                         .iter()
@@ -355,8 +472,42 @@ pub fn from_json(v: &Json) -> Result<QuantileModel> {
             let mm_iters = v.get_usize("mm_iters").unwrap_or(0);
             let gamma_final = v.get_f64("gamma_final").unwrap_or(0.0);
             let train_crossings = v.get_usize("train_crossings").unwrap_or(0);
-            match compressed {
-                Some((z, landmarks, n_train)) => {
+            match (rff_doc, compressed) {
+                (Some((map, n_train)), _) => {
+                    let mut levels = Vec::with_capacity(levels_json.len());
+                    let mut ws = Vec::with_capacity(levels_json.len());
+                    for lv in levels_json {
+                        let w = lv
+                            .get_f64_arr_strict("w")
+                            .ok_or_else(|| anyhow!("rff level: missing 'w'"))?;
+                        if w.len() != map.d() {
+                            bail!("rff level: len(w)={} != d={}", w.len(), map.d());
+                        }
+                        levels.push(LevelCoef {
+                            tau: lv
+                                .get_f64("tau")
+                                .ok_or_else(|| anyhow!("level: missing 'tau'"))?,
+                            b: lv.get_f64("b").ok_or_else(|| anyhow!("level: missing 'b'"))?,
+                            alpha: Vec::new(),
+                        });
+                        ws.push(w);
+                    }
+                    Ok(QuantileModel::Nckqr(NckqrFit::assemble_compressed_rff(
+                        taus,
+                        lam1,
+                        lam2,
+                        levels,
+                        objective,
+                        kkt,
+                        mm_iters,
+                        gamma_final,
+                        train_crossings,
+                        n_train,
+                        NcRff { map, w: ws },
+                        kernel,
+                    )))
+                }
+                (None, Some((z, landmarks, n_train))) => {
                     let mut levels = Vec::with_capacity(levels_json.len());
                     let mut ws = Vec::with_capacity(levels_json.len());
                     for lv in levels_json {
@@ -390,7 +541,7 @@ pub fn from_json(v: &Json) -> Result<QuantileModel> {
                         kernel,
                     )))
                 }
-                None => {
+                (None, None) => {
                     let x_train = dense_x_train()?;
                     let mut levels = Vec::with_capacity(levels_json.len());
                     for lv in levels_json {
@@ -493,6 +644,33 @@ mod tests {
             .fit(0.5, 0.05)
             .unwrap();
         QuantileModel::Kqr(fit)
+    }
+
+    #[test]
+    fn rff_artifact_roundtrips_and_is_version_3() {
+        use crate::spectral::GramRepr;
+        let mut rng = Rng::new(33);
+        let d = synth::sine_hetero(24, &mut rng);
+        let kernel = Kernel::Rbf { sigma: 0.5 };
+        let factor = crate::kernel::rff::rff(&d.x, &kernel, 16, 7).unwrap();
+        let solver = crate::kqr::KqrSolver::with_repr(
+            &d.x,
+            &d.y,
+            kernel,
+            GramRepr::RandomFeatures(std::sync::Arc::new(factor)),
+        );
+        let fit = solver.fit(0.5, 0.05).unwrap();
+        let model = QuantileModel::Kqr(fit);
+        let doc = to_json(&model).unwrap();
+        assert_eq!(doc.get_usize("format_version"), Some(3));
+        assert_eq!(doc.get_str("repr"), Some("rff"));
+        assert!(doc.get("x_train").is_none(), "rff artifacts are n-free");
+        let back = from_json(&doc).unwrap();
+        assert_eq!(to_json(&back).unwrap().to_string(), doc.to_string());
+        // reloaded predictions are bitwise equal
+        let mut rng2 = Rng::new(34);
+        let xt = Matrix::from_fn(9, d.x.cols(), |_, _| rng2.normal());
+        assert_eq!(model.predict(&xt), back.predict(&xt));
     }
 
     #[test]

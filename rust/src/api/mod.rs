@@ -16,7 +16,7 @@
 //!             backend?, seed }
 //!     task   ∈ Single{τ,λ} | Path{τ,λs} | Grid{τs,λs}
 //!            | NonCrossing{τs,λ₁,λ₂} | Cv{τs,λs,folds,seed}
-//!     approx ∈ exact | nystrom{m, seed}      (Gram representation)
+//!     approx ∈ exact | nystrom{m, seed} | rff{d, seed}   (Gram repr)
 //!        │  FitEngine::run(&spec)
 //!        ▼
 //!   QuantileModel (predict / taus / diagnostics / save / load)
@@ -46,16 +46,16 @@ use anyhow::{anyhow, bail, Result};
 
 /// Highest spec document version this build reads. [`FitSpec::to_json`]
 /// writes the **lowest** version that can represent the document — 1 for
-/// exact specs (older readers keep working), 2 once the kernel carries an
-/// `approx` (Nyström) block, which older readers must reject rather than
-/// silently fit exactly.
-pub const SPEC_VERSION: u64 = 2;
+/// exact specs (older readers keep working), 2 once the kernel carries a
+/// Nyström `approx` block, 3 for a random-feature (`rff`) block — which
+/// older readers must reject rather than silently fit exactly.
+pub const SPEC_VERSION: u64 = 3;
 
 /// Default master seed of a spec (`"seed"`): drives Nyström landmark
-/// sampling when the `approx` block carries no seed of its own, and is
-/// the documented default for CV fold shuffling (`task.seed`). Pinning it
-/// in the document makes every randomized choice reproducible from the
-/// spec alone.
+/// sampling and random-feature frequency draws when the `approx` block
+/// carries no seed of its own, and is the documented default for CV fold
+/// shuffling (`task.seed`). Pinning it in the document makes every
+/// randomized choice reproducible from the spec alone.
 pub const DEFAULT_SEED: u64 = 2024;
 
 // ---------------------------------------------------------------------------
@@ -221,6 +221,11 @@ pub fn approx_to_json(a: &ApproxSpec) -> Option<Json> {
             ("m", Json::num(*m as f64)),
             ("seed", Json::num(*seed as f64)),
         ])),
+        ApproxSpec::RandomFeatures { d, seed } => Some(Json::obj(vec![
+            ("type", Json::str("rff")),
+            ("d", Json::num(*d as f64)),
+            ("seed", Json::num(*seed as f64)),
+        ])),
     }
 }
 
@@ -261,7 +266,28 @@ pub fn approx_from_json(v: &Json, default_seed: u64) -> Result<ApproxSpec> {
             };
             Ok(ApproxSpec::Nystrom { m, seed })
         }
-        other => bail!("unknown approx type {other:?} (exact|nystrom)"),
+        "rff" => {
+            for key in map.keys() {
+                if !["type", "d", "seed"].contains(&key.as_str()) {
+                    bail!("approx: unknown key {key:?} (have: type, d, seed)");
+                }
+            }
+            let d = v
+                .get_usize("d")
+                .ok_or_else(|| anyhow!("approx: rff needs a positive integer 'd'"))?;
+            if d == 0 {
+                bail!("approx: rff needs d >= 1");
+            }
+            let seed = match v.get("seed") {
+                None => default_seed,
+                Some(_) => v
+                    .get_usize("seed")
+                    .ok_or_else(|| anyhow!("approx: seed must be a non-negative integer"))?
+                    as u64,
+            };
+            Ok(ApproxSpec::RandomFeatures { d, seed })
+        }
+        other => bail!("unknown approx type {other:?} (exact|nystrom|rff)"),
     }
 }
 
@@ -491,9 +517,9 @@ pub struct FitSpec {
     pub x: Matrix,
     pub y: Vec<f64>,
     pub kernel: KernelSpec,
-    /// Gram representation: exact (default, the bitwise oracle) or a
-    /// rank-m Nyström thin factor. Serialized as the kernel object's
-    /// `approx` block.
+    /// Gram representation: exact (default, the bitwise oracle), a
+    /// rank-m Nyström thin factor, or a D-dimensional random Fourier
+    /// feature basis. Serialized as the kernel object's `approx` block.
     pub approx: ApproxSpec,
     pub task: Task,
     /// KQR solver overrides; `None` → the executing engine's defaults.
@@ -641,6 +667,31 @@ impl FitSpec {
                 }
             }
         }
+        if let ApproxSpec::RandomFeatures { d, seed } = self.approx {
+            if d == 0 {
+                bail!("spec: rff needs d >= 1 random features");
+            }
+            if seed > SEED_MAX {
+                bail!("spec: rff seed must be <= 2^53 for exact JSON round-trip");
+            }
+            // Mirror the Nyström fold check: the basis rank is capped at
+            // the fold-training size, so a D above it buys nothing and
+            // usually signals a misconfigured budget — reject up front
+            // with the fold arithmetic spelled out instead of fitting a
+            // silently-smaller basis per fold.
+            if let Task::Cv { folds, .. } = &self.task {
+                if *folds >= 2 {
+                    let n = self.x.rows();
+                    let min_train = n - (n + *folds - 1) / *folds;
+                    if d > min_train {
+                        bail!(
+                            "spec: rff d={d} exceeds the smallest CV fold \
+                             training size {min_train} (n={n}, folds={folds})"
+                        );
+                    }
+                }
+            }
+        }
         if let Task::Cv { seed, .. } = &self.task {
             if *seed > SEED_MAX {
                 bail!("spec: cv seed must be <= 2^53 for exact JSON round-trip");
@@ -667,7 +718,11 @@ impl FitSpec {
             }
         }
         // Lowest version that represents the document (see SPEC_VERSION).
-        let version: u64 = if matches!(self.approx, ApproxSpec::Nystrom { .. }) { 2 } else { 1 };
+        let version: u64 = match self.approx {
+            ApproxSpec::RandomFeatures { .. } => 3,
+            ApproxSpec::Nystrom { .. } => 2,
+            ApproxSpec::Exact => 1,
+        };
         let mut pairs = vec![
             ("version", Json::num(version as f64)),
             ("kernel", kernel_json),
@@ -769,7 +824,7 @@ impl FitEngine {
         let kernel = spec.kernel.resolve(&spec.x);
         let approx = spec.approx;
         if approx != ApproxSpec::Exact && matches!(spec.backend.as_deref(), Some("xla")) {
-            bail!("the xla backend does not support low-rank (Nyström) bases; use native");
+            bail!("the xla backend does not support approximate (Nyström/RFF) bases; use native");
         }
         let opts = spec.opts.clone().unwrap_or_else(|| self.config.opts.clone());
         match &spec.task {
@@ -950,6 +1005,54 @@ mod tests {
         match &model {
             QuantileModel::Kqr(f) => {
                 assert!(f.lowrank.is_some(), "low-rank fit carries the compressed predictor")
+            }
+            other => panic!("expected Kqr model, got {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn rff_spec_roundtrips_versions_and_runs() {
+        let rf = ApproxSpec::RandomFeatures { d: 16, seed: 9 };
+        let spec = toy_spec(Task::Single { tau: 0.5, lambda: 0.05 }).with_approx(rf).with_seed(9);
+        // rff specs write v3 (older readers must reject, not fit exact)
+        assert_eq!(spec.to_json().get_usize("version"), Some(3));
+        let s1 = spec.to_json().to_string();
+        let back = FitSpec::parse(&s1).unwrap();
+        assert_eq!(back.approx, rf);
+        assert_eq!(back.to_json().to_string(), s1, "to_json∘from_json identity");
+        // approx seed defaults to the spec's master seed
+        let doc = r#"{"x":[[1],[2],[3]],"y":[1,2,3],"seed":88,
+            "kernel":{"type":"rbf","sigma":0.5,"approx":{"type":"rff","d":4}},
+            "task":{"type":"single","tau":0.5,"lambda":0.1}}"#
+            .replace('\n', " ");
+        let parsed = FitSpec::parse(&doc).unwrap();
+        assert_eq!(parsed.approx, ApproxSpec::RandomFeatures { d: 4, seed: 88 });
+        // unknown keys / d = 0 / CV folds too small for d are rejected
+        assert!(FitSpec::parse(
+            r#"{"x":[[1],[2]],"y":[1,2],
+                "kernel":{"approx":{"type":"rff","d":4,"dd":3}},
+                "task":{"type":"single","tau":0.5,"lambda":0.1}}"#
+        )
+        .is_err());
+        assert!(FitSpec::parse(
+            r#"{"x":[[1],[2]],"y":[1,2],
+                "kernel":{"approx":{"type":"rff","d":0}},
+                "task":{"type":"single","tau":0.5,"lambda":0.1}}"#
+        )
+        .is_err(), "d = 0 must be rejected");
+        assert!(FitSpec::parse(
+            r#"{"x":[[1],[2],[3],[4]],"y":[1,2,3,4],
+                "kernel":{"type":"rbf","sigma":0.5,"approx":{"type":"rff","d":3}},
+                "task":{"type":"cv","taus":[0.5],"lambdas":[0.1],"folds":2}}"#
+        )
+        .is_err(), "d above the smallest CV fold-training size must be rejected");
+        // and the spec executes on the random-feature basis end-to-end
+        let engine = FitEngine::new();
+        let model = engine.run(&spec).unwrap();
+        match &model {
+            QuantileModel::Kqr(f) => {
+                assert!(f.rff.is_some(), "rff fit carries the compressed predictor");
+                assert!(f.lowrank.is_none());
             }
             other => panic!("expected Kqr model, got {}", other.kind()),
         }

@@ -215,6 +215,9 @@ impl QuantileModel {
                 if let Some(lr) = &f.lowrank {
                     pairs.push(("lowrank_m", Json::num(lr.w.len() as f64)));
                 }
+                if let Some(rf) = &f.rff {
+                    pairs.push(("rff_d", Json::num(rf.map.d() as f64)));
+                }
                 Json::obj(pairs)
             }
             QuantileModel::Nckqr(f) => {
@@ -232,6 +235,9 @@ impl QuantileModel {
                 ];
                 if let Some(lr) = &f.lowrank {
                     pairs.push(("lowrank_m", Json::num(lr.landmarks.len() as f64)));
+                }
+                if let Some(rf) = &f.rff {
+                    pairs.push(("rff_d", Json::num(rf.map.d() as f64)));
                 }
                 Json::obj(pairs)
             }

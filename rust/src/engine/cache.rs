@@ -37,6 +37,11 @@ pub enum ApproxSpec {
     /// the landmark-sampling seed pinned so the factorization — and every
     /// fit on it — is reproducible from a spec document alone.
     Nystrom { m: usize, seed: u64 },
+    /// D-dimensional random Fourier feature factor (O(n·D²) setup
+    /// streamed in row blocks, O(n·D) memory, fits linear in n) with the
+    /// frequency/phase seed pinned — Φ is reproducible from `{d, seed}`
+    /// alone. RBF kernel only.
+    RandomFeatures { d: usize, seed: u64 },
 }
 
 /// Cached per-(dataset, kernel, approx) factorization: the Gram
@@ -199,6 +204,11 @@ pub fn fingerprint_approx(
             feed(m as u64);
             feed(seed);
         }
+        ApproxSpec::RandomFeatures { d, seed } => {
+            feed(0x5246_4654);
+            feed(d as u64);
+            feed(seed);
+        }
     }
     Fingerprint { n: x.rows(), p: x.cols(), fnv: h1.finish(), mix: h2.finish() }
 }
@@ -349,6 +359,19 @@ impl GramCache {
                             Err(e) => Err(format!("{e:#}")),
                         }
                     }
+                    ApproxSpec::RandomFeatures { d, seed } => {
+                        match crate::kernel::rff::rff(x, kernel, d, seed) {
+                            Ok(factor) => {
+                                let basis = factor.basis.clone();
+                                Ok(Arc::new(BasisEntry {
+                                    repr: GramRepr::RandomFeatures(Arc::new(factor)),
+                                    basis,
+                                    x: x_arc,
+                                }))
+                            }
+                            Err(e) => Err(format!("{e:#}")),
+                        }
+                    }
                 }
             })
             .clone();
@@ -430,23 +453,34 @@ mod tests {
         let ny = cache
             .get_or_compute_approx(&x, &y, &k, ApproxSpec::Nystrom { m: 8, seed: 3 })
             .unwrap();
+        let rf = cache
+            .get_or_compute_approx(&x, &y, &k, ApproxSpec::RandomFeatures { d: 16, seed: 5 })
+            .unwrap();
         assert!(!exact.repr.is_low_rank());
         assert!(ny.repr.is_low_rank());
-        assert_eq!(cache.len(), 2, "distinct keys, no eviction thrash");
-        assert_eq!(CacheMetrics::get(&cache.metrics.decompositions), 2);
+        assert!(rf.repr.rff().is_some());
+        assert_eq!(cache.len(), 3, "distinct keys, no eviction thrash");
+        assert_eq!(CacheMetrics::get(&cache.metrics.decompositions), 3);
         // repeat requests are pure hits on their respective entries
         let exact2 = cache.get_or_compute(&x, &y, &k).unwrap();
         let ny2 = cache
             .get_or_compute_approx(&x, &y, &k, ApproxSpec::Nystrom { m: 8, seed: 3 })
             .unwrap();
+        let rf2 = cache
+            .get_or_compute_approx(&x, &y, &k, ApproxSpec::RandomFeatures { d: 16, seed: 5 })
+            .unwrap();
         assert!(Arc::ptr_eq(&exact.basis, &exact2.basis));
         assert!(Arc::ptr_eq(&ny.basis, &ny2.basis));
-        assert_eq!(CacheMetrics::get(&cache.metrics.decompositions), 2);
-        // a different (m, seed) is a different factorization
+        assert!(Arc::ptr_eq(&rf.basis, &rf2.basis));
+        assert_eq!(CacheMetrics::get(&cache.metrics.decompositions), 3);
+        // a different (m, seed) / (d, seed) is a different factorization
         cache
             .get_or_compute_approx(&x, &y, &k, ApproxSpec::Nystrom { m: 8, seed: 4 })
             .unwrap();
-        assert_eq!(CacheMetrics::get(&cache.metrics.decompositions), 3);
+        cache
+            .get_or_compute_approx(&x, &y, &k, ApproxSpec::RandomFeatures { d: 16, seed: 6 })
+            .unwrap();
+        assert_eq!(CacheMetrics::get(&cache.metrics.decompositions), 5);
     }
 
     #[test]

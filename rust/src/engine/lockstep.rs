@@ -382,6 +382,7 @@ fn finish_cell(cell: &mut Cell, ctx: &Ctx<'_>, ws: &mut ApgdWorkspace) -> KqrFit
     );
     // Same compressed-predictor attachment as the sequential return path.
     let lowrank = ctx.solver.repr.low_rank().map(|f| f.coef(&cell.state.beta));
+    let rff = ctx.solver.repr.rff().map(|f| f.coef(&cell.state.beta));
     KqrFit::assemble(
         cell.tau,
         cell.lam,
@@ -394,6 +395,7 @@ fn finish_cell(cell: &mut Cell, ctx: &Ctx<'_>, ws: &mut ApgdWorkspace) -> KqrFit
         cell.total_expansions,
         best.s_hat,
         lowrank,
+        rff,
         ctx.solver.x.clone(),
         ctx.solver.kernel.clone(),
     )

@@ -20,8 +20,9 @@
 //!   bitwise parity oracle.
 //! - [`predict`]: the serving-side counterpart — [`PredictPlan`]s compile
 //!   a fitted model once (resolved kernel, `Arc`'d train-row/landmark
-//!   block, coefficients packed into one matrix) so every predict request
-//!   is one cross-Gram + one multi-RHS GEMM, and `predict_many` stacks
+//!   block or random-feature map, coefficients packed into one matrix) so
+//!   every predict request is one design build + one multi-RHS GEMM, and
+//!   `predict_many` stacks
 //!   concurrent requests for the coordinator's micro-batcher with
 //!   bitwise-identical per-request rows.
 //!
@@ -146,8 +147,9 @@ impl FitEngine {
     /// A solver on an explicit Gram representation: `ApproxSpec::Exact`
     /// is the dense cached path (bitwise-identical to
     /// [`FitEngine::solver`]); `ApproxSpec::Nystrom` serves the rank-m
-    /// thin factor from the same cache — exact and approximate entries
-    /// for one dataset coexist under distinct fingerprints.
+    /// thin factor and `ApproxSpec::RandomFeatures` the D-dimensional
+    /// random Fourier basis from the same cache — exact and approximate
+    /// entries for one dataset coexist under distinct fingerprints.
     pub fn solver_approx(
         &self,
         x: &Matrix,
@@ -261,8 +263,9 @@ impl FitEngine {
     }
 
     /// [`FitEngine::fit_grid`] with per-call overrides: `approx` selects
-    /// the Gram representation (`Exact` or a rank-m Nyström thin factor —
-    /// both the sequential and lockstep drivers run unchanged on either),
+    /// the Gram representation (`Exact`, a rank-m Nyström thin factor, or
+    /// a D-dimensional random-feature basis — the sequential and lockstep
+    /// drivers run unchanged on any of them),
     /// `lockstep` `Some(true)`/`Some(false)` forces the lockstep /
     /// sequential driver for this grid only (`None` defers to the engine
     /// configuration, which in turn defers to `FASTKQR_LOCKSTEP`), and

@@ -9,9 +9,11 @@
 //!
 //! - the resolved [`Kernel`] and the `Arc`'d **block** the cross-Gram is
 //!   built against (training rows for dense models, the Nyström landmark
-//!   set for low-rank ones — the plan is representation-agnostic);
+//!   set for low-rank ones), or — for random-feature fits — the `Arc`'d
+//!   [`RffMap`] the t×D feature matrix is built from (the plan is
+//!   representation-agnostic);
 //! - every per-fit coefficient vector packed into one k×d matrix, so a
-//!   request is **one** cross-Gram build plus **one** multi-RHS
+//!   request is **one** cross-Gram / feature build plus **one** multi-RHS
 //!   [`gemm_nt_into`](crate::linalg::gemm_nt_into) instead of k GEMVs.
 //!
 //! Fits that do not share a predictor basis (a hand-assembled
@@ -32,21 +34,32 @@
 //! fit-set batching already has.
 
 use crate::api::QuantileModel;
+use crate::kernel::rff::RffMap;
 use crate::kernel::Kernel;
 use crate::kqr::KqrFit;
 use crate::linalg::Matrix;
 use std::sync::Arc;
 
-/// One (kernel, block, packed coefficients) unit of a plan: everything
-/// needed to predict the rows of its fits with one cross-Gram + one GEMM.
+/// How a group turns query rows into the t×d design matrix its packed
+/// GEMM consumes.
+#[derive(Debug)]
+enum GroupBasis {
+    /// Cross-Gram against a d×p block: `Arc`-shared training rows
+    /// (dense) or the landmark set (low-rank).
+    Kernel { kernel: Kernel, block: Arc<Matrix> },
+    /// Random Fourier feature build Φ(xt) (t×D) from the `Arc`-shared
+    /// seed-pinned map — no kernel evaluations, no training rows.
+    Features(Arc<RffMap>),
+}
+
+/// One (basis, packed coefficients) unit of a plan: everything needed to
+/// predict the rows of its fits with one design build + one GEMM.
 #[derive(Debug)]
 pub struct PlanGroup {
-    kernel: Kernel,
-    /// The d×p matrix the cross-Gram is built against: `Arc`-shared
-    /// training rows (dense) or the landmark set (low-rank).
-    block: Arc<Matrix>,
+    basis: GroupBasis,
     /// k×d packed coefficient rows (α for dense fits, landmark weights w
-    /// for low-rank fits), one row per prediction level.
+    /// for low-rank fits, feature weights for random-feature fits), one
+    /// row per prediction level.
     coef: Matrix,
     /// Per-level intercepts.
     bs: Vec<f64>,
@@ -54,8 +67,19 @@ pub struct PlanGroup {
 
 impl PlanGroup {
     fn predict_into(&self, xt: &Matrix, out: &mut Vec<Vec<f64>>) {
-        let cg = self.kernel.cross_gram(xt, &self.block);
+        let cg = match &self.basis {
+            GroupBasis::Kernel { kernel, block } => kernel.cross_gram(xt, block),
+            GroupBasis::Features(map) => map.features(xt),
+        };
         out.extend(crate::kqr::predict_packed(&self.coef, &self.bs, &cg));
+    }
+
+    /// Columns of the design matrix a request builds for this group.
+    fn design_cols(&self) -> usize {
+        match &self.basis {
+            GroupBasis::Kernel { block, .. } => block.rows(),
+            GroupBasis::Features(map) => map.d(),
+        }
     }
 }
 
@@ -82,24 +106,37 @@ impl PredictPlan {
             QuantileModel::Set(s) => compile_kqr_groups(&s.fits),
             QuantileModel::Nckqr(f) => {
                 let bs: Vec<f64> = f.levels.iter().map(|lv| lv.b).collect();
-                let group = match &f.lowrank {
-                    Some(lr) => {
-                        let rows: Vec<&[f64]> = lr.w.iter().map(Vec::as_slice).collect();
-                        PlanGroup {
-                            kernel: f.kernel().clone(),
-                            block: lr.z.clone(),
-                            coef: pack_rows(&rows, lr.z.rows()),
-                            bs,
-                        }
+                let group = if let Some(rf) = &f.rff {
+                    let rows: Vec<&[f64]> = rf.w.iter().map(Vec::as_slice).collect();
+                    PlanGroup {
+                        basis: GroupBasis::Features(rf.map.clone()),
+                        coef: pack_rows(&rows, rf.map.d()),
+                        bs,
                     }
-                    None => {
-                        let rows: Vec<&[f64]> =
-                            f.levels.iter().map(|lv| lv.alpha.as_slice()).collect();
-                        PlanGroup {
-                            kernel: f.kernel().clone(),
-                            block: f.x_train_arc().clone(),
-                            coef: pack_rows(&rows, f.x_train().rows()),
-                            bs,
+                } else {
+                    match &f.lowrank {
+                        Some(lr) => {
+                            let rows: Vec<&[f64]> = lr.w.iter().map(Vec::as_slice).collect();
+                            PlanGroup {
+                                basis: GroupBasis::Kernel {
+                                    kernel: f.kernel().clone(),
+                                    block: lr.z.clone(),
+                                },
+                                coef: pack_rows(&rows, lr.z.rows()),
+                                bs,
+                            }
+                        }
+                        None => {
+                            let rows: Vec<&[f64]> =
+                                f.levels.iter().map(|lv| lv.alpha.as_slice()).collect();
+                            PlanGroup {
+                                basis: GroupBasis::Kernel {
+                                    kernel: f.kernel().clone(),
+                                    block: f.x_train_arc().clone(),
+                                },
+                                coef: pack_rows(&rows, f.x_train().rows()),
+                                bs,
+                            }
                         }
                     }
                 };
@@ -178,9 +215,10 @@ impl PredictPlan {
         self.groups.len()
     }
 
-    /// Total cross-Gram columns a request pays for (Σ group block rows).
+    /// Total design-matrix columns a request pays for (Σ group cross-Gram
+    /// block rows / random-feature dimensions).
     pub fn block_rows(&self) -> usize {
-        self.groups.iter().map(|g| g.block.rows()).sum()
+        self.groups.iter().map(PlanGroup::design_cols).sum()
     }
 
     /// Floats held by the plan's packed coefficients (the blocks are
@@ -209,6 +247,13 @@ fn compile_kqr_groups(fits: &[KqrFit]) -> Vec<PlanGroup> {
         if a.kernel() != b.kernel() {
             return false;
         }
+        // Random-feature fits group on the shared feature map — one
+        // Φ(xt) build per solver's worth of fits.
+        match (&a.rff, &b.rff) {
+            (Some(ra), Some(rb)) => return Arc::ptr_eq(&ra.map, &rb.map),
+            (None, None) => {}
+            _ => return false,
+        }
         match (&a.lowrank, &b.lowrank) {
             (None, None) => Arc::ptr_eq(a.x_train_arc(), b.x_train_arc()),
             (Some(la), Some(lb)) => Arc::ptr_eq(&la.z, &lb.z),
@@ -225,24 +270,38 @@ fn compile_kqr_groups(fits: &[KqrFit]) -> Vec<PlanGroup> {
         let run = &fits[i..j];
         let head = &run[0];
         let bs: Vec<f64> = run.iter().map(|f| f.b).collect();
-        let group = match &head.lowrank {
-            Some(lr) => {
-                let rows: Vec<&[f64]> =
-                    run.iter().map(|f| f.lowrank.as_ref().unwrap().w.as_slice()).collect();
-                PlanGroup {
-                    kernel: head.kernel().clone(),
-                    block: lr.z.clone(),
-                    coef: pack_rows(&rows, lr.z.rows()),
-                    bs,
-                }
+        let group = if let Some(rf) = &head.rff {
+            let rows: Vec<&[f64]> =
+                run.iter().map(|f| f.rff.as_ref().unwrap().w.as_slice()).collect();
+            PlanGroup {
+                basis: GroupBasis::Features(rf.map.clone()),
+                coef: pack_rows(&rows, rf.map.d()),
+                bs,
             }
-            None => {
-                let rows: Vec<&[f64]> = run.iter().map(|f| f.alpha.as_slice()).collect();
-                PlanGroup {
-                    kernel: head.kernel().clone(),
-                    block: head.x_train_arc().clone(),
-                    coef: pack_rows(&rows, head.x_train().rows()),
-                    bs,
+        } else {
+            match &head.lowrank {
+                Some(lr) => {
+                    let rows: Vec<&[f64]> =
+                        run.iter().map(|f| f.lowrank.as_ref().unwrap().w.as_slice()).collect();
+                    PlanGroup {
+                        basis: GroupBasis::Kernel {
+                            kernel: head.kernel().clone(),
+                            block: lr.z.clone(),
+                        },
+                        coef: pack_rows(&rows, lr.z.rows()),
+                        bs,
+                    }
+                }
+                None => {
+                    let rows: Vec<&[f64]> = run.iter().map(|f| f.alpha.as_slice()).collect();
+                    PlanGroup {
+                        basis: GroupBasis::Kernel {
+                            kernel: head.kernel().clone(),
+                            block: head.x_train_arc().clone(),
+                        },
+                        coef: pack_rows(&rows, head.x_train().rows()),
+                        bs,
+                    }
                 }
             }
         };
@@ -305,6 +364,38 @@ mod tests {
             assert_eq!(got, &plan.predict(part), "scatter must be bitwise");
         }
         assert!(plan.predict_many(&[]).is_empty());
+    }
+
+    #[test]
+    fn rff_plan_matches_per_fit_predict_bitwise() {
+        use crate::spectral::GramRepr;
+        let (x, y) = toy(40, 6);
+        let kernel = Kernel::Rbf { sigma: 0.5 };
+        let factor = crate::kernel::rff::rff(&x, &kernel, 24, 5).unwrap();
+        let solver = KqrSolver::with_repr(
+            &x,
+            &y,
+            kernel,
+            GramRepr::RandomFeatures(Arc::new(factor)),
+        );
+        let fits = solver.fit_path(0.5, &[0.1, 0.01]).unwrap();
+        let model = QuantileModel::Set(crate::api::ModelSet {
+            fits: fits.clone(),
+            shape: crate::api::SetShape::Path { tau: 0.5 },
+            cv: Vec::new(),
+            lockstep: None,
+        });
+        let plan = PredictPlan::compile(&model);
+        assert_eq!(plan.n_groups(), 1, "one shared map => one feature build");
+        assert_eq!(plan.block_rows(), 24, "request cost is D, independent of n");
+        let xt = {
+            let mut rng = Rng::new(13);
+            synth::sine_hetero(6, &mut rng).x
+        };
+        let rows = plan.predict(&xt);
+        for (i, f) in fits.iter().enumerate() {
+            assert_eq!(rows[i], f.predict(&xt), "fit {i}");
+        }
     }
 
     #[test]

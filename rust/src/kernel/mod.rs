@@ -8,6 +8,7 @@
 use crate::linalg::Matrix;
 
 pub mod nystrom;
+pub mod rff;
 
 /// Kernel function selector.
 #[derive(Clone, Debug, PartialEq)]

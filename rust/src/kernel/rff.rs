@@ -1,0 +1,388 @@
+//! Random Fourier features — the paper's other §5 integration target,
+//! implemented as the **linear-in-n** compute path.
+//!
+//! Rahimi & Recht (2007): for the shift-invariant RBF kernel
+//! K(x,x') = exp(−‖x−x'‖²/(2σ²)), draw D frequencies wⱼ ~ N(0, σ⁻²I)
+//! and phases bⱼ ~ U[0, 2π); the feature map
+//!
+//!   φ(x)ⱼ = √(2/D) · cos(wⱼ·x + bⱼ)
+//!
+//! satisfies E[φ(x)·φ(x')] = K(x,x'), so K̃ = ΦΦᵀ with Φ the explicit
+//! n×D feature matrix. Wang–Feng (arXiv 2408.13591) show this
+//! approximation attains optimal learning rates for kernel quantile
+//! regression — the theory behind ROADMAP item 1's "fit 10⁶ rows".
+//!
+//! The factorization mirrors `kernel::nystrom` so every consumer of
+//! [`crate::spectral::GramRepr`] picks it up unchanged:
+//!
+//!   C = ΦᵀΦ = V S Vᵀ (D×D), U = Φ V S^{-1/2} (n×r, orthonormal),
+//!   K̃ = ΦΦᵀ = U S Uᵀ
+//!
+//! with negligible directions of C dropped by the same relative
+//! threshold as Nyström. The fit then runs in the r ≤ min(n, D)
+//! dimensional primal. Crucially Φ is **streamed in row blocks** through
+//! the SIMD-dispatched `gemm_nt_into` — the full n×D matrix is never
+//! materialized during construction, peak extra memory is
+//! O(block·D + D²), and the only n-sized output is the thin basis U
+//! (n×r). No n×n object exists anywhere on this path.
+//!
+//! The factor carries the compressed-predictor coefficient map
+//! M = V S^{1/2} (D×r): for any spectral iterate β, w = M β satisfies
+//! Φ·w = UΛβ **exactly** (Φ V S^{1/2} β = U S β), so a fitted model
+//! predicts with one D-dimensional feature build per point and persists
+//! in O(D) — independent of n, unlike Nyström's landmark artifacts which
+//! still store m training rows.
+//!
+//! Determinism: the map is reproducible bit-for-bit from `{d, seed}`
+//! alone — one [`Rng`] (SplitMix64-seeded xoshiro256++) drawn strictly
+//! sequentially (all D×p frequencies row-major, then all D phases), and
+//! the block GEMM computes every element with the dispatched serial dot
+//! kernel at any worker count, so Φ is invariant across thread counts
+//! and `FASTKQR_SIMD` on/off.
+
+use super::Kernel;
+use crate::data::rng::Rng;
+use crate::linalg::{gemm_into, gemm_nt_into, gemv_t, Matrix, SymEigen};
+use crate::spectral::{RffFactor, SpectralBasis};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Rows of Φ materialized at a time during streaming builds. 1024×D
+/// doubles stay L2-resident for the D values that make sense (≤ 8192)
+/// while amortizing the GEMM call overhead.
+const ROW_BLOCK: usize = 1024;
+
+/// A seed-pinned random Fourier feature map for the RBF kernel: D
+/// frequencies (D×p, rows wⱼ ~ N(0, σ⁻²I)), D phases (U[0, 2π)), and
+/// the √(2/D) normalizer. Fully determined by `{d, seed}` given the
+/// kernel bandwidth and input dimension.
+#[derive(Clone, Debug)]
+pub struct RffMap {
+    /// Frequency matrix (D×p), row j = wⱼ.
+    pub freqs: Matrix,
+    /// Phase offsets bⱼ (length D).
+    pub phases: Vec<f64>,
+    /// Feature normalizer √(2/D).
+    pub scale: f64,
+    /// The seed the map was drawn from (artifact provenance).
+    pub seed: u64,
+}
+
+impl RffMap {
+    /// Draw the map for `kernel` on `p`-dimensional inputs. Errors on
+    /// `d = 0` or a non-RBF kernel (random Fourier features require a
+    /// shift-invariant kernel; only RBF is wired up).
+    pub fn new(kernel: &Kernel, p: usize, d: usize, seed: u64) -> Result<RffMap> {
+        if d == 0 {
+            bail!("rff: need d > 0 random features");
+        }
+        let sigma = match kernel {
+            Kernel::Rbf { sigma } => *sigma,
+            other => bail!("rff: random Fourier features require the RBF kernel, got {other:?}"),
+        };
+        if !(sigma > 0.0) {
+            bail!("rff: RBF bandwidth must be positive, got {sigma}");
+        }
+        // Strictly sequential draw order — the reproducibility contract:
+        // all D×p frequency components row-major, then all D phases.
+        let mut rng = Rng::new(seed);
+        let inv_sigma = 1.0 / sigma;
+        let freqs = Matrix::from_fn(d, p, |_, _| rng.normal() * inv_sigma);
+        let phases: Vec<f64> =
+            (0..d).map(|_| rng.uniform_range(0.0, 2.0 * std::f64::consts::PI)).collect();
+        let scale = (2.0 / d as f64).sqrt();
+        Ok(RffMap { freqs, phases, scale, seed })
+    }
+
+    /// Number of random features D.
+    pub fn d(&self) -> usize {
+        self.freqs.rows()
+    }
+
+    /// Input dimension p.
+    pub fn p(&self) -> usize {
+        self.freqs.cols()
+    }
+
+    /// f64s held by the map itself: D·p frequencies + D phases.
+    pub fn memory_floats(&self) -> usize {
+        self.freqs.rows() * self.freqs.cols() + self.phases.len()
+    }
+
+    /// Fill `phi` (t×D) with features of the `t` rows of `x_block`:
+    /// Φᵢⱼ = √(2/D)·cos(wⱼ·xᵢ + bⱼ). The inner product block runs
+    /// through `gemm_nt_into` (bitwise-invariant across `workers`), the
+    /// cos/scale pass is elementwise — so the result is identical at any
+    /// thread count and SIMD tier.
+    pub fn features_into(&self, x_block: &Matrix, phi: &mut Matrix, workers: usize) {
+        assert_eq!(x_block.cols(), self.freqs.cols(), "rff: input dimension mismatch");
+        assert_eq!(phi.rows(), x_block.rows(), "rff: phi rows mismatch");
+        assert_eq!(phi.cols(), self.freqs.rows(), "rff: phi cols mismatch");
+        gemm_nt_into(x_block, &self.freqs, phi, workers);
+        let d = self.d();
+        for i in 0..phi.rows() {
+            let row = phi.row_mut(i);
+            for j in 0..d {
+                row[j] = (row[j] + self.phases[j]).cos() * self.scale;
+            }
+        }
+    }
+
+    /// Feature matrix of all rows of `x` (t×D), worker count from the
+    /// global parallelism config. Used by predict paths where t is a
+    /// request batch, not the training set.
+    pub fn features(&self, x: &Matrix) -> Matrix {
+        let workers = crate::linalg::par::global().workers_for(x.rows().max(self.d()));
+        let mut phi = Matrix::zeros(x.rows(), self.d());
+        self.features_into(x, &mut phi, workers);
+        phi
+    }
+}
+
+/// Build the rank-≤D random-feature approximation of `kernel` on the
+/// rows of `x`, streaming Φ in [`ROW_BLOCK`]-row blocks. Returns the
+/// thin factor; neither the dense n×n K̃ nor the full n×D Φ is ever
+/// formed.
+pub fn rff(x: &Matrix, kernel: &Kernel, d: usize, seed: u64) -> Result<RffFactor> {
+    let n = x.rows();
+    if n == 0 {
+        bail!("rff: empty input");
+    }
+    let map = RffMap::new(kernel, x.cols(), d, seed)?;
+
+    // ---- pass 1: C = ΦᵀΦ (D×D), accumulated block-wise ----
+    let workers = crate::linalg::par::global().workers_for(n.max(d));
+    let mut c = Matrix::zeros(d, d);
+    let mut ctmp = Matrix::zeros(d, d);
+    let mut phi = Matrix::zeros(ROW_BLOCK.min(n), d);
+    let mut lo = 0usize;
+    while lo < n {
+        let t = ROW_BLOCK.min(n - lo);
+        let xb = Matrix::from_fn(t, x.cols(), |i, j| x[(lo + i, j)]);
+        if phi.rows() != t {
+            phi = Matrix::zeros(t, d);
+        }
+        map.features_into(&xb, &mut phi, workers);
+        // Φᵦᵀ·Φᵦ via the NT kernel on the transposed block (each element
+        // one serial dot — deterministic at any worker count).
+        let phit = phi.transpose();
+        gemm_nt_into(&phit, &phit, &mut ctmp, workers);
+        for (acc, inc) in c.as_mut_slice().iter_mut().zip(ctmp.as_slice()) {
+            *acc += inc;
+        }
+        lo += t;
+    }
+
+    // ---- eigendecomposition of the D×D covariance; drop null space ----
+    let eig = SymEigen::new(&c);
+    let smax = eig.values.last().copied().unwrap_or(0.0).max(1e-300);
+    let keep: Vec<usize> = (0..d).filter(|&j| eig.values[j] > 1e-12 * smax).collect();
+    let rank = keep.len();
+    if rank == 0 {
+        bail!("rff: approximate kernel matrix is numerically zero");
+    }
+
+    // Kept components, ASCENDING eigenvalue order to match the SymEigen /
+    // SpectralBasis convention (keep is ascending over eig.values).
+    //   U        = Φ · (V S^{-1/2})   (n × r, orthonormal columns)
+    //   coef_map = V S^{1/2}          (D × r; w = coef_map·β ⇒ Φw = UΛβ)
+    let mut v_shalf = Matrix::zeros(d, rank);
+    let mut coef_map = Matrix::zeros(d, rank);
+    let mut lambda = vec![0.0; rank];
+    for (slot, &j) in keep.iter().enumerate() {
+        let s = eig.values[j];
+        let sq = s.sqrt();
+        lambda[slot] = s;
+        for k in 0..d {
+            v_shalf[(k, slot)] = eig.vectors[(k, j)] / sq;
+            coef_map[(k, slot)] = eig.vectors[(k, j)] * sq;
+        }
+    }
+
+    // ---- pass 2: U = Φ · v_shalf, streamed in the same blocks ----
+    let mut u = Matrix::zeros(n, rank);
+    let mut ub = Matrix::zeros(ROW_BLOCK.min(n), rank);
+    let mut lo = 0usize;
+    while lo < n {
+        let t = ROW_BLOCK.min(n - lo);
+        let xb = Matrix::from_fn(t, x.cols(), |i, j| x[(lo + i, j)]);
+        if phi.rows() != t {
+            phi = Matrix::zeros(t, d);
+        }
+        if ub.rows() != t {
+            ub = Matrix::zeros(t, rank);
+        }
+        map.features_into(&xb, &mut phi, workers);
+        gemm_into(&phi, &v_shalf, &mut ub);
+        for i in 0..t {
+            u.row_mut(lo + i).copy_from_slice(ub.row(i));
+        }
+        lo += t;
+    }
+
+    let ones = vec![1.0; n];
+    let mut u1 = vec![0.0; rank];
+    gemv_t(&u, &ones, &mut u1);
+    let basis = SpectralBasis { n, u, lambda, u1 };
+    Ok(RffFactor { basis: Arc::new(basis), map: Arc::new(map), coef_map })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kernel::median_heuristic_sigma;
+    use crate::kqr::KqrSolver;
+    use crate::spectral::GramRepr;
+
+    fn fixture(n: usize, seed: u64) -> (Matrix, Vec<f64>, Kernel) {
+        let mut rng = Rng::new(seed);
+        let d = synth::sine_hetero(n, &mut rng);
+        let sigma = median_heuristic_sigma(&d.x);
+        (d.x, d.y, Kernel::Rbf { sigma })
+    }
+
+    #[test]
+    fn large_d_approximates_gram() {
+        // Monte-Carlo error of each entry is O(1/√D); at D = 4096 the
+        // worst entry over a 30×30 Gram sits well inside 0.1.
+        let (x, _, kernel) = fixture(30, 1);
+        let f = rff(&x, &kernel, 4096, 2).unwrap();
+        let repr = GramRepr::RandomFeatures(Arc::new(f));
+        let exact = kernel.gram(&x);
+        let mut max_diff = 0.0f64;
+        for i in 0..30 {
+            for j in 0..30 {
+                max_diff = max_diff.max((repr.entry(i, j) - exact[(i, j)]).abs());
+            }
+        }
+        assert!(max_diff < 0.1, "D=4096 RFF Gram error too large: {max_diff}");
+    }
+
+    #[test]
+    fn factor_is_thin_with_positive_spectrum() {
+        let (x, _, kernel) = fixture(40, 3);
+        let f = rff(&x, &kernel, 15, 4).unwrap();
+        let r = f.basis.dim();
+        assert!(r <= 15 && r > 0);
+        assert_eq!(f.basis.u.rows(), 40);
+        assert_eq!(f.basis.u.cols(), r, "no zero-padding: U is thin");
+        assert_eq!(f.map.d(), 15);
+        assert_eq!(f.coef_map.rows(), 15);
+        assert_eq!(f.coef_map.cols(), r);
+        assert!(f.basis.lambda.iter().all(|&l| l > 0.0));
+        assert!(f.basis.lambda.windows(2).all(|w| w[0] <= w[1]), "ascending");
+    }
+
+    #[test]
+    fn orthonormal_retained_columns() {
+        let (x, _, kernel) = fixture(25, 5);
+        let f = rff(&x, &kernel, 10, 6).unwrap();
+        let n = 25;
+        let r = f.basis.dim();
+        for a in 0..r {
+            for b in 0..r {
+                let mut s = 0.0;
+                for i in 0..n {
+                    s += f.basis.u[(i, a)] * f.basis.u[(i, b)];
+                }
+                let expect = if a == b { 1.0 } else { 0.0 };
+                assert!((s - expect).abs() < 1e-9, "UᵀU[{a},{b}]={s}");
+            }
+        }
+    }
+
+    /// The compressed-predictor identity: Φ·(coef_map·β) = UΛβ for any
+    /// spectral coordinates β — the contract the O(D) artifacts rest on.
+    #[test]
+    fn coefficient_map_reproduces_fitted_values() {
+        let (x, _, kernel) = fixture(35, 7);
+        let f = rff(&x, &kernel, 12, 8).unwrap();
+        let r = f.basis.dim();
+        let mut rng = Rng::new(9);
+        let beta: Vec<f64> = (0..r).map(|_| rng.normal()).collect();
+        let coef = f.coef(&beta);
+        assert_eq!(coef.w.len(), 12);
+        // f_rf = Φ w
+        let phi = f.map.features(&x);
+        let mut f_rf = vec![0.0; 35];
+        crate::linalg::gemv(&phi, &coef.w, &mut f_rf);
+        // f_spec = UΛβ
+        let mut scratch = vec![0.0; r];
+        let mut f_spec = vec![0.0; 35];
+        f.basis.fitted(0.0, &beta, &mut scratch, &mut f_spec);
+        for i in 0..35 {
+            assert!(
+                (f_rf[i] - f_spec[i]).abs() < 1e-8,
+                "i={i}: rff {} vs spectral {}",
+                f_rf[i],
+                f_spec[i]
+            );
+        }
+    }
+
+    #[test]
+    fn kqr_on_rff_basis_close_to_exact() {
+        // End-to-end: solve KQR on K̃ = ΦΦᵀ with the unchanged finite
+        // smoothing machinery; the objective approaches the exact-kernel
+        // one as D grows.
+        let (x, y, kernel) = fixture(60, 7);
+        let exact = KqrSolver::new(&x, &y, kernel.clone()).unwrap().fit(0.5, 1e-2).unwrap();
+        let f = rff(&x, &kernel, 1024, 11).unwrap();
+        let solver =
+            KqrSolver::with_repr(&x, &y, kernel.clone(), GramRepr::RandomFeatures(Arc::new(f)));
+        let fit = solver.fit(0.5, 1e-2).unwrap();
+        let gap = (fit.objective - exact.objective).abs();
+        assert!(gap < 0.05 * (1.0 + exact.objective), "D=1024 objective gap {gap}");
+        assert!(fit.rff.is_some(), "RFF fit carries the compressed predictor");
+        assert!(fit.lowrank.is_none());
+    }
+
+    #[test]
+    fn map_is_bitwise_reproducible_from_seed() {
+        let kernel = Kernel::Rbf { sigma: 0.7 };
+        let a = RffMap::new(&kernel, 3, 17, 42).unwrap();
+        let b = RffMap::new(&kernel, 3, 17, 42).unwrap();
+        assert_eq!(a.freqs.as_slice(), b.freqs.as_slice());
+        assert_eq!(a.phases, b.phases);
+        let c = RffMap::new(&kernel, 3, 17, 43).unwrap();
+        assert_ne!(a.freqs.as_slice(), c.freqs.as_slice(), "seed must matter");
+        // features are worker-count invariant, bit for bit
+        let mut rng = Rng::new(5);
+        let x = Matrix::from_fn(33, 3, |_, _| rng.normal());
+        let mut phi1 = Matrix::zeros(33, 17);
+        let mut phi4 = Matrix::zeros(33, 17);
+        a.features_into(&x, &mut phi1, 1);
+        a.features_into(&x, &mut phi4, 4);
+        assert_eq!(phi1.as_slice(), phi4.as_slice(), "workers must not change bits");
+    }
+
+    #[test]
+    fn streamed_factor_matches_single_block_build() {
+        // n > ROW_BLOCK exercises the multi-block accumulation; the
+        // factor must not depend on how Φ was chunked. Compare U S Uᵀ
+        // entries against a direct whole-Φ computation.
+        let (x, _, kernel) = fixture(40, 12);
+        let f = rff(&x, &kernel, 8, 13).unwrap();
+        let phi = f.map.features(&x);
+        let repr = GramRepr::RandomFeatures(Arc::new(f));
+        for i in [0usize, 7, 39] {
+            for j in [0usize, 11, 39] {
+                let direct: f64 = phi.row(i).iter().zip(phi.row(j)).map(|(a, b)| a * b).sum();
+                assert!(
+                    (repr.entry(i, j) - direct).abs() < 1e-9,
+                    "K̃[{i},{j}]: {} vs {direct}",
+                    repr.entry(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let (x, _, kernel) = fixture(10, 9);
+        assert!(rff(&x, &kernel, 0, 1).is_err(), "d = 0");
+        assert!(rff(&x, &Kernel::Linear { c: 0.0 }, 8, 1).is_err(), "non-RBF");
+        assert!(Matrix::zeros(0, 2).rows() == 0 && rff(&Matrix::zeros(0, 2), &kernel, 8, 1).is_err());
+    }
+}

@@ -23,7 +23,7 @@ pub mod kkt;
 use crate::backend::{Backend, NativeBackend};
 use crate::kernel::Kernel;
 use crate::linalg::{amax, Matrix};
-use crate::spectral::{GramRepr, LowRankCoef, SpectralBasis, SpectralPlan};
+use crate::spectral::{GramRepr, LowRankCoef, RffCoef, SpectralBasis, SpectralPlan};
 use anyhow::{bail, Result};
 use apgd::{ApgdState, ApgdWorkspace};
 pub use kkt::KktReport;
@@ -116,6 +116,12 @@ pub struct KqrFit {
     /// O(m·p) per point — and artifacts persist it instead of
     /// (x_train, alpha), which is what makes low-rank artifacts O(m).
     pub lowrank: Option<LowRankCoef>,
+    /// The compressed random-feature predictor (shared feature map +
+    /// D-dim weights), present iff the fit was produced on a
+    /// [`GramRepr::RandomFeatures`] basis. When present, `predict` builds
+    /// φ(x) and takes one D-dim dot per point; artifacts persist
+    /// (frequencies, phases, w) — O(D), independent of n.
+    pub rff: Option<RffCoef>,
     /// Training inputs, `Arc`-shared with the solver (and with every
     /// other fit from the same solver), so a 50-λ path does not copy the
     /// design matrix 50 times. Empty (0×p) for models reloaded from a
@@ -131,14 +137,18 @@ impl KqrFit {
     /// Predict the τ-th conditional quantile at the rows of `xt`.
     pub fn predict(&self, xt: &Matrix) -> Vec<f64> {
         let mut out = vec![0.0; xt.rows()];
-        match &self.lowrank {
-            Some(lr) => {
-                let cg = self.kernel.cross_gram(xt, &lr.z);
-                crate::linalg::gemv(&cg, &lr.w, &mut out);
-            }
-            None => {
-                let cg = self.kernel.cross_gram(xt, &self.x_train);
-                crate::linalg::gemv(&cg, &self.alpha, &mut out);
+        if let Some(rf) = &self.rff {
+            rf.predict_into(xt, &mut out);
+        } else {
+            match &self.lowrank {
+                Some(lr) => {
+                    let cg = self.kernel.cross_gram(xt, &lr.z);
+                    crate::linalg::gemv(&cg, &lr.w, &mut out);
+                }
+                None => {
+                    let cg = self.kernel.cross_gram(xt, &self.x_train);
+                    crate::linalg::gemv(&cg, &self.alpha, &mut out);
+                }
             }
         }
         for o in out.iter_mut() {
@@ -185,6 +195,7 @@ impl KqrFit {
         expansions: usize,
         singular_set: Vec<usize>,
         lowrank: Option<LowRankCoef>,
+        rff: Option<RffCoef>,
         x_train: Arc<Matrix>,
         kernel: Kernel,
     ) -> KqrFit {
@@ -201,6 +212,7 @@ impl KqrFit {
             expansions,
             singular_set,
             lowrank,
+            rff,
             x_train,
             n_train,
             kernel,
@@ -238,6 +250,45 @@ impl KqrFit {
             expansions,
             singular_set,
             lowrank: Some(lowrank),
+            rff: None,
+            x_train: Arc::new(Matrix::zeros(0, p)),
+            n_train,
+            kernel,
+        }
+    }
+
+    /// Assemble a fit from a compressed random-feature artifact: no
+    /// training inputs, no n-dimensional α — prediction goes through the
+    /// [`RffCoef`] (feature map + D-dim weights).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn assemble_compressed_rff(
+        tau: f64,
+        lam: f64,
+        b: f64,
+        objective: f64,
+        kkt: KktReport,
+        gamma_final: f64,
+        apgd_iters: usize,
+        expansions: usize,
+        singular_set: Vec<usize>,
+        n_train: usize,
+        rff: RffCoef,
+        kernel: Kernel,
+    ) -> KqrFit {
+        let p = rff.map.p();
+        KqrFit {
+            tau,
+            lam,
+            b,
+            alpha: Vec::new(),
+            objective,
+            kkt,
+            gamma_final,
+            apgd_iters,
+            expansions,
+            singular_set,
+            lowrank: None,
+            rff: Some(rff),
             x_train: Arc::new(Matrix::zeros(0, p)),
             n_train,
             kernel,
@@ -495,9 +546,11 @@ impl KqrSolver {
             &beta,
             &mut ws,
         );
-        // On a low-rank basis, compress the solution into the O(m)
-        // landmark predictor (w = map·β) alongside α.
+        // On a factored basis, compress the solution into the O(m)
+        // landmark predictor (Nyström: w = map·β) or the O(D)
+        // feature-space predictor (RFF: w = coef_map·β) alongside α.
         let lowrank = self.repr.low_rank().map(|f| f.coef(&beta));
+        let rff = self.repr.rff().map(|f| f.coef(&beta));
         Ok(KqrFit {
             tau,
             lam,
@@ -510,6 +563,7 @@ impl KqrSolver {
             expansions: total_expansions,
             singular_set: singular,
             lowrank,
+            rff,
             x_train: self.x.clone(),
             n_train: self.x.rows(),
             kernel: self.kernel.clone(),

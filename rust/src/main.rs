@@ -6,7 +6,8 @@
 //!
 //! Subcommands:
 //!   fit        fit one KQR model on a named workload (--save <file>,
-//!              --nystrom <m> for the low-rank Gram representation)
+//!              --nystrom <m> for the low-rank Gram representation,
+//!              --rff <D> for the random-feature representation)
 //!   path       warm-started λ path at one τ
 //!   grid       full τ×λ grid on one cached basis (--lockstep/--no-lockstep)
 //!   cv         k-fold cross-validated path (+ refit at the best λ)
@@ -28,8 +29,13 @@
 //! `--nystrom <m>` switches every fitting subcommand to the rank-m
 //! low-rank (Nyström) Gram representation — no n×n matrix, O(n·m)
 //! memory — with landmark sampling seeded by `--seed` (default 2024) so
-//! runs are reproducible. Statistical flags (σ, τ, λ, folds, …) are
-//! parsed strictly: a malformed value is an error, never a silent
+//! runs are reproducible. `--rff <D>` instead selects the D-dimensional
+//! random Fourier feature representation (RBF kernels only): the n×D
+//! feature matrix is built streaming in row blocks, the n×n Gram is
+//! never formed, and the frequency draw is pinned to `--seed` so the
+//! same {D, seed} always yields bitwise-identical features. The two
+//! flags are mutually exclusive. Statistical flags (σ, τ, λ, folds, …)
+//! are parsed strictly: a malformed value is an error, never a silent
 //! default.
 
 use anyhow::{bail, Result};
@@ -135,14 +141,19 @@ fn kernel_from_args(args: &Args) -> Result<KernelSpec> {
 
 /// The shared spec builder: dataset + kernel + approx + backend hint.
 /// Every fitting subcommand (fit/path/grid/nckqr/cv) attaches its task to
-/// this. `--nystrom <m>` selects the rank-m low-rank representation,
-/// seeded by `--seed` (the spec's master seed, default 2024).
+/// this. `--nystrom <m>` selects the rank-m low-rank representation and
+/// `--rff <D>` the D-dimensional random-feature representation (mutually
+/// exclusive), both seeded by `--seed` (the spec's master seed, default
+/// 2024).
 fn spec_from_args(args: &Args, task: fastkqr::api::Task) -> Result<FitSpec> {
     let data = dataset_from_args(args)?;
     let kernel = kernel_from_args(args)?;
     let seed = args.try_usize("seed", 2024)? as u64;
     let name = data.name.clone();
     let mut spec = FitSpec::new(data.x, data.y, kernel, task).with_seed(seed);
+    if args.get("nystrom").is_some() && args.get("rff").is_some() {
+        bail!("--nystrom and --rff select different Gram representations; pick one");
+    }
     if let Some(mstr) = args.get("nystrom") {
         let m: usize = mstr
             .parse()
@@ -152,14 +163,29 @@ fn spec_from_args(args: &Args, task: fastkqr::api::Task) -> Result<FitSpec> {
         }
         spec = spec.with_approx(ApproxSpec::Nystrom { m, seed });
     }
+    if let Some(dstr) = args.get("rff") {
+        let d: usize = dstr
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--rff: expected a positive integer, got {dstr:?}"))?;
+        if d == 0 {
+            bail!("--rff must be >= 1");
+        }
+        spec = spec.with_approx(ApproxSpec::RandomFeatures { d, seed });
+    }
     match args.get_str("backend", "native") {
         "native" => {}
         other @ "xla" => spec = spec.with_backend(other),
         other => bail!("unknown --backend {other:?} (native|xla)"),
     }
     println!("dataset        {name}  (n={}, p={})", spec.x.rows(), spec.x.cols());
-    if let ApproxSpec::Nystrom { m, seed } = spec.approx {
-        println!("gram repr      nystrom (m={m}, seed={seed}; O(n·m) memory)");
+    match spec.approx {
+        ApproxSpec::Nystrom { m, seed } => {
+            println!("gram repr      nystrom (m={m}, seed={seed}; O(n·m) memory)");
+        }
+        ApproxSpec::RandomFeatures { d, seed } => {
+            println!("gram repr      rff (d={d}, seed={seed}; streaming n×D build, no n×n Gram)");
+        }
+        ApproxSpec::Exact => {}
     }
     Ok(spec)
 }
@@ -354,6 +380,16 @@ fn cmd_predict(args: &Args) -> Result<()> {
         model.n_levels(),
         model.n_train()
     );
+    // v3 (random-feature) artifacts carry a D-dimensional basis instead
+    // of train rows; surface D so the O(D) footprint is visible.
+    let rff_d = match &model {
+        QuantileModel::Kqr(f) => f.rff.as_ref().map(|r| r.map.d()),
+        QuantileModel::Set(s) => s.fits.first().and_then(|f| f.rff.as_ref()).map(|r| r.map.d()),
+        QuantileModel::Nckqr(f) => f.rff.as_ref().map(|r| r.map.d()),
+    };
+    if let Some(d) = rff_d {
+        println!("gram repr      rff (d={d}; artifact independent of n_train)");
+    }
     println!(
         "plan           {} group(s), {} coefficient rows x {} block rows",
         plan.n_groups(),

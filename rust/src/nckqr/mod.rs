@@ -93,6 +93,18 @@ pub struct NcLowRank {
     pub w: Vec<Vec<f64>>,
 }
 
+/// Compressed random-feature predictor for a multi-level fit: one D-dim
+/// feature-space weight vector per level over the shared feature map
+/// (see [`crate::spectral::RffCoef`] for the single-level analogue).
+#[derive(Clone, Debug)]
+pub struct NcRff {
+    /// The feature map (frequencies + phases), `Arc`-shared with the
+    /// solver's factor.
+    pub map: Arc<crate::kernel::rff::RffMap>,
+    /// Per-level feature weights (aligned with `NckqrFit::levels`).
+    pub w: Vec<Vec<f64>>,
+}
+
 /// A fitted NCKQR model.
 #[derive(Clone, Debug)]
 pub struct NckqrFit {
@@ -114,6 +126,11 @@ pub struct NckqrFit {
     /// per point per level) and artifacts persist it instead of
     /// (x_train, α).
     pub lowrank: Option<NcLowRank>,
+    /// Compressed random-feature predictor, present iff the fit was
+    /// produced on an RFF basis; `predict` builds one feature matrix for
+    /// the whole level set and artifacts persist (frequencies, phases,
+    /// per-level w) — O(T·D), independent of n.
+    pub rff: Option<NcRff>,
     /// Training inputs, `Arc`-shared with the solver (and with every fit
     /// from the same solver), like [`crate::kqr::KqrFit`]. Empty (0×p)
     /// for models reloaded from a compressed low-rank artifact.
@@ -132,6 +149,15 @@ impl NckqrFit {
     /// never per-row kernel evaluations — on both the dense and low-rank
     /// representations.
     pub fn predict(&self, xt: &Matrix) -> Vec<Vec<f64>> {
+        if let Some(rf) = &self.rff {
+            // One feature build for the whole level set, then the same
+            // multi-RHS GEMM as the kernel paths (Φ plays the cross-Gram
+            // role).
+            let phi = rf.map.features(xt);
+            let coefs: Vec<&[f64]> = rf.w.iter().map(Vec::as_slice).collect();
+            let bs: Vec<f64> = self.levels.iter().map(|lv| lv.b).collect();
+            return predict_rows(&coefs, &bs, &phi);
+        }
         match &self.lowrank {
             Some(lr) => {
                 let cg = self.kernel.cross_gram(xt, &lr.z);
@@ -214,6 +240,7 @@ impl NckqrFit {
             gamma_final,
             train_crossings,
             lowrank: None,
+            rff: None,
             x_train,
             n_train,
             kernel,
@@ -250,6 +277,44 @@ impl NckqrFit {
             gamma_final,
             train_crossings,
             lowrank: Some(lowrank),
+            rff: None,
+            x_train: Arc::new(Matrix::zeros(0, p)),
+            n_train,
+            kernel,
+        }
+    }
+
+    /// Assemble a fit from a compressed random-feature artifact: no
+    /// training inputs, no n-dimensional α per level — prediction goes
+    /// through the [`NcRff`] feature-space weights.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn assemble_compressed_rff(
+        taus: Vec<f64>,
+        lam1: f64,
+        lam2: f64,
+        levels: Vec<LevelCoef>,
+        objective: f64,
+        kkt: KktReport,
+        mm_iters: usize,
+        gamma_final: f64,
+        train_crossings: usize,
+        n_train: usize,
+        rff: NcRff,
+        kernel: Kernel,
+    ) -> NckqrFit {
+        let p = rff.map.p();
+        NckqrFit {
+            taus,
+            lam1,
+            lam2,
+            levels,
+            objective,
+            kkt,
+            mm_iters,
+            gamma_final,
+            train_crossings,
+            lowrank: None,
+            rff: Some(rff),
             x_train: Arc::new(Matrix::zeros(0, p)),
             n_train,
             kernel,
@@ -534,11 +599,16 @@ impl NckqrSolver {
         let fs = self.fitted_levels(&best_state, &mut ws);
         let objective = self.exact_objective(lam1, lam2, &best_state, &fs);
         let train_crossings = count_crossings_in(&fs, 1e-9);
-        // On a low-rank basis, compress every level into the O(m)
-        // landmark predictor (w_t = map·β_t) alongside α.
+        // On a factored basis, compress every level into the O(m)
+        // landmark predictor (Nyström: w_t = map·β_t) or the O(D)
+        // feature-space predictor (RFF: w_t = coef_map·β_t) alongside α.
         let lowrank = self.repr.low_rank().map(|f| NcLowRank {
             z: f.z.clone(),
             landmarks: f.landmarks.clone(),
+            w: (0..t_lv).map(|t| f.coef(&best_state[t].beta).w).collect(),
+        });
+        let rff = self.repr.rff().map(|f| NcRff {
+            map: f.map.clone(),
             w: (0..t_lv).map(|t| f.coef(&best_state[t].beta).w).collect(),
         });
         Ok(NckqrFit {
@@ -552,6 +622,7 @@ impl NckqrSolver {
             gamma_final,
             train_crossings,
             lowrank,
+            rff,
             x_train: self.x.clone(),
             n_train: self.x.rows(),
             kernel: self.kernel.clone(),

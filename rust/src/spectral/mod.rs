@@ -29,7 +29,7 @@
 
 pub mod repr;
 
-pub use repr::{GramRepr, LowRankCoef, LowRankFactor};
+pub use repr::{GramRepr, LowRankCoef, LowRankFactor, RffCoef, RffFactor};
 
 use crate::linalg::{gemm_nn_into, gemm_nt_into, gemv, gemv_t, Matrix, SymEigen};
 use anyhow::{bail, Result};

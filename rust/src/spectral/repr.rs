@@ -1,4 +1,4 @@
-//! First-class Gram representations: dense n×n vs low-rank thin factor.
+//! First-class Gram representations: dense n×n vs low-rank thin factors.
 //!
 //! Everything downstream of the kernel — the solvers, the engine cache,
 //! the lockstep grid driver, the artifacts — touches the Gram matrix
@@ -14,11 +14,18 @@
 //!   landmark inputs Z (m×p) and the coefficient map `map` (m×r) with
 //!   w = map·β such that f(x) = b + Σⱼ wⱼ k(x, zⱼ) reproduces the
 //!   in-RKHS fitted values k̃(x, X)α exactly.
+//! - [`GramRepr::RandomFeatures`]: a random Fourier feature factor
+//!   K̃ = ΦΦᵀ = UΛUᵀ (see `kernel::rff`) with the same thin-basis
+//!   invariants; its compressed predictor is the D-dimensional
+//!   feature-space weight w = coef_map·β with f(x) = b + φ(x)·w — O(D)
+//!   per prediction and per artifact, fully **independent of n**.
 //!
 //! This is the abstraction that lifts the n ≫ 10⁴ cap: O(n·m) memory and
-//! O(n·m² + m³) setup instead of O(n²) / O(n³) (see `kernel::nystrom`).
+//! O(n·m² + m³) setup (Nyström) or O(n·D² ) setup with linear-in-n fits
+//! (random features) instead of O(n²) / O(n³).
 
 use super::SpectralBasis;
+use crate::kernel::rff::RffMap;
 use crate::linalg::Matrix;
 use std::sync::Arc;
 
@@ -61,6 +68,50 @@ pub struct LowRankCoef {
     pub w: Vec<f64>,
 }
 
+/// Random Fourier feature factorization K̃ = ΦΦᵀ = UΛUᵀ of an (implicit)
+/// RBF kernel matrix, produced by [`crate::kernel::rff::rff`].
+#[derive(Clone, Debug)]
+pub struct RffFactor {
+    /// Thin spectral basis (n×r, r ≤ min(n, D)) with the same invariants
+    /// as the Nyström factor's.
+    pub basis: Arc<SpectralBasis>,
+    /// The seed-pinned feature map (frequencies + phases), `Arc`-shared
+    /// into every fit's compressed predictor.
+    pub map: Arc<RffMap>,
+    /// Coefficient map (D×r): w = coef_map·β turns spectral coordinates
+    /// into D-dimensional feature weights with Φ·w = UΛβ exactly.
+    pub coef_map: Matrix,
+}
+
+impl RffFactor {
+    /// Compress spectral coordinates β into the D-dimensional
+    /// feature-space predictor w = coef_map·β (see [`RffCoef`]).
+    pub fn coef(&self, beta: &[f64]) -> RffCoef {
+        let mut w = vec![0.0; self.coef_map.rows()];
+        crate::linalg::gemv(&self.coef_map, beta, &mut w);
+        RffCoef { map: self.map.clone(), w }
+    }
+}
+
+/// The compressed random-feature predictor of one fit:
+/// f(x) = b + φ(x)·w. O(D·p) per prediction and O(D) artifact size —
+/// independent of both n and the landmark count.
+#[derive(Clone, Debug)]
+pub struct RffCoef {
+    /// The feature map, `Arc`-shared across every fit of a solver.
+    pub map: Arc<RffMap>,
+    /// Feature-space weights (length D).
+    pub w: Vec<f64>,
+}
+
+impl RffCoef {
+    /// Predict (without intercept) at the rows of `xt`: Φ(xt)·w.
+    pub fn predict_into(&self, xt: &Matrix, out: &mut [f64]) {
+        let phi = self.map.features(xt);
+        crate::linalg::gemv(&phi, &self.w, out);
+    }
+}
+
 /// How a solver sees its kernel matrix (see module docs).
 #[derive(Clone, Debug)]
 pub enum GramRepr {
@@ -68,6 +119,9 @@ pub enum GramRepr {
     Dense { gram: Arc<Matrix>, basis: Arc<SpectralBasis> },
     /// Nyström: rank-r thin factor, no n×n anywhere.
     LowRank(Arc<LowRankFactor>),
+    /// Random Fourier features: rank-r thin factor of ΦΦᵀ, no n×n and
+    /// fit cost linear in n.
+    RandomFeatures(Arc<RffFactor>),
 }
 
 impl GramRepr {
@@ -76,11 +130,12 @@ impl GramRepr {
         GramRepr::Dense { gram, basis }
     }
 
-    /// The spectral basis (full for dense, thin for low-rank).
+    /// The spectral basis (full for dense, thin for the factored arms).
     pub fn basis(&self) -> &Arc<SpectralBasis> {
         match self {
             GramRepr::Dense { basis, .. } => basis,
             GramRepr::LowRank(f) => &f.basis,
+            GramRepr::RandomFeatures(f) => &f.basis,
         }
     }
 
@@ -94,14 +149,24 @@ impl GramRepr {
         self.basis().dim()
     }
 
+    /// True for any factored (non-dense) representation — every thin
+    /// basis shares the rank-deficient solve/certificate paths.
     pub fn is_low_rank(&self) -> bool {
-        matches!(self, GramRepr::LowRank(_))
+        !matches!(self, GramRepr::Dense { .. })
     }
 
     pub fn low_rank(&self) -> Option<&Arc<LowRankFactor>> {
         match self {
             GramRepr::LowRank(f) => Some(f),
-            GramRepr::Dense { .. } => None,
+            _ => None,
+        }
+    }
+
+    /// The random-feature factor, when this is the RFF arm.
+    pub fn rff(&self) -> Option<&Arc<RffFactor>> {
+        match self {
+            GramRepr::RandomFeatures(f) => Some(f),
+            _ => None,
         }
     }
 
@@ -109,17 +174,17 @@ impl GramRepr {
     pub fn dense_gram(&self) -> Option<&Arc<Matrix>> {
         match self {
             GramRepr::Dense { gram, .. } => Some(gram),
-            GramRepr::LowRank(_) => None,
+            _ => None,
         }
     }
 
     /// One Gram entry: K(i,j) for dense, K̃(i,j) = Σₖ uᵢₖ λₖ uⱼₖ (O(r))
-    /// for low-rank.
+    /// reconstructed from the thin basis for the factored arms.
     pub fn entry(&self, i: usize, j: usize) -> f64 {
         match self {
             GramRepr::Dense { gram, .. } => gram[(i, j)],
-            GramRepr::LowRank(f) => {
-                let b = &f.basis;
+            GramRepr::LowRank(_) | GramRepr::RandomFeatures(_) => {
+                let b = self.basis();
                 b.u.row(i)
                     .iter()
                     .zip(b.u.row(j))
@@ -132,22 +197,21 @@ impl GramRepr {
 
     /// The |S|×|S| principal submatrix K_SS — the eq.-(8)/(19) projection
     /// system. Dense indexes the stored matrix (bitwise-identical to the
-    /// historical path); low-rank reconstructs it from the factor in
-    /// O(|S|²·r).
+    /// historical path); the factored arms reconstruct it in O(|S|²·r).
     pub fn kss(&self, s: &[usize]) -> Matrix {
         match self {
             GramRepr::Dense { gram, .. } => {
                 Matrix::from_fn(s.len(), s.len(), |a, b| gram[(s[a], s[b])])
             }
-            GramRepr::LowRank(_) => {
+            GramRepr::LowRank(_) | GramRepr::RandomFeatures(_) => {
                 Matrix::from_fn(s.len(), s.len(), |a, b| self.entry(s[a], s[b]))
             }
         }
     }
 
     /// Total f64s held by this representation — the accounting hook the
-    /// no-n×n-allocation tests assert on. Dense is Θ(n²); low-rank is
-    /// Θ(n·r + m·(p + r)).
+    /// no-n×n-allocation tests assert on. Dense is Θ(n²); Nyström is
+    /// Θ(n·r + m·(p + r)); random features is Θ(n·r + D·(p + r)).
     pub fn memory_floats(&self) -> usize {
         let b = self.basis();
         let basis_floats = b.u.rows() * b.u.cols() + b.lambda.len() + b.u1.len();
@@ -157,6 +221,11 @@ impl GramRepr {
                 basis_floats
                     + f.z.rows() * f.z.cols()
                     + f.map.rows() * f.map.cols()
+            }
+            GramRepr::RandomFeatures(f) => {
+                basis_floats
+                    + f.map.memory_floats()
+                    + f.coef_map.rows() * f.coef_map.cols()
             }
         }
     }

@@ -1,0 +1,332 @@
+//! End-to-end tests of the random-feature (RFF) compute path: exactness
+//! ladder at large D, bitwise feature-map reproducibility across worker
+//! counts and SIMD tiers, lockstep parity on the RF basis, the O(D)
+//! format_version-3 artifact, three-way cache coexistence and the
+//! no-n×n-allocation accounting.
+
+use fastkqr::api::{FitSpec, KernelSpec, QuantileModel};
+use fastkqr::data::{synth, Rng};
+use fastkqr::engine::{ApproxSpec, CacheMetrics, EngineConfig, FitEngine};
+use fastkqr::kernel::rff::RffMap;
+use fastkqr::kernel::Kernel;
+use fastkqr::kqr::SolveOptions;
+use fastkqr::linalg::{Matrix, Parallelism};
+use fastkqr::smooth::pinball_loss;
+
+fn temp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "fastkqr-rff-{tag}-{}-{}.json",
+        std::process::id(),
+        std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH).unwrap().as_nanos()
+    ))
+}
+
+fn fixture(n: usize, seed: u64) -> (fastkqr::data::Dataset, Kernel) {
+    let mut rng = Rng::new(seed);
+    let data = synth::sine_hetero(n, &mut rng);
+    (data, Kernel::Rbf { sigma: 0.5 })
+}
+
+/// Tight options so the dense and the RF solve both reach their
+/// minimizers: the remaining check-loss gap is then the Monte-Carlo
+/// K̃ − K error (O(1/√D)), not solver slack.
+fn tight_opts() -> SolveOptions {
+    SolveOptions {
+        apgd_tol: 1e-8,
+        kkt_tol: 1e-4,
+        max_iters: 100_000,
+        ..SolveOptions::default()
+    }
+}
+
+/// RFF exactness ladder (KQR): with a fixed seed the in-sample check
+/// loss at D = 1024 sits within tolerance of the dense fit at n = 40.
+#[test]
+fn rff_ladder_large_d_matches_dense_check_loss() {
+    let n = 40;
+    let (data, kernel) = fixture(n, 61);
+    let (tau, lam) = (0.5, 2e-2);
+    let engine = FitEngine::with_config(EngineConfig {
+        par: Parallelism::serial(),
+        opts: tight_opts(),
+        ..EngineConfig::default()
+    });
+    let exact = engine
+        .solver_with_options(&data.x, &data.y, &kernel, tight_opts())
+        .unwrap()
+        .fit(tau, lam)
+        .unwrap();
+    let dense_loss = pinball_loss(&data.y, &exact.predict(&data.x), tau);
+    let mut last_gap = f64::NAN;
+    for d in [64usize, 256, 1024] {
+        let approx = ApproxSpec::RandomFeatures { d, seed: 17 };
+        let fit = engine
+            .solver_approx(&data.x, &data.y, &kernel, approx, tight_opts())
+            .unwrap()
+            .fit(tau, lam)
+            .unwrap();
+        assert!(fit.rff.is_some(), "RF fit carries the compressed predictor");
+        assert!(fit.lowrank.is_none());
+        assert_eq!(fit.rff.as_ref().unwrap().w.len(), d);
+        let loss = pinball_loss(&data.y, &fit.predict(&data.x), tau);
+        last_gap = (loss - dense_loss).abs();
+        assert!(last_gap.is_finite());
+    }
+    assert!(
+        last_gap <= 0.1 * dense_loss.abs() + 1e-3,
+        "D=1024 check-loss gap {last_gap} vs dense loss {dense_loss}"
+    );
+}
+
+/// Φ is a pure function of `{d, seed}`: identical bits at any worker
+/// count, and identical bits to an element-by-element recomputation
+/// through the scalar oracle dispatch — which is exactly what
+/// `FASTKQR_SIMD=off` pins, so the active SIMD tier cannot change Φ.
+#[test]
+fn feature_matrix_is_bitwise_stable_across_workers_and_simd() {
+    let kernel = Kernel::Rbf { sigma: 0.8 };
+    let (d, p, seed) = (23usize, 4usize, 99u64);
+    let map = RffMap::new(&kernel, p, d, seed).unwrap();
+    let again = RffMap::new(&kernel, p, d, seed).unwrap();
+    assert_eq!(map.freqs.as_slice(), again.freqs.as_slice());
+    assert_eq!(map.phases, again.phases);
+
+    let mut rng = Rng::new(7);
+    let x = Matrix::from_fn(37, p, |_, _| rng.normal());
+    let mut reference = Matrix::zeros(37, d);
+    map.features_into(&x, &mut reference, 1);
+    for workers in [2usize, 3, 8] {
+        let mut phi = Matrix::zeros(37, d);
+        map.features_into(&x, &mut phi, workers);
+        assert_eq!(
+            phi.as_slice(),
+            reference.as_slice(),
+            "workers={workers} changed feature bits"
+        );
+    }
+
+    // Scalar-oracle recomputation: the non-FMA SIMD tiers are bitwise
+    // equal to the scalar dot by construction, so this equality holds
+    // whatever tier the process resolved.
+    let scalar = fastkqr::linalg::simd::scalar();
+    for i in 0..x.rows() {
+        for j in 0..d {
+            let expect =
+                ((scalar.dot)(x.row(i), map.freqs.row(j)) + map.phases[j]).cos() * map.scale;
+            assert_eq!(
+                reference[(i, j)].to_bits(),
+                expect.to_bits(),
+                "Φ[{i},{j}] differs from the scalar oracle"
+            );
+        }
+    }
+}
+
+/// The BLAS-3 lockstep grid driver on the RF basis matches the
+/// sequential path — same iteration trajectories, coefficients to
+/// ≤ 1e-10 (the dense/low-rank parity contract, third representation).
+#[test]
+fn lockstep_grid_matches_sequential_on_rff_basis() {
+    let (data, kernel) = fixture(40, 63);
+    let taus = [0.25, 0.75];
+    let lambdas = [0.1, 0.01];
+    let approx = ApproxSpec::RandomFeatures { d: 16, seed: 5 };
+    let seq_e = FitEngine::with_config(EngineConfig {
+        par: Parallelism::serial(),
+        lockstep: Some(false),
+        ..EngineConfig::default()
+    });
+    let lock_e = FitEngine::with_config(EngineConfig {
+        par: Parallelism::serial(),
+        lockstep: Some(true),
+        ..EngineConfig::default()
+    });
+    let seq = seq_e
+        .fit_grid_with_strategy(&data.x, &data.y, &kernel, &taus, &lambdas, approx, None, None)
+        .unwrap();
+    let lock = lock_e
+        .fit_grid_with_strategy(&data.x, &data.y, &kernel, &taus, &lambdas, approx, None, None)
+        .unwrap();
+    assert!(lock.lockstep.is_some() && seq.lockstep.is_none());
+    for ti in 0..taus.len() {
+        for li in 0..lambdas.len() {
+            let (a, b) = (seq.at(ti, li), lock.at(ti, li));
+            assert_eq!(a.apgd_iters, b.apgd_iters, "({ti},{li}) iteration trajectory");
+            assert!((a.b - b.b).abs() <= 1e-10, "({ti},{li}) intercept");
+            let sup = a
+                .alpha
+                .iter()
+                .zip(&b.alpha)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f64, f64::max);
+            assert!(sup <= 1e-10, "({ti},{li}) alpha sup {sup}");
+            let (wa, wb) = (
+                &a.rff.as_ref().expect("seq rff").w,
+                &b.rff.as_ref().expect("lock rff").w,
+            );
+            let wsup =
+                wa.iter().zip(wb.iter()).map(|(x, y)| (x - y).abs()).fold(0.0f64, f64::max);
+            assert!(wsup <= 1e-10, "({ti},{li}) feature-weight sup {wsup}");
+        }
+    }
+}
+
+/// An RF grid model persists as an O(D) format_version-3 artifact —
+/// frequencies + phases + per-fit D-dim w, no x_train, no n-dim α —
+/// smaller than the dense artifact, reloading bitwise.
+#[test]
+fn rff_artifact_is_o_of_d_and_roundtrips_bitwise() {
+    let (data, kernel) = fixture(36, 65);
+    let d = 12;
+    let spec = FitSpec::grid(
+        data.x.clone(),
+        data.y.clone(),
+        KernelSpec::exact(&kernel),
+        vec![0.25, 0.75],
+        vec![0.1, 0.01],
+    )
+    .with_approx(ApproxSpec::RandomFeatures { d, seed: 3 });
+    let engine = FitEngine::new();
+    let model = engine.run(&spec).unwrap();
+    let doc = model.to_artifact().unwrap();
+    assert_eq!(doc.get_usize("format_version"), Some(3));
+    assert_eq!(doc.get_str("repr"), Some("rff"));
+    assert!(doc.get("x_train").is_none(), "O(D) artifact must not carry x_train");
+    assert_eq!(doc.get("freqs").unwrap().as_arr().unwrap().len(), d);
+    assert_eq!(doc.get_f64_arr("phases").unwrap().len(), d);
+    assert_eq!(doc.get_usize("n_train"), Some(36));
+    for fit in doc.get("fits").unwrap().as_arr().unwrap() {
+        assert!(fit.get("alpha").is_none(), "compressed fits store w, not alpha");
+        assert_eq!(fit.get_f64_arr("w").unwrap().len(), d);
+    }
+    // it really is smaller than the dense artifact of the same task
+    let dense = engine.run(&spec.clone().with_approx(ApproxSpec::Exact)).unwrap();
+    let dense_len = dense.to_artifact().unwrap().to_string().len();
+    let rff_len = doc.to_string().len();
+    assert!(
+        rff_len < dense_len,
+        "rff artifact ({rff_len} bytes) should undercut dense ({dense_len} bytes)"
+    );
+    // save → load → predict bitwise
+    let path = temp_path("grid");
+    model.save(&path).unwrap();
+    let back = QuantileModel::load(&path).unwrap();
+    let mut rng = Rng::new(66);
+    let xt = synth::sine_hetero(9, &mut rng).x;
+    assert_eq!(back.predict(&xt), model.predict(&xt), "reload must predict bitwise");
+    assert_eq!(back.n_train(), 36);
+    assert_eq!(back.n_levels(), 4);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// One dataset, all three Gram representations: exact, Nyström and RF
+/// entries coexist in one cache, each built exactly once, and reruns
+/// are pure hits reproducing predictions bitwise.
+#[test]
+fn cache_holds_all_three_representations_with_one_build_each() {
+    let (data, kernel) = fixture(30, 67);
+    let kspec = KernelSpec::exact(&kernel);
+    let exact_spec = FitSpec::single(data.x.clone(), data.y.clone(), kspec.clone(), 0.5, 0.05);
+    let ny_spec = exact_spec.clone().with_approx(ApproxSpec::Nystrom { m: 10, seed: 21 });
+    let rf_spec =
+        exact_spec.clone().with_approx(ApproxSpec::RandomFeatures { d: 10, seed: 21 });
+    let engine = FitEngine::new();
+    let a1 = engine.run(&exact_spec).unwrap();
+    let b1 = engine.run(&ny_spec).unwrap();
+    let c1 = engine.run(&rf_spec).unwrap();
+    assert_eq!(CacheMetrics::get(&engine.cache.metrics.decompositions), 3);
+    assert_eq!(engine.cache.len(), 3, "three representations coexist without eviction");
+    let a2 = engine.run(&exact_spec).unwrap();
+    let b2 = engine.run(&ny_spec).unwrap();
+    let c2 = engine.run(&rf_spec).unwrap();
+    assert_eq!(
+        CacheMetrics::get(&engine.cache.metrics.decompositions),
+        3,
+        "reruns are pure cache hits"
+    );
+    let mut rng = Rng::new(68);
+    let xt = synth::sine_hetero(7, &mut rng).x;
+    assert_eq!(a1.predict(&xt), a2.predict(&xt));
+    assert_eq!(b1.predict(&xt), b2.predict(&xt));
+    assert_eq!(c1.predict(&xt), c2.predict(&xt), "same seed ⇒ bitwise-identical RF fit");
+    // a fresh engine (fresh frequency draw from the same seed) agrees
+    let engine2 = FitEngine::new();
+    let c3 = engine2.run(&rf_spec).unwrap();
+    assert_eq!(
+        c1.predict(&xt),
+        c3.predict(&xt),
+        "spec document alone reproduces the RF fit"
+    );
+}
+
+/// n = 4096-scale accounting: the RF path holds O(n·r + D·(p + r))
+/// state — no n×n matrix anywhere — and a grid fits end-to-end on it.
+#[test]
+fn no_dense_allocation_on_rff_path_at_4096() {
+    let n = 4096;
+    let d = 64;
+    let (data, kernel) = fixture(n, 71);
+    // Loose accounting-oriented options: this test bounds memory, not
+    // certificate quality (projection off ⇒ no large K_SS solves).
+    let opts = SolveOptions {
+        apgd_tol: 1e-2,
+        kkt_tol: 1e-2,
+        max_iters: 500,
+        max_expansions: 3,
+        max_stall_rungs: 1,
+        projection: false,
+        ..SolveOptions::default()
+    };
+    let engine = FitEngine::with_config(EngineConfig {
+        par: Parallelism::serial(),
+        opts: opts.clone(),
+        ..EngineConfig::default()
+    });
+    let solver = engine
+        .solver_approx(
+            &data.x,
+            &data.y,
+            &kernel,
+            ApproxSpec::RandomFeatures { d, seed: 13 },
+            opts.clone(),
+        )
+        .unwrap();
+    assert!(solver.repr.is_low_rank());
+    let r = solver.basis.dim();
+    assert!(r <= d && r > 0);
+    assert_eq!(solver.basis.u.rows(), n);
+    assert_eq!(solver.basis.u.cols(), r, "thin factor, no zero-padding to n×n");
+    let floats = solver.repr.memory_floats();
+    assert!(
+        floats < n * n / 16,
+        "rff repr holds {floats} f64s — must be far below n² = {}",
+        n * n
+    );
+    assert!(floats >= n * r, "sanity: the thin factor itself is accounted");
+    // the full grid machinery runs on the streamed basis
+    let grid = engine
+        .fit_grid_with_strategy(
+            &data.x,
+            &data.y,
+            &kernel,
+            &[0.25, 0.75],
+            &[0.1, 0.01],
+            ApproxSpec::RandomFeatures { d, seed: 13 },
+            Some(false),
+            Some(opts),
+        )
+        .unwrap();
+    assert_eq!(grid.fits.len(), 2);
+    for col in &grid.fits {
+        for fit in col {
+            assert!(fit.objective.is_finite());
+            let rf = fit.rff.as_ref().expect("compressed predictor attached");
+            assert_eq!(rf.w.len(), d);
+        }
+    }
+    assert_eq!(
+        CacheMetrics::get(&engine.cache.metrics.decompositions),
+        1,
+        "one streamed factorization serves the whole grid"
+    );
+}

@@ -6,10 +6,11 @@ ISO dates so lexicographic == chronological), each holding the
 machine-readable bench outputs: BENCH_grid.json, BENCH_serve.json,
 BENCH_lowrank.json. Record one with tools/bench_snapshot.sh.
 
-With a single snapshot, values are printed with "n/a" deltas so the
-first recording is still inspectable. Null / non-numeric fields (e.g.
-the schema-only placeholder committed from a toolchain-less build
-container) are skipped gracefully.
+With a single snapshot, values are printed as "added" so the first
+recording is still inspectable; metrics or whole bench files present in
+only one of the two snapshots are reported as added/removed rather than
+erroring. Null / non-numeric fields (e.g. the schema-only placeholder
+committed from a toolchain-less build container) are skipped gracefully.
 """
 
 import json
@@ -17,6 +18,25 @@ import sys
 from pathlib import Path
 
 BENCH_FILES = ["BENCH_grid.json", "BENCH_serve.json", "BENCH_lowrank.json"]
+
+# List elements are keyed by their identifying field, not their position:
+# inserting a row (say the rff column growing a new D) must not shift
+# every later row onto a different comparison partner.
+ID_FIELDS = ("m", "d", "n", "tau", "name")
+
+
+def _list_key(item, index):
+    """Stable key for one list element: `[m=64]`-style when the element
+    is a dict carrying an identifying field, positional otherwise."""
+    if isinstance(item, dict):
+        for f in ID_FIELDS:
+            v = item.get(f)
+            if isinstance(v, bool) or not isinstance(v, (int, float, str)):
+                continue
+            if isinstance(v, float) and v.is_integer():
+                v = int(v)
+            return f"[{f}={v}]"
+    return str(index)
 
 
 def flatten(doc, prefix=""):
@@ -26,7 +46,7 @@ def flatten(doc, prefix=""):
             yield from flatten(v, f"{prefix}{k}.")
     elif isinstance(doc, list):
         for i, v in enumerate(doc):
-            yield from flatten(v, f"{prefix}{i}.")
+            yield from flatten(v, f"{prefix}{_list_key(v, i)}.")
     elif isinstance(doc, bool):
         return  # bools are ints in python; not a perf metric
     elif isinstance(doc, (int, float)):
@@ -69,7 +89,12 @@ def main():
     for name in BENCH_FILES:
         if name not in new and name not in old:
             continue
-        print(f"== {name} ==")
+        if old_dir and name not in old:
+            print(f"== {name} (added in {new_dir.name}) ==")
+        elif name not in new:
+            print(f"== {name} (removed in {new_dir.name}) ==")
+        else:
+            print(f"== {name} ==")
         new_m = new.get(name, {})
         old_m = old.get(name, {})
         keys = sorted(set(new_m) | set(old_m))
@@ -79,9 +104,9 @@ def main():
         for key in keys:
             a, b = old_m.get(key), new_m.get(key)
             if b is None:
-                print(f"  {key:<{width}}  {fmt(a)} -> (gone)")
+                print(f"  {key:<{width}}  {fmt(a)} -> (removed)")
             elif a is None:
-                print(f"  {key:<{width}}  {fmt(b)}  (delta n/a)")
+                print(f"  {key:<{width}}  {fmt(b)}  (added)")
             else:
                 delta = b - a
                 pct = f"{100.0 * delta / a:+.1f}%" if a != 0 else "n/a"
