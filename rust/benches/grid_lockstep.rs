@@ -1,8 +1,10 @@
 //! Grid-solve trajectory: sequential per-cell `fit_grid` (BLAS-2) vs the
-//! lockstep bundle driver (BLAS-3) on a τ×λ grid, packed-GEMM GFLOP/s and
-//! the lockstep-vs-oracle parity deviation. Writes the machine-readable
-//! baseline to `BENCH_grid.json` (override with `--out`), so the perf
-//! trajectory of future PRs has a recorded starting point.
+//! lockstep bundle driver (BLAS-3) on a τ×λ grid, packed-GEMM GFLOP/s,
+//! the lockstep-vs-oracle parity deviation, and the APGD-vs-SSN solver
+//! race (dense and rank-m ≪ n Nyström, wall + objective gap). Writes the
+//! machine-readable baseline to `BENCH_grid.json` (override with
+//! `--out`), so the perf trajectory of future PRs has a recorded
+//! starting point.
 //!
 //! Acceptance tracking (ISSUE 2): at n ≥ 512 on an 8×8 grid the lockstep
 //! path should be ≥ 2× faster end-to-end, with `parity_max_abs ≤ 1e-10`.
@@ -35,6 +37,20 @@ fn main() {
         gb.gemm_gflops / gb.gemm_gflops_scalar.max(1e-12)
     );
     println!("   lockstep-vs-oracle parity: max |Δ(b,α)| = {:.3e}", gb.parity_max_abs);
+    println!("{}", gb.ssn.report_line());
+    println!(
+        "   ssn race (dense): {:.2}x vs blas2, obj gap {:.3e}",
+        gb.seq.median / gb.ssn.median.max(1e-12),
+        gb.ssn_obj_gap
+    );
+    println!("{}", gb.apgd_lowrank.report_line());
+    println!("{}", gb.ssn_lowrank.report_line());
+    println!(
+        "   ssn race (nystrom m={}): {:.2}x vs apgd, obj gap {:.3e}",
+        gb.lowrank_m,
+        gb.apgd_lowrank.median / gb.ssn_lowrank.median.max(1e-12),
+        gb.ssn_lowrank_obj_gap
+    );
     std::fs::write(&out, gb.to_json().to_string()).expect("write BENCH_grid.json");
     println!("wrote {out}");
 }

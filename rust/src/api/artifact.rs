@@ -446,7 +446,7 @@ pub fn from_json(v: &Json) -> Result<QuantileModel> {
                 None => Vec::new(),
                 Some(arr) => arr.iter().map(CvSummary::from_json).collect::<Result<_>>()?,
             };
-            Ok(QuantileModel::Set(ModelSet { fits, shape, cv, lockstep: None }))
+            Ok(QuantileModel::Set(ModelSet { fits, shape, cv, lockstep: None, solver: None }))
         }
         Some("nckqr") => {
             let taus = v
@@ -706,6 +706,7 @@ mod tests {
             shape: SetShape::Path { tau: 0.5 },
             cv: Vec::new(),
             lockstep: None,
+            solver: None,
         });
         assert!(to_json(&empty).is_err());
     }

@@ -13,10 +13,11 @@
 //!
 //! ```text
 //!   FitSpec { x, y, kernel(+approx), task, opts?, nc_opts?, lockstep?,
-//!             backend?, seed }
+//!             backend?, solver?, seed }
 //!     task   ∈ Single{τ,λ} | Path{τ,λs} | Grid{τs,λs}
 //!            | NonCrossing{τs,λ₁,λ₂} | Cv{τs,λs,folds,seed}
 //!     approx ∈ exact | nystrom{m, seed} | rff{d, seed}   (Gram repr)
+//!     solver ∈ apgd | ssn | auto        (optimizer backend)
 //!        │  FitEngine::run(&spec)
 //!        ▼
 //!   QuantileModel (predict / taus / diagnostics / save / load)
@@ -41,15 +42,18 @@ use crate::kqr::apgd::ApgdState;
 use crate::kqr::SolveOptions;
 use crate::linalg::Matrix;
 use crate::nckqr::NcOptions;
+use crate::solver::{self, SolverBackend, SsnState};
 use crate::util::Json;
 use anyhow::{anyhow, bail, Result};
 
 /// Highest spec document version this build reads. [`FitSpec::to_json`]
 /// writes the **lowest** version that can represent the document — 1 for
 /// exact specs (older readers keep working), 2 once the kernel carries a
-/// Nyström `approx` block, 3 for a random-feature (`rff`) block — which
-/// older readers must reject rather than silently fit exactly.
-pub const SPEC_VERSION: u64 = 3;
+/// Nyström `approx` block, 3 for a random-feature (`rff`) block, 4 once
+/// the document names a solver backend (`"solver"`) — which older
+/// readers must reject rather than silently fit with the wrong
+/// representation or optimizer.
+pub const SPEC_VERSION: u64 = 4;
 
 /// Default master seed of a spec (`"seed"`): drives Nyström landmark
 /// sampling and random-feature frequency draws when the `approx` block
@@ -532,6 +536,10 @@ pub struct FitSpec {
     /// APGD backend hint for Single/Path tasks: `"native"` (default) or
     /// `"xla"` (requires the `xla` cargo feature at runtime).
     pub backend: Option<String>,
+    /// Solver backend: `Apgd` (the default), `Ssn` (pALM semismooth
+    /// Newton), or `Auto` (resolved per problem by
+    /// [`FitSpec::resolved_solver`]). `None` → `Apgd`.
+    pub solver: Option<SolverBackend>,
     /// Master seed (`"seed"`, default [`DEFAULT_SEED`]): the default for
     /// Nyström landmark sampling and CV fold shuffling, so a spec
     /// document alone reproduces every randomized choice.
@@ -550,6 +558,7 @@ impl FitSpec {
             nc_opts: None,
             lockstep: None,
             backend: None,
+            solver: None,
             seed: DEFAULT_SEED,
         }
     }
@@ -612,6 +621,12 @@ impl FitSpec {
 
     pub fn with_backend(mut self, backend: impl Into<String>) -> FitSpec {
         self.backend = Some(backend.into());
+        self
+    }
+
+    /// Select the solver backend (APGD / SSN / per-problem `Auto`).
+    pub fn with_solver(mut self, solver: SolverBackend) -> FitSpec {
+        self.solver = Some(solver);
         self
     }
 
@@ -697,6 +712,24 @@ impl FitSpec {
                 bail!("spec: cv seed must be <= 2^53 for exact JSON round-trip");
             }
         }
+        if self.solver == Some(SolverBackend::Ssn) {
+            match &self.task {
+                Task::Cv { .. } => {
+                    bail!("spec: solver \"ssn\" does not support the cv task (use apgd or auto)")
+                }
+                Task::NonCrossing { .. } => bail!(
+                    "spec: solver \"ssn\" does not support the noncrossing task \
+                     (use apgd or auto)"
+                ),
+                _ => {}
+            }
+            if matches!(self.backend.as_deref(), Some("xla")) {
+                bail!(
+                    "spec: solver \"ssn\" cannot run on the xla backend \
+                     (xla executes APGD iteration chunks)"
+                );
+            }
+        }
         match &self.task {
             Task::Path { lambdas, .. } if lambdas.is_empty() => bail!("spec: empty lambdas"),
             Task::Grid { taus, lambdas } if taus.is_empty() || lambdas.is_empty() => {
@@ -710,6 +743,36 @@ impl FitSpec {
         }
     }
 
+    /// The concrete backend this spec fits with — `Auto` resolves here,
+    /// as a pure function of the document (n, representation rank, grid
+    /// size; see [`solver::auto_select`]), so the same spec picks the
+    /// same backend on every machine. Tasks SSN does not cover (CV,
+    /// non-crossing) and the xla iteration backend always resolve to
+    /// APGD.
+    pub fn resolved_solver(&self) -> SolverBackend {
+        if matches!(self.backend.as_deref(), Some("xla")) {
+            return SolverBackend::Apgd;
+        }
+        match self.solver.unwrap_or_default() {
+            SolverBackend::Auto => {
+                let cells = match &self.task {
+                    Task::Single { .. } => 1,
+                    Task::Path { lambdas, .. } => lambdas.len(),
+                    Task::Grid { taus, lambdas } => taus.len() * lambdas.len(),
+                    Task::NonCrossing { .. } | Task::Cv { .. } => return SolverBackend::Apgd,
+                };
+                let n = self.x.rows();
+                let rank = match self.approx {
+                    ApproxSpec::Exact => n,
+                    ApproxSpec::Nystrom { m, .. } => m.min(n),
+                    ApproxSpec::RandomFeatures { d, .. } => d.min(n),
+                };
+                solver::auto_select(n, rank, cells)
+            }
+            concrete => concrete,
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let mut kernel_json = self.kernel.to_json();
         if let Some(a) = approx_to_json(&self.approx) {
@@ -718,10 +781,14 @@ impl FitSpec {
             }
         }
         // Lowest version that represents the document (see SPEC_VERSION).
-        let version: u64 = match self.approx {
-            ApproxSpec::RandomFeatures { .. } => 3,
-            ApproxSpec::Nystrom { .. } => 2,
-            ApproxSpec::Exact => 1,
+        let version: u64 = if self.solver.is_some() {
+            4
+        } else {
+            match self.approx {
+                ApproxSpec::RandomFeatures { .. } => 3,
+                ApproxSpec::Nystrom { .. } => 2,
+                ApproxSpec::Exact => 1,
+            }
         };
         let mut pairs = vec![
             ("version", Json::num(version as f64)),
@@ -742,6 +809,9 @@ impl FitSpec {
         }
         if let Some(b) = &self.backend {
             pairs.push(("backend", Json::str(b.clone())));
+        }
+        if let Some(s) = self.solver {
+            pairs.push(("solver", Json::str(s.as_str())));
         }
         Json::obj(pairs)
     }
@@ -789,8 +859,28 @@ impl FitSpec {
             Some(l) => Some(l.as_bool().ok_or_else(|| anyhow!("spec: lockstep must be a bool"))?),
         };
         let backend = v.get_str("backend").map(String::from);
-        let spec =
-            FitSpec { x, y, kernel, approx, task, opts, nc_opts, lockstep, backend, seed };
+        let solver = match v.get("solver") {
+            None => None,
+            Some(s) => {
+                let name = s
+                    .as_str()
+                    .ok_or_else(|| anyhow!("spec: solver must be a string (apgd|ssn|auto)"))?;
+                Some(SolverBackend::parse(name)?)
+            }
+        };
+        let spec = FitSpec {
+            x,
+            y,
+            kernel,
+            approx,
+            task,
+            opts,
+            nc_opts,
+            lockstep,
+            backend,
+            solver,
+            seed,
+        };
         spec.validate()?;
         Ok(spec)
     }
@@ -802,11 +892,22 @@ impl FitSpec {
     }
 }
 
+/// APGD backend names this build can actually construct: the `xla`
+/// cargo feature gates the PJRT backend, so error messages (and name
+/// acceptance) must not advertise it on a default build.
+pub const BACKEND_NAMES: &str = if cfg!(feature = "xla") { "native|xla" } else { "native" };
+
 fn backend_for(name: Option<&str>) -> Result<Box<dyn Backend>> {
     match name.unwrap_or("native") {
         "native" => Ok(Box::new(NativeBackend::new())),
-        "xla" => Ok(Box::new(crate::runtime::XlaBackend::from_default_dir()?)),
-        other => bail!("unknown backend {other:?} (native|xla)"),
+        "xla" if cfg!(feature = "xla") => {
+            Ok(Box::new(crate::runtime::XlaBackend::from_default_dir()?))
+        }
+        "xla" => bail!(
+            "backend \"xla\" is not compiled into this build \
+             (enable the `xla` cargo feature); available: {BACKEND_NAMES}"
+        ),
+        other => bail!("unknown backend {other:?} ({BACKEND_NAMES})"),
     }
 }
 
@@ -827,27 +928,40 @@ impl FitEngine {
             bail!("the xla backend does not support approximate (Nyström/RFF) bases; use native");
         }
         let opts = spec.opts.clone().unwrap_or_else(|| self.config.opts.clone());
+        // Auto resolves from the document alone, before any fitting.
+        let solver_backend = spec.resolved_solver();
         match &spec.task {
             Task::Single { tau, lambda } => {
                 let solver = self.solver_approx(&spec.x, &spec.y, &kernel, approx, opts)?;
-                let mut backend = backend_for(spec.backend.as_deref())?;
-                let mut state = ApgdState::zeros(solver.state_dim());
-                let fit = solver.fit_warm(*tau, *lambda, &mut state, backend.as_mut())?;
+                let fit = if solver_backend == SolverBackend::Ssn {
+                    let mut state = SsnState::zeros(solver.n(), solver.basis.dim());
+                    solver::fit_warm_from(&solver, *tau, *lambda, &mut state)?
+                } else {
+                    let mut backend = backend_for(spec.backend.as_deref())?;
+                    let mut state = ApgdState::zeros(solver.state_dim());
+                    solver.fit_warm(*tau, *lambda, &mut state, backend.as_mut())?
+                };
                 Ok(QuantileModel::Kqr(fit))
             }
             Task::Path { tau, lambdas } => {
                 let solver = self.solver_approx(&spec.x, &spec.y, &kernel, approx, opts)?;
-                let mut backend = backend_for(spec.backend.as_deref())?;
-                let fits = solver.fit_path_with_backend(*tau, lambdas, backend.as_mut())?;
+                let fits = if solver_backend == SolverBackend::Ssn {
+                    let (fits, _) = solver::fit_tau_column_ssn(&solver, *tau, lambdas, None)?;
+                    fits
+                } else {
+                    let mut backend = backend_for(spec.backend.as_deref())?;
+                    solver.fit_path_with_backend(*tau, lambdas, backend.as_mut())?
+                };
                 Ok(QuantileModel::Set(ModelSet {
                     fits,
                     shape: SetShape::Path { tau: *tau },
                     cv: Vec::new(),
                     lockstep: None,
+                    solver: Some(solver_backend),
                 }))
             }
             Task::Grid { taus, lambdas } => {
-                let grid = self.fit_grid_with_strategy(
+                let grid = self.fit_grid_with_solver(
                     &spec.x,
                     &spec.y,
                     &kernel,
@@ -856,6 +970,7 @@ impl FitEngine {
                     approx,
                     spec.lockstep,
                     spec.opts.clone(),
+                    solver_backend,
                 )?;
                 Ok(QuantileModel::from_grid(grid))
             }
@@ -897,6 +1012,7 @@ impl FitEngine {
                     shape: SetShape::Cv { folds: *folds, seed: *seed },
                     cv: summaries,
                     lockstep: None,
+                    solver: Some(SolverBackend::Apgd),
                 }))
             }
         }
@@ -1086,6 +1202,80 @@ mod tests {
             other => panic!("expected Kqr model, got {}", other.kind()),
         }
         assert_eq!(model.taus(), vec![0.5]);
+    }
+
+    #[test]
+    fn solver_field_versions_roundtrips_and_validates() {
+        let base = toy_spec(Task::Single { tau: 0.5, lambda: 0.05 });
+        assert_eq!(base.to_json().get_usize("version"), Some(1), "no solver → no version bump");
+        let spec =
+            toy_spec(Task::Single { tau: 0.5, lambda: 0.05 }).with_solver(SolverBackend::Ssn);
+        assert_eq!(spec.to_json().get_usize("version"), Some(4), "solver field writes v4");
+        let s1 = spec.to_json().to_string();
+        let back = FitSpec::parse(&s1).unwrap();
+        assert_eq!(back.solver, Some(SolverBackend::Ssn));
+        assert_eq!(back.to_json().to_string(), s1, "to_json∘from_json identity");
+        // unknown solver names and non-string values are rejected loudly
+        assert!(FitSpec::parse(
+            r#"{"x":[[1],[2]],"y":[1,2],"solver":"newton",
+                "task":{"type":"single","tau":0.5,"lambda":0.1}}"#
+        )
+        .is_err());
+        assert!(FitSpec::parse(
+            r#"{"x":[[1],[2]],"y":[1,2],"solver":3,
+                "task":{"type":"single","tau":0.5,"lambda":0.1}}"#
+        )
+        .is_err());
+        // tasks SSN does not cover are validation errors, not silent fallbacks
+        let cv = toy_spec(Task::Cv { taus: vec![0.5], lambdas: vec![0.1], folds: 2, seed: 0 })
+            .with_solver(SolverBackend::Ssn);
+        let err = cv.validate().unwrap_err().to_string();
+        assert!(err.contains("ssn"), "{err}");
+        let nc = toy_spec(Task::NonCrossing { taus: vec![0.25, 0.75], lam1: 5.0, lam2: 0.05 })
+            .with_solver(SolverBackend::Ssn);
+        assert!(nc.validate().is_err());
+        let xla = toy_spec(Task::Single { tau: 0.5, lambda: 0.05 })
+            .with_solver(SolverBackend::Ssn)
+            .with_backend("xla");
+        assert!(xla.validate().is_err());
+    }
+
+    #[test]
+    fn auto_solver_resolves_deterministically_from_the_document() {
+        // thin basis (n=24, rank 8, 1 cell) → the cost model picks SSN
+        let spec = toy_spec(Task::Single { tau: 0.5, lambda: 0.05 })
+            .with_approx(ApproxSpec::Nystrom { m: 8, seed: 3 })
+            .with_seed(3)
+            .with_solver(SolverBackend::Auto);
+        let resolved = spec.resolved_solver();
+        assert_ne!(resolved, SolverBackend::Auto, "Auto must resolve concretely");
+        let back = FitSpec::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(
+            back.resolved_solver(),
+            resolved,
+            "resolution is a function of the document alone"
+        );
+        assert_eq!(resolved, SolverBackend::Ssn);
+        // tasks outside SSN's coverage always resolve to APGD
+        let cv = toy_spec(Task::Cv { taus: vec![0.5], lambdas: vec![0.1], folds: 2, seed: 0 })
+            .with_solver(SolverBackend::Auto);
+        assert_eq!(cv.resolved_solver(), SolverBackend::Apgd);
+    }
+
+    #[test]
+    fn backend_for_is_feature_aware() {
+        assert!(backend_for(None).is_ok());
+        assert!(backend_for(Some("native")).is_ok());
+        let err = backend_for(Some("bogus")).unwrap_err().to_string();
+        assert!(err.contains(BACKEND_NAMES), "{err}");
+        #[cfg(not(feature = "xla"))]
+        {
+            assert!(!BACKEND_NAMES.contains("xla"), "names must match the build");
+            let err = backend_for(Some("xla")).unwrap_err().to_string();
+            assert!(err.contains("not compiled"), "{err}");
+        }
+        #[cfg(feature = "xla")]
+        assert!(BACKEND_NAMES.contains("xla"));
     }
 
     #[test]

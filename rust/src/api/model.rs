@@ -11,6 +11,7 @@ use crate::engine::{GridFit, LockstepStats, PredictPlan};
 use crate::kqr::KqrFit;
 use crate::linalg::Matrix;
 use crate::nckqr::NckqrFit;
+use crate::solver::SolverBackend;
 use crate::util::Json;
 use anyhow::Result;
 use std::path::Path;
@@ -79,6 +80,10 @@ pub struct ModelSet {
     /// Runtime-only bundle accounting from the lockstep grid driver;
     /// not persisted (it does not affect predictions).
     pub lockstep: Option<LockstepStats>,
+    /// Which solver backend produced the fits (always concrete, never
+    /// `Auto`). Runtime-only diagnostics, like `lockstep`: artifacts do
+    /// not persist it, so reloaded models report `None`.
+    pub solver: Option<SolverBackend>,
 }
 
 /// The unified fitted-model facade (see module docs).
@@ -98,6 +103,7 @@ impl QuantileModel {
             shape,
             cv: Vec::new(),
             lockstep: grid.lockstep,
+            solver: Some(grid.solver),
         })
     }
 
@@ -255,6 +261,9 @@ impl QuantileModel {
                     ("kkt_pass", Json::Bool(self.kkt_pass())),
                     ("shape", shape_to_json(&s.shape)),
                 ];
+                if let Some(sb) = s.solver {
+                    pairs.push(("solver", Json::str(sb.as_str())));
+                }
                 if !s.cv.is_empty() {
                     pairs.push(("cv", Json::Arr(s.cv.iter().map(CvSummary::to_json).collect())));
                 }

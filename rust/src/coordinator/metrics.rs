@@ -10,6 +10,12 @@ pub struct Metrics {
     pub jobs_completed: AtomicU64,
     pub jobs_failed: AtomicU64,
     pub fits_total: AtomicU64,
+    /// Fits executed by the APGD backend (counted per request after the
+    /// spec's `auto` choice is resolved, so the pair always sums to the
+    /// number of successful fit requests).
+    pub solver_apgd_fits: AtomicU64,
+    /// Fits executed by the pALM semismooth-Newton backend.
+    pub solver_ssn_fits: AtomicU64,
     pub predict_requests: AtomicU64,
     pub apgd_iters_total: AtomicU64,
     /// Microseconds spent inside solvers.
@@ -57,6 +63,8 @@ impl Metrics {
             ("jobs_completed", Json::num(Self::get(&self.jobs_completed) as f64)),
             ("jobs_failed", Json::num(Self::get(&self.jobs_failed) as f64)),
             ("fits_total", Json::num(Self::get(&self.fits_total) as f64)),
+            ("solver_apgd_fits", Json::num(Self::get(&self.solver_apgd_fits) as f64)),
+            ("solver_ssn_fits", Json::num(Self::get(&self.solver_ssn_fits) as f64)),
             ("predict_requests", Json::num(Self::get(&self.predict_requests) as f64)),
             ("apgd_iters_total", Json::num(Self::get(&self.apgd_iters_total) as f64)),
             ("solver_micros", Json::num(Self::get(&self.solver_micros) as f64)),

@@ -9,7 +9,7 @@
 //! | cmd | fields | response |
 //! |---|---|---|
 //! | `ping` | — | `{"ok":true,"pong":true,"version":…}` |
-//! | `fit` | `spec` (a full [`FitSpec`] document: kernel — optionally with an `approx` block `{"type":"nystrom","m":…,"seed":…}` selecting the low-rank Nyström representation — + task `single`/`path`/`grid`/`noncrossing`/`cv` + option overrides + top-level `seed`), **or** the legacy flat form `x`, `y`, `tau`, `lambda`, optional `kernel` | `{"ok":true,"model":"m0","kind":…,"taus":[…],"objective":…,"kkt_pass":…,"diagnostics":{…}}` plus `apgd_iters` (kqr) / `crossings` (nckqr) / `count` (set) |
+//! | `fit` | `spec` (a full [`FitSpec`] document: kernel — optionally with an `approx` block `{"type":"nystrom","m":…,"seed":…}` selecting the low-rank Nyström representation — + task `single`/`path`/`grid`/`noncrossing`/`cv` + option overrides + an optional `"solver"` field `"apgd"`/`"ssn"`/`"auto"` choosing the optimizer backend + top-level `seed`), **or** the legacy flat form `x`, `y`, `tau`, `lambda`, optional `kernel` | `{"ok":true,"model":"m0","kind":…,"taus":[…],"objective":…,"kkt_pass":…,"diagnostics":{…}}` plus `apgd_iters` (kqr) / `crossings` (nckqr) / `count` (set) |
 //! | `fit_nc` | legacy flat non-crossing form: `x`, `y`, `taus`, `lam1`, `lam2`, optional `kernel` | as `fit` (kind `nckqr`) |
 //! | `predict` | `model`, `x`, optional `"stream": true` (+ `chunk_points`, default 256) | `{"ok":true,"taus":[…],"pred":[[…]…]}`; with `stream` the prediction matrix is chunked across lines — a header `{"ok":true,"stream":true,"taus":…,"levels":…,"points":…,"chunk_points":…,"chunks":…}`, one `{"chunk":i,"start":j,"pred":[[…]…]}` record per column range, and a `{"ok":true,"done":true,"chunks":n}` terminator — so a connection never holds one giant response line in memory |
 //! | `save` | `model`, optional `name` (single path component; the artifact lands in the registry's persistence dir — wire clients can never address arbitrary server paths) | `{"ok":true,"path":…}`, plus `warning` when this model's earlier write-through persistence had failed |
@@ -17,7 +17,7 @@
 //! | `export` | `model` | `{"ok":true,"model":…,"artifact":{…}}` (inline artifact document) |
 //! | `models` | — | `{"ok":true,"models":[…]}` |
 //! | `drop` | `model` | `{"ok":true}` (also removes the persisted artifact) |
-//! | `metrics` | — | counter object incl. `gram_cache_*`, `persist_errors` (failed registry write-throughs), and the serving-path fields `predict_batches` / `predict_rejects` / `predict_latency_us_p50|p95|p99|max` / `predict_batch_p50|p95|p99|max`; `warm_evictions` (like `jobs_*`) is populated by a scheduler — non-zero on the wire only when a co-located scheduler shares this server's `Metrics` (see `Scheduler::with_engine_and_metrics`); also reports the resolved SIMD dispatch (`simd_isa`: `"avx2"`/`"neon"`/`"scalar"`, `simd_fma`: bool) |
+//! | `metrics` | — | counter object incl. `gram_cache_*`, `persist_errors` (failed registry write-throughs), the per-backend fit counters `solver_apgd_fits` / `solver_ssn_fits` (incremented after `auto` resolution, so they record what actually ran), and the serving-path fields `predict_batches` / `predict_rejects` / `predict_latency_us_p50|p95|p99|max` / `predict_batch_p50|p95|p99|max`; `warm_evictions` (like `jobs_*`) is populated by a scheduler — non-zero on the wire only when a co-located scheduler shares this server's `Metrics` (see `Scheduler::with_engine_and_metrics`); also reports the resolved SIMD dispatch (`simd_isa`: `"avx2"`/`"neon"`/`"scalar"`, `simd_fma`: bool) |
 //!
 //! `predict` requests are **micro-batched**: concurrent requests for the
 //! same model inside the `FASTKQR_BATCH_WINDOW_US` window are coalesced
@@ -298,6 +298,15 @@ fn dispatch(state: &ProtocolState, req: &Json) -> Result<Reply> {
             let spec = spec_from_request(state, req, cmd == "fit_nc")?;
             let model = state.engine.run(&spec)?;
             Metrics::incr(&state.metrics.fits_total);
+            // Count per backend after `auto` resolution so operators can
+            // see what actually ran; apgd + ssn always sums to the number
+            // of successful fit requests.
+            match spec.resolved_solver() {
+                crate::solver::SolverBackend::Ssn => {
+                    Metrics::incr(&state.metrics.solver_ssn_fits)
+                }
+                _ => Metrics::incr(&state.metrics.solver_apgd_fits),
+            }
             let mut pairs = fit_response(&model);
             pairs.push(("model", Json::str(state.registry.insert(model))));
             one(Json::obj(pairs))
@@ -618,6 +627,31 @@ mod tests {
         // metrics reports the persistence-failure counter (0 here)
         let m = handle_line(&st, r#"{"cmd":"metrics"}"#);
         assert_eq!(m.get_f64("persist_errors"), Some(0.0));
+    }
+
+    #[test]
+    fn ssn_solver_fits_over_the_wire_and_counts() {
+        let st = state();
+        let req = r#"{"cmd":"fit","spec":{
+            "x":[[0.0],[0.2],[0.4],[0.6],[0.8],[1.0],[0.1],[0.9]],
+            "y":[0.0,0.6,0.9,0.9,0.6,0.0,0.3,0.3],
+            "kernel":{"type":"rbf","sigma":0.4},
+            "solver":"ssn",
+            "task":{"type":"single","tau":0.5,"lambda":0.01}}}"#
+            .replace('\n', " ");
+        let r = handle_line(&st, &req);
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{}", r.to_string());
+        assert_eq!(r.get("kkt_pass").and_then(Json::as_bool), Some(true));
+        // A plain fit (no solver field) lands in the apgd bucket.
+        let legacy = r#"{"cmd":"fit","x":[[0.0],[0.2],[0.4],[0.6],[0.8],[1.0],[0.1],[0.9]],
+                      "y":[0.0,0.6,0.9,0.9,0.6,0.0,0.3,0.3],"tau":0.5,"lambda":0.01}"#
+            .replace('\n', " ");
+        let r2 = handle_line(&st, &legacy);
+        assert_eq!(r2.get("ok").and_then(Json::as_bool), Some(true));
+        let m = handle_line(&st, r#"{"cmd":"metrics"}"#);
+        assert_eq!(m.get_f64("solver_ssn_fits"), Some(1.0));
+        assert_eq!(m.get_f64("solver_apgd_fits"), Some(1.0));
+        assert_eq!(m.get_f64("fits_total"), Some(2.0));
     }
 
     #[test]

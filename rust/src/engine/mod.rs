@@ -52,6 +52,7 @@ use crate::kqr::{KqrFit, KqrSolver, SolveOptions};
 use crate::linalg::par::{self, Parallelism};
 use crate::linalg::Matrix;
 use crate::nckqr::{NcOptions, NckqrSolver};
+use crate::solver::{self, SolverBackend};
 use crate::util::panic_message;
 use anyhow::{anyhow, ensure, Result};
 use std::sync::{Arc, OnceLock};
@@ -283,17 +284,57 @@ impl FitEngine {
         lockstep: Option<bool>,
         opts: Option<SolveOptions>,
     ) -> Result<GridFit> {
+        self.fit_grid_with_solver(
+            x,
+            y,
+            kernel,
+            taus,
+            lambdas,
+            approx,
+            lockstep,
+            opts,
+            SolverBackend::Apgd,
+        )
+    }
+
+    /// [`FitEngine::fit_grid_with_strategy`] with an explicit solver
+    /// backend. `Auto` resolves here via [`solver::auto_select`] from
+    /// (n, basis rank, grid size) — a pure function of the problem, so
+    /// the same spec picks the same backend on any machine. The SSN
+    /// backend has no lockstep driver: it ignores the `lockstep` hint
+    /// and always reports `GridFit::lockstep = None`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fit_grid_with_solver(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        kernel: &Kernel,
+        taus: &[f64],
+        lambdas: &[f64],
+        approx: ApproxSpec,
+        lockstep: Option<bool>,
+        opts: Option<SolveOptions>,
+        backend: SolverBackend,
+    ) -> Result<GridFit> {
         ensure!(!taus.is_empty(), "fit_grid: empty tau grid");
         ensure!(!lambdas.is_empty(), "fit_grid: empty lambda grid");
         let opts = opts.unwrap_or_else(|| self.config.opts.clone());
         let solver = self.solver_approx(x, y, kernel, approx, opts)?;
-        if lockstep.unwrap_or_else(|| self.lockstep_enabled()) {
+        let backend = match backend {
+            SolverBackend::Auto => {
+                solver::auto_select(y.len(), solver.state_dim(), taus.len() * lambdas.len())
+            }
+            concrete => concrete,
+        };
+        if backend == SolverBackend::Apgd && lockstep.unwrap_or_else(|| self.lockstep_enabled())
+        {
             let (fits, stats) = lockstep::fit_grid_lockstep(self, &solver, taus, lambdas)?;
             return Ok(GridFit {
                 taus: taus.to_vec(),
                 lambdas: lambdas.to_vec(),
                 fits,
                 lockstep: Some(stats),
+                solver: SolverBackend::Apgd,
             });
         }
         // Inside an outer serial scope (e.g. a scheduler worker) the grid
@@ -303,40 +344,65 @@ impl FitEngine {
         } else {
             self.config.par.threads.min(taus.len()).max(1)
         };
-        let fits: Vec<Vec<KqrFit>> = if workers > 1 && taus.len() > 1 {
-            let chunk = (taus.len() + workers - 1) / workers;
-            let solver_ref = &solver;
-            let chunk_results: Vec<Result<Vec<Vec<KqrFit>>>> = std::thread::scope(|s| {
-                let handles: Vec<_> = taus
-                    .chunks(chunk)
-                    .map(|tau_chunk| {
-                        s.spawn(move || {
-                            par::serial_scope(|| fit_tau_columns(solver_ref, tau_chunk, lambdas))
-                        })
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| {
-                        // A poisoned worker must not abort a process that
-                        // is serving other jobs: surface the panic as an
-                        // error on this grid only.
-                        h.join().unwrap_or_else(|p| {
-                            Err(anyhow!("fit_grid worker panicked: {}", panic_message(&p)))
-                        })
-                    })
-                    .collect()
-            });
-            let mut all = Vec::with_capacity(taus.len());
-            for r in chunk_results {
-                all.extend(r?);
-            }
-            all
-        } else {
-            fit_tau_columns(&solver, taus, lambdas)?
+        let fit_cols: ColumnDriver = match backend {
+            SolverBackend::Ssn => solver::fit_tau_columns_ssn,
+            _ => fit_tau_columns,
         };
-        Ok(GridFit { taus: taus.to_vec(), lambdas: lambdas.to_vec(), fits, lockstep: None })
+        let fits = chunked_tau_columns(&solver, taus, lambdas, workers, fit_cols)?;
+        Ok(GridFit {
+            taus: taus.to_vec(),
+            lambdas: lambdas.to_vec(),
+            fits,
+            lockstep: None,
+            solver: backend,
+        })
     }
+}
+
+/// A sequential multi-column grid driver: both the APGD and the SSN
+/// backends expose this exact shape, which is what lets one chunking
+/// harness serve them both.
+type ColumnDriver = fn(&KqrSolver, &[f64], &[f64]) -> Result<Vec<Vec<KqrFit>>>;
+
+/// Run `fit_cols` over the τ axis, chunked onto scoped threads when the
+/// engine has spare workers (cross-column warm-start seeding then
+/// applies within each chunk); each worker runs with intra-op
+/// parallelism disabled to avoid oversubscription.
+fn chunked_tau_columns(
+    solver: &KqrSolver,
+    taus: &[f64],
+    lambdas: &[f64],
+    workers: usize,
+    fit_cols: ColumnDriver,
+) -> Result<Vec<Vec<KqrFit>>> {
+    if workers <= 1 || taus.len() <= 1 {
+        return fit_cols(solver, taus, lambdas);
+    }
+    let chunk = (taus.len() + workers - 1) / workers;
+    let chunk_results: Vec<Result<Vec<Vec<KqrFit>>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = taus
+            .chunks(chunk)
+            .map(|tau_chunk| {
+                s.spawn(move || par::serial_scope(|| fit_cols(solver, tau_chunk, lambdas)))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                // A poisoned worker must not abort a process that
+                // is serving other jobs: surface the panic as an
+                // error on this grid only.
+                h.join().unwrap_or_else(|p| {
+                    Err(anyhow!("fit_grid worker panicked: {}", panic_message(&p)))
+                })
+            })
+            .collect()
+    });
+    let mut all = Vec::with_capacity(taus.len());
+    for r in chunk_results {
+        all.extend(r?);
+    }
+    Ok(all)
 }
 
 /// Fit a run of τ columns serially, seeding each column's largest-λ fit
@@ -391,6 +457,9 @@ pub struct GridFit {
     /// Bundle accounting when the lockstep driver produced this grid
     /// (`None` for the sequential path).
     pub lockstep: Option<LockstepStats>,
+    /// Which backend actually fitted the cells — always concrete
+    /// (`Auto` resolves before fitting starts).
+    pub solver: SolverBackend,
 }
 
 impl GridFit {
@@ -517,6 +586,59 @@ mod tests {
         for ti in 0..taus.len() {
             for li in 0..lambdas.len() {
                 assert_eq!(lock.at(ti, li).b, seq.at(ti, li).b, "({ti},{li})");
+            }
+        }
+    }
+
+    #[test]
+    fn ssn_grid_backend_matches_apgd_and_records_itself() {
+        let engine = FitEngine::with_config(EngineConfig {
+            par: Parallelism::with_threads(2),
+            ..EngineConfig::default()
+        });
+        let (data, kernel) = fixture(30, 7);
+        let taus = [0.3, 0.7];
+        let lambdas = [0.1, 0.01];
+        let apgd = engine
+            .fit_grid_with_solver(
+                &data.x,
+                &data.y,
+                &kernel,
+                &taus,
+                &lambdas,
+                ApproxSpec::Exact,
+                Some(false),
+                None,
+                crate::solver::SolverBackend::Apgd,
+            )
+            .unwrap();
+        assert_eq!(apgd.solver, crate::solver::SolverBackend::Apgd);
+        let ssn = engine
+            .fit_grid_with_solver(
+                &data.x,
+                &data.y,
+                &kernel,
+                &taus,
+                &lambdas,
+                ApproxSpec::Exact,
+                // the SSN backend must ignore the lockstep hint
+                Some(true),
+                None,
+                crate::solver::SolverBackend::Ssn,
+            )
+            .unwrap();
+        assert_eq!(ssn.solver, crate::solver::SolverBackend::Ssn);
+        assert!(ssn.lockstep.is_none(), "SSN has no lockstep driver");
+        for ti in 0..taus.len() {
+            for li in 0..lambdas.len() {
+                let (a, s) = (apgd.at(ti, li), ssn.at(ti, li));
+                assert!(s.kkt.pass, "({ti},{li}): {:?}", s.kkt);
+                assert!(
+                    (a.objective - s.objective).abs() < 1e-6 * (1.0 + a.objective.abs()),
+                    "({ti},{li}): apgd {} vs ssn {}",
+                    a.objective,
+                    s.objective
+                );
             }
         }
     }

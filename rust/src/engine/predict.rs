@@ -333,6 +333,7 @@ mod tests {
             shape: crate::api::SetShape::Path { tau: 0.5 },
             cv: Vec::new(),
             lockstep: None,
+            solver: None,
         });
         let plan = PredictPlan::compile(&model);
         assert_eq!(plan.n_groups(), 1, "one solver => one group");
@@ -384,6 +385,7 @@ mod tests {
             shape: crate::api::SetShape::Path { tau: 0.5 },
             cv: Vec::new(),
             lockstep: None,
+            solver: None,
         });
         let plan = PredictPlan::compile(&model);
         assert_eq!(plan.n_groups(), 1, "one shared map => one feature build");
@@ -416,6 +418,7 @@ mod tests {
             shape: crate::api::SetShape::Path { tau: 0.5 },
             cv: Vec::new(),
             lockstep: None,
+            solver: None,
         });
         let plan = PredictPlan::compile(&model);
         assert_eq!(plan.n_groups(), 2);

@@ -12,7 +12,8 @@
 
 use crate::backend::{Backend, NativeBackend};
 use crate::data::{synth, Rng};
-use crate::engine::{EngineConfig, FitEngine};
+use crate::engine::{ApproxSpec, EngineConfig, FitEngine, GridFit};
+use crate::solver::SolverBackend;
 use crate::kernel::{median_heuristic_sigma, Kernel};
 use crate::kqr::apgd::ApgdState;
 use crate::kqr::KqrSolver;
@@ -203,6 +204,16 @@ pub struct GridBench {
     /// max over grid cells of |Δb| and sup|Δα| between the lockstep path
     /// and the sequential oracle, both run with serial GEMV kernels.
     pub parity_max_abs: f64,
+    /// SSN race, dense basis: wall of the pALM semismooth-Newton backend
+    /// on the same grid, and its worst relative objective gap vs APGD.
+    pub ssn: BenchStats,
+    pub ssn_obj_gap: f64,
+    /// SSN race, thin basis (Nyström rank `lowrank_m` ≪ n — the regime
+    /// the backend targets): APGD vs SSN wall and the objective gap.
+    pub lowrank_m: usize,
+    pub apgd_lowrank: BenchStats,
+    pub ssn_lowrank: BenchStats,
+    pub ssn_lowrank_obj_gap: f64,
     pub threads: usize,
     /// Resolved SIMD tier ("avx2" | "neon" | "scalar") and FMA flag, so
     /// snapshots from different hosts are interpretable.
@@ -233,8 +244,30 @@ impl GridBench {
             ("simd_isa", Json::str(self.simd_isa)),
             ("simd_fma", Json::Bool(self.simd_fma)),
             ("parity_max_abs", Json::num(self.parity_max_abs)),
+            ("ssn_wall_s", Json::num(self.ssn.median)),
+            ("ssn_speedup_vs_blas2", Json::num(self.seq.median / self.ssn.median.max(1e-12))),
+            ("ssn_obj_gap", Json::num(self.ssn_obj_gap)),
+            ("lowrank_m", Json::num(self.lowrank_m as f64)),
+            ("apgd_lowrank_wall_s", Json::num(self.apgd_lowrank.median)),
+            ("ssn_lowrank_wall_s", Json::num(self.ssn_lowrank.median)),
+            (
+                "ssn_lowrank_speedup",
+                Json::num(self.apgd_lowrank.median / self.ssn_lowrank.median.max(1e-12)),
+            ),
+            ("ssn_lowrank_obj_gap", Json::num(self.ssn_lowrank_obj_gap)),
         ])
     }
+}
+
+/// Worst relative objective gap between two grids of the same shape.
+fn max_rel_obj_gap(a: &GridFit, b: &GridFit) -> f64 {
+    let mut worst = 0.0f64;
+    for (ra, rb) in a.fits.iter().zip(&b.fits) {
+        for (fa, fb) in ra.iter().zip(rb) {
+            worst = worst.max((fa.objective - fb.objective).abs() / (1.0 + fa.objective.abs()));
+        }
+    }
+    worst
 }
 
 /// Benchmark the full grid solve: sequential `fit_grid` (BLAS-2, the
@@ -280,6 +313,49 @@ pub fn grid_bench(n: usize, t_count: usize, l_count: usize, reps: usize) -> Resu
                 .total_iters()
         });
     let speedup = seq.median / lockstep.median.max(1e-12);
+
+    // SSN race, dense basis: same grid through the semismooth-Newton
+    // backend (sequential column driver; lockstep is APGD-only).
+    let grid_with = |engine: &FitEngine, approx: ApproxSpec, backend: SolverBackend| {
+        engine
+            .fit_grid_with_solver(
+                &data.x,
+                &data.y,
+                &kernel,
+                &taus,
+                &lambdas,
+                approx,
+                Some(false),
+                None,
+                backend,
+            )
+            .expect("grid")
+    };
+    let ssn = run_bench(&format!("grid ssn      n={n} {t_count}x{l_count}"), 1, reps, |_| {
+        grid_with(&seq_engine, ApproxSpec::Exact, SolverBackend::Ssn).total_iters()
+    });
+    let ssn_obj_gap = max_rel_obj_gap(
+        &grid_with(&seq_engine, ApproxSpec::Exact, SolverBackend::Apgd),
+        &grid_with(&seq_engine, ApproxSpec::Exact, SolverBackend::Ssn),
+    );
+
+    // SSN race, thin basis: rank m ≪ n is where the (m+1)² Newton
+    // systems pay off — the config SSN is expected to win.
+    let m = if n <= 8 { n } else { (n / 16).max(8) };
+    let ny = ApproxSpec::Nystrom { m, seed: 7 };
+    let apgd_lowrank =
+        run_bench(&format!("grid apgd ny(m={m}) n={n} {t_count}x{l_count}"), 1, reps, |_| {
+            grid_with(&seq_engine, ny, SolverBackend::Apgd).total_iters()
+        });
+    let ssn_lowrank =
+        run_bench(&format!("grid ssn  ny(m={m}) n={n} {t_count}x{l_count}"), 1, reps, |_| {
+            grid_with(&seq_engine, ny, SolverBackend::Ssn).total_iters()
+        });
+    let ssn_lowrank_obj_gap = max_rel_obj_gap(
+        &grid_with(&seq_engine, ny, SolverBackend::Apgd),
+        &grid_with(&seq_engine, ny, SolverBackend::Ssn),
+    );
+
     let (gemm, gflops) = gemm_gflops(n, reps.max(2));
     let (_, gflops_scalar) = gemm_gflops_with(n, reps.max(2), simd::scalar());
 
@@ -313,6 +389,12 @@ pub fn grid_bench(n: usize, t_count: usize, l_count: usize, reps: usize) -> Resu
         gemm_gflops: gflops,
         gemm_gflops_scalar: gflops_scalar,
         parity_max_abs,
+        ssn,
+        ssn_obj_gap,
+        lowrank_m: m,
+        apgd_lowrank,
+        ssn_lowrank,
+        ssn_lowrank_obj_gap,
         threads: par::global().threads,
         simd_isa: simd::global().isa.as_str(),
         simd_fma: simd::global().fma,
@@ -349,11 +431,20 @@ mod tests {
         assert!(gb.gemm_gflops_scalar > 0.0);
         assert!(!gb.simd_isa.is_empty());
         assert!(gb.parity_max_abs <= 1e-10, "parity {}", gb.parity_max_abs);
+        // The SSN race columns: wall positive, objectives agree on both
+        // the dense and the thin basis (default-tolerance solves).
+        assert!(gb.ssn.median > 0.0);
+        assert!(gb.ssn_obj_gap <= 1e-4, "ssn obj gap {}", gb.ssn_obj_gap);
+        assert!(gb.lowrank_m >= 8 && gb.lowrank_m <= gb.n);
+        assert!(gb.apgd_lowrank.median > 0.0 && gb.ssn_lowrank.median > 0.0);
+        assert!(gb.ssn_lowrank_obj_gap <= 1e-4, "lowrank gap {}", gb.ssn_lowrank_obj_gap);
         let json = gb.to_json().to_string();
         assert!(json.contains("\"speedup\""));
         assert!(json.contains("\"parity_max_abs\""));
         assert!(json.contains("\"simd_isa\""));
         assert!(json.contains("\"gemm_gflops_scalar\""));
+        assert!(json.contains("\"ssn_wall_s\""));
+        assert!(json.contains("\"ssn_lowrank_speedup\""));
     }
 
     #[test]

@@ -24,6 +24,14 @@ pub struct KktReport {
 }
 
 impl KktReport {
+    /// Scalar certificate quality: the worse of the two stationarity
+    /// measures. Both solver backends (APGD's γ ladder and pALM-SSN's
+    /// outer loop) keep the iterate with the smallest score, so
+    /// "best-so-far" means the same thing everywhere.
+    pub fn score(&self) -> f64 {
+        self.max_stationarity.max(self.intercept)
+    }
+
     /// Artifact/diagnostics serialization (see [`crate::api`]).
     pub fn to_json(&self) -> crate::util::Json {
         use crate::util::Json;

@@ -511,7 +511,7 @@ impl KqrSolver {
                     band,
                 );
             }
-            let score = rep.max_stationarity.max(rep.intercept);
+            let score = rep.score();
             let replace = match &best {
                 None => true,
                 Some((s, ..)) => score < *s,

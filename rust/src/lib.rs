@@ -57,6 +57,14 @@
 //! carry a compressed O(m) landmark predictor that persists as an O(m)
 //! artifact and predicts in O(m·p) per point.
 //!
+//! The engine fits through one of two **solver backends**
+//! ([`solver::SolverBackend`]): the paper's finite-smoothing APGD
+//! ([`kqr`], the default) or a pALM semismooth-Newton method
+//! ([`solver::ssn`]) whose active-set Newton systems are (rank+1)² —
+//! the backend of choice on thin Nyström/RFF bases. Both certify
+//! against the same exact KKT report; `Auto` picks per problem from a
+//! deterministic cost model ([`solver::auto_select`]).
+//!
 //! On top of the engine sits the declarative **fit API** ([`api`]): a
 //! serializable [`api::FitSpec`] (kernel — optionally with a Nyström
 //! `approx` block — + task + option overrides + a master `seed` that
@@ -106,6 +114,7 @@ pub mod linalg;
 pub mod nckqr;
 pub mod runtime;
 pub mod smooth;
+pub mod solver;
 pub mod spectral;
 pub mod util;
 
@@ -122,6 +131,7 @@ pub mod prelude {
     pub use crate::kqr::{KqrFit, KqrSolver, SolveOptions};
     pub use crate::nckqr::{NcOptions, NckqrFit, NckqrSolver};
     pub use crate::smooth::pinball_loss;
+    pub use crate::solver::SolverBackend;
     pub use crate::spectral::{GramRepr, LowRankCoef, LowRankFactor};
 }
 

@@ -91,6 +91,53 @@ impl Cholesky {
     pub fn factor(&self) -> &Matrix {
         &self.l
     }
+
+    /// Rank-1 update in place: after the call the factor satisfies
+    /// `L Lᵀ = a + x xᵀ`. LINPACK-style Givens sweep, O(n²); `x` is
+    /// consumed as scratch.
+    pub fn update(&mut self, x: &mut [f64]) {
+        let n = self.l.rows();
+        assert_eq!(x.len(), n);
+        for k in 0..n {
+            let lkk = self.l[(k, k)];
+            let r = lkk.hypot(x[k]);
+            let c = r / lkk;
+            let s = x[k] / lkk;
+            self.l[(k, k)] = r;
+            for i in (k + 1)..n {
+                let lik = (self.l[(i, k)] + s * x[i]) / c;
+                x[i] = c * x[i] - s * lik;
+                self.l[(i, k)] = lik;
+            }
+        }
+    }
+
+    /// Rank-1 downdate in place: on success the factor satisfies
+    /// `L Lᵀ = a − x xᵀ`. Fails with [`CholError::NotPositiveDefinite`]
+    /// when the downdated matrix loses definiteness; the factor is left
+    /// partially modified, so callers must refactor on error. `x` is
+    /// consumed as scratch.
+    pub fn downdate(&mut self, x: &mut [f64]) -> Result<(), CholError> {
+        let n = self.l.rows();
+        assert_eq!(x.len(), n);
+        for k in 0..n {
+            let lkk = self.l[(k, k)];
+            let r2 = lkk * lkk - x[k] * x[k];
+            if r2 <= 0.0 {
+                return Err(CholError::NotPositiveDefinite { pivot: k, value: r2 });
+            }
+            let r = r2.sqrt();
+            let c = r / lkk;
+            let s = x[k] / lkk;
+            self.l[(k, k)] = r;
+            for i in (k + 1)..n {
+                let lik = (self.l[(i, k)] - s * x[i]) / c;
+                x[i] = c * x[i] - s * lik;
+                self.l[(i, k)] = lik;
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -148,5 +195,70 @@ mod tests {
     fn log_det_identity_is_zero() {
         let ch = Cholesky::new(&Matrix::eye(5)).unwrap();
         assert!(ch.log_det().abs() < 1e-14);
+    }
+
+    #[test]
+    fn rank_one_update_matches_refactorization() {
+        let n = 10;
+        let mut a = random_spd(n, 21);
+        let mut ch = Cholesky::new(&a).unwrap();
+        let mut rng = Rng::new(5);
+        for round in 0..4 {
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            ch.update(&mut x.clone());
+            for i in 0..n {
+                for j in 0..n {
+                    a[(i, j)] += x[i] * x[j];
+                }
+            }
+            let fresh = Cholesky::new(&a).unwrap();
+            let diff = ch.factor().max_abs_diff(fresh.factor());
+            assert!(diff < 1e-12, "round {round}: update drift {diff:.3e}");
+        }
+    }
+
+    #[test]
+    fn rank_one_downdate_matches_refactorization() {
+        let n = 10;
+        let mut a = random_spd(n, 33);
+        let mut ch = Cholesky::new(&a).unwrap();
+        let mut rng = Rng::new(6);
+        for round in 0..4 {
+            // small vectors keep A − xxᵀ safely PD for random_spd's diagonal
+            let x: Vec<f64> = (0..n).map(|_| 0.3 * rng.normal()).collect();
+            ch.downdate(&mut x.clone()).unwrap();
+            for i in 0..n {
+                for j in 0..n {
+                    a[(i, j)] -= x[i] * x[j];
+                }
+            }
+            let fresh = Cholesky::new(&a).unwrap();
+            let diff = ch.factor().max_abs_diff(fresh.factor());
+            assert!(diff < 1e-12, "round {round}: downdate drift {diff:.3e}");
+        }
+    }
+
+    #[test]
+    fn update_then_downdate_roundtrips() {
+        let n = 8;
+        let a = random_spd(n, 11);
+        let mut ch = Cholesky::new(&a).unwrap();
+        let mut rng = Rng::new(3);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        ch.update(&mut x.clone());
+        ch.downdate(&mut x.clone()).unwrap();
+        let fresh = Cholesky::new(&a).unwrap();
+        assert!(ch.factor().max_abs_diff(fresh.factor()) < 1e-12);
+    }
+
+    #[test]
+    fn downdate_detects_lost_definiteness() {
+        // A = I, x = 2e₀ → A − xxᵀ has a −3 pivot.
+        let mut ch = Cholesky::new(&Matrix::eye(3)).unwrap();
+        let mut x = vec![2.0, 0.0, 0.0];
+        match ch.downdate(&mut x) {
+            Err(CholError::NotPositiveDefinite { pivot: 0, .. }) => {}
+            other => panic!("expected NotPositiveDefinite, got {other:?}"),
+        }
     }
 }

@@ -25,7 +25,12 @@
 //!   version    version + resolved SIMD dispatch (ISA tier, FMA, threads)
 //!
 //! Common options: --data yuan|friedman|sine|gagurine|mcycle|crabs|boston
-//! --n --p --tau --lambda --backend native|xla --seed; see DESIGN.md §5.
+//! --n --p --tau --lambda --backend native|xla --solver apgd|ssn|auto
+//! --seed; see DESIGN.md §5. `--solver` picks the optimizer on every
+//! fitting subcommand: `apgd` (the paper's finite-smoothing APGD, the
+//! default), `ssn` (pALM semismooth Newton — strongest on --nystrom /
+//! --rff thin bases), or `auto` (per-problem cost model, deterministic
+//! from the spec).
 //! `--nystrom <m>` switches every fitting subcommand to the rank-m
 //! low-rank (Nyström) Gram representation — no n×n matrix, O(n·m)
 //! memory — with landmark sampling seeded by `--seed` (default 2024) so
@@ -175,9 +180,18 @@ fn spec_from_args(args: &Args, task: fastkqr::api::Task) -> Result<FitSpec> {
     match args.get_str("backend", "native") {
         "native" => {}
         other @ "xla" => spec = spec.with_backend(other),
-        other => bail!("unknown --backend {other:?} (native|xla)"),
+        other => bail!("unknown --backend {other:?} ({})", fastkqr::api::BACKEND_NAMES),
+    }
+    // Strict like every other flag: an unknown solver name is an error,
+    // never a silent default. Absent → the spec omits the field (and the
+    // document keeps its lowest-compatible version).
+    if let Some(s) = args.get("solver") {
+        spec = spec.with_solver(fastkqr::solver::SolverBackend::parse(s)?);
     }
     println!("dataset        {name}  (n={}, p={})", spec.x.rows(), spec.x.cols());
+    if let Some(requested) = spec.solver {
+        println!("solver         {} (requested {requested})", spec.resolved_solver());
+    }
     match spec.approx {
         ApproxSpec::Nystrom { m, seed } => {
             println!("gram repr      nystrom (m={m}, seed={seed}; O(n·m) memory)");

@@ -1,0 +1,636 @@
+//! pALM-SSN: preconditioned augmented Lagrangian with semismooth-Newton
+//! inner solves for the exact (non-smooth) KQR problem.
+//!
+//! Following Deng–Li–Zhang ("Scalable Kernel Quantile Regression: A
+//! Preconditioned Augmented Lagrangian Method"), the check-loss residual
+//! is split out as a constrained variable and eliminated through its
+//! Moreau envelope, leaving a C¹ subproblem whose generalized Hessian is
+//! diagonal-plus-low-rank on the **active set** (points inside the
+//! residual band). Each Newton system is solved by a Cholesky factor of
+//! an (r+1)×(r+1) matrix — r the spectral rank — maintained across
+//! Newton steps with rank-1 up/down-dates ([`Cholesky::update`] /
+//! [`Cholesky::downdate`]) as points enter and leave the active set.
+//!
+//! **Coordinates.** We work in η = Λ^{1/2}β (β the spectral coordinates
+//! of [`crate::spectral::SpectralBasis`]), with W = U·diag(√λ_j), so the
+//! fitted values are f = b·1 + Wη and the RKHS penalty is (λ/2)‖η‖².
+//! This makes the Newton system unconditionally positive definite for
+//! every Gram representation — dense, Nyström and random-feature bases
+//! all pass through unchanged, and rank-deficient spectra cost nothing.
+//!
+//! **Augmented Lagrangian.** With u = y − b·1 − Wη (the residual) as the
+//! split variable, multipliers w and penalty σ, minimizing over u in
+//! closed form gives the reduced objective over z = (b, η)
+//!
+//!   ψ(z) = (λ/2)‖η‖² + Σ_i φ_i(v_i) + (τ_p/2)‖z − z̄‖²,
+//!     v_i = y_i − b − (Wη)_i − w_i/σ,
+//!     φ_i = Moreau envelope of c·ρ_τ at scale c = 1/(nσ),
+//!
+//! with prox(v) = v − cτ (v > cτ), v + c(1−τ) (v < −c(1−τ)), else 0 and
+//! ∇φ_i = σ·s_i, s = v − prox(v). The proximal term τ_p keeps the
+//! b-block positive definite even when the active set is empty. After
+//! each inner solve the multipliers update as w⁺ = σ(prox(v) − v) ∈
+//! −(1/n)∂ρ_τ, i.e. w stays in the box [−τ/n, (1−τ)/n].
+//!
+//! Convergence is certified by the *same* exact check-loss objective and
+//! KKT report as APGD ([`apgd::exact_objective`], [`kkt_check`]), so the
+//! two backends are interchangeable behind the engine.
+
+use crate::kqr::apgd::{self, ApgdWorkspace};
+use crate::kqr::kkt::{kkt_check, KktReport};
+use crate::kqr::{KqrFit, KqrSolver};
+use crate::linalg::{gemv, gemv_t, Cholesky, Matrix};
+use crate::smooth::rho_tau;
+use anyhow::{bail, Result};
+
+/// Initial augmented-Lagrangian penalty for a cold start.
+const SIGMA_INIT: f64 = 1.0;
+/// Multiplicative σ escalation per outer iteration.
+const SIGMA_GROWTH: f64 = 10.0;
+/// σ ceiling (the prox band 1/(nσ) is far below f64 noise here).
+const SIGMA_MAX: f64 = 1e10;
+/// Proximal (pALM) regularization: keeps the Newton system PD when the
+/// active set is empty; the prox center moves every outer iteration, so
+/// it does not bias the fixed point.
+const TAU_P: f64 = 1e-8;
+/// Inner gradient tolerance floor, in subgradient units (the same units
+/// as `SolveOptions::kkt_tol`; the default KKT gate is 1e-3).
+const INNER_TOL_FLOOR: f64 = 1e-10;
+/// Hard caps: outer (multiplier) rounds and Newton steps per inner solve.
+const MAX_OUTER: usize = 40;
+const MAX_NEWTON: usize = 100;
+/// Stop after this many consecutive outer rounds without certificate
+/// improvement once the certificate already passes.
+const MAX_STALL: usize = 3;
+
+/// Warm-startable pALM state: primal (b, η), multipliers w, penalty σ.
+///
+/// The grid drivers carry this cell-to-cell exactly like the APGD path
+/// carries [`crate::kqr::apgd::ApgdState`]: within a τ column the full
+/// state (including multipliers and a damped σ) flows down the λ path;
+/// across columns the head state seeds the neighbor after
+/// [`SsnState::retarget`] clamps the multipliers into the new τ's box.
+#[derive(Clone, Debug)]
+pub struct SsnState {
+    pub b: f64,
+    /// η = Λ^{1/2}β, length = basis dim.
+    pub eta: Vec<f64>,
+    /// Multipliers, length n, in [−τ/n, (1−τ)/n].
+    pub w: Vec<f64>,
+    /// Augmented-Lagrangian penalty; ≤ 0 means "cold" (reset on entry).
+    pub sigma: f64,
+}
+
+impl SsnState {
+    /// Cold state for a problem with `n` observations and spectral
+    /// dimension `dim`.
+    pub fn zeros(n: usize, dim: usize) -> SsnState {
+        SsnState { b: 0.0, eta: vec![0.0; dim], w: vec![0.0; n], sigma: 0.0 }
+    }
+
+    /// Prepare a state fitted at one τ to seed an adjacent τ column:
+    /// clamp the multipliers into the new box [−τ/n, (1−τ)/n] and damp σ
+    /// so the new subproblem can reshape its active set cheaply.
+    pub fn retarget(&mut self, tau: f64) {
+        let n = self.w.len().max(1) as f64;
+        let (lo, hi) = (-tau / n, (1.0 - tau) / n);
+        for wi in &mut self.w {
+            *wi = wi.clamp(lo, hi);
+        }
+        if self.sigma > 0.0 {
+            self.sigma = (self.sigma / 100.0).clamp(SIGMA_INIT, 1e4);
+        }
+    }
+}
+
+/// prox of c·ρ_τ at v, with `hi = cτ`, `lo = c(1−τ)` precomputed.
+#[inline]
+fn prox_rho(v: f64, lo: f64, hi: f64) -> f64 {
+    if v > hi {
+        v - hi
+    } else if v < -lo {
+        v + lo
+    } else {
+        0.0
+    }
+}
+
+/// Scratch buffers reused across Newton steps and outer rounds.
+struct Workspace {
+    /// fitted values b + Wη (length n)
+    f: Vec<f64>,
+    /// shifted residuals v = y − f − w/σ (length n)
+    v: Vec<f64>,
+    /// envelope gradients s = v − prox(v) (length n)
+    s: Vec<f64>,
+    /// active-set membership (prox(v_i) == 0)
+    active: Vec<bool>,
+    /// Uᵀs (length dim)
+    uts: Vec<f64>,
+    /// gradient over (b, η) (length dim+1)
+    grad: Vec<f64>,
+    /// Newton direction (length dim+1)
+    dir: Vec<f64>,
+    /// line-search direction image d_b + W d_η (length n)
+    delta: Vec<f64>,
+    /// spectral scratch (length dim)
+    scratch: Vec<f64>,
+}
+
+impl Workspace {
+    fn new(n: usize, dim: usize) -> Workspace {
+        Workspace {
+            f: vec![0.0; n],
+            v: vec![0.0; n],
+            s: vec![0.0; n],
+            active: vec![false; n],
+            uts: vec![0.0; dim],
+            grad: vec![0.0; dim + 1],
+            dir: vec![0.0; dim + 1],
+            delta: vec![0.0; n],
+            scratch: vec![0.0; dim],
+        }
+    }
+}
+
+/// The W row image of a spectral vector: out = W q = U(√λ ∘ q).
+fn w_apply(solver: &KqrSolver, sqrt_lam: &[f64], q: &[f64], scratch: &mut [f64], out: &mut [f64]) {
+    for (sc, (sl, qi)) in scratch.iter_mut().zip(sqrt_lam.iter().zip(q)) {
+        *sc = sl * qi;
+    }
+    gemv(&solver.basis.u, scratch, out);
+}
+
+/// Refresh f, v, s, active for the current (b, η, w, σ). Returns the
+/// number of active points.
+#[allow(clippy::too_many_arguments)]
+fn refresh(
+    solver: &KqrSolver,
+    sqrt_lam: &[f64],
+    b: f64,
+    eta: &[f64],
+    w: &[f64],
+    sigma: f64,
+    tau: f64,
+    ws: &mut Workspace,
+) -> usize {
+    let y = &solver.y;
+    let c = 1.0 / (y.len() as f64 * sigma);
+    let (lo, hi) = (c * (1.0 - tau), c * tau);
+    // Split the borrow: w_apply writes ws.f from ws.scratch.
+    let (scratch, f) = (&mut ws.scratch, &mut ws.f);
+    w_apply(solver, sqrt_lam, eta, scratch, f);
+    let mut n_active = 0;
+    for i in 0..y.len() {
+        let fi = b + f[i];
+        f[i] = fi;
+        let vi = y[i] - fi - w[i] / sigma;
+        ws.v[i] = vi;
+        let p = prox_rho(vi, lo, hi);
+        ws.s[i] = vi - p;
+        ws.active[i] = p == 0.0;
+        if ws.active[i] {
+            n_active += 1;
+        }
+    }
+    n_active
+}
+
+/// The reduced AL objective ψ at trial point (b+t·d_b, η+t·d_η), using
+/// the precomputed direction image Δ = d_b + W d_η (v_trial = v − tΔ).
+#[allow(clippy::too_many_arguments)]
+fn trial_objective(
+    solver: &KqrSolver,
+    lam: f64,
+    tau: f64,
+    sigma: f64,
+    tau_p: f64,
+    center: (f64, &[f64]),
+    b: f64,
+    eta: &[f64],
+    t: f64,
+    ws: &Workspace,
+) -> f64 {
+    let n = solver.y.len();
+    let nf = n as f64;
+    let c = 1.0 / (nf * sigma);
+    let (lo, hi) = (c * (1.0 - tau), c * tau);
+    let mut env = 0.0;
+    for i in 0..n {
+        let v = ws.v[i] - t * ws.delta[i];
+        let u = prox_rho(v, lo, hi);
+        env += rho_tau(u, tau) / nf + 0.5 * sigma * (u - v) * (u - v);
+    }
+    let (cb, ceta) = center;
+    let bt = b + t * ws.dir[0];
+    let mut pen = 0.0;
+    let mut prox_term = (bt - cb) * (bt - cb);
+    for j in 0..eta.len() {
+        let ej = eta[j] + t * ws.dir[j + 1];
+        pen += ej * ej;
+        let dj = ej - ceta[j];
+        prox_term += dj * dj;
+    }
+    env + 0.5 * lam * pen + 0.5 * tau_p * prox_term
+}
+
+/// Build the generalized-Hessian Cholesky factor from scratch:
+/// H = diag(τ_p, (λ+τ_p)I) + σ Σ_{i∈A} j_i j_iᵀ, j_i = [1; W_i].
+fn refactor(
+    solver: &KqrSolver,
+    sqrt_lam: &[f64],
+    lam: f64,
+    sigma: f64,
+    tau_p: f64,
+    active: &[bool],
+) -> Result<Cholesky> {
+    let dim = sqrt_lam.len();
+    let m = dim + 1;
+    let mut h = Matrix::zeros(m, m);
+    h[(0, 0)] = tau_p;
+    for j in 0..dim {
+        h[(j + 1, j + 1)] = lam + tau_p;
+    }
+    for (i, &on) in active.iter().enumerate() {
+        if !on {
+            continue;
+        }
+        let row = solver.basis.u.row(i);
+        // lower triangle only (Cholesky::new reads nothing else)
+        h[(0, 0)] += sigma;
+        for a in 0..dim {
+            let ja = sqrt_lam[a] * row[a];
+            h[(a + 1, 0)] += sigma * ja;
+            for bcol in 0..=a {
+                h[(a + 1, bcol + 1)] += sigma * ja * (sqrt_lam[bcol] * row[bcol]);
+            }
+        }
+    }
+    Cholesky::new(&h).map_err(|e| anyhow::anyhow!("ssn: Newton system factorization: {e}"))
+}
+
+/// The ±√σ·j_i vector of one observation (for rank-1 factor maintenance).
+fn jacobian_column(solver: &KqrSolver, sqrt_lam: &[f64], sigma: f64, i: usize) -> Vec<f64> {
+    let row = solver.basis.u.row(i);
+    let rs = sigma.sqrt();
+    let mut x = Vec::with_capacity(sqrt_lam.len() + 1);
+    x.push(rs);
+    for (sl, r) in sqrt_lam.iter().zip(row) {
+        x.push(rs * sl * r);
+    }
+    x
+}
+
+/// Result of one inner semismooth-Newton solve.
+struct InnerResult {
+    newton_steps: usize,
+    refactors: usize,
+    updates: usize,
+}
+
+/// Minimize ψ over (b, η) to gradient tolerance `tol` by semismooth
+/// Newton with active-set Cholesky maintenance and Armijo backtracking.
+#[allow(clippy::too_many_arguments)]
+fn inner_solve(
+    solver: &KqrSolver,
+    sqrt_lam: &[f64],
+    tau: f64,
+    lam: f64,
+    sigma: f64,
+    tol: f64,
+    b: &mut f64,
+    eta: &mut [f64],
+    w: &[f64],
+    ws: &mut Workspace,
+) -> Result<InnerResult> {
+    let dim = sqrt_lam.len();
+    let center = (*b, eta.to_vec());
+    // Swings beyond this trigger a refactorization instead of |ΔA|
+    // rank-1 passes (each costs O(dim²)).
+    let swing_cap = 8usize.max(dim / 4);
+    let mut chol: Option<Cholesky> = None;
+    let mut prev_active: Vec<bool> = Vec::new();
+    let mut res = InnerResult { newton_steps: 0, refactors: 0, updates: 0 };
+
+    refresh(solver, sqrt_lam, *b, eta, w, sigma, tau, ws);
+    for _ in 0..MAX_NEWTON {
+        // gradient of ψ at (b, η)
+        gemv_t(&solver.basis.u, &ws.s, &mut ws.uts);
+        let mut sum_s = 0.0;
+        for &si in &ws.s {
+            sum_s += si;
+        }
+        ws.grad[0] = -sigma * sum_s + TAU_P * (*b - center.0);
+        let mut gmax = ws.grad[0].abs();
+        for j in 0..dim {
+            let g = lam * eta[j] - sigma * sqrt_lam[j] * ws.uts[j]
+                + TAU_P * (eta[j] - center.1[j]);
+            ws.grad[j + 1] = g;
+            gmax = gmax.max(g.abs());
+        }
+        if gmax <= tol {
+            break;
+        }
+
+        // factor maintenance: rank-1 up/down-dates on small active-set
+        // swings, refactorization on large ones (or downdate failure)
+        let mut factored = false;
+        if let Some(f) = chol.as_mut() {
+            let changed: Vec<(usize, bool)> = prev_active
+                .iter()
+                .zip(ws.active.iter())
+                .enumerate()
+                .filter(|(_, (p, c))| p != c)
+                .map(|(i, (_, c))| (i, *c))
+                .collect();
+            if changed.len() <= swing_cap {
+                let mut ok = true;
+                for &(i, entered) in &changed {
+                    let mut x = jacobian_column(solver, sqrt_lam, sigma, i);
+                    if entered {
+                        f.update(&mut x);
+                    } else if f.downdate(&mut x).is_err() {
+                        ok = false;
+                        break;
+                    }
+                    res.updates += 1;
+                }
+                factored = ok;
+            }
+        }
+        if !factored {
+            chol = Some(refactor(solver, sqrt_lam, lam, sigma, TAU_P, &ws.active)?);
+            res.refactors += 1;
+        }
+        prev_active.clear();
+        prev_active.extend_from_slice(&ws.active);
+
+        // Newton direction H d = −g
+        let neg: Vec<f64> = ws.grad.iter().map(|g| -g).collect();
+        let d = chol.as_ref().expect("factor present").solve(&neg);
+        ws.dir.copy_from_slice(&d);
+        let gd: f64 = ws.grad.iter().zip(&ws.dir).map(|(g, di)| g * di).sum();
+
+        // Armijo backtracking on ψ, trial points via Δ = d_b + W d_η
+        {
+            let (scratch, delta) = (&mut ws.scratch, &mut ws.delta);
+            w_apply(solver, sqrt_lam, &d[1..], scratch, delta);
+            for di in delta.iter_mut() {
+                *di += d[0];
+            }
+        }
+        let f0 = trial_objective(
+            solver, lam, tau, sigma, TAU_P, (center.0, &center.1), *b, eta, 0.0, ws,
+        );
+        let mut t = 1.0;
+        let mut accepted = false;
+        while t > 1e-12 {
+            let ft = trial_objective(
+                solver, lam, tau, sigma, TAU_P, (center.0, &center.1), *b, eta, t, ws,
+            );
+            if ft <= f0 + 1e-4 * t * gd {
+                accepted = true;
+                break;
+            }
+            t *= 0.5;
+        }
+        if !accepted {
+            // numerically flat — treat as converged
+            break;
+        }
+        *b += t * ws.dir[0];
+        for j in 0..dim {
+            eta[j] += t * ws.dir[j + 1];
+        }
+        res.newton_steps += 1;
+        refresh(solver, sqrt_lam, *b, eta, w, sigma, tau, ws);
+        // a full step that barely moved anything cannot improve further
+        let step_inf = ws.dir.iter().fold(0.0f64, |a, d| a.max(d.abs()));
+        if t * step_inf <= 1e-15 * (1.0 + eta.iter().fold(b.abs(), |a, e| a.max(e.abs()))) {
+            break;
+        }
+    }
+    Ok(res)
+}
+
+/// Per-fit pALM-SSN diagnostics (folded into [`KqrFit`] counters and
+/// surfaced by the race bench).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SsnStats {
+    /// Total Newton steps across all outer rounds.
+    pub newton_steps: usize,
+    /// Outer (multiplier-update) rounds.
+    pub outer_rounds: usize,
+    /// Full Newton-system refactorizations.
+    pub refactors: usize,
+    /// Rank-1 factor up/down-dates.
+    pub updates: usize,
+}
+
+/// Solve one (τ, λ) cell with pALM-SSN, warm-starting from (and leaving
+/// the final state in) `state`. The returned [`KqrFit`] carries the same
+/// exact objective and KKT certificate as the APGD path; its
+/// `apgd_iters` field counts Newton steps and `expansions` counts outer
+/// rounds.
+pub fn fit_warm_from(
+    solver: &KqrSolver,
+    tau: f64,
+    lam: f64,
+    state: &mut SsnState,
+) -> Result<KqrFit> {
+    let (fit, _) = fit_warm_from_stats(solver, tau, lam, state)?;
+    Ok(fit)
+}
+
+/// [`fit_warm_from`] returning the pALM-SSN work counters alongside.
+pub fn fit_warm_from_stats(
+    solver: &KqrSolver,
+    tau: f64,
+    lam: f64,
+    state: &mut SsnState,
+) -> Result<(KqrFit, SsnStats)> {
+    if !(0.0 < tau && tau < 1.0) {
+        bail!("tau must be in (0,1), got {tau}");
+    }
+    if lam <= 0.0 {
+        bail!("lambda must be positive, got {lam}");
+    }
+    let n = solver.n();
+    let dim = solver.basis.dim();
+    if state.eta.len() != dim || state.w.len() != n {
+        bail!(
+            "ssn: state dims (eta {}, w {}) do not match problem (dim {dim}, n {n})",
+            state.eta.len(),
+            state.w.len()
+        );
+    }
+    let basis = &solver.basis;
+    let y = &solver.y;
+    let opts = &solver.opts;
+    let yscale = crate::linalg::amax(y).max(1.0);
+    let band = opts.kkt_band * yscale;
+    let sqrt_lam: Vec<f64> = basis.lambda.iter().map(|l| l.max(0.0).sqrt()).collect();
+
+    // a warm σ is kept but damped; multipliers are clamped into the τ box
+    if state.sigma <= 0.0 {
+        state.sigma = SIGMA_INIT;
+    }
+    state.retarget(tau);
+    if state.sigma <= 0.0 {
+        state.sigma = SIGMA_INIT;
+    }
+
+    let mut ws = Workspace::new(n, dim);
+    let mut apgd_ws = ApgdWorkspace::for_basis(basis);
+    let mut stats = SsnStats::default();
+    let mut beta = vec![0.0; dim];
+    let mut best: Option<(f64, f64, Vec<f64>, KktReport, f64)> = None; // (score, b, eta, kkt, obj)
+    let mut prev_obj = f64::INFINITY;
+    let mut stall = 0usize;
+
+    for outer in 0..MAX_OUTER {
+        let tol = (1e-2 * 0.1f64.powi(outer as i32)).max(INNER_TOL_FLOOR);
+        let inner = inner_solve(
+            solver,
+            &sqrt_lam,
+            tau,
+            lam,
+            state.sigma,
+            tol,
+            &mut state.b,
+            &mut state.eta,
+            &state.w,
+            &mut ws,
+        )?;
+        stats.newton_steps += inner.newton_steps;
+        stats.refactors += inner.refactors;
+        stats.updates += inner.updates;
+        stats.outer_rounds = outer + 1;
+
+        // multiplier update at the final inner point: w⁺ = σ(prox(v) − v)
+        for (wi, si) in state.w.iter_mut().zip(&ws.s) {
+            *wi = -state.sigma * si;
+        }
+
+        // certify with the exact (non-smooth) certificate
+        for j in 0..dim {
+            beta[j] = if sqrt_lam[j] > 0.0 { state.eta[j] / sqrt_lam[j] } else { 0.0 };
+        }
+        let report = kkt_check(basis, y, tau, lam, state.b, &beta, opts.kkt_tol, band);
+        let obj = apgd::exact_objective(basis, lam, y, tau, state.b, &beta, &mut apgd_ws);
+        let score = report.score();
+        let improved = best.as_ref().map(|(s, ..)| score < *s).unwrap_or(true);
+        if improved {
+            best = Some((score, state.b, state.eta.clone(), report.clone(), obj));
+        }
+        let plateau = (prev_obj - obj).abs() <= 1e-11 * (1.0 + obj.abs());
+        prev_obj = obj;
+        if report.pass {
+            if tol <= INNER_TOL_FLOOR && plateau {
+                break;
+            }
+            stall = if improved { 0 } else { stall + 1 };
+            if stall >= MAX_STALL {
+                break;
+            }
+        }
+        state.sigma = (state.sigma * SIGMA_GROWTH).min(SIGMA_MAX);
+    }
+
+    let (_, best_b, best_eta, kkt, objective) =
+        best.expect("ssn: at least one outer round ran");
+    for j in 0..dim {
+        beta[j] = if sqrt_lam[j] > 0.0 { best_eta[j] / sqrt_lam[j] } else { 0.0 };
+    }
+    // singular set at the best iterate: points inside the residual band
+    let mut fitted = vec![0.0; n];
+    basis.fitted(best_b, &beta, &mut ws.scratch, &mut fitted);
+    let singular_set: Vec<usize> =
+        (0..n).filter(|&i| (y[i] - fitted[i]).abs() <= band).collect();
+    let alpha = basis.alpha_from_beta(&beta);
+    let lowrank = solver.repr.low_rank().map(|f| f.coef(&beta));
+    let rff = solver.repr.rff().map(|f| f.coef(&beta));
+    let fit = KqrFit::assemble(
+        tau,
+        lam,
+        best_b,
+        alpha,
+        objective,
+        kkt,
+        0.0,
+        stats.newton_steps,
+        stats.outer_rounds,
+        singular_set,
+        lowrank,
+        rff,
+        solver.x.clone(),
+        solver.kernel.clone(),
+    );
+    Ok((fit, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, Rng};
+    use crate::kernel::{median_heuristic_sigma, Kernel};
+
+    fn toy_solver(n: usize, seed: u64) -> KqrSolver {
+        let mut rng = Rng::new(seed);
+        let d = synth::sine_hetero(n, &mut rng);
+        let sigma = median_heuristic_sigma(&d.x);
+        KqrSolver::new(&d.x, &d.y, Kernel::Rbf { sigma }).unwrap()
+    }
+
+    #[test]
+    fn ssn_fit_passes_exact_kkt() {
+        let solver = toy_solver(24, 3);
+        let mut state = SsnState::zeros(solver.n(), solver.basis.dim());
+        let fit = fit_warm_from(&solver, 0.5, 0.05, &mut state).unwrap();
+        assert!(fit.kkt.pass, "{:?}", fit.kkt);
+        assert!(fit.apgd_iters > 0, "Newton steps recorded");
+        assert!(fit.expansions > 0, "outer rounds recorded");
+    }
+
+    #[test]
+    fn ssn_matches_apgd_objective() {
+        let solver = toy_solver(30, 7);
+        for &(tau, lam) in &[(0.25, 0.1), (0.5, 0.02), (0.9, 0.05)] {
+            let apgd_fit = solver.fit(tau, lam).unwrap();
+            let mut state = SsnState::zeros(solver.n(), solver.basis.dim());
+            let ssn_fit = fit_warm_from(&solver, tau, lam, &mut state).unwrap();
+            let gap = (apgd_fit.objective - ssn_fit.objective).abs();
+            assert!(
+                gap <= 1e-6 * (1.0 + apgd_fit.objective.abs()),
+                "tau={tau} lam={lam}: apgd {} vs ssn {} (gap {gap:.3e})",
+                apgd_fit.objective,
+                ssn_fit.objective
+            );
+        }
+    }
+
+    #[test]
+    fn ssn_rejects_bad_inputs() {
+        let solver = toy_solver(10, 1);
+        let mut state = SsnState::zeros(solver.n(), solver.basis.dim());
+        assert!(fit_warm_from(&solver, 0.0, 0.1, &mut state).is_err());
+        assert!(fit_warm_from(&solver, 0.5, 0.0, &mut state).is_err());
+        let mut short = SsnState::zeros(3, 2);
+        assert!(fit_warm_from(&solver, 0.5, 0.1, &mut short).is_err());
+    }
+
+    #[test]
+    fn warm_state_stays_in_multiplier_box() {
+        let solver = toy_solver(20, 5);
+        let mut state = SsnState::zeros(solver.n(), solver.basis.dim());
+        let tau = 0.3;
+        fit_warm_from(&solver, tau, 0.05, &mut state).unwrap();
+        let n = solver.n() as f64;
+        for &wi in &state.w {
+            assert!(
+                wi >= -tau / n - 1e-12 && wi <= (1.0 - tau) / n + 1e-12,
+                "multiplier {wi} escapes the box"
+            );
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! SSN-vs-APGD production parity: the pALM semismooth-Newton backend
+//! must land on the same minimizers as the paper's APGD across the full
+//! τ × λ grid on every Gram representation (dense, Nyström, RFF), warm
+//! starts must change iteration counts but never solutions, and the
+//! `auto` choice must be a pure function of the spec document.
+
+use fastkqr::api::{FitSpec, KernelSpec, QuantileModel, Task};
+use fastkqr::data::{synth, Rng};
+use fastkqr::engine::{ApproxSpec, EngineConfig, FitEngine};
+use fastkqr::kernel::Kernel;
+use fastkqr::kqr::SolveOptions;
+use fastkqr::linalg::Parallelism;
+use fastkqr::solver::{fit_warm_from_stats, SolverBackend, SsnState};
+
+fn fixture(n: usize, seed: u64) -> (fastkqr::data::Dataset, Kernel) {
+    let mut rng = Rng::new(seed);
+    let data = synth::sine_hetero(n, &mut rng);
+    (data, Kernel::Rbf { sigma: 0.5 })
+}
+
+/// Tight APGD so the parity gap measures solver agreement, not APGD
+/// slack: both backends then sit within ≤ 1e-8 of the shared minimizer.
+fn tight_opts() -> SolveOptions {
+    SolveOptions {
+        apgd_tol: 1e-9,
+        kkt_tol: 1e-4,
+        max_iters: 300_000,
+        ..SolveOptions::default()
+    }
+}
+
+fn serial_engine() -> FitEngine {
+    FitEngine::with_config(EngineConfig {
+        par: Parallelism::serial(),
+        opts: tight_opts(),
+        ..EngineConfig::default()
+    })
+}
+
+/// The headline acceptance: on a full 3 × 2 grid and all three Gram
+/// representations, SSN and APGD objectives agree to ≤ 1e-8 relative
+/// and both pass the same exact KKT certificate.
+#[test]
+fn ssn_matches_apgd_on_the_grid_across_representations() {
+    let (data, kernel) = fixture(40, 17);
+    let engine = serial_engine();
+    let taus = [0.25, 0.5, 0.75];
+    let lambdas = [0.1, 0.02];
+    for approx in [
+        ApproxSpec::Exact,
+        ApproxSpec::Nystrom { m: 24, seed: 7 },
+        ApproxSpec::RandomFeatures { d: 16, seed: 7 },
+    ] {
+        let apgd = engine
+            .fit_grid_with_solver(
+                &data.x,
+                &data.y,
+                &kernel,
+                &taus,
+                &lambdas,
+                approx,
+                None,
+                Some(tight_opts()),
+                SolverBackend::Apgd,
+            )
+            .unwrap();
+        let ssn = engine
+            .fit_grid_with_solver(
+                &data.x,
+                &data.y,
+                &kernel,
+                &taus,
+                &lambdas,
+                approx,
+                None,
+                Some(tight_opts()),
+                SolverBackend::Ssn,
+            )
+            .unwrap();
+        assert_eq!(apgd.solver, SolverBackend::Apgd);
+        assert_eq!(ssn.solver, SolverBackend::Ssn);
+        for (ti, tau) in taus.iter().enumerate() {
+            for (li, lam) in lambdas.iter().enumerate() {
+                let a = apgd.at(ti, li);
+                let s = ssn.at(ti, li);
+                let gap = (a.objective - s.objective).abs() / (1.0 + a.objective.abs());
+                assert!(
+                    gap <= 1e-8,
+                    "{approx:?} tau={tau} lam={lam}: apgd {} vs ssn {} (rel {gap:.2e})",
+                    a.objective,
+                    s.objective
+                );
+                assert!(a.kkt.pass, "{approx:?} tau={tau} lam={lam}: apgd kkt");
+                assert!(s.kkt.pass, "{approx:?} tau={tau} lam={lam}: ssn kkt");
+                // The predictors agree pointwise, not just in objective.
+                let pa = a.predict(&data.x);
+                let ps = s.predict(&data.x);
+                let sup =
+                    pa.iter().zip(&ps).map(|(u, v)| (u - v).abs()).fold(0.0f64, f64::max);
+                assert!(sup < 1e-4, "{approx:?} tau={tau} lam={lam}: pred sup-gap {sup}");
+            }
+        }
+    }
+}
+
+/// Warm starts down a λ path reach the same solutions as cold starts
+/// (≤ 1e-8 relative) while spending strictly fewer Newton steps.
+#[test]
+fn warm_lambda_path_matches_cold_with_fewer_newton_steps() {
+    let (data, kernel) = fixture(60, 23);
+    let engine = serial_engine();
+    let solver = engine
+        .solver_with_options(&data.x, &data.y, &kernel, tight_opts())
+        .unwrap();
+    let lambdas = [0.5, 0.1, 0.05, 0.01, 0.005];
+    let dim = solver.state_dim();
+    let n = data.y.len();
+
+    let mut cold_steps = 0usize;
+    let mut cold_objs = Vec::new();
+    for &lam in &lambdas {
+        let mut state = SsnState::zeros(n, dim);
+        let (fit, stats) = fit_warm_from_stats(&solver, 0.5, lam, &mut state).unwrap();
+        cold_steps += stats.newton_steps;
+        cold_objs.push(fit.objective);
+    }
+
+    let mut warm_steps = 0usize;
+    let mut state = SsnState::zeros(n, dim);
+    for (i, &lam) in lambdas.iter().enumerate() {
+        let (fit, stats) = fit_warm_from_stats(&solver, 0.5, lam, &mut state).unwrap();
+        warm_steps += stats.newton_steps;
+        let gap = (fit.objective - cold_objs[i]).abs() / (1.0 + cold_objs[i].abs());
+        assert!(
+            gap <= 1e-8,
+            "lam={lam}: warm {} vs cold {} (rel {gap:.2e})",
+            fit.objective,
+            cold_objs[i]
+        );
+        assert!(fit.kkt.pass, "lam={lam}: warm fit must stay certified");
+    }
+    assert!(
+        warm_steps < cold_steps,
+        "warm path must save Newton steps: warm {warm_steps} vs cold {cold_steps}"
+    );
+}
+
+/// `fit_tau_column_ssn`'s cross-column seeding (the grid driver's warm
+/// path) reproduces the cold column exactly as well.
+#[test]
+fn seeded_tau_column_matches_cold_column() {
+    let (data, kernel) = fixture(48, 31);
+    let engine = serial_engine();
+    let solver = engine
+        .solver_with_options(&data.x, &data.y, &kernel, tight_opts())
+        .unwrap();
+    let lambdas = [0.1, 0.02];
+    let (cold, head) =
+        fastkqr::solver::fit_tau_column_ssn(&solver, 0.25, &lambdas, None).unwrap();
+    let (seeded, _) =
+        fastkqr::solver::fit_tau_column_ssn(&solver, 0.5, &lambdas, Some(head)).unwrap();
+    let (cold50, _) = fastkqr::solver::fit_tau_column_ssn(&solver, 0.5, &lambdas, None).unwrap();
+    for (li, lam) in lambdas.iter().enumerate() {
+        let gap = (seeded[li].objective - cold50[li].objective).abs()
+            / (1.0 + cold50[li].objective.abs());
+        assert!(
+            gap <= 1e-8,
+            "lam={lam}: seeded {} vs cold {} (rel {gap:.2e})",
+            seeded[li].objective,
+            cold50[li].objective
+        );
+        assert!(seeded[li].kkt.pass && cold[li].kkt.pass);
+    }
+}
+
+/// `auto` is reproducible from the serialized spec alone: two engines,
+/// two parses, one resolved backend and bitwise-identical objectives.
+#[test]
+fn auto_backend_is_deterministic_from_the_spec_document() {
+    let mut rng = Rng::new(5);
+    let d = synth::sine_hetero(32, &mut rng);
+    let spec = FitSpec::new(
+        d.x,
+        d.y,
+        KernelSpec::Rbf { sigma: Some(0.5) },
+        Task::Grid { taus: vec![0.25, 0.75], lambdas: vec![0.1, 0.01] },
+    )
+    .with_approx(ApproxSpec::Nystrom { m: 8, seed: 3 })
+    .with_seed(3)
+    .with_solver(SolverBackend::Auto);
+    let doc = spec.to_json().to_string();
+
+    let s1 = FitSpec::parse(&doc).unwrap();
+    let s2 = FitSpec::parse(&doc).unwrap();
+    assert_eq!(s1.resolved_solver(), s2.resolved_solver());
+    assert_ne!(s1.resolved_solver(), SolverBackend::Auto);
+
+    let m1 = FitEngine::new().run(&s1).unwrap();
+    let m2 = FitEngine::new().run(&s2).unwrap();
+    match (&m1, &m2) {
+        (QuantileModel::Set(a), QuantileModel::Set(b)) => {
+            assert_eq!(a.solver, b.solver, "recorded backend must match");
+            assert_ne!(a.solver, Some(SolverBackend::Auto));
+            assert_eq!(a.fits.len(), b.fits.len());
+            for (fa, fb) in a.fits.iter().zip(&b.fits) {
+                assert_eq!(
+                    fa.objective, fb.objective,
+                    "same document must reproduce bitwise"
+                );
+            }
+        }
+        _ => panic!("expected set models"),
+    }
+}
