@@ -13,9 +13,22 @@
 //! Acceptance tracking (ISSUE 5): ≥ 3× requests/sec at 64 concurrent
 //! single-row clients on an 8×8 grid model versus the per-request
 //! baseline.
+//!
+//! **Replica scaling (ISSUE 9).** A second section measures horizontal
+//! scale-out: the same grid model is saved under many ids into a shared
+//! persistence dir, 1/2/4 replica servers (each worker-pool-bounded to
+//! **one** worker so the section is compute-bound by construction, and
+//! with batching off) are spawned per io model behind a consistent-hash
+//! [`Router`], and a storm of multi-row predicts — balanced across
+//! replicas via the same hash ring the router uses — measures req/s per
+//! configuration. `BENCH_serve.json` gains a `replica_scaling` array and
+//! a top-level `scaling_2x` (2-replica speedup over 1; target ≥ 1.7×).
 
+use fastkqr::api::artifact;
 use fastkqr::coordinator::server::Client;
-use fastkqr::coordinator::{BatchConfig, Server, ServerConfig};
+use fastkqr::coordinator::{
+    BatchConfig, HashRing, IoModel, Router, RouterConfig, Server, ServerConfig,
+};
 use fastkqr::data::{synth, Rng};
 use fastkqr::engine::FitEngine;
 use fastkqr::kernel::Kernel;
@@ -46,6 +59,53 @@ fn storm(server: &Server, model_id: &str, clients: usize, reps: usize) -> (f64, 
                             Ok(resp)
                                 if resp.get("ok").and_then(Json::as_bool)
                                     == Some(true) => {}
+                            _ => failed += 1,
+                        }
+                    }
+                    failed
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap_or(reps)).sum()
+    });
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    ((clients * reps) as f64 / wall, failures)
+}
+
+/// Fire `clients` connections × `reps` 128-row predicts through the
+/// router at `addr`, each client cycling over `ids` (pre-balanced across
+/// replicas); returns (requests/sec, failed request count).
+fn storm_router(
+    addr: std::net::SocketAddr,
+    ids: &[String],
+    clients: usize,
+    reps: usize,
+) -> (f64, usize) {
+    let rows: String =
+        (0..128).map(|i| format!("[{:.4}]", -1.0 + i as f64 / 64.0)).collect::<Vec<_>>().join(",");
+    let reqs: Vec<Json> = ids
+        .iter()
+        .map(|id| {
+            Json::parse(&format!(r#"{{"cmd":"predict","model":"{id}","x":[{rows}]}}"#))
+                .expect("request json")
+        })
+        .collect();
+    let t0 = Instant::now();
+    let failures: usize = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let reqs = &reqs;
+                s.spawn(move || {
+                    let mut failed = 0usize;
+                    let mut client = match Client::connect(addr) {
+                        Ok(cl) => cl,
+                        Err(_) => return reps,
+                    };
+                    for r in 0..reps {
+                        let req = &reqs[(c + r) % reqs.len()];
+                        match client.request(req) {
+                            Ok(resp)
+                                if resp.get("ok").and_then(Json::as_bool) == Some(true) => {}
                             _ => failed += 1,
                         }
                     }
@@ -128,6 +188,108 @@ fn main() {
     println!("   {speedup:.2}x requests/sec vs the per-request baseline (target >= 3x)");
     batched_srv.shutdown();
 
+    // -- replica scaling: 1 vs 2 vs 4 replicas behind the router --
+    let scale_reps = args.get_usize("scale-reps", 8);
+    let n_models = args.get_usize("scale-models", 64);
+    let dir = std::env::temp_dir().join(format!("fastkqr-bench-scale-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create scale dir");
+    // Pre-write the model under many ids so every replica serves every
+    // id from startup (one manifest bump covers them all).
+    let ids: Vec<String> = (0..n_models).map(|i| format!("m{i}")).collect();
+    for id in &ids {
+        artifact::save(&model, &dir.join(format!("{id}.json"))).expect("save scale artifact");
+    }
+    let id_refs: Vec<&str> = ids.iter().map(String::as_str).collect();
+    artifact::update_manifest(&dir, &id_refs, &[]).expect("manifest for scale artifacts");
+
+    let io_models: Vec<IoModel> = if IoModel::event_supported() {
+        vec![IoModel::Threads, IoModel::Epoll]
+    } else {
+        vec![IoModel::Threads]
+    };
+    println!(
+        "-- replica scaling: {clients} clients x {scale_reps} x 128-row predicts over \
+         {n_models} ids, workers=1/replica --"
+    );
+    let mut scaling_rows: Vec<Json> = Vec::new();
+    let mut scaling_2x = 0.0f64;
+    for io in io_models {
+        let mut single_rps = 0.0f64;
+        for replicas in [1usize, 2, 4] {
+            let servers: Vec<Server> = (0..replicas)
+                .map(|k| {
+                    Server::spawn(ServerConfig {
+                        addr: "127.0.0.1:0".to_string(),
+                        persist_dir: Some(dir.display().to_string()),
+                        // batching off + one worker: each replica is a
+                        // fixed compute budget, so req/s measures
+                        // horizontal scaling, not batching or oversubscription
+                        batch: BatchConfig { window_us: 0, max_rows: 4096 },
+                        io_model: io,
+                        workers: 1,
+                        scope: Some(format!("r{k}")),
+                        manifest_poll_ms: Some(0),
+                        ..ServerConfig::default()
+                    })
+                    .expect("spawn replica")
+                })
+                .collect();
+            let labels: Vec<String> = servers.iter().map(|s| s.local_addr.to_string()).collect();
+            let router = Router::spawn(RouterConfig {
+                addr: "127.0.0.1:0".to_string(),
+                replicas: labels.clone(),
+                vnodes: 0,
+            })
+            .expect("spawn router");
+            // Balance the storm across replicas with the router's own
+            // ring: equal id counts per replica, interleaved, so a lucky
+            // or unlucky hash split can't skew the scaling measurement.
+            let ring = HashRing::new(&labels, fastkqr::coordinator::router::DEFAULT_VNODES);
+            let mut buckets: Vec<Vec<&String>> = vec![Vec::new(); labels.len()];
+            for id in &ids {
+                buckets[ring.route(id)].push(id);
+            }
+            let per = buckets.iter().map(Vec::len).min().unwrap_or(0);
+            let storm_ids: Vec<String> = if per == 0 {
+                ids.clone()
+            } else {
+                (0..per.min(8)).flat_map(|i| buckets.iter().map(move |b| b[i].clone())).collect()
+            };
+            let (rps, failed) = storm_router(router.local_addr, &storm_ids, clients, scale_reps);
+            let served: Vec<u64> = servers
+                .iter()
+                .map(|s| fastkqr::coordinator::Metrics::get(&s.metrics.predict_requests))
+                .collect();
+            router.shutdown();
+            for s in servers {
+                s.shutdown();
+            }
+            if replicas == 1 {
+                single_rps = rps;
+            }
+            let scaling = rps / single_rps.max(1e-9);
+            if replicas == 2 {
+                scaling_2x = scaling_2x.max(scaling);
+            }
+            println!(
+                "   {:<7} x{replicas}: {rps:>9.0} req/s  ({scaling:.2}x vs 1 replica, \
+                 {failed} failed, per-replica {served:?})",
+                io.label()
+            );
+            assert_eq!(failed, 0, "all scale-out requests must succeed");
+            scaling_rows.push(Json::obj(vec![
+                ("io", Json::str(io.label())),
+                ("replicas", Json::num(replicas as f64)),
+                ("rps", Json::num(rps)),
+                ("scaling", Json::num(scaling)),
+                ("failed", Json::num(failed as f64)),
+            ]));
+        }
+    }
+    println!("   scaling_2x = {scaling_2x:.2} (target >= 1.7x with 2 replicas)");
+    let _ = std::fs::remove_dir_all(&dir);
+
     let doc = Json::obj(vec![
         ("bench", Json::str("serve_throughput")),
         ("n", Json::num(n as f64)),
@@ -144,6 +306,8 @@ fn main() {
         ("batch_p95", Json::num(batch_p95 as f64)),
         ("batch_max", Json::num(batch_max as f64)),
         ("latency_us_p99", Json::num(lat_p99 as f64)),
+        ("replica_scaling", Json::Arr(scaling_rows)),
+        ("scaling_2x", Json::num(scaling_2x)),
         ("simd_isa", Json::str(fastkqr::linalg::simd::global().isa.as_str())),
         ("simd_fma", Json::Bool(fastkqr::linalg::simd::global().fma)),
     ]);

@@ -631,6 +631,182 @@ pub fn load_compiled(
     Ok((model, plan))
 }
 
+// ---------------------------------------------------------------------
+// Generation manifest: cheap change detection for shared artifact dirs.
+// ---------------------------------------------------------------------
+
+/// File name of the generation manifest inside a persistence directory.
+/// Registry scans must skip it — it describes artifacts, it isn't one.
+pub const MANIFEST_FILE: &str = "manifest.json";
+/// Magic `format` tag of manifest documents.
+pub const MANIFEST_FORMAT: &str = "fastkqr.manifest";
+/// Manifest document version this build reads and writes.
+pub const MANIFEST_VERSION: u64 = 1;
+/// A `manifest.lock` older than this is presumed abandoned (crashed
+/// writer) and removed.
+const LOCK_STALE: std::time::Duration = std::time::Duration::from_secs(5);
+/// How long [`update_manifest`] waits for the lock before giving up.
+const LOCK_DEADLINE: std::time::Duration = std::time::Duration::from_secs(5);
+
+/// The generation manifest of a shared persistence directory:
+///
+/// ```json
+/// { "format": "fastkqr.manifest", "format_version": 1,
+///   "generation": 7, "models": {"r0m0": 3, "r1m0": 7} }
+/// ```
+///
+/// `generation` is bumped on **every** artifact write or removal, and
+/// each model records the generation of its last write. Replicas sharing
+/// the directory poll the one small file — not N artifacts — and
+/// hot-swap exactly the models whose recorded generation moved (see
+/// `ModelRegistry::refresh`). The write itself is atomic (temp + rename,
+/// like artifacts) and read-modify-write cycles are serialized through a
+/// `manifest.lock` file, so concurrent replicas never lose an update.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Manifest {
+    pub generation: u64,
+    /// Model id → generation of its last artifact write.
+    pub models: std::collections::BTreeMap<String, u64>,
+}
+
+impl Manifest {
+    pub fn to_json(&self) -> Json {
+        let models = Json::Obj(
+            self.models.iter().map(|(k, &g)| (k.clone(), Json::num(g as f64))).collect(),
+        );
+        Json::obj(vec![
+            ("format", Json::str(MANIFEST_FORMAT)),
+            ("format_version", Json::num(MANIFEST_VERSION as f64)),
+            ("generation", Json::num(self.generation as f64)),
+            ("models", models),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Manifest> {
+        match v.get_str("format") {
+            Some(MANIFEST_FORMAT) => {}
+            other => bail!("not a fastkqr manifest (format {other:?})"),
+        }
+        let version = v.get_usize("format_version").unwrap_or(0) as u64;
+        if version == 0 || version > MANIFEST_VERSION {
+            bail!("manifest format_version {version} unsupported (this build reads 1..={MANIFEST_VERSION})");
+        }
+        let generation = v
+            .get_usize("generation")
+            .ok_or_else(|| anyhow!("manifest: missing 'generation'"))? as u64;
+        let mut models = std::collections::BTreeMap::new();
+        match v.get("models") {
+            Some(Json::Obj(m)) => {
+                for (id, gv) in m {
+                    let g = gv
+                        .as_f64()
+                        .filter(|g| *g >= 0.0 && *g == g.trunc())
+                        .ok_or_else(|| anyhow!("manifest: bad generation for {id:?}"))?;
+                    models.insert(id.clone(), g as u64);
+                }
+            }
+            Some(_) => bail!("manifest: 'models' is not an object"),
+            None => bail!("manifest: missing 'models'"),
+        }
+        Ok(Manifest { generation, models })
+    }
+}
+
+/// Path of the manifest inside `dir`.
+pub fn manifest_path(dir: &Path) -> std::path::PathBuf {
+    dir.join(MANIFEST_FILE)
+}
+
+/// Read the manifest of `dir`. `Ok(None)` when the directory has none
+/// yet (a pre-manifest directory or a fresh one) — that is not an error;
+/// a corrupt or foreign `manifest.json` is.
+pub fn read_manifest(dir: &Path) -> Result<Option<Manifest>> {
+    let path = manifest_path(dir);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("read {}", path.display())),
+    };
+    let v = Json::parse(text.trim())
+        .map_err(|e| anyhow!("{}: not valid JSON: {e}", path.display()))?;
+    Manifest::from_json(&v)
+        .with_context(|| format!("load manifest {}", path.display()))
+        .map(Some)
+}
+
+/// Removes the lock file when the guard drops (including on early
+/// returns and panics inside the critical section).
+struct LockGuard(std::path::PathBuf);
+
+impl Drop for LockGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+fn acquire_manifest_lock(dir: &Path) -> Result<LockGuard> {
+    let lock = dir.join("manifest.lock");
+    let deadline = std::time::Instant::now() + LOCK_DEADLINE;
+    loop {
+        match std::fs::OpenOptions::new().write(true).create_new(true).open(&lock) {
+            Ok(mut f) => {
+                use std::io::Write as _;
+                let _ = writeln!(f, "{}", std::process::id());
+                return Ok(LockGuard(lock));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                // a writer crashed mid-update: break abandoned locks
+                if let Ok(meta) = std::fs::metadata(&lock) {
+                    let stale = meta
+                        .modified()
+                        .ok()
+                        .and_then(|t| t.elapsed().ok())
+                        .is_some_and(|age| age > LOCK_STALE);
+                    if stale {
+                        let _ = std::fs::remove_file(&lock);
+                        continue;
+                    }
+                }
+                if std::time::Instant::now() >= deadline {
+                    bail!("timed out waiting for {}", lock.display());
+                }
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("create {}", lock.display()));
+            }
+        }
+    }
+}
+
+/// Bump the manifest of `dir`: the global generation increments once,
+/// every id in `touched` is stamped with the new generation, every id in
+/// `removed` is dropped. Returns the updated manifest. The
+/// read-modify-write runs under `manifest.lock`, and the file itself is
+/// replaced atomically — concurrent replica writers serialize, pollers
+/// never see a torn document.
+pub fn update_manifest(dir: &Path, touched: &[&str], removed: &[&str]) -> Result<Manifest> {
+    let _lock = acquire_manifest_lock(dir)?;
+    let mut manifest = read_manifest(dir)?.unwrap_or_default();
+    manifest.generation += 1;
+    for id in touched {
+        manifest.models.insert((*id).to_string(), manifest.generation);
+    }
+    for id in removed {
+        manifest.models.remove(*id);
+    }
+    let path = manifest_path(dir);
+    let mut doc = manifest.to_json().to_string();
+    doc.push('\n');
+    let tmp = dir.join("manifest.json.tmp");
+    std::fs::write(&tmp, doc).with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path).with_context(|| {
+        let _ = std::fs::remove_file(&tmp);
+        format!("rename {} -> {}", tmp.display(), path.display())
+    })?;
+    Ok(manifest)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -696,6 +872,59 @@ mod tests {
             m.insert("kind".into(), Json::str("mystery"));
         }
         assert!(from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn manifest_updates_bump_generations_per_id() {
+        let dir = std::env::temp_dir().join(format!(
+            "fastkqr-manifest-test-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(read_manifest(&dir).unwrap().is_none(), "fresh dir has no manifest");
+        let m1 = update_manifest(&dir, &["m0"], &[]).unwrap();
+        assert_eq!(m1.generation, 1);
+        assert_eq!(m1.models.get("m0"), Some(&1));
+        let m2 = update_manifest(&dir, &["m1"], &[]).unwrap();
+        assert_eq!(m2.generation, 2);
+        assert_eq!(m2.models.get("m0"), Some(&1), "untouched ids keep their generation");
+        assert_eq!(m2.models.get("m1"), Some(&2));
+        // a re-write of m0 moves only m0's generation
+        let m3 = update_manifest(&dir, &["m0"], &[]).unwrap();
+        assert_eq!(m3.models.get("m0"), Some(&3));
+        assert_eq!(m3.models.get("m1"), Some(&2));
+        // removal drops the id but still bumps the global counter
+        let m4 = update_manifest(&dir, &[], &["m1"]).unwrap();
+        assert_eq!(m4.generation, 4);
+        assert!(!m4.models.contains_key("m1"));
+        // what's on disk is exactly what update returned
+        assert_eq!(read_manifest(&dir).unwrap().unwrap(), m4);
+        // the lock is released
+        assert!(!dir.join("manifest.lock").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_rejects_foreign_documents() {
+        assert!(Manifest::from_json(&Json::parse(r#"{"zzz":1}"#).unwrap()).is_err());
+        assert!(Manifest::from_json(
+            &Json::parse(r#"{"format":"fastkqr.manifest","format_version":99,"generation":1,"models":{}}"#)
+                .unwrap()
+        )
+        .is_err());
+        let ok = Manifest::from_json(
+            &Json::parse(
+                r#"{"format":"fastkqr.manifest","format_version":1,"generation":3,"models":{"r0m0":3}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(ok.generation, 3);
+        assert_eq!(ok.models.get("r0m0"), Some(&3));
     }
 
     #[test]

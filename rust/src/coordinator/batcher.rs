@@ -97,6 +97,13 @@ impl PredictBatcher {
         &self.config
     }
 
+    /// Rows currently parked across all per-model queues (a point-in-time
+    /// gauge, surfaced as `predict_queue_rows` by the `metrics` command —
+    /// nonzero only while a batch window is open somewhere).
+    pub fn queued_rows(&self) -> usize {
+        self.queues.lock().unwrap().values().map(|q| q.rows).sum()
+    }
+
     /// Predict `x` on `plan`, coalescing with concurrent requests for
     /// the same `model_id`. Blocks the calling thread for at most one
     /// batch window (plus the batched compute); returns this request's

@@ -2,6 +2,7 @@
 
 use crate::util::Histogram;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 
 /// Atomic counters shared between workers, server threads and the CLI.
 #[derive(Debug, Default)]
@@ -31,6 +32,32 @@ pub struct Metrics {
     /// Per-worker warm-start states dropped because the engine's
     /// GramCache no longer holds their dataset's factorization.
     pub warm_evictions: AtomicU64,
+    /// Connections accepted since spawn (both io models).
+    pub connections_accepted: AtomicU64,
+    /// Currently-open connections (gauge: incremented at accept,
+    /// decremented at close — `shutdown()` drains it back to zero).
+    pub active_connections: AtomicU64,
+    /// High-water mark of `active_connections`.
+    pub connections_peak: AtomicU64,
+    /// Accept-side `thread::Builder::spawn` failures (thread-per-
+    /// connection model under thread/fd exhaustion): the client gets a
+    /// protocol error line instead of a silent close.
+    pub accept_spawn_errors: AtomicU64,
+    /// Requests rejected because the event loop's bounded worker queue
+    /// was full (clean protocol error, never a hang).
+    pub queue_full_rejects: AtomicU64,
+    /// The resolved io model this server runs (`"threads"` / `"epoll"`),
+    /// set once at spawn.
+    pub io_model: OnceLock<&'static str>,
+    /// Size of the bounded worker pool behind the event loop (0 under
+    /// the thread-per-connection model, which has no pool).
+    pub worker_threads: AtomicU64,
+    /// Workers currently executing a request (gauge; event loop only).
+    pub workers_busy: AtomicU64,
+    /// High-water mark of `workers_busy` — the whole point of the
+    /// bounded pool: this never exceeds `worker_threads` no matter how
+    /// many connections are open.
+    pub workers_busy_peak: AtomicU64,
     /// End-to-end predict latency (µs, from request dispatch to response
     /// ready — includes batch-window parking).
     pub predict_latency: Histogram,
@@ -55,6 +82,24 @@ impl Metrics {
         counter.load(Ordering::Relaxed)
     }
 
+    /// Decrement a gauge (saturating at zero rather than wrapping).
+    pub fn dec(gauge: &AtomicU64) {
+        let _ =
+            gauge.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)));
+    }
+
+    /// Increment the `active_connections` gauge and fold the new value
+    /// into the `connections_peak` high-water mark.
+    pub fn conn_opened(&self) {
+        Self::incr(&self.connections_accepted);
+        let now = self.active_connections.fetch_add(1, Ordering::Relaxed) + 1;
+        self.connections_peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    pub fn conn_closed(&self) {
+        Self::dec(&self.active_connections);
+    }
+
     /// Render as a JSON object (served by the `metrics` command).
     pub fn to_json(&self) -> crate::util::Json {
         use crate::util::Json;
@@ -73,6 +118,15 @@ impl Metrics {
             ("predict_batches", Json::num(Self::get(&self.predict_batches) as f64)),
             ("predict_rejects", Json::num(Self::get(&self.predict_rejects) as f64)),
             ("warm_evictions", Json::num(Self::get(&self.warm_evictions) as f64)),
+            ("connections_accepted", Json::num(Self::get(&self.connections_accepted) as f64)),
+            ("active_connections", Json::num(Self::get(&self.active_connections) as f64)),
+            ("connections_peak", Json::num(Self::get(&self.connections_peak) as f64)),
+            ("accept_spawn_errors", Json::num(Self::get(&self.accept_spawn_errors) as f64)),
+            ("queue_full_rejects", Json::num(Self::get(&self.queue_full_rejects) as f64)),
+            ("io_model", Json::str(self.io_model.get().copied().unwrap_or("unset"))),
+            ("worker_threads", Json::num(Self::get(&self.worker_threads) as f64)),
+            ("workers_busy", Json::num(Self::get(&self.workers_busy) as f64)),
+            ("workers_busy_peak", Json::num(Self::get(&self.workers_busy_peak) as f64)),
             ("predict_latency_us_p50", Json::num(self.predict_latency.p50() as f64)),
             ("predict_latency_us_p95", Json::num(self.predict_latency.p95() as f64)),
             ("predict_latency_us_p99", Json::num(self.predict_latency.p99() as f64)),
@@ -97,6 +151,23 @@ mod tests {
         assert_eq!(Metrics::get(&m.jobs_submitted), 3);
         let j = m.to_json();
         assert_eq!(j.get_f64("jobs_submitted"), Some(3.0));
+    }
+
+    #[test]
+    fn connection_gauge_tracks_peak_and_never_underflows() {
+        let m = Metrics::new();
+        m.conn_opened();
+        m.conn_opened();
+        assert_eq!(Metrics::get(&m.active_connections), 2);
+        m.conn_closed();
+        m.conn_closed();
+        m.conn_closed(); // extra close: saturates at zero, no wrap
+        assert_eq!(Metrics::get(&m.active_connections), 0);
+        assert_eq!(Metrics::get(&m.connections_peak), 2);
+        assert_eq!(Metrics::get(&m.connections_accepted), 2);
+        let j = m.to_json();
+        assert_eq!(j.get_f64("connections_peak"), Some(2.0));
+        assert_eq!(j.get_str("io_model"), Some("unset"));
     }
 
     #[test]

@@ -23,25 +23,40 @@
 //!   into a single execution of the registry's compiled
 //!   [`crate::engine::PredictPlan`], with bitwise-identical rows and a
 //!   per-model backpressure cap;
-//! - [`server`]/[`protocol`]: a threaded TCP line-JSON service
-//!   (std::net — the offline environment has no tokio; a blocking
-//!   thread-per-connection design is appropriate for a compute-bound
-//!   service anyway). Protocol v2 accepts full [`crate::api::FitSpec`]
-//!   documents for `fit`, adds `save`/`load`/`export` for artifacts, and
-//!   streams large predict responses (`"stream": true`) in bounded
-//!   chunks.
+//! - [`server`]/[`protocol`]: the TCP line-JSON service. Protocol v2
+//!   accepts full [`crate::api::FitSpec`] documents for `fit`, adds
+//!   `save`/`load`/`export` for artifacts, and streams large predict
+//!   responses (`"stream": true`) in bounded chunks;
+//! - [`eventloop`]: the event-driven connection layer — a raw
+//!   epoll/kqueue readiness poller (no new crate deps; std::net — the
+//!   offline environment has no tokio) feeding a **bounded** worker pool
+//!   (`FASTKQR_WORKERS`) through a backpressured MPMC queue, with
+//!   per-connection outbound buffers drained on writability so slow
+//!   readers never pin a worker. Selected by `ServerConfig::io_model` /
+//!   `FASTKQR_IO=epoll|threads|auto`; the thread-per-connection model
+//!   remains the portable fallback and the bitwise-parity oracle;
+//! - [`router`]: the consistent-hash multi-replica front — one client
+//!   port fanning out to N replica servers by hashing the model id, so
+//!   each replica's micro-batcher sees all of one model's traffic.
+//!   Replicas share a persistence dir and hot-swap peers' writes through
+//!   the generation manifest (see
+//!   [`registry::ModelRegistry::refresh`]).
 
 pub mod batcher;
+pub mod eventloop;
 pub mod job;
 pub mod metrics;
 pub mod protocol;
 pub mod registry;
+pub mod router;
 pub mod scheduler;
 pub mod server;
 
 pub use batcher::{BatchConfig, PredictBatcher};
+pub use eventloop::IoModel;
 pub use job::{FitJob, JobOutcome, JobSpec};
 pub use metrics::Metrics;
 pub use registry::ModelRegistry;
+pub use router::{HashRing, Router, RouterConfig};
 pub use scheduler::Scheduler;
 pub use server::{Server, ServerConfig};

@@ -29,6 +29,22 @@
 //! Kernel spec: `{"type":"rbf","sigma":σ}` (σ omitted → median
 //! heuristic), `"auto"`, `"linear"`, `"polynomial"`, `"laplacian"` — see
 //! [`crate::api::KernelSpec`].
+//!
+//! **Transport-level errors.** Two `{"ok":false,"error":…}` lines come
+//! from the connection layer rather than the dispatcher: under the
+//! event-driven io model a request arriving while the bounded worker
+//! queue is full gets `"server busy: worker queue full (cap N)…"`
+//! (counted in `queue_full_rejects`), and under the thread model a
+//! connection whose handler thread could not be spawned (thread/fd
+//! exhaustion) gets `"server overloaded: connection thread spawn
+//! failed…"` before the socket closes (counted in
+//! `accept_spawn_errors`). Clients should treat both as retryable.
+//! The `metrics` command also reports the serving tier's shape:
+//! `io_model`, `worker_threads` / `workers_busy` / `workers_busy_peak`,
+//! `connections_accepted` / `active_connections` / `connections_peak`,
+//! and the multi-replica fields `registry_generation` /
+//! `manifest_refreshes` / `models_hot_swapped` (see
+//! [`super::registry::ModelRegistry::refresh`]).
 
 use super::batcher::{BatchConfig, PredictBatcher};
 use super::metrics::Metrics;
@@ -93,7 +109,11 @@ enum Reply {
     PredictStream { taus: Vec<f64>, preds: Vec<Vec<f64>>, chunk_points: usize },
 }
 
-fn err_json(msg: impl std::fmt::Display) -> Json {
+/// The protocol's error line (`{"ok":false,"error":…}`). Shared with the
+/// connection layers, which emit it for transport-level failures the
+/// dispatcher never sees: the event loop's queue-full backpressure and
+/// the thread model's accept-time spawn failures.
+pub(crate) fn err_json(msg: impl std::fmt::Display) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg.to_string()))])
 }
 
@@ -270,6 +290,25 @@ fn dispatch(state: &ProtocolState, req: &Json) -> Result<Reply> {
                 map.insert(
                     "persist_errors".into(),
                     Json::num(state.registry.persist_errors() as f64),
+                );
+                // Multi-replica observability: the manifest generation
+                // this registry has reconciled, and how many peer writes
+                // it has hot-swapped in (see ModelRegistry::refresh).
+                map.insert(
+                    "registry_generation".into(),
+                    Json::num(state.registry.generation() as f64),
+                );
+                map.insert(
+                    "manifest_refreshes".into(),
+                    Json::num(state.registry.refreshes() as f64),
+                );
+                map.insert(
+                    "models_hot_swapped".into(),
+                    Json::num(state.registry.hot_swaps() as f64),
+                );
+                map.insert(
+                    "predict_queue_rows".into(),
+                    Json::num(state.batcher.queued_rows() as f64),
                 );
                 // Resolved SIMD dispatch, so metrics scraped from
                 // different hosts are comparable.

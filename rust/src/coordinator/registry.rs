@@ -38,6 +38,12 @@ pub type StoredModel = QuantileModel;
 struct StoredEntry {
     model: QuantileModel,
     plan: Arc<PredictPlan>,
+    /// Manifest generation of this entry's artifact — what
+    /// [`ModelRegistry::refresh`] diffs against to detect writes by
+    /// *other* replicas sharing the persistence dir. `0` = memory-only
+    /// (no persistence, or the write-through failed): never hot-swapped
+    /// and never dropped by a manifest diff.
+    generation: u64,
 }
 
 /// Thread-safe model store with generated ids.
@@ -47,6 +53,16 @@ pub struct ModelRegistry {
     next_id: AtomicU64,
     /// When set, inserts are mirrored to `<dir>/<id>.json` artifacts.
     persist_dir: Option<PathBuf>,
+    /// Prefix of generated ids (`"{scope}m{seq}"`). Replicas sharing one
+    /// persistence dir get distinct scopes (`"r0"`, `"r1"`, …) so their
+    /// independently-generated ids never collide.
+    scope: String,
+    /// Manifest generation this registry last reconciled against.
+    seen_generation: AtomicU64,
+    /// Refresh passes that found a changed manifest.
+    refreshes: AtomicU64,
+    /// Models atomically swapped in by refresh passes.
+    hot_swaps: AtomicU64,
     /// Write-through failures (see [`ModelRegistry::persist_errors`]).
     failures: PersistFailures,
 }
@@ -63,15 +79,40 @@ impl ModelRegistry {
     /// error — silently serving a subset of the persisted models would
     /// be worse than failing loudly at startup.
     pub fn with_persistence(dir: impl Into<PathBuf>) -> anyhow::Result<ModelRegistry> {
+        Self::with_persistence_scoped(dir, "")
+    }
+
+    /// [`ModelRegistry::with_persistence`] with an id scope: generated
+    /// ids become `"{scope}m{seq}"`. Replicas sharing one persistence
+    /// directory each get a distinct scope so concurrent inserts on
+    /// different replicas never collide on an id. All artifacts in the
+    /// directory are loaded regardless of scope — every replica can
+    /// serve every model; the scope only namespaces *new* ids.
+    pub fn with_persistence_scoped(
+        dir: impl Into<PathBuf>,
+        scope: &str,
+    ) -> anyhow::Result<ModelRegistry> {
         use anyhow::Context;
+        if !scope.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '-')) {
+            anyhow::bail!("invalid registry scope {scope:?} (use [A-Za-z0-9_-])");
+        }
         let dir = dir.into();
         std::fs::create_dir_all(&dir).with_context(|| format!("create {}", dir.display()))?;
+        // Read the manifest first: entries loaded below are stamped with
+        // the generation of their last recorded write, and the global
+        // counter becomes the refresh baseline ("I have seen this").
+        let manifest = crate::api::artifact::read_manifest(&dir)?.unwrap_or_default();
         let mut models = HashMap::new();
         let mut max_seq: Option<u64> = None;
         let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)
             .with_context(|| format!("read {}", dir.display()))?
             .filter_map(|e| e.ok().map(|e| e.path()))
             .filter(|p| p.extension().and_then(|s| s.to_str()) == Some("json"))
+            // the manifest describes artifacts; it isn't one
+            .filter(|p| {
+                p.file_name().and_then(|s| s.to_str())
+                    != Some(crate::api::artifact::MANIFEST_FILE)
+            })
             .collect();
         entries.sort();
         for path in entries {
@@ -84,15 +125,25 @@ impl ModelRegistry {
             // fresh insert: a restarted server answers its first predict
             // without re-deriving any coefficient layout.
             let (model, plan) = crate::api::artifact::load_compiled(&path)?;
-            if let Some(seq) = id.strip_prefix('m').and_then(|s| s.parse::<u64>().ok()) {
+            // resume this scope's sequence past its own persisted ids
+            if let Some(seq) = id
+                .strip_prefix(scope)
+                .and_then(|s| s.strip_prefix('m'))
+                .and_then(|s| s.parse::<u64>().ok())
+            {
                 max_seq = Some(max_seq.map_or(seq, |m| m.max(seq)));
             }
-            models.insert(id, StoredEntry { model, plan });
+            let generation = manifest.models.get(&id).copied().unwrap_or(0);
+            models.insert(id, StoredEntry { model, plan, generation });
         }
         Ok(ModelRegistry {
             models: RwLock::new(models),
             next_id: AtomicU64::new(max_seq.map_or(0, |m| m + 1)),
             persist_dir: Some(dir),
+            scope: scope.to_string(),
+            seen_generation: AtomicU64::new(manifest.generation),
+            refreshes: AtomicU64::new(0),
+            hot_swaps: AtomicU64::new(0),
             failures: PersistFailures::default(),
         })
     }
@@ -109,23 +160,51 @@ impl ModelRegistry {
     /// and **remembered per id** so a later successful `save` of the same
     /// model carries a warning instead of looking like nothing happened.
     pub fn insert(&self, model: StoredModel) -> String {
-        let id = format!("m{}", self.next_id.fetch_add(1, Ordering::Relaxed));
+        let id = format!("{}m{}", self.scope, self.next_id.fetch_add(1, Ordering::Relaxed));
+        let mut generation = 0u64;
         if let Some(dir) = &self.persist_dir {
-            if let Err(e) = model.save(dir.join(format!("{id}.json"))) {
-                eprintln!(
-                    "fastkqr registry: persisting model {id} to {} FAILED ({e:#}); \
-                     the model is served from memory only and will NOT survive a restart",
-                    dir.display()
-                );
-                self.failures.total.fetch_add(1, Ordering::Relaxed);
-                self.failures.by_id.write().unwrap().insert(id.clone(), format!("{e:#}"));
+            match model.save(dir.join(format!("{id}.json"))) {
+                Ok(()) => generation = self.bump_manifest(&[&id], &[]),
+                Err(e) => {
+                    eprintln!(
+                        "fastkqr registry: persisting model {id} to {} FAILED ({e:#}); \
+                         the model is served from memory only and will NOT survive a restart",
+                        dir.display()
+                    );
+                    self.failures.total.fetch_add(1, Ordering::Relaxed);
+                    self.failures.by_id.write().unwrap().insert(id.clone(), format!("{e:#}"));
+                }
             }
         }
         // Compile the serving plan once, outside any lock: every predict
         // for this id shares the Arc instead of re-packing coefficients.
         let plan = Arc::new(model.compile_plan());
-        self.models.write().unwrap().insert(id.clone(), StoredEntry { model, plan });
+        self.models.write().unwrap().insert(id.clone(), StoredEntry { model, plan, generation });
         id
+    }
+
+    /// Record an artifact write/removal in the directory manifest,
+    /// returning the new global generation (0 when the bump failed —
+    /// counted like a persistence failure: peers would miss the change).
+    fn bump_manifest(&self, touched: &[&str], removed: &[&str]) -> u64 {
+        let Some(dir) = &self.persist_dir else { return 0 };
+        match crate::api::artifact::update_manifest(dir, touched, removed) {
+            // `seen_generation` is deliberately NOT advanced here: only
+            // a full refresh pass may claim a generation as reconciled,
+            // otherwise our own write could mask a concurrent peer write
+            // with a lower generation we haven't loaded yet. The cost is
+            // one cheap no-op refresh after each local write.
+            Ok(m) => m.generation,
+            Err(e) => {
+                eprintln!(
+                    "fastkqr registry: manifest update in {} FAILED ({e:#}); \
+                     peer replicas will not observe this change",
+                    dir.display()
+                );
+                self.failures.total.fetch_add(1, Ordering::Relaxed);
+                0
+            }
+        }
     }
 
     /// Total write-through persistence failures since construction.
@@ -178,6 +257,14 @@ impl ModelRegistry {
         let model =
             self.get(id).ok_or_else(|| anyhow::anyhow!("no such model {id:?}"))?;
         model.save(&path)?;
+        let generation = self.bump_manifest(&[name], &[]);
+        if generation > 0 && name == id {
+            // the artifact now matches the in-memory entry at this
+            // generation; stamp it so refresh doesn't reload our own save
+            if let Some(e) = self.models.write().unwrap().get_mut(id) {
+                e.generation = generation;
+            }
+        }
         Ok(path)
     }
 
@@ -214,9 +301,98 @@ impl ModelRegistry {
             self.failures.by_id.write().unwrap().remove(id);
             if let Some(dir) = &self.persist_dir {
                 let _ = std::fs::remove_file(dir.join(format!("{id}.json")));
+                self.bump_manifest(&[], &[id]);
             }
         }
         removed
+    }
+
+    /// Reconcile against the shared directory's manifest: reload models
+    /// whose recorded generation differs from the loaded entry's, drop
+    /// persisted models removed elsewhere, and remember the manifest
+    /// generation. Each reload swaps the `Arc<PredictPlan>` atomically
+    /// under the write lock — an in-flight predict keeps its old plan, a
+    /// later predict gets the new one, never a torn model.
+    ///
+    /// Cheap when nothing changed (one small file read + one compare);
+    /// replicas poll this on a short interval. Returns the number of
+    /// models swapped in or dropped. Individual artifact load failures
+    /// are reported and skipped — a half-visible directory state (a peer
+    /// mid-write) must not take down serving of the current model.
+    pub fn refresh(&self) -> anyhow::Result<usize> {
+        let Some(dir) = &self.persist_dir else { return Ok(0) };
+        let Some(manifest) = crate::api::artifact::read_manifest(dir)? else {
+            return Ok(0);
+        };
+        if manifest.generation == self.seen_generation.load(Ordering::Relaxed) {
+            return Ok(0);
+        }
+        self.refreshes.fetch_add(1, Ordering::Relaxed);
+        // Diff outside the write lock: stale = new id, or recorded
+        // generation moved past the one we loaded.
+        let stale: Vec<(String, u64)> = {
+            let models = self.models.read().unwrap();
+            manifest
+                .models
+                .iter()
+                .filter(|(id, &gen)| {
+                    !models.get(*id).is_some_and(|e| e.generation == gen)
+                })
+                .map(|(id, &gen)| (id.clone(), gen))
+                .collect()
+        };
+        let mut changed = 0usize;
+        for (id, generation) in stale {
+            let path = dir.join(format!("{id}.json"));
+            match crate::api::artifact::load_compiled(&path) {
+                Ok((model, plan)) => {
+                    self.models
+                        .write()
+                        .unwrap()
+                        .insert(id, StoredEntry { model, plan, generation });
+                    self.hot_swaps.fetch_add(1, Ordering::Relaxed);
+                    changed += 1;
+                }
+                Err(e) => {
+                    eprintln!(
+                        "fastkqr registry: refresh reload of {id} FAILED ({e:#}); \
+                         keeping the currently served model"
+                    );
+                }
+            }
+        }
+        // Persisted entries absent from the manifest were dropped by a
+        // peer; memory-only entries (generation 0) are never touched.
+        let dropped: Vec<String> = {
+            let models = self.models.read().unwrap();
+            models
+                .iter()
+                .filter(|(id, e)| e.generation > 0 && !manifest.models.contains_key(*id))
+                .map(|(id, _)| id.clone())
+                .collect()
+        };
+        for id in &dropped {
+            self.models.write().unwrap().remove(id);
+            self.failures.by_id.write().unwrap().remove(id);
+            changed += 1;
+        }
+        self.seen_generation.store(manifest.generation, Ordering::Relaxed);
+        Ok(changed)
+    }
+
+    /// The manifest generation this registry last reconciled against.
+    pub fn generation(&self) -> u64 {
+        self.seen_generation.load(Ordering::Relaxed)
+    }
+
+    /// Refresh passes that observed a changed manifest.
+    pub fn refreshes(&self) -> u64 {
+        self.refreshes.load(Ordering::Relaxed)
+    }
+
+    /// Models atomically hot-swapped in by refresh passes.
+    pub fn hot_swaps(&self) -> u64 {
+        self.hot_swaps.load(Ordering::Relaxed)
     }
 
     pub fn list(&self) -> Vec<String> {
@@ -326,6 +502,55 @@ mod tests {
         let msg = reg.take_persist_failure(&id);
         assert!(msg.is_some(), "failure message recorded for the id");
         assert!(reg.take_persist_failure(&id).is_none(), "taken = cleared");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scoped_replicas_share_a_dir_and_hot_swap_via_manifest() {
+        let dir = std::env::temp_dir().join(format!(
+            "fastkqr-registry-scope-test-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let reg_a = ModelRegistry::with_persistence_scoped(&dir, "r0").unwrap();
+        let reg_b = ModelRegistry::with_persistence_scoped(&dir, "r1").unwrap();
+        assert!(ModelRegistry::with_persistence_scoped(&dir, "bad scope").is_err());
+        let xt = {
+            let mut rng = Rng::new(17);
+            synth::sine_hetero(5, &mut rng).x
+        };
+        // A writes; B observes it through the manifest without restart
+        let id_a = reg_a.insert(StoredModel::Kqr(toy_fit(16, 4)));
+        assert_eq!(id_a, "r0m0", "ids carry the replica scope");
+        assert!(reg_b.plan(&id_a).is_none(), "B has not refreshed yet");
+        assert_eq!(reg_b.refresh().unwrap(), 1);
+        assert_eq!(reg_b.hot_swaps(), 1);
+        let via_a = reg_a.get(&id_a).unwrap().predict(&xt);
+        let via_b = reg_b.get(&id_a).unwrap().predict(&xt);
+        assert_eq!(via_a, via_b, "cross-replica predictions are bitwise equal");
+        // a second refresh with no changes is a no-op
+        assert_eq!(reg_b.refresh().unwrap(), 0);
+        assert_eq!(reg_b.refreshes(), 1, "unchanged manifests short-circuit");
+        // B writes under its own scope; no collision, A picks it up
+        let id_b = reg_b.insert(StoredModel::Kqr(toy_fit(14, 9)));
+        assert_eq!(id_b, "r1m0");
+        assert_eq!(reg_a.refresh().unwrap(), 1);
+        assert!(reg_a.plan(&id_b).is_some());
+        // A re-persists its model (same id): B hot-swaps the new write
+        reg_a.persist(&id_a).unwrap();
+        assert_eq!(reg_b.refresh().unwrap(), 1, "re-write moves the id's generation");
+        // A drops its model: B's refresh retires it
+        assert!(reg_a.remove(&id_a));
+        assert_eq!(reg_b.refresh().unwrap(), 1);
+        assert!(reg_b.plan(&id_a).is_none(), "dropped on the peer too");
+        assert!(reg_b.plan(&id_b).is_some(), "unrelated models survive");
+        // a restarted scoped registry resumes its own sequence only
+        let reg_b2 = ModelRegistry::with_persistence_scoped(&dir, "r1").unwrap();
+        let id_b2 = reg_b2.insert(StoredModel::Kqr(toy_fit(12, 6)));
+        assert_eq!(id_b2, "r1m1", "sequence resumes past r1m0, ignoring r0 ids");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,502 @@
+//! Consistent-hash front for multi-replica serving.
+//!
+//! A [`Router`] listens on one client-facing port and fans requests out
+//! to N replica servers, picking the replica by **consistent-hashing the
+//! model id** ([`HashRing`]). Model-addressed commands (`predict`,
+//! `save`, `export`, `drop` via `"model"`, `load` via `"name"`) always
+//! land on the same replica for a given id, so each replica's
+//! [`PredictBatcher`](super::batcher::PredictBatcher) sees *all* of one
+//! model's traffic — the micro-batching win multiplies per replica
+//! instead of diluting. Commands with no model key (`fit`, `ping`,
+//! `metrics`, `models`) round-robin.
+//!
+//! Replicas share one persistence directory. A fit lands on one replica
+//! and is written through; the registry bumps `manifest.json`'s
+//! generation counter, and every other replica's manifest poller
+//! hot-swaps the new artifact in (see
+//! [`ModelRegistry::refresh`](super::registry::ModelRegistry::refresh)).
+//! The router itself is stateless — it never parses model payloads, only
+//! peeks at the routing key and passes response lines through verbatim
+//! (bitwise, which keeps the parity oracle meaningful end to end).
+//!
+//! The ring hashes `"{label}#{vnode}"` for [`DEFAULT_VNODES`] virtual
+//! nodes per replica, FNV-1a finalized with the splitmix64 mixer (plain
+//! FNV clusters badly on strings sharing long prefixes — vnode labels —
+//! which skews ownership; the mixer restores uniformity). Adding or
+//! removing a replica moves only ~1/N of the key space.
+
+use super::metrics::Metrics;
+use crate::util::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Virtual nodes per replica on the ring. 64 keeps the ownership split
+/// within a few percent of even for small N while the ring stays tiny
+/// (N×64 points, binary-searched).
+pub const DEFAULT_VNODES: usize = 64;
+
+/// FNV-1a 64-bit, finalized with the splitmix64 mixer. FNV alone is fast
+/// but clusters inputs that differ only near the end (exactly our
+/// `"addr#k"` vnode labels and `"m0"`/`"m1"` model ids); the mixer's
+/// avalanche spreads them uniformly over the ring.
+pub fn hash64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    // splitmix64 finalizer
+    let mut z = h;
+    z ^= z >> 30;
+    z = z.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z ^= z >> 27;
+    z = z.wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    z
+}
+
+/// A consistent-hash ring over replica labels. Deterministic: the
+/// mapping from key to label depends only on the *set* of labels (and
+/// vnode count), never on insertion order or process state.
+pub struct HashRing {
+    /// `(point, label index)`, sorted by point.
+    points: Vec<(u64, usize)>,
+    labels: Vec<String>,
+}
+
+impl HashRing {
+    pub fn new(labels: &[String], vnodes: usize) -> HashRing {
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(labels.len() * vnodes);
+        for (i, label) in labels.iter().enumerate() {
+            for v in 0..vnodes {
+                points.push((hash64(&format!("{label}#{v}")), i));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points, labels: labels.to_vec() }
+    }
+
+    /// Index of the replica owning `key`: the first ring point at or
+    /// after `hash64(key)`, wrapping at the top.
+    pub fn route(&self, key: &str) -> usize {
+        debug_assert!(!self.points.is_empty());
+        let h = hash64(key);
+        let idx = self.points.partition_point(|&(p, _)| p < h);
+        let (_, owner) = self.points[idx % self.points.len()];
+        owner
+    }
+
+    pub fn label(&self, idx: usize) -> &str {
+        &self.labels[idx]
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Client-facing listen address.
+    pub addr: String,
+    /// Replica addresses (the ring's labels — keep them stable across
+    /// restarts or keys will move).
+    pub replicas: Vec<String>,
+    /// Virtual nodes per replica (0 → [`DEFAULT_VNODES`]).
+    pub vnodes: usize,
+}
+
+/// A running router handle.
+pub struct Router {
+    pub local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    pub ring: Arc<HashRing>,
+    pub metrics: Arc<Metrics>,
+}
+
+struct RouterShared {
+    ring: Arc<HashRing>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    /// Round-robin cursor for requests with no model key.
+    next_rr: AtomicU64,
+}
+
+impl Router {
+    /// Bind the client port and start proxying. The replicas are not
+    /// contacted until the first request that routes to them, so a
+    /// router can come up before (or outlive) any individual replica.
+    pub fn spawn(config: RouterConfig) -> Result<Router> {
+        anyhow::ensure!(!config.replicas.is_empty(), "router needs at least one replica");
+        let listener =
+            TcpListener::bind(&config.addr).with_context(|| format!("bind {}", config.addr))?;
+        let local_addr = listener.local_addr()?;
+        let vnodes = if config.vnodes == 0 { DEFAULT_VNODES } else { config.vnodes };
+        let ring = Arc::new(HashRing::new(&config.replicas, vnodes));
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let shared = Arc::new(RouterShared {
+            ring: ring.clone(),
+            metrics: metrics.clone(),
+            stop: stop.clone(),
+            next_rr: AtomicU64::new(0),
+        });
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("fastkqr-route".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let sh = shared.clone();
+                            sh.metrics.conn_opened();
+                            let sh2 = shared.clone();
+                            if std::thread::Builder::new()
+                                .name("fastkqr-route-conn".into())
+                                .spawn(move || {
+                                    proxy_connection(stream, &sh);
+                                    sh.metrics.conn_closed();
+                                })
+                                .is_err()
+                            {
+                                sh2.metrics.conn_closed();
+                                Metrics::incr(&sh2.metrics.accept_spawn_errors);
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Router { local_addr, stop, accept_thread: Some(accept_thread), ring, metrics })
+    }
+
+    /// Stop accepting, join the accept loop, and drain open client
+    /// connections (bounded wait — proxy threads observe the stop flag
+    /// within their read-timeout tick).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        let deadline = std::time::Instant::now() + Duration::from_secs(3);
+        while Metrics::get(&self.metrics.active_connections) > 0
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+}
+
+/// One lazily-opened upstream replica connection.
+struct Upstream {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Upstream {
+    fn connect(addr: &str) -> std::io::Result<Upstream> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+        let writer = stream.try_clone()?;
+        Ok(Upstream { reader: BufReader::new(stream), writer })
+    }
+}
+
+/// Extract the routing key from a request line: `"model"` (predict /
+/// save / export / drop) or `"name"` (load). Unparseable lines return
+/// `None` and round-robin — the replica's protocol layer owns error
+/// reporting, and a clean error must come from *somewhere*.
+fn routing_key(line: &str) -> Option<String> {
+    let req = Json::parse(line.trim()).ok()?;
+    for field in ["model", "name"] {
+        if let Some(v) = req.get(field).and_then(Json::as_str) {
+            return Some(v.to_string());
+        }
+    }
+    None
+}
+
+fn proxy_connection(stream: TcpStream, shared: &RouterShared) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    // one upstream slot per replica, opened on first use
+    let mut upstreams: Vec<Option<Upstream>> = (0..shared.ring.len()).map(|_| None).collect();
+    let mut buf: Vec<u8> = Vec::new();
+    'conn: loop {
+        // Read one request line, ticking on the timeout so the stop flag
+        // is observed promptly; partial bytes persist across ticks.
+        let line = match read_line_tick(&mut reader, &mut buf, &shared.stop) {
+            LineRead::Line(l) => l,
+            LineRead::Eof | LineRead::Stopped | LineRead::Dead => break 'conn,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        if line.trim() == "quit" {
+            break 'conn;
+        }
+        Metrics::incr(&shared.metrics.requests_total);
+        let idx = match routing_key(&line) {
+            Some(key) => shared.ring.route(&key),
+            None => {
+                (shared.next_rr.fetch_add(1, Ordering::Relaxed) as usize) % shared.ring.len()
+            }
+        };
+        match forward(&line, idx, &mut upstreams, shared, &mut writer) {
+            ForwardOutcome::Ok => {}
+            ForwardOutcome::ClientGone => break 'conn,
+            ForwardOutcome::UpstreamFailed(e) => {
+                // the upstream slot is dropped; next request redials
+                Metrics::incr(&shared.metrics.protocol_errors);
+                let resp = Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    (
+                        "error",
+                        Json::str(format!(
+                            "replica {} unavailable: {e}",
+                            shared.ring.label(idx)
+                        )),
+                    ),
+                ]);
+                let mut out = resp.to_string();
+                out.push('\n');
+                if writer.write_all(out.as_bytes()).is_err() {
+                    break 'conn;
+                }
+            }
+        }
+    }
+}
+
+enum ForwardOutcome {
+    Ok,
+    ClientGone,
+    UpstreamFailed(String),
+}
+
+/// Forward one request line to replica `idx` and relay its response
+/// lines back verbatim. Multi-line streamed responses are detected the
+/// same way [`Client::request_stream`](super::server::Client) does: a
+/// first line with `"stream":true` keeps relaying until `"done":true`.
+fn forward(
+    line: &str,
+    idx: usize,
+    upstreams: &mut [Option<Upstream>],
+    shared: &RouterShared,
+    writer: &mut TcpStream,
+) -> ForwardOutcome {
+    if upstreams[idx].is_none() {
+        match Upstream::connect(shared.ring.label(idx)) {
+            Ok(u) => upstreams[idx] = Some(u),
+            Err(e) => return ForwardOutcome::UpstreamFailed(e.to_string()),
+        }
+    }
+    let up = upstreams[idx].as_mut().expect("just connected");
+    let mut out = line.trim().to_string();
+    out.push('\n');
+    if let Err(e) = up.writer.write_all(out.as_bytes()) {
+        upstreams[idx] = None;
+        return ForwardOutcome::UpstreamFailed(e.to_string());
+    }
+    let mut first = true;
+    let mut streaming = false;
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let resp = match read_line_tick(&mut up.reader, &mut buf, &shared.stop) {
+            LineRead::Line(l) => l,
+            LineRead::Stopped => {
+                upstreams[idx] = None;
+                return ForwardOutcome::UpstreamFailed("router shutting down".into());
+            }
+            LineRead::Eof | LineRead::Dead => {
+                upstreams[idx] = None;
+                return ForwardOutcome::UpstreamFailed(
+                    "connection closed mid-response".into(),
+                );
+            }
+        };
+        // relay the raw line — responses stay bitwise-identical
+        let mut relay = resp.clone();
+        relay.push('\n');
+        if writer.write_all(relay.as_bytes()).is_err() {
+            return ForwardOutcome::ClientGone;
+        }
+        let parsed = Json::parse(resp.trim()).ok();
+        let done = parsed
+            .as_ref()
+            .and_then(|v| v.get("done"))
+            .and_then(Json::as_bool)
+            == Some(true);
+        if first {
+            streaming = parsed
+                .as_ref()
+                .and_then(|v| v.get("stream"))
+                .and_then(Json::as_bool)
+                == Some(true);
+            first = false;
+            if !streaming {
+                return ForwardOutcome::Ok;
+            }
+        }
+        if done {
+            return ForwardOutcome::Ok;
+        }
+    }
+}
+
+pub(crate) enum LineRead {
+    Line(String),
+    Eof,
+    Stopped,
+    Dead,
+}
+
+/// Read one `\n`-terminated line, ticking on the read timeout so `stop`
+/// is observed within ~100–200 ms. Partial bytes accumulate in `buf`
+/// across ticks; EOF with residual bytes yields them as a final line
+/// (matching `BufRead::lines`). Shared with the server's
+/// thread-per-connection model, whose shutdown drain needs the same
+/// prompt stop observation.
+pub(crate) fn read_line_tick(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    stop: &AtomicBool,
+) -> LineRead {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return LineRead::Stopped;
+        }
+        match reader.read_until(b'\n', buf) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return LineRead::Eof;
+                }
+                // EOF with a residual unterminated line
+                let bytes = std::mem::take(buf);
+                return match String::from_utf8(bytes) {
+                    Ok(s) => LineRead::Line(s),
+                    Err(_) => LineRead::Dead,
+                };
+            }
+            Ok(_) => {
+                if buf.last() == Some(&b'\n') {
+                    buf.pop();
+                    if buf.last() == Some(&b'\r') {
+                        buf.pop();
+                    }
+                    let bytes = std::mem::take(buf);
+                    return match String::from_utf8(bytes) {
+                        Ok(s) => LineRead::Line(s),
+                        Err(_) => LineRead::Dead,
+                    };
+                }
+                // short read without a newline yet: keep accumulating
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                // timeout tick: loop back to re-check stop; any bytes
+                // read before the timeout are already in `buf`
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return LineRead::Dead,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn labels(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("127.0.0.1:{}", 7801 + i)).collect()
+    }
+
+    #[test]
+    fn ring_is_deterministic_and_order_independent() {
+        let a = HashRing::new(&labels(3), DEFAULT_VNODES);
+        let mut shuffled = labels(3);
+        shuffled.reverse();
+        let b = HashRing::new(&shuffled, DEFAULT_VNODES);
+        for k in 0..200 {
+            let key = format!("m{k}");
+            // same *label* owns the key regardless of construction order
+            assert_eq!(a.label(a.route(&key)), b.label(b.route(&key)), "key {key}");
+            // and routing twice is stable
+            assert_eq!(a.route(&key), a.route(&key));
+        }
+    }
+
+    #[test]
+    fn ring_spreads_keys_across_replicas() {
+        let ring = HashRing::new(&labels(4), DEFAULT_VNODES);
+        let mut counts = [0usize; 4];
+        for k in 0..1000 {
+            counts[ring.route(&format!("m{k}"))] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            // perfectly even would be 250; demand at least half of that
+            assert!(c > 125, "replica {i} owns only {c}/1000 keys: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn adding_a_replica_moves_about_one_over_n() {
+        let before = HashRing::new(&labels(3), DEFAULT_VNODES);
+        let after = HashRing::new(&labels(4), DEFAULT_VNODES);
+        let n = 1000;
+        let mut moved = 0;
+        for k in 0..n {
+            let key = format!("m{k}");
+            let (b, a) = (before.route(&key), after.route(&key));
+            if before.label(b) != after.label(a) {
+                moved += 1;
+                // every moved key must land on the NEW replica — keys
+                // never shuffle between surviving replicas
+                assert_eq!(after.label(a), "127.0.0.1:7804", "key {key} moved sideways");
+            }
+        }
+        // ideal is 1/4 = 250; accept a generous band around it
+        let frac = moved as f64 / n as f64;
+        assert!(
+            (0.10..=0.45).contains(&frac),
+            "moved fraction {frac} outside [0.10, 0.45] ({moved}/{n})"
+        );
+    }
+
+    #[test]
+    fn routing_key_prefers_model_then_name() {
+        assert_eq!(routing_key(r#"{"cmd":"predict","model":"m3","x":[[0.1]]}"#).as_deref(), Some("m3"));
+        assert_eq!(routing_key(r#"{"cmd":"load","name":"prod"}"#).as_deref(), Some("prod"));
+        assert_eq!(routing_key(r#"{"cmd":"ping"}"#), None);
+        assert_eq!(routing_key("not json"), None);
+    }
+
+    #[test]
+    fn hash64_avalanches_neighboring_ids() {
+        // ids differing in one trailing character must not be adjacent
+        // on the ring (the failure mode of unfinalized FNV)
+        let h0 = hash64("m0");
+        let h1 = hash64("m1");
+        assert!(h0.abs_diff(h1) > u64::MAX / 1000, "h(m0)={h0:x} h(m1)={h1:x} too close");
+    }
+}

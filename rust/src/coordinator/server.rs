@@ -1,21 +1,42 @@
-//! Threaded TCP fit/predict server (line-JSON protocol; see
+//! TCP fit/predict server (line-JSON protocol; see
 //! [`protocol`](super::protocol)).
 //!
-//! std::net + thread-per-connection: the offline image has no tokio, and
-//! for a compute-bound service (fits run for seconds) blocking threads
-//! are the simpler and equally scalable design at this fan-in.
+//! Two connection layers share one protocol implementation:
+//!
+//! - **threads** — the original thread-per-connection model (std::net +
+//!   blocking reads). Simple, portable, and kept as the bitwise-parity
+//!   oracle for the event loop; the default on targets without a
+//!   readiness poller.
+//! - **epoll** — the event-driven model ([`super::eventloop`]): one
+//!   nonblocking I/O thread multiplexing every connection over raw
+//!   epoll/kqueue, dispatching complete request lines to a bounded
+//!   worker pool. Thousands of idle connections cost file descriptors,
+//!   not threads. The default on Linux/macOS.
+//!
+//! Selected by [`ServerConfig::io_model`] / `FASTKQR_IO=epoll|threads|
+//! auto`. Both layers produce byte-identical response streams for the
+//! same request sequence (including multi-line streamed predicts) — the
+//! tests in `tests/eventloop.rs` hold them to that.
+//!
+//! With a persistence directory configured the server can also poll the
+//! directory's generation manifest (`FASTKQR_MANIFEST_POLL_MS`), hot-
+//! swapping models written by *other* replicas sharing the directory —
+//! see [`ModelRegistry::refresh`] and [`super::router`].
 
 use super::batcher::BatchConfig;
+use super::eventloop::{self, IoModel};
 use super::metrics::Metrics;
-use super::protocol::{handle_request, ProtocolState};
+use super::protocol::{err_json, handle_request, ProtocolState};
 use super::registry::ModelRegistry;
+use super::router::{read_line_tick, LineRead};
 use crate::kqr::SolveOptions;
 use anyhow::{Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -30,6 +51,23 @@ pub struct ServerConfig {
     /// `FASTKQR_BATCH_WINDOW_US` / `FASTKQR_BATCH_MAX_ROWS` from the
     /// environment at config construction.
     pub batch: BatchConfig,
+    /// Connection layer (the default reads `FASTKQR_IO` at config
+    /// construction; `Auto` resolves to the event loop where supported).
+    pub io_model: IoModel,
+    /// Worker threads behind the event loop (0 = `FASTKQR_WORKERS`,
+    /// default number of cores). Ignored by the thread model.
+    pub workers: usize,
+    /// Worker-queue backpressure cap (0 = `FASTKQR_QUEUE_CAP`, default
+    /// 1024). Ignored by the thread model.
+    pub queue_cap: usize,
+    /// Registry id scope for replicas sharing one persistence dir:
+    /// generated ids become `"{scope}m{seq}"` (see
+    /// [`ModelRegistry::with_persistence_scoped`]). `None` = unscoped.
+    pub scope: Option<String>,
+    /// Manifest poll interval for hot-swapping peer writes. `None` reads
+    /// `FASTKQR_MANIFEST_POLL_MS` (default 200); `Some(0)` disables
+    /// polling. Only meaningful with `persist_dir` set.
+    pub manifest_poll_ms: Option<u64>,
 }
 
 impl Default for ServerConfig {
@@ -39,7 +77,22 @@ impl Default for ServerConfig {
             opts: SolveOptions::default(),
             persist_dir: None,
             batch: BatchConfig::from_env(),
+            io_model: IoModel::from_env(),
+            workers: 0,
+            queue_cap: 0,
+            scope: None,
+            manifest_poll_ms: None,
         }
+    }
+}
+
+fn resolve_manifest_poll_ms(config: &ServerConfig) -> u64 {
+    match config.manifest_poll_ms {
+        Some(ms) => ms,
+        None => std::env::var("FASTKQR_MANIFEST_POLL_MS")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .unwrap_or(200),
     }
 }
 
@@ -48,6 +101,9 @@ pub struct Server {
     pub local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    poll_thread: Option<JoinHandle<()>>,
+    /// Wake handle of the event loop (None under the thread model).
+    loop_shared: Option<Arc<eventloop::LoopShared>>,
     pub registry: Arc<ModelRegistry>,
     pub metrics: Arc<Metrics>,
 }
@@ -55,15 +111,18 @@ pub struct Server {
 impl Server {
     /// Bind and start accepting connections on a background thread.
     pub fn spawn(config: ServerConfig) -> Result<Server> {
+        let io = config.io_model.resolve()?;
         let listener =
             TcpListener::bind(&config.addr).with_context(|| format!("bind {}", config.addr))?;
         let local_addr = listener.local_addr()?;
+        let scope = config.scope.as_deref().unwrap_or("");
         let registry = Arc::new(match &config.persist_dir {
-            Some(dir) => ModelRegistry::with_persistence(dir)
+            Some(dir) => ModelRegistry::with_persistence_scoped(dir, scope)
                 .with_context(|| format!("open model persistence dir {dir}"))?,
             None => ModelRegistry::new(),
         });
         let metrics = Arc::new(Metrics::new());
+        let _ = metrics.io_model.set(io.label());
         let stop = Arc::new(AtomicBool::new(false));
         let state = Arc::new(ProtocolState::new(
             registry.clone(),
@@ -72,59 +131,176 @@ impl Server {
             // the process-global engine: concurrent connections (and any
             // co-located scheduler) share one Gram/basis per dataset
             crate::engine::FitEngine::global().clone(),
-            config.batch,
+            config.batch.clone(),
         ));
-        let stop2 = stop.clone();
-        let accept_thread = std::thread::Builder::new()
-            .name("fastkqr-accept".into())
-            .spawn(move || {
-                for conn in listener.incoming() {
-                    if stop2.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    match conn {
-                        Ok(stream) => {
-                            let st = state.clone();
-                            let _ = std::thread::Builder::new()
-                                .name("fastkqr-conn".into())
-                                .spawn(move || handle_connection(stream, &st));
+        let (accept_thread, loop_shared) = match io {
+            IoModel::Epoll => {
+                let workers = eventloop::resolve_workers(config.workers);
+                let queue_cap = eventloop::resolve_queue_cap(config.queue_cap);
+                let (handle, shared) = eventloop::spawn_event_loop(
+                    listener,
+                    state,
+                    metrics.clone(),
+                    stop.clone(),
+                    workers,
+                    queue_cap,
+                )?;
+                (handle, Some(shared))
+            }
+            IoModel::Threads | IoModel::Auto => {
+                (spawn_accept_loop(listener, state, metrics.clone(), stop.clone())?, None)
+            }
+        };
+        // Manifest poller: hot-swap models written by peer replicas
+        // sharing the persistence dir (see ModelRegistry::refresh).
+        let poll_ms = resolve_manifest_poll_ms(&config);
+        let poll_thread = if config.persist_dir.is_some() && poll_ms > 0 {
+            let reg = registry.clone();
+            let stop2 = stop.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("fastkqr-manifest".into())
+                    .spawn(move || {
+                        let mut elapsed = 0u64;
+                        while !stop2.load(Ordering::SeqCst) {
+                            // short sleeps so shutdown is prompt even
+                            // under long poll intervals
+                            std::thread::sleep(Duration::from_millis(poll_ms.min(50)));
+                            elapsed += poll_ms.min(50);
+                            if elapsed < poll_ms {
+                                continue;
+                            }
+                            elapsed = 0;
+                            if let Err(e) = reg.refresh() {
+                                crate::util::timer::vlog(&format!(
+                                    "manifest refresh failed: {e:#}"
+                                ));
+                            }
                         }
-                        Err(_) => break,
-                    }
-                }
-            })?;
+                    })
+                    .context("spawn manifest poll thread")?,
+            )
+        } else {
+            None
+        };
         Ok(Server {
             local_addr,
             stop,
             accept_thread: Some(accept_thread),
+            poll_thread,
+            loop_shared,
             registry,
             metrics,
         })
     }
 
-    /// Stop accepting and join the accept loop (in-flight connections
-    /// finish their current request).
+    /// Stop accepting, join the I/O threads, and drain live connections
+    /// (bounded wait): after return `active_connections` is zero unless
+    /// a connection refused to finish within the drain window.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // wake the accept loop
-        let _ = TcpStream::connect(self.local_addr);
+        match &self.loop_shared {
+            // event loop: poke the wake channel so the poller returns
+            Some(shared) => shared.wake(),
+            // thread model: a throwaway connection unblocks accept()
+            None => {
+                let _ = TcpStream::connect(self.local_addr);
+            }
+        }
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
+        }
+        if let Some(t) = self.poll_thread.take() {
+            let _ = t.join();
+        }
+        // Connection threads (thread model) observe the stop flag within
+        // their read-timeout tick; the event loop closes its connections
+        // before its thread exits. Wait for the gauge to drain.
+        let deadline = std::time::Instant::now() + Duration::from_secs(3);
+        while Metrics::get(&self.metrics.active_connections) > 0
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
         }
     }
 }
 
-fn handle_connection(stream: TcpStream, state: &ProtocolState) {
+/// The thread-per-connection accept loop (portable fallback + parity
+/// oracle for the event loop).
+fn spawn_accept_loop(
+    listener: TcpListener,
+    state: Arc<ProtocolState>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+) -> Result<JoinHandle<()>> {
+    let handle = std::thread::Builder::new()
+        .name("fastkqr-accept".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        metrics.conn_opened();
+                        let st = state.clone();
+                        let m2 = metrics.clone();
+                        let stop2 = stop.clone();
+                        // Builder::spawn drops the closure (and the
+                        // stream inside it) on error — clone a writer
+                        // first so the client gets an error line instead
+                        // of a silent close.
+                        let err_stream = stream.try_clone().ok();
+                        let spawned = std::thread::Builder::new()
+                            .name("fastkqr-conn".into())
+                            .spawn(move || {
+                                handle_connection(stream, &st, &stop2);
+                                m2.conn_closed();
+                            });
+                        if let Err(e) = spawned {
+                            metrics.conn_closed();
+                            reject_connection(err_stream, &metrics, &e);
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+        })?;
+    Ok(handle)
+}
+
+/// Thread/fd exhaustion at accept time: answer with a protocol error
+/// line and count it, instead of the silent close the client used to
+/// see (`accept_spawn_errors` in `metrics`).
+fn reject_connection(stream: Option<TcpStream>, metrics: &Metrics, err: &std::io::Error) {
+    Metrics::incr(&metrics.accept_spawn_errors);
+    Metrics::incr(&metrics.requests_total);
+    if let Some(mut s) = stream {
+        let mut line =
+            err_json(format!("server overloaded: connection thread spawn failed: {err}"))
+                .to_string();
+        line.push('\n');
+        let _ = s.write_all(line.as_bytes());
+        let _ = s.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+fn handle_connection(stream: TcpStream, state: &ProtocolState, stop: &AtomicBool) {
     let peer = stream.peer_addr().ok();
+    // A read timeout turns the blocking read into a tick loop: the
+    // thread observes a server shutdown within ~100 ms instead of
+    // blocking forever on an idle keep-alive connection.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let line = match read_line_tick(&mut reader, &mut buf, stop) {
+            LineRead::Line(l) => l,
+            LineRead::Eof | LineRead::Stopped | LineRead::Dead => break,
         };
         if line.trim().is_empty() {
             continue;
@@ -165,11 +341,16 @@ impl Client {
 
     /// Send one JSON request line, read one JSON response line.
     pub fn request(&mut self, req: &crate::util::Json) -> Result<crate::util::Json> {
+        use std::io::BufRead;
         let mut line = req.to_string();
         line.push('\n');
         self.writer.write_all(line.as_bytes())?;
         let mut resp = String::new();
-        self.reader.read_line(&mut resp)?;
+        if self.reader.read_line(&mut resp)? == 0 {
+            // EOF used to fall through to the parser and surface as a
+            // confusing `bad response ("")` — name the actual condition
+            anyhow::bail!("server closed the connection before responding");
+        }
         crate::util::Json::parse(resp.trim())
             .map_err(|e| anyhow::anyhow!("bad response: {e} ({resp:?})"))
     }
@@ -181,6 +362,7 @@ impl Client {
     /// at a leading error.
     pub fn request_stream(&mut self, req: &crate::util::Json) -> Result<Vec<crate::util::Json>> {
         use crate::util::Json;
+        use std::io::BufRead;
         let mut line = req.to_string();
         line.push('\n');
         self.writer.write_all(line.as_bytes())?;
@@ -209,23 +391,107 @@ mod tests {
     use super::*;
     use crate::util::Json;
 
+    fn net_available() -> bool {
+        std::net::TcpListener::bind("127.0.0.1:0").is_ok()
+    }
+
+    fn threads_config() -> ServerConfig {
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            io_model: IoModel::Threads,
+            ..ServerConfig::default()
+        }
+    }
+
     #[test]
     fn spawn_ping_shutdown() {
-        if std::net::TcpListener::bind("127.0.0.1:0").is_err() {
+        if !net_available() {
             eprintln!("skipping: no loopback TCP available in this environment");
             return;
         }
-        let server = Server::spawn(ServerConfig {
-            addr: "127.0.0.1:0".to_string(),
-            ..ServerConfig::default()
-        })
-        .unwrap();
+        let server = Server::spawn(threads_config()).unwrap();
         let mut client = Client::connect(server.local_addr).unwrap();
         let resp = client.request(&Json::obj(vec![("cmd", Json::str("ping"))])).unwrap();
         assert_eq!(resp.get("pong").and_then(Json::as_bool), Some(true));
         let m = client.request(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
         // the metrics request itself is counted before rendering
         assert_eq!(m.get_f64("requests_total"), Some(2.0));
+        assert_eq!(m.get_str("io_model"), Some("threads"));
         server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_open_connections() {
+        if !net_available() {
+            eprintln!("skipping: no loopback TCP available in this environment");
+            return;
+        }
+        let server = Server::spawn(threads_config()).unwrap();
+        let metrics = server.metrics.clone();
+        let mut client = Client::connect(server.local_addr).unwrap();
+        let resp = client.request(&Json::obj(vec![("cmd", Json::str("ping"))])).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(Metrics::get(&metrics.active_connections), 1);
+        // shutdown with the client still open: the connection thread
+        // observes the stop flag within its read-timeout tick and the
+        // gauge drains before shutdown returns
+        let t0 = std::time::Instant::now();
+        server.shutdown();
+        assert!(t0.elapsed() < Duration::from_secs(3), "drain must be bounded");
+        assert_eq!(Metrics::get(&metrics.active_connections), 0);
+        assert_eq!(Metrics::get(&metrics.connections_peak), 1);
+    }
+
+    #[test]
+    fn client_reports_closed_connection_not_bad_response() {
+        if !net_available() {
+            eprintln!("skipping: no loopback TCP available in this environment");
+            return;
+        }
+        // a listener that accepts and immediately drops the socket
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let _ = listener.accept().map(drop);
+        });
+        let mut client = Client::connect(addr).unwrap();
+        let err = client
+            .request(&Json::obj(vec![("cmd", Json::str("ping"))]))
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("closed the connection"),
+            "EOF must be reported as a closed connection, got: {err}"
+        );
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn reject_connection_answers_before_closing() {
+        if !net_available() {
+            eprintln!("skipping: no loopback TCP available in this environment");
+            return;
+        }
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            use std::io::Read;
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut text = String::new();
+            s.read_to_string(&mut text).unwrap();
+            text
+        });
+        let (server_side, _) = listener.accept().unwrap();
+        let metrics = Metrics::new();
+        let err = std::io::Error::new(std::io::ErrorKind::WouldBlock, "no threads left");
+        reject_connection(Some(server_side), &metrics, &err);
+        assert_eq!(Metrics::get(&metrics.accept_spawn_errors), 1);
+        let text = client.join().unwrap();
+        let resp = Json::parse(text.trim()).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(
+            resp.get_str("error").unwrap_or("").contains("spawn failed"),
+            "client must learn why: {text:?}"
+        );
     }
 }

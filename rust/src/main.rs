@@ -14,7 +14,13 @@
 //!   nckqr      simultaneous non-crossing fit
 //!   predict    predict from a saved model artifact (--model <file>)
 //!   serve      start the TCP fit/predict server (--persist <dir>;
-//!              predict micro-batching via FASTKQR_BATCH_WINDOW_US)
+//!              --io epoll|threads|auto picks the connection layer,
+//!              --workers N bounds the event loop's worker pool;
+//!              --replicas N starts N servers sharing --persist behind a
+//!              consistent-hash router on --addr; predict micro-batching
+//!              via FASTKQR_BATCH_WINDOW_US)
+//!   route      consistent-hash router in front of running replicas
+//!              (--replicas host:port,host:port [--vnodes V])
 //!   client     send one JSON request line to a running server
 //!              (--concurrency N --repeat R opens N connections firing
 //!              the request R times each — a predict-batching storm)
@@ -74,6 +80,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "nckqr" => cmd_nckqr(args),
         "predict" => cmd_predict(args),
         "serve" => cmd_serve(args),
+        "route" => cmd_route(args),
         "client" => cmd_client(args),
         "table1" => cmd_table(args, 1),
         "table2" => cmd_table(args, 2),
@@ -98,7 +105,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "help" | "--help" => {
             println!("fastkqr {} — exact kernel quantile regression", fastkqr::version());
             println!(
-                "subcommands: fit path grid cv nckqr predict serve client table1..6 figure1 ablations perf version"
+                "subcommands: fit path grid cv nckqr predict serve route client table1..6 figure1 ablations perf version"
             );
             println!("see README.md for options");
             Ok(())
@@ -431,23 +438,125 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Derive N replica listen addresses from the client-facing address:
+/// same host, ports `base+1 ..= base+n` (explicit `--replica-addrs`
+/// overrides).
+fn derive_replica_addrs(addr: &str, n: usize) -> Result<Vec<String>> {
+    let (host, port) = addr
+        .rsplit_once(':')
+        .ok_or_else(|| anyhow::anyhow!("--addr must be host:port, got {addr:?}"))?;
+    let port: u16 = port.parse().map_err(|_| anyhow::anyhow!("bad port in --addr {addr:?}"))?;
+    (1..=n as u16)
+        .map(|k| {
+            let p = port
+                .checked_add(k)
+                .ok_or_else(|| anyhow::anyhow!("replica port overflows past {port}"))?;
+            Ok(format!("{host}:{p}"))
+        })
+        .collect()
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_str("addr", "127.0.0.1:7787").to_string();
     let persist_dir = args.get("persist").map(String::from);
-    let server = Server::spawn(ServerConfig {
-        addr: addr.clone(),
-        opts: Default::default(),
-        persist_dir: persist_dir.clone(),
-    })?;
-    println!("fastkqr {} serving on {}", fastkqr::version(), server.local_addr);
-    match &persist_dir {
-        Some(dir) => println!(
-            "persistence: {dir} ({} model(s) reloaded)",
-            server.registry.len()
-        ),
-        None => println!("persistence: off (models are in-memory; --persist <dir> to keep them)"),
+    let io_model = match args.get("io") {
+        Some(v) => fastkqr::coordinator::IoModel::parse(v)?,
+        None => fastkqr::coordinator::IoModel::from_env(),
+    };
+    let workers = args.try_usize("workers", 0)?;
+    let replicas = args.try_usize("replicas", 1)?;
+    if replicas == 0 {
+        bail!("--replicas must be >= 1");
     }
+    let config = |addr: String, scope: Option<String>| ServerConfig {
+        addr,
+        persist_dir: persist_dir.clone(),
+        io_model,
+        workers,
+        scope,
+        ..Default::default()
+    };
+    if replicas == 1 {
+        let server = Server::spawn(config(addr, None))?;
+        println!("fastkqr {} serving on {}", fastkqr::version(), server.local_addr);
+        println!("io model: {}", server.metrics.io_model.get().copied().unwrap_or("unset"));
+        match &persist_dir {
+            Some(dir) => {
+                println!("persistence: {dir} ({} model(s) reloaded)", server.registry.len())
+            }
+            None => {
+                println!("persistence: off (models are in-memory; --persist <dir> to keep them)")
+            }
+        }
+        println!("protocol: one JSON request per line; try: {{\"cmd\":\"ping\"}}");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    // Scale-out: N replica servers sharing one persistence dir (scoped
+    // ids + manifest hot-swap) behind a consistent-hash router on the
+    // client-facing address.
+    let Some(dir) = &persist_dir else {
+        bail!(
+            "--replicas {replicas} needs --persist <dir>: replicas share models \
+             through the persistence dir's generation manifest"
+        );
+    };
+    let replica_addrs: Vec<String> = match args.get("replica-addrs") {
+        Some(list) => {
+            let v: Vec<String> =
+                list.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect();
+            if v.len() != replicas {
+                bail!("--replica-addrs lists {} address(es), --replicas says {replicas}", v.len());
+            }
+            v
+        }
+        None => derive_replica_addrs(&addr, replicas)?,
+    };
+    let mut servers = Vec::with_capacity(replicas);
+    for (k, raddr) in replica_addrs.iter().enumerate() {
+        let server = Server::spawn(config(raddr.clone(), Some(format!("r{k}"))))?;
+        println!("replica r{k} on {} ({} model(s) reloaded)", server.local_addr, server.registry.len());
+        servers.push(server);
+    }
+    let router = fastkqr::coordinator::Router::spawn(fastkqr::coordinator::RouterConfig {
+        addr,
+        replicas: replica_addrs,
+        vnodes: args.try_usize("vnodes", 0)?,
+    })?;
+    println!(
+        "fastkqr {} routing on {} ({} replicas, persistence: {dir})",
+        fastkqr::version(),
+        router.local_addr,
+        servers.len()
+    );
     println!("protocol: one JSON request per line; try: {{\"cmd\":\"ping\"}}");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// Stand-alone consistent-hash router in front of already-running
+/// replicas (`serve --replicas N` starts both sides in one process; this
+/// subcommand fronts replicas started elsewhere).
+fn cmd_route(args: &Args) -> Result<()> {
+    let addr = args.get_str("addr", "127.0.0.1:7787").to_string();
+    let Some(list) = args.get("replicas") else {
+        bail!("route needs --replicas host:port[,host:port...]");
+    };
+    let replicas: Vec<String> =
+        list.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect();
+    let router = fastkqr::coordinator::Router::spawn(fastkqr::coordinator::RouterConfig {
+        addr,
+        replicas,
+        vnodes: args.try_usize("vnodes", 0)?,
+    })?;
+    println!(
+        "fastkqr {} routing on {} over {} replica(s)",
+        fastkqr::version(),
+        router.local_addr,
+        router.ring.len()
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

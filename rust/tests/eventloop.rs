@@ -1,0 +1,220 @@
+//! Event-driven connection layer, end to end over real TCP: bitwise
+//! parity against the thread-per-connection oracle, bounded workers
+//! under hundreds of concurrent connections, queue-full backpressure,
+//! and graceful shutdown under both io models.
+
+use fastkqr::coordinator::server::Client;
+use fastkqr::coordinator::{IoModel, Metrics, Server, ServerConfig};
+use fastkqr::data::{synth, Rng};
+use fastkqr::util::Json;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+fn net_available() -> bool {
+    std::net::TcpListener::bind("127.0.0.1:0").is_ok()
+}
+
+fn spawn(io: IoModel, workers: usize, queue_cap: usize) -> Server {
+    Server::spawn(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        io_model: io,
+        workers,
+        queue_cap,
+        ..Default::default()
+    })
+    .expect("spawn server")
+}
+
+fn matrix_json(x: &fastkqr::linalg::Matrix) -> Json {
+    Json::Arr((0..x.rows()).map(|i| Json::arr_f64(x.row(i))).collect())
+}
+
+fn fit_req(data: &fastkqr::data::Dataset) -> Json {
+    Json::obj(vec![
+        ("cmd", Json::str("fit")),
+        ("x", matrix_json(&data.x)),
+        ("y", Json::arr_f64(&data.y)),
+        ("tau", Json::num(0.5)),
+        ("lambda", Json::num(1e-2)),
+    ])
+}
+
+/// Write `script` in one burst, then read the connection to EOF and
+/// return everything the server sent back.
+fn raw_exchange(addr: std::net::SocketAddr, script: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(script.as_bytes()).expect("write script");
+    let mut out = String::new();
+    stream.read_to_string(&mut out).expect("read to eof");
+    out
+}
+
+/// The tentpole's correctness bar: for the same request byte stream —
+/// pipelined lines, streamed predicts, protocol errors, a blank line,
+/// `quit` — the event loop must produce *byte-identical* output to the
+/// thread-per-connection model.
+#[test]
+fn event_loop_matches_thread_oracle_bytewise() {
+    if !net_available() {
+        eprintln!("skipping: no loopback TCP available");
+        return;
+    }
+    if !IoModel::event_supported() {
+        eprintln!("skipping: no event poller on this target");
+        return;
+    }
+    let threads_srv = spawn(IoModel::Threads, 0, 0);
+    let epoll_srv = spawn(IoModel::Epoll, 2, 0);
+    let mut rng = Rng::new(11);
+    let data = synth::sine_hetero(40, &mut rng);
+    // Fit the same spec on both servers. The solver is deterministic and
+    // both go through the process-global FitEngine, so the two models
+    // are bitwise-identical twins under the same id.
+    for srv in [&threads_srv, &epoll_srv] {
+        let mut c = Client::connect(srv.local_addr).unwrap();
+        let fit = c.request(&fit_req(&data)).unwrap();
+        assert_eq!(fit.get("ok").and_then(Json::as_bool), Some(true), "{}", fit.to_string());
+        assert_eq!(fit.get_str("model"), Some("m0"));
+    }
+    let script = concat!(
+        r#"{"cmd":"ping"}"#,
+        "\n",
+        r#"{"cmd":"predict","model":"m0","x":[[0.1],[0.5],[0.9]]}"#,
+        "\n",
+        r#"{"cmd":"predict","model":"m0","x":[[0.0],[0.2],[0.4],[0.6],[0.8]],"stream":true,"chunk_points":2}"#,
+        "\n",
+        r#"{"cmd":"nope"}"#,
+        "\n",
+        "not json at all\n",
+        "\n", // blank line: both layers skip it silently
+        r#"{"cmd":"predict","model":"missing","x":[[1]]}"#,
+        "\n",
+        "quit\n",
+    );
+    let from_threads = raw_exchange(threads_srv.local_addr, script);
+    let from_epoll = raw_exchange(epoll_srv.local_addr, script);
+    assert!(
+        from_threads.contains("\"pong\"") && from_threads.contains("\"chunk\""),
+        "oracle answered the script: {from_threads:?}"
+    );
+    assert_eq!(
+        from_threads, from_epoll,
+        "event loop must be byte-identical to the thread oracle"
+    );
+    threads_srv.shutdown();
+    epoll_srv.shutdown();
+}
+
+/// Hundreds of open connections, two workers: every connection is
+/// served, the pool never grows past its bound, and the connection
+/// gauges see all of them.
+#[test]
+fn epoll_sustains_256_connections_with_bounded_workers() {
+    if !net_available() || !IoModel::event_supported() {
+        eprintln!("skipping: needs loopback TCP and an event poller");
+        return;
+    }
+    const CONNS: usize = 256;
+    let server = spawn(IoModel::Epoll, 2, 0);
+    let metrics = server.metrics.clone();
+    let mut clients: Vec<Client> = (0..CONNS)
+        .map(|i| {
+            Client::connect(server.local_addr).unwrap_or_else(|e| panic!("connect {i}: {e}"))
+        })
+        .collect();
+    for (i, c) in clients.iter_mut().enumerate() {
+        let r = c
+            .request(&Json::obj(vec![("cmd", Json::str("ping"))]))
+            .unwrap_or_else(|e| panic!("ping {i}: {e}"));
+        assert_eq!(r.get("pong").and_then(Json::as_bool), Some(true), "conn {i}");
+    }
+    // all connections still open while we read the gauges
+    let m = clients[0].request(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
+    assert_eq!(m.get_f64("active_connections"), Some(CONNS as f64));
+    assert!(m.get_f64("connections_peak").unwrap() >= CONNS as f64);
+    assert_eq!(m.get_str("io_model"), Some("epoll"));
+    assert_eq!(m.get_f64("worker_threads"), Some(2.0), "pool sized by ServerConfig::workers");
+    let busy_peak = m.get_f64("workers_busy_peak").unwrap();
+    assert!(
+        busy_peak >= 1.0 && busy_peak <= 2.0,
+        "{CONNS} connections may never occupy more than the 2 bounded workers \
+         (peak {busy_peak})"
+    );
+    drop(clients);
+    server.shutdown();
+    assert_eq!(Metrics::get(&metrics.active_connections), 0, "shutdown drains the gauge");
+}
+
+/// Backpressure: with one worker pinned by a slow fit and a queue cap of
+/// 2, a burst of pipelined requests gets clean `queue full` error lines
+/// — one response per request, no hang, no silent drop.
+#[test]
+fn full_worker_queue_rejects_cleanly() {
+    if !net_available() || !IoModel::event_supported() {
+        eprintln!("skipping: needs loopback TCP and an event poller");
+        return;
+    }
+    let server = spawn(IoModel::Epoll, 1, 2);
+    let mut rng = Rng::new(3);
+    // large enough that the fit reliably outlasts connection B's burst
+    // (dispatching the burst takes microseconds; the fit, ~100 ms+)
+    let slow = synth::sine_hetero(800, &mut rng);
+    // connection A: occupy the only worker with the slow fit
+    let mut a_stream = TcpStream::connect(server.local_addr).unwrap();
+    let mut line = fit_req(&slow).to_string();
+    line.push('\n');
+    a_stream.write_all(line.as_bytes()).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    // connection B: burst 8 pipelined pings while the worker is busy.
+    // Every line gets exactly one response; whatever exceeds the pool
+    // queue + B's pending cap is rejected immediately.
+    const BURST: usize = 8;
+    let script = format!("{}\n", r#"{"cmd":"ping"}"#).repeat(BURST) + "quit\n";
+    let from_b = raw_exchange(server.local_addr, &script);
+    let lines: Vec<&str> = from_b.lines().collect();
+    assert_eq!(lines.len(), BURST, "one response per pipelined request: {from_b:?}");
+    let rejects = lines.iter().filter(|l| l.contains("worker queue full")).count();
+    let pongs = lines.iter().filter(|l| l.contains("\"pong\"")).count();
+    assert_eq!(rejects + pongs, BURST);
+    assert!(rejects >= 1, "cap 2 under a pinned worker must reject part of the burst");
+    // A's fit still completes
+    let mut a_out = String::new();
+    let mut reader = std::io::BufReader::new(a_stream.try_clone().unwrap());
+    std::io::BufRead::read_line(&mut reader, &mut a_out).unwrap();
+    let fit = Json::parse(a_out.trim()).unwrap();
+    assert_eq!(fit.get("ok").and_then(Json::as_bool), Some(true), "{a_out}");
+    let metrics = server.metrics.clone();
+    drop(a_stream);
+    server.shutdown();
+    assert_eq!(Metrics::get(&metrics.queue_full_rejects), rejects as u64);
+}
+
+/// Graceful shutdown under both io models: open connections drain, the
+/// gauge returns to zero, and shutdown completes within its bound.
+#[test]
+fn shutdown_drains_under_both_io_models() {
+    if !net_available() {
+        eprintln!("skipping: no loopback TCP available");
+        return;
+    }
+    let mut models = vec![IoModel::Threads];
+    if IoModel::event_supported() {
+        models.push(IoModel::Epoll);
+    }
+    for io in models {
+        let server = spawn(io, 0, 0);
+        let metrics = server.metrics.clone();
+        let mut clients: Vec<Client> =
+            (0..4).map(|_| Client::connect(server.local_addr).unwrap()).collect();
+        for c in clients.iter_mut() {
+            let r = c.request(&Json::obj(vec![("cmd", Json::str("ping"))])).unwrap();
+            assert_eq!(r.get("pong").and_then(Json::as_bool), Some(true));
+        }
+        assert_eq!(Metrics::get(&metrics.active_connections), 4, "{io:?}");
+        let t0 = std::time::Instant::now();
+        server.shutdown();
+        assert!(t0.elapsed() < std::time::Duration::from_secs(4), "{io:?} drain is bounded");
+        assert_eq!(Metrics::get(&metrics.active_connections), 0, "{io:?} gauge drained");
+        drop(clients);
+    }
+}

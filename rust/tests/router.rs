@@ -1,0 +1,258 @@
+//! Consistent-hash router + multi-replica serving, end to end: ring
+//! stability, cross-replica bitwise parity, manifest-driven hot-swap of
+//! a peer's write without a restart, and routed fits/predicts through a
+//! real router socket.
+
+use fastkqr::coordinator::server::Client;
+use fastkqr::coordinator::{HashRing, IoModel, Router, RouterConfig, Server, ServerConfig};
+use fastkqr::data::{synth, Rng};
+use fastkqr::util::Json;
+
+fn net_available() -> bool {
+    std::net::TcpListener::bind("127.0.0.1:0").is_ok()
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "fastkqr-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ))
+}
+
+fn matrix_json(x: &fastkqr::linalg::Matrix) -> Json {
+    Json::Arr((0..x.rows()).map(|i| Json::arr_f64(x.row(i))).collect())
+}
+
+fn replica_config(dir: &std::path::Path, k: usize) -> ServerConfig {
+    ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        persist_dir: Some(dir.display().to_string()),
+        scope: Some(format!("r{k}")),
+        // fast manifest polling so hot-swap is visible within the test
+        manifest_poll_ms: Some(30),
+        ..Default::default()
+    }
+}
+
+/// The ring mapping depends only on the label *set* — never on label
+/// order or process state — so independent routers (or a router and a
+/// bench computing balanced storms) agree on every key.
+#[test]
+fn ring_is_stable_under_label_permutation() {
+    let a: Vec<String> =
+        ["10.0.0.1:7801", "10.0.0.2:7801", "10.0.0.3:7801"].map(String::from).into();
+    let mut b = a.clone();
+    b.reverse();
+    let ring_a = HashRing::new(&a, 64);
+    let ring_b = HashRing::new(&b, 64);
+    for i in 0..500 {
+        let key = format!("r{}m{}", i % 4, i);
+        assert_eq!(
+            ring_a.label(ring_a.route(&key)),
+            ring_b.label(ring_b.route(&key)),
+            "key {key} must route identically regardless of label order"
+        );
+    }
+}
+
+/// Consistent hashing's defining property: growing the fleet from 3 to
+/// 4 replicas remaps only ~1/4 of the keys, and every moved key lands
+/// on the new replica (shrinking is the mirror image).
+#[test]
+fn resizing_moves_about_one_over_n_keys() {
+    let three: Vec<String> =
+        ["10.0.0.1:7801", "10.0.0.2:7801", "10.0.0.3:7801"].map(String::from).into();
+    let mut four = three.clone();
+    four.push("10.0.0.4:7801".to_string());
+    let ring3 = HashRing::new(&three, 64);
+    let ring4 = HashRing::new(&four, 64);
+    let keys: Vec<String> = (0..2000).map(|i| format!("m{i}")).collect();
+    let mut moved = 0usize;
+    for key in &keys {
+        let before = ring3.label(ring3.route(key));
+        let after = ring4.label(ring4.route(key));
+        if before != after {
+            moved += 1;
+            assert_eq!(after, "10.0.0.4:7801", "a moved key may only move to the new replica");
+        }
+    }
+    let frac = moved as f64 / keys.len() as f64;
+    assert!(
+        (0.10..=0.45).contains(&frac),
+        "expected ~1/4 of keys to move, got {moved}/{} ({frac:.2})",
+        keys.len()
+    );
+}
+
+/// Two replicas sharing one persistence dir: a model fitted through
+/// replica A hot-swaps into replica B via the generation manifest (no
+/// restart), and B's predictions are bitwise-identical to A's.
+#[test]
+fn peer_write_hot_swaps_and_predicts_bitwise_identically() {
+    if !net_available() {
+        eprintln!("skipping: no loopback TCP available");
+        return;
+    }
+    let dir = temp_dir("router-hotswap");
+    std::fs::create_dir_all(&dir).unwrap();
+    let a = Server::spawn(replica_config(&dir, 0)).unwrap();
+    let b = Server::spawn(replica_config(&dir, 1)).unwrap();
+    let mut rng = Rng::new(21);
+    let data = synth::sine_hetero(50, &mut rng);
+    let mut ca = Client::connect(a.local_addr).unwrap();
+    let fit = ca
+        .request(&Json::obj(vec![
+            ("cmd", Json::str("fit")),
+            ("x", matrix_json(&data.x)),
+            ("y", Json::arr_f64(&data.y)),
+            ("tau", Json::num(0.3)),
+            ("lambda", Json::num(1e-2)),
+        ]))
+        .unwrap();
+    assert_eq!(fit.get("ok").and_then(Json::as_bool), Some(true), "{}", fit.to_string());
+    let id = fit.get_str("model").unwrap().to_string();
+    assert_eq!(id, "r0m0", "replica A's scope names its ids");
+
+    let grid = fastkqr::linalg::Matrix::from_fn(16, 1, |i, _| i as f64 / 15.0);
+    let predict = Json::obj(vec![
+        ("cmd", Json::str("predict")),
+        ("model", Json::str(id.clone())),
+        ("x", matrix_json(&grid)),
+    ]);
+    let via_a = ca.request(&predict).unwrap();
+    assert_eq!(via_a.get("ok").and_then(Json::as_bool), Some(true));
+
+    // B discovers the write through the manifest poller (30 ms interval;
+    // allow generous scheduling slack)
+    let mut cb = Client::connect(b.local_addr).unwrap();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    let via_b = loop {
+        let resp = cb.request(&predict).unwrap();
+        if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+            break resp;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "replica B never hot-swapped {id}: {}",
+            resp.to_string()
+        );
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    };
+    assert_eq!(
+        via_a.get("pred").unwrap().to_string(),
+        via_b.get("pred").unwrap().to_string(),
+        "the hot-swapped replica must predict bitwise-identically"
+    );
+    assert!(b.registry.hot_swaps() >= 1, "B loaded A's model via refresh");
+    a.shutdown();
+    b.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Full scale-out path through a real router socket: fits and predicts
+/// flow through the router to scoped replicas, responses stream back
+/// unmodified, and each model's traffic pins to one replica.
+#[test]
+fn routed_fit_and_predict_roundtrip() {
+    if !net_available() {
+        eprintln!("skipping: no loopback TCP available");
+        return;
+    }
+    let dir = temp_dir("router-e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let replicas: Vec<Server> =
+        (0..2).map(|k| Server::spawn(replica_config(&dir, k)).unwrap()).collect();
+    let labels: Vec<String> = replicas.iter().map(|s| s.local_addr.to_string()).collect();
+    let router = Router::spawn(RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        replicas: labels.clone(),
+        vnodes: 0,
+    })
+    .unwrap();
+
+    let mut rng = Rng::new(8);
+    let data = synth::sine_hetero(40, &mut rng);
+    let mut client = Client::connect(router.local_addr).unwrap();
+    // keyless request: round-robins to some replica and comes back whole
+    let pong = client.request(&Json::obj(vec![("cmd", Json::str("ping"))])).unwrap();
+    assert_eq!(pong.get("pong").and_then(Json::as_bool), Some(true));
+
+    // a fit through the router lands on the replica that owns... nothing
+    // yet (fits carry no model key, so they round-robin); the returned
+    // id then routes every predict to that model's ring owner
+    let fit = client
+        .request(&Json::obj(vec![
+            ("cmd", Json::str("fit")),
+            ("x", matrix_json(&data.x)),
+            ("y", Json::arr_f64(&data.y)),
+            ("tau", Json::num(0.5)),
+            ("lambda", Json::num(1e-2)),
+        ]))
+        .unwrap();
+    assert_eq!(fit.get("ok").and_then(Json::as_bool), Some(true), "{}", fit.to_string());
+    let id = fit.get_str("model").unwrap().to_string();
+
+    // predicts keyed by the model id all hit its ring owner; the manifest
+    // poller makes the model serveable there even if the fit ran elsewhere
+    let predict = Json::obj(vec![
+        ("cmd", Json::str("predict")),
+        ("model", Json::str(id.clone())),
+        ("x", matrix_json(&data.x)),
+    ]);
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    loop {
+        let resp = client.request(&predict).unwrap();
+        if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "routed predict for {id} never succeeded: {}",
+            resp.to_string()
+        );
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    for _ in 0..9 {
+        let resp = client.request(&predict).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    }
+
+    // streamed predicts relay through the router line-for-line
+    let streamed = client
+        .request_stream(&Json::obj(vec![
+            ("cmd", Json::str("predict")),
+            ("model", Json::str(id.clone())),
+            ("x", matrix_json(&data.x)),
+            ("stream", Json::Bool(true)),
+            ("chunk_points", Json::num(16.0)),
+        ]))
+        .unwrap();
+    assert!(streamed.len() >= 3, "header + chunks + terminator: {}", streamed.len());
+    assert_eq!(streamed.last().unwrap().get("done").and_then(Json::as_bool), Some(true));
+
+    // the model's predict traffic all landed on its single ring owner
+    let ring = HashRing::new(&labels, fastkqr::coordinator::router::DEFAULT_VNODES);
+    let owner = ring.route(&id);
+    let counts: Vec<u64> = replicas
+        .iter()
+        .map(|s| fastkqr::coordinator::Metrics::get(&s.metrics.predict_requests))
+        .collect();
+    assert!(counts[owner] >= 10, "owner served the keyed predicts: {counts:?}");
+    assert_eq!(
+        counts[1 - owner],
+        0,
+        "consistent hashing pins one model's traffic to one replica: {counts:?}"
+    );
+
+    router.shutdown();
+    for r in replicas {
+        r.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    // the io model knob resolves somewhere sane on every target
+    assert!(IoModel::Auto.resolve().is_ok());
+}

@@ -19,23 +19,29 @@ from pathlib import Path
 
 BENCH_FILES = ["BENCH_grid.json", "BENCH_serve.json", "BENCH_lowrank.json"]
 
-# List elements are keyed by their identifying field, not their position:
-# inserting a row (say the rff column growing a new D) must not shift
-# every later row onto a different comparison partner.
-ID_FIELDS = ("m", "d", "n", "tau", "name")
+# List elements are keyed by their identifying field(s), not their
+# position: inserting a row (say the rff column growing a new D) must not
+# shift every later row onto a different comparison partner.
+ID_FIELDS = ("m", "d", "n", "tau", "name", "io", "replicas")
 
 
 def _list_key(item, index):
     """Stable key for one list element: `[m=64]`-style when the element
-    is a dict carrying an identifying field, positional otherwise."""
+    is a dict carrying identifying fields, positional otherwise. All
+    matching id fields combine into one key — the serve bench's
+    replica_scaling rows are identified by (io, replicas) jointly, and
+    either alone would collide."""
     if isinstance(item, dict):
+        parts = []
         for f in ID_FIELDS:
             v = item.get(f)
             if isinstance(v, bool) or not isinstance(v, (int, float, str)):
                 continue
             if isinstance(v, float) and v.is_integer():
                 v = int(v)
-            return f"[{f}={v}]"
+            parts.append(f"{f}={v}")
+        if parts:
+            return f"[{','.join(parts)}]"
     return str(index)
 
 
