@@ -51,6 +51,17 @@ fn main() {
         gb.apgd_lowrank.median / gb.ssn_lowrank.median.max(1e-12),
         gb.ssn_lowrank_obj_gap
     );
+    println!("{}", gb.ssn_oracle.report_line());
+    println!("{}", gb.ssn_bundle.report_line());
+    println!(
+        "   ssn factor economy: carry {:.2}x / bundle {:.2}x vs per-cell oracle \
+         (refactorizations {} -> {}, {} rank-1 updates)",
+        gb.ssn_carry_speedup,
+        gb.ssn_bundle_speedup,
+        gb.ssn_refactors_oracle,
+        gb.ssn_refactors_carry,
+        gb.ssn_rank1_updates
+    );
     std::fs::write(&out, gb.to_json().to_string()).expect("write BENCH_grid.json");
     println!("wrote {out}");
 }

@@ -446,7 +446,7 @@ pub fn from_json(v: &Json) -> Result<QuantileModel> {
                 None => Vec::new(),
                 Some(arr) => arr.iter().map(CvSummary::from_json).collect::<Result<_>>()?,
             };
-            Ok(QuantileModel::Set(ModelSet { fits, shape, cv, lockstep: None, solver: None }))
+            Ok(QuantileModel::Set(ModelSet { fits, shape, cv, lockstep: None, solver: None, ssn: None }))
         }
         Some("nckqr") => {
             let taus = v
@@ -936,6 +936,7 @@ mod tests {
             cv: Vec::new(),
             lockstep: None,
             solver: None,
+            ssn: None,
         });
         assert!(to_json(&empty).is_err());
     }

@@ -713,15 +713,8 @@ impl FitSpec {
             }
         }
         if self.solver == Some(SolverBackend::Ssn) {
-            match &self.task {
-                Task::Cv { .. } => {
-                    bail!("spec: solver \"ssn\" does not support the cv task (use apgd or auto)")
-                }
-                Task::NonCrossing { .. } => bail!(
-                    "spec: solver \"ssn\" does not support the noncrossing task \
-                     (use apgd or auto)"
-                ),
-                _ => {}
+            if let Task::Cv { .. } = &self.task {
+                bail!("spec: solver \"ssn\" does not support the cv task (use apgd or auto)")
             }
             if matches!(self.backend.as_deref(), Some("xla")) {
                 bail!(
@@ -746,31 +739,45 @@ impl FitSpec {
     /// The concrete backend this spec fits with — `Auto` resolves here,
     /// as a pure function of the document (n, representation rank, grid
     /// size; see [`solver::auto_select`]), so the same spec picks the
-    /// same backend on every machine. Tasks SSN does not cover (CV,
-    /// non-crossing) and the xla iteration backend always resolve to
-    /// APGD.
+    /// same backend on every machine. The CV task and the xla iteration
+    /// backend always resolve to APGD; `NonCrossing` counts one cell per
+    /// quantile level (the lifted Newton system couples them).
     pub fn resolved_solver(&self) -> SolverBackend {
         if matches!(self.backend.as_deref(), Some("xla")) {
             return SolverBackend::Apgd;
         }
         match self.solver.unwrap_or_default() {
             SolverBackend::Auto => {
-                let cells = match &self.task {
-                    Task::Single { .. } => 1,
-                    Task::Path { lambdas, .. } => lambdas.len(),
-                    Task::Grid { taus, lambdas } => taus.len() * lambdas.len(),
-                    Task::NonCrossing { .. } | Task::Cv { .. } => return SolverBackend::Apgd,
-                };
-                let n = self.x.rows();
-                let rank = match self.approx {
-                    ApproxSpec::Exact => n,
-                    ApproxSpec::Nystrom { m, .. } => m.min(n),
-                    ApproxSpec::RandomFeatures { d, .. } => d.min(n),
-                };
-                solver::auto_select(n, rank, cells)
+                if matches!(self.task, Task::Cv { .. }) {
+                    return SolverBackend::Apgd;
+                }
+                self.auto_resolution().backend
             }
             concrete => concrete,
         }
+    }
+
+    /// The cost-model inputs (n, representation rank, grid cells) this
+    /// document presents to [`solver::auto_select`], echoed back with
+    /// the backend the model would pick. Informational when the spec
+    /// pins a concrete solver — [`Self::resolved_solver`] is the binding
+    /// decision (it also handles the CV/xla forced-APGD cases).
+    pub fn auto_resolution(&self) -> solver::AutoResolution {
+        let cells = match &self.task {
+            Task::Single { .. } => 1,
+            Task::Path { lambdas, .. } => lambdas.len(),
+            Task::Grid { taus, lambdas } | Task::Cv { taus, lambdas, .. } => {
+                taus.len() * lambdas.len()
+            }
+            Task::NonCrossing { taus, .. } => taus.len(),
+        };
+        let n = self.x.rows();
+        let rank = match self.approx {
+            ApproxSpec::Exact => n,
+            ApproxSpec::Nystrom { m, .. } => m.min(n),
+            ApproxSpec::RandomFeatures { d, .. } => d.min(n),
+        };
+        solver::auto_resolve(n, rank, cells)
     }
 
     pub fn to_json(&self) -> Json {
@@ -945,12 +952,16 @@ impl FitEngine {
             }
             Task::Path { tau, lambdas } => {
                 let solver = self.solver_approx(&spec.x, &spec.y, &kernel, approx, opts)?;
-                let fits = if solver_backend == SolverBackend::Ssn {
-                    let (fits, _) = solver::fit_tau_column_ssn(&solver, *tau, lambdas, None)?;
-                    fits
+                let (fits, ssn) = if solver_backend == SolverBackend::Ssn {
+                    // A path is a one-column grid: run the carry driver
+                    // so the factor flows down the λ column and the
+                    // reuse counters surface in diagnostics.
+                    let (cols, stats) =
+                        solver::fit_tau_columns_ssn_carry(&solver, &[*tau], lambdas)?;
+                    (cols.into_iter().flatten().collect::<Vec<_>>(), Some(stats))
                 } else {
                     let mut backend = backend_for(spec.backend.as_deref())?;
-                    solver.fit_path_with_backend(*tau, lambdas, backend.as_mut())?
+                    (solver.fit_path_with_backend(*tau, lambdas, backend.as_mut())?, None)
                 };
                 Ok(QuantileModel::Set(ModelSet {
                     fits,
@@ -958,6 +969,7 @@ impl FitEngine {
                     cv: Vec::new(),
                     lockstep: None,
                     solver: Some(solver_backend),
+                    ssn,
                 }))
             }
             Task::Grid { taus, lambdas } => {
@@ -979,7 +991,11 @@ impl FitEngine {
                 let solver = self.nc_solver_approx_with_options(
                     &spec.x, &spec.y, &kernel, taus, approx, nc_opts,
                 )?;
-                let fit = solver.fit(*lam1, *lam2)?;
+                let fit = if solver_backend == SolverBackend::Ssn {
+                    solver.fit_ssn(*lam1, *lam2)?
+                } else {
+                    solver.fit(*lam1, *lam2)?
+                };
                 Ok(QuantileModel::Nckqr(fit))
             }
             Task::Cv { taus, lambdas, folds, seed } => {
@@ -1013,6 +1029,7 @@ impl FitEngine {
                     cv: summaries,
                     lockstep: None,
                     solver: Some(SolverBackend::Apgd),
+                    ssn: None,
                 }))
             }
         }
@@ -1231,9 +1248,10 @@ mod tests {
             .with_solver(SolverBackend::Ssn);
         let err = cv.validate().unwrap_err().to_string();
         assert!(err.contains("ssn"), "{err}");
+        // the non-crossing task is covered (lifted Newton system)
         let nc = toy_spec(Task::NonCrossing { taus: vec![0.25, 0.75], lam1: 5.0, lam2: 0.05 })
             .with_solver(SolverBackend::Ssn);
-        assert!(nc.validate().is_err());
+        nc.validate().unwrap();
         let xla = toy_spec(Task::Single { tau: 0.5, lambda: 0.05 })
             .with_solver(SolverBackend::Ssn)
             .with_backend("xla");
@@ -1260,6 +1278,26 @@ mod tests {
         let cv = toy_spec(Task::Cv { taus: vec![0.5], lambdas: vec![0.1], folds: 2, seed: 0 })
             .with_solver(SolverBackend::Auto);
         assert_eq!(cv.resolved_solver(), SolverBackend::Apgd);
+        // non-crossing resolves concretely (one cell per level)
+        let nc = toy_spec(Task::NonCrossing { taus: vec![0.25, 0.75], lam1: 5.0, lam2: 0.05 })
+            .with_solver(SolverBackend::Auto);
+        assert_ne!(nc.resolved_solver(), SolverBackend::Auto);
+    }
+
+    #[test]
+    fn run_noncrossing_ssn_is_certified_and_counted() {
+        let spec = toy_spec(Task::NonCrossing { taus: vec![0.25, 0.75], lam1: 5.0, lam2: 0.05 })
+            .with_solver(SolverBackend::Ssn);
+        let engine = FitEngine::new();
+        let model = engine.run(&spec).unwrap();
+        match &model {
+            QuantileModel::Nckqr(f) => {
+                assert!(f.kkt.pass, "{:?}", f.kkt);
+                let stats = f.ssn.expect("ssn counters attached");
+                assert!(stats.newton_steps > 0 && stats.refactorizations >= 1);
+            }
+            other => panic!("expected Nckqr model, got {}", other.kind()),
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@ use crate::engine::{GridFit, LockstepStats, PredictPlan};
 use crate::kqr::KqrFit;
 use crate::linalg::Matrix;
 use crate::nckqr::NckqrFit;
-use crate::solver::SolverBackend;
+use crate::solver::{SolverBackend, SsnGridStats};
 use crate::util::Json;
 use anyhow::Result;
 use std::path::Path;
@@ -84,6 +84,9 @@ pub struct ModelSet {
     /// `Auto`). Runtime-only diagnostics, like `lockstep`: artifacts do
     /// not persist it, so reloaded models report `None`.
     pub solver: Option<SolverBackend>,
+    /// Factor-reuse accounting from the SSN grid drivers (carry /
+    /// bundles); runtime-only, like `lockstep`.
+    pub ssn: Option<SsnGridStats>,
 }
 
 /// The unified fitted-model facade (see module docs).
@@ -104,6 +107,7 @@ impl QuantileModel {
             cv: Vec::new(),
             lockstep: grid.lockstep,
             solver: Some(grid.solver),
+            ssn: grid.ssn,
         })
     }
 
@@ -245,6 +249,9 @@ impl QuantileModel {
                 if let Some(rf) = &f.rff {
                     pairs.push(("rff_d", Json::num(rf.map.d() as f64)));
                 }
+                if let Some(st) = &f.ssn {
+                    pairs.push(("ssn", ssn_to_json(st)));
+                }
                 Json::obj(pairs)
             }
             QuantileModel::Set(s) => {
@@ -278,6 +285,9 @@ impl QuantileModel {
                         ]),
                     ));
                 }
+                if let Some(st) = &s.ssn {
+                    pairs.push(("ssn", ssn_to_json(st)));
+                }
                 Json::obj(pairs)
             }
         }
@@ -303,6 +313,19 @@ impl QuantileModel {
     pub fn load(path: impl AsRef<Path>) -> Result<QuantileModel> {
         artifact::load(path.as_ref())
     }
+}
+
+fn ssn_to_json(st: &SsnGridStats) -> Json {
+    Json::obj(vec![
+        ("cells", Json::num(st.cells as f64)),
+        ("newton_steps", Json::num(st.newton_steps as f64)),
+        ("outer_rounds", Json::num(st.outer_rounds as f64)),
+        ("refactorizations", Json::num(st.refactorizations as f64)),
+        ("rank1_updates", Json::num(st.rank1_updates as f64)),
+        ("carried_seeds", Json::num(st.carried_seeds as f64)),
+        ("bundles", Json::num(st.bundles as f64)),
+        ("bundle_adoptions", Json::num(st.bundle_adoptions as f64)),
+    ])
 }
 
 pub(super) fn shape_to_json(shape: &SetShape) -> Json {

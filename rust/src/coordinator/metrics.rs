@@ -17,6 +17,17 @@ pub struct Metrics {
     pub solver_apgd_fits: AtomicU64,
     /// Fits executed by the pALM semismooth-Newton backend.
     pub solver_ssn_fits: AtomicU64,
+    /// Fit requests whose spec said `auto` and the server resolved it
+    /// from the cost model (either way it lands in one of the two
+    /// counters above).
+    pub solver_auto_resolutions: AtomicU64,
+    /// Full Cholesky refactorizations performed by SSN fits (grid
+    /// drivers and single cells alike).
+    pub ssn_refactorizations: AtomicU64,
+    /// Rank-1 factor up/downdates SSN applied instead of refactoring —
+    /// the grid carry's whole payoff is this counter growing while
+    /// `ssn_refactorizations` stays near the cell count.
+    pub ssn_rank1_updates: AtomicU64,
     pub predict_requests: AtomicU64,
     pub apgd_iters_total: AtomicU64,
     /// Microseconds spent inside solvers.
@@ -110,6 +121,12 @@ impl Metrics {
             ("fits_total", Json::num(Self::get(&self.fits_total) as f64)),
             ("solver_apgd_fits", Json::num(Self::get(&self.solver_apgd_fits) as f64)),
             ("solver_ssn_fits", Json::num(Self::get(&self.solver_ssn_fits) as f64)),
+            (
+                "solver_auto_resolutions",
+                Json::num(Self::get(&self.solver_auto_resolutions) as f64),
+            ),
+            ("ssn_refactorizations", Json::num(Self::get(&self.ssn_refactorizations) as f64)),
+            ("ssn_rank1_updates", Json::num(Self::get(&self.ssn_rank1_updates) as f64)),
             ("predict_requests", Json::num(Self::get(&self.predict_requests) as f64)),
             ("apgd_iters_total", Json::num(Self::get(&self.apgd_iters_total) as f64)),
             ("solver_micros", Json::num(Self::get(&self.solver_micros) as f64)),

@@ -340,11 +340,26 @@ fn dispatch(state: &ProtocolState, req: &Json) -> Result<Reply> {
             // Count per backend after `auto` resolution so operators can
             // see what actually ran; apgd + ssn always sums to the number
             // of successful fit requests.
+            if spec.solver == Some(crate::solver::SolverBackend::Auto) {
+                Metrics::incr(&state.metrics.solver_auto_resolutions);
+            }
             match spec.resolved_solver() {
                 crate::solver::SolverBackend::Ssn => {
                     Metrics::incr(&state.metrics.solver_ssn_fits)
                 }
                 _ => Metrics::incr(&state.metrics.solver_apgd_fits),
+            }
+            // Fold the fit's factor-reuse counters into the server-wide
+            // totals (grid drivers attach them to the model set, the
+            // lifted non-crossing backend to the joint fit).
+            let ssn_stats = match &model {
+                crate::api::QuantileModel::Nckqr(f) => f.ssn,
+                crate::api::QuantileModel::Set(s) => s.ssn,
+                crate::api::QuantileModel::Kqr(_) => None,
+            };
+            if let Some(st) = ssn_stats {
+                Metrics::add(&state.metrics.ssn_refactorizations, st.refactorizations as u64);
+                Metrics::add(&state.metrics.ssn_rank1_updates, st.rank1_updates as u64);
             }
             let mut pairs = fit_response(&model);
             pairs.push(("model", Json::str(state.registry.insert(model))));
@@ -691,6 +706,45 @@ mod tests {
         assert_eq!(m.get_f64("solver_ssn_fits"), Some(1.0));
         assert_eq!(m.get_f64("solver_apgd_fits"), Some(1.0));
         assert_eq!(m.get_f64("fits_total"), Some(2.0));
+    }
+
+    #[test]
+    fn ssn_grid_factor_reuse_and_auto_resolution_surface_in_metrics() {
+        let st = state();
+        // An SSN grid: the carry driver attaches factor-reuse counters
+        // to the model set, and the server folds them into its totals.
+        let grid = r#"{"cmd":"fit","spec":{
+            "x":[[0.0],[0.2],[0.4],[0.6],[0.8],[1.0],[0.1],[0.9],[0.3],[0.7]],
+            "y":[0.0,0.6,0.9,0.9,0.6,0.0,0.3,0.3,0.8,0.8],
+            "kernel":{"type":"rbf","sigma":0.4},
+            "solver":"ssn",
+            "task":{"type":"grid","taus":[0.25,0.75],"lambdas":[0.1,0.01]}}}"#
+            .replace('\n', " ");
+        let r = handle_line(&st, &grid);
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{}", r.to_string());
+        let diag = r.get("diagnostics").unwrap();
+        let ssn = diag.get("ssn").expect("grid ssn fit reports factor-reuse diagnostics");
+        assert_eq!(ssn.get_f64("cells"), Some(4.0));
+        assert!(ssn.get_f64("refactorizations").unwrap() >= 1.0);
+        // An `auto` spec bumps the resolution counter whichever backend
+        // the cost model picks.
+        let auto = r#"{"cmd":"fit","spec":{
+            "x":[[0.0],[0.2],[0.4],[0.6],[0.8],[1.0],[0.1],[0.9]],
+            "y":[0.0,0.6,0.9,0.9,0.6,0.0,0.3,0.3],
+            "kernel":{"type":"rbf","sigma":0.4},
+            "solver":"auto",
+            "task":{"type":"single","tau":0.5,"lambda":0.01}}}"#
+            .replace('\n', " ");
+        let r2 = handle_line(&st, &auto);
+        assert_eq!(r2.get("ok").and_then(Json::as_bool), Some(true), "{}", r2.to_string());
+        let m = handle_line(&st, r#"{"cmd":"metrics"}"#);
+        assert_eq!(m.get_f64("solver_auto_resolutions"), Some(1.0));
+        assert!(m.get_f64("ssn_refactorizations").unwrap() >= 1.0);
+        assert_eq!(
+            m.get_f64("ssn_rank1_updates").unwrap(),
+            ssn.get_f64("rank1_updates").unwrap(),
+            "server totals mirror the fit's own counters"
+        );
     }
 
     #[test]

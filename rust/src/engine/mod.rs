@@ -18,6 +18,14 @@
 //!   iteration for the whole bundle; converged cells retire via
 //!   swap-remove repacking), with the sequential path kept as the
 //!   bitwise parity oracle.
+//! - [`ssn_grid`]: the SSN mirror of the lockstep idea — in-flight cells
+//!   batch their n×dim products through grid-wide GEMMs and pool their
+//!   Newton factorizations (one leader factor per (λ, σ) group,
+//!   per-cell RHS, rank-1 reconciliation for near-identical active
+//!   sets). The sequential SSN path carries the active-set Cholesky
+//!   factor cell-to-cell instead
+//!   ([`crate::solver::fit_tau_columns_ssn_carry`]), and the per-cell
+//!   PR 8 path survives as the ≤1e-8 parity oracle.
 //! - [`predict`]: the serving-side counterpart — [`PredictPlan`]s compile
 //!   a fitted model once (resolved kernel, `Arc`'d train-row/landmark
 //!   block or random-feature map, coefficients packed into one matrix) so
@@ -37,6 +45,7 @@
 pub mod cache;
 pub mod lockstep;
 pub mod predict;
+pub mod ssn_grid;
 
 pub use cache::{
     fingerprint, fingerprint_approx, ApproxSpec, BasisEntry, CacheMetrics, Fingerprint, GramCache,
@@ -300,9 +309,17 @@ impl FitEngine {
     /// [`FitEngine::fit_grid_with_strategy`] with an explicit solver
     /// backend. `Auto` resolves here via [`solver::auto_select`] from
     /// (n, basis rank, grid size) — a pure function of the problem, so
-    /// the same spec picks the same backend on any machine. The SSN
-    /// backend has no lockstep driver: it ignores the `lockstep` hint
-    /// and always reports `GridFit::lockstep = None`.
+    /// the same spec picks the same backend on any machine.
+    ///
+    /// Both backends honor the `lockstep` hint: APGD dispatches to the
+    /// bitwise-parity [`lockstep`] wavefront, SSN to the bundled
+    /// [`ssn_grid`] driver (shared factorizations, batched GEMMs, ≤1e-8
+    /// parity). With the hint off, APGD runs the sequential columns and
+    /// SSN the sequential **factor-carry** columns
+    /// ([`solver::fit_tau_columns_ssn_carry`]); either way an SSN grid
+    /// reports its factor-reuse accounting in [`GridFit::ssn`] and
+    /// `GridFit::lockstep` stays `None` (that field is APGD bundle
+    /// accounting).
     #[allow(clippy::too_many_arguments)]
     pub fn fit_grid_with_solver(
         &self,
@@ -326,15 +343,27 @@ impl FitEngine {
             }
             concrete => concrete,
         };
-        if backend == SolverBackend::Apgd && lockstep.unwrap_or_else(|| self.lockstep_enabled())
-        {
+        let bundle = lockstep.unwrap_or_else(|| self.lockstep_enabled());
+        if backend == SolverBackend::Apgd && bundle {
             let (fits, stats) = lockstep::fit_grid_lockstep(self, &solver, taus, lambdas)?;
             return Ok(GridFit {
                 taus: taus.to_vec(),
                 lambdas: lambdas.to_vec(),
                 fits,
                 lockstep: Some(stats),
+                ssn: None,
                 solver: SolverBackend::Apgd,
+            });
+        }
+        if backend == SolverBackend::Ssn && bundle {
+            let (fits, stats) = ssn_grid::fit_grid_ssn_bundled(self, &solver, taus, lambdas)?;
+            return Ok(GridFit {
+                taus: taus.to_vec(),
+                lambdas: lambdas.to_vec(),
+                fits,
+                lockstep: None,
+                ssn: Some(stats),
+                solver: SolverBackend::Ssn,
             });
         }
         // Inside an outer serial scope (e.g. a scheduler worker) the grid
@@ -344,25 +373,78 @@ impl FitEngine {
         } else {
             self.config.par.threads.min(taus.len()).max(1)
         };
-        let fit_cols: ColumnDriver = match backend {
-            SolverBackend::Ssn => solver::fit_tau_columns_ssn,
-            _ => fit_tau_columns,
-        };
-        let fits = chunked_tau_columns(&solver, taus, lambdas, workers, fit_cols)?;
+        if backend == SolverBackend::Ssn {
+            let (fits, stats) = ssn_carry_tau_columns(&solver, taus, lambdas, workers)?;
+            return Ok(GridFit {
+                taus: taus.to_vec(),
+                lambdas: lambdas.to_vec(),
+                fits,
+                lockstep: None,
+                ssn: Some(stats),
+                solver: SolverBackend::Ssn,
+            });
+        }
+        let fits = chunked_tau_columns(&solver, taus, lambdas, workers, fit_tau_columns)?;
         Ok(GridFit {
             taus: taus.to_vec(),
             lambdas: lambdas.to_vec(),
             fits,
             lockstep: None,
+            ssn: None,
             solver: backend,
         })
     }
 }
 
-/// A sequential multi-column grid driver: both the APGD and the SSN
-/// backends expose this exact shape, which is what lets one chunking
-/// harness serve them both.
+/// A sequential multi-column grid driver (the APGD column shape; the
+/// SSN carry columns thread factor-reuse stats and go through
+/// [`ssn_carry_tau_columns`] instead).
 type ColumnDriver = fn(&KqrSolver, &[f64], &[f64]) -> Result<Vec<Vec<KqrFit>>>;
+
+/// The SSN mirror of [`chunked_tau_columns`]: τ columns chunked onto
+/// scoped threads, each chunk running the sequential **factor-carry**
+/// columns ([`solver::fit_tau_columns_ssn_carry`]) in a serial scope,
+/// with per-chunk [`solver::SsnGridStats`] merged into one grid total.
+fn ssn_carry_tau_columns(
+    solver: &KqrSolver,
+    taus: &[f64],
+    lambdas: &[f64],
+    workers: usize,
+) -> Result<(Vec<Vec<KqrFit>>, solver::SsnGridStats)> {
+    if workers <= 1 || taus.len() <= 1 {
+        return solver::fit_tau_columns_ssn_carry(solver, taus, lambdas);
+    }
+    let chunk = (taus.len() + workers - 1) / workers;
+    let chunk_results: Vec<Result<(Vec<Vec<KqrFit>>, solver::SsnGridStats)>> =
+        std::thread::scope(|s| {
+            let handles: Vec<_> = taus
+                .chunks(chunk)
+                .map(|tau_chunk| {
+                    s.spawn(move || {
+                        par::serial_scope(|| {
+                            solver::fit_tau_columns_ssn_carry(solver, tau_chunk, lambdas)
+                        })
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|p| {
+                        Err(anyhow!("fit_grid worker panicked: {}", panic_message(&p)))
+                    })
+                })
+                .collect()
+        });
+    let mut all = Vec::with_capacity(taus.len());
+    let mut stats = solver::SsnGridStats::default();
+    for r in chunk_results {
+        let (fits, s) = r?;
+        stats.merge(&s);
+        all.extend(fits);
+    }
+    Ok((all, stats))
+}
 
 /// Run `fit_cols` over the τ axis, chunked onto scoped threads when the
 /// engine has spare workers (cross-column warm-start seeding then
@@ -454,9 +536,12 @@ pub struct GridFit {
     pub taus: Vec<f64>,
     pub lambdas: Vec<f64>,
     pub fits: Vec<Vec<KqrFit>>,
-    /// Bundle accounting when the lockstep driver produced this grid
-    /// (`None` for the sequential path).
+    /// Bundle accounting when the APGD lockstep driver produced this
+    /// grid (`None` for the sequential path and for SSN grids).
     pub lockstep: Option<LockstepStats>,
+    /// Factor-reuse accounting when the SSN backend produced this grid
+    /// (carry columns or the bundled driver); `None` for APGD.
+    pub ssn: Option<solver::SsnGridStats>,
     /// Which backend actually fitted the cells — always concrete
     /// (`Auto` resolves before fitting starts).
     pub solver: SolverBackend,
@@ -613,6 +698,7 @@ mod tests {
             )
             .unwrap();
         assert_eq!(apgd.solver, crate::solver::SolverBackend::Apgd);
+        // lockstep hint on → the bundled shared-factorization driver
         let ssn = engine
             .fit_grid_with_solver(
                 &data.x,
@@ -621,22 +707,48 @@ mod tests {
                 &taus,
                 &lambdas,
                 ApproxSpec::Exact,
-                // the SSN backend must ignore the lockstep hint
                 Some(true),
                 None,
                 crate::solver::SolverBackend::Ssn,
             )
             .unwrap();
         assert_eq!(ssn.solver, crate::solver::SolverBackend::Ssn);
-        assert!(ssn.lockstep.is_none(), "SSN has no lockstep driver");
+        assert!(ssn.lockstep.is_none(), "lockstep field is APGD accounting");
+        let bstats = ssn.ssn.expect("bundled SSN grid reports factor stats");
+        assert_eq!(bstats.cells, taus.len() * lambdas.len());
+        assert!(bstats.rank1_updates > 0, "bundle did no rank-1 factor work");
+        // hint off → the sequential factor-carry columns, same stats shape
+        let carry = engine
+            .fit_grid_with_solver(
+                &data.x,
+                &data.y,
+                &kernel,
+                &taus,
+                &lambdas,
+                ApproxSpec::Exact,
+                Some(false),
+                None,
+                crate::solver::SolverBackend::Ssn,
+            )
+            .unwrap();
+        let cstats = carry.ssn.expect("carry SSN grid reports factor stats");
+        assert_eq!(cstats.cells, taus.len() * lambdas.len());
+        assert_eq!(cstats.bundles, 0, "carry columns form no bundles");
+        assert!(apgd.ssn.is_none(), "APGD grids carry no SSN stats");
         for ti in 0..taus.len() {
             for li in 0..lambdas.len() {
-                let (a, s) = (apgd.at(ti, li), ssn.at(ti, li));
+                let (a, s, c) = (apgd.at(ti, li), ssn.at(ti, li), carry.at(ti, li));
                 assert!(s.kkt.pass, "({ti},{li}): {:?}", s.kkt);
                 assert!(
                     (a.objective - s.objective).abs() < 1e-6 * (1.0 + a.objective.abs()),
                     "({ti},{li}): apgd {} vs ssn {}",
                     a.objective,
+                    s.objective
+                );
+                assert!(
+                    (c.objective - s.objective).abs() < 1e-8 * (1.0 + c.objective.abs()),
+                    "({ti},{li}): carry {} vs bundled {}",
+                    c.objective,
                     s.objective
                 );
             }

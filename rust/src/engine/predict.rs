@@ -334,6 +334,7 @@ mod tests {
             cv: Vec::new(),
             lockstep: None,
             solver: None,
+            ssn: None,
         });
         let plan = PredictPlan::compile(&model);
         assert_eq!(plan.n_groups(), 1, "one solver => one group");
@@ -386,6 +387,7 @@ mod tests {
             cv: Vec::new(),
             lockstep: None,
             solver: None,
+            ssn: None,
         });
         let plan = PredictPlan::compile(&model);
         assert_eq!(plan.n_groups(), 1, "one shared map => one feature build");
@@ -419,6 +421,7 @@ mod tests {
             cv: Vec::new(),
             lockstep: None,
             solver: None,
+            ssn: None,
         });
         let plan = PredictPlan::compile(&model);
         assert_eq!(plan.n_groups(), 2);

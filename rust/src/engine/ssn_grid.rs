@@ -1,0 +1,714 @@
+//! The shared-factorization SSN grid driver.
+//!
+//! The sequential SSN grid path (`solver::fit_tau_columns_ssn_carry`)
+//! already reuses Newton machinery *along* the warm-start chain: the
+//! converged active set and its Cholesky factor flow down each λ column
+//! and across τ column heads. This driver additionally exploits the
+//! *width* of the warm-start wavefront, the way [`super::lockstep`]
+//! does for APGD:
+//!
+//! - **Batched BLAS-3 glue.** Every in-flight cell's n×dim products go
+//!   through grid-wide GEMMs instead of per-cell GEMVs: the Wη refresh
+//!   rows as `F = Q·Uᵀ` ([`gemm_nt_into`]), the gradient contractions as
+//!   `UᵀS = S·U` ([`gemm_nn_into`]), and the line-search direction
+//!   images as `Δ = D·Uᵀ`. U is streamed once per bundle round, not
+//!   once per cell per round.
+//! - **Shared factorizations.** Cells that need a fresh Newton factor in
+//!   the same round are pooled by exact (λ, σ); one **leader** per pool
+//!   refactorizes, members whose active set coincides with the leader's
+//!   solve their Newton systems off the leader's factor with per-cell
+//!   RHS ([`Cholesky::solve_many`]) and adopt a clone for continuation,
+//!   and members within [`ssn::swing_cap`] Hamming distance adopt a
+//!   clone reconciled by rank-1 up/downdates. Only members beyond the
+//!   cap (or hit by a downdate failure) pay their own refactorization.
+//! - **Wavefront scheduling.** Identical admission graph to the lockstep
+//!   driver and the sequential carry columns: (t, l+1) seeds from
+//!   (t, l)'s final state — multipliers, σ, *and* carried factor — and
+//!   each column head seeds the next column's head.
+//!
+//! Within each cell the pALM state machine is the one in
+//! [`ssn::fit_warm_from_stats_carried`], decision for decision: the same
+//! σ/tolerance ladders, Armijo search, tiny-step and stall exits, and
+//! the same exact KKT certificate. Factor *sharing* can perturb last
+//! bits relative to the sequential path (an adopted factor is the same
+//! matrix up to rounding), so the parity bar against the per-cell
+//! oracle is ≤ 1e-8 on objectives — pinned down in
+//! `rust/tests/solver_ssn.rs` — rather than the bitwise bar the APGD
+//! lockstep driver clears.
+
+use super::FitEngine;
+use crate::kqr::apgd::{self, ApgdWorkspace};
+use crate::kqr::kkt::{kkt_check, KktReport};
+use crate::kqr::{KqrFit, KqrSolver};
+use crate::linalg::{amax, gemm_nn_into, gemm_nt_into, par, Cholesky, Matrix};
+use crate::solver::ssn::{
+    self, assemble_gradient, jacobian_column, line_search, refactor, refresh_from_f,
+    seed_factor, swing_cap, FactorCarry, SsnState, Workspace, INNER_TOL_FLOOR, MAX_NEWTON,
+    MAX_OUTER, MAX_STALL, SIGMA_GROWTH, SIGMA_INIT, SIGMA_MAX, TAU_P,
+};
+use crate::solver::SsnGridStats;
+use anyhow::{bail, Result};
+
+/// Driver-wide context shared by every cell.
+struct Ctx<'a> {
+    solver: &'a KqrSolver,
+    n: usize,
+    dim: usize,
+    /// √λ_j of the spectral basis (the W column scales).
+    sqrt_lam: Vec<f64>,
+    /// `opts.kkt_band · max(1, ‖y‖∞)`.
+    band: f64,
+    kkt_tol: f64,
+}
+
+/// Where a cell stands inside the current bundle round.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// ws.f needs the Wη row from the next refresh GEMM.
+    Refresh,
+    /// Refreshed; needs the Uᵀs row, then a Newton direction.
+    Gradient,
+    /// Direction solved; needs the Δ row, then the Armijo search.
+    Direction,
+    /// Fit emitted; waiting to retire at the end of the round.
+    Done,
+}
+
+/// One in-flight grid cell: coordinates, pALM state, scratch, and the
+/// flattened inner/outer loop counters of `ssn::fit_impl`.
+struct Cell {
+    ti: usize,
+    li: usize,
+    tau: f64,
+    lam: f64,
+    state: SsnState,
+    ws: Workspace,
+    /// Prox center (b̄, η̄) of the current inner solve.
+    center: (f64, Vec<f64>),
+    /// Outer rounds completed.
+    outer: usize,
+    /// Inner gradient tolerance of the current outer round.
+    tol: f64,
+    /// Newton-loop bodies entered this inner solve (the MAX_NEWTON cap).
+    iters_this_inner: usize,
+    /// Step just applied, pending its post-refresh tiny-step check.
+    pending_step: Option<(f64, f64)>,
+    /// Live Newton factor and the active set it embeds.
+    chol: Option<Cholesky>,
+    prev_active: Vec<bool>,
+    /// ∇ψᵀd of the current direction (Armijo slope).
+    gd: f64,
+    /// Best outer iterate: (score, b, η, report, objective).
+    best: Option<(f64, f64, Vec<f64>, KktReport, f64)>,
+    prev_obj: f64,
+    stall: usize,
+    newton_total: usize,
+    phase: Phase,
+    finished: Option<KqrFit>,
+}
+
+impl Cell {
+    /// Mirror of `ssn::fit_impl`'s entry: σ floor, multiplier clamp into
+    /// the new τ box, prox center at the seed iterate.
+    fn admit(ctx: &Ctx<'_>, tau: f64, lam: f64, ti: usize, li: usize, mut state: SsnState) -> Cell {
+        if state.sigma <= 0.0 {
+            state.sigma = SIGMA_INIT;
+        }
+        state.retarget(tau);
+        if state.sigma <= 0.0 {
+            state.sigma = SIGMA_INIT;
+        }
+        let center = (state.b, state.eta.clone());
+        Cell {
+            ti,
+            li,
+            tau,
+            lam,
+            state,
+            ws: Workspace::new(ctx.n, ctx.dim),
+            center,
+            outer: 0,
+            tol: inner_tol(0),
+            iters_this_inner: 0,
+            pending_step: None,
+            chol: None,
+            prev_active: Vec::new(),
+            gd: 0.0,
+            best: None,
+            prev_obj: f64::INFINITY,
+            stall: 0,
+            newton_total: 0,
+            phase: Phase::Refresh,
+            finished: None,
+        }
+    }
+}
+
+/// The outer tolerance ladder of `ssn::fit_impl`.
+fn inner_tol(outer: usize) -> f64 {
+    (1e-2 * 0.1f64.powi(outer as i32)).max(INNER_TOL_FLOOR)
+}
+
+/// Fit the whole τ×λ grid with bundled SSN. Returns fits indexed
+/// `[tau][lambda]` plus grid-level factor-reuse accounting.
+pub(crate) fn fit_grid_ssn_bundled(
+    engine: &FitEngine,
+    solver: &KqrSolver,
+    taus: &[f64],
+    lambdas: &[f64],
+) -> Result<(Vec<Vec<KqrFit>>, SsnGridStats)> {
+    for &tau in taus {
+        if !(0.0 < tau && tau < 1.0) {
+            bail!("tau must be in (0,1), got {tau}");
+        }
+    }
+    for &lam in lambdas {
+        if lam <= 0.0 {
+            bail!("lambda must be positive, got {lam}");
+        }
+    }
+    let n = solver.n();
+    let ctx = Ctx {
+        solver,
+        n,
+        dim: solver.basis.dim(),
+        sqrt_lam: solver.basis.lambda.iter().map(|l| l.max(0.0).sqrt()).collect(),
+        band: solver.opts.kkt_band * amax(&solver.y).max(1.0),
+        kkt_tol: solver.opts.kkt_tol,
+    };
+    // Batched GEMMs take an explicit worker count; all per-cell glue runs
+    // inside a serial scope, exactly like the APGD lockstep driver.
+    let workers = engine.config.par.workers_for(n);
+    par::serial_scope(|| drive(&ctx, taus, lambdas, workers))
+}
+
+fn drive(
+    ctx: &Ctx<'_>,
+    taus: &[f64],
+    lambdas: &[f64],
+    workers: usize,
+) -> Result<(Vec<Vec<KqrFit>>, SsnGridStats)> {
+    let (t_count, l_count) = (taus.len(), lambdas.len());
+    let mut results: Vec<Vec<Option<KqrFit>>> =
+        (0..t_count).map(|_| (0..l_count).map(|_| None).collect()).collect();
+    let mut stats = SsnGridStats::default();
+    let mut apgd_ws = ApgdWorkspace::for_basis(&ctx.solver.basis);
+    let mut pending: Vec<(usize, usize, SsnState)> =
+        vec![(0, 0, SsnState::zeros(ctx.n, ctx.dim))];
+    let mut active: Vec<Cell> = Vec::new();
+    while !pending.is_empty() || !active.is_empty() {
+        for (ti, li, seed) in pending.drain(..) {
+            active.push(Cell::admit(ctx, taus[ti], lambdas[li], ti, li, seed));
+        }
+
+        // --- refresh: one GEMM fills every pending cell's Wη rows ---
+        let refresh_idx: Vec<usize> =
+            (0..active.len()).filter(|&i| active[i].phase == Phase::Refresh).collect();
+        if !refresh_idx.is_empty() {
+            let mut q = Matrix::zeros(refresh_idx.len(), ctx.dim);
+            for (r, &i) in refresh_idx.iter().enumerate() {
+                let row = q.row_mut(r);
+                for (qv, (sl, e)) in
+                    row.iter_mut().zip(ctx.sqrt_lam.iter().zip(&active[i].state.eta))
+                {
+                    *qv = sl * e;
+                }
+            }
+            let mut fm = Matrix::zeros(refresh_idx.len(), ctx.n);
+            gemm_nt_into(&q, &ctx.solver.basis.u, &mut fm, workers);
+            for (r, &i) in refresh_idx.iter().enumerate() {
+                let cell = &mut active[i];
+                cell.ws.f.copy_from_slice(fm.row(r));
+                refresh_from_f(
+                    ctx.solver,
+                    cell.state.b,
+                    &cell.state.w,
+                    cell.state.sigma,
+                    cell.tau,
+                    &mut cell.ws,
+                );
+                if let Some((t, step_inf)) = cell.pending_step.take() {
+                    let scale = 1.0
+                        + cell
+                            .state
+                            .eta
+                            .iter()
+                            .fold(cell.state.b.abs(), |a, e| a.max(e.abs()));
+                    if t * step_inf <= 1e-15 * scale || cell.iters_this_inner >= MAX_NEWTON {
+                        outer_bookkeeping(cell, ctx, &mut apgd_ws, &mut stats);
+                        continue;
+                    }
+                }
+                cell.phase = Phase::Gradient;
+            }
+        }
+
+        // --- gradient: one GEMM contracts every cell's Uᵀs ---
+        let grad_idx: Vec<usize> =
+            (0..active.len()).filter(|&i| active[i].phase == Phase::Gradient).collect();
+        let mut need_dir: Vec<usize> = Vec::new();
+        if !grad_idx.is_empty() {
+            let mut sm = Matrix::zeros(grad_idx.len(), ctx.n);
+            for (r, &i) in grad_idx.iter().enumerate() {
+                sm.row_mut(r).copy_from_slice(&active[i].ws.s);
+            }
+            let mut uts = Matrix::zeros(grad_idx.len(), ctx.dim);
+            gemm_nn_into(&sm, &ctx.solver.basis.u, &mut uts, workers);
+            for (r, &i) in grad_idx.iter().enumerate() {
+                let cell = &mut active[i];
+                cell.ws.uts.copy_from_slice(uts.row(r));
+                cell.iters_this_inner += 1;
+                let gmax = assemble_gradient(
+                    &ctx.sqrt_lam,
+                    cell.lam,
+                    cell.state.sigma,
+                    (cell.center.0, &cell.center.1),
+                    cell.state.b,
+                    &cell.state.eta,
+                    &mut cell.ws,
+                );
+                if gmax <= cell.tol {
+                    outer_bookkeeping(cell, ctx, &mut apgd_ws, &mut stats);
+                } else {
+                    need_dir.push(i);
+                }
+            }
+        }
+
+        // --- factor maintenance, pooling and Newton solves ---
+        resolve_directions(ctx, &mut active, &need_dir, &mut stats)?;
+
+        // --- Armijo: one GEMM builds every direction image Δ ---
+        let dir_idx: Vec<usize> =
+            (0..active.len()).filter(|&i| active[i].phase == Phase::Direction).collect();
+        if !dir_idx.is_empty() {
+            let mut dm = Matrix::zeros(dir_idx.len(), ctx.dim);
+            for (r, &i) in dir_idx.iter().enumerate() {
+                let row = dm.row_mut(r);
+                for (dv, (sl, d)) in
+                    row.iter_mut().zip(ctx.sqrt_lam.iter().zip(&active[i].ws.dir[1..]))
+                {
+                    *dv = sl * d;
+                }
+            }
+            let mut delta = Matrix::zeros(dir_idx.len(), ctx.n);
+            gemm_nt_into(&dm, &ctx.solver.basis.u, &mut delta, workers);
+            for (r, &i) in dir_idx.iter().enumerate() {
+                let cell = &mut active[i];
+                let d0 = cell.ws.dir[0];
+                for (dv, src) in cell.ws.delta.iter_mut().zip(delta.row(r)) {
+                    *dv = src + d0;
+                }
+                let step = line_search(
+                    ctx.solver,
+                    cell.lam,
+                    cell.tau,
+                    cell.state.sigma,
+                    (cell.center.0, &cell.center.1),
+                    cell.state.b,
+                    &cell.state.eta,
+                    cell.gd,
+                    &cell.ws,
+                );
+                match step {
+                    // numerically flat — inner convergence
+                    None => outer_bookkeeping(cell, ctx, &mut apgd_ws, &mut stats),
+                    Some(t) => {
+                        cell.state.b += t * cell.ws.dir[0];
+                        for j in 0..ctx.dim {
+                            cell.state.eta[j] += t * cell.ws.dir[j + 1];
+                        }
+                        cell.newton_total += 1;
+                        stats.newton_steps += 1;
+                        let step_inf =
+                            cell.ws.dir.iter().fold(0.0f64, |a, d| a.max(d.abs()));
+                        cell.pending_step = Some((t, step_inf));
+                        cell.phase = Phase::Refresh;
+                    }
+                }
+            }
+        }
+
+        // --- retire finished cells; successors inherit the full state ---
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].phase != Phase::Done {
+                i += 1;
+                continue;
+            }
+            let cell = active.swap_remove(i);
+            stats.cells += 1;
+            if cell.li + 1 < l_count {
+                pending.push((cell.ti, cell.li + 1, cell.state.clone()));
+            }
+            if cell.li == 0 && cell.ti + 1 < t_count {
+                pending.push((cell.ti + 1, 0, cell.state.clone()));
+            }
+            results[cell.ti][cell.li] = Some(cell.finished.expect("Done cell carries its fit"));
+        }
+    }
+    let fits: Vec<Vec<KqrFit>> = results
+        .into_iter()
+        .map(|col| col.into_iter().map(|f| f.expect("every grid cell fitted")).collect())
+        .collect();
+    Ok((fits, stats))
+}
+
+/// Give every cell in `need_dir` a valid Newton factor and direction.
+///
+/// Order of preference per cell: rank-1 maintenance of its own live
+/// factor (small active-set swings), seeding from its carried
+/// [`FactorCarry`], then the shared pool — cells grouped by exact
+/// (λ, σ); the pool leader refactorizes once, exact-active-set members
+/// solve off the leader's factor in one [`Cholesky::solve_many`] batch
+/// and adopt clones, near members adopt rank-1-reconciled clones.
+fn resolve_directions(
+    ctx: &Ctx<'_>,
+    active: &mut [Cell],
+    need_dir: &[usize],
+    stats: &mut SsnGridStats,
+) -> Result<()> {
+    let cap = swing_cap(ctx.dim);
+    let mut pool: Vec<usize> = Vec::new();
+    let mut dir_done = vec![false; active.len()];
+    for &i in need_dir {
+        let cell = &mut active[i];
+        let mut factored = false;
+        if let Some(f) = cell.chol.as_mut() {
+            let changed: Vec<(usize, bool)> = cell
+                .prev_active
+                .iter()
+                .zip(cell.ws.active.iter())
+                .enumerate()
+                .filter(|(_, (p, c))| p != c)
+                .map(|(idx, (_, c))| (idx, *c))
+                .collect();
+            if changed.len() <= cap {
+                let mut ok = true;
+                for &(idx, entered) in &changed {
+                    let mut x =
+                        jacobian_column(ctx.solver, &ctx.sqrt_lam, cell.state.sigma, idx);
+                    if entered {
+                        f.update(&mut x);
+                    } else if f.downdate(&mut x).is_err() {
+                        ok = false;
+                        break;
+                    }
+                    stats.rank1_updates += 1;
+                }
+                factored = ok;
+            }
+        }
+        if !factored && cell.chol.is_none() {
+            if let Some(fc) = cell.state.factor.take() {
+                let mut upd = 0usize;
+                if let Some(c) = seed_factor(
+                    ctx.solver,
+                    &ctx.sqrt_lam,
+                    cell.lam,
+                    cell.state.sigma,
+                    fc,
+                    &cell.ws.active,
+                    &mut upd,
+                ) {
+                    cell.chol = Some(c);
+                    stats.carried_seeds += 1;
+                    factored = true;
+                }
+                stats.rank1_updates += upd;
+            }
+        }
+        if !factored {
+            // a partially-downdated or oversized factor is dead weight
+            cell.chol = None;
+            pool.push(i);
+        }
+    }
+
+    // Pool cells by exact (λ, σ): their Hessians differ only in active
+    // sets, so one leader factor can serve the whole group.
+    let mut groups: Vec<(u64, u64, Vec<usize>)> = Vec::new();
+    for &i in &pool {
+        let key = (active[i].lam.to_bits(), active[i].state.sigma.to_bits());
+        match groups.iter_mut().find(|(l, s, _)| (*l, *s) == key) {
+            Some((_, _, g)) => g.push(i),
+            None => groups.push((key.0, key.1, vec![i])),
+        }
+    }
+    for (_, _, group) in &groups {
+        let leader = group[0];
+        let lchol = refactor(
+            ctx.solver,
+            &ctx.sqrt_lam,
+            active[leader].lam,
+            active[leader].state.sigma,
+            TAU_P,
+            &active[leader].ws.active,
+        )?;
+        stats.refactorizations += 1;
+        if group.len() > 1 {
+            stats.bundles += 1;
+        }
+        let lactive = active[leader].ws.active.clone();
+        let sigma = active[leader].state.sigma;
+        let mut exact: Vec<usize> = vec![leader];
+        for &m in &group[1..] {
+            let diff: Vec<usize> = lactive
+                .iter()
+                .zip(active[m].ws.active.iter())
+                .enumerate()
+                .filter(|(_, (l, c))| l != c)
+                .map(|(idx, _)| idx)
+                .collect();
+            if diff.is_empty() {
+                exact.push(m);
+                continue;
+            }
+            let mut adopted = false;
+            if diff.len() <= cap {
+                let mut c = lchol.clone();
+                let mut ok = true;
+                for &idx in &diff {
+                    let entered = active[m].ws.active[idx];
+                    let mut x = jacobian_column(ctx.solver, &ctx.sqrt_lam, sigma, idx);
+                    if entered {
+                        c.update(&mut x);
+                    } else if c.downdate(&mut x).is_err() {
+                        ok = false;
+                        break;
+                    }
+                    stats.rank1_updates += 1;
+                }
+                if ok {
+                    active[m].chol = Some(c);
+                    stats.bundle_adoptions += 1;
+                    adopted = true;
+                }
+            }
+            if !adopted {
+                active[m].chol = Some(refactor(
+                    ctx.solver,
+                    &ctx.sqrt_lam,
+                    active[m].lam,
+                    sigma,
+                    TAU_P,
+                    &active[m].ws.active,
+                )?);
+                stats.refactorizations += 1;
+            }
+        }
+        // Exact members: per-cell RHS, one factor, one batched solve.
+        if exact.len() > 1 {
+            let mut rhs = Matrix::zeros(exact.len(), ctx.dim + 1);
+            for (r, &m) in exact.iter().enumerate() {
+                for (dst, g) in rhs.row_mut(r).iter_mut().zip(&active[m].ws.grad) {
+                    *dst = -g;
+                }
+            }
+            let sols = lchol.solve_many(&rhs);
+            for (r, &m) in exact.iter().enumerate() {
+                active[m].ws.dir.copy_from_slice(sols.row(r));
+                dir_done[m] = true;
+            }
+            for &m in &exact[1..] {
+                active[m].chol = Some(lchol.clone());
+                stats.bundle_adoptions += 1;
+            }
+        }
+        active[leader].chol = Some(lchol);
+    }
+
+    // Every need_dir cell now has a factor; solve the stragglers and do
+    // the common per-direction bookkeeping.
+    for &i in need_dir {
+        let cell = &mut active[i];
+        if !dir_done[i] {
+            let neg: Vec<f64> = cell.ws.grad.iter().map(|g| -g).collect();
+            let d = cell.chol.as_ref().expect("factor present").solve(&neg);
+            cell.ws.dir.copy_from_slice(&d);
+        }
+        cell.gd = cell.ws.grad.iter().zip(&cell.ws.dir).map(|(g, d)| g * d).sum();
+        cell.prev_active.clear();
+        cell.prev_active.extend_from_slice(&cell.ws.active);
+        cell.phase = Phase::Direction;
+    }
+    Ok(())
+}
+
+/// End-of-inner-solve bookkeeping, mirroring `ssn::fit_impl`'s outer
+/// loop body after `inner_solve` returns: park the factor in the carry
+/// slot, update multipliers, certify, track the best iterate, then
+/// either emit the fit or escalate σ into the next inner solve.
+fn outer_bookkeeping(
+    cell: &mut Cell,
+    ctx: &Ctx<'_>,
+    apgd_ws: &mut ApgdWorkspace,
+    stats: &mut SsnGridStats,
+) {
+    if let Some(c) = cell.chol.take() {
+        cell.state.factor = Some(FactorCarry {
+            chol: c,
+            active: std::mem::take(&mut cell.prev_active),
+            lam: cell.lam,
+            sigma: cell.state.sigma,
+        });
+    }
+    for (wi, si) in cell.state.w.iter_mut().zip(&cell.ws.s) {
+        *wi = -cell.state.sigma * si;
+    }
+    let basis = &ctx.solver.basis;
+    let y = &ctx.solver.y;
+    let mut beta = vec![0.0; ctx.dim];
+    for j in 0..ctx.dim {
+        beta[j] = if ctx.sqrt_lam[j] > 0.0 { cell.state.eta[j] / ctx.sqrt_lam[j] } else { 0.0 };
+    }
+    let report = kkt_check(
+        basis,
+        y,
+        cell.tau,
+        cell.lam,
+        cell.state.b,
+        &beta,
+        ctx.kkt_tol,
+        ctx.band,
+    );
+    let obj = apgd::exact_objective(basis, cell.lam, y, cell.tau, cell.state.b, &beta, apgd_ws);
+    let score = report.score();
+    let improved = cell.best.as_ref().map(|(s, ..)| score < *s).unwrap_or(true);
+    if improved {
+        cell.best = Some((score, cell.state.b, cell.state.eta.clone(), report.clone(), obj));
+    }
+    let plateau = (cell.prev_obj - obj).abs() <= 1e-11 * (1.0 + obj.abs());
+    cell.prev_obj = obj;
+    let mut finish = false;
+    if report.pass {
+        if cell.tol <= INNER_TOL_FLOOR && plateau {
+            finish = true;
+        } else {
+            cell.stall = if improved { 0 } else { cell.stall + 1 };
+            if cell.stall >= MAX_STALL {
+                finish = true;
+            }
+        }
+    }
+    stats.outer_rounds += 1;
+    cell.outer += 1;
+    if !finish {
+        cell.state.sigma = (cell.state.sigma * SIGMA_GROWTH).min(SIGMA_MAX);
+        if cell.outer >= MAX_OUTER {
+            finish = true;
+        }
+    }
+    if finish {
+        cell.finished = Some(finish_cell(cell, ctx));
+        cell.phase = Phase::Done;
+    } else {
+        cell.tol = inner_tol(cell.outer);
+        cell.center = (cell.state.b, cell.state.eta.clone());
+        cell.iters_this_inner = 0;
+        cell.pending_step = None;
+        cell.phase = Phase::Refresh;
+    }
+}
+
+/// Emit the fit from the best outer iterate (the `ssn::fit_impl` return
+/// path). `cell.state` keeps the *last* iterate — including the carried
+/// factor — so λ-path and column-head successors warm-start exactly as
+/// the sequential carry columns do.
+fn finish_cell(cell: &mut Cell, ctx: &Ctx<'_>) -> KqrFit {
+    let (_, best_b, best_eta, kkt, objective) =
+        cell.best.take().expect("ssn bundle: at least one outer round ran");
+    let basis = &ctx.solver.basis;
+    let y = &ctx.solver.y;
+    let mut beta = vec![0.0; ctx.dim];
+    for j in 0..ctx.dim {
+        beta[j] = if ctx.sqrt_lam[j] > 0.0 { best_eta[j] / ctx.sqrt_lam[j] } else { 0.0 };
+    }
+    let mut fitted = vec![0.0; ctx.n];
+    basis.fitted(best_b, &beta, &mut cell.ws.scratch, &mut fitted);
+    let singular_set: Vec<usize> =
+        (0..ctx.n).filter(|&i| (y[i] - fitted[i]).abs() <= ctx.band).collect();
+    let alpha = basis.alpha_from_beta(&beta);
+    let lowrank = ctx.solver.repr.low_rank().map(|f| f.coef(&beta));
+    let rff = ctx.solver.repr.rff().map(|f| f.coef(&beta));
+    KqrFit::assemble(
+        cell.tau,
+        cell.lam,
+        best_b,
+        alpha,
+        objective,
+        kkt,
+        0.0,
+        cell.newton_total,
+        cell.outer,
+        singular_set,
+        lowrank,
+        rff,
+        ctx.solver.x.clone(),
+        ctx.solver.kernel.clone(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, Rng};
+    use crate::engine::EngineConfig;
+    use crate::kernel::{median_heuristic_sigma, Kernel};
+    use crate::linalg::par::Parallelism;
+    use crate::solver::fit_tau_columns_ssn_stats;
+
+    fn fixture(n: usize, seed: u64) -> (crate::data::Dataset, Kernel) {
+        let mut rng = Rng::new(seed);
+        let data = synth::sine_hetero(n, &mut rng);
+        let sigma = median_heuristic_sigma(&data.x);
+        (data, Kernel::Rbf { sigma })
+    }
+
+    #[test]
+    fn bundled_grid_matches_per_cell_oracle() {
+        let engine = FitEngine::with_config(EngineConfig {
+            par: Parallelism::serial(),
+            ..EngineConfig::default()
+        });
+        let (data, kernel) = fixture(30, 11);
+        let taus = [0.25, 0.5, 0.75];
+        let lambdas = [0.1, 0.05, 0.02, 0.01];
+        let solver = engine.solver(&data.x, &data.y, &kernel).unwrap();
+        let (oracle, ostats) = fit_tau_columns_ssn_stats(&solver, &taus, &lambdas).unwrap();
+        let (bundled, bstats) =
+            fit_grid_ssn_bundled(&engine, &solver, &taus, &lambdas).unwrap();
+        assert_eq!(bstats.cells, taus.len() * lambdas.len());
+        assert_eq!(bstats.cells, ostats.cells);
+        for ti in 0..taus.len() {
+            for li in 0..lambdas.len() {
+                let (o, b) = (&oracle[ti][li], &bundled[ti][li]);
+                assert!(b.kkt.pass, "({ti},{li}): {:?}", b.kkt);
+                let gap = (o.objective - b.objective).abs();
+                assert!(
+                    gap <= 1e-8 * (1.0 + o.objective.abs()),
+                    "({ti},{li}): oracle {} vs bundled {} (gap {gap:.3e})",
+                    o.objective,
+                    b.objective
+                );
+            }
+        }
+        assert!(
+            bstats.refactorizations < ostats.refactorizations,
+            "bundle refactors {} not below oracle {}",
+            bstats.refactorizations,
+            ostats.refactorizations
+        );
+        assert!(bstats.rank1_updates > 0, "bundle did no rank-1 factor work");
+        assert!(bstats.carried_seeds > 0, "bundle never seeded from a carry");
+    }
+
+    #[test]
+    fn bundled_grid_validates_axes() {
+        let engine = FitEngine::new();
+        let (data, kernel) = fixture(12, 3);
+        let solver = engine.solver(&data.x, &data.y, &kernel).unwrap();
+        assert!(fit_grid_ssn_bundled(&engine, &solver, &[0.0], &[0.1]).is_err());
+        assert!(fit_grid_ssn_bundled(&engine, &solver, &[0.5], &[-1.0]).is_err());
+    }
+}

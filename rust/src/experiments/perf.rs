@@ -214,6 +214,18 @@ pub struct GridBench {
     pub apgd_lowrank: BenchStats,
     pub ssn_lowrank: BenchStats,
     pub ssn_lowrank_obj_gap: f64,
+    /// SSN factor economy on the grid: the per-cell PR 8 oracle (every
+    /// Newton system refactored) vs the carry columns vs the bundled
+    /// wavefront, same cells, thin basis.
+    pub ssn_oracle: BenchStats,
+    pub ssn_bundle: BenchStats,
+    /// oracle wall / carry wall (the carry columns are `ssn_lowrank`).
+    pub ssn_carry_speedup: f64,
+    /// oracle wall / bundled wall.
+    pub ssn_bundle_speedup: f64,
+    pub ssn_refactors_oracle: usize,
+    pub ssn_refactors_carry: usize,
+    pub ssn_rank1_updates: usize,
     pub threads: usize,
     /// Resolved SIMD tier ("avx2" | "neon" | "scalar") and FMA flag, so
     /// snapshots from different hosts are interpretable.
@@ -255,6 +267,13 @@ impl GridBench {
                 Json::num(self.apgd_lowrank.median / self.ssn_lowrank.median.max(1e-12)),
             ),
             ("ssn_lowrank_obj_gap", Json::num(self.ssn_lowrank_obj_gap)),
+            ("ssn_oracle_wall_s", Json::num(self.ssn_oracle.median)),
+            ("ssn_bundle_wall_s", Json::num(self.ssn_bundle.median)),
+            ("ssn_carry_speedup", Json::num(self.ssn_carry_speedup)),
+            ("ssn_bundle_speedup", Json::num(self.ssn_bundle_speedup)),
+            ("ssn_refactorizations_oracle", Json::num(self.ssn_refactors_oracle as f64)),
+            ("ssn_refactorizations_carry", Json::num(self.ssn_refactors_carry as f64)),
+            ("ssn_rank1_updates", Json::num(self.ssn_rank1_updates as f64)),
         ])
     }
 }
@@ -356,6 +375,45 @@ pub fn grid_bench(n: usize, t_count: usize, l_count: usize, reps: usize) -> Resu
         &grid_with(&seq_engine, ny, SolverBackend::Ssn),
     );
 
+    // SSN factor economy on the same thin-basis grid: the per-cell PR 8
+    // oracle (refactor every Newton system) vs the carry columns
+    // (`ssn_lowrank` above) vs the bundled wavefront.
+    let ssn_solver = seq_engine.solver_approx(
+        &data.x,
+        &data.y,
+        &kernel,
+        ny,
+        crate::kqr::SolveOptions::default(),
+    )?;
+    let ssn_oracle =
+        run_bench(&format!("grid ssn  oracle(m={m}) n={n} {t_count}x{l_count}"), 1, reps, |_| {
+            crate::solver::fit_tau_columns_ssn_stats(&ssn_solver, &taus, &lambdas)
+                .expect("ssn oracle")
+                .1
+                .newton_steps
+        });
+    let ssn_bundle =
+        run_bench(&format!("grid ssn  bundle(m={m}) n={n} {t_count}x{l_count}"), 1, reps, |_| {
+            seq_engine
+                .fit_grid_with_solver(
+                    &data.x,
+                    &data.y,
+                    &kernel,
+                    &taus,
+                    &lambdas,
+                    ny,
+                    Some(true),
+                    None,
+                    SolverBackend::Ssn,
+                )
+                .expect("ssn bundle")
+                .total_iters()
+        });
+    let (_, oracle_stats) = crate::solver::fit_tau_columns_ssn_stats(&ssn_solver, &taus, &lambdas)?;
+    let (_, carry_stats) = crate::solver::fit_tau_columns_ssn_carry(&ssn_solver, &taus, &lambdas)?;
+    let ssn_carry_speedup = ssn_oracle.median / ssn_lowrank.median.max(1e-12);
+    let ssn_bundle_speedup = ssn_oracle.median / ssn_bundle.median.max(1e-12);
+
     let (gemm, gflops) = gemm_gflops(n, reps.max(2));
     let (_, gflops_scalar) = gemm_gflops_with(n, reps.max(2), simd::scalar());
 
@@ -395,6 +453,13 @@ pub fn grid_bench(n: usize, t_count: usize, l_count: usize, reps: usize) -> Resu
         apgd_lowrank,
         ssn_lowrank,
         ssn_lowrank_obj_gap,
+        ssn_oracle,
+        ssn_bundle,
+        ssn_carry_speedup,
+        ssn_bundle_speedup,
+        ssn_refactors_oracle: oracle_stats.refactorizations,
+        ssn_refactors_carry: carry_stats.refactorizations,
+        ssn_rank1_updates: carry_stats.rank1_updates,
         threads: par::global().threads,
         simd_isa: simd::global().isa.as_str(),
         simd_fma: simd::global().fma,
@@ -438,10 +503,24 @@ mod tests {
         assert!(gb.lowrank_m >= 8 && gb.lowrank_m <= gb.n);
         assert!(gb.apgd_lowrank.median > 0.0 && gb.ssn_lowrank.median > 0.0);
         assert!(gb.ssn_lowrank_obj_gap <= 1e-4, "lowrank gap {}", gb.ssn_lowrank_obj_gap);
+        // Factor-economy columns: ratios are machine-dependent, the
+        // counter contract is not — the carry must trade refactorizations
+        // for rank-1 updates against the per-cell oracle.
+        assert!(gb.ssn_oracle.median > 0.0 && gb.ssn_bundle.median > 0.0);
+        assert!(gb.ssn_carry_speedup.is_finite() && gb.ssn_bundle_speedup.is_finite());
+        assert!(
+            gb.ssn_refactors_carry < gb.ssn_refactors_oracle,
+            "carry {} vs oracle {} refactorizations",
+            gb.ssn_refactors_carry,
+            gb.ssn_refactors_oracle
+        );
+        assert!(gb.ssn_rank1_updates > 0);
         let json = gb.to_json().to_string();
         assert!(json.contains("\"speedup\""));
         assert!(json.contains("\"parity_max_abs\""));
         assert!(json.contains("\"simd_isa\""));
+        assert!(json.contains("\"ssn_carry_speedup\""));
+        assert!(json.contains("\"ssn_bundle_speedup\""));
         assert!(json.contains("\"gemm_gflops_scalar\""));
         assert!(json.contains("\"ssn_wall_s\""));
         assert!(json.contains("\"ssn_lowrank_speedup\""));

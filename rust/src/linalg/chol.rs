@@ -92,13 +92,33 @@ impl Cholesky {
         &self.l
     }
 
+    /// Solve `a X = B` for a batch of right-hand sides: the rows of
+    /// `rhs` are independent RHS vectors and the returned matrix holds
+    /// the solutions in the same row order. Each row goes through
+    /// [`Cholesky::solve`] unchanged, so a bundle of systems sharing
+    /// one factor gets bitwise the same answers as per-system solves.
+    pub fn solve_many(&self, rhs: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(rhs.rows(), rhs.cols());
+        for r in 0..rhs.rows() {
+            out.row_mut(r).copy_from_slice(&self.solve(rhs.row(r)));
+        }
+        out
+    }
+
     /// Rank-1 update in place: after the call the factor satisfies
     /// `L Lᵀ = a + x xᵀ`. LINPACK-style Givens sweep, O(n²); `x` is
-    /// consumed as scratch.
+    /// consumed as scratch. Leading zeros of `x` rotate trivially
+    /// (c = 1, s = 0) and are skipped, so a sparse axis update — e.g.
+    /// a diagonal shift applied one coordinate at a time — costs
+    /// O((n−j)²) instead of O(n²).
     pub fn update(&mut self, x: &mut [f64]) {
         let n = self.l.rows();
         assert_eq!(x.len(), n);
-        for k in 0..n {
+        let start = match x.iter().position(|v| *v != 0.0) {
+            Some(k) => k,
+            None => return,
+        };
+        for k in start..n {
             let lkk = self.l[(k, k)];
             let r = lkk.hypot(x[k]);
             let c = r / lkk;
@@ -120,7 +140,12 @@ impl Cholesky {
     pub fn downdate(&mut self, x: &mut [f64]) -> Result<(), CholError> {
         let n = self.l.rows();
         assert_eq!(x.len(), n);
-        for k in 0..n {
+        // Leading zeros are identity rotations, exactly as in `update`.
+        let start = match x.iter().position(|v| *v != 0.0) {
+            Some(k) => k,
+            None => return Ok(()),
+        };
+        for k in start..n {
             let lkk = self.l[(k, k)];
             let r2 = lkk * lkk - x[k] * x[k];
             if r2 <= 0.0 {
@@ -249,6 +274,41 @@ mod tests {
         ch.downdate(&mut x.clone()).unwrap();
         let fresh = Cholesky::new(&a).unwrap();
         assert!(ch.factor().max_abs_diff(fresh.factor()) < 1e-12);
+    }
+
+    #[test]
+    fn sparse_axis_update_matches_refactorization() {
+        let n = 9;
+        let mut a = random_spd(n, 55);
+        let mut ch = Cholesky::new(&a).unwrap();
+        // axis vectors exercise the leading-zero fast path at every start
+        for j in (0..n).rev() {
+            let mut x = vec![0.0; n];
+            x[j] = 0.5;
+            ch.update(&mut x);
+            a[(j, j)] += 0.25;
+            let fresh = Cholesky::new(&a).unwrap();
+            let diff = ch.factor().max_abs_diff(fresh.factor());
+            assert!(diff < 1e-12, "axis {j}: drift {diff:.3e}");
+        }
+        // the all-zero vector is a no-op in both directions
+        let before = ch.factor().clone();
+        ch.update(&mut vec![0.0; n]);
+        ch.downdate(&mut vec![0.0; n]).unwrap();
+        assert_eq!(ch.factor().max_abs_diff(&before), 0.0);
+    }
+
+    #[test]
+    fn solve_many_matches_per_rhs_solves() {
+        let a = random_spd(7, 77);
+        let ch = Cholesky::new(&a).unwrap();
+        let mut rng = Rng::new(8);
+        let rhs = Matrix::from_fn(3, 7, |_, _| rng.normal());
+        let batch = ch.solve_many(&rhs);
+        for r in 0..3 {
+            let single = ch.solve(rhs.row(r));
+            assert_eq!(batch.row(r), &single[..], "row {r}");
+        }
     }
 
     #[test]

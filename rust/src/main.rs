@@ -197,7 +197,14 @@ fn spec_from_args(args: &Args, task: fastkqr::api::Task) -> Result<FitSpec> {
     }
     println!("dataset        {name}  (n={}, p={})", spec.x.rows(), spec.x.cols());
     if let Some(requested) = spec.solver {
-        println!("solver         {} (requested {requested})", spec.resolved_solver());
+        let res = spec.auto_resolution();
+        println!(
+            "solver         {} (requested {requested}; cost model n={} rank={} cells={})",
+            spec.resolved_solver(),
+            res.n,
+            res.rank,
+            res.cells
+        );
     }
     match spec.approx {
         ApproxSpec::Nystrom { m, seed } => {
@@ -281,6 +288,12 @@ fn cmd_path(args: &Args) -> Result<()> {
         set.fits.len(),
         spec.backend.as_deref().unwrap_or("native")
     );
+    if let Some(st) = &set.ssn {
+        println!(
+            "ssn: cells={} refactorizations={} rank1_updates={} carried_seeds={}",
+            st.cells, st.refactorizations, st.rank1_updates, st.carried_seeds
+        );
+    }
     maybe_save(args, &model)
 }
 
@@ -320,6 +333,19 @@ fn cmd_grid(args: &Args) -> Result<()> {
         println!(
             "lockstep: bundle peak {} cells, {} chunks, {} retired",
             stats.max_active, stats.chunks, stats.retired
+        );
+    }
+    if let Some(st) = &set.ssn {
+        // key=value so the CI smoke (and operators) can grep the factor
+        // economy without parsing JSON
+        println!(
+            "ssn: cells={} refactorizations={} rank1_updates={} carried_seeds={} bundles={} bundle_adoptions={}",
+            st.cells,
+            st.refactorizations,
+            st.rank1_updates,
+            st.carried_seeds,
+            st.bundles,
+            st.bundle_adoptions
         );
     }
     maybe_save(args, &model)
@@ -368,6 +394,12 @@ fn cmd_nckqr(args: &Args) -> Result<()> {
     println!("kkt         pass={} stat={:.2e}", fit.kkt.pass, fit.kkt.max_stationarity);
     println!("crossings   {} (training points)", fit.train_crossings);
     println!("mm iters    {}   time {total:.3}s", fit.mm_iters);
+    if let Some(st) = &fit.ssn {
+        println!(
+            "ssn: newton_steps={} outer_rounds={} refactorizations={} rank1_updates={}",
+            st.newton_steps, st.outer_rounds, st.refactorizations, st.rank1_updates
+        );
+    }
     maybe_save(args, &model)
 }
 

@@ -19,6 +19,7 @@
 //!   and Σᵢ nλ₂α_{t,i} = 0 per level.
 
 pub mod plan;
+mod ssn;
 
 use crate::kernel::Kernel;
 use crate::kqr::apgd::ApgdWorkspace;
@@ -131,6 +132,10 @@ pub struct NckqrFit {
     /// the whole level set and artifacts persist (frequencies, phases,
     /// per-level w) — O(T·D), independent of n.
     pub rff: Option<NcRff>,
+    /// pALM-SSN work counters, present iff the fit was produced by the
+    /// semismooth-Newton backend ([`NckqrSolver::fit_ssn`]); the MM path
+    /// leaves it `None`.
+    pub ssn: Option<crate::solver::SsnGridStats>,
     /// Training inputs, `Arc`-shared with the solver (and with every fit
     /// from the same solver), like [`crate::kqr::KqrFit`]. Empty (0×p)
     /// for models reloaded from a compressed low-rank artifact.
@@ -241,6 +246,7 @@ impl NckqrFit {
             train_crossings,
             lowrank: None,
             rff: None,
+            ssn: None,
             x_train,
             n_train,
             kernel,
@@ -278,6 +284,7 @@ impl NckqrFit {
             train_crossings,
             lowrank: Some(lowrank),
             rff: None,
+            ssn: None,
             x_train: Arc::new(Matrix::zeros(0, p)),
             n_train,
             kernel,
@@ -315,6 +322,7 @@ impl NckqrFit {
             train_crossings,
             lowrank: None,
             rff: Some(rff),
+            ssn: None,
             x_train: Arc::new(Matrix::zeros(0, p)),
             n_train,
             kernel,
@@ -623,6 +631,7 @@ impl NckqrSolver {
             train_crossings,
             lowrank,
             rff,
+            ssn: None,
             x_train: self.x.clone(),
             n_train: self.x.rows(),
             kernel: self.kernel.clone(),

@@ -1,0 +1,863 @@
+//! Semismooth-Newton backend for the non-crossing task.
+//!
+//! Lifts the pALM construction of [`crate::solver::ssn`] to problem (12):
+//! every level keeps its own Moreau-envelope check loss (split residual
+//! u_t, multiplier w_t, shared penalty σ), the λ₂ ridge acts per level,
+//! and the η_exact-smoothed crossing penalty λ₁ Σ V(f_t − f_{t+1}) stays
+//! on the fitted values directly — it is C¹, so it contributes its exact
+//! gradient and its a.e. second derivative joins the generalized
+//! Jacobian as **crossing rows**: for every adjacent pair (t, i) with
+//! |f_t(xᵢ) − f_{t+1}(xᵢ)| ≤ η_exact, the rank-1 term
+//! μ·E E^T with E = [1; Wᵢ] at block t minus [1; Wᵢ] at block t+1 and
+//! μ = λ₁/(2η_exact) (V″ inside the band).
+//!
+//! The Newton system couples all T levels through those rows: one
+//! T(dim+1) Cholesky factor per refresh, maintained across Newton steps
+//! by rank-1 up/downdates over the symmetric difference of the envelope
+//! active sets **and** the crossing band, and carried across outer
+//! rounds by a σ-shift over the factor's own active sets (the crossing
+//! rows are σ-independent and carry for free). Certification and the
+//! reported objective go through the same exact-problem
+//! [`NckqrSolver::kkt_check`] / [`NckqrSolver::exact_objective`] as the
+//! MM path, so `--solver ssn` fits are certified against the identical
+//! criterion.
+
+use super::{count_crossings_in, LevelCoef, LevelState, NcLowRank, NcRff, NckqrFit, NckqrSolver, ETA_EXACT};
+use crate::kqr::apgd::ApgdWorkspace;
+use crate::kqr::kkt::KktReport;
+use crate::linalg::{amax, gemv, gemv_t, Cholesky, Matrix};
+use crate::smooth::{rho_tau, smooth_relu, smooth_relu_prime};
+use crate::solver::ssn::{
+    prox_rho, swing_cap, INNER_TOL_FLOOR, MAX_NEWTON, MAX_OUTER, MAX_STALL, SIGMA_GROWTH,
+    SIGMA_INIT, SIGMA_MAX, TAU_P,
+};
+use crate::solver::SsnGridStats;
+use anyhow::{bail, Result};
+
+/// Generalized-Jacobian weight of one banded crossing row (V″ = 1/(2η)
+/// inside |δ| ≤ η).
+#[inline]
+fn crossing_weight(lam1: f64) -> f64 {
+    lam1 / (2.0 * ETA_EXACT)
+}
+
+/// Scratch buffers for the lifted solve; all per-level slots are indexed
+/// by level (T × n) and the stacked slots by the block layout
+/// z = (b_0, η_0, …, b_{T−1}, η_{T−1}) of length m = T(dim+1).
+struct NcWs {
+    /// fitted values per level
+    f: Vec<Vec<f64>>,
+    /// shifted residuals v_t = y − f_t − w_t/σ
+    v: Vec<Vec<f64>>,
+    /// envelope gradients s_t = v_t − prox(v_t)
+    s: Vec<Vec<f64>>,
+    /// envelope active sets (prox(v) == 0) per level
+    active: Vec<Vec<bool>>,
+    /// crossing-band membership per adjacent pair ((T−1) × n)
+    band: Vec<Vec<bool>>,
+    /// V′(f_t − f_{t+1}) per adjacent pair
+    q: Vec<Vec<f64>>,
+    /// stacked gradient / Newton direction (length m)
+    grad: Vec<f64>,
+    dir: Vec<f64>,
+    /// per-level direction images Δ_t = d_{b_t} + W d_{η_t}
+    delta: Vec<Vec<f64>>,
+    /// n-scratch for the crossing gradient rows q_t − q_{t−1}
+    r: Vec<f64>,
+    /// dim-scratches (Uᵀs and spectral products)
+    uts: Vec<f64>,
+    scratch: Vec<f64>,
+}
+
+impl NcWs {
+    fn new(t_lv: usize, n: usize, dim: usize) -> NcWs {
+        let m = t_lv * (dim + 1);
+        NcWs {
+            f: vec![vec![0.0; n]; t_lv],
+            v: vec![vec![0.0; n]; t_lv],
+            s: vec![vec![0.0; n]; t_lv],
+            active: vec![vec![false; n]; t_lv],
+            band: vec![vec![false; n]; t_lv.saturating_sub(1)],
+            q: vec![vec![0.0; n]; t_lv.saturating_sub(1)],
+            grad: vec![0.0; m],
+            dir: vec![0.0; m],
+            delta: vec![vec![0.0; n]; t_lv],
+            r: vec![0.0; n],
+            uts: vec![0.0; dim],
+            scratch: vec![0.0; dim],
+        }
+    }
+}
+
+/// A kept T(dim+1) factor with the sets it embeds (the lifted analogue
+/// of [`crate::solver::ssn::FactorCarry`]).
+struct NcFactor {
+    chol: Cholesky,
+    active: Vec<Vec<bool>>,
+    band: Vec<Vec<bool>>,
+    sigma: f64,
+}
+
+#[derive(Default)]
+struct InnerNc {
+    steps: usize,
+    refactors: usize,
+    updates: usize,
+    seeded: bool,
+}
+
+/// Refresh f, v, s, the envelope active sets, and the crossing-band
+/// state for the current iterate.
+#[allow(clippy::too_many_arguments)]
+fn refresh(
+    solver: &NckqrSolver,
+    sqrt_lam: &[f64],
+    lam1: f64,
+    b: &[f64],
+    eta: &[Vec<f64>],
+    w: &[Vec<f64>],
+    sigma: f64,
+    ws: &mut NcWs,
+) {
+    let n = solver.n();
+    let t_lv = solver.t_levels();
+    let c = 1.0 / (n as f64 * sigma);
+    {
+        let (scratch, f) = (&mut ws.scratch, &mut ws.f);
+        for lv in 0..t_lv {
+            for (sc, (sl, e)) in scratch.iter_mut().zip(sqrt_lam.iter().zip(&eta[lv])) {
+                *sc = sl * e;
+            }
+            gemv(&solver.basis.u, scratch, &mut f[lv]);
+        }
+    }
+    for lv in 0..t_lv {
+        let (lo, hi) = (c * (1.0 - solver.taus[lv]), c * solver.taus[lv]);
+        for i in 0..n {
+            let fi = b[lv] + ws.f[lv][i];
+            ws.f[lv][i] = fi;
+            let vi = solver.y[i] - fi - w[lv][i] / sigma;
+            ws.v[lv][i] = vi;
+            let p = prox_rho(vi, lo, hi);
+            ws.s[lv][i] = vi - p;
+            ws.active[lv][i] = p == 0.0;
+        }
+    }
+    for lv in 0..t_lv.saturating_sub(1) {
+        for i in 0..n {
+            let d = ws.f[lv][i] - ws.f[lv + 1][i];
+            ws.q[lv][i] = if lam1 > 0.0 { smooth_relu_prime(d, ETA_EXACT) } else { 0.0 };
+            ws.band[lv][i] = lam1 > 0.0 && d.abs() <= ETA_EXACT;
+        }
+    }
+}
+
+/// Assemble ∇ψ into `ws.grad`, returning ‖∇ψ‖_∞.
+#[allow(clippy::too_many_arguments)]
+fn gradient(
+    solver: &NckqrSolver,
+    sqrt_lam: &[f64],
+    lam1: f64,
+    lam2: f64,
+    sigma: f64,
+    center: (&[f64], &[Vec<f64>]),
+    b: &[f64],
+    eta: &[Vec<f64>],
+    ws: &mut NcWs,
+) -> f64 {
+    let n = solver.n();
+    let t_lv = solver.t_levels();
+    let dim = sqrt_lam.len();
+    let crossing = lam1 > 0.0 && t_lv > 1;
+    let mut gmax = 0.0f64;
+    for lv in 0..t_lv {
+        let o = lv * (dim + 1);
+        let sum_s: f64 = ws.s[lv].iter().sum();
+        gemv_t(&solver.basis.u, &ws.s[lv], &mut ws.uts);
+        let mut sum_r = 0.0;
+        if crossing {
+            for i in 0..n {
+                let fwd = if lv + 1 < t_lv { ws.q[lv][i] } else { 0.0 };
+                let bwd = if lv > 0 { ws.q[lv - 1][i] } else { 0.0 };
+                ws.r[i] = fwd - bwd;
+                sum_r += ws.r[i];
+            }
+            gemv_t(&solver.basis.u, &ws.r, &mut ws.scratch);
+        }
+        ws.grad[o] = -sigma * sum_s + lam1 * sum_r + TAU_P * (b[lv] - center.0[lv]);
+        gmax = gmax.max(ws.grad[o].abs());
+        for j in 0..dim {
+            let mut g = lam2 * eta[lv][j] - sigma * sqrt_lam[j] * ws.uts[j]
+                + TAU_P * (eta[lv][j] - center.1[lv][j]);
+            if crossing {
+                g += lam1 * sqrt_lam[j] * ws.scratch[j];
+            }
+            ws.grad[o + 1 + j] = g;
+            gmax = gmax.max(g.abs());
+        }
+    }
+    gmax
+}
+
+/// ψ at the trial point z + t·dir, via the per-level direction images
+/// (v_t,trial = v_t − tΔ_t, δ_trial = δ + t(Δ_t − Δ_{t+1})).
+#[allow(clippy::too_many_arguments)]
+fn trial_objective(
+    solver: &NckqrSolver,
+    lam1: f64,
+    lam2: f64,
+    sigma: f64,
+    center: (&[f64], &[Vec<f64>]),
+    b: &[f64],
+    eta: &[Vec<f64>],
+    t: f64,
+    ws: &NcWs,
+) -> f64 {
+    let n = solver.n();
+    let nf = n as f64;
+    let t_lv = solver.t_levels();
+    let dim = eta[0].len();
+    let c = 1.0 / (nf * sigma);
+    let mut total = 0.0;
+    for lv in 0..t_lv {
+        let tau = solver.taus[lv];
+        let (lo, hi) = (c * (1.0 - tau), c * tau);
+        for i in 0..n {
+            let v = ws.v[lv][i] - t * ws.delta[lv][i];
+            let u = prox_rho(v, lo, hi);
+            total += rho_tau(u, tau) / nf + 0.5 * sigma * (u - v) * (u - v);
+        }
+        let o = lv * (dim + 1);
+        let bt = b[lv] + t * ws.dir[o];
+        let db = bt - center.0[lv];
+        total += 0.5 * TAU_P * db * db;
+        for j in 0..dim {
+            let ej = eta[lv][j] + t * ws.dir[o + 1 + j];
+            let dj = ej - center.1[lv][j];
+            total += 0.5 * lam2 * ej * ej + 0.5 * TAU_P * dj * dj;
+        }
+    }
+    if lam1 > 0.0 {
+        for lv in 0..t_lv.saturating_sub(1) {
+            for i in 0..n {
+                let d = (ws.f[lv][i] + t * ws.delta[lv][i])
+                    - (ws.f[lv + 1][i] + t * ws.delta[lv + 1][i]);
+                total += lam1 * smooth_relu(d, ETA_EXACT);
+            }
+        }
+    }
+    total
+}
+
+/// Stacked rank-1 vector of one envelope row: √w·[1; Wᵢ] at block `lv`,
+/// zeros elsewhere (the leading zeros make the up/downdate start at the
+/// block offset — see [`Cholesky::update`]).
+fn env_vec(solver: &NckqrSolver, sqrt_lam: &[f64], weight: f64, lv: usize, i: usize) -> Vec<f64> {
+    let dim = sqrt_lam.len();
+    let m = solver.t_levels() * (dim + 1);
+    let o = lv * (dim + 1);
+    let sw = weight.sqrt();
+    let row = solver.basis.u.row(i);
+    let mut x = vec![0.0; m];
+    x[o] = sw;
+    for a in 0..dim {
+        x[o + 1 + a] = sw * sqrt_lam[a] * row[a];
+    }
+    x
+}
+
+/// Stacked rank-1 vector of one crossing row: √μ·[1; Wᵢ] at block `lv`
+/// and −√μ·[1; Wᵢ] at block `lv+1`.
+fn band_vec(solver: &NckqrSolver, sqrt_lam: &[f64], mu: f64, lv: usize, i: usize) -> Vec<f64> {
+    let dim = sqrt_lam.len();
+    let m = solver.t_levels() * (dim + 1);
+    let o1 = lv * (dim + 1);
+    let o2 = o1 + dim + 1;
+    let sm = mu.sqrt();
+    let row = solver.basis.u.row(i);
+    let mut x = vec![0.0; m];
+    x[o1] = sm;
+    x[o2] = -sm;
+    for a in 0..dim {
+        let ja = sm * sqrt_lam[a] * row[a];
+        x[o1 + 1 + a] = ja;
+        x[o2 + 1 + a] = -ja;
+    }
+    x
+}
+
+/// Build the T(dim+1) generalized-Hessian factor from scratch:
+/// block-diagonal diag(τ_p, (λ₂+τ_p)I) per level, plus σ·jjᵀ per active
+/// envelope row, plus μ·EEᵀ per banded crossing row (which couples
+/// adjacent blocks).
+fn refactor(
+    solver: &NckqrSolver,
+    sqrt_lam: &[f64],
+    lam1: f64,
+    lam2: f64,
+    sigma: f64,
+    active: &[Vec<bool>],
+    band: &[Vec<bool>],
+) -> Result<Cholesky> {
+    let n = solver.n();
+    let t_lv = solver.t_levels();
+    let dim = sqrt_lam.len();
+    let m = t_lv * (dim + 1);
+    let mut h = Matrix::zeros(m, m);
+    for lv in 0..t_lv {
+        let o = lv * (dim + 1);
+        h[(o, o)] = TAU_P;
+        for j in 0..dim {
+            h[(o + 1 + j, o + 1 + j)] = lam2 + TAU_P;
+        }
+    }
+    for lv in 0..t_lv {
+        let o = lv * (dim + 1);
+        for i in 0..n {
+            if !active[lv][i] {
+                continue;
+            }
+            let row = solver.basis.u.row(i);
+            h[(o, o)] += sigma;
+            for a in 0..dim {
+                let ja = sqrt_lam[a] * row[a];
+                h[(o + 1 + a, o)] += sigma * ja;
+                for bc in 0..=a {
+                    h[(o + 1 + a, o + 1 + bc)] += sigma * ja * (sqrt_lam[bc] * row[bc]);
+                }
+            }
+        }
+    }
+    let mu = crossing_weight(lam1);
+    if mu > 0.0 {
+        for lv in 0..t_lv.saturating_sub(1) {
+            let o1 = lv * (dim + 1);
+            let o2 = o1 + dim + 1;
+            for i in 0..n {
+                if !band[lv][i] {
+                    continue;
+                }
+                let row = solver.basis.u.row(i);
+                h[(o1, o1)] += mu;
+                h[(o2, o2)] += mu;
+                h[(o2, o1)] -= mu;
+                for a in 0..dim {
+                    let ja = sqrt_lam[a] * row[a];
+                    h[(o1 + 1 + a, o1)] += mu * ja;
+                    h[(o2 + 1 + a, o2)] += mu * ja;
+                    h[(o2 + 1 + a, o1)] -= mu * ja;
+                    h[(o2, o1 + 1 + a)] -= mu * ja;
+                    for bc in 0..=a {
+                        let jb = sqrt_lam[bc] * row[bc];
+                        h[(o1 + 1 + a, o1 + 1 + bc)] += mu * ja * jb;
+                        h[(o2 + 1 + a, o2 + 1 + bc)] += mu * ja * jb;
+                    }
+                    for bc in 0..dim {
+                        h[(o2 + 1 + a, o1 + 1 + bc)] -= mu * ja * (sqrt_lam[bc] * row[bc]);
+                    }
+                }
+            }
+        }
+    }
+    Ok(Cholesky::new(&h)?)
+}
+
+/// Try to seed a factor for the current sets from a carried one: σ-shift
+/// over the carried envelope rows (the crossing rows are σ-independent),
+/// then reconcile both symmetric differences by rank-1 up/downdates.
+/// `None` when the work would not beat a refactorization or a downdate
+/// loses definiteness; completed ops are counted into `updates` either
+/// way.
+#[allow(clippy::too_many_arguments)]
+fn seed_factor(
+    solver: &NckqrSolver,
+    sqrt_lam: &[f64],
+    mu: f64,
+    sigma: f64,
+    fc: NcFactor,
+    active: &[Vec<bool>],
+    band: &[Vec<bool>],
+    updates: &mut usize,
+) -> Option<Cholesky> {
+    let dim = sqrt_lam.len();
+    let m = solver.t_levels() * (dim + 1);
+    if fc.active.len() != active.len() || fc.band.len() != band.len() {
+        return None;
+    }
+    let carried: usize = fc.active.iter().map(|a| a.iter().filter(|x| **x).count()).sum();
+    let env_diff: usize = fc
+        .active
+        .iter()
+        .zip(active)
+        .map(|(p, c)| p.iter().zip(c).filter(|(a, b)| a != b).count())
+        .sum();
+    let band_diff: usize = fc
+        .band
+        .iter()
+        .zip(band)
+        .map(|(p, c)| p.iter().zip(c).filter(|(a, b)| a != b).count())
+        .sum();
+    let sshift = fc.sigma != sigma;
+    let ops = env_diff + band_diff + if sshift { carried } else { 0 };
+    if ops > m / 3 {
+        return None;
+    }
+    let mut chol = fc.chol;
+    if sshift {
+        let ds = sigma - fc.sigma;
+        for (lv, rowset) in fc.active.iter().enumerate() {
+            for i in 0..rowset.len() {
+                if !rowset[i] {
+                    continue;
+                }
+                let mut x = env_vec(solver, sqrt_lam, ds.abs(), lv, i);
+                if ds > 0.0 {
+                    chol.update(&mut x);
+                } else if chol.downdate(&mut x).is_err() {
+                    return None;
+                }
+                *updates += 1;
+            }
+        }
+    }
+    for (lv, (prev, cur)) in fc.active.iter().zip(active).enumerate() {
+        for i in 0..prev.len() {
+            if prev[i] == cur[i] {
+                continue;
+            }
+            let mut x = env_vec(solver, sqrt_lam, sigma, lv, i);
+            if cur[i] {
+                chol.update(&mut x);
+            } else if chol.downdate(&mut x).is_err() {
+                return None;
+            }
+            *updates += 1;
+        }
+    }
+    if mu > 0.0 {
+        for (lv, (prev, cur)) in fc.band.iter().zip(band).enumerate() {
+            for i in 0..prev.len() {
+                if prev[i] == cur[i] {
+                    continue;
+                }
+                let mut x = band_vec(solver, sqrt_lam, mu, lv, i);
+                if cur[i] {
+                    chol.update(&mut x);
+                } else if chol.downdate(&mut x).is_err() {
+                    return None;
+                }
+                *updates += 1;
+            }
+        }
+    }
+    Some(chol)
+}
+
+/// Minimize the lifted ψ over z = (b_t, η_t) to gradient tolerance `tol`
+/// by semismooth Newton; the factor carries across Newton steps (rank-1
+/// maintenance over envelope + band swings) and across outer rounds via
+/// the `carry` slot (σ-shift seeding).
+#[allow(clippy::too_many_arguments)]
+fn inner_solve(
+    solver: &NckqrSolver,
+    sqrt_lam: &[f64],
+    lam1: f64,
+    lam2: f64,
+    sigma: f64,
+    tol: f64,
+    b: &mut [f64],
+    eta: &mut [Vec<f64>],
+    w: &[Vec<f64>],
+    carry: &mut Option<NcFactor>,
+    ws: &mut NcWs,
+) -> Result<InnerNc> {
+    let t_lv = solver.t_levels();
+    let dim = sqrt_lam.len();
+    let m = t_lv * (dim + 1);
+    let cap = swing_cap(m);
+    let mu = crossing_weight(lam1);
+    let center_b = b.to_vec();
+    let center_eta = eta.to_vec();
+    let mut chol: Option<Cholesky> = None;
+    let mut prev_active: Vec<Vec<bool>> = Vec::new();
+    let mut prev_band: Vec<Vec<bool>> = Vec::new();
+    let mut res = InnerNc::default();
+
+    refresh(solver, sqrt_lam, lam1, b, eta, w, sigma, ws);
+    for _ in 0..MAX_NEWTON {
+        let gmax = gradient(
+            solver,
+            sqrt_lam,
+            lam1,
+            lam2,
+            sigma,
+            (&center_b, &center_eta),
+            b,
+            eta,
+            ws,
+        );
+        if gmax <= tol {
+            break;
+        }
+
+        let mut factored = false;
+        if chol.is_none() {
+            if let Some(fc) = carry.take() {
+                if let Some(c) =
+                    seed_factor(solver, sqrt_lam, mu, sigma, fc, &ws.active, &ws.band, &mut res.updates)
+                {
+                    prev_active = ws.active.clone();
+                    prev_band = ws.band.clone();
+                    chol = Some(c);
+                    res.seeded = true;
+                    factored = true;
+                }
+            }
+        }
+        if !factored {
+            if let Some(f) = chol.as_mut() {
+                let changed_env: Vec<(usize, usize, bool)> = prev_active
+                    .iter()
+                    .zip(ws.active.iter())
+                    .enumerate()
+                    .flat_map(|(lv, (p, c))| {
+                        p.iter()
+                            .zip(c.iter())
+                            .enumerate()
+                            .filter(|(_, (a, b))| a != b)
+                            .map(move |(i, (_, b))| (lv, i, *b))
+                            .collect::<Vec<_>>()
+                    })
+                    .collect();
+                let changed_band: Vec<(usize, usize, bool)> = prev_band
+                    .iter()
+                    .zip(ws.band.iter())
+                    .enumerate()
+                    .flat_map(|(lv, (p, c))| {
+                        p.iter()
+                            .zip(c.iter())
+                            .enumerate()
+                            .filter(|(_, (a, b))| a != b)
+                            .map(move |(i, (_, b))| (lv, i, *b))
+                            .collect::<Vec<_>>()
+                    })
+                    .collect();
+                if changed_env.len() + changed_band.len() <= cap {
+                    let mut ok = true;
+                    for &(lv, i, entered) in &changed_env {
+                        let mut x = env_vec(solver, sqrt_lam, sigma, lv, i);
+                        if entered {
+                            f.update(&mut x);
+                        } else if f.downdate(&mut x).is_err() {
+                            ok = false;
+                            break;
+                        }
+                        res.updates += 1;
+                    }
+                    if ok {
+                        for &(lv, i, entered) in &changed_band {
+                            let mut x = band_vec(solver, sqrt_lam, mu, lv, i);
+                            if entered {
+                                f.update(&mut x);
+                            } else if f.downdate(&mut x).is_err() {
+                                ok = false;
+                                break;
+                            }
+                            res.updates += 1;
+                        }
+                    }
+                    factored = ok;
+                }
+            }
+        }
+        if !factored {
+            chol = Some(refactor(solver, sqrt_lam, lam1, lam2, sigma, &ws.active, &ws.band)?);
+            res.refactors += 1;
+        }
+        prev_active = ws.active.clone();
+        prev_band = ws.band.clone();
+
+        // Newton direction H d = −g, then per-level direction images
+        let neg: Vec<f64> = ws.grad.iter().map(|g| -g).collect();
+        let d = chol.as_ref().expect("factor present").solve(&neg);
+        ws.dir.copy_from_slice(&d);
+        let gd: f64 = ws.grad.iter().zip(&ws.dir).map(|(g, di)| g * di).sum();
+        {
+            let NcWs { dir, delta, scratch, .. } = &mut *ws;
+            for lv in 0..t_lv {
+                let o = lv * (dim + 1);
+                for (sc, (sl, dj)) in
+                    scratch.iter_mut().zip(sqrt_lam.iter().zip(&dir[o + 1..o + 1 + dim]))
+                {
+                    *sc = sl * dj;
+                }
+                gemv(&solver.basis.u, scratch, &mut delta[lv]);
+                for di in delta[lv].iter_mut() {
+                    *di += dir[o];
+                }
+            }
+        }
+
+        // Armijo backtracking on ψ
+        let f0 =
+            trial_objective(solver, lam1, lam2, sigma, (&center_b, &center_eta), b, eta, 0.0, ws);
+        let mut t = 1.0f64;
+        let step = loop {
+            if t <= 1e-12 {
+                break None;
+            }
+            let ft = trial_objective(
+                solver,
+                lam1,
+                lam2,
+                sigma,
+                (&center_b, &center_eta),
+                b,
+                eta,
+                t,
+                ws,
+            );
+            if ft <= f0 + 1e-4 * t * gd {
+                break Some(t);
+            }
+            t *= 0.5;
+        };
+        let t = match step {
+            Some(t) => t,
+            // numerically flat — treat as converged
+            None => break,
+        };
+        for lv in 0..t_lv {
+            let o = lv * (dim + 1);
+            b[lv] += t * ws.dir[o];
+            for j in 0..dim {
+                eta[lv][j] += t * ws.dir[o + 1 + j];
+            }
+        }
+        res.steps += 1;
+        refresh(solver, sqrt_lam, lam1, b, eta, w, sigma, ws);
+        let step_inf = amax(&ws.dir);
+        let it_inf = eta.iter().flatten().fold(
+            b.iter().fold(0.0f64, |a, v| a.max(v.abs())),
+            |a, v| a.max(v.abs()),
+        );
+        if t * step_inf <= 1e-15 * (1.0 + it_inf) {
+            break;
+        }
+    }
+    if let Some(c) = chol {
+        *carry = Some(NcFactor { chol: c, active: prev_active, band: prev_band, sigma });
+    }
+    Ok(res)
+}
+
+impl NckqrSolver {
+    /// Fit at a single (λ₁, λ₂) with the pALM semismooth-Newton backend.
+    ///
+    /// Solves the identical exact problem (12) as [`NckqrSolver::fit`]
+    /// and certifies against the same exact KKT report; `mm_iters` on
+    /// the returned fit counts Newton steps and [`NckqrFit::ssn`]
+    /// carries the factor-reuse counters.
+    pub fn fit_ssn(&self, lam1: f64, lam2: f64) -> Result<NckqrFit> {
+        if lam1 < 0.0 {
+            bail!("lambda1 must be >= 0, got {lam1}");
+        }
+        if lam2 <= 0.0 {
+            bail!("lambda2 must be positive, got {lam2}");
+        }
+        let n = self.n();
+        let t_lv = self.t_levels();
+        let dim = self.basis.dim();
+        let sqrt_lam: Vec<f64> = self.basis.lambda.iter().map(|l| l.max(0.0).sqrt()).collect();
+        let band = self.opts.kkt_band * amax(&self.y).max(1.0);
+        let mut apgd_ws = ApgdWorkspace::for_basis(&self.basis);
+        let mut ws = NcWs::new(t_lv, n, dim);
+
+        let mut b = vec![0.0; t_lv];
+        let mut eta = vec![vec![0.0; dim]; t_lv];
+        let mut w = vec![vec![0.0; n]; t_lv];
+        let mut sigma = SIGMA_INIT;
+        let mut factor: Option<NcFactor> = None;
+        let mut stats = SsnGridStats { cells: 1, ..Default::default() };
+        let mut best: Option<(f64, Vec<f64>, Vec<Vec<f64>>, KktReport, f64)> = None;
+        let mut prev_obj = f64::INFINITY;
+        let mut stall = 0usize;
+
+        for outer in 0..MAX_OUTER {
+            let tol = (1e-2 * 0.1f64.powi(outer as i32)).max(INNER_TOL_FLOOR);
+            let inner = inner_solve(
+                self,
+                &sqrt_lam,
+                lam1,
+                lam2,
+                sigma,
+                tol,
+                &mut b,
+                &mut eta,
+                &w,
+                &mut factor,
+                &mut ws,
+            )?;
+            stats.newton_steps += inner.steps;
+            stats.refactorizations += inner.refactors;
+            stats.rank1_updates += inner.updates;
+            if inner.seeded {
+                stats.carried_seeds += 1;
+            }
+            stats.outer_rounds = outer + 1;
+
+            // multiplier update at the final inner point: w⁺ = σ(prox(v) − v)
+            for (wl, sl) in w.iter_mut().zip(&ws.s) {
+                for (wi, si) in wl.iter_mut().zip(sl) {
+                    *wi = -sigma * si;
+                }
+            }
+
+            // certify with the exact non-smooth criterion of problem (12)
+            let states = states_from(&sqrt_lam, &b, &eta);
+            let rep = self.kkt_check(lam1, lam2, &states, band);
+            let fs = self.fitted_levels(&states, &mut apgd_ws);
+            let obj = self.exact_objective(lam1, lam2, &states, &fs);
+            let score = rep.max_stationarity.max(rep.intercept);
+            let improved = best.as_ref().map(|(s, ..)| score < *s).unwrap_or(true);
+            if improved {
+                best = Some((score, b.clone(), eta.clone(), rep.clone(), obj));
+            }
+            let plateau = (prev_obj - obj).abs() <= 1e-11 * (1.0 + obj.abs());
+            prev_obj = obj;
+            if rep.pass {
+                if tol <= INNER_TOL_FLOOR && plateau {
+                    break;
+                }
+                stall = if improved { 0 } else { stall + 1 };
+                if stall >= MAX_STALL {
+                    break;
+                }
+            }
+            sigma = (sigma * SIGMA_GROWTH).min(SIGMA_MAX);
+        }
+
+        let (_, best_b, best_eta, kkt, objective) =
+            best.expect("nc-ssn: at least one outer round ran");
+        let best_states = states_from(&sqrt_lam, &best_b, &best_eta);
+        let levels: Vec<LevelCoef> = (0..t_lv)
+            .map(|t| LevelCoef {
+                tau: self.taus[t],
+                b: best_states[t].b,
+                alpha: self.basis.alpha_from_beta(&best_states[t].beta),
+            })
+            .collect();
+        let fs = self.fitted_levels(&best_states, &mut apgd_ws);
+        let train_crossings = count_crossings_in(&fs, 1e-9);
+        let lowrank = self.repr.low_rank().map(|f| NcLowRank {
+            z: f.z.clone(),
+            landmarks: f.landmarks.clone(),
+            w: (0..t_lv).map(|t| f.coef(&best_states[t].beta).w).collect(),
+        });
+        let rff = self.repr.rff().map(|f| NcRff {
+            map: f.map.clone(),
+            w: (0..t_lv).map(|t| f.coef(&best_states[t].beta).w).collect(),
+        });
+        Ok(NckqrFit {
+            taus: self.taus.clone(),
+            lam1,
+            lam2,
+            levels,
+            objective,
+            kkt,
+            mm_iters: stats.newton_steps,
+            gamma_final: 0.0,
+            train_crossings,
+            lowrank,
+            rff,
+            ssn: Some(stats),
+            x_train: self.x.clone(),
+            n_train: self.x.rows(),
+            kernel: self.kernel.clone(),
+        })
+    }
+}
+
+/// Convert the stacked (b, η) iterate into per-level [`LevelState`]s
+/// (β = η/√λ on the non-degenerate spectrum) for the parent's exact
+/// certificate and objective.
+fn states_from(sqrt_lam: &[f64], b: &[f64], eta: &[Vec<f64>]) -> Vec<LevelState> {
+    b.iter()
+        .zip(eta)
+        .map(|(bt, et)| {
+            let beta: Vec<f64> = sqrt_lam
+                .iter()
+                .zip(et)
+                .map(|(sl, e)| if *sl > 0.0 { e / sl } else { 0.0 })
+                .collect();
+            LevelState { b: *bt, beta: beta.clone(), b_prev: *bt, beta_prev: beta }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::data::{synth, Rng};
+    use crate::kernel::{median_heuristic_sigma, Kernel};
+    use crate::kqr::KqrSolver;
+    use crate::linalg::Matrix;
+    use crate::nckqr::NckqrSolver;
+
+    fn fixture(n: usize, seed: u64) -> (Matrix, Vec<f64>, Kernel) {
+        let mut rng = Rng::new(seed);
+        let d = synth::sine_hetero(n, &mut rng);
+        let sigma = median_heuristic_sigma(&d.x);
+        (d.x, d.y, Kernel::Rbf { sigma })
+    }
+
+    #[test]
+    fn ssn_matches_mm_on_multilevel_fit() {
+        let (x, y, kernel) = fixture(40, 1);
+        let nc = NckqrSolver::new(&x, &y, kernel, &[0.25, 0.5, 0.75]).unwrap();
+        let mm = nc.fit(1.0, 0.05).unwrap();
+        let ssn = nc.fit_ssn(1.0, 0.05).unwrap();
+        assert!(ssn.kkt.pass, "{:?}", ssn.kkt);
+        assert!(
+            (ssn.objective - mm.objective).abs() < 2e-3 * (1.0 + mm.objective),
+            "ssn={} mm={}",
+            ssn.objective,
+            mm.objective
+        );
+        let stats = ssn.ssn.expect("ssn counters attached");
+        assert!(stats.newton_steps > 0 && stats.outer_rounds > 0);
+        assert!(stats.refactorizations >= 1, "at least one full factorization");
+        assert!(mm.ssn.is_none(), "the MM path must not claim ssn counters");
+    }
+
+    #[test]
+    fn ssn_lam1_zero_matches_independent_fits() {
+        let (x, y, kernel) = fixture(40, 2);
+        let taus = [0.25, 0.75];
+        let nc = NckqrSolver::new(&x, &y, kernel.clone(), &taus).unwrap();
+        let fit = nc.fit_ssn(0.0, 0.05).unwrap();
+        let kqr = KqrSolver::new(&x, &y, kernel).unwrap();
+        let sum_obj: f64 = taus.iter().map(|&t| kqr.fit(t, 0.05).unwrap().objective).sum();
+        assert!(
+            (fit.objective - sum_obj).abs() < 1e-3 * (1.0 + sum_obj),
+            "ssn={} sum_kqr={sum_obj}",
+            fit.objective
+        );
+    }
+
+    #[test]
+    fn ssn_strong_penalty_removes_crossings() {
+        let (x, y, kernel) = fixture(50, 4);
+        let nc = NckqrSolver::new(&x, &y, kernel, &[0.1, 0.5, 0.9]).unwrap();
+        let tight = nc.fit_ssn(50.0, 1e-3).unwrap();
+        let grid = Matrix::from_fn(100, 1, |i, _| i as f64 / 99.0);
+        assert_eq!(tight.count_crossings(&grid, 1e-6), 0);
+    }
+
+    #[test]
+    fn ssn_input_validation() {
+        let (x, y, kernel) = fixture(10, 7);
+        let nc = NckqrSolver::new(&x, &y, kernel, &[0.5]).unwrap();
+        assert!(nc.fit_ssn(-1.0, 0.1).is_err());
+        assert!(nc.fit_ssn(1.0, 0.0).is_err());
+    }
+}

@@ -17,7 +17,10 @@
 
 pub mod ssn;
 
-pub use ssn::{fit_warm_from, fit_warm_from_stats, SsnState, SsnStats};
+pub use ssn::{
+    fit_warm_from, fit_warm_from_stats, fit_warm_from_stats_carried, FactorCarry, SsnState,
+    SsnStats,
+};
 
 use crate::kqr::{KqrFit, KqrSolver};
 use anyhow::{bail, Result};
@@ -26,8 +29,8 @@ use anyhow::{bail, Result};
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum SolverBackend {
     /// The paper's finite-smoothing accelerated proximal gradient
-    /// descent (γ ladder + set expansion) — the default, and the only
-    /// backend with a lockstep BLAS-3 grid driver.
+    /// descent (γ ladder + set expansion) — the default; its grid
+    /// driver is the PR 2 lockstep BLAS-3 wavefront.
     #[default]
     Apgd,
     /// pALM semismooth Newton ([`ssn`]): active-set Newton systems of
@@ -73,20 +76,28 @@ impl std::fmt::Display for SolverBackend {
 ///
 /// - APGD: iterations × O(n·r) GEMV work ≈ `400·n·r`, halved on grids
 ///   of ≥ 8 cells where the lockstep bundle driver amortizes the GEMMs;
-/// - SSN: a few dozen Newton/refresh passes of O(n·r) plus Newton
-///   factorizations of O(r³) ≈ `25·n·r + 8·r³`.
+/// - SSN: a few dozen Newton/refresh passes of O(n·r) plus a Newton
+///   factorization budget of O(r³) ≈ `8·r³` — but the grid drivers
+///   carry the active-set Cholesky factor cell to cell, so on a grid
+///   only the head cell pays the budget in full and every subsequent
+///   cell pays roughly a quarter of it in rank-1 seeding (the carry
+///   residual measured against the `BENCH_grid.json` snapshots under
+///   `benchmarks/`): per cell, `25·n·r + 8·r³·(1 + 0.25(c−1))/c`.
 ///
 /// On a dense basis (r = n) the cubic term makes SSN lose for all but
-/// tiny n; on thin bases (r ≪ n) SSN wins outright. The constants are
-/// calibration, not measurement — what matters is that the decision is
-/// a pure function of the spec, so `Auto` is reproducible anywhere.
+/// tiny n; on thin bases (r ≪ n) SSN wins outright; in between, large
+/// grids now tip toward SSN because the factor budget amortizes. The
+/// constants are calibration, not measurement — what matters is that
+/// the decision is a pure function of the spec, so `Auto` is
+/// reproducible anywhere.
 pub fn auto_select(n: usize, rank: usize, cells: usize) -> SolverBackend {
-    let (nf, rf) = (n as f64, rank.max(1) as f64);
+    let (nf, rf, cf) = (n as f64, rank.max(1) as f64, cells.max(1) as f64);
     let mut apgd = 400.0 * nf * rf;
     if cells >= 8 {
         apgd *= 0.5;
     }
-    let ssn = 25.0 * nf * rf + 8.0 * rf * rf * rf;
+    let factor_budget = 8.0 * rf * rf * rf * (1.0 + 0.25 * (cf - 1.0)) / cf;
+    let ssn = 25.0 * nf * rf + factor_budget;
     if ssn < apgd {
         SolverBackend::Ssn
     } else {
@@ -94,23 +105,126 @@ pub fn auto_select(n: usize, rank: usize, cells: usize) -> SolverBackend {
     }
 }
 
+/// Cost-model inputs and the backend [`auto_select`] resolved from
+/// them — kept together so the CLI status line and the server metrics
+/// can report *why* `Auto` picked what it picked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AutoResolution {
+    pub n: usize,
+    pub rank: usize,
+    pub cells: usize,
+    pub backend: SolverBackend,
+}
+
+/// [`auto_select`] with the inputs echoed back alongside the decision.
+pub fn auto_resolve(n: usize, rank: usize, cells: usize) -> AutoResolution {
+    AutoResolution { n, rank, cells, backend: auto_select(n, rank, cells) }
+}
+
+/// Grid-level SSN factor-reuse accounting, summed over every cell a
+/// grid driver fitted (the sequential carry columns or the bundled
+/// wavefront). Surfaced through `GridFit`/`ModelSet` diagnostics and
+/// the server's `ssn_refactorizations` / `ssn_rank1_updates` counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SsnGridStats {
+    /// Grid cells fitted through the SSN backend.
+    pub cells: usize,
+    /// Total Newton steps across all cells.
+    pub newton_steps: usize,
+    /// Outer (multiplier) rounds across all cells.
+    pub outer_rounds: usize,
+    /// Full Newton-system refactorizations.
+    pub refactorizations: usize,
+    /// Rank-1 Cholesky up/downdates (maintenance + carry seeding).
+    pub rank1_updates: usize,
+    /// Inner solves seeded from a carried factor instead of refactoring.
+    pub carried_seeds: usize,
+    /// Shared-factor bundles formed by the bundled driver (0 for the
+    /// sequential carry columns).
+    pub bundles: usize,
+    /// Cells that adopted a bundle leader's factor in some round.
+    pub bundle_adoptions: usize,
+}
+
+impl SsnGridStats {
+    /// Fold one cell's per-fit counters in.
+    pub fn absorb(&mut self, s: &SsnStats) {
+        self.newton_steps += s.newton_steps;
+        self.outer_rounds += s.outer_rounds;
+        self.refactorizations += s.refactors;
+        self.rank1_updates += s.updates;
+        self.carried_seeds += s.carried;
+    }
+
+    /// Merge another driver's totals (chunked grid workers).
+    pub fn merge(&mut self, o: &SsnGridStats) {
+        self.cells += o.cells;
+        self.newton_steps += o.newton_steps;
+        self.outer_rounds += o.outer_rounds;
+        self.refactorizations += o.refactorizations;
+        self.rank1_updates += o.rank1_updates;
+        self.carried_seeds += o.carried_seeds;
+        self.bundles += o.bundles;
+        self.bundle_adoptions += o.bundle_adoptions;
+    }
+}
+
 /// Fit a run of τ columns with pALM-SSN, seeding each column's
 /// largest-λ fit from its predecessor's — the SSN mirror of the
 /// engine's sequential APGD driver, with the multipliers and penalty
 /// carried alongside the primal in both grid directions.
+///
+/// This is the **per-cell oracle**: no factor carry, decisions
+/// identical to the original per-cell path. The production grid path
+/// goes through [`fit_tau_columns_ssn_carry`].
 pub fn fit_tau_columns_ssn(
     solver: &KqrSolver,
     taus: &[f64],
     lambdas: &[f64],
 ) -> Result<Vec<Vec<KqrFit>>> {
+    Ok(fit_tau_columns_ssn_stats(solver, taus, lambdas)?.0)
+}
+
+/// [`fit_tau_columns_ssn`] returning the summed work counters — same
+/// fits, same decisions; the stats exist so benches and parity tests
+/// can compare oracle refactorization counts against the carry path.
+pub fn fit_tau_columns_ssn_stats(
+    solver: &KqrSolver,
+    taus: &[f64],
+    lambdas: &[f64],
+) -> Result<(Vec<Vec<KqrFit>>, SsnGridStats)> {
     let mut cols = Vec::with_capacity(taus.len());
+    let mut stats = SsnGridStats::default();
     let mut seed: Option<SsnState> = None;
     for &tau in taus {
-        let (col, head_state) = fit_tau_column_ssn(solver, tau, lambdas, seed.take())?;
+        let (col, head_state) =
+            fit_tau_column_ssn_impl(solver, tau, lambdas, seed.take(), false, &mut stats)?;
         seed = Some(head_state);
         cols.push(col);
     }
-    Ok(cols)
+    Ok((cols, stats))
+}
+
+/// The carry-enabled grid driver: identical warm-start topology to
+/// [`fit_tau_columns_ssn`], but every cell runs through
+/// [`ssn::fit_warm_from_stats_carried`], so the converged active set
+/// and its Cholesky factor flow down each λ column and across τ column
+/// heads, seeding each cell's Newton systems by rank-1 up/downdates.
+pub fn fit_tau_columns_ssn_carry(
+    solver: &KqrSolver,
+    taus: &[f64],
+    lambdas: &[f64],
+) -> Result<(Vec<Vec<KqrFit>>, SsnGridStats)> {
+    let mut cols = Vec::with_capacity(taus.len());
+    let mut stats = SsnGridStats::default();
+    let mut seed: Option<SsnState> = None;
+    for &tau in taus {
+        let (col, head_state) =
+            fit_tau_column_ssn_impl(solver, tau, lambdas, seed.take(), true, &mut stats)?;
+        seed = Some(head_state);
+        cols.push(col);
+    }
+    Ok((cols, stats))
 }
 
 /// One warm-started descending-λ SSN column, optionally seeded from an
@@ -123,13 +237,33 @@ pub fn fit_tau_column_ssn(
     lambdas: &[f64],
     seed: Option<SsnState>,
 ) -> Result<(Vec<KqrFit>, SsnState)> {
+    let mut stats = SsnGridStats::default();
+    fit_tau_column_ssn_impl(solver, tau, lambdas, seed, false, &mut stats)
+}
+
+fn fit_tau_column_ssn_impl(
+    solver: &KqrSolver,
+    tau: f64,
+    lambdas: &[f64],
+    seed: Option<SsnState>,
+    carry: bool,
+    stats: &mut SsnGridStats,
+) -> Result<(Vec<KqrFit>, SsnState)> {
     let mut state =
         seed.unwrap_or_else(|| SsnState::zeros(solver.n(), solver.basis.dim()));
     let mut fits = Vec::with_capacity(lambdas.len());
     let mut head_state: Option<SsnState> = None;
     for &lam in lambdas {
-        let fit = ssn::fit_warm_from(solver, tau, lam, &mut state)?;
+        let (fit, s) = if carry {
+            ssn::fit_warm_from_stats_carried(solver, tau, lam, &mut state)?
+        } else {
+            ssn::fit_warm_from_stats(solver, tau, lam, &mut state)?
+        };
+        stats.cells += 1;
+        stats.absorb(&s);
         if head_state.is_none() {
+            // Clone after the head fit so the next column inherits the
+            // head cell's iterate — and, under carry, its factor.
             head_state = Some(state.clone());
         }
         fits.push(fit);
@@ -159,6 +293,11 @@ mod tests {
         // Large lockstep-amortized grid keeps APGD competitive longer:
         // r where single-cell SSN would win can flip back on big grids.
         assert_eq!(auto_select(512, 512, 64), SolverBackend::Apgd);
+        // Grid awareness: a mid-rank basis where a single cell's r³
+        // factorization budget sinks SSN flips once the carry amortizes
+        // that budget across a 16-cell grid.
+        assert_eq!(auto_select(1024, 256, 1), SolverBackend::Apgd);
+        assert_eq!(auto_select(1024, 256, 16), SolverBackend::Ssn);
         // Decision is a pure function — repeated calls agree.
         for _ in 0..3 {
             assert_eq!(auto_select(4096, 64, 9), auto_select(4096, 64, 9));

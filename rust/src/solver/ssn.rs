@@ -35,6 +35,17 @@
 //! Convergence is certified by the *same* exact check-loss objective and
 //! KKT report as APGD ([`apgd::exact_objective`], [`kkt_check`]), so the
 //! two backends are interchangeable behind the engine.
+//!
+//! **Factor carry.** The grid drivers run through
+//! [`fit_warm_from_stats_carried`], which persists the converged active
+//! set and its Cholesky factor in [`SsnState::factor`] across inner
+//! solves *and* grid cells. The next solve seeds its Newton system from
+//! the carried factor by rank-1 up/downdates over the symmetric
+//! difference of active sets (plus sparse axis updates for Δλ and
+//! scaled-jacobian updates for Δσ) instead of refactorizing — see
+//! [`FactorCarry`]. The per-cell path ([`fit_warm_from_stats`]) never
+//! reads or writes the carry and is preserved decision-for-decision as
+//! the parity oracle.
 
 use crate::kqr::apgd::{self, ApgdWorkspace};
 use crate::kqr::kkt::{kkt_check, KktReport};
@@ -44,24 +55,31 @@ use crate::smooth::rho_tau;
 use anyhow::{bail, Result};
 
 /// Initial augmented-Lagrangian penalty for a cold start.
-const SIGMA_INIT: f64 = 1.0;
+pub(crate) const SIGMA_INIT: f64 = 1.0;
 /// Multiplicative σ escalation per outer iteration.
-const SIGMA_GROWTH: f64 = 10.0;
+pub(crate) const SIGMA_GROWTH: f64 = 10.0;
 /// σ ceiling (the prox band 1/(nσ) is far below f64 noise here).
-const SIGMA_MAX: f64 = 1e10;
+pub(crate) const SIGMA_MAX: f64 = 1e10;
 /// Proximal (pALM) regularization: keeps the Newton system PD when the
 /// active set is empty; the prox center moves every outer iteration, so
 /// it does not bias the fixed point.
-const TAU_P: f64 = 1e-8;
+pub(crate) const TAU_P: f64 = 1e-8;
 /// Inner gradient tolerance floor, in subgradient units (the same units
 /// as `SolveOptions::kkt_tol`; the default KKT gate is 1e-3).
-const INNER_TOL_FLOOR: f64 = 1e-10;
+pub(crate) const INNER_TOL_FLOOR: f64 = 1e-10;
 /// Hard caps: outer (multiplier) rounds and Newton steps per inner solve.
-const MAX_OUTER: usize = 40;
-const MAX_NEWTON: usize = 100;
+pub(crate) const MAX_OUTER: usize = 40;
+pub(crate) const MAX_NEWTON: usize = 100;
 /// Stop after this many consecutive outer rounds without certificate
 /// improvement once the certificate already passes.
-const MAX_STALL: usize = 3;
+pub(crate) const MAX_STALL: usize = 3;
+
+/// Active-set swings beyond this trigger a refactorization instead of
+/// |ΔA| rank-1 passes (each costs O(dim²)); also the bundle driver's
+/// Hamming-distance bound for adopting a leader's factor.
+pub(crate) fn swing_cap(dim: usize) -> usize {
+    8usize.max(dim / 4)
+}
 
 /// Warm-startable pALM state: primal (b, η), multipliers w, penalty σ.
 ///
@@ -79,13 +97,36 @@ pub struct SsnState {
     pub w: Vec<f64>,
     /// Augmented-Lagrangian penalty; ≤ 0 means "cold" (reset on entry).
     pub sigma: f64,
+    /// Newton factor carried across inner solves and grid cells by the
+    /// carry-enabled path ([`fit_warm_from_stats_carried`]); `None` on
+    /// cold starts and always `None` after the per-cell oracle path.
+    pub factor: Option<FactorCarry>,
+}
+
+/// A Newton-system Cholesky factor annotated with exactly what it
+/// embeds: the active set A and the (λ, σ) pair of
+///
+///   H = diag(τ_p, (λ+τ_p)I) + σ Σ_{i∈A} j_i j_iᵀ,  j_i = [1; W_i].
+///
+/// Carrying this between solves lets [`seed_factor`] reconcile it to a
+/// new (λ, σ, A) by rank-1 up/downdates — sparse axis vectors for the
+/// λ-shift, jacobian columns over the symmetric set difference, and
+/// √|Δσ|-scaled jacobian columns over the new active set — with every
+/// intermediate matrix positive definite, so a numerical failure at any
+/// step simply falls back to refactorization.
+#[derive(Clone, Debug)]
+pub struct FactorCarry {
+    pub(crate) chol: Cholesky,
+    pub(crate) active: Vec<bool>,
+    pub(crate) lam: f64,
+    pub(crate) sigma: f64,
 }
 
 impl SsnState {
     /// Cold state for a problem with `n` observations and spectral
     /// dimension `dim`.
     pub fn zeros(n: usize, dim: usize) -> SsnState {
-        SsnState { b: 0.0, eta: vec![0.0; dim], w: vec![0.0; n], sigma: 0.0 }
+        SsnState { b: 0.0, eta: vec![0.0; dim], w: vec![0.0; n], sigma: 0.0, factor: None }
     }
 
     /// Prepare a state fitted at one τ to seed an adjacent τ column:
@@ -104,8 +145,9 @@ impl SsnState {
 }
 
 /// prox of c·ρ_τ at v, with `hi = cτ`, `lo = c(1−τ)` precomputed.
+/// (`pub(crate)`: the NCKQR lift reuses it per level.)
 #[inline]
-fn prox_rho(v: f64, lo: f64, hi: f64) -> f64 {
+pub(crate) fn prox_rho(v: f64, lo: f64, hi: f64) -> f64 {
     if v > hi {
         v - hi
     } else if v < -lo {
@@ -116,29 +158,31 @@ fn prox_rho(v: f64, lo: f64, hi: f64) -> f64 {
 }
 
 /// Scratch buffers reused across Newton steps and outer rounds.
-struct Workspace {
+/// `pub(crate)` so the bundled grid driver (`engine::ssn_grid`) can fill
+/// the GEMV-shaped slots (`f`, `uts`, `delta`) from batched GEMMs.
+pub(crate) struct Workspace {
     /// fitted values b + Wη (length n)
-    f: Vec<f64>,
+    pub(crate) f: Vec<f64>,
     /// shifted residuals v = y − f − w/σ (length n)
-    v: Vec<f64>,
+    pub(crate) v: Vec<f64>,
     /// envelope gradients s = v − prox(v) (length n)
-    s: Vec<f64>,
+    pub(crate) s: Vec<f64>,
     /// active-set membership (prox(v_i) == 0)
-    active: Vec<bool>,
+    pub(crate) active: Vec<bool>,
     /// Uᵀs (length dim)
-    uts: Vec<f64>,
+    pub(crate) uts: Vec<f64>,
     /// gradient over (b, η) (length dim+1)
-    grad: Vec<f64>,
+    pub(crate) grad: Vec<f64>,
     /// Newton direction (length dim+1)
-    dir: Vec<f64>,
+    pub(crate) dir: Vec<f64>,
     /// line-search direction image d_b + W d_η (length n)
-    delta: Vec<f64>,
+    pub(crate) delta: Vec<f64>,
     /// spectral scratch (length dim)
-    scratch: Vec<f64>,
+    pub(crate) scratch: Vec<f64>,
 }
 
 impl Workspace {
-    fn new(n: usize, dim: usize) -> Workspace {
+    pub(crate) fn new(n: usize, dim: usize) -> Workspace {
         Workspace {
             f: vec![0.0; n],
             v: vec![0.0; n],
@@ -154,7 +198,13 @@ impl Workspace {
 }
 
 /// The W row image of a spectral vector: out = W q = U(√λ ∘ q).
-fn w_apply(solver: &KqrSolver, sqrt_lam: &[f64], q: &[f64], scratch: &mut [f64], out: &mut [f64]) {
+pub(crate) fn w_apply(
+    solver: &KqrSolver,
+    sqrt_lam: &[f64],
+    q: &[f64],
+    scratch: &mut [f64],
+    out: &mut [f64],
+) {
     for (sc, (sl, qi)) in scratch.iter_mut().zip(sqrt_lam.iter().zip(q)) {
         *sc = sl * qi;
     }
@@ -164,7 +214,7 @@ fn w_apply(solver: &KqrSolver, sqrt_lam: &[f64], q: &[f64], scratch: &mut [f64],
 /// Refresh f, v, s, active for the current (b, η, w, σ). Returns the
 /// number of active points.
 #[allow(clippy::too_many_arguments)]
-fn refresh(
+pub(crate) fn refresh(
     solver: &KqrSolver,
     sqrt_lam: &[f64],
     b: f64,
@@ -174,16 +224,30 @@ fn refresh(
     tau: f64,
     ws: &mut Workspace,
 ) -> usize {
-    let y = &solver.y;
-    let c = 1.0 / (y.len() as f64 * sigma);
-    let (lo, hi) = (c * (1.0 - tau), c * tau);
     // Split the borrow: w_apply writes ws.f from ws.scratch.
     let (scratch, f) = (&mut ws.scratch, &mut ws.f);
     w_apply(solver, sqrt_lam, eta, scratch, f);
+    refresh_from_f(solver, b, w, sigma, tau, ws)
+}
+
+/// Scalar tail of [`refresh`]: assumes `ws.f` already holds the Wη rows
+/// (the bundled grid driver fills them from one grid-wide GEMM) and
+/// finishes f, v, s and the active set in place.
+pub(crate) fn refresh_from_f(
+    solver: &KqrSolver,
+    b: f64,
+    w: &[f64],
+    sigma: f64,
+    tau: f64,
+    ws: &mut Workspace,
+) -> usize {
+    let y = &solver.y;
+    let c = 1.0 / (y.len() as f64 * sigma);
+    let (lo, hi) = (c * (1.0 - tau), c * tau);
     let mut n_active = 0;
     for i in 0..y.len() {
-        let fi = b + f[i];
-        f[i] = fi;
+        let fi = b + ws.f[i];
+        ws.f[i] = fi;
         let vi = y[i] - fi - w[i] / sigma;
         ws.v[i] = vi;
         let p = prox_rho(vi, lo, hi);
@@ -199,7 +263,7 @@ fn refresh(
 /// The reduced AL objective ψ at trial point (b+t·d_b, η+t·d_η), using
 /// the precomputed direction image Δ = d_b + W d_η (v_trial = v − tΔ).
 #[allow(clippy::too_many_arguments)]
-fn trial_objective(
+pub(crate) fn trial_objective(
     solver: &KqrSolver,
     lam: f64,
     tau: f64,
@@ -236,7 +300,7 @@ fn trial_objective(
 
 /// Build the generalized-Hessian Cholesky factor from scratch:
 /// H = diag(τ_p, (λ+τ_p)I) + σ Σ_{i∈A} j_i j_iᵀ, j_i = [1; W_i].
-fn refactor(
+pub(crate) fn refactor(
     solver: &KqrSolver,
     sqrt_lam: &[f64],
     lam: f64,
@@ -270,7 +334,12 @@ fn refactor(
 }
 
 /// The ±√σ·j_i vector of one observation (for rank-1 factor maintenance).
-fn jacobian_column(solver: &KqrSolver, sqrt_lam: &[f64], sigma: f64, i: usize) -> Vec<f64> {
+pub(crate) fn jacobian_column(
+    solver: &KqrSolver,
+    sqrt_lam: &[f64],
+    sigma: f64,
+    i: usize,
+) -> Vec<f64> {
     let row = solver.basis.u.row(i);
     let rs = sigma.sqrt();
     let mut x = Vec::with_capacity(sqrt_lam.len() + 1);
@@ -281,15 +350,164 @@ fn jacobian_column(solver: &KqrSolver, sqrt_lam: &[f64], sigma: f64, i: usize) -
     x
 }
 
+/// Reconcile a carried factor to the current (λ, σ, active) by rank-1
+/// up/downdates, or decline (`None`) when the rank-1 budget would exceed
+/// the refactorization estimate or a downdate loses definiteness.
+///
+/// Three passes, each of which leaves a valid positive-definite H:
+///
+/// 1. **λ-shift**: the η diagonal moves by Δλ — `dim` axis updates of
+///    √|Δλ|·e_{j+1} (sparse; [`Cholesky::update`] skips leading zeros);
+/// 2. **active-set difference** at the carried σ: jacobian columns for
+///    points that entered (update) or left (downdate), in index order;
+/// 3. **σ-shift** over the new active set: √|Δσ|-scaled jacobian
+///    columns (escalation ⇒ updates, cross-cell damping ⇒ downdates).
+///
+/// Successful rank-1 operations are counted into `updates` (they remain
+/// counted on a failed seed — the partial work was done). The carry is
+/// consumed either way; on `None` the caller refactorizes.
+pub(crate) fn seed_factor(
+    solver: &KqrSolver,
+    sqrt_lam: &[f64],
+    lam: f64,
+    sigma: f64,
+    fc: FactorCarry,
+    active: &[bool],
+    updates: &mut usize,
+) -> Option<Cholesky> {
+    let dim = sqrt_lam.len();
+    let FactorCarry { mut chol, active: old_active, lam: lam0, sigma: sigma0 } = fc;
+    if old_active.len() != active.len() || chol.factor().rows() != dim + 1 {
+        return None;
+    }
+    let lam_changed = lam != lam0;
+    let sigma_changed = sigma != sigma0;
+    let n_diff = old_active.iter().zip(active).filter(|(p, c)| p != c).count();
+    let a_new = active.iter().filter(|&&on| on).count();
+    // Rank-1 ops this seed would cost vs a rough refactorization budget
+    // (build |A|·dim²/2 + factor dim³/3): decline when seeding is the
+    // more expensive road.
+    let budget = n_diff
+        + if lam_changed { dim } else { 0 }
+        + if sigma_changed { a_new } else { 0 };
+    if budget > dim + a_new {
+        return None;
+    }
+    if lam_changed {
+        let dl = lam - lam0;
+        let r = dl.abs().sqrt();
+        for j in 0..dim {
+            let mut x = vec![0.0; dim + 1];
+            x[j + 1] = r;
+            if dl > 0.0 {
+                chol.update(&mut x);
+            } else if chol.downdate(&mut x).is_err() {
+                return None;
+            }
+            *updates += 1;
+        }
+    }
+    for (i, (&was, &is)) in old_active.iter().zip(active).enumerate() {
+        if was == is {
+            continue;
+        }
+        let mut x = jacobian_column(solver, sqrt_lam, sigma0, i);
+        if is {
+            chol.update(&mut x);
+        } else if chol.downdate(&mut x).is_err() {
+            return None;
+        }
+        *updates += 1;
+    }
+    if sigma_changed {
+        let ds = sigma - sigma0;
+        for (i, &on) in active.iter().enumerate() {
+            if !on {
+                continue;
+            }
+            let mut x = jacobian_column(solver, sqrt_lam, ds.abs(), i);
+            if ds > 0.0 {
+                chol.update(&mut x);
+            } else if chol.downdate(&mut x).is_err() {
+                return None;
+            }
+            *updates += 1;
+        }
+    }
+    Some(chol)
+}
+
+/// Assemble ∇ψ into `ws.grad` from the refreshed `ws.s` / `ws.uts`,
+/// returning ‖∇ψ‖_∞. (`ws.uts` must already hold Uᵀs — the per-cell
+/// path computes it with a GEMV, the bundled driver with one GEMM.)
+pub(crate) fn assemble_gradient(
+    sqrt_lam: &[f64],
+    lam: f64,
+    sigma: f64,
+    center: (f64, &[f64]),
+    b: f64,
+    eta: &[f64],
+    ws: &mut Workspace,
+) -> f64 {
+    let mut sum_s = 0.0;
+    for &si in &ws.s {
+        sum_s += si;
+    }
+    ws.grad[0] = -sigma * sum_s + TAU_P * (b - center.0);
+    let mut gmax = ws.grad[0].abs();
+    for j in 0..sqrt_lam.len() {
+        let g = lam * eta[j] - sigma * sqrt_lam[j] * ws.uts[j] + TAU_P * (eta[j] - center.1[j]);
+        ws.grad[j + 1] = g;
+        gmax = gmax.max(g.abs());
+    }
+    gmax
+}
+
+/// Armijo backtracking on ψ along `ws.dir` (its residual image already
+/// in `ws.delta`): the accepted step, or `None` when the search bottoms
+/// out — numerically flat, which callers treat as inner convergence.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn line_search(
+    solver: &KqrSolver,
+    lam: f64,
+    tau: f64,
+    sigma: f64,
+    center: (f64, &[f64]),
+    b: f64,
+    eta: &[f64],
+    gd: f64,
+    ws: &Workspace,
+) -> Option<f64> {
+    let f0 = trial_objective(solver, lam, tau, sigma, TAU_P, center, b, eta, 0.0, ws);
+    let mut t = 1.0;
+    while t > 1e-12 {
+        let ft = trial_objective(solver, lam, tau, sigma, TAU_P, center, b, eta, t, ws);
+        if ft <= f0 + 1e-4 * t * gd {
+            return Some(t);
+        }
+        t *= 0.5;
+    }
+    None
+}
+
 /// Result of one inner semismooth-Newton solve.
 struct InnerResult {
     newton_steps: usize,
     refactors: usize,
     updates: usize,
+    /// 1 when the first factorization was seeded from a carried factor.
+    seeded: usize,
 }
 
 /// Minimize ψ over (b, η) to gradient tolerance `tol` by semismooth
 /// Newton with active-set Cholesky maintenance and Armijo backtracking.
+///
+/// `carry` is the cross-solve factor slot: when it holds a
+/// [`FactorCarry`] on entry, the first Newton step seeds its factor
+/// from it via [`seed_factor`] instead of refactorizing; on exit the
+/// final factor (with the active set it embeds) is written back. The
+/// oracle path passes a slot that starts `None` and is dropped, which
+/// reproduces the per-cell behavior decision-for-decision.
 #[allow(clippy::too_many_arguments)]
 fn inner_solve(
     solver: &KqrSolver,
@@ -301,61 +519,65 @@ fn inner_solve(
     b: &mut f64,
     eta: &mut [f64],
     w: &[f64],
+    carry: &mut Option<FactorCarry>,
     ws: &mut Workspace,
 ) -> Result<InnerResult> {
     let dim = sqrt_lam.len();
     let center = (*b, eta.to_vec());
-    // Swings beyond this trigger a refactorization instead of |ΔA|
-    // rank-1 passes (each costs O(dim²)).
-    let swing_cap = 8usize.max(dim / 4);
+    let cap = swing_cap(dim);
     let mut chol: Option<Cholesky> = None;
     let mut prev_active: Vec<bool> = Vec::new();
-    let mut res = InnerResult { newton_steps: 0, refactors: 0, updates: 0 };
+    let mut res = InnerResult { newton_steps: 0, refactors: 0, updates: 0, seeded: 0 };
 
     refresh(solver, sqrt_lam, *b, eta, w, sigma, tau, ws);
     for _ in 0..MAX_NEWTON {
         // gradient of ψ at (b, η)
         gemv_t(&solver.basis.u, &ws.s, &mut ws.uts);
-        let mut sum_s = 0.0;
-        for &si in &ws.s {
-            sum_s += si;
-        }
-        ws.grad[0] = -sigma * sum_s + TAU_P * (*b - center.0);
-        let mut gmax = ws.grad[0].abs();
-        for j in 0..dim {
-            let g = lam * eta[j] - sigma * sqrt_lam[j] * ws.uts[j]
-                + TAU_P * (eta[j] - center.1[j]);
-            ws.grad[j + 1] = g;
-            gmax = gmax.max(g.abs());
-        }
+        let gmax = assemble_gradient(sqrt_lam, lam, sigma, (center.0, &center.1), *b, eta, ws);
         if gmax <= tol {
             break;
         }
 
-        // factor maintenance: rank-1 up/down-dates on small active-set
-        // swings, refactorization on large ones (or downdate failure)
+        // factor maintenance: seed from the carried factor on first
+        // need, then rank-1 up/down-dates on small active-set swings,
+        // refactorization on large ones (or downdate failure)
         let mut factored = false;
-        if let Some(f) = chol.as_mut() {
-            let changed: Vec<(usize, bool)> = prev_active
-                .iter()
-                .zip(ws.active.iter())
-                .enumerate()
-                .filter(|(_, (p, c))| p != c)
-                .map(|(i, (_, c))| (i, *c))
-                .collect();
-            if changed.len() <= swing_cap {
-                let mut ok = true;
-                for &(i, entered) in &changed {
-                    let mut x = jacobian_column(solver, sqrt_lam, sigma, i);
-                    if entered {
-                        f.update(&mut x);
-                    } else if f.downdate(&mut x).is_err() {
-                        ok = false;
-                        break;
-                    }
-                    res.updates += 1;
+        if chol.is_none() {
+            if let Some(fc) = carry.take() {
+                if let Some(c) =
+                    seed_factor(solver, sqrt_lam, lam, sigma, fc, &ws.active, &mut res.updates)
+                {
+                    prev_active.clear();
+                    prev_active.extend_from_slice(&ws.active);
+                    chol = Some(c);
+                    res.seeded = 1;
+                    factored = true;
                 }
-                factored = ok;
+            }
+        }
+        if !factored {
+            if let Some(f) = chol.as_mut() {
+                let changed: Vec<(usize, bool)> = prev_active
+                    .iter()
+                    .zip(ws.active.iter())
+                    .enumerate()
+                    .filter(|(_, (p, c))| p != c)
+                    .map(|(i, (_, c))| (i, *c))
+                    .collect();
+                if changed.len() <= cap {
+                    let mut ok = true;
+                    for &(i, entered) in &changed {
+                        let mut x = jacobian_column(solver, sqrt_lam, sigma, i);
+                        if entered {
+                            f.update(&mut x);
+                        } else if f.downdate(&mut x).is_err() {
+                            ok = false;
+                            break;
+                        }
+                        res.updates += 1;
+                    }
+                    factored = ok;
+                }
             }
         }
         if !factored {
@@ -379,25 +601,13 @@ fn inner_solve(
                 *di += d[0];
             }
         }
-        let f0 = trial_objective(
-            solver, lam, tau, sigma, TAU_P, (center.0, &center.1), *b, eta, 0.0, ws,
-        );
-        let mut t = 1.0;
-        let mut accepted = false;
-        while t > 1e-12 {
-            let ft = trial_objective(
-                solver, lam, tau, sigma, TAU_P, (center.0, &center.1), *b, eta, t, ws,
-            );
-            if ft <= f0 + 1e-4 * t * gd {
-                accepted = true;
-                break;
-            }
-            t *= 0.5;
-        }
-        if !accepted {
+        let t = match line_search(
+            solver, lam, tau, sigma, (center.0, &center.1), *b, eta, gd, ws,
+        ) {
+            Some(t) => t,
             // numerically flat — treat as converged
-            break;
-        }
+            None => break,
+        };
         *b += t * ws.dir[0];
         for j in 0..dim {
             eta[j] += t * ws.dir[j + 1];
@@ -409,6 +619,9 @@ fn inner_solve(
         if t * step_inf <= 1e-15 * (1.0 + eta.iter().fold(b.abs(), |a, e| a.max(e.abs()))) {
             break;
         }
+    }
+    if let Some(c) = chol {
+        *carry = Some(FactorCarry { chol: c, active: prev_active, lam, sigma });
     }
     Ok(res)
 }
@@ -423,8 +636,11 @@ pub struct SsnStats {
     pub outer_rounds: usize,
     /// Full Newton-system refactorizations.
     pub refactors: usize,
-    /// Rank-1 factor up/down-dates.
+    /// Rank-1 factor up/down-dates (maintenance + carry seeding).
     pub updates: usize,
+    /// Inner solves whose first factor was seeded from a carried factor
+    /// instead of refactorizing (always 0 on the oracle path).
+    pub carried: usize,
 }
 
 /// Solve one (τ, λ) cell with pALM-SSN, warm-starting from (and leaving
@@ -443,11 +659,43 @@ pub fn fit_warm_from(
 }
 
 /// [`fit_warm_from`] returning the pALM-SSN work counters alongside.
+/// This is the per-cell **oracle** path: the factor slot starts empty
+/// every inner solve and is dropped afterwards, reproducing the
+/// original per-cell behavior decision-for-decision.
 pub fn fit_warm_from_stats(
     solver: &KqrSolver,
     tau: f64,
     lam: f64,
     state: &mut SsnState,
+) -> Result<(KqrFit, SsnStats)> {
+    fit_impl(solver, tau, lam, state, false)
+}
+
+/// [`fit_warm_from_stats`] with cross-solve **factor carry**: the
+/// converged active set and its Cholesky factor persist in
+/// [`SsnState::factor`] across outer rounds and across grid cells (the
+/// state flows down λ columns and across τ column heads), so each inner
+/// solve seeds its Newton system by rank-1 up/downdates over the active
+/// set's symmetric difference — plus λ/σ shifts — instead of
+/// refactorizing. Iterates may differ from the oracle path in the last
+/// bits (the seeded factor is the same matrix up to rounding); both
+/// paths certify against the same exact KKT report, and the grid tests
+/// pin their objectives together at ≤1e-8.
+pub fn fit_warm_from_stats_carried(
+    solver: &KqrSolver,
+    tau: f64,
+    lam: f64,
+    state: &mut SsnState,
+) -> Result<(KqrFit, SsnStats)> {
+    fit_impl(solver, tau, lam, state, true)
+}
+
+fn fit_impl(
+    solver: &KqrSolver,
+    tau: f64,
+    lam: f64,
+    state: &mut SsnState,
+    carry: bool,
 ) -> Result<(KqrFit, SsnStats)> {
     if !(0.0 < tau && tau < 1.0) {
         bail!("tau must be in (0,1), got {tau}");
@@ -488,8 +736,13 @@ pub fn fit_warm_from_stats(
     let mut prev_obj = f64::INFINITY;
     let mut stall = 0usize;
 
+    // The oracle path runs every inner solve with a fresh, discarded
+    // factor slot (per-cell PR behavior); the carry path threads
+    // `state.factor` through, so factors survive outer rounds and cells.
+    let mut discard: Option<FactorCarry> = None;
     for outer in 0..MAX_OUTER {
         let tol = (1e-2 * 0.1f64.powi(outer as i32)).max(INNER_TOL_FLOOR);
+        let slot = if carry { &mut state.factor } else { &mut discard };
         let inner = inner_solve(
             solver,
             &sqrt_lam,
@@ -500,11 +753,16 @@ pub fn fit_warm_from_stats(
             &mut state.b,
             &mut state.eta,
             &state.w,
+            slot,
             &mut ws,
         )?;
+        if !carry {
+            discard = None;
+        }
         stats.newton_steps += inner.newton_steps;
         stats.refactors += inner.refactors;
         stats.updates += inner.updates;
+        stats.carried += inner.seeded;
         stats.outer_rounds = outer + 1;
 
         // multiplier update at the final inner point: w⁺ = σ(prox(v) − v)
@@ -617,6 +875,40 @@ mod tests {
         assert!(fit_warm_from(&solver, 0.5, 0.0, &mut state).is_err());
         let mut short = SsnState::zeros(3, 2);
         assert!(fit_warm_from(&solver, 0.5, 0.1, &mut short).is_err());
+    }
+
+    #[test]
+    fn carried_fits_match_oracle_with_fewer_refactors() {
+        let solver = toy_solver(28, 9);
+        let lambdas = [0.1, 0.05, 0.02, 0.01];
+        let mut oracle_state = SsnState::zeros(solver.n(), solver.basis.dim());
+        let mut carry_state = SsnState::zeros(solver.n(), solver.basis.dim());
+        let (mut oracle_refactors, mut carry_refactors) = (0usize, 0usize);
+        let mut carry_updates = 0usize;
+        for &lam in &lambdas {
+            let (fo, so) = fit_warm_from_stats(&solver, 0.5, lam, &mut oracle_state).unwrap();
+            let (fc, sc) =
+                fit_warm_from_stats_carried(&solver, 0.5, lam, &mut carry_state).unwrap();
+            assert!(fc.kkt.pass, "lam={lam}: {:?}", fc.kkt);
+            let gap = (fo.objective - fc.objective).abs();
+            assert!(
+                gap <= 1e-8 * (1.0 + fo.objective.abs()),
+                "lam={lam}: oracle {} vs carried {} (gap {gap:.3e})",
+                fo.objective,
+                fc.objective
+            );
+            oracle_refactors += so.refactors;
+            carry_refactors += sc.refactors;
+            carry_updates += sc.updates;
+            assert_eq!(so.carried, 0, "oracle path must never seed from a carry");
+        }
+        assert!(
+            carry_refactors < oracle_refactors,
+            "carry refactors {carry_refactors} not below oracle {oracle_refactors}"
+        );
+        assert!(carry_updates > 0, "carry path performed no rank-1 work");
+        assert!(carry_state.factor.is_some(), "carry state parks its factor");
+        assert!(oracle_state.factor.is_none(), "oracle state must stay carry-free");
     }
 
     #[test]

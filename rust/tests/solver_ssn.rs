@@ -173,6 +173,133 @@ fn seeded_tau_column_matches_cold_column() {
     }
 }
 
+/// The grid-scale acceptance: on a 3 × 4 grid and all three Gram
+/// representations, the factor-carry driver reproduces the per-cell
+/// PR 8 oracle to ≤ 1e-8 relative while performing strictly fewer full
+/// refactorizations — the whole point of carrying the Cholesky factor
+/// down λ columns and across τ heads as rank-1 up/downdates.
+#[test]
+fn factor_carry_matches_per_cell_oracle_with_fewer_refactorizations() {
+    let (data, kernel) = fixture(40, 17);
+    let engine = serial_engine();
+    let taus = [0.25, 0.5, 0.75];
+    let lambdas = [0.2, 0.1, 0.05, 0.02];
+    for approx in [
+        ApproxSpec::Exact,
+        ApproxSpec::Nystrom { m: 24, seed: 7 },
+        ApproxSpec::RandomFeatures { d: 16, seed: 7 },
+    ] {
+        let solver = engine
+            .solver_approx(&data.x, &data.y, &kernel, approx, tight_opts())
+            .unwrap();
+        let (oracle, ostats) =
+            fastkqr::solver::fit_tau_columns_ssn_stats(&solver, &taus, &lambdas).unwrap();
+        let (carry, cstats) =
+            fastkqr::solver::fit_tau_columns_ssn_carry(&solver, &taus, &lambdas).unwrap();
+        for (ti, tau) in taus.iter().enumerate() {
+            for (li, lam) in lambdas.iter().enumerate() {
+                let o = &oracle[ti][li];
+                let c = &carry[ti][li];
+                let gap = (o.objective - c.objective).abs() / (1.0 + o.objective.abs());
+                assert!(
+                    gap <= 1e-8,
+                    "{approx:?} tau={tau} lam={lam}: oracle {} vs carry {} (rel {gap:.2e})",
+                    o.objective,
+                    c.objective
+                );
+                assert!(c.kkt.pass, "{approx:?} tau={tau} lam={lam}: carry fit certified");
+            }
+        }
+        assert_eq!(cstats.cells, taus.len() * lambdas.len());
+        assert!(
+            cstats.refactorizations < ostats.refactorizations,
+            "{approx:?}: carry must refactor strictly less: carry {} vs oracle {}",
+            cstats.refactorizations,
+            ostats.refactorizations
+        );
+        assert!(cstats.rank1_updates > 0, "{approx:?}: carry did no rank-1 factor work");
+        assert!(cstats.carried_seeds > 0, "{approx:?}: no cell seeded from a carried factor");
+    }
+}
+
+/// The engine's bundled wavefront driver (`lockstep=true` under SSN)
+/// reproduces the sequential carry columns to ≤ 1e-8 and reports its
+/// factor economy through `GridFit::ssn`.
+#[test]
+fn bundled_grid_driver_matches_carry_through_the_engine() {
+    let (data, kernel) = fixture(40, 17);
+    let engine = serial_engine();
+    let taus = [0.25, 0.5, 0.75];
+    let lambdas = [0.1, 0.05, 0.02];
+    let run = |bundle: bool| {
+        engine
+            .fit_grid_with_solver(
+                &data.x,
+                &data.y,
+                &kernel,
+                &taus,
+                &lambdas,
+                ApproxSpec::Exact,
+                Some(bundle),
+                Some(tight_opts()),
+                SolverBackend::Ssn,
+            )
+            .unwrap()
+    };
+    let seq = run(false);
+    let bundled = run(true);
+    for (ti, tau) in taus.iter().enumerate() {
+        for (li, lam) in lambdas.iter().enumerate() {
+            let s = seq.at(ti, li);
+            let b = bundled.at(ti, li);
+            let gap = (s.objective - b.objective).abs() / (1.0 + s.objective.abs());
+            assert!(
+                gap <= 1e-8,
+                "tau={tau} lam={lam}: carry {} vs bundled {} (rel {gap:.2e})",
+                s.objective,
+                b.objective
+            );
+            assert!(b.kkt.pass, "tau={tau} lam={lam}: bundled fit certified");
+        }
+    }
+    let ss = seq.ssn.expect("carry grid reports stats");
+    let bs = bundled.ssn.expect("bundled grid reports stats");
+    assert_eq!(ss.cells, taus.len() * lambdas.len());
+    assert_eq!(bs.cells, taus.len() * lambdas.len());
+    assert!(ss.rank1_updates > 0 && bs.rank1_updates > 0);
+    assert!(
+        ss.refactorizations < ss.cells * 3,
+        "carry refactorization count should stay near the cell count, got {} over {} cells",
+        ss.refactorizations,
+        ss.cells
+    );
+}
+
+/// Lifting the non-crossing augmented Lagrangian into SSN: `--solver
+/// ssn` on `Task::NonCrossing` runs the coupled semismooth Newton
+/// system, passes the exact KKT certificate, and attaches its factor
+/// counters to the fit.
+#[test]
+fn noncrossing_ssn_through_the_engine_is_certified() {
+    let mut rng = Rng::new(9);
+    let d = synth::sine_hetero(36, &mut rng);
+    let spec = FitSpec::new(
+        d.x,
+        d.y,
+        KernelSpec::Rbf { sigma: Some(0.5) },
+        Task::NonCrossing { taus: vec![0.25, 0.5, 0.75], lam1: 5.0, lam2: 0.05 },
+    )
+    .with_seed(9)
+    .with_solver(SolverBackend::Ssn);
+    spec.validate().expect("ssn + non-crossing is a supported combination");
+    let model = FitEngine::new().run(&spec).unwrap();
+    let QuantileModel::Nckqr(fit) = &model else { panic!("expected a joint nckqr fit") };
+    assert!(fit.kkt.pass, "lifted SSN fit must pass the exact certificate");
+    let stats = fit.ssn.expect("ssn counters attached to the joint fit");
+    assert!(stats.newton_steps > 0 && stats.refactorizations >= 1);
+    assert_eq!(stats.cells, 1, "the coupled system is one Newton problem");
+}
+
 /// `auto` is reproducible from the serialized spec alone: two engines,
 /// two parses, one resolved backend and bitwise-identical objectives.
 #[test]
